@@ -1,0 +1,114 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_dense
+//! ```
+//!
+//! Runs the 3D dense algorithm on a 2048×2048 product through the
+//! complete system: Rust MapReduce engine (L3) → shuffle/partitioner →
+//! reducers executing the AOT-compiled JAX/Pallas kernel via PJRT
+//! (L2+L1) — sweeping the replication factor ρ as in the paper's Q2,
+//! verifying every configuration exactly against the naive reference,
+//! and reporting the per-round and per-component breakdown
+//! (EXPERIMENTS.md records a run).
+
+use std::sync::Arc;
+
+use m3::m3::{multiply_dense_3d, M3Config, PartitionerKind, Plan3d};
+use m3::mapreduce::EngineConfig;
+use m3::matrix::gen;
+use m3::runtime::artifacts::default_dir;
+use m3::runtime::native::NativeMultiply;
+use m3::runtime::xla_backend::XlaMultiply;
+use m3::runtime::LocalMultiply;
+use m3::util::rng::Xoshiro256ss;
+use m3::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let side = 2048;
+    let block = 256; // q = 8
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let engine = EngineConfig::cluster(8, 2, workers); // 16 map/reduce tasks
+
+    println!("== M3 end-to-end driver ==");
+    println!("side={side} block={block} q={} engine: 16 tasks, {workers} workers", side / block);
+
+    // Backend: XLA artifacts if present, else native (still end-to-end,
+    // but the point of this example is the PJRT path).
+    let xla = XlaMultiply::load_default(default_dir());
+    let using_xla = xla.is_ok();
+    if let Err(e) = &xla {
+        eprintln!("warning: XLA backend unavailable ({e}); falling back to native GEMM");
+    }
+
+    let mut rng = Xoshiro256ss::new(2024);
+    println!("generating two {side}x{side} matrices + naive reference (one-time)…");
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let t_ref = std::time::Instant::now();
+    let reference = a.matmul_naive(&b);
+    println!("reference product took {:.1}s", t_ref.elapsed().as_secs_f64());
+
+    let mut table = Table::new(&[
+        "rho", "rounds", "wall(s)", "map(s)", "shuffle(s)", "reduce(s)", "kernel(s)",
+        "shuf_words(max/round)", "verify",
+    ]);
+    let mut mono_wall = None;
+    for rho in [8usize, 4, 2, 1] {
+        let plan = Plan3d::new(side, block, rho)?;
+        let backend: Arc<dyn LocalMultiply> = if using_xla {
+            Arc::new(XlaMultiply::load_default(default_dir())?)
+        } else {
+            Arc::new(NativeMultiply::new())
+        };
+        let cfg = M3Config {
+            block_side: block,
+            rho,
+            engine,
+            partitioner: PartitionerKind::Balanced,
+        };
+        // Warm the kernel path once so the first timed round does not
+        // absorb PJRT's first-dispatch cost.
+        {
+            let z = m3::matrix::DenseMatrix::zeros(block, block);
+            let _ = backend.multiply_acc(&z, &z, &z);
+        }
+        let t0 = std::time::Instant::now();
+        let (c, metrics) = multiply_dense_3d(&a, &b, &cfg, backend.clone())?;
+        let wall = t0.elapsed().as_secs_f64();
+        let ok = c.max_abs_diff(&reference) == 0.0;
+        let map: f64 = metrics.rounds.iter().map(|r| r.map_time.as_secs_f64()).sum();
+        let shuf: f64 = metrics.rounds.iter().map(|r| r.shuffle_time.as_secs_f64()).sum();
+        let red: f64 = metrics.rounds.iter().map(|r| r.reduce_time.as_secs_f64()).sum();
+        table.row(&[
+            rho.to_string(),
+            plan.rounds().to_string(),
+            format!("{wall:.2}"),
+            format!("{map:.2}"),
+            format!("{shuf:.2}"),
+            format!("{red:.2}"),
+            format!("{:.2}", backend.kernel_time().as_secs_f64()),
+            metrics.max_shuffle_pairs().to_string(),
+            if ok { "exact".into() } else { "FAIL".to_string() },
+        ]);
+        anyhow::ensure!(ok, "verification failed at rho={rho}");
+        if rho == 8 {
+            mono_wall = Some(wall);
+        } else if let Some(mw) = mono_wall {
+            let extra_rounds = (plan.rounds() - 2) as f64;
+            if extra_rounds > 0.0 {
+                println!(
+                    "rho={rho}: overhead vs monolithic {:+.1}% total, {:+.1}%/extra round",
+                    (wall / mw - 1.0) * 100.0,
+                    (wall / mw - 1.0) / extra_rounds * 100.0
+                );
+            }
+        }
+    }
+    println!("\n{}", table.render());
+    println!(
+        "backend: {} — all replication factors produce the exact product.",
+        if using_xla { "xla-pjrt (AOT JAX/Pallas)" } else { "native-gemm" }
+    );
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Regenerate every figure of the paper's evaluation section.
+//!
+//! ```sh
+//! cargo run --release --example paper_figures [out_dir]
+//! ```
+//!
+//! Prints each figure as a table + ASCII chart and writes the CSV
+//! series to `figures/` (or `out_dir`). Figure 1 is exact; Figures 2–10
+//! run through the calibrated cluster simulator (DESIGN.md §2).
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::env::args().nth(1).unwrap_or_else(|| "figures".into());
+    std::fs::create_dir_all(&out_dir)?;
+    let mut reports = m3::harness::all_figures();
+    reports.extend(m3::harness::all_ablations());
+    for rep in reports {
+        println!("==================================================================");
+        println!("{} — {}", rep.id, rep.title);
+        println!("==================================================================");
+        println!("{}", rep.text);
+        for (name, csv) in &rep.csv {
+            let path = format!("{out_dir}/{name}");
+            std::fs::write(&path, csv)?;
+        }
+    }
+    println!("CSV series written to {out_dir}/");
+    Ok(())
+}

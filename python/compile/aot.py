@@ -1,0 +1,126 @@
+"""AOT lowering: JAX/Pallas (L2+L1) → HLO text artifacts for the rust
+PJRT runtime.
+
+HLO **text** is the interchange format, not serialized ``HloModuleProto``
+bytes: jax ≥ 0.5 emits protos with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--sides 64,128,256,512]
+
+Writes ``artifacts/matmul_acc_<side>.hlo.txt`` per side plus a
+``manifest.txt`` recording the build inputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Block sides compiled by default. 4000 (the paper's sweet spot) is not
+#: a power of two; we use powers of two so MXU-native 128×128 tiles
+#: divide every block (DESIGN.md §Hardware-Adaptation).
+DEFAULT_SIDES = (64, 128, 256, 512)
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def tile_for(side: int, policy: str) -> int | None:
+    """VMEM tile side for an artifact.
+
+    * ``mxu``    — 128 (the TPU design point: MXU-native tiles, the
+      (i,j,k) grid expressing the HBM↔VMEM schedule);
+    * ``single`` — one tile covering the block (default for the CPU
+      artifacts: interpret-mode grid steps cost ~50 µs each, so the
+      64-step schedule of a 512² block runs 11× slower than the single
+      fused dot — measured in EXPERIMENTS.md §Perf L1);
+    * ``half``   — side/2 (exercises the multi-visit accumulator while
+      keeping only 8 grid steps).
+    """
+    if policy == "mxu":
+        return None  # pick_tile → 128 where it divides
+    if policy == "single":
+        return side
+    if policy == "half":
+        return max(side // 2, 1)
+    raise ValueError(f"unknown tile policy {policy!r}")
+
+
+def lower_matmul_acc(side: int, tile_policy: str = "single") -> str:
+    """Lower the reducer FMA for one block side to HLO text."""
+    tile = tile_for(side, tile_policy)
+    fn = lambda a, b, c: model.reducer_fma(a, b, c, tile=tile)  # noqa: E731
+    lowered = jax.jit(fn).lower(*model.block_shapes(side))
+    return to_hlo_text(lowered)
+
+
+def build(
+    out_dir: str, sides: list[int], force: bool = False, tile_policy: str = "single"
+) -> list[str]:
+    """Build all artifacts; returns the paths written (skips fresh ones)."""
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for side in sides:
+        path = os.path.join(out_dir, f"matmul_acc_{side}.hlo.txt")
+        if not force and os.path.exists(path) and os.path.getsize(path) > 0:
+            print(f"  [skip] {path} (exists)")
+            continue
+        text = lower_matmul_acc(side, tile_policy)
+        assert "HloModule" in text, "lowering did not produce HLO text"
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(path)
+        print(f"  [ok]   {path} ({len(text)} chars)")
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write(f"jax={jax.__version__}\n")
+        f.write(f"sides={','.join(map(str, sides))}\n")
+        f.write(f"tile_policy={tile_policy}\n")
+        f.write("format=hlo-text return_tuple=1 dtype=f32\n")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--sides",
+        default=",".join(map(str, DEFAULT_SIDES)),
+        help="comma-separated block sides to compile",
+    )
+    ap.add_argument("--force", action="store_true", help="rebuild even if fresh")
+    ap.add_argument(
+        "--tile-policy",
+        default="single",
+        choices=("mxu", "single", "half"),
+        help="Pallas tile policy (mxu=TPU design point, single=CPU-fast)",
+    )
+    args = ap.parse_args()
+
+    sides = [int(s) for s in args.sides.split(",") if s]
+    print(f"AOT-lowering reducer_fma for sides {sides} (tile={args.tile_policy}) -> {args.out_dir}")
+    build(args.out_dir, sides, force=args.force, tile_policy=args.tile_policy)
+
+
+def run_main() -> None:
+    main()
+
+
+if __name__ == "__main__":
+    sys.exit(run_main())

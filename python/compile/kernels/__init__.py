@@ -1,0 +1,13 @@
+"""L1 Pallas kernels and their pure-jnp oracles."""
+
+from .matmul_acc import matmul_acc, mxu_utilization_estimate, pick_tile, vmem_words
+from .ref import block_sum_ref, matmul_acc_ref
+
+__all__ = [
+    "matmul_acc",
+    "matmul_acc_ref",
+    "block_sum_ref",
+    "pick_tile",
+    "vmem_words",
+    "mxu_utilization_estimate",
+]

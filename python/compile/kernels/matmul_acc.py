@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: blocked matmul-accumulate ``O = C + A·B``.
+
+This is the M3 reducer's compute hot-spot (the role JBLAS played in the
+paper's Hadoop implementation), re-thought for TPU idiom instead of a
+CPU BLAS call:
+
+* the ``(i, j, k)`` grid expresses the HBM→VMEM staging schedule that a
+  GPU implementation would express with threadblocks;
+* ``BlockSpec``s stage ``bm×bk`` / ``bk×bn`` tiles of A and B into VMEM
+  (the TPU scratchpad — *not* shared memory: it is software-managed and
+  double-buffered by the Pallas pipeline automatically);
+* the inner ``jnp.dot`` with ``preferred_element_type=float32`` targets
+  the MXU systolic array;
+* the output tile is revisited across the ``k`` dimension and used as
+  the accumulator, initialised from C at ``k == 0`` — the canonical
+  Pallas reduction pattern that keeps the accumulator resident in VMEM.
+
+The kernel MUST be lowered with ``interpret=True`` here: real TPU
+lowering emits a Mosaic custom-call that the CPU PJRT plugin cannot
+execute. Tile-size choices and the resulting VMEM footprint / MXU
+utilisation estimates are documented in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: MXU-native tile side: the systolic array is 128×128.
+MXU_TILE = 128
+
+
+def pick_tile(side: int, max_tile: int = MXU_TILE) -> int:
+    """Largest power-of-two tile ≤ ``max_tile`` that divides ``side``.
+
+    Falls back to ``side`` itself when no power of two divides it (the
+    whole block becomes a single tile; fine for the small shapes used in
+    tests).
+    """
+    t = max_tile
+    while t > 1:
+        if side % t == 0:
+            return t
+        t //= 2
+    return 1 if side % 1 == 0 and side > 0 else side
+
+
+def _kernel(a_ref, b_ref, c_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step: o[i,j] (+)= a[i,k] @ b[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def matmul_acc(a: jax.Array, b: jax.Array, c: jax.Array, *, tile: int | None = None):
+    """``C + A·B`` for square f32 blocks via the Pallas kernel.
+
+    ``a``, ``b``, ``c`` must all be ``(s, s)`` float32. ``tile``
+    overrides the auto-picked VMEM tile side (must divide ``s``).
+    """
+    s = a.shape[0]
+    assert a.shape == b.shape == c.shape == (s, s), "square blocks only"
+    t = tile if tile is not None else pick_tile(s)
+    assert s % t == 0, f"tile {t} must divide side {s}"
+    n = s // t
+
+    grid = (n, n, n)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, t), lambda i, j, k: (i, k)),  # A tile
+            pl.BlockSpec((t, t), lambda i, j, k: (k, j)),  # B tile
+            pl.BlockSpec((t, t), lambda i, j, k: (i, j)),  # C tile
+        ],
+        out_specs=pl.BlockSpec((t, t), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, s), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, b, c)
+
+
+def vmem_words(side: int, tile: int | None = None) -> int:
+    """Estimated VMEM-resident words per grid step (A, B, C, O tiles).
+
+    Used by DESIGN.md §Perf to check the schedule fits the ~16 MiB VMEM
+    of a TPU core with room for double buffering.
+    """
+    t = tile if tile is not None else pick_tile(side)
+    return 4 * t * t
+
+
+def mxu_utilization_estimate(side: int, tile: int | None = None) -> float:
+    """Fraction of MXU-shaped work per grid step.
+
+    A ``t×t×t`` tile step issues ``t³`` MACs; the MXU retires ``128²``
+    MACs/cycle at full occupancy, which a ``t ≥ 128`` tile sustains.
+    Smaller tiles waste the array quadratically.
+    """
+    t = tile if tile is not None else pick_tile(side)
+    eff = min(t, MXU_TILE) / MXU_TILE
+    return eff * eff

@@ -1,0 +1,48 @@
+"""L2: the JAX compute graph of the M3 reducer.
+
+The paper's "model" is the per-reducer computation of Algorithm 1: the
+fused multiply-accumulate ``C^ℓ ← C^ℓ + A[i,h]·B[h,j]`` on `√m × √m`
+blocks. ``reducer_fma`` wraps the L1 Pallas kernel so both lower into
+one HLO module; ``aot.py`` lowers it once per supported block side and
+the rust coordinator executes the artifacts via PJRT — Python never
+runs on the request path.
+
+``reducer_sum`` is the final round's ρ-way accumulator sum. It is
+lowered for completeness and benchmarking; the rust coordinator
+performs this O(ρm) add natively because ρ is a runtime parameter
+(shapes here are static).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_acc
+
+
+def reducer_fma(
+    a: jax.Array, b: jax.Array, c: jax.Array, *, tile: int | None = None
+) -> tuple[jax.Array]:
+    """One product-round reducer step: ``(C + A·B,)``.
+
+    ``tile`` overrides the Pallas VMEM tile side (see
+    ``aot.tile_for``: the TPU design point is the 128 MXU tile; CPU
+    artifacts lower single-tile because the interpret-mode grid loop
+    dominates otherwise — DESIGN.md §Perf).
+
+    Returns a 1-tuple: the module is lowered with ``return_tuple=True``
+    and the rust side unwraps with ``to_tuple1()``.
+    """
+    return (matmul_acc(a, b, c, tile=tile),)
+
+
+def reducer_sum(blocks: jax.Array) -> tuple[jax.Array]:
+    """Final-round reducer: sum ``(rho, s, s)`` accumulators."""
+    return (jnp.sum(blocks, axis=0),)
+
+
+def block_shapes(side: int) -> tuple[jax.ShapeDtypeStruct, ...]:
+    """The (a, b, c) example shapes for a block side."""
+    spec = jax.ShapeDtypeStruct((side, side), jnp.float32)
+    return (spec, spec, spec)

@@ -1,0 +1,136 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+This is the core build-time correctness signal; hypothesis sweeps the
+shape/tile space, fixed cases pin the MXU-native configurations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    matmul_acc,
+    matmul_acc_ref,
+    mxu_utilization_estimate,
+    pick_tile,
+    vmem_words,
+)
+
+
+def rand(shape, seed, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    return (jax.random.normal(k, shape, dtype=jnp.float32) * scale).astype(jnp.float32)
+
+
+def int_blocks(side, seed):
+    """Small-integer blocks: products are exact in f32."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    mk = lambda k: jax.random.randint(k, (side, side), -4, 5).astype(jnp.float32)
+    return mk(k1), mk(k2), mk(k3)
+
+
+class TestFixedShapes:
+    @pytest.mark.parametrize("side", [1, 2, 4, 8, 16, 64, 128, 256])
+    def test_matches_ref_exact_integers(self, side):
+        a, b, c = int_blocks(side, side)
+        got = matmul_acc(a, b, c)
+        want = matmul_acc_ref(a, b, c)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("side", [64, 128, 256])
+    def test_matches_ref_float(self, side):
+        a = rand((side, side), 1)
+        b = rand((side, side), 2)
+        c = rand((side, side), 3)
+        got = matmul_acc(a, b, c)
+        want = matmul_acc_ref(a, b, c)
+        # Tiled k-accumulation reorders float adds vs the single dot of
+        # the reference — tolerance covers the reassociation error.
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=1e-3)
+
+    def test_zero_c_is_plain_matmul(self):
+        a, b, _ = int_blocks(32, 7)
+        c = jnp.zeros((32, 32), jnp.float32)
+        got = matmul_acc(a, b, c)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(a @ b))
+
+    def test_identity_a(self):
+        eye = jnp.eye(16, dtype=jnp.float32)
+        _, b, c = int_blocks(16, 9)
+        got = matmul_acc(eye, b, c)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(b + c))
+
+    def test_explicit_tile_override(self):
+        a, b, c = int_blocks(64, 11)
+        for tile in (16, 32, 64):
+            got = matmul_acc(a, b, c, tile=tile)
+            want = matmul_acc_ref(a, b, c)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_output_dtype_is_f32(self):
+        a, b, c = int_blocks(8, 13)
+        assert matmul_acc(a, b, c).dtype == jnp.float32
+
+
+class TestHypothesisSweep:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        side=st.sampled_from([1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_random_shapes_match_ref(self, side, seed):
+        a, b, c = int_blocks(side, seed)
+        got = matmul_acc(a, b, c)
+        want = matmul_acc_ref(a, b, c)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        side=st.sampled_from([16, 32, 64]),
+        scale=st.floats(0.01, 100.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_scaled_floats_allclose(self, side, scale, seed):
+        a = rand((side, side), seed, scale)
+        b = rand((side, side), seed + 1, scale)
+        c = rand((side, side), seed + 2, scale)
+        got = matmul_acc(a, b, c)
+        want = matmul_acc_ref(a, b, c)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3 * scale * scale
+        )
+
+
+class TestTilePicker:
+    def test_mxu_native_sides(self):
+        assert pick_tile(128) == 128
+        assert pick_tile(256) == 128
+        assert pick_tile(512) == 128
+
+    def test_small_sides(self):
+        assert pick_tile(64) == 64
+        assert pick_tile(8) == 8
+        assert pick_tile(1) == 1
+
+    def test_odd_sides_fall_back(self):
+        assert pick_tile(3) == 1
+        assert pick_tile(12) == 4
+
+    @settings(max_examples=50, deadline=None)
+    @given(side=st.integers(1, 4096))
+    def test_tile_always_divides(self, side):
+        t = pick_tile(side)
+        assert t >= 1
+        assert side % t == 0
+
+    def test_vmem_words_fits_budget(self):
+        # 4 tiles of 128² f32 = 256 KiB << 16 MiB VMEM: ample room for
+        # the pipeline's double buffering.
+        assert vmem_words(512) == 4 * 128 * 128
+        assert vmem_words(512) * 4 < 16 * 1024 * 1024
+
+    def test_mxu_utilization(self):
+        assert mxu_utilization_estimate(512) == 1.0
+        assert mxu_utilization_estimate(64) == 0.25

@@ -1,0 +1,196 @@
+//! Benchmark harness (`cargo bench`) — criterion is unavailable in the
+//! offline sandbox, so this uses the in-house `util::bench` driver.
+//!
+//! Two groups:
+//!
+//! 1. **paper figures** — one bench per figure, running the figure's
+//!    sweep end-to-end (Figure 1 exactly; 2–10 through the simulator at
+//!    paper scale, plus *real-engine* scaled-down counterparts of the
+//!    core sweeps with the XLA backend when artifacts are present).
+//! 2. **hot paths** — the kernels the §Perf pass optimises: local
+//!    multiply (naive / native / XLA), shuffle group-by, partitioners,
+//!    and block split/assemble.
+
+use std::sync::Arc;
+
+use m3::harness;
+use m3::m3::partitioner::{BalancedPartitioner3d, NaiveTriplePartitioner};
+use m3::m3::{multiply_dense_2d, multiply_dense_3d, M3Config, PartitionerKind, TripleKey};
+use m3::mapreduce::shuffle::shuffle;
+use m3::mapreduce::types::Partitioner;
+use m3::mapreduce::{EngineConfig, Pair};
+use m3::matrix::{gen, BlockGrid, DenseMatrix};
+use m3::runtime::artifacts::default_dir;
+use m3::runtime::native::NativeMultiply;
+use m3::runtime::xla_backend::XlaMultiply;
+use m3::runtime::{LocalMultiply, NaiveMultiply};
+use m3::util::bench::{print_header, Bencher};
+use m3::util::rng::Xoshiro256ss;
+
+fn engine() -> EngineConfig {
+    EngineConfig::cluster(
+        8,
+        2,
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    )
+}
+
+fn bench_figures(b: &Bencher) {
+    println!("\n--- paper figures (simulated at paper scale) ---");
+    for num in 1..=10usize {
+        let r = b.bench(&format!("fig{num:02}_regenerate"), || {
+            harness::figure(num).len()
+        });
+        println!("{}", r.summary());
+    }
+}
+
+fn bench_real_engine(b: &Bencher) {
+    println!("\n--- real-engine counterparts (side=1024, q=8) ---");
+    let side = 1024;
+    let block = 128;
+    let mut rng = Xoshiro256ss::new(1);
+    let a = gen::dense_int(side, side, &mut rng);
+    let bm = gen::dense_int(side, side, &mut rng);
+
+    // Figure 3 analogue: time vs replication on the real engine.
+    for rho in [8usize, 4, 2, 1] {
+        let cfg = M3Config {
+            block_side: block,
+            rho,
+            engine: engine(),
+            partitioner: PartitionerKind::Balanced,
+        };
+        let r = b.bench(&format!("fig03_real_dense3d_rho{rho}"), || {
+            multiply_dense_3d(&a, &bm, &cfg, Arc::new(NativeMultiply::new())).unwrap()
+        });
+        println!("{}", r.summary());
+    }
+    // Figure 6 analogue: 2D vs 3D on the real engine.
+    let cfg2 = M3Config {
+        block_side: block,
+        rho: 1,
+        engine: engine(),
+        partitioner: PartitionerKind::Balanced,
+    };
+    let r = b.bench("fig06_real_dense2d_rho1", || {
+        multiply_dense_2d(&a, &bm, &cfg2, Arc::new(NativeMultiply::new())).unwrap()
+    });
+    println!("{}", r.summary());
+
+    // XLA end-to-end when artifacts are present.
+    if let Ok(x) = XlaMultiply::load_default(default_dir()) {
+        let backend: Arc<dyn LocalMultiply> = Arc::new(x);
+        let cfg = M3Config {
+            block_side: 256,
+            rho: 4,
+            engine: engine(),
+            partitioner: PartitionerKind::Balanced,
+        };
+        let r = b.bench("fig03_real_dense3d_rho4_xla_block256", || {
+            multiply_dense_3d(&a, &bm, &cfg, backend.clone()).unwrap()
+        });
+        println!("{}", r.summary());
+    } else {
+        println!("(xla artifacts missing — run `make artifacts` for the XLA benches)");
+    }
+}
+
+fn bench_local_multiply(b: &Bencher) {
+    println!("\n--- hot path: local multiply C + A·B ---");
+    let mut rng = Xoshiro256ss::new(2);
+    let xla = XlaMultiply::load_default(default_dir()).ok().map(Arc::new);
+    for side in [128usize, 256, 512] {
+        let a = gen::dense_uniform(side, side, &mut rng);
+        let bm = gen::dense_uniform(side, side, &mut rng);
+        let c = gen::dense_uniform(side, side, &mut rng);
+        let flops = 2.0 * (side as f64).powi(3);
+
+        let native = NativeMultiply::new();
+        let r = b.bench(&format!("gemm_native_{side}"), || {
+            native.multiply_acc(&a, &bm, &c)
+        });
+        println!("{}  ({:.2} GFLOP/s)", r.summary(), flops / r.median() / 1e9);
+
+        if let Some(x) = &xla {
+            let r = b.bench(&format!("gemm_xla_{side}"), || x.multiply_acc(&a, &bm, &c));
+            println!("{}  ({:.2} GFLOP/s)", r.summary(), flops / r.median() / 1e9);
+        }
+        if side <= 128 {
+            let r = b.bench(&format!("gemm_naive_{side}"), || {
+                NaiveMultiply.multiply_acc(&a, &bm, &c)
+            });
+            println!("{}  ({:.2} GFLOP/s)", r.summary(), flops / r.median() / 1e9);
+        }
+    }
+}
+
+fn bench_shuffle_and_partitioners(b: &Bencher) {
+    println!("\n--- hot path: shuffle + partitioners ---");
+    // 3ρq² pairs at q=32, rho=8: 24576 intermediate pairs.
+    let (q, rho) = (32usize, 8usize);
+    let mut pairs = vec![];
+    for i in 0..q {
+        for j in 0..q {
+            for l in 0..rho {
+                let h = (i + j + l) % q;
+                pairs.push(Pair::new(TripleKey::new(i, h, j), 1.0f32));
+            }
+        }
+    }
+    let bal = BalancedPartitioner3d { q, rho };
+    let r = b.bench("shuffle_24k_pairs_balanced", || {
+        shuffle(pairs.clone(), &bal, 64).num_groups()
+    });
+    println!("{}", r.summary());
+    let r = b.bench("shuffle_24k_pairs_naive", || {
+        shuffle(pairs.clone(), &NaiveTriplePartitioner, 64).num_groups()
+    });
+    println!("{}", r.summary());
+
+    let keys: Vec<TripleKey> = pairs.iter().map(|p| p.key).collect();
+    let r = b.bench("partition_24k_keys_balanced", || {
+        keys.iter().map(|k| bal.partition(k, 64)).sum::<usize>()
+    });
+    println!("{}", r.summary());
+    let r = b.bench("partition_24k_keys_naive", || {
+        keys.iter()
+            .map(|k| NaiveTriplePartitioner.partition(k, 64))
+            .sum::<usize>()
+    });
+    println!("{}", r.summary());
+}
+
+fn bench_block_ops(b: &Bencher) {
+    println!("\n--- hot path: block split/assemble ---");
+    let mut rng = Xoshiro256ss::new(3);
+    let m = gen::dense_uniform(2048, 2048, &mut rng);
+    let grid = BlockGrid::new(2048, 256);
+    let r = b.bench("split_2048_into_256_blocks", || grid.split(&m).len());
+    println!("{}", r.summary());
+    let blocks = grid.split(&m);
+    let r = b.bench("assemble_2048_from_256_blocks", || {
+        grid.assemble(&blocks).rows()
+    });
+    println!("{}", r.summary());
+    let zero = DenseMatrix::zeros(2048, 2048);
+    let mut acc = zero.clone();
+    let r = b.bench("block_sum_2048", || {
+        acc.add_assign(&m);
+    });
+    println!("{}", r.summary());
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("M3_BENCH_QUICK").is_ok();
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    println!("M3 benchmark harness (in-house driver; criterion unavailable offline)");
+    print_header();
+    bench_figures(&b);
+    bench_local_multiply(&b);
+    bench_shuffle_and_partitioners(&b);
+    bench_block_ops(&b);
+    bench_real_engine(&b);
+    println!("\ndone.");
+}

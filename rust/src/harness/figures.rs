@@ -1,0 +1,546 @@
+//! One generator per paper figure.
+//!
+//! Figure 1 is exact (pure partitioner arithmetic at the paper's own
+//! parameters). Figures 2–10 are regenerated through the calibrated
+//! cluster simulator at the paper's parameters (see DESIGN.md §2 for
+//! the substitution argument); their *shapes* — orderings, crossovers,
+//! component splits — are the reproduction target, and the anchor tests
+//! in `simulator::simulate` pin them.
+
+use crate::m3::partitioner::{BalancedPartitioner3d, NaiveTriplePartitioner};
+use crate::m3::planner::{Plan2d, Plan3d, SparsePlan};
+use crate::m3::TripleKey;
+use crate::mapreduce::types::Partitioner;
+use crate::simulator::{
+    simulate_dense2d, simulate_dense3d, simulate_sparse3d, ClusterProfile, SimResult,
+};
+use crate::util::stats;
+use crate::util::table::{BarChart, Table};
+
+/// A regenerated figure: human-readable text plus named CSV payloads.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Figure id, e.g. "fig3a".
+    pub id: String,
+    /// Title echoing the paper caption.
+    pub title: String,
+    /// Rendered tables/charts.
+    pub text: String,
+    /// `(file_name, csv_content)` pairs.
+    pub csv: Vec<(String, String)>,
+}
+
+impl Report {
+    /// Create an empty report.
+    pub fn new(id: &str, title: &str) -> Self {
+        Report {
+            id: id.into(),
+            title: title.into(),
+            ..Default::default()
+        }
+    }
+
+    /// Append a rendered table and register its CSV payload.
+    pub fn push_table(&mut self, t: &Table, csv_name: &str) {
+        self.text.push_str(&t.render());
+        self.text.push('\n');
+        self.csv.push((csv_name.to_string(), t.to_csv()));
+    }
+
+    /// Append a rendered chart.
+    pub fn push_chart(&mut self, c: &BarChart) {
+        self.text.push_str(&c.render());
+        self.text.push('\n');
+    }
+}
+
+/// The live 3D reducer keys of round `r`.
+fn round_keys(q: usize, rho: usize, r: usize) -> Vec<TripleKey> {
+    let mut out = vec![];
+    for i in 0..q {
+        for j in 0..q {
+            for l in 0..rho {
+                out.push(TripleKey::new(i, (i + j + l + r * rho) % q, j));
+            }
+        }
+    }
+    out
+}
+
+/// Figure 1: reducers per reduce task, naive vs Algorithm 3 partitioner
+/// (√n = 32000, √m = 4000, ρ = 8, round 0, T = 64).
+pub fn fig1() -> Report {
+    let mut rep = Report::new(
+        "fig1",
+        "Reducers per reduce task: naive vs proposed partitioner \
+         (sqrt(n)=32000, sqrt(m)=4000, rho=8, first round)",
+    );
+    let (q, rho, t) = (32000 / 4000, 8, 64);
+    let bal = BalancedPartitioner3d { q, rho };
+    let mut naive = vec![0usize; t];
+    let mut balanced = vec![0usize; t];
+    for k in round_keys(q, rho, 0) {
+        naive[NaiveTriplePartitioner.partition(&k, t)] += 1;
+        balanced[bal.partition(&k, t)] += 1;
+    }
+    let mut table = Table::new(&["task", "naive", "balanced(Alg.3)"]);
+    for i in 0..t {
+        table.row(&[i.to_string(), naive[i].to_string(), balanced[i].to_string()]);
+    }
+    rep.push_table(&table, "fig1_reducers_per_task.csv");
+
+    let as_f = |v: &[usize]| v.iter().map(|&x| x as f64).collect::<Vec<_>>();
+    let mut summary = Table::new(&["partitioner", "min", "max", "mean", "cv"]);
+    for (name, counts) in [("naive", &naive), ("balanced", &balanced)] {
+        let f = as_f(counts);
+        summary.row(&[
+            name.to_string(),
+            format!("{:.0}", stats::min(&f)),
+            format!("{:.0}", stats::max(&f)),
+            format!("{:.1}", stats::mean(&f)),
+            format!("{:.3}", stats::cv(&f)),
+        ]);
+    }
+    rep.push_table(&summary, "fig1_summary.csv");
+    rep
+}
+
+/// Rough reducer-memory feasibility: the paper reports √m = 8000 OOMs
+/// in-house (3 GB task heaps; Hadoop buffers ≈2.5× the 3m payload).
+fn oom(block_side: usize) -> bool {
+    let payload_bytes = 3.0 * (block_side as f64) * (block_side as f64) * 8.0;
+    payload_bytes * 2.5 > 3.0e9
+}
+
+/// Figure 2: time vs subproblem size, √n ∈ {16000, 32000},
+/// √m ∈ {1000, 2000, 4000, 8000}, ρ ∈ {min, max}, in-house.
+pub fn fig2() -> Report {
+    let mut rep = Report::new(
+        "fig2",
+        "Time vs subproblem size (in-house); max = monolithic rho=sqrt(n/m), min = rho=1",
+    );
+    let p = ClusterProfile::inhouse();
+    let mut table = Table::new(&["sqrt_n", "sqrt_m", "rho=max (s)", "rho=1 (s)"]);
+    let mut chart = BarChart::new("Figure 2: time vs sqrt(m)", "s");
+    for side in [16000usize, 32000] {
+        for bs in [1000usize, 2000, 4000, 8000] {
+            let label = format!("n={side} m={bs}");
+            if oom(bs) {
+                table.row(&[
+                    side.to_string(),
+                    bs.to_string(),
+                    "OOM".into(),
+                    "OOM".into(),
+                ]);
+                continue;
+            }
+            let tmax = simulate_dense3d(&Plan3d::monolithic(side, bs).unwrap(), &p).total();
+            let tmin = simulate_dense3d(&Plan3d::new(side, bs, 1).unwrap(), &p).total();
+            table.row(&[
+                side.to_string(),
+                bs.to_string(),
+                format!("{tmax:.0}"),
+                format!("{tmin:.0}"),
+            ]);
+            chart.bar(&format!("{label} max"), tmax);
+            chart.bar(&format!("{label} min"), tmin);
+        }
+    }
+    rep.push_table(&table, "fig2_time_vs_m.csv");
+    rep.push_chart(&chart);
+    rep
+}
+
+/// Per-round stacked "time vs replication" chart + CSV (Figures 3a, 3b,
+/// 8, 10a).
+fn time_vs_replication(
+    id: &str,
+    title: &str,
+    side: usize,
+    block: usize,
+    rhos: &[usize],
+    p: &ClusterProfile,
+) -> Report {
+    let mut rep = Report::new(id, title);
+    let mut table = Table::new(&["rho", "rounds", "total (s)", "per-round (s)"]);
+    let mut chart = BarChart::new(title, "s");
+    for &rho in rhos {
+        let plan = Plan3d::new(side, block, rho).unwrap();
+        let sim = simulate_dense3d(&plan, p);
+        let per: Vec<String> = sim.per_round().iter().map(|t| format!("{t:.0}")).collect();
+        table.row(&[
+            rho.to_string(),
+            plan.rounds().to_string(),
+            format!("{:.0}", sim.total()),
+            per.join("+"),
+        ]);
+        let segs: Vec<(String, f64)> = sim
+            .per_round()
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| (format!("r{i}"), t))
+            .collect();
+        let seg_refs: Vec<(&str, f64)> = segs.iter().map(|(s, t)| (s.as_str(), *t)).collect();
+        chart.stacked(&format!("rho={rho}"), &seg_refs);
+    }
+    rep.push_table(&table, &format!("{id}_time_vs_rho.csv"));
+    rep.push_chart(&chart);
+    rep
+}
+
+/// Component-cost chart (Figures 4a, 4b, 9a, 9b, 10b).
+fn component_costs(
+    id: &str,
+    title: &str,
+    side: usize,
+    block: usize,
+    rhos: &[usize],
+    p: &ClusterProfile,
+) -> Report {
+    let mut rep = Report::new(id, title);
+    let mut table = Table::new(&["rho", "comm (s)", "comp (s)", "infra (s)", "total (s)"]);
+    let mut chart = BarChart::new(title, "s");
+    for &rho in rhos {
+        let sim = simulate_dense3d(&Plan3d::new(side, block, rho).unwrap(), p);
+        table.row(&[
+            rho.to_string(),
+            format!("{:.0}", sim.comm()),
+            format!("{:.0}", sim.comp()),
+            format!("{:.0}", sim.infra()),
+            format!("{:.0}", sim.total()),
+        ]);
+        chart.stacked(
+            &format!("rho={rho}"),
+            &[
+                ("comm", sim.comm()),
+                ("comp", sim.comp()),
+                ("infra", sim.infra()),
+            ],
+        );
+    }
+    rep.push_table(&table, &format!("{id}_components.csv"));
+    rep.push_chart(&chart);
+    rep
+}
+
+/// Figure 3a/3b: time vs replication with per-round breakdown,
+/// in-house.
+pub fn fig3() -> Vec<Report> {
+    let p = ClusterProfile::inhouse();
+    vec![
+        time_vs_replication(
+            "fig3a",
+            "Figure 3a: time vs replication, sqrt(n)=16000 (in-house)",
+            16000,
+            4000,
+            &[1, 2, 4],
+            &p,
+        ),
+        time_vs_replication(
+            "fig3b",
+            "Figure 3b: time vs replication, sqrt(n)=32000 (in-house)",
+            32000,
+            4000,
+            &[1, 2, 4, 8],
+            &p,
+        ),
+    ]
+}
+
+/// Figure 4a/4b: component costs vs replication, in-house.
+pub fn fig4() -> Vec<Report> {
+    let p = ClusterProfile::inhouse();
+    vec![
+        component_costs(
+            "fig4a",
+            "Figure 4a: component cost vs replication, sqrt(n)=16000 (in-house)",
+            16000,
+            4000,
+            &[1, 2, 4],
+            &p,
+        ),
+        component_costs(
+            "fig4b",
+            "Figure 4b: component cost vs replication, sqrt(n)=32000 (in-house)",
+            32000,
+            4000,
+            &[1, 2, 4, 8],
+            &p,
+        ),
+    ]
+}
+
+/// Figure 5: time vs node count, √n = 16000, ρ ∈ {1,2,4}, p ∈ {4,8,16}.
+pub fn fig5() -> Report {
+    let mut rep = Report::new(
+        "fig5",
+        "Figure 5: time vs number of nodes, sqrt(n)=16000 (in-house)",
+    );
+    let mut table = Table::new(&["nodes", "rho=1 (s)", "rho=2 (s)", "rho=4 (s)"]);
+    let mut chart = BarChart::new("Figure 5: time vs nodes", "s");
+    for nodes in [4usize, 8, 16] {
+        let p = ClusterProfile::inhouse().with_nodes(nodes);
+        let mut cells = vec![nodes.to_string()];
+        for rho in [1usize, 2, 4] {
+            let t = simulate_dense3d(&Plan3d::new(16000, 4000, rho).unwrap(), &p).total();
+            cells.push(format!("{t:.0}"));
+            chart.bar(&format!("p={nodes} rho={rho}"), t);
+        }
+        table.row(&cells);
+    }
+    rep.push_table(&table, "fig5_scalability.csv");
+    rep.push_chart(&chart);
+    rep
+}
+
+/// Figure 6: 2D vs 3D, √n = 16000, ρ_3D ∈ {1,2,4}, ρ_2D ∈ {1,2,4,8,16}.
+pub fn fig6() -> Report {
+    let mut rep = Report::new(
+        "fig6",
+        "Figure 6: 2D vs 3D approaches, sqrt(n)=16000 (in-house)",
+    );
+    let p = ClusterProfile::inhouse();
+    let mut table = Table::new(&["algorithm", "rho", "rounds", "total (s)"]);
+    let mut chart = BarChart::new("Figure 6: 2D vs 3D", "s");
+    for rho in [1usize, 2, 4] {
+        let plan = Plan3d::new(16000, 4000, rho).unwrap();
+        let t = simulate_dense3d(&plan, &p).total();
+        table.row(&[
+            "3D".into(),
+            rho.to_string(),
+            plan.rounds().to_string(),
+            format!("{t:.0}"),
+        ]);
+        chart.bar(&format!("3D rho={rho}"), t);
+    }
+    for rho in [1usize, 2, 4, 8, 16] {
+        let plan = Plan2d::new(16000, 4000 * 4000, rho).unwrap();
+        let t = simulate_dense2d(&plan, &p).total();
+        table.row(&[
+            "2D".into(),
+            rho.to_string(),
+            plan.rounds().to_string(),
+            format!("{t:.0}"),
+        ]);
+        chart.bar(&format!("2D rho={rho}"), t);
+    }
+    rep.push_table(&table, "fig6_2d_vs_3d.csv");
+    rep.push_chart(&chart);
+    rep
+}
+
+/// Figure 7: sparse time vs replication, √n ∈ {2²⁰, 2²², 2²⁴},
+/// 8 nnz/row (δ ∈ {2⁻¹⁷, 2⁻¹⁹, 2⁻²¹}), √m' ∈ {2¹⁸, 2¹⁹, 2²⁰}.
+pub fn fig7() -> Report {
+    let mut rep = Report::new(
+        "fig7",
+        "Figure 7: sparse time vs replication, 8 nnz/row (in-house)",
+    );
+    let p = ClusterProfile::inhouse();
+    let mut table = Table::new(&["log2(sqrt_n)", "log2(sqrt_m')", "rho", "rounds", "total (s)"]);
+    let mut chart = BarChart::new("Figure 7: sparse multiplication", "s");
+    for (lg_side, lg_block) in [(20u32, 18u32), (22, 19), (24, 20)] {
+        let side = 1usize << lg_side;
+        let block = 1usize << lg_block;
+        let delta = 8.0 / side as f64;
+        let delta_o = delta * delta * side as f64;
+        let q = side / block;
+        let mut rho = 1;
+        while rho <= q {
+            let plan = SparsePlan::new(side, block, rho, delta, delta_o).unwrap();
+            let t = simulate_sparse3d(&plan, &p).total();
+            table.row(&[
+                lg_side.to_string(),
+                lg_block.to_string(),
+                rho.to_string(),
+                plan.rounds().to_string(),
+                format!("{t:.0}"),
+            ]);
+            chart.bar(&format!("n=2^{lg_side} rho={rho}"), t);
+            rho *= 2;
+        }
+    }
+    rep.push_table(&table, "fig7_sparse.csv");
+    rep.push_chart(&chart);
+    rep
+}
+
+/// Figure 8: EMR c3.8xlarge time vs replication, √n = 16000.
+pub fn fig8() -> Report {
+    time_vs_replication(
+        "fig8",
+        "Figure 8: time vs replication, sqrt(n)=16000 (EMR c3.8xlarge)",
+        16000,
+        4000,
+        &[1, 2, 4],
+        &ClusterProfile::emr_c3_8xlarge(),
+    )
+}
+
+/// Figure 9a/9b: EMR component costs, c3.8xlarge vs i2.xlarge,
+/// √n = 16000.
+pub fn fig9() -> Vec<Report> {
+    vec![
+        component_costs(
+            "fig9a",
+            "Figure 9a: component cost vs replication, sqrt(n)=16000 (EMR c3.8xlarge)",
+            16000,
+            4000,
+            &[1, 2, 4],
+            &ClusterProfile::emr_c3_8xlarge(),
+        ),
+        component_costs(
+            "fig9b",
+            "Figure 9b: component cost vs replication, sqrt(n)=16000 (EMR i2.xlarge)",
+            16000,
+            4000,
+            &[1, 2, 4],
+            &ClusterProfile::emr_i2_xlarge(),
+        ),
+    ]
+}
+
+/// Figure 10a/10b: EMR c3.8xlarge at √n = 32000: per-round times and
+/// component costs.
+pub fn fig10() -> Vec<Report> {
+    let p = ClusterProfile::emr_c3_8xlarge();
+    vec![
+        time_vs_replication(
+            "fig10a",
+            "Figure 10a: time vs replication, sqrt(n)=32000 (EMR c3.8xlarge)",
+            32000,
+            4000,
+            &[1, 2, 4, 8],
+            &p,
+        ),
+        component_costs(
+            "fig10b",
+            "Figure 10b: component cost vs replication, sqrt(n)=32000 (EMR c3.8xlarge)",
+            32000,
+            4000,
+            &[1, 2, 4, 8],
+            &p,
+        ),
+    ]
+}
+
+/// All figures in paper order.
+pub fn all_figures() -> Vec<Report> {
+    let mut out = vec![fig1(), fig2()];
+    out.extend(fig3());
+    out.extend(fig4());
+    out.push(fig5());
+    out.push(fig6());
+    out.push(fig7());
+    out.push(fig8());
+    out.extend(fig9());
+    out.extend(fig10());
+    out
+}
+
+/// Figures matching a numeric selector (e.g. 3 → fig3a + fig3b).
+pub fn figure(num: usize) -> Vec<Report> {
+    match num {
+        1 => vec![fig1()],
+        2 => vec![fig2()],
+        3 => fig3(),
+        4 => fig4(),
+        5 => vec![fig5()],
+        6 => vec![fig6()],
+        7 => vec![fig7()],
+        8 => vec![fig8()],
+        9 => fig9(),
+        10 => fig10(),
+        _ => vec![],
+    }
+}
+
+/// Convenience: expose the simulated totals used by tests/benches.
+pub fn sim_inhouse_3d(side: usize, block: usize, rho: usize) -> SimResult {
+    simulate_dense3d(
+        &Plan3d::new(side, block, rho).unwrap(),
+        &ClusterProfile::inhouse(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_summary_shows_balanced_win() {
+        let r = fig1();
+        assert!(r.text.contains("naive"));
+        assert!(r.text.contains("balanced"));
+        assert_eq!(r.csv.len(), 2);
+        // balanced cv must be 0 (perfectly even at these parameters).
+        let summary = &r.csv[1].1;
+        let bal_line = summary.lines().find(|l| l.starts_with("balanced")).unwrap();
+        assert!(bal_line.ends_with("0.000"), "line: {bal_line}");
+    }
+
+    #[test]
+    fn fig2_marks_8000_oom() {
+        let r = fig2();
+        assert!(r.text.contains("OOM"), "sqrt(m)=8000 must OOM as in the paper");
+        assert!(r.text.contains("4000"));
+    }
+
+    #[test]
+    fn all_figures_have_unique_ids_and_csv() {
+        let figs = all_figures();
+        assert_eq!(figs.len(), 14); // 1,2,3a,3b,4a,4b,5,6,7,8,9a,9b,10a,10b
+        let mut ids: Vec<&str> = figs.iter().map(|f| f.id.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 14, "duplicate figure ids");
+        for f in &figs {
+            assert!(!f.csv.is_empty(), "{} has no csv", f.id);
+            assert!(!f.text.is_empty(), "{} has no text", f.id);
+        }
+    }
+
+    #[test]
+    fn figure_selector() {
+        assert_eq!(figure(3).len(), 2);
+        assert_eq!(figure(1).len(), 1);
+        assert!(figure(11).is_empty());
+    }
+
+    #[test]
+    fn fig6_3d_has_significant_advantage() {
+        let r = fig6();
+        let csv = &r.csv[0].1;
+        let mut t3 = vec![];
+        let mut t2 = vec![];
+        for line in csv.lines().skip(1) {
+            let cells: Vec<&str> = line.split(',').collect();
+            let total: f64 = cells[3].parse().unwrap();
+            if cells[0] == "3D" {
+                t3.push(total);
+            } else {
+                t2.push(total);
+            }
+        }
+        // Paper Q5: "the 3D approach has a significant performance
+        // advantage": the best 2D configuration loses to the best 3D by
+        // a clear margin, and every 2D bar exceeds the best 3D bar.
+        let best3 = t3.iter().cloned().fold(f64::INFINITY, f64::min);
+        let best2 = t2.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(
+            best2 > 1.25 * best3,
+            "best 2D {best2} should exceed best 3D {best3} by >25%"
+        );
+        for t in t2 {
+            assert!(t > best3, "2D {t} !> best 3D {best3}");
+        }
+    }
+
+    #[test]
+    fn fig7_covers_three_sizes() {
+        let r = fig7();
+        for lg in ["20", "22", "24"] {
+            assert!(r.text.contains(&format!("n=2^{lg}")), "missing 2^{lg}");
+        }
+    }
+}

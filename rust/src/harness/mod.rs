@@ -1,0 +1,9 @@
+//! Figure/benchmark harness: regenerates every figure of the paper's
+//! evaluation section (Figures 1–10) as text tables, ASCII bar charts,
+//! and CSV files.
+
+pub mod ablations;
+pub mod figures;
+
+pub use ablations::all_ablations;
+pub use figures::{all_figures, figure, Report};

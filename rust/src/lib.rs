@@ -1,0 +1,34 @@
+//! # M3 — Multi-round Matrix Multiplication on MapReduce
+//!
+//! A Rust reproduction of the system described in
+//! *"Experimental Evaluation of Multi-Round Matrix Multiplication on
+//! MapReduce"* (Ceccarello & Silvestri, 2014).
+//!
+//! The crate is organised in layers:
+//!
+//! * [`matrix`] — dense/sparse matrix substrate (blocks, semirings,
+//!   Erdős–Rényi generators, reference multiply).
+//! * [`mapreduce`] — a Hadoop-like MapReduce engine: rounds, map tasks,
+//!   shuffle, reduce tasks, partitioners, a simulated distributed file
+//!   system, and per-round metrics.
+//! * [`m3`] — the paper's contribution: the 3D dense (Algorithm 1),
+//!   3D sparse, and 2D (Algorithm 2) multi-round multiplication
+//!   algorithms plus the balanced partitioner (Algorithm 3).
+//! * [`runtime`] — PJRT/XLA runtime that loads the AOT-compiled
+//!   JAX/Pallas block-multiply artifacts and runs them on the reduce
+//!   hot path (Python is never on the request path).
+//! * [`simulator`] — a discrete cost-model simulator of the paper's
+//!   clusters (in-house 16-node, EMR c3.8xlarge / i2.xlarge) used to
+//!   regenerate the paper-scale figures.
+//! * [`harness`] — figure/benchmark harness that regenerates every
+//!   figure of the paper's evaluation section.
+//! * [`util`] — in-house PRNG, mini property-testing framework,
+//!   stats, CLI and table printing helpers.
+
+pub mod harness;
+pub mod m3;
+pub mod mapreduce;
+pub mod matrix;
+pub mod runtime;
+pub mod simulator;
+pub mod util;

@@ -1,0 +1,540 @@
+//! The 3D multi-round algorithm (paper Algorithm 1), generic over the
+//! block payload so the dense and sparse variants share the map/route
+//! logic that Theorem 3.1's proof pins down.
+//!
+//! With `q = √(n/m)` blocks per dimension and replication ρ, the q³
+//! block products are partitioned into q groups
+//! `G_ℓ = { A[i,h]·B[h,j] : h = (i+j+ℓ) mod q }`; round `r < R-1`
+//! computes groups `rρ … (r+1)ρ-1`, maintaining ρ running accumulators
+//! `C^ℓ'` per output block; the final round sums the ρ accumulators.
+//!
+//! Map of round `r` (from the proof of Theorem 3.1 — the pseudocode in
+//! the paper omits the `rρ` term in the A/B cases):
+//!
+//! * `⟨(i,-1,k); A[i,k]⟩` → for ℓ' in 0..ρ: emit
+//!   `⟨(i, k, (k-i-ℓ'-rρ) mod q); A⟩`
+//! * `⟨(k,-1,j); B[k,j]⟩` → for ℓ' in 0..ρ: emit
+//!   `⟨((k-j-ℓ'-rρ) mod q, k, j); B⟩`
+//! * `⟨(i,ℓ',j); C^ℓ'⟩` → emit `⟨(i, (i+j+ℓ'+rρ) mod q, j); C^ℓ'⟩`,
+//!   or `⟨(i,-1,j); C^ℓ'⟩` in the final round.
+//!
+//! Reduce of a product round at key `(i,h,j)`: `C^ℓ' ⊕= A[i,h]·B[h,j]`,
+//! emitted as `⟨(i,ℓ',j); C^ℓ'⟩` with `ℓ' = (h-i-j-rρ) mod q < ρ`.
+//! Reduce of the final round at `(i,-1,j)`: emit `⟨(i,-1,j); Σ_ℓ C^ℓ⟩`.
+
+use std::marker::PhantomData;
+use std::sync::Arc;
+
+use crate::mapreduce::driver::MultiRoundAlgorithm;
+use crate::mapreduce::types::{Mapper, Partitioner, Reducer, Value};
+
+use super::keys::{umod, TripleKey};
+use super::planner::Plan3d;
+
+/// Which operand a block payload carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tag {
+    /// A block of the left input matrix.
+    A,
+    /// A block of the right input matrix.
+    B,
+    /// A partial-sum accumulator block.
+    C,
+}
+
+/// A block payload routed by the 3D algorithm.
+pub trait Block3d: Value {
+    /// Which operand this block is.
+    fn tag(&self) -> Tag;
+}
+
+/// Payload-specific block algebra: the fused multiply-accumulate the
+/// reducers run (dense → XLA/native GEMM; sparse → CSR SpGEMM) and the
+/// final-round ρ-way sum.
+pub trait BlockOps<P: Block3d>: Send + Sync {
+    /// `c ⊕ a·b` (with `c` absent in round 0); result tagged [`Tag::C`].
+    fn fma(&self, a: &P, b: &P, c: Option<&P>) -> P;
+    /// `Σ parts` over ≥1 C blocks; result tagged [`Tag::C`].
+    fn sum(&self, parts: Vec<P>) -> P;
+}
+
+/// Geometry shared by mapper and reducer.
+#[derive(Debug, Clone, Copy)]
+pub struct Geometry {
+    /// Blocks per dimension `q`.
+    pub q: usize,
+    /// Replication factor ρ.
+    pub rho: usize,
+}
+
+impl Geometry {
+    /// Rounds: `q/ρ + 1`.
+    pub fn rounds(&self) -> usize {
+        self.q / self.rho + 1
+    }
+
+    /// Is `r` the final (summation) round?
+    pub fn is_final(&self, r: usize) -> bool {
+        r + 1 == self.rounds()
+    }
+}
+
+impl From<Plan3d> for Geometry {
+    fn from(p: Plan3d) -> Self {
+        Geometry {
+            q: p.q(),
+            rho: p.rho,
+        }
+    }
+}
+
+/// Map function of Algorithm 1.
+pub struct Mapper3d<P> {
+    geo: Geometry,
+    _pd: PhantomData<fn() -> P>,
+}
+
+impl<P> Mapper3d<P> {
+    /// New mapper for the given geometry.
+    pub fn new(geo: Geometry) -> Self {
+        Self {
+            geo,
+            _pd: PhantomData,
+        }
+    }
+}
+
+impl<P: Block3d> Mapper<TripleKey, P> for Mapper3d<P> {
+    fn map(&self, round: usize, key: &TripleKey, value: &P, emit: &mut dyn FnMut(TripleKey, P)) {
+        let Geometry { q, rho } = self.geo;
+        let last = self.geo.is_final(round);
+        match value.tag() {
+            Tag::A => {
+                if last {
+                    return; // A is not consumed by the summation round
+                }
+                // key = (i, -1, k): block A[i,k]; k is the inner index.
+                let (i, k) = (key.i as isize, key.j as isize);
+                for l in 0..rho {
+                    let j = umod(k - i - l as isize - (round * rho) as isize, q);
+                    emit(
+                        TripleKey::new(key.i as usize, key.j as usize, j),
+                        value.clone(),
+                    );
+                }
+            }
+            Tag::B => {
+                if last {
+                    return;
+                }
+                // key = (k, -1, j): block B[k,j]; k is the inner index.
+                let (k, j) = (key.i as isize, key.j as isize);
+                for l in 0..rho {
+                    let i = umod(k - j - l as isize - (round * rho) as isize, q);
+                    emit(
+                        TripleKey::new(i, key.i as usize, key.j as usize),
+                        value.clone(),
+                    );
+                }
+            }
+            Tag::C => {
+                // key = (i, ℓ', j): accumulator C^ℓ'.
+                let (i, l, j) = (key.i as usize, key.h as usize, key.j as usize);
+                debug_assert!(l < rho, "carry slot {l} out of range (rho={rho})");
+                if last {
+                    emit(TripleKey::io(i, j), value.clone());
+                } else {
+                    let h = (i + j + l + round * rho) % q;
+                    emit(TripleKey::new(i, h, j), value.clone());
+                }
+            }
+        }
+    }
+}
+
+/// Reduce function of Algorithm 1.
+pub struct Reducer3d<P: Block3d> {
+    geo: Geometry,
+    ops: Arc<dyn BlockOps<P>>,
+}
+
+impl<P: Block3d> Reducer3d<P> {
+    /// New reducer with the payload algebra `ops`.
+    pub fn new(geo: Geometry, ops: Arc<dyn BlockOps<P>>) -> Self {
+        Self { geo, ops }
+    }
+}
+
+impl<P: Block3d> Reducer<TripleKey, P> for Reducer3d<P> {
+    fn reduce(
+        &self,
+        round: usize,
+        key: &TripleKey,
+        values: Vec<P>,
+        emit: &mut dyn FnMut(TripleKey, P),
+    ) {
+        let Geometry { q, rho } = self.geo;
+        if self.geo.is_final(round) {
+            // Key (i,-1,j): sum the ρ accumulators.
+            debug_assert!(key.is_io(), "final round key must be (i,-1,j): {key:?}");
+            debug_assert!(
+                values.iter().all(|v| v.tag() == Tag::C),
+                "final round values must all be C"
+            );
+            let sum = self.ops.sum(values);
+            emit(*key, sum);
+            return;
+        }
+        // Product round at key (i,h,j): expect exactly one A, one B,
+        // and (after round 0) one C.
+        let mut a = None;
+        let mut b = None;
+        let mut c = None;
+        for v in values {
+            match v.tag() {
+                Tag::A => {
+                    assert!(a.is_none(), "duplicate A at {key:?}");
+                    a = Some(v);
+                }
+                Tag::B => {
+                    assert!(b.is_none(), "duplicate B at {key:?}");
+                    b = Some(v);
+                }
+                Tag::C => {
+                    assert!(c.is_none(), "duplicate C at {key:?}");
+                    c = Some(v);
+                }
+            }
+        }
+        let a = a.unwrap_or_else(|| panic!("missing A at {key:?} round {round}"));
+        let b = b.unwrap_or_else(|| panic!("missing B at {key:?} round {round}"));
+        if round > 0 {
+            assert!(c.is_some(), "missing C at {key:?} round {round}");
+        }
+        let result = self.ops.fma(&a, &b, c.as_ref());
+        // ℓ' = (h - i - j - rρ) mod q, guaranteed < ρ for live keys.
+        let l = umod(
+            key.h as isize - key.i as isize - key.j as isize - (round * rho) as isize,
+            q,
+        );
+        debug_assert!(l < rho, "reducer key {key:?} not live in round {round}");
+        emit(
+            TripleKey::carry(key.i as usize, l, key.j as usize),
+            result,
+        );
+    }
+}
+
+/// The full 3D multi-round algorithm: geometry + payload algebra +
+/// partitioner, pluggable into [`crate::mapreduce::Driver`].
+pub struct Algo3d<P: Block3d> {
+    geo: Geometry,
+    mapper: Mapper3d<P>,
+    reducer: Reducer3d<P>,
+    partitioner: Box<dyn Partitioner<TripleKey>>,
+}
+
+impl<P: Block3d> Algo3d<P> {
+    /// Assemble the algorithm.
+    pub fn new(
+        geo: Geometry,
+        ops: Arc<dyn BlockOps<P>>,
+        partitioner: Box<dyn Partitioner<TripleKey>>,
+    ) -> Self {
+        Self {
+            geo,
+            mapper: Mapper3d::new(geo),
+            reducer: Reducer3d::new(geo, ops),
+            partitioner,
+        }
+    }
+
+    /// The geometry in use.
+    pub fn geometry(&self) -> Geometry {
+        self.geo
+    }
+}
+
+impl<P: Block3d> MultiRoundAlgorithm for Algo3d<P> {
+    type K = TripleKey;
+    type V = P;
+
+    fn num_rounds(&self) -> usize {
+        self.geo.rounds()
+    }
+
+    fn mapper(&self, _round: usize) -> &dyn Mapper<TripleKey, P> {
+        &self.mapper
+    }
+
+    fn reducer(&self, _round: usize) -> &dyn Reducer<TripleKey, P> {
+        &self.reducer
+    }
+
+    fn partitioner(&self, _round: usize) -> &dyn Partitioner<TripleKey> {
+        self.partitioner.as_ref()
+    }
+
+    fn reads_static_input(&self, round: usize) -> bool {
+        // A and B are re-read from the DFS in every product round; the
+        // final summation round reads only the carried accumulators.
+        !self.geo.is_final(round)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use std::collections::BTreeMap;
+
+    /// A symbolic payload that records provenance instead of numbers:
+    /// the product A[i,h]·B[h,j] is the symbol (i,h,j); an accumulator
+    /// is the set of symbols summed so far. Routing is correct iff the
+    /// final accumulator of output (i,j) is exactly
+    /// { (i,h,j) : 0 ≤ h < q }.
+    #[derive(Debug, Clone, PartialEq)]
+    enum Sym {
+        A { i: usize, k: usize },
+        B { k: usize, j: usize },
+        C { prods: Vec<(usize, usize, usize)> },
+    }
+
+    impl Value for Sym {
+        fn words(&self) -> usize {
+            match self {
+                Sym::C { prods } => prods.len().max(1),
+                _ => 1,
+            }
+        }
+    }
+
+    impl Block3d for Sym {
+        fn tag(&self) -> Tag {
+            match self {
+                Sym::A { .. } => Tag::A,
+                Sym::B { .. } => Tag::B,
+                Sym::C { .. } => Tag::C,
+            }
+        }
+    }
+
+    struct SymOps;
+    impl BlockOps<Sym> for SymOps {
+        fn fma(&self, a: &Sym, b: &Sym, c: Option<&Sym>) -> Sym {
+            let (i, k1) = match a {
+                Sym::A { i, k } => (*i, *k),
+                _ => panic!("fma: first operand not A"),
+            };
+            let (k2, j) = match b {
+                Sym::B { k, j } => (*k, *j),
+                _ => panic!("fma: second operand not B"),
+            };
+            assert_eq!(k1, k2, "inner indices must match: A[{i},{k1}]·B[{k2},{j}]");
+            let mut prods = match c {
+                Some(Sym::C { prods }) => prods.clone(),
+                None => vec![],
+                _ => panic!("fma: third operand not C"),
+            };
+            prods.push((i, k1, j));
+            Sym::C { prods }
+        }
+
+        fn sum(&self, parts: Vec<Sym>) -> Sym {
+            let mut prods = vec![];
+            for p in parts {
+                match p {
+                    Sym::C { prods: ps } => prods.extend(ps),
+                    _ => panic!("sum: non-C part"),
+                }
+            }
+            Sym::C { prods }
+        }
+    }
+
+    fn static_input(q: usize) -> Vec<crate::mapreduce::Pair<TripleKey, Sym>> {
+        let mut out = vec![];
+        for i in 0..q {
+            for j in 0..q {
+                out.push(crate::mapreduce::Pair::new(
+                    TripleKey::io(i, j),
+                    Sym::A { i, k: j },
+                ));
+                out.push(crate::mapreduce::Pair::new(
+                    TripleKey::io(i, j),
+                    Sym::B { k: i, j },
+                ));
+            }
+        }
+        out
+    }
+
+    fn run_symbolic(q: usize, rho: usize) -> BTreeMap<(usize, usize), Vec<(usize, usize, usize)>> {
+        use crate::m3::partitioner::BalancedPartitioner3d;
+        use crate::mapreduce::{Driver, EngineConfig};
+        let geo = Geometry { q, rho };
+        let alg = Algo3d::new(
+            geo,
+            Arc::new(SymOps),
+            Box::new(BalancedPartitioner3d { q, rho }),
+        );
+        let mut driver = Driver::new(EngineConfig {
+            map_tasks: 4,
+            reduce_tasks: 4,
+            workers: 4,
+        });
+        let res = driver.run(&alg, &static_input(q));
+        let mut out = BTreeMap::new();
+        for p in res.output {
+            assert!(p.key.is_io(), "final keys must be (i,-1,j)");
+            let prods = match p.value {
+                Sym::C { mut prods } => {
+                    prods.sort_unstable();
+                    prods
+                }
+                _ => panic!("final value must be C"),
+            };
+            let prev = out.insert((p.key.i as usize, p.key.j as usize), prods);
+            assert!(prev.is_none(), "duplicate output block");
+        }
+        out
+    }
+
+    fn expected(q: usize) -> BTreeMap<(usize, usize), Vec<(usize, usize, usize)>> {
+        let mut out = BTreeMap::new();
+        for i in 0..q {
+            for j in 0..q {
+                out.insert((i, j), (0..q).map(|h| (i, h, j)).collect());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn symbolic_routing_monolithic() {
+        // ρ = q: two rounds.
+        assert_eq!(run_symbolic(4, 4), expected(4));
+    }
+
+    #[test]
+    fn symbolic_routing_extreme_multiround() {
+        // ρ = 1: q+1 rounds.
+        assert_eq!(run_symbolic(4, 1), expected(4));
+    }
+
+    #[test]
+    fn symbolic_routing_intermediate() {
+        assert_eq!(run_symbolic(8, 2), expected(8));
+        assert_eq!(run_symbolic(8, 4), expected(8));
+        assert_eq!(run_symbolic(6, 3), expected(6));
+    }
+
+    #[test]
+    fn prop_symbolic_routing_all_geometries() {
+        // Every (q, ρ | q) computes each product exactly once and routes
+        // it to the right output block — the heart of Theorem 3.1.
+        run_prop("3d routing correct", 12, |case| {
+            let q = 1 + case.size(1, 9);
+            let divisors: Vec<usize> = (1..=q).filter(|d| q % d == 0).collect();
+            let rho = divisors[case.rng.next_usize(divisors.len())];
+            let got = run_symbolic(q, rho);
+            if got != expected(q) {
+                return Err(format!("routing wrong at q={q} rho={rho}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mapper_fanout_is_rho() {
+        let geo = Geometry { q: 4, rho: 2 };
+        let m = Mapper3d::<Sym>::new(geo);
+        let mut n = 0;
+        m.map(0, &TripleKey::io(1, 2), &Sym::A { i: 1, k: 2 }, &mut |_, _| {
+            n += 1
+        });
+        assert_eq!(n, 2, "A replicated ρ times");
+        let mut n = 0;
+        m.map(
+            1,
+            &TripleKey::carry(1, 0, 2),
+            &Sym::C { prods: vec![] },
+            &mut |_, _| n += 1,
+        );
+        assert_eq!(n, 1, "C emitted once");
+    }
+
+    #[test]
+    fn mapper_ab_silent_in_final_round() {
+        let geo = Geometry { q: 4, rho: 4 }; // rounds = 2, final = 1
+        let m = Mapper3d::<Sym>::new(geo);
+        let mut n = 0;
+        m.map(1, &TripleKey::io(0, 0), &Sym::A { i: 0, k: 0 }, &mut |_, _| {
+            n += 1
+        });
+        m.map(1, &TripleKey::io(0, 0), &Sym::B { k: 0, j: 0 }, &mut |_, _| {
+            n += 1
+        });
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn shuffle_and_reducer_bounds_hold() {
+        // Theorem 3.1: per-round shuffle ≤ 3ρq² block-pairs; every
+        // product-round reducer sees ≤ 3 blocks.
+        use crate::m3::partitioner::BalancedPartitioner3d;
+        use crate::mapreduce::{Driver, EngineConfig};
+        let (q, rho) = (6, 2);
+        let geo = Geometry { q, rho };
+        let alg = Algo3d::new(
+            geo,
+            Arc::new(SymOps),
+            Box::new(BalancedPartitioner3d { q, rho }),
+        );
+        let mut driver = Driver::new(EngineConfig {
+            map_tasks: 2,
+            reduce_tasks: 3,
+            workers: 2,
+        });
+        let res = driver.run(&alg, &static_input(q));
+        for (r, m) in res.metrics.rounds.iter().enumerate() {
+            if r + 1 < geo.rounds() {
+                assert!(
+                    m.shuffle_pairs <= 3 * rho * q * q,
+                    "round {r}: {} pairs > 3ρq²",
+                    m.shuffle_pairs
+                );
+                assert_eq!(m.num_reducers, rho * q * q, "round {r} live reducers");
+            } else {
+                assert_eq!(m.shuffle_pairs, rho * q * q, "final round shuffles ρq² C blocks");
+                assert_eq!(m.num_reducers, q * q);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "missing A")]
+    fn reducer_rejects_incomplete_group() {
+        let geo = Geometry { q: 4, rho: 1 };
+        let red = Reducer3d::new(geo, Arc::new(SymOps) as Arc<dyn BlockOps<Sym>>);
+        red.reduce(
+            0,
+            &TripleKey::new(0, 0, 0),
+            vec![Sym::B { k: 0, j: 0 }],
+            &mut |_, _| {},
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate A")]
+    fn reducer_rejects_duplicate_operand() {
+        let geo = Geometry { q: 4, rho: 1 };
+        let red = Reducer3d::new(geo, Arc::new(SymOps) as Arc<dyn BlockOps<Sym>>);
+        red.reduce(
+            0,
+            &TripleKey::new(0, 0, 0),
+            vec![Sym::A { i: 0, k: 0 }, Sym::A { i: 0, k: 0 }],
+            &mut |_, _| {},
+        );
+    }
+}

@@ -1,0 +1,339 @@
+//! The 2D algorithm (paper Algorithm 2) — the baseline the 3D approach
+//! is compared against in Figure 6.
+//!
+//! A is split into `s = n/m` row strips `A_i` of shape `m/√n × √n`, B
+//! into `s` column strips `B_j` of shape `√n × m/√n`; output block
+//! `C[i,j] = A_i · B_j` is computed by a single reducer. Round `r`
+//! computes the subproblems `(i, j)` with `j = (i + ℓ + rρ) mod s`,
+//! `0 ≤ ℓ < ρ`; rounds are independent (no accumulators carried), so
+//! every round's reduce output is final.
+
+use std::sync::Arc;
+
+use crate::mapreduce::driver::MultiRoundAlgorithm;
+use crate::mapreduce::types::{Mapper, Partitioner, Reducer, Value};
+use crate::matrix::DenseMatrix;
+use crate::runtime::LocalMultiply;
+
+use super::keys::{umod, PairKey};
+use super::planner::Plan2d;
+
+/// A 2D payload: an input strip or an output block.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Strip {
+    /// Row strip `A_i`, shape `m/√n × √n`.
+    A(DenseMatrix),
+    /// Column strip `B_j`, shape `√n × m/√n`.
+    B(DenseMatrix),
+    /// Output block `C[i,j]`, shape `m/√n × m/√n`.
+    C(DenseMatrix),
+}
+
+impl Value for Strip {
+    fn words(&self) -> usize {
+        match self {
+            Strip::A(m) | Strip::B(m) | Strip::C(m) => m.words(),
+        }
+    }
+}
+
+/// Map function of Algorithm 2.
+pub struct Mapper2d {
+    plan: Plan2d,
+}
+
+impl Mapper<PairKey, Strip> for Mapper2d {
+    fn map(&self, round: usize, key: &PairKey, value: &Strip, emit: &mut dyn FnMut(PairKey, Strip)) {
+        let s = self.plan.strips();
+        let rho = self.plan.rho;
+        match value {
+            Strip::A(_) => {
+                let i = key.i as usize;
+                for l in 0..rho {
+                    let j = (i + l + round * rho) % s;
+                    emit(PairKey::new(i, j), value.clone());
+                }
+            }
+            Strip::B(_) => {
+                let j = key.j as usize;
+                for l in 0..rho {
+                    let i = umod(j as isize - l as isize - (round * rho) as isize, s);
+                    emit(PairKey::new(i, j), value.clone());
+                }
+            }
+            Strip::C(_) => {
+                // C strips are final output; they are never re-mapped
+                // (the driver does not carry them).
+                unreachable!("C blocks must not re-enter the 2D pipeline");
+            }
+        }
+    }
+}
+
+/// Reduce function of Algorithm 2: `C[i,j] = A_i · B_j`.
+pub struct Reducer2d {
+    plan: Plan2d,
+    backend: Arc<dyn LocalMultiply>,
+}
+
+impl Reducer<PairKey, Strip> for Reducer2d {
+    fn reduce(
+        &self,
+        round: usize,
+        key: &PairKey,
+        values: Vec<Strip>,
+        emit: &mut dyn FnMut(PairKey, Strip),
+    ) {
+        let s = self.plan.strips();
+        let rho = self.plan.rho;
+        // Liveness check: ℓ = (j - i - rρ) mod s must be < ρ.
+        let l = umod(
+            key.j as isize - key.i as isize - (round * rho) as isize,
+            s,
+        );
+        debug_assert!(l < rho, "2D reducer key {key:?} not live in round {round}");
+        let mut a = None;
+        let mut b = None;
+        for v in values {
+            match v {
+                Strip::A(m) => {
+                    assert!(a.is_none(), "duplicate A strip at {key:?}");
+                    a = Some(m);
+                }
+                Strip::B(m) => {
+                    assert!(b.is_none(), "duplicate B strip at {key:?}");
+                    b = Some(m);
+                }
+                Strip::C(_) => panic!("unexpected C at 2D reducer {key:?}"),
+            }
+        }
+        let a = a.unwrap_or_else(|| panic!("missing A strip at {key:?}"));
+        let b = b.unwrap_or_else(|| panic!("missing B strip at {key:?}"));
+        let zero = DenseMatrix::zeros(a.rows(), b.cols());
+        let c = self.backend.multiply_acc(&a, &b, &zero);
+        emit(*key, Strip::C(c));
+    }
+}
+
+/// The full 2D algorithm.
+pub struct Algo2d {
+    plan: Plan2d,
+    mapper: Mapper2d,
+    reducer: Reducer2d,
+    partitioner: Box<dyn Partitioner<PairKey>>,
+}
+
+impl Algo2d {
+    /// Assemble the 2D algorithm.
+    pub fn new(
+        plan: Plan2d,
+        backend: Arc<dyn LocalMultiply>,
+        partitioner: Box<dyn Partitioner<PairKey>>,
+    ) -> Self {
+        Self {
+            plan,
+            mapper: Mapper2d { plan },
+            reducer: Reducer2d { plan, backend },
+            partitioner,
+        }
+    }
+
+    /// The validated plan.
+    pub fn plan(&self) -> Plan2d {
+        self.plan
+    }
+
+    /// Build the static input pairs from the two matrices.
+    pub fn static_input(
+        plan: Plan2d,
+        a: &DenseMatrix,
+        b: &DenseMatrix,
+    ) -> Vec<crate::mapreduce::Pair<PairKey, Strip>> {
+        let s = plan.strips();
+        let h = plan.strip_height();
+        let side = plan.side;
+        assert_eq!(a.rows(), side);
+        assert_eq!(b.rows(), side);
+        let mut out = Vec::with_capacity(2 * s);
+        for i in 0..s {
+            // Row strip of A: block (i, 0) of an (h × side)-block grid.
+            out.push(crate::mapreduce::Pair::new(
+                PairKey::a_input(i),
+                Strip::A(a.block(i, 0, h, side)),
+            ));
+        }
+        for j in 0..s {
+            out.push(crate::mapreduce::Pair::new(
+                PairKey::b_input(j),
+                Strip::B(b.block(0, j, side, h)),
+            ));
+        }
+        out
+    }
+
+    /// Assemble the output matrix from the C blocks of all rounds.
+    pub fn assemble_output(
+        plan: Plan2d,
+        pairs: &[crate::mapreduce::Pair<PairKey, Strip>],
+    ) -> DenseMatrix {
+        let s = plan.strips();
+        let mut out = DenseMatrix::zeros(plan.side, plan.side);
+        let mut seen = vec![false; s * s];
+        for p in pairs {
+            let (i, j) = (p.key.i as usize, p.key.j as usize);
+            assert!(!seen[i * s + j], "duplicate output block ({i},{j})");
+            seen[i * s + j] = true;
+            match &p.value {
+                Strip::C(m) => out.set_block(i, j, m),
+                _ => panic!("non-C in 2D output"),
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "missing output blocks");
+        out
+    }
+}
+
+impl MultiRoundAlgorithm for Algo2d {
+    type K = PairKey;
+    type V = Strip;
+
+    fn num_rounds(&self) -> usize {
+        self.plan.rounds()
+    }
+
+    fn mapper(&self, _round: usize) -> &dyn Mapper<PairKey, Strip> {
+        &self.mapper
+    }
+
+    fn reducer(&self, _round: usize) -> &dyn Reducer<PairKey, Strip> {
+        &self.reducer
+    }
+
+    fn partitioner(&self, _round: usize) -> &dyn Partitioner<PairKey> {
+        self.partitioner.as_ref()
+    }
+
+    fn carries_output(&self) -> bool {
+        false // every round's C blocks are final output
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::m3::partitioner::BalancedPartitioner2d;
+    use crate::mapreduce::{Driver, EngineConfig};
+    use crate::matrix::gen;
+    use crate::runtime::NaiveMultiply;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Xoshiro256ss;
+
+    fn cfg() -> EngineConfig {
+        EngineConfig {
+            map_tasks: 3,
+            reduce_tasks: 3,
+            workers: 3,
+        }
+    }
+
+    fn run_2d(side: usize, m: usize, rho: usize, seed: u64) -> (DenseMatrix, DenseMatrix) {
+        let plan = Plan2d::new(side, m, rho).unwrap();
+        let mut rng = Xoshiro256ss::new(seed);
+        let a = gen::dense_int(side, side, &mut rng);
+        let b = gen::dense_int(side, side, &mut rng);
+        let alg = Algo2d::new(
+            plan,
+            Arc::new(NaiveMultiply),
+            Box::new(BalancedPartitioner2d {
+                strips: plan.strips(),
+                rho,
+            }),
+        );
+        let input = Algo2d::static_input(plan, &a, &b);
+        let mut driver = Driver::new(cfg());
+        let res = driver.run(&alg, &input);
+        let got = Algo2d::assemble_output(plan, &res.output);
+        (got, a.matmul_naive(&b))
+    }
+
+    #[test]
+    fn multiplies_correctly_multiround() {
+        let (got, want) = run_2d(16, 64, 1, 1); // s=4, R=4
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn multiplies_correctly_monolithic() {
+        let (got, want) = run_2d(16, 64, 4, 2); // s=4, R=1
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn multiplies_correctly_intermediate() {
+        let (got, want) = run_2d(16, 64, 2, 3); // R=2
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn prop_2d_all_geometries() {
+        run_prop("2d multiply correct", 8, |case| {
+            // side must have s = n/m with ρ | s and m % side == 0.
+            let side = 8 * (1 + case.size(0, 2)); // 8, 16, 24
+            let strips_choices: Vec<usize> = (2..=side / 2)
+                .filter(|&s| (side * side) % s == 0 && (side * side / s) % side == 0)
+                .collect();
+            let s = strips_choices[case.rng.next_usize(strips_choices.len())];
+            let m = side * side / s;
+            let divisors: Vec<usize> = (1..=s).filter(|d| s % d == 0).collect();
+            let rho = divisors[case.rng.next_usize(divisors.len())];
+            let (got, want) = run_2d(side, m, rho, case.rng.next_u64());
+            if got != want {
+                return Err(format!("mismatch side={side} m={m} rho={rho}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shuffle_bound_theorem_3_3() {
+        // Shuffle ≤ 2ρ·s strips per round ⇒ ≤ 2ρn words.
+        let side = 16;
+        let m = 64;
+        let rho = 2;
+        let plan = Plan2d::new(side, m, rho).unwrap();
+        let mut rng = Xoshiro256ss::new(4);
+        let a = gen::dense_int(side, side, &mut rng);
+        let b = gen::dense_int(side, side, &mut rng);
+        let alg = Algo2d::new(
+            plan,
+            Arc::new(NaiveMultiply),
+            Box::new(BalancedPartitioner2d {
+                strips: plan.strips(),
+                rho,
+            }),
+        );
+        let input = Algo2d::static_input(plan, &a, &b);
+        let mut driver = Driver::new(cfg());
+        let res = driver.run(&alg, &input);
+        for m in &res.metrics.rounds {
+            assert!(m.shuffle_words <= plan.shuffle_words_bound());
+            assert!(m.max_reducer_words <= plan.reducer_words_bound());
+        }
+    }
+
+    #[test]
+    fn strips_have_expected_shapes() {
+        let plan = Plan2d::new(16, 64, 1).unwrap();
+        let a = DenseMatrix::zeros(16, 16);
+        let b = DenseMatrix::zeros(16, 16);
+        let input = Algo2d::static_input(plan, &a, &b);
+        assert_eq!(input.len(), 8); // 4 A strips + 4 B strips
+        for p in &input {
+            match &p.value {
+                Strip::A(m) => assert_eq!((m.rows(), m.cols()), (4, 16)),
+                Strip::B(m) => assert_eq!((m.rows(), m.cols()), (16, 4)),
+                Strip::C(_) => panic!("no C in input"),
+            }
+        }
+    }
+}

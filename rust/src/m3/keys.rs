@@ -1,0 +1,127 @@
+//! Key types for the M3 algorithms.
+//!
+//! The paper stores matrices as pairs keyed by block coordinates with a
+//! `-1` dummy slot: `⟨(i,-1,j); A_{i,j}⟩` for 3D, `⟨(i,-1); A_i⟩` for
+//! 2D. Reducer keys are full triplets `(i,h,j)` / pairs `(i,j)`.
+
+/// 3D key `(i, h, j)`; `h = -1` marks input/output pairs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TripleKey {
+    /// Output block row.
+    pub i: i32,
+    /// Inner block index (or -1 for input/output pairs).
+    pub h: i32,
+    /// Output block column.
+    pub j: i32,
+}
+
+impl TripleKey {
+    /// A reducer key `(i, h, j)`.
+    pub fn new(i: usize, h: usize, j: usize) -> Self {
+        Self {
+            i: i as i32,
+            h: h as i32,
+            j: j as i32,
+        }
+    }
+
+    /// An input/output key `(i, -1, j)`.
+    pub fn io(i: usize, j: usize) -> Self {
+        Self {
+            i: i as i32,
+            h: -1,
+            j: j as i32,
+        }
+    }
+
+    /// A carry key `(i, ℓ, j)` for partial sum `C^ℓ`.
+    pub fn carry(i: usize, l: usize, j: usize) -> Self {
+        Self::new(i, l, j)
+    }
+
+    /// True for `(i, -1, j)` input/output keys.
+    pub fn is_io(&self) -> bool {
+        self.h == -1
+    }
+}
+
+/// 2D key `(i, j)`; `-1` marks input pairs (`(i,-1)` for `A_i`,
+/// `(-1,j)` for `B_j`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PairKey {
+    /// Output strip row (or -1 for B inputs).
+    pub i: i32,
+    /// Output strip column (or -1 for A inputs).
+    pub j: i32,
+}
+
+impl PairKey {
+    /// A reducer/output key `(i, j)`.
+    pub fn new(i: usize, j: usize) -> Self {
+        Self {
+            i: i as i32,
+            j: j as i32,
+        }
+    }
+
+    /// The input key of `A_i`: `(i, -1)`.
+    pub fn a_input(i: usize) -> Self {
+        Self { i: i as i32, j: -1 }
+    }
+
+    /// The input key of `B_j`: `(-1, j)`.
+    pub fn b_input(j: usize) -> Self {
+        Self { i: -1, j: j as i32 }
+    }
+}
+
+/// Euclidean (always non-negative) modulo for index arithmetic with
+/// subtractions, e.g. `(k - i - ℓ - rρ) mod q`.
+#[inline]
+pub fn umod(x: isize, q: usize) -> usize {
+    let q = q as isize;
+    (((x % q) + q) % q) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triple_key_constructors() {
+        let k = TripleKey::new(1, 2, 3);
+        assert_eq!((k.i, k.h, k.j), (1, 2, 3));
+        assert!(!k.is_io());
+        let io = TripleKey::io(4, 5);
+        assert_eq!((io.i, io.h, io.j), (4, -1, 5));
+        assert!(io.is_io());
+    }
+
+    #[test]
+    fn pair_key_constructors() {
+        assert_eq!(PairKey::a_input(3), PairKey { i: 3, j: -1 });
+        assert_eq!(PairKey::b_input(7), PairKey { i: -1, j: 7 });
+        assert_eq!(PairKey::new(1, 2), PairKey { i: 1, j: 2 });
+    }
+
+    #[test]
+    fn keys_order_deterministically() {
+        let mut ks = vec![
+            TripleKey::new(1, 0, 0),
+            TripleKey::io(0, 0),
+            TripleKey::new(0, 1, 0),
+        ];
+        ks.sort();
+        assert_eq!(ks[0], TripleKey::io(0, 0)); // h=-1 sorts first within i=0
+        assert_eq!(ks[2], TripleKey::new(1, 0, 0));
+    }
+
+    #[test]
+    fn umod_handles_negatives() {
+        assert_eq!(umod(-1, 5), 4);
+        assert_eq!(umod(-5, 5), 0);
+        assert_eq!(umod(-13, 5), 2);
+        assert_eq!(umod(7, 5), 2);
+        assert_eq!(umod(0, 5), 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! The M3 library: the paper's multi-round matrix-multiplication
+//! algorithms on the MapReduce engine.
+//!
+//! * [`algo3d`] — the 3D decomposition (paper Algorithm 1), generic over
+//!   dense/sparse block payloads; `R = √n/(ρ√m) + 1` rounds, shuffle
+//!   size `3ρn`, reducer size `3m` (Theorem 3.1).
+//! * [`dense2d`] — the 2D baseline (paper Algorithm 2); `R = n/(ρm)`
+//!   rounds, shuffle size `2ρn`, reducer size `3m` (Theorem 3.3).
+//! * [`partitioner`] — the naive `31²i + 31j + k` hash and the balanced
+//!   partitioner (paper Algorithm 3, Figure 1).
+//! * [`planner`] — parameter validation and the theorems' formulas.
+//! * [`multiply`] — the high-level public API (`multiply_dense_3d`,
+//!   `multiply_sparse_3d`, `multiply_dense_2d`).
+
+pub mod algo3d;
+pub mod dense2d;
+pub mod keys;
+pub mod multiply;
+pub mod partitioner;
+pub mod planner;
+pub mod sparse_tools;
+
+pub use keys::{PairKey, TripleKey};
+pub use multiply::{
+    multiply_dense_2d, multiply_dense_3d, multiply_dense_3d_sr, multiply_sparse_3d, M3Config,
+    PartitionerKind,
+};
+pub use planner::{Plan2d, Plan3d, SparsePlan};

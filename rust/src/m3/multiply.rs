@@ -1,0 +1,718 @@
+//! High-level public API of the M3 library: dense/sparse payloads and
+//! the `multiply_*` entry points that wire plans, algorithms, engine
+//! and backend together.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::mapreduce::types::{Partitioner, Value};
+use crate::mapreduce::{Driver, EngineConfig, JobMetrics, Pair};
+use crate::matrix::semiring::Semiring;
+use crate::matrix::{BlockGrid, CooMatrix, CsrMatrix, DenseMatrix};
+use crate::runtime::LocalMultiply;
+
+use super::algo3d::{Algo3d, Block3d, BlockOps, Geometry, Tag};
+use super::dense2d::Algo2d;
+use super::keys::TripleKey;
+use super::partitioner::{
+    BalancedPartitioner2d, BalancedPartitioner3d, NaiveTriplePartitioner,
+};
+use super::planner::{Plan2d, Plan3d, SparsePlan};
+
+/// Which partitioner routes groups to reduce tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PartitionerKind {
+    /// Paper Algorithm 3 (default — Figure 1 right).
+    #[default]
+    Balanced,
+    /// The `31²i + 31j + k` hash (Figure 1 left).
+    Naive,
+}
+
+/// Configuration of an M3 multiplication.
+#[derive(Debug, Clone)]
+pub struct M3Config {
+    /// Block side `√m` (3D) — for 2D, `m = block_side²`.
+    pub block_side: usize,
+    /// Replication factor ρ.
+    pub rho: usize,
+    /// Engine (cluster) configuration.
+    pub engine: EngineConfig,
+    /// Partitioner choice.
+    pub partitioner: PartitionerKind,
+}
+
+impl M3Config {
+    /// A config with the default engine and balanced partitioner.
+    pub fn new(block_side: usize, rho: usize) -> Self {
+        Self {
+            block_side,
+            rho,
+            engine: EngineConfig::default(),
+            partitioner: PartitionerKind::default(),
+        }
+    }
+}
+
+fn make_partitioner_3d(
+    kind: PartitionerKind,
+    q: usize,
+    rho: usize,
+) -> Box<dyn Partitioner<TripleKey>> {
+    match kind {
+        PartitionerKind::Balanced => Box::new(BalancedPartitioner3d { q, rho }),
+        PartitionerKind::Naive => Box::new(NaiveTriplePartitioner),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dense payload
+// ---------------------------------------------------------------------
+
+/// Dense block payload for the 3D algorithm.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DenseBlock {
+    /// A block of the left matrix.
+    A(DenseMatrix),
+    /// A block of the right matrix.
+    B(DenseMatrix),
+    /// An accumulator block.
+    C(DenseMatrix),
+}
+
+impl DenseBlock {
+    /// The wrapped matrix.
+    pub fn matrix(&self) -> &DenseMatrix {
+        match self {
+            DenseBlock::A(m) | DenseBlock::B(m) | DenseBlock::C(m) => m,
+        }
+    }
+}
+
+impl Value for DenseBlock {
+    fn words(&self) -> usize {
+        self.matrix().words()
+    }
+}
+
+impl Block3d for DenseBlock {
+    fn tag(&self) -> Tag {
+        match self {
+            DenseBlock::A(_) => Tag::A,
+            DenseBlock::B(_) => Tag::B,
+            DenseBlock::C(_) => Tag::C,
+        }
+    }
+}
+
+/// Dense block algebra: FMA through a [`LocalMultiply`] backend (the
+/// XLA/Pallas artifact on the hot path), ρ-way sum in plain Rust.
+pub struct DenseOps {
+    backend: Arc<dyn LocalMultiply>,
+}
+
+impl DenseOps {
+    /// Wrap a backend.
+    pub fn new(backend: Arc<dyn LocalMultiply>) -> Self {
+        Self { backend }
+    }
+}
+
+impl BlockOps<DenseBlock> for DenseOps {
+    fn fma(&self, a: &DenseBlock, b: &DenseBlock, c: Option<&DenseBlock>) -> DenseBlock {
+        let (a, b) = (a.matrix(), b.matrix());
+        let zero;
+        let c = match c {
+            Some(c) => c.matrix(),
+            None => {
+                zero = DenseMatrix::zeros(a.rows(), b.cols());
+                &zero
+            }
+        };
+        DenseBlock::C(self.backend.multiply_acc(a, b, c))
+    }
+
+    fn sum(&self, parts: Vec<DenseBlock>) -> DenseBlock {
+        let mut it = parts.into_iter();
+        let first = match it.next().expect("sum of zero parts") {
+            DenseBlock::C(m) => m,
+            _ => panic!("sum over non-C block"),
+        };
+        let mut acc = first;
+        for p in it {
+            match p {
+                DenseBlock::C(m) => acc.add_assign(&m),
+                _ => panic!("sum over non-C block"),
+            }
+        }
+        DenseBlock::C(acc)
+    }
+}
+
+/// Semiring block algebra: the 3D algorithm over an arbitrary
+/// [`Semiring`] (the paper rules out Strassen precisely to keep this
+/// generality). The local multiply is the naive semiring triple loop —
+/// `(min,+)` and `(∨,∧)` have no MXU/BLAS form.
+pub struct SemiringOps<S: Semiring>(std::marker::PhantomData<S>);
+
+impl<S: Semiring> Default for SemiringOps<S> {
+    fn default() -> Self {
+        Self(std::marker::PhantomData)
+    }
+}
+
+impl<S: Semiring> BlockOps<DenseBlock> for SemiringOps<S> {
+    fn fma(&self, a: &DenseBlock, b: &DenseBlock, c: Option<&DenseBlock>) -> DenseBlock {
+        let prod = a.matrix().matmul_naive_sr::<S>(b.matrix());
+        let out = match c {
+            Some(c) => {
+                let mut acc = c.matrix().clone();
+                acc.add_assign_sr::<S>(&prod);
+                acc
+            }
+            None => prod,
+        };
+        DenseBlock::C(out)
+    }
+
+    fn sum(&self, parts: Vec<DenseBlock>) -> DenseBlock {
+        let mut it = parts.into_iter();
+        let mut acc = match it.next().expect("sum of zero parts") {
+            DenseBlock::C(m) => m,
+            _ => panic!("sum over non-C block"),
+        };
+        for p in it {
+            match p {
+                DenseBlock::C(m) => acc.add_assign_sr::<S>(&m),
+                _ => panic!("sum over non-C block"),
+            }
+        }
+        DenseBlock::C(acc)
+    }
+}
+
+/// Shared driver for dense 3D runs over any block algebra.
+fn run_dense_3d(
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    cfg: &M3Config,
+    ops: Arc<dyn BlockOps<DenseBlock>>,
+) -> Result<(DenseMatrix, JobMetrics)> {
+    anyhow::ensure!(a.rows() == a.cols(), "A must be square");
+    anyhow::ensure!(b.rows() == b.cols(), "B must be square");
+    anyhow::ensure!(a.rows() == b.rows(), "A and B must have the same side");
+    let plan = Plan3d::new(a.rows(), cfg.block_side, cfg.rho)?;
+    let geo: Geometry = plan.into();
+    let grid = BlockGrid::new(plan.side, plan.block_side);
+
+    let mut input: Vec<Pair<TripleKey, DenseBlock>> =
+        Vec::with_capacity(2 * grid.num_blocks());
+    for ((i, j), blk) in grid.split(a) {
+        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::A(blk)));
+    }
+    for ((i, j), blk) in grid.split(b) {
+        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::B(blk)));
+    }
+
+    let alg = Algo3d::new(
+        geo,
+        ops,
+        make_partitioner_3d(cfg.partitioner, geo.q, geo.rho),
+    );
+    let mut driver = Driver::new(cfg.engine);
+    let res = driver.run(&alg, &input);
+
+    let blocks: Vec<((usize, usize), DenseMatrix)> = res
+        .output
+        .into_iter()
+        .map(|p| {
+            assert!(p.key.is_io());
+            let m = match p.value {
+                DenseBlock::C(m) => m,
+                _ => panic!("final output must be C blocks"),
+            };
+            ((p.key.i as usize, p.key.j as usize), m)
+        })
+        .collect();
+    Ok((grid.assemble(&blocks), res.metrics))
+}
+
+/// Multiply two dense square matrices with the 3D multi-round
+/// algorithm (arithmetic semiring, accelerated `backend` on the
+/// reducer hot path). Returns the product and the per-round metrics.
+pub fn multiply_dense_3d(
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    cfg: &M3Config,
+    backend: Arc<dyn LocalMultiply>,
+) -> Result<(DenseMatrix, JobMetrics)> {
+    run_dense_3d(a, b, cfg, Arc::new(DenseOps::new(backend)))
+}
+
+/// Multiply two dense square matrices with the 3D algorithm over an
+/// arbitrary semiring `S` — `(min,+)` for shortest paths, `(∨,∧)` for
+/// reachability, etc.
+pub fn multiply_dense_3d_sr<S: Semiring>(
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    cfg: &M3Config,
+) -> Result<(DenseMatrix, JobMetrics)> {
+    run_dense_3d(a, b, cfg, Arc::new(SemiringOps::<S>::default()))
+}
+
+/// Multiply two dense square matrices with the 2D baseline algorithm
+/// (paper Algorithm 2). `cfg.block_side²` is used as the subproblem
+/// size `m`.
+pub fn multiply_dense_2d(
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    cfg: &M3Config,
+    backend: Arc<dyn LocalMultiply>,
+) -> Result<(DenseMatrix, JobMetrics)> {
+    anyhow::ensure!(a.rows() == a.cols() && a.rows() == b.rows() && b.rows() == b.cols());
+    let m = cfg.block_side * cfg.block_side;
+    let plan = Plan2d::new(a.rows(), m, cfg.rho)?;
+    let partitioner: Box<dyn Partitioner<super::keys::PairKey>> = match cfg.partitioner {
+        PartitionerKind::Balanced | PartitionerKind::Naive => Box::new(BalancedPartitioner2d {
+            strips: plan.strips(),
+            rho: plan.rho,
+        }),
+    };
+    let alg = Algo2d::new(plan, backend, partitioner);
+    let input = Algo2d::static_input(plan, a, b);
+    let mut driver = Driver::new(cfg.engine);
+    let res = driver.run(&alg, &input);
+    Ok((Algo2d::assemble_output(plan, &res.output), res.metrics))
+}
+
+// ---------------------------------------------------------------------
+// Sparse payload
+// ---------------------------------------------------------------------
+
+/// Sparse (CSR) block payload for the 3D algorithm.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SparseBlock {
+    /// A block of the left matrix.
+    A(CsrMatrix),
+    /// A block of the right matrix.
+    B(CsrMatrix),
+    /// An accumulator block.
+    C(CsrMatrix),
+}
+
+impl SparseBlock {
+    /// The wrapped CSR block.
+    pub fn csr(&self) -> &CsrMatrix {
+        match self {
+            SparseBlock::A(m) | SparseBlock::B(m) | SparseBlock::C(m) => m,
+        }
+    }
+}
+
+impl Value for SparseBlock {
+    fn words(&self) -> usize {
+        self.csr().words()
+    }
+}
+
+impl Block3d for SparseBlock {
+    fn tag(&self) -> Tag {
+        match self {
+            SparseBlock::A(_) => Tag::A,
+            SparseBlock::B(_) => Tag::B,
+            SparseBlock::C(_) => Tag::C,
+        }
+    }
+}
+
+/// Sparse block algebra: Gustavson SpGEMM + sparse add (the role MTJ
+/// played in the paper's implementation).
+pub struct SparseOps;
+
+impl BlockOps<SparseBlock> for SparseOps {
+    fn fma(&self, a: &SparseBlock, b: &SparseBlock, c: Option<&SparseBlock>) -> SparseBlock {
+        let prod = a.csr().spgemm(b.csr());
+        let out = match c {
+            Some(c) => c.csr().add(&prod),
+            None => prod,
+        };
+        SparseBlock::C(out)
+    }
+
+    fn sum(&self, parts: Vec<SparseBlock>) -> SparseBlock {
+        let mut it = parts.into_iter();
+        let mut acc = match it.next().expect("sum of zero parts") {
+            SparseBlock::C(m) => m,
+            _ => panic!("sum over non-C block"),
+        };
+        for p in it {
+            match p {
+                SparseBlock::C(m) => acc = acc.add(&m),
+                _ => panic!("sum over non-C block"),
+            }
+        }
+        SparseBlock::C(acc)
+    }
+}
+
+/// Multiply two sparse square matrices with the 3D multi-round sparse
+/// algorithm (paper §3.2). `plan` fixes the sparse block side
+/// `√m' = √(m/δ_M)`.
+pub fn multiply_sparse_3d(
+    a: &CooMatrix,
+    b: &CooMatrix,
+    plan: &SparsePlan,
+    engine: EngineConfig,
+    partitioner: PartitionerKind,
+) -> Result<(CooMatrix, JobMetrics)> {
+    anyhow::ensure!(a.rows() == a.cols(), "A must be square");
+    anyhow::ensure!(b.rows() == b.cols() && a.rows() == b.rows());
+    anyhow::ensure!(a.rows() == plan.side, "plan side mismatch");
+    let bs = plan.block_side;
+    let geo = Geometry {
+        q: plan.q(),
+        rho: plan.rho,
+    };
+
+    let mut input: Vec<Pair<TripleKey, SparseBlock>> = vec![];
+    for ((i, j), blk) in a.split_blocks(bs, bs) {
+        input.push(Pair::new(TripleKey::io(i, j), SparseBlock::A(blk.to_csr())));
+    }
+    for ((i, j), blk) in b.split_blocks(bs, bs) {
+        input.push(Pair::new(TripleKey::io(i, j), SparseBlock::B(blk.to_csr())));
+    }
+
+    let alg = Algo3d::new(
+        geo,
+        Arc::new(SparseOps),
+        make_partitioner_3d(partitioner, geo.q, geo.rho),
+    );
+    let mut driver = Driver::new(engine);
+    let res = driver.run(&alg, &input);
+
+    // Reassemble: offset each block's entries by its block origin.
+    let mut out = CooMatrix::new(plan.side, plan.side);
+    for p in res.output {
+        assert!(p.key.is_io());
+        let (bi, bj) = (p.key.i as usize, p.key.j as usize);
+        let csr = match p.value {
+            SparseBlock::C(m) => m,
+            _ => panic!("final output must be C blocks"),
+        };
+        for (r, row) in (0..csr.rows()).map(|r| (r, csr.row(r))) {
+            for (c, v) in row {
+                if v != 0.0 {
+                    out.push(bi * bs + r, bj * bs + c, v);
+                }
+            }
+        }
+    }
+    Ok((out, res.metrics))
+}
+
+/// The paper's §3.2 *general* sparse flow: estimate the output density
+/// with one scan (Pagh–Stöckel-style degree products), randomly permute
+/// rows/columns for block load balance, size blocks by
+/// `m' = m/δ_M`, run the 3D sparse algorithm, and un-permute the
+/// output. `m` is the reducer memory budget in words.
+pub fn multiply_sparse_3d_general(
+    a: &CooMatrix,
+    b: &CooMatrix,
+    m: usize,
+    rho: usize,
+    engine: EngineConfig,
+    seed: u64,
+) -> Result<(CooMatrix, JobMetrics)> {
+    use super::sparse_tools::{estimate_output_density, ProductPermutation};
+    use crate::util::rng::Xoshiro256ss;
+    anyhow::ensure!(a.rows() == a.cols() && b.rows() == b.cols() && a.rows() == b.rows());
+    let side = a.rows();
+    let delta = (a.density().max(b.density())).max(1.0 / (side as f64 * side as f64));
+    let delta_o = estimate_output_density(a, b);
+    let mut plan = SparsePlan::from_memory_budget(side, m, delta, delta_o, rho)?;
+    // from_memory_budget clips the block side; re-validate ρ | q.
+    while plan.q() % plan.rho != 0 {
+        plan = SparsePlan::new(side, plan.block_side / 2, rho, delta, plan.delta_m)?;
+    }
+    let mut rng = Xoshiro256ss::new(seed);
+    let perm = ProductPermutation::random(side, &mut rng);
+    let (c_perm, metrics) = multiply_sparse_3d(
+        &perm.apply_left(a),
+        &perm.apply_right(b),
+        &plan,
+        engine,
+        PartitionerKind::Balanced,
+    )?;
+    Ok((perm.unapply_output(&c_perm), metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::runtime::native::NativeMultiply;
+    use crate::runtime::NaiveMultiply;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Xoshiro256ss;
+
+    fn engine() -> EngineConfig {
+        EngineConfig {
+            map_tasks: 4,
+            reduce_tasks: 4,
+            workers: 4,
+        }
+    }
+
+    fn cfg(block_side: usize, rho: usize) -> M3Config {
+        M3Config {
+            block_side,
+            rho,
+            engine: engine(),
+            partitioner: PartitionerKind::Balanced,
+        }
+    }
+
+    #[test]
+    fn dense_3d_matches_naive_all_rhos() {
+        let side = 24;
+        let mut rng = Xoshiro256ss::new(1);
+        let a = gen::dense_int(side, side, &mut rng);
+        let b = gen::dense_int(side, side, &mut rng);
+        let want = a.matmul_naive(&b);
+        for rho in [1, 2, 3, 6] {
+            let (got, metrics) =
+                multiply_dense_3d(&a, &b, &cfg(4, rho), Arc::new(NativeMultiply::new())).unwrap();
+            assert_eq!(got, want, "rho={rho}");
+            assert_eq!(metrics.num_rounds(), 6 / rho + 1);
+        }
+    }
+
+    #[test]
+    fn dense_3d_with_naive_partitioner() {
+        let side = 16;
+        let mut rng = Xoshiro256ss::new(2);
+        let a = gen::dense_int(side, side, &mut rng);
+        let b = gen::dense_int(side, side, &mut rng);
+        let mut c = cfg(4, 2);
+        c.partitioner = PartitionerKind::Naive;
+        let (got, _) = multiply_dense_3d(&a, &b, &c, Arc::new(NaiveMultiply)).unwrap();
+        assert_eq!(got, a.matmul_naive(&b));
+    }
+
+    #[test]
+    fn dense_3d_theorem_bounds() {
+        let side = 32;
+        let mut rng = Xoshiro256ss::new(3);
+        let a = gen::dense_int(side, side, &mut rng);
+        let b = gen::dense_int(side, side, &mut rng);
+        let config = cfg(8, 2);
+        let plan = Plan3d::new(side, 8, 2).unwrap();
+        let (_, metrics) =
+            multiply_dense_3d(&a, &b, &config, Arc::new(NativeMultiply::new())).unwrap();
+        assert_eq!(metrics.num_rounds(), plan.rounds());
+        for r in &metrics.rounds {
+            assert!(
+                r.shuffle_words <= plan.shuffle_words_bound(),
+                "round {}: shuffle {} > 3ρn {}",
+                r.round,
+                r.shuffle_words,
+                plan.shuffle_words_bound()
+            );
+            assert!(
+                r.max_reducer_words <= plan.reducer_words_bound(),
+                "round {}: reducer {} > 3m",
+                r.round,
+                r.max_reducer_words
+            );
+        }
+    }
+
+    #[test]
+    fn dense_3d_rejects_invalid_config() {
+        let a = DenseMatrix::zeros(16, 16);
+        let b = DenseMatrix::zeros(16, 16);
+        assert!(multiply_dense_3d(&a, &b, &cfg(5, 1), Arc::new(NaiveMultiply)).is_err());
+        assert!(multiply_dense_3d(&a, &b, &cfg(4, 3), Arc::new(NaiveMultiply)).is_err());
+        let rect = DenseMatrix::zeros(16, 8);
+        assert!(multiply_dense_3d(&rect, &b, &cfg(4, 1), Arc::new(NaiveMultiply)).is_err());
+    }
+
+    #[test]
+    fn dense_2d_matches_naive() {
+        let side = 16;
+        let mut rng = Xoshiro256ss::new(4);
+        let a = gen::dense_int(side, side, &mut rng);
+        let b = gen::dense_int(side, side, &mut rng);
+        let want = a.matmul_naive(&b);
+        for rho in [1, 2, 4] {
+            let (got, _) =
+                multiply_dense_2d(&a, &b, &cfg(8, rho), Arc::new(NativeMultiply::new())).unwrap();
+            assert_eq!(got, want, "rho={rho}");
+        }
+    }
+
+    #[test]
+    fn dense_2d_vs_3d_shuffle_totals() {
+        // Q5/Figure 6: with equal m and ρ=1, 2D shuffles more in total.
+        let side = 32;
+        let mut rng = Xoshiro256ss::new(5);
+        let a = gen::dense_int(side, side, &mut rng);
+        let b = gen::dense_int(side, side, &mut rng);
+        let (_, m3d) =
+            multiply_dense_3d(&a, &b, &cfg(8, 1), Arc::new(NativeMultiply::new())).unwrap();
+        let (_, m2d) =
+            multiply_dense_2d(&a, &b, &cfg(8, 1), Arc::new(NativeMultiply::new())).unwrap();
+        assert!(
+            m2d.total_shuffle_words() > m3d.total_shuffle_words(),
+            "2D {} !> 3D {}",
+            m2d.total_shuffle_words(),
+            m3d.total_shuffle_words()
+        );
+    }
+
+    #[test]
+    fn sparse_3d_matches_dense_reference() {
+        let side = 64;
+        let mut rng = Xoshiro256ss::new(6);
+        let a = gen::erdos_renyi_coo(side, 0.08, &mut rng);
+        let b = gen::erdos_renyi_coo(side, 0.08, &mut rng);
+        let want = a.to_dense().matmul_naive(&b.to_dense());
+        for rho in [1, 2, 4] {
+            let plan = SparsePlan::new(side, 16, rho, 0.08, 0.3).unwrap();
+            let (got, metrics) =
+                multiply_sparse_3d(&a, &b, &plan, engine(), PartitionerKind::Balanced).unwrap();
+            assert_eq!(got.to_dense().max_abs_diff(&want), 0.0, "rho={rho}");
+            assert_eq!(metrics.num_rounds(), plan.rounds());
+        }
+    }
+
+    #[test]
+    fn sparse_general_flow_exact() {
+        // The full §3.2 pipeline: estimate, permute, multiply, restore.
+        let side = 128;
+        let mut rng = Xoshiro256ss::new(20);
+        let a = gen::erdos_renyi_coo(side, 0.06, &mut rng);
+        let b = gen::erdos_renyi_coo(side, 0.06, &mut rng);
+        let want = a.to_csr().spgemm(&b.to_csr()).to_dense();
+        for rho in [1usize, 2] {
+            let (got, _) =
+                multiply_sparse_3d_general(&a, &b, 4096, rho, engine(), 77).unwrap();
+            assert_eq!(got.to_dense().max_abs_diff(&want), 0.0, "rho={rho}");
+        }
+    }
+
+    #[test]
+    fn sparse_general_flow_clustered_input() {
+        // Clustered nnz (all in one corner) — the permutation is what
+        // keeps blocks balanced; the result must still be exact.
+        let side = 64;
+        let mut rng = Xoshiro256ss::new(21);
+        let mut a = CooMatrix::new(side, side);
+        for _ in 0..300 {
+            a.push(rng.next_usize(12), rng.next_usize(12), rng.small_int_f32());
+        }
+        let b = gen::erdos_renyi_coo(side, 0.1, &mut rng);
+        let want = a.to_csr().spgemm(&b.to_csr()).to_dense();
+        let (got, _) = multiply_sparse_3d_general(&a, &b, 1024, 1, engine(), 5).unwrap();
+        assert_eq!(got.to_dense().max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn sparse_3d_empty_inputs() {
+        let side = 32;
+        let a = CooMatrix::new(side, side);
+        let b = CooMatrix::new(side, side);
+        let plan = SparsePlan::new(side, 8, 2, 0.01, 0.01).unwrap();
+        let (got, _) =
+            multiply_sparse_3d(&a, &b, &plan, engine(), PartitionerKind::Balanced).unwrap();
+        assert_eq!(got.nnz(), 0);
+    }
+
+    #[test]
+    fn prop_dense_3d_random_geometries() {
+        run_prop("dense 3d multiply", 6, |case| {
+            let bs = 1 + case.rng.next_usize(4); // block side 1..=4
+            let q = 2 + case.rng.next_usize(4); // q 2..=5
+            let side = bs * q;
+            let divisors: Vec<usize> = (1..=q).filter(|d| q % d == 0).collect();
+            let rho = divisors[case.rng.next_usize(divisors.len())];
+            let mut rng = Xoshiro256ss::new(case.rng.next_u64());
+            let a = gen::dense_int(side, side, &mut rng);
+            let b = gen::dense_int(side, side, &mut rng);
+            let (got, _) = multiply_dense_3d(
+                &a,
+                &b,
+                &cfg(bs, rho),
+                Arc::new(NativeMultiply::new()),
+            )
+            .map_err(|e| e.to_string())?;
+            if got != a.matmul_naive(&b) {
+                return Err(format!("mismatch side={side} bs={bs} rho={rho}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn minplus_3d_computes_two_hop_distances() {
+        use crate::matrix::semiring::MinPlus;
+        // Random weighted digraph as a distance matrix; A⊗A in (min,+)
+        // is the ≤2-hop shortest-path matrix.
+        let side = 16;
+        let mut rng = Xoshiro256ss::new(7);
+        let dist = DenseMatrix::from_fn(side, side, |i, j| {
+            if i == j {
+                0.0
+            } else if rng.bernoulli(0.3) {
+                rng.range_u64(1, 9) as f32
+            } else {
+                f32::INFINITY
+            }
+        });
+        let want = dist.matmul_naive_sr::<MinPlus>(&dist);
+        for rho in [1usize, 2, 4] {
+            let (got, _) = multiply_dense_3d_sr::<MinPlus>(&dist, &dist, &cfg(4, rho)).unwrap();
+            assert_eq!(got, want, "rho={rho}");
+        }
+    }
+
+    #[test]
+    fn boolean_3d_computes_reachability() {
+        use crate::matrix::semiring::BoolOrAnd;
+        let side = 12;
+        let mut rng = Xoshiro256ss::new(8);
+        let adj = DenseMatrix::from_fn(side, side, |_, _| {
+            if rng.bernoulli(0.2) {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        let want = adj.matmul_naive_sr::<BoolOrAnd>(&adj);
+        let (got, _) = multiply_dense_3d_sr::<BoolOrAnd>(&adj, &adj, &cfg(4, 3)).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn semiring_arithmetic_agrees_with_backend_path() {
+        use crate::matrix::semiring::Arithmetic;
+        let side = 24;
+        let mut rng = Xoshiro256ss::new(9);
+        let a = gen::dense_int(side, side, &mut rng);
+        let b = gen::dense_int(side, side, &mut rng);
+        let (via_backend, _) =
+            multiply_dense_3d(&a, &b, &cfg(8, 1), Arc::new(NativeMultiply::new())).unwrap();
+        let (via_semiring, _) = multiply_dense_3d_sr::<Arithmetic>(&a, &b, &cfg(8, 1)).unwrap();
+        assert_eq!(via_backend, via_semiring);
+    }
+
+    #[test]
+    fn identity_times_identity() {
+        let side = 8;
+        let a = DenseMatrix::identity(side);
+        let (got, _) =
+            multiply_dense_3d(&a, &a, &cfg(2, 2), Arc::new(NaiveMultiply)).unwrap();
+        assert_eq!(got, DenseMatrix::identity(side));
+    }
+}

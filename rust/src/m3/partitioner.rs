@@ -1,0 +1,268 @@
+//! Partitioners for the M3 keys.
+//!
+//! The paper (§4.3, Figure 1) shows that the "common" hash partitioner
+//! `t = (31²·i + 31·j + k) mod T` leaves reduce tasks badly unbalanced,
+//! and proposes Algorithm 3: enumerate the round's live keys contiguously
+//! in `[0, ρ·n/m)` by a row-major ordering of `(i, j, h mod ρ)`, then
+//! deal them out in equal consecutive chunks of `B = ⌊ρn/(mT)⌋`, with
+//! the ≤ T−1 leftover keys scattered.
+
+use crate::mapreduce::types::Partitioner;
+
+use super::keys::{PairKey, TripleKey};
+
+/// The naive Java-style hash partitioner of Figure 1 (left).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NaiveTriplePartitioner;
+
+impl Partitioner<TripleKey> for NaiveTriplePartitioner {
+    fn partition(&self, key: &TripleKey, num_tasks: usize) -> usize {
+        let h = 31i64 * 31 * key.i as i64 + 31 * key.h as i64 + key.j as i64;
+        (h.rem_euclid(num_tasks as i64)) as usize
+    }
+}
+
+/// Deterministic scatter for the ≤ T−1 leftover keys (the paper uses a
+/// random task; a splitmix hash keeps runs reproducible while remaining
+/// uniform).
+fn scatter(z: usize, num_tasks: usize) -> usize {
+    let mut x = z as u64;
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    ((x ^ (x >> 31)) % num_tasks as u64) as usize
+}
+
+/// Equal-chunk dealing of a contiguous key id `z ∈ [0, domain)` over
+/// `T` tasks (paper Algorithm 3's core).
+fn balanced(z: usize, domain: usize, num_tasks: usize) -> usize {
+    let b = domain / num_tasks;
+    if b > 0 && z < b * num_tasks {
+        z / b
+    } else {
+        scatter(z, num_tasks)
+    }
+}
+
+/// Paper Algorithm 3: balanced partitioner for the 3D algorithms.
+///
+/// Product-round keys `(i,h,j)` map to `z = (i·q + j)·ρ + (h mod ρ)`
+/// (row-major on `(i, j, h')`; the paper prints `iρn/m` for the leading
+/// stride, a typo for `i·ρ·√(n/m)` — the row-major stride over `j·ρ +
+/// h'`). Final-round keys `(i,-1,j)` map to `z = i·q + j` over `[0,q²)`.
+#[derive(Debug, Clone, Copy)]
+pub struct BalancedPartitioner3d {
+    /// Blocks per dimension `q`.
+    pub q: usize,
+    /// Replication factor ρ.
+    pub rho: usize,
+}
+
+impl Partitioner<TripleKey> for BalancedPartitioner3d {
+    fn partition(&self, key: &TripleKey, num_tasks: usize) -> usize {
+        let (i, j) = (key.i as usize, key.j as usize);
+        if key.is_io() {
+            // Final round: q² keys (i,-1,j).
+            let z = i * self.q + j;
+            balanced(z, self.q * self.q, num_tasks)
+        } else {
+            let h_prime = (key.h as usize) % self.rho;
+            let z = (i * self.q + j) * self.rho + h_prime;
+            balanced(z, self.rho * self.q * self.q, num_tasks)
+        }
+    }
+}
+
+/// Balanced partitioner for the 2D algorithm ("a slightly different
+/// approach", §4.3): round-`r` keys `(i, j)` with
+/// `j = (i + ℓ + rρ) mod s` map to `z = i·ρ + ((j − i) mod ρ)` over
+/// `[0, ρ·s)` (residues of consecutive offsets mod ρ are distinct
+/// because ρ | s).
+#[derive(Debug, Clone, Copy)]
+pub struct BalancedPartitioner2d {
+    /// Strips per matrix `s = n/m`.
+    pub strips: usize,
+    /// Replication factor ρ.
+    pub rho: usize,
+}
+
+impl Partitioner<PairKey> for BalancedPartitioner2d {
+    fn partition(&self, key: &PairKey, num_tasks: usize) -> usize {
+        let i = key.i as usize;
+        let j = key.j as usize;
+        let off = (j + self.strips - (i % self.strips)) % self.strips;
+        let z = i * self.rho + off % self.rho;
+        balanced(z, self.rho * self.strips, num_tasks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::stats;
+
+    /// The live reducer keys of round `r` of the 3D algorithm.
+    fn round_keys(q: usize, rho: usize, r: usize) -> Vec<TripleKey> {
+        let mut out = vec![];
+        for i in 0..q {
+            for j in 0..q {
+                for l in 0..rho {
+                    let h = (i + j + l + r * rho) % q;
+                    out.push(TripleKey::new(i, h, j));
+                }
+            }
+        }
+        out
+    }
+
+    fn spread(counts: &[usize]) -> (usize, usize) {
+        (
+            *counts.iter().min().unwrap(),
+            *counts.iter().max().unwrap(),
+        )
+    }
+
+    #[test]
+    fn figure1_balanced_beats_naive() {
+        // Paper Figure 1 configuration: √n=32000, √m=4000 → q=8, ρ=8,
+        // round 0, T=64 reduce tasks.
+        let (q, rho, t) = (8, 8, 64);
+        let keys = round_keys(q, rho, 0);
+        assert_eq!(keys.len(), rho * q * q); // 512 reducers
+
+        let mut naive_counts = vec![0usize; t];
+        let mut bal_counts = vec![0usize; t];
+        let bal = BalancedPartitioner3d { q, rho };
+        for k in &keys {
+            naive_counts[NaiveTriplePartitioner.partition(k, t)] += 1;
+            bal_counts[bal.partition(k, t)] += 1;
+        }
+        let naive_cv = stats::cv(&naive_counts.iter().map(|&c| c as f64).collect::<Vec<_>>());
+        let bal_cv = stats::cv(&bal_counts.iter().map(|&c| c as f64).collect::<Vec<_>>());
+        let (bmin, bmax) = spread(&bal_counts);
+        // Balanced: every task gets exactly ρq²/T = 8 reducers.
+        assert_eq!((bmin, bmax), (8, 8), "balanced should be perfectly even");
+        assert!(naive_cv > bal_cv, "naive cv {naive_cv} vs balanced {bal_cv}");
+        // Naive is visibly unbalanced (Figure 1 shows tasks with 0 and
+        // with >2× the mean).
+        let (nmin, nmax) = spread(&naive_counts);
+        assert!(nmax > nmin, "naive should be uneven: {naive_counts:?}");
+    }
+
+    #[test]
+    fn balanced_even_across_rounds() {
+        // The rotation h → h+ρ between rounds must not break balance:
+        // h mod ρ is round-invariant (ρ | q).
+        let (q, rho, t) = (8, 4, 16);
+        let bal = BalancedPartitioner3d { q, rho };
+        for r in 0..q / rho {
+            let mut counts = vec![0usize; t];
+            for k in round_keys(q, rho, r) {
+                counts[bal.partition(&k, t)] += 1;
+            }
+            let (min, max) = spread(&counts);
+            assert_eq!(min, max, "round {r} counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn balanced_final_round_even() {
+        let (q, rho, t) = (8, 4, 16);
+        let bal = BalancedPartitioner3d { q, rho };
+        let mut counts = vec![0usize; t];
+        for i in 0..q {
+            for j in 0..q {
+                counts[bal.partition(&TripleKey::io(i, j), t)] += 1;
+            }
+        }
+        let (min, max) = spread(&counts);
+        assert_eq!((min, max), (4, 4));
+    }
+
+    #[test]
+    fn balanced_handles_leftover_keys() {
+        // T ∤ ρq²: 512 keys over 60 tasks → B=8, 480 dealt evenly,
+        // 32 scattered.
+        let (q, rho, t) = (8, 8, 60);
+        let bal = BalancedPartitioner3d { q, rho };
+        let mut counts = vec![0usize; t];
+        for k in round_keys(q, rho, 0) {
+            let task = bal.partition(&k, t);
+            assert!(task < t);
+            counts[task] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 512);
+        let (_, max) = spread(&counts);
+        assert!(max <= 8 + 4, "no task should be overloaded: {counts:?}");
+    }
+
+    #[test]
+    fn prop_partitioners_in_range() {
+        run_prop("partition in [0,T)", 100, |case| {
+            let q = 1 + case.rng.next_usize(16);
+            let rho = 1 + case.rng.next_usize(q);
+            let t = 1 + case.rng.next_usize(64);
+            let bal = BalancedPartitioner3d { q, rho };
+            let i = case.rng.next_usize(q);
+            let j = case.rng.next_usize(q);
+            let h = case.rng.next_usize(q);
+            for key in [TripleKey::new(i, h, j), TripleKey::io(i, j)] {
+                let v = bal.partition(&key, t);
+                if v >= t {
+                    return Err(format!("balanced out of range: {v} >= {t}"));
+                }
+                let v = NaiveTriplePartitioner.partition(&key, t);
+                if v >= t {
+                    return Err(format!("naive out of range: {v} >= {t}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn balanced_2d_even() {
+        // s=8 strips, ρ=2, T=4: round keys (i, (i+l+rρ) mod s).
+        let (s, rho, t) = (8, 2, 4);
+        let bal = BalancedPartitioner2d { strips: s, rho };
+        for r in 0..s / rho {
+            let mut counts = vec![0usize; t];
+            for i in 0..s {
+                for l in 0..rho {
+                    let j = (i + l + r * rho) % s;
+                    counts[bal.partition(&PairKey::new(i, j), t)] += 1;
+                }
+            }
+            let (min, max) = spread(&counts);
+            assert_eq!(min, max, "round {r}: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn balanced_2d_unique_z_within_round() {
+        let (s, rho) = (8, 4);
+        let bal = BalancedPartitioner2d { strips: s, rho };
+        // With T = ρ·s every key must land alone on its task.
+        let t = rho * s;
+        for r in 0..s / rho {
+            let mut seen = vec![false; t];
+            for i in 0..s {
+                for l in 0..rho {
+                    let j = (i + l + r * rho) % s;
+                    let task = bal.partition(&PairKey::new(i, j), t);
+                    assert!(!seen[task], "collision at round {r} key ({i},{j})");
+                    seen[task] = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn naive_partitioner_handles_negative_dummy() {
+        // Keys with h = -1 must still land in range.
+        for t in [1, 7, 64] {
+            let v = NaiveTriplePartitioner.partition(&TripleKey::io(0, 0), t);
+            assert!(v < t);
+        }
+    }
+}

@@ -1,0 +1,376 @@
+//! Parameter validation and the round/shuffle/reducer-size formulas of
+//! Theorems 3.1–3.3.
+//!
+//! The paper's tradeoff knobs: subproblem size `m` (each reducer
+//! multiplies `√m × √m` blocks, memory `3m`) and replication factor `ρ`
+//! (shuffle volume `3ρn` per round). Round counts:
+//!
+//! * 3D dense/sparse: `R = √n/(ρ√m) + 1 = q/ρ + 1` with `q = √(n/m)`;
+//! * 2D dense: `R = n/(ρm) = s/ρ` with `s = n/m` strips.
+
+use anyhow::{bail, Result};
+
+/// Plan of a 3D execution (paper Algorithm 1 / Theorem 3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Plan3d {
+    /// Matrix side `√n`.
+    pub side: usize,
+    /// Block side `√m`.
+    pub block_side: usize,
+    /// Replication factor `ρ`.
+    pub rho: usize,
+}
+
+impl Plan3d {
+    /// Validate and construct. Requirements (paper's simplifying
+    /// assumptions): `√m | √n`, `1 ≤ ρ ≤ q`, `ρ | q`.
+    pub fn new(side: usize, block_side: usize, rho: usize) -> Result<Self> {
+        if block_side == 0 || side == 0 {
+            bail!("side and block side must be positive");
+        }
+        if side % block_side != 0 {
+            bail!("block side {block_side} must divide matrix side {side}");
+        }
+        let q = side / block_side;
+        if rho == 0 || rho > q {
+            bail!("replication rho={rho} must be in [1, q={q}]");
+        }
+        if q % rho != 0 {
+            bail!("rho={rho} must divide q={q} for even round distribution");
+        }
+        Ok(Self {
+            side,
+            block_side,
+            rho,
+        })
+    }
+
+    /// The monolithic (two-round) plan: `ρ = q`.
+    pub fn monolithic(side: usize, block_side: usize) -> Result<Self> {
+        let q = side / block_side.max(1);
+        Self::new(side, block_side, q)
+    }
+
+    /// Blocks per dimension `q = √(n/m)`.
+    pub fn q(&self) -> usize {
+        self.side / self.block_side
+    }
+
+    /// Input size `n` in words.
+    pub fn n(&self) -> usize {
+        self.side * self.side
+    }
+
+    /// Subproblem size `m` in words.
+    pub fn m(&self) -> usize {
+        self.block_side * self.block_side
+    }
+
+    /// Round count `R = q/ρ + 1`.
+    pub fn rounds(&self) -> usize {
+        self.q() / self.rho + 1
+    }
+
+    /// Theorem 3.1 shuffle-size bound per round, in words: `3ρn`.
+    pub fn shuffle_words_bound(&self) -> usize {
+        3 * self.rho * self.n()
+    }
+
+    /// Theorem 3.1 reducer-size bound in words: `3m`.
+    pub fn reducer_words_bound(&self) -> usize {
+        3 * self.m()
+    }
+
+    /// Total shuffled words over all rounds, `O(n·q)` — independent of
+    /// ρ (paper Q1): product rounds shuffle ≈3ρn each for q/ρ rounds.
+    pub fn total_shuffle_words(&self) -> usize {
+        3 * self.n() * self.q() / self.rho * self.rho + self.rho * self.n()
+    }
+
+    /// Sequential work per reducer, `Θ(m^{3/2})` elementary products.
+    pub fn reducer_flops(&self) -> usize {
+        2 * self.block_side.pow(3)
+    }
+}
+
+/// Plan of a 2D execution (paper Algorithm 2 / Theorem 3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Plan2d {
+    /// Matrix side `√n`.
+    pub side: usize,
+    /// Subproblem size `m` in words (`√n ≤ m ≤ n`).
+    pub m: usize,
+    /// Replication factor `ρ`.
+    pub rho: usize,
+}
+
+impl Plan2d {
+    /// Validate and construct. Requirements: `√n | m` (strip height
+    /// `m/√n` integral), `m | n`, `1 ≤ ρ ≤ s`, `ρ | s` with `s = n/m`.
+    pub fn new(side: usize, m: usize, rho: usize) -> Result<Self> {
+        if side == 0 || m == 0 {
+            bail!("side and m must be positive");
+        }
+        let n = side * side;
+        if m < side || m > n {
+            bail!("m={m} must be in [sqrt(n)={side}, n={n}]");
+        }
+        if m % side != 0 {
+            bail!("strip height m/sqrt(n) must be integral (m={m}, side={side})");
+        }
+        if n % m != 0 {
+            bail!("m={m} must divide n={n}");
+        }
+        let s = n / m;
+        if rho == 0 || rho > s {
+            bail!("rho={rho} must be in [1, s={s}]");
+        }
+        if s % rho != 0 {
+            bail!("rho={rho} must divide s={s}");
+        }
+        Ok(Self { side, m, rho })
+    }
+
+    /// Number of strips `s = n/m` per input matrix.
+    pub fn strips(&self) -> usize {
+        self.side * self.side / self.m
+    }
+
+    /// Strip height `m/√n`.
+    pub fn strip_height(&self) -> usize {
+        self.m / self.side
+    }
+
+    /// Round count `R = n/(ρm) = s/ρ`.
+    pub fn rounds(&self) -> usize {
+        self.strips() / self.rho
+    }
+
+    /// Theorem 3.3 shuffle-size bound per round, in words: `2ρn`.
+    pub fn shuffle_words_bound(&self) -> usize {
+        2 * self.rho * self.side * self.side
+    }
+
+    /// Theorem 3.3 reducer-size bound in words: `3m`.
+    pub fn reducer_words_bound(&self) -> usize {
+        3 * self.m
+    }
+
+    /// Total shuffle over all rounds, `O(n²/m)` — asymptotically worse
+    /// than 3D's `O(n·√(n/m))` (paper Q5 / Figure 6).
+    pub fn total_shuffle_words(&self) -> usize {
+        self.shuffle_words_bound() * self.rounds()
+    }
+}
+
+/// Plan of a 3D sparse execution (paper §3.2 / Theorem 3.2).
+#[derive(Debug, Clone, Copy)]
+pub struct SparsePlan {
+    /// Matrix side `√n` (can be huge — blocks are sparse).
+    pub side: usize,
+    /// Sparse block side `√m'` with `m' = m/δ_M`.
+    pub block_side: usize,
+    /// Replication factor ρ.
+    pub rho: usize,
+    /// Input density δ.
+    pub delta: f64,
+    /// Density bound `δ_M = max(δ, δ̃_O)` used to size blocks.
+    pub delta_m: f64,
+}
+
+impl SparsePlan {
+    /// Build a sparse plan from the memory budget `m` (words per
+    /// reducer), input density `δ`, and an output-density estimate
+    /// `δ̃_O` (for Erdős–Rényi inputs, `δ²√n`). The block side is the
+    /// largest power of two with `block_side² · δ_M ≤ m`, clipped so it
+    /// divides `side`.
+    pub fn from_memory_budget(
+        side: usize,
+        m: usize,
+        delta: f64,
+        delta_out: f64,
+        rho: usize,
+    ) -> Result<Self> {
+        let delta_m = delta.max(delta_out);
+        if delta_m <= 0.0 {
+            bail!("density must be positive");
+        }
+        // m' = m / delta_M; block side = sqrt(m').
+        let m_prime = (m as f64 / delta_m).max(1.0);
+        let mut block_side = (m_prime.sqrt() as usize).next_power_of_two() / 2;
+        block_side = block_side.clamp(1, side);
+        while block_side > 1 && side % block_side != 0 {
+            block_side /= 2;
+        }
+        Self::new(side, block_side, rho, delta, delta_m)
+    }
+
+    /// Validate an explicit plan.
+    pub fn new(
+        side: usize,
+        block_side: usize,
+        rho: usize,
+        delta: f64,
+        delta_m: f64,
+    ) -> Result<Self> {
+        if side % block_side != 0 {
+            bail!("block side {block_side} must divide side {side}");
+        }
+        let q = side / block_side;
+        if rho == 0 || rho > q.max(1) {
+            bail!("rho={rho} must be in [1, q={q}]");
+        }
+        if q > 0 && q % rho != 0 {
+            bail!("rho={rho} must divide q={q}");
+        }
+        if !(0.0..=1.0).contains(&delta) || delta_m <= 0.0 {
+            bail!("invalid densities delta={delta} delta_m={delta_m}");
+        }
+        Ok(Self {
+            side,
+            block_side,
+            rho,
+            delta,
+            delta_m,
+        })
+    }
+
+    /// Blocks per dimension.
+    pub fn q(&self) -> usize {
+        self.side / self.block_side
+    }
+
+    /// Round count `R = q/ρ + 1` (equals Theorem 3.2's
+    /// `δ√n·√n/(ρ√m) + 1` after substituting `√m' = √(m/δ_M)`).
+    pub fn rounds(&self) -> usize {
+        self.q() / self.rho + 1
+    }
+
+    /// Expected words per reducer: `(2δ + δ_O)·m' ≈ 3m` (2 input blocks
+    /// at density δ, one output accumulator at density δ_O).
+    pub fn expected_reducer_words(&self) -> f64 {
+        let m_prime = (self.block_side * self.block_side) as f64;
+        (2.0 * self.delta + self.delta_m) * m_prime
+    }
+
+    /// Expected shuffle words per round: `3ρ·δ_M·n` (Theorem 3.2 form
+    /// for general sparse inputs).
+    pub fn expected_shuffle_words(&self) -> f64 {
+        3.0 * self.rho as f64 * self.delta_m * (self.side as f64) * (self.side as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan3d_valid_formulas() {
+        // √n=16000, √m=4000 → q=4; ρ=2 → R=3 (paper's shapes).
+        let p = Plan3d::new(16000, 4000, 2).unwrap();
+        assert_eq!(p.q(), 4);
+        assert_eq!(p.rounds(), 3);
+        assert_eq!(p.shuffle_words_bound(), 3 * 2 * 16000 * 16000);
+        assert_eq!(p.reducer_words_bound(), 3 * 4000 * 4000);
+    }
+
+    #[test]
+    fn plan3d_monolithic_is_two_rounds() {
+        let p = Plan3d::monolithic(16000, 4000).unwrap();
+        assert_eq!(p.rho, 4);
+        assert_eq!(p.rounds(), 2);
+    }
+
+    #[test]
+    fn plan3d_rho_one_max_rounds() {
+        let p = Plan3d::new(32000, 4000, 1).unwrap();
+        assert_eq!(p.rounds(), 9); // q=8 → 8 product rounds + 1 final
+    }
+
+    #[test]
+    fn plan3d_rejects_bad_params() {
+        assert!(Plan3d::new(16, 5, 1).is_err()); // 5 ∤ 16
+        assert!(Plan3d::new(16, 4, 0).is_err()); // ρ = 0
+        assert!(Plan3d::new(16, 4, 8).is_err()); // ρ > q
+        assert!(Plan3d::new(24, 4, 4).is_err()); // 4 ∤ 6
+        assert!(Plan3d::new(0, 4, 1).is_err());
+    }
+
+    #[test]
+    fn plan3d_total_shuffle_independent_of_rho() {
+        // Q1: total shuffled data is O(n·q), the same for all ρ up to
+        // the final round's ρn term.
+        let base = Plan3d::new(1024, 128, 1).unwrap();
+        for rho in [1, 2, 4, 8] {
+            let p = Plan3d::new(1024, 128, rho).unwrap();
+            let product_rounds_words = 3 * p.n() * p.q();
+            assert_eq!(
+                p.total_shuffle_words() - p.rho * p.n(),
+                product_rounds_words,
+                "rho={rho}"
+            );
+            let _ = base;
+        }
+    }
+
+    #[test]
+    fn plan2d_valid_formulas() {
+        // side=16, m=64 → strips s=4, strip height 4; ρ=2 → R=2.
+        let p = Plan2d::new(16, 64, 2).unwrap();
+        assert_eq!(p.strips(), 4);
+        assert_eq!(p.strip_height(), 4);
+        assert_eq!(p.rounds(), 2);
+        assert_eq!(p.shuffle_words_bound(), 2 * 2 * 256);
+        assert_eq!(p.reducer_words_bound(), 192);
+    }
+
+    #[test]
+    fn plan2d_rejects_bad_params() {
+        assert!(Plan2d::new(16, 8, 1).is_err()); // m < √n
+        assert!(Plan2d::new(16, 300, 1).is_err()); // n % m != 0
+        assert!(Plan2d::new(16, 64, 3).is_err()); // 3 ∤ 4
+        assert!(Plan2d::new(16, 64, 8).is_err()); // ρ > s
+    }
+
+    #[test]
+    fn plan2d_total_shuffle_worse_than_3d() {
+        // Q5: with the same n and m, 2D total shuffle O(n²/m) exceeds 3D
+        // total shuffle O(n√(n/m)).
+        let side = 1024;
+        let block = 128;
+        let m = block * block;
+        let p3 = Plan3d::new(side, block, 1).unwrap();
+        let p2 = Plan2d::new(side, m, 1).unwrap();
+        assert!(p2.total_shuffle_words() > p3.total_shuffle_words());
+    }
+
+    #[test]
+    fn sparse_plan_from_budget() {
+        // Paper Q6: √n = 2^20, 8 nnz/row → δ = 2^-17, δ_O = 2^-14,
+        // m ≈ dense 4000² → block side 2^18.
+        let side = 1 << 20;
+        let delta = 8.0 / side as f64;
+        let delta_out = delta * delta * side as f64;
+        let m = 4000 * 4000;
+        let p = SparsePlan::from_memory_budget(side, m, delta, delta_out, 1).unwrap();
+        assert!(p.block_side >= 1 << 17 && p.block_side <= 1 << 19,
+            "block side {} should be near 2^18", p.block_side);
+        // Expected reducer words near 3m up to the power-of-two rounding.
+        let words = p.expected_reducer_words();
+        assert!(words <= 3.0 * m as f64 * 1.1, "words={words}");
+    }
+
+    #[test]
+    fn sparse_plan_rounds() {
+        let p = SparsePlan::new(1 << 20, 1 << 18, 2, 1e-5, 1e-4).unwrap();
+        assert_eq!(p.q(), 4);
+        assert_eq!(p.rounds(), 3);
+    }
+
+    #[test]
+    fn sparse_plan_rejects_bad() {
+        assert!(SparsePlan::new(100, 32, 1, 0.1, 0.1).is_err()); // 32 ∤ 100
+        assert!(SparsePlan::new(128, 32, 3, 0.1, 0.1).is_err()); // 3 ∤ 4
+        assert!(SparsePlan::new(128, 32, 1, -0.1, 0.1).is_err());
+    }
+}

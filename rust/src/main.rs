@@ -1,0 +1,337 @@
+//! `m3` — the M3 launcher.
+//!
+//! Subcommands:
+//!
+//! * `multiply` — run a dense 3D/2D multi-round multiplication on the
+//!   engine with the XLA (default), native, or naive backend.
+//! * `sparse`   — run the 3D sparse algorithm on an Erdős–Rényi input.
+//! * `figures`  — regenerate the paper's figures (tables + CSV).
+//! * `simulate` — price a configuration on a cluster profile.
+//! * `info`     — show artifact and environment status.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use m3::m3::{
+    multiply_dense_2d, multiply_dense_3d, multiply_sparse_3d, M3Config, PartitionerKind, Plan3d,
+    SparsePlan,
+};
+use m3::mapreduce::EngineConfig;
+use m3::matrix::gen;
+use m3::runtime::artifacts::{default_dir, ArtifactSet};
+use m3::runtime::native::NativeMultiply;
+use m3::runtime::xla_backend::XlaMultiply;
+use m3::runtime::{LocalMultiply, NaiveMultiply};
+use m3::simulator::{simulate_dense2d, simulate_dense3d, ClusterProfile};
+use m3::util::cli::{Args, Spec};
+use m3::util::rng::Xoshiro256ss;
+use m3::util::table::Table;
+
+const USAGE: &str = "\
+m3 — multi-round matrix multiplication on MapReduce
+
+USAGE:
+  m3 multiply --n <side> --block <side> --rho <r> [--algo 3d|2d]
+              [--backend xla|native|naive|auto] [--partitioner balanced|naive]
+              [--seed <u64>] [--verify] [--nodes <p>] [--slots <s>]
+  m3 sparse   --n <side> --nnz-per-row <k> --block <side> --rho <r> [--verify]
+  m3 figures  [--fig <1..10>] [--ablations] [--out-dir figures]
+  m3 simulate --profile inhouse|c3|i2 --n <side> --block <side>
+              [--rho 1,2,4,8] [--algo 3d|2d] [--nodes <p>]
+  m3 calibrate [--n <side>] [--block <side>] [--backend xla|native|naive|auto]
+  m3 info
+";
+
+fn main() {
+    let spec = Spec::new(&[
+        "n", "block", "rho", "algo", "backend", "partitioner", "seed", "nodes", "slots", "fig",
+        "out-dir", "profile", "nnz-per-row", "workers",
+    ]);
+    let args = match Args::parse(&spec) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional().first().cloned().unwrap_or_default();
+    let res = match cmd.as_str() {
+        "multiply" => cmd_multiply(&args),
+        "sparse" => cmd_sparse(&args),
+        "figures" => cmd_figures(&args),
+        "simulate" => cmd_simulate(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "info" => cmd_info(),
+        _ => {
+            println!("{USAGE}");
+            return;
+        }
+    };
+    if let Err(e) = res {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Resolve the requested local-multiply backend.
+fn backend_from(args: &Args) -> Result<Arc<dyn LocalMultiply>> {
+    let name = args.opt_or("backend", "auto");
+    Ok(match name.as_str() {
+        "naive" => Arc::new(NaiveMultiply),
+        "native" => Arc::new(NativeMultiply::new()),
+        "xla" => Arc::new(XlaMultiply::load_default(default_dir())?),
+        "auto" => match XlaMultiply::load_default(default_dir()) {
+            Ok(b) => {
+                eprintln!("[m3] using XLA backend (sides {:?})", b.sides());
+                Arc::new(b)
+            }
+            Err(e) => {
+                eprintln!("[m3] XLA backend unavailable ({e}); using native GEMM");
+                Arc::new(NativeMultiply::new())
+            }
+        },
+        other => bail!("unknown backend {other:?}"),
+    })
+}
+
+fn engine_from(args: &Args) -> Result<EngineConfig> {
+    let nodes: usize = args.get("nodes", 8).map_err(anyhow::Error::msg)?;
+    let slots: usize = args.get("slots", 2).map_err(anyhow::Error::msg)?;
+    let workers: usize = args
+        .get(
+            "workers",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        )
+        .map_err(anyhow::Error::msg)?;
+    Ok(EngineConfig::cluster(nodes, slots, workers))
+}
+
+fn partitioner_from(args: &Args) -> Result<PartitionerKind> {
+    Ok(match args.opt_or("partitioner", "balanced").as_str() {
+        "balanced" => PartitionerKind::Balanced,
+        "naive" => PartitionerKind::Naive,
+        other => bail!("unknown partitioner {other:?}"),
+    })
+}
+
+fn cmd_multiply(args: &Args) -> Result<()> {
+    let n: usize = args.get("n", 1024).map_err(anyhow::Error::msg)?;
+    let block: usize = args.get("block", 256).map_err(anyhow::Error::msg)?;
+    let rho: usize = args.get("rho", 1).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get("seed", 42).map_err(anyhow::Error::msg)?;
+    let algo = args.opt_or("algo", "3d");
+    let cfg = M3Config {
+        block_side: block,
+        rho,
+        engine: engine_from(args)?,
+        partitioner: partitioner_from(args)?,
+    };
+    let backend = backend_from(args)?;
+
+    let mut rng = Xoshiro256ss::new(seed);
+    eprintln!("[m3] generating two {n}x{n} matrices (seed {seed})");
+    let a = gen::dense_int(n, n, &mut rng);
+    let b = gen::dense_int(n, n, &mut rng);
+
+    let t0 = std::time::Instant::now();
+    let (c, metrics) = match algo.as_str() {
+        "3d" => multiply_dense_3d(&a, &b, &cfg, backend.clone())?,
+        "2d" => multiply_dense_2d(&a, &b, &cfg, backend.clone())?,
+        other => bail!("unknown algo {other:?}"),
+    };
+    let wall = t0.elapsed();
+    println!("{}", metrics.table());
+    println!(
+        "algo={algo} n={n} block={block} rho={rho} rounds={} wall={:.3}s kernel={:.3}s backend={}",
+        metrics.num_rounds(),
+        wall.as_secs_f64(),
+        backend.kernel_time().as_secs_f64(),
+        backend.name(),
+    );
+    if args.flag("verify") {
+        eprintln!("[m3] verifying against naive reference…");
+        let want = a.matmul_naive(&b);
+        let diff = c.max_abs_diff(&want);
+        anyhow::ensure!(diff == 0.0, "verification failed: max abs diff {diff}");
+        println!("verify: OK (exact match)");
+    }
+    Ok(())
+}
+
+fn cmd_sparse(args: &Args) -> Result<()> {
+    let n: usize = args.get("n", 4096).map_err(anyhow::Error::msg)?;
+    let k: usize = args.get("nnz-per-row", 8).map_err(anyhow::Error::msg)?;
+    let block: usize = args.get("block", 512).map_err(anyhow::Error::msg)?;
+    let rho: usize = args.get("rho", 1).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get("seed", 42).map_err(anyhow::Error::msg)?;
+    let delta = k as f64 / n as f64;
+    let delta_o = gen::er_output_density(n, delta);
+    let plan = SparsePlan::new(n, block, rho, delta, delta_o.max(delta))?;
+    let mut rng = Xoshiro256ss::new(seed);
+    eprintln!("[m3] generating two ER({n},{delta:.2e}) matrices");
+    let a = gen::erdos_renyi_coo(n, delta, &mut rng);
+    let b = gen::erdos_renyi_coo(n, delta, &mut rng);
+    let t0 = std::time::Instant::now();
+    let (c, metrics) =
+        multiply_sparse_3d(&a, &b, &plan, engine_from(args)?, partitioner_from(args)?)?;
+    println!("{}", metrics.table());
+    println!(
+        "sparse n={n} nnz(A)={} nnz(B)={} nnz(C)={} rounds={} wall={:.3}s expected_out_density={:.2e} measured={:.2e}",
+        a.nnz(),
+        b.nnz(),
+        c.nnz(),
+        metrics.num_rounds(),
+        t0.elapsed().as_secs_f64(),
+        delta_o,
+        c.density(),
+    );
+    if args.flag("verify") {
+        anyhow::ensure!(n <= 8192, "--verify limited to n <= 8192");
+        let want = a.to_csr().spgemm(&b.to_csr()).to_dense();
+        let diff = c.to_dense().max_abs_diff(&want);
+        anyhow::ensure!(diff == 0.0, "verification failed: max abs diff {diff}");
+        println!("verify: OK (exact match)");
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let out_dir = args.opt_or("out-dir", "figures");
+    std::fs::create_dir_all(&out_dir)?;
+    let reports = if args.flag("ablations") {
+        m3::harness::all_ablations()
+    } else {
+        match args.opt("fig") {
+            Some(f) => {
+                let num: usize = f.parse().map_err(|_| anyhow::anyhow!("bad --fig {f:?}"))?;
+                let r = m3::harness::figure(num);
+                anyhow::ensure!(!r.is_empty(), "no figure {num}");
+                r
+            }
+            None => m3::harness::all_figures(),
+        }
+    };
+    for rep in &reports {
+        println!("==== {} — {} ====", rep.id, rep.title);
+        println!("{}", rep.text);
+        for (name, csv) in &rep.csv {
+            let path = format!("{out_dir}/{name}");
+            std::fs::write(&path, csv)?;
+            eprintln!("[m3] wrote {path}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let profile = match args.opt_or("profile", "inhouse").as_str() {
+        "inhouse" => ClusterProfile::inhouse(),
+        "c3" => ClusterProfile::emr_c3_8xlarge(),
+        "i2" => ClusterProfile::emr_i2_xlarge(),
+        other => bail!("unknown profile {other:?}"),
+    };
+    let nodes: usize = args.get("nodes", profile.nodes).map_err(anyhow::Error::msg)?;
+    let profile = profile.with_nodes(nodes);
+    let n: usize = args.get("n", 32000).map_err(anyhow::Error::msg)?;
+    let block: usize = args.get("block", 4000).map_err(anyhow::Error::msg)?;
+    let rhos: Vec<usize> = args
+        .get_list("rho", &[1, 2, 4, 8])
+        .map_err(anyhow::Error::msg)?;
+    let algo = args.opt_or("algo", "3d");
+    let mut t = Table::new(&["rho", "rounds", "comm(s)", "comp(s)", "infra(s)", "total(s)"]);
+    for rho in rhos {
+        let sim = match algo.as_str() {
+            "3d" => simulate_dense3d(&Plan3d::new(n, block, rho)?, &profile),
+            "2d" => simulate_dense2d(&m3::m3::Plan2d::new(n, block * block, rho)?, &profile),
+            other => bail!("unknown algo {other:?}"),
+        };
+        t.row(&[
+            rho.to_string(),
+            sim.rounds.len().to_string(),
+            format!("{:.0}", sim.comm()),
+            format!("{:.0}", sim.comp()),
+            format!("{:.0}", sim.infra()),
+            format!("{:.0}", sim.total()),
+        ]);
+    }
+    println!(
+        "profile={} nodes={} n={n} block={block} algo={algo}",
+        profile.name, profile.nodes
+    );
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Run a small real sweep, fit an effective local cluster profile from
+/// the measured metrics, and print it next to the paper profiles —
+/// the cross-check described in EXPERIMENTS.md §Calibration.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    use m3::m3::Plan3d;
+    use m3::simulator::calibrate::{fit_local_profile, Observation};
+    let n: usize = args.get("n", 1024).map_err(anyhow::Error::msg)?;
+    let block: usize = args.get("block", 128).map_err(anyhow::Error::msg)?;
+    let backend = backend_from(args)?;
+    let mut rng = Xoshiro256ss::new(7);
+    let a = gen::dense_int(n, n, &mut rng);
+    let b = gen::dense_int(n, n, &mut rng);
+    let q = n / block;
+    let mut obs = vec![];
+    eprintln!("[m3] calibration sweep: n={n} block={block} q={q}");
+    for rho in (1..=q).filter(|r| q % r == 0) {
+        let cfg = M3Config {
+            block_side: block,
+            rho,
+            engine: engine_from(args)?,
+            partitioner: PartitionerKind::Balanced,
+        };
+        let plan = Plan3d::new(n, block, rho)?;
+        let (_, metrics) = multiply_dense_3d(&a, &b, &cfg, backend.clone())?;
+        eprintln!(
+            "  rho={rho}: {} rounds, {:.3}s",
+            metrics.num_rounds(),
+            metrics.total_time().as_secs_f64()
+        );
+        obs.push(Observation {
+            metrics,
+            flops: 2.0 * (plan.side as f64).powi(3),
+        });
+    }
+    let fit = fit_local_profile(&obs, 4.0);
+    let mut t = Table::new(&["profile", "GFLOP/s/node", "disk MB/s", "net MB/s", "setup s"]);
+    for p in [
+        fit,
+        ClusterProfile::inhouse(),
+        ClusterProfile::emr_c3_8xlarge(),
+        ClusterProfile::emr_i2_xlarge(),
+    ] {
+        t.row(&[
+            p.name.to_string(),
+            format!("{:.2}", p.flops_per_node / 1e9),
+            format!("{:.1}", p.disk_bw / 1e6),
+            format!("{:.1}", p.net_bw / 1e6),
+            format!("{:.1}", p.round_setup),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(local fit: this box vs the paper-anchored cluster profiles)");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = default_dir();
+    let set = ArtifactSet::discover(&dir);
+    println!("artifacts dir : {}", dir.display());
+    println!("artifact sides: {:?}", set.sides());
+    println!(
+        "parallelism   : {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
+    );
+    if set.is_empty() {
+        println!("hint: run `make artifacts` to build the XLA kernels");
+    } else {
+        let b = XlaMultiply::load(&dir, 1)?;
+        println!("pjrt          : ok ({} artifact(s) compiled)", b.sides().len());
+    }
+    Ok(())
+}

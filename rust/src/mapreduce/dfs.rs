@@ -1,0 +1,137 @@
+//! Simulated distributed file system.
+//!
+//! Hadoop stores a job's input and output on HDFS; between rounds of a
+//! multi-round algorithm every pair is therefore written to and re-read
+//! from the DFS. The paper identifies this materialisation — and HDFS's
+//! poor handling of the *smaller chunks* written per reduce task when ρ
+//! shrinks — as the main source of multi-round overhead (§5.1 Q2).
+//!
+//! `SimDfs` reproduces the accounting: it stores round outputs in
+//! memory, tracks bytes and chunk sizes per write (one chunk per reduce
+//! task, as in Hadoop), and reports the chunk-size statistics the cost
+//! model needs to reproduce the paper's small-chunk penalty.
+
+use std::collections::BTreeMap;
+
+/// One write operation: a reduce task materialising its output chunk.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChunkWrite {
+    /// Round that produced the chunk.
+    pub round: usize,
+    /// Chunk payload in words.
+    pub words: usize,
+}
+
+/// Accounting-only simulated DFS. Payload storage is the engine's pair
+/// vectors; the DFS tracks I/O volume and chunking.
+#[derive(Debug, Default)]
+pub struct SimDfs {
+    writes: Vec<ChunkWrite>,
+    reads: Vec<(usize, usize)>, // (round, words)
+    stored_words: BTreeMap<usize, usize>,
+}
+
+impl SimDfs {
+    /// Fresh DFS.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record the materialisation of a round's output as `chunks`
+    /// per-reduce-task chunk sizes (in words).
+    pub fn write_round(&mut self, round: usize, chunks: &[usize]) {
+        for &words in chunks {
+            self.writes.push(ChunkWrite { round, words });
+        }
+        *self.stored_words.entry(round).or_default() += chunks.iter().sum::<usize>();
+    }
+
+    /// Record a round reading `words` of input.
+    pub fn read_round(&mut self, round: usize, words: usize) {
+        self.reads.push((round, words));
+    }
+
+    /// Total words ever written.
+    pub fn total_written_words(&self) -> usize {
+        self.writes.iter().map(|w| w.words).sum()
+    }
+
+    /// Total words ever read.
+    pub fn total_read_words(&self) -> usize {
+        self.reads.iter().map(|&(_, w)| w).sum()
+    }
+
+    /// Number of chunks written.
+    pub fn num_chunks(&self) -> usize {
+        self.writes.len()
+    }
+
+    /// Mean chunk size in words (0 if nothing written).
+    pub fn mean_chunk_words(&self) -> f64 {
+        if self.writes.is_empty() {
+            return 0.0;
+        }
+        self.total_written_words() as f64 / self.writes.len() as f64
+    }
+
+    /// Words stored for a given round.
+    pub fn round_words(&self, round: usize) -> usize {
+        self.stored_words.get(&round).copied().unwrap_or(0)
+    }
+
+    /// All chunk writes (for tests and the calibration pass).
+    pub fn writes(&self) -> &[ChunkWrite] {
+        &self.writes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_writes_and_reads() {
+        let mut dfs = SimDfs::new();
+        dfs.write_round(0, &[100, 200, 300]);
+        dfs.read_round(1, 600);
+        assert_eq!(dfs.total_written_words(), 600);
+        assert_eq!(dfs.total_read_words(), 600);
+        assert_eq!(dfs.num_chunks(), 3);
+        assert_eq!(dfs.mean_chunk_words(), 200.0);
+        assert_eq!(dfs.round_words(0), 600);
+        assert_eq!(dfs.round_words(1), 0);
+    }
+
+    #[test]
+    fn multiple_rounds_accumulate() {
+        let mut dfs = SimDfs::new();
+        dfs.write_round(0, &[10]);
+        dfs.write_round(0, &[20]);
+        dfs.write_round(1, &[30]);
+        assert_eq!(dfs.round_words(0), 30);
+        assert_eq!(dfs.round_words(1), 30);
+        assert_eq!(dfs.num_chunks(), 3);
+    }
+
+    #[test]
+    fn more_rounds_same_volume_means_smaller_chunks() {
+        // The effect the paper blames for multi-round overhead: the same
+        // total output split across more rounds yields smaller chunks.
+        let mut mono = SimDfs::new();
+        mono.write_round(0, &[1000; 4]); // monolithic: 4 big chunks
+        let mut multi = SimDfs::new();
+        for r in 0..4 {
+            multi.write_round(r, &[250; 4]); // 4 rounds: 16 small chunks
+        }
+        assert_eq!(mono.total_written_words(), multi.total_written_words());
+        assert!(multi.mean_chunk_words() < mono.mean_chunk_words());
+        assert_eq!(multi.num_chunks(), 16);
+    }
+
+    #[test]
+    fn empty_dfs() {
+        let dfs = SimDfs::new();
+        assert_eq!(dfs.mean_chunk_words(), 0.0);
+        assert_eq!(dfs.total_written_words(), 0);
+    }
+}

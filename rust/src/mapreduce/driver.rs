@@ -1,0 +1,381 @@
+//! Multi-round driver.
+//!
+//! Runs a [`MultiRoundAlgorithm`] round by round, composing each round's
+//! input from the *static* input (Hadoop re-reads the original matrices
+//! from HDFS every round) plus the previous round's *carry* output, and
+//! materialising every round's output in the [`SimDfs`].
+//!
+//! The driver also implements the paper's §1 *service market* semantics:
+//! Hadoop cannot resume mid-round, so a preemption during round `r`
+//! discards `r`'s partial work and restarts it — [`Driver::run_preempted`]
+//! measures that discarded work, which the `spot_market` example sweeps
+//! against ρ.
+
+use std::time::Instant;
+
+use super::dfs::SimDfs;
+use super::job::{EngineConfig, Job};
+use super::metrics::{JobMetrics, RoundMetrics};
+use super::types::{Key, Mapper, Pair, Partitioner, Reducer, Value};
+
+/// A multi-round MapReduce algorithm: per-round map/reduce/partitioner
+/// plus the round count (the M3 algorithms implement this).
+pub trait MultiRoundAlgorithm {
+    /// Key type.
+    type K: Key;
+    /// Value type.
+    type V: Value;
+
+    /// Total number of rounds `R`.
+    fn num_rounds(&self) -> usize;
+    /// The map function of round `r`.
+    fn mapper(&self, round: usize) -> &dyn Mapper<Self::K, Self::V>;
+    /// The reduce function of round `r`.
+    fn reducer(&self, round: usize) -> &dyn Reducer<Self::K, Self::V>;
+    /// The partitioner of round `r`.
+    fn partitioner(&self, round: usize) -> &dyn Partitioner<Self::K>;
+    /// Optional map-side combiner of round `r` (Hadoop's `Combiner`).
+    fn combiner(&self, round: usize) -> Option<&dyn Reducer<Self::K, Self::V>> {
+        let _ = round;
+        None
+    }
+    /// Whether the static input (the original matrices) is part of
+    /// round `r`'s input in addition to the carry from round `r-1`.
+    fn reads_static_input(&self, round: usize) -> bool {
+        let _ = round;
+        true
+    }
+    /// If `true` (default), each round's output is the next round's
+    /// carry and the final result is the last round's output (the 3D
+    /// algorithms). If `false`, every round's output is part of the
+    /// final result and nothing is carried (the 2D algorithm, whose
+    /// reducers emit final `C` strips each round).
+    fn carries_output(&self) -> bool {
+        true
+    }
+}
+
+/// Result of a full multi-round execution.
+pub struct RunResult<K, V> {
+    /// Final-round output pairs.
+    pub output: Vec<Pair<K, V>>,
+    /// Per-round metrics.
+    pub metrics: JobMetrics,
+}
+
+/// Result of a preempted execution ([`Driver::run_preempted`]).
+pub struct PreemptedResult<K, V> {
+    /// Final output (identical to an uninterrupted run).
+    pub output: Vec<Pair<K, V>>,
+    /// Per-round metrics including re-executed rounds, in execution
+    /// order (a round index may appear twice).
+    pub metrics: JobMetrics,
+    /// Wall-clock seconds of work discarded by preemptions.
+    pub discarded_secs: f64,
+    /// Number of preemptions that hit mid-round.
+    pub preemptions: usize,
+}
+
+/// The multi-round execution driver.
+pub struct Driver {
+    /// Engine configuration for every round.
+    pub config: EngineConfig,
+    /// DFS used to materialise round outputs.
+    pub dfs: SimDfs,
+}
+
+impl Driver {
+    /// New driver with the given engine config.
+    pub fn new(config: EngineConfig) -> Self {
+        Self {
+            config,
+            dfs: SimDfs::new(),
+        }
+    }
+
+    /// Execute all rounds of `alg`. `static_input` is re-fed to every
+    /// round that requests it; the carry is the previous round's output.
+    pub fn run<A: MultiRoundAlgorithm>(
+        &mut self,
+        alg: &A,
+        static_input: &[Pair<A::K, A::V>],
+    ) -> RunResult<A::K, A::V> {
+        let mut metrics = JobMetrics::default();
+        let mut carry: Vec<Pair<A::K, A::V>> = vec![];
+        let mut sink: Vec<Pair<A::K, A::V>> = vec![];
+        for r in 0..alg.num_rounds() {
+            let (out, m) = self.run_round(alg, r, static_input, carry);
+            if alg.carries_output() {
+                carry = out;
+            } else {
+                sink.extend(out);
+                carry = vec![];
+            }
+            metrics.rounds.push(m);
+        }
+        let output = if alg.carries_output() { carry } else { sink };
+        RunResult { output, metrics }
+    }
+
+    /// Execute a single round with explicit carry; used by [`Self::run`]
+    /// and by the preemption replay.
+    fn run_round<A: MultiRoundAlgorithm>(
+        &mut self,
+        alg: &A,
+        r: usize,
+        static_input: &[Pair<A::K, A::V>],
+        carry: Vec<Pair<A::K, A::V>>,
+    ) -> (Vec<Pair<A::K, A::V>>, RoundMetrics) {
+        // Compose round input: static (re-read from DFS) + carry.
+        let mut input = carry;
+        if alg.reads_static_input(r) {
+            input.extend(static_input.iter().cloned());
+        }
+        self.dfs
+            .read_round(r, input.iter().map(|p| p.value.words()).sum());
+
+        let job = Job {
+            config: self.config,
+            mapper: alg.mapper(r),
+            reducer: alg.reducer(r),
+            combiner: alg.combiner(r),
+            partitioner: alg.partitioner(r),
+        };
+        let (out, mut m) = job.run(r, &input);
+
+        // Materialise output: one chunk per reduce task, as Hadoop does.
+        let t = Instant::now();
+        let chunks = chunk_sizes(&out, &m);
+        self.dfs.write_round(r, &chunks);
+        m.write_time = t.elapsed();
+        (out, m)
+    }
+
+    /// Execute with a *preemption schedule*: `preempt_at[i]` gives
+    /// cumulative wall-clock seconds of useful work after which the
+    /// i-th preemption strikes. A preemption mid-round discards that
+    /// round's partial work (Hadoop restarts interrupted rounds from
+    /// the beginning — paper §1 "Service market").
+    pub fn run_preempted<A: MultiRoundAlgorithm>(
+        &mut self,
+        alg: &A,
+        static_input: &[Pair<A::K, A::V>],
+        preempt_at: &[f64],
+    ) -> PreemptedResult<A::K, A::V> {
+        let mut metrics = JobMetrics::default();
+        let mut carry: Vec<Pair<A::K, A::V>> = vec![];
+        let mut sink: Vec<Pair<A::K, A::V>> = vec![];
+        let mut done_work = 0.0; // committed useful seconds
+        let mut discarded = 0.0;
+        let mut preemptions = 0;
+        let mut schedule: Vec<f64> = preempt_at.to_vec();
+        schedule.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut next_preempt = 0usize;
+
+        for r in 0..alg.num_rounds() {
+            loop {
+                let (out, m) = self.run_round(alg, r, static_input, carry.clone());
+                let round_secs = m.total_time().as_secs_f64();
+                // Does a preemption strike before this round commits?
+                let strike = next_preempt < schedule.len()
+                    && schedule[next_preempt] < done_work + round_secs
+                    && schedule[next_preempt] >= done_work;
+                if strike {
+                    // Partial work up to the preemption instant is lost.
+                    let lost = schedule[next_preempt] - done_work;
+                    discarded += lost;
+                    preemptions += 1;
+                    next_preempt += 1;
+                    metrics.rounds.push(m); // record the aborted attempt
+                    continue; // re-execute round r
+                }
+                done_work += round_secs;
+                metrics.rounds.push(m);
+                if alg.carries_output() {
+                    carry = out;
+                } else {
+                    sink.extend(out);
+                    carry = vec![];
+                }
+                break;
+            }
+        }
+        let output = if alg.carries_output() { carry } else { sink };
+        PreemptedResult {
+            output,
+            metrics,
+            discarded_secs: discarded,
+            preemptions,
+        }
+    }
+}
+
+/// Approximate Hadoop's per-reduce-task output chunking: distribute the
+/// round's output words across the reduce tasks that produced them.
+fn chunk_sizes<K: Key, V: Value>(out: &[Pair<K, V>], m: &RoundMetrics) -> Vec<usize> {
+    let tasks = m.reducers_per_task.len().max(1);
+    let total: usize = out.iter().map(|p| p.value.words()).sum();
+    let active = m.reducers_per_task.iter().filter(|&&g| g > 0).count().max(1);
+    let per = total / active;
+    let mut chunks = vec![];
+    for &g in m.reducers_per_task.iter().take(tasks) {
+        if g > 0 {
+            chunks.push(per);
+        }
+    }
+    if chunks.is_empty() && total > 0 {
+        chunks.push(total);
+    }
+    chunks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::types::{FnMapper, FnReducer, HashPartitioner};
+
+    /// A toy 3-round algorithm: each round increments every value;
+    /// static input only in round 0.
+    struct IncAlg {
+        mapper: FnMapper<u32, f32, fn(usize, &u32, &f32, &mut dyn FnMut(u32, f32))>,
+        reducer: FnReducer<u32, f32, fn(usize, &u32, Vec<f32>, &mut dyn FnMut(u32, f32))>,
+        part: HashPartitioner,
+        rounds: usize,
+    }
+
+    impl IncAlg {
+        fn new(rounds: usize) -> Self {
+            fn m(_r: usize, k: &u32, v: &f32, emit: &mut dyn FnMut(u32, f32)) {
+                emit(*k, *v);
+            }
+            fn red(_r: usize, k: &u32, vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)) {
+                emit(*k, vs.iter().sum::<f32>() + 1.0);
+            }
+            Self {
+                mapper: FnMapper::new(m as fn(_, &_, &_, &mut dyn FnMut(u32, f32))),
+                reducer: FnReducer::new(red as fn(_, &_, _, &mut dyn FnMut(u32, f32))),
+                part: HashPartitioner,
+                rounds,
+            }
+        }
+    }
+
+    impl MultiRoundAlgorithm for IncAlg {
+        type K = u32;
+        type V = f32;
+        fn num_rounds(&self) -> usize {
+            self.rounds
+        }
+        fn mapper(&self, _r: usize) -> &dyn Mapper<u32, f32> {
+            &self.mapper
+        }
+        fn reducer(&self, _r: usize) -> &dyn Reducer<u32, f32> {
+            &self.reducer
+        }
+        fn partitioner(&self, _r: usize) -> &dyn Partitioner<u32> {
+            &self.part
+        }
+        fn reads_static_input(&self, round: usize) -> bool {
+            round == 0
+        }
+    }
+
+    fn small_cfg() -> EngineConfig {
+        EngineConfig {
+            map_tasks: 2,
+            reduce_tasks: 2,
+            workers: 2,
+        }
+    }
+
+    #[test]
+    fn multi_round_carry_composes() {
+        let alg = IncAlg::new(3);
+        let mut d = Driver::new(small_cfg());
+        let input: Vec<Pair<u32, f32>> = (0..5).map(|i| Pair::new(i, 0.0)).collect();
+        let res = d.run(&alg, &input);
+        assert_eq!(res.metrics.num_rounds(), 3);
+        assert_eq!(res.output.len(), 5);
+        for p in &res.output {
+            assert_eq!(p.value, 3.0, "value incremented once per round");
+        }
+    }
+
+    #[test]
+    fn dfs_accounts_round_io() {
+        let alg = IncAlg::new(2);
+        let mut d = Driver::new(small_cfg());
+        let input: Vec<Pair<u32, f32>> = (0..10).map(|i| Pair::new(i, 0.0)).collect();
+        let _ = d.run(&alg, &input);
+        assert!(d.dfs.total_written_words() >= 20, "both rounds materialised");
+        assert!(d.dfs.total_read_words() >= 20);
+        assert!(d.dfs.num_chunks() >= 2);
+    }
+
+    #[test]
+    fn static_input_refed_when_requested() {
+        /// Algorithm that reads static input every round; value counts
+        /// how many pairs each key saw.
+        struct CountAlg(IncAlg);
+        impl MultiRoundAlgorithm for CountAlg {
+            type K = u32;
+            type V = f32;
+            fn num_rounds(&self) -> usize {
+                2
+            }
+            fn mapper(&self, r: usize) -> &dyn Mapper<u32, f32> {
+                self.0.mapper(r)
+            }
+            fn reducer(&self, r: usize) -> &dyn Reducer<u32, f32> {
+                self.0.reducer(r)
+            }
+            fn partitioner(&self, r: usize) -> &dyn Partitioner<u32> {
+                self.0.partitioner(r)
+            }
+            fn reads_static_input(&self, _round: usize) -> bool {
+                true
+            }
+        }
+        let alg = CountAlg(IncAlg::new(2));
+        let mut d = Driver::new(small_cfg());
+        let input = vec![Pair::new(1u32, 0.0f32)];
+        let res = d.run(&alg, &input);
+        // Round 0: group {0.0} → 1.0. Round 1: carry 1.0 + static 0.0 →
+        // group sums to 1.0, +1 → 2.0.
+        assert_eq!(res.output.len(), 1);
+        assert_eq!(res.output[0].value, 2.0);
+    }
+
+    #[test]
+    fn preemption_free_run_matches_plain_run() {
+        let alg = IncAlg::new(3);
+        let input: Vec<Pair<u32, f32>> = (0..5).map(|i| Pair::new(i, 0.0)).collect();
+        let mut d1 = Driver::new(small_cfg());
+        let plain = d1.run(&alg, &input);
+        let mut d2 = Driver::new(small_cfg());
+        let pre = d2.run_preempted(&alg, &input, &[]);
+        let mut a = plain.output;
+        let mut b = pre.output;
+        a.sort_by_key(|p| p.key);
+        b.sort_by_key(|p| p.key);
+        assert_eq!(a, b);
+        assert_eq!(pre.preemptions, 0);
+        assert_eq!(pre.discarded_secs, 0.0);
+    }
+
+    #[test]
+    fn preemption_forces_round_reexecution() {
+        let alg = IncAlg::new(2);
+        let input: Vec<Pair<u32, f32>> = (0..50).map(|i| Pair::new(i, 0.0)).collect();
+        let mut d = Driver::new(small_cfg());
+        // Preempt essentially immediately: strikes during round 0.
+        let pre = d.run_preempted(&alg, &input, &[1e-12]);
+        assert_eq!(pre.preemptions, 1);
+        // 2 logical rounds + 1 aborted attempt recorded.
+        assert_eq!(pre.metrics.num_rounds(), 3);
+        // Output still correct.
+        for p in &pre.output {
+            assert_eq!(p.value, 2.0);
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Task execution pool.
+//!
+//! Hadoop runs a fixed number of map/reduce *slots* per node; we model
+//! the cluster's total slot count with a scoped thread pool that pulls
+//! indexed tasks from an atomic counter. Results are returned in task
+//! order so the engine stays deterministic regardless of interleaving.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A fixed-width worker pool.
+#[derive(Debug, Clone, Copy)]
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    /// Pool with `workers` threads (≥ 1).
+    pub fn new(workers: usize) -> Self {
+        Self {
+            workers: workers.max(1),
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(task_index)` for every index in `0..num_tasks` across the
+    /// pool; returns the results ordered by task index. Panics in tasks
+    /// propagate.
+    pub fn run_indexed<T, F>(&self, num_tasks: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Send + Sync,
+    {
+        if num_tasks == 0 {
+            return vec![];
+        }
+        let next = AtomicUsize::new(0);
+        let results: Vec<Mutex<Option<T>>> = (0..num_tasks).map(|_| Mutex::new(None)).collect();
+        let nthreads = self.workers.min(num_tasks);
+        std::thread::scope(|scope| {
+            let mut handles = vec![];
+            for _ in 0..nthreads {
+                handles.push(scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= num_tasks {
+                        break;
+                    }
+                    let out = f(i);
+                    *results[i].lock().unwrap() = Some(out);
+                }));
+            }
+            for h in handles {
+                h.join().expect("worker panicked");
+            }
+        });
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("task not executed"))
+            .collect()
+    }
+
+    /// Map `f` over the items of a slice in parallel, preserving order.
+    pub fn map_slice<'a, I, T, F>(&self, items: &'a [I], f: F) -> Vec<T>
+    where
+        I: Sync,
+        T: Send,
+        F: Fn(&'a I) -> T + Send + Sync,
+    {
+        self.run_indexed(items.len(), |i| f(&items[i]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn results_in_task_order() {
+        let pool = Pool::new(4);
+        let out = pool.run_indexed(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_tasks_run_exactly_once() {
+        let pool = Pool::new(8);
+        let counter = AtomicU64::new(0);
+        let out = pool.run_indexed(1000, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(out.len(), 1000);
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn zero_tasks() {
+        let pool = Pool::new(4);
+        let out: Vec<u32> = pool.run_indexed(0, |_| unreachable!());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_worker_is_sequential() {
+        let pool = Pool::new(1);
+        let out = pool.run_indexed(10, |i| i);
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn more_workers_than_tasks() {
+        let pool = Pool::new(64);
+        let out = pool.run_indexed(3, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn map_slice_preserves_order() {
+        let pool = Pool::new(4);
+        let items: Vec<u64> = (0..50).collect();
+        let out = pool.map_slice(&items, |&x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn panics_propagate() {
+        let pool = Pool::new(2);
+        pool.run_indexed(4, |i| {
+            if i == 2 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

@@ -1,0 +1,374 @@
+//! One MapReduce round (a Hadoop job): map step → shuffle → reduce step.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::executor::Pool;
+use super::metrics::RoundMetrics;
+use super::shuffle::{measure, shuffle};
+use super::types::{Key, Mapper, Pair, Partitioner, Reducer, Value};
+
+/// Engine configuration, mirroring the paper's Hadoop setup (§4.2):
+/// the in-house cluster ran 2 map + 2 reduce slots on each of 16 nodes.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Number of map tasks per round.
+    pub map_tasks: usize,
+    /// Number of reduce tasks per round (the partitioner's `T`).
+    pub reduce_tasks: usize,
+    /// Worker threads executing tasks (cluster slots).
+    pub workers: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        Self {
+            map_tasks: cores * 2,
+            reduce_tasks: cores * 2,
+            workers: cores,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Config modelling `nodes` cluster nodes with `slots` map/reduce
+    /// slots each, executed on `workers` local threads.
+    pub fn cluster(nodes: usize, slots: usize, workers: usize) -> Self {
+        Self {
+            map_tasks: nodes * slots,
+            reduce_tasks: nodes * slots,
+            workers,
+        }
+    }
+}
+
+/// A single round executor.
+pub struct Job<'a, K: Key, V: Value> {
+    /// Configuration (task counts, pool width).
+    pub config: EngineConfig,
+    /// The round's map function.
+    pub mapper: &'a dyn Mapper<K, V>,
+    /// The round's reduce function.
+    pub reducer: &'a dyn Reducer<K, V>,
+    /// Optional map-side combiner (Hadoop's `Combiner`): applied to
+    /// each map task's output, per key, before the shuffle — shrinks
+    /// intermediate volume when the reduce function is associative.
+    pub combiner: Option<&'a dyn Reducer<K, V>>,
+    /// Routes groups to reduce tasks.
+    pub partitioner: &'a dyn Partitioner<K>,
+}
+
+impl<'a, K: Key, V: Value> Job<'a, K, V> {
+    /// Execute the round on `input`, returning the output pairs and the
+    /// round metrics.
+    pub fn run(&self, round: usize, input: &[Pair<K, V>]) -> (Vec<Pair<K, V>>, RoundMetrics) {
+        let pool = Pool::new(self.config.workers);
+        let mut metrics = RoundMetrics {
+            round,
+            input_pairs: input.len(),
+            input_words: input.iter().map(|p| p.value.words()).sum(),
+            ..Default::default()
+        };
+
+        // --- Map step: split input evenly across map tasks (Hadoop's
+        // runtime distributes input pairs to map tasks).
+        let t0 = Instant::now();
+        let num_map_tasks = self.config.map_tasks.max(1).min(input.len().max(1));
+        let chunks: Vec<&[Pair<K, V>]> = chunk_evenly(input, num_map_tasks);
+        let mapped: Vec<Vec<Pair<K, V>>> = pool.run_indexed(chunks.len(), |ti| {
+            let mut out = Vec::new();
+            for p in chunks[ti] {
+                self.mapper
+                    .map(round, &p.key, &p.value, &mut |k, v| out.push(Pair::new(k, v)));
+            }
+            match self.combiner {
+                None => out,
+                Some(comb) => {
+                    // Map-side combine: group this task's output by key
+                    // and pre-reduce each group.
+                    let mut groups: std::collections::BTreeMap<K, Vec<V>> =
+                        std::collections::BTreeMap::new();
+                    for p in out {
+                        groups.entry(p.key).or_default().push(p.value);
+                    }
+                    let mut combined = Vec::new();
+                    for (k, vs) in groups {
+                        comb.reduce(round, &k, vs, &mut |k, v| combined.push(Pair::new(k, v)));
+                    }
+                    combined
+                }
+            }
+        });
+        let intermediate: Vec<Pair<K, V>> = mapped.into_iter().flatten().collect();
+        metrics.map_time = t0.elapsed();
+
+        // --- Shuffle step.
+        let t1 = Instant::now();
+        let (sp, sw) = measure(&intermediate);
+        metrics.shuffle_pairs = sp;
+        metrics.shuffle_words = sw;
+        let shuffled = shuffle(intermediate, self.partitioner, self.config.reduce_tasks);
+        metrics.num_reducers = shuffled.num_groups();
+        metrics.reducers_per_task = shuffled.groups_per_task();
+        metrics.shuffle_time = t1.elapsed();
+
+        // --- Reduce step: one task per bucket, run on the pool. Each
+        // task takes ownership of its bucket so group values are moved
+        // into the reduce function, not deep-copied (§Perf L3).
+        let t2 = Instant::now();
+        let max_red_words = Mutex::new(0usize);
+        let buckets: Vec<Mutex<Option<std::collections::BTreeMap<K, Vec<V>>>>> = shuffled
+            .buckets
+            .into_iter()
+            .map(|b| Mutex::new(Some(b)))
+            .collect();
+        let reduced: Vec<Vec<Pair<K, V>>> = pool.run_indexed(buckets.len(), |ti| {
+            let bucket = buckets[ti].lock().unwrap().take().expect("bucket taken twice");
+            let mut out = Vec::new();
+            let mut local_max = 0usize;
+            for (key, values) in bucket {
+                let in_words: usize = values.iter().map(|v| v.words()).sum();
+                local_max = local_max.max(in_words);
+                self.reducer
+                    .reduce(round, &key, values, &mut |k, v| out.push(Pair::new(k, v)));
+            }
+            let mut g = max_red_words.lock().unwrap();
+            *g = (*g).max(local_max);
+            out
+        });
+        metrics.max_reducer_words = max_red_words.into_inner().unwrap();
+        let output: Vec<Pair<K, V>> = reduced.into_iter().flatten().collect();
+        metrics.reduce_time = t2.elapsed();
+        metrics.output_pairs = output.len();
+        metrics.output_words = output.iter().map(|p| p.value.words()).sum();
+        metrics.write_time = Duration::ZERO; // set by the driver when materialising
+
+        (output, metrics)
+    }
+}
+
+/// Split `xs` into `n` contiguous chunks whose sizes differ by at most 1.
+fn chunk_evenly<T>(xs: &[T], n: usize) -> Vec<&[T]> {
+    let n = n.max(1);
+    let len = xs.len();
+    let base = len / n;
+    let extra = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let sz = base + usize::from(i < extra);
+        out.push(&xs[start..start + sz]);
+        start += sz;
+    }
+    debug_assert_eq!(start, len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::types::{FnMapper, FnReducer, HashPartitioner, IdentityMapper};
+
+    fn cfg() -> EngineConfig {
+        EngineConfig {
+            map_tasks: 4,
+            reduce_tasks: 3,
+            workers: 4,
+        }
+    }
+
+    #[test]
+    fn word_count_style_round() {
+        // Classic word count: map emits (k,1), reduce sums.
+        let input: Vec<Pair<u32, f32>> =
+            (0..100).map(|i| Pair::new(i % 10, 1.0)).collect();
+        let mapper = IdentityMapper;
+        let reducer = FnReducer::new(|_r, k: &u32, vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
+            emit(*k, vs.iter().sum());
+        });
+        let job = Job {
+            config: cfg(),
+            combiner: None,
+            mapper: &mapper,
+            reducer: &reducer,
+            partitioner: &HashPartitioner,
+        };
+        let (out, m) = job.run(0, &input);
+        assert_eq!(out.len(), 10);
+        for p in &out {
+            assert_eq!(p.value, 10.0);
+        }
+        assert_eq!(m.input_pairs, 100);
+        assert_eq!(m.shuffle_pairs, 100);
+        assert_eq!(m.num_reducers, 10);
+        assert_eq!(m.output_pairs, 10);
+    }
+
+    #[test]
+    fn mapper_fanout_counts() {
+        // Each input pair emits 3 intermediate pairs → shuffle size 3×.
+        let input: Vec<Pair<u32, f32>> = (0..50).map(|i| Pair::new(i, 1.0)).collect();
+        let mapper = FnMapper::new(|_r, k: &u32, v: &f32, emit: &mut dyn FnMut(u32, f32)| {
+            for d in 0..3 {
+                emit(*k * 3 + d, *v);
+            }
+        });
+        let reducer = FnReducer::new(|_r, k: &u32, vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
+            emit(*k, vs.iter().sum());
+        });
+        let job = Job {
+            config: cfg(),
+            combiner: None,
+            mapper: &mapper,
+            reducer: &reducer,
+            partitioner: &HashPartitioner,
+        };
+        let (out, m) = job.run(0, &input);
+        assert_eq!(m.shuffle_pairs, 150);
+        assert_eq!(out.len(), 150);
+    }
+
+    #[test]
+    fn max_reducer_words_tracks_largest_group() {
+        // Key 0 gets 9 values, key 1 gets 1.
+        let mut input = vec![];
+        for _ in 0..9 {
+            input.push(Pair::new(0u32, 1.0f32));
+        }
+        input.push(Pair::new(1u32, 1.0f32));
+        let reducer = FnReducer::new(|_r, k: &u32, _vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
+            emit(*k, 0.0);
+        });
+        let job = Job {
+            config: cfg(),
+            combiner: None,
+            mapper: &IdentityMapper,
+            reducer: &reducer,
+            partitioner: &HashPartitioner,
+        };
+        let (_, m) = job.run(0, &input);
+        assert_eq!(m.max_reducer_words, 9);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let input: Vec<Pair<u32, f32>> = (0..200).map(|i| Pair::new(i % 17, (i % 5) as f32)).collect();
+        let reducer = FnReducer::new(|_r, k: &u32, vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
+            emit(*k, vs.iter().sum());
+        });
+        let mut outs = vec![];
+        for workers in [1, 2, 8] {
+            let config = EngineConfig {
+                map_tasks: 7,
+                reduce_tasks: 4,
+                workers,
+            };
+            let job = Job {
+                config,
+                combiner: None,
+                mapper: &IdentityMapper,
+                reducer: &reducer,
+                partitioner: &HashPartitioner,
+            };
+            let (mut out, _) = job.run(0, &input);
+            out.sort_by_key(|p| p.key);
+            outs.push(out);
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[1], outs[2]);
+    }
+
+    #[test]
+    fn round_index_reaches_mapper_and_reducer() {
+        let mapper = FnMapper::new(|r, k: &u32, _v: &f32, emit: &mut dyn FnMut(u32, f32)| {
+            emit(*k, r as f32);
+        });
+        let reducer = FnReducer::new(|r, k: &u32, vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
+            emit(*k, vs[0] + r as f32);
+        });
+        let job = Job {
+            config: cfg(),
+            combiner: None,
+            mapper: &mapper,
+            reducer: &reducer,
+            partitioner: &HashPartitioner,
+        };
+        let (out, _) = job.run(5, &[Pair::new(1u32, 0.0f32)]);
+        assert_eq!(out[0].value, 10.0);
+    }
+
+    #[test]
+    fn empty_input_round() {
+        let reducer = FnReducer::new(|_r, k: &u32, _vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
+            emit(*k, 0.0)
+        });
+        let job = Job {
+            config: cfg(),
+            combiner: None,
+            mapper: &IdentityMapper,
+            reducer: &reducer,
+            partitioner: &HashPartitioner,
+        };
+        let (out, m) = job.run(0, &[]);
+        assert!(out.is_empty());
+        assert_eq!(m.shuffle_pairs, 0);
+        assert_eq!(m.num_reducers, 0);
+    }
+
+    #[test]
+    fn combiner_shrinks_shuffle_without_changing_result() {
+        // Word count with many repeats per map task: the combiner
+        // pre-sums per task, cutting shuffle pairs, same final output.
+        let input: Vec<Pair<u32, f32>> = (0..400).map(|i| Pair::new(i % 4, 1.0)).collect();
+        let reducer = FnReducer::new(|_r, k: &u32, vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
+            emit(*k, vs.iter().sum());
+        });
+        let combiner = FnReducer::new(|_r, k: &u32, vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
+            emit(*k, vs.iter().sum());
+        });
+        let plain = Job {
+            config: cfg(),
+            combiner: None,
+            mapper: &IdentityMapper,
+            reducer: &reducer,
+            partitioner: &HashPartitioner,
+        };
+        let combined = Job {
+            config: cfg(),
+            combiner: Some(&combiner),
+            mapper: &IdentityMapper,
+            reducer: &reducer,
+            partitioner: &HashPartitioner,
+        };
+        let (mut out_a, m_a) = plain.run(0, &input);
+        let (mut out_b, m_b) = combined.run(0, &input);
+        out_a.sort_by_key(|p| p.key);
+        out_b.sort_by_key(|p| p.key);
+        assert_eq!(out_a, out_b, "combiner must not change the result");
+        assert_eq!(m_a.shuffle_pairs, 400);
+        // 4 map tasks × ≤4 keys each = ≤16 combined pairs.
+        assert!(m_b.shuffle_pairs <= 16, "combined shuffle {}", m_b.shuffle_pairs);
+    }
+
+    #[test]
+    fn chunk_evenly_covers_all() {
+        let xs: Vec<u32> = (0..10).collect();
+        let chunks = chunk_evenly(&xs, 3);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0].len(), 4);
+        assert_eq!(chunks[1].len(), 3);
+        assert_eq!(chunks[2].len(), 3);
+        let flat: Vec<u32> = chunks.concat();
+        assert_eq!(flat, xs);
+    }
+
+    #[test]
+    fn chunk_evenly_more_chunks_than_items() {
+        let xs = [1, 2];
+        let chunks = chunk_evenly(&xs, 5);
+        assert_eq!(chunks.iter().map(|c| c.len()).sum::<usize>(), 2);
+    }
+}

@@ -1,0 +1,187 @@
+//! Per-round and per-job metrics.
+//!
+//! The paper's analysis is phrased in *shuffle size* (intermediate pairs
+//! per round), *reducer size* (memory words per reduce application), and
+//! a three-way cost split (infrastructure / computation /
+//! communication). The engine records all of these so tests can assert
+//! the theoretical bounds (Theorems 3.1–3.3) and the harness can print
+//! paper-style component breakdowns.
+
+use std::time::Duration;
+
+/// Metrics of a single round (one Hadoop job).
+#[derive(Debug, Clone, Default)]
+pub struct RoundMetrics {
+    /// Round index.
+    pub round: usize,
+    /// Number of input pairs fed to map tasks.
+    pub input_pairs: usize,
+    /// Words read from the DFS as round input.
+    pub input_words: usize,
+    /// Intermediate pairs produced by the map step (the paper's
+    /// per-round shuffle size).
+    pub shuffle_pairs: usize,
+    /// Intermediate words shuffled.
+    pub shuffle_words: usize,
+    /// Number of distinct reducer keys (reduce function applications).
+    pub num_reducers: usize,
+    /// Maximum input words over all reduce applications (the paper's
+    /// reducer size).
+    pub max_reducer_words: usize,
+    /// Output pairs written by the reduce step.
+    pub output_pairs: usize,
+    /// Output words written to the DFS.
+    pub output_words: usize,
+    /// Reducer groups per reduce task (for Figure 1 load-balance plots).
+    pub reducers_per_task: Vec<usize>,
+    /// Wall time of the map step.
+    pub map_time: Duration,
+    /// Wall time of the shuffle step (partition + group).
+    pub shuffle_time: Duration,
+    /// Wall time of the reduce step.
+    pub reduce_time: Duration,
+    /// Time spent inside local multiplies (reduce compute kernel),
+    /// aggregated across tasks (CPU time, can exceed wall).
+    pub kernel_time: Duration,
+    /// Wall time for materialising output to the DFS.
+    pub write_time: Duration,
+}
+
+impl RoundMetrics {
+    /// Total wall time of the round.
+    pub fn total_time(&self) -> Duration {
+        self.map_time + self.shuffle_time + self.reduce_time + self.write_time
+    }
+
+    /// Communication-ish wall time (everything except reduce compute) —
+    /// mirrors the paper's T_comm measurement procedure.
+    pub fn comm_time(&self) -> Duration {
+        self.map_time + self.shuffle_time + self.write_time
+    }
+}
+
+/// Metrics of a multi-round execution.
+#[derive(Debug, Clone, Default)]
+pub struct JobMetrics {
+    /// Per-round metrics in execution order.
+    pub rounds: Vec<RoundMetrics>,
+}
+
+impl JobMetrics {
+    /// Number of executed rounds.
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Total wall time across rounds.
+    pub fn total_time(&self) -> Duration {
+        self.rounds.iter().map(|r| r.total_time()).sum()
+    }
+
+    /// Maximum per-round shuffle size in pairs (the paper's "shuffle
+    /// size" of an algorithm).
+    pub fn max_shuffle_pairs(&self) -> usize {
+        self.rounds.iter().map(|r| r.shuffle_pairs).max().unwrap_or(0)
+    }
+
+    /// Total shuffled words over all rounds.
+    pub fn total_shuffle_words(&self) -> usize {
+        self.rounds.iter().map(|r| r.shuffle_words).sum()
+    }
+
+    /// Maximum reducer size in words over all rounds.
+    pub fn max_reducer_words(&self) -> usize {
+        self.rounds
+            .iter()
+            .map(|r| r.max_reducer_words)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Aggregate kernel (local multiply) time.
+    pub fn total_kernel_time(&self) -> Duration {
+        self.rounds.iter().map(|r| r.kernel_time).sum()
+    }
+
+    /// Render a per-round summary table.
+    pub fn table(&self) -> String {
+        use crate::util::table::Table;
+        let mut t = Table::new(&[
+            "round",
+            "in_pairs",
+            "shuf_pairs",
+            "shuf_words",
+            "reducers",
+            "max_red_words",
+            "out_pairs",
+            "time_ms",
+        ]);
+        for r in &self.rounds {
+            t.row(&[
+                r.round.to_string(),
+                r.input_pairs.to_string(),
+                r.shuffle_pairs.to_string(),
+                r.shuffle_words.to_string(),
+                r.num_reducers.to_string(),
+                r.max_reducer_words.to_string(),
+                r.output_pairs.to_string(),
+                format!("{:.1}", r.total_time().as_secs_f64() * 1e3),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(round: usize, shuffle_pairs: usize, red_words: usize) -> RoundMetrics {
+        RoundMetrics {
+            round,
+            shuffle_pairs,
+            max_reducer_words: red_words,
+            map_time: Duration::from_millis(10),
+            shuffle_time: Duration::from_millis(5),
+            reduce_time: Duration::from_millis(20),
+            write_time: Duration::from_millis(2),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn round_totals() {
+        let r = mk(0, 100, 12);
+        assert_eq!(r.total_time(), Duration::from_millis(37));
+        assert_eq!(r.comm_time(), Duration::from_millis(17));
+    }
+
+    #[test]
+    fn job_aggregates() {
+        let j = JobMetrics {
+            rounds: vec![mk(0, 100, 12), mk(1, 300, 48), mk(2, 200, 24)],
+        };
+        assert_eq!(j.num_rounds(), 3);
+        assert_eq!(j.max_shuffle_pairs(), 300);
+        assert_eq!(j.max_reducer_words(), 48);
+        assert_eq!(j.total_time(), Duration::from_millis(111));
+    }
+
+    #[test]
+    fn empty_job() {
+        let j = JobMetrics::default();
+        assert_eq!(j.num_rounds(), 0);
+        assert_eq!(j.max_shuffle_pairs(), 0);
+        assert_eq!(j.total_time(), Duration::ZERO);
+    }
+
+    #[test]
+    fn table_renders() {
+        let j = JobMetrics {
+            rounds: vec![mk(0, 1, 2)],
+        };
+        let s = j.table();
+        assert!(s.contains("round"));
+        assert!(s.contains("shuf_pairs"));
+    }
+}

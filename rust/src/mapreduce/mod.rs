@@ -1,0 +1,27 @@
+//! A Hadoop-like MapReduce engine.
+//!
+//! This is the substrate the paper ran on (Hadoop 2.x), rebuilt
+//! in-process: a round is a *job* with a map step, a shuffle step that
+//! groups intermediate pairs by key and routes groups to reduce tasks
+//! through a pluggable [`types::Partitioner`], and a reduce step. Pairs
+//! are materialised between rounds in a simulated distributed file
+//! system ([`dfs::SimDfs`]) exactly as Hadoop stores round outputs on
+//! HDFS — the behaviour the paper identifies as the main multi-round
+//! overhead. Map/reduce tasks execute on a thread-pool
+//! ([`executor::Pool`]) whose width models cluster slots.
+//!
+//! The engine is generic over key/value types; the M3 algorithms in
+//! [`crate::m3`] instantiate it with block keys and matrix-block values.
+
+pub mod dfs;
+pub mod driver;
+pub mod executor;
+pub mod job;
+pub mod metrics;
+pub mod shuffle;
+pub mod types;
+
+pub use driver::{Driver, MultiRoundAlgorithm};
+pub use job::{EngineConfig, Job};
+pub use metrics::{JobMetrics, RoundMetrics};
+pub use types::{Mapper, Pair, Partitioner, Reducer, Value};

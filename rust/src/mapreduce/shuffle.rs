@@ -1,0 +1,131 @@
+//! The shuffle step: partition intermediate pairs to reduce tasks and
+//! group them by key.
+//!
+//! Hadoop's shuffle routes each key's group to a reduce task through the
+//! job's `Partitioner`, then sorts/groups within each task. We reproduce
+//! that structure: a bucket per reduce task, each bucket a sorted
+//! key → values map (BTreeMap keeps the engine deterministic).
+
+use std::collections::BTreeMap;
+
+use super::types::{Key, Pair, Partitioner, Value};
+
+/// Output of the shuffle: one bucket per reduce task, each mapping key
+/// → grouped values (in map-emission order within the group).
+pub struct Shuffled<K, V> {
+    /// `buckets[t]` holds the groups assigned to reduce task `t`.
+    pub buckets: Vec<BTreeMap<K, Vec<V>>>,
+}
+
+impl<K: Key, V: Value> Shuffled<K, V> {
+    /// Total number of groups (distinct keys).
+    pub fn num_groups(&self) -> usize {
+        self.buckets.iter().map(|b| b.len()).sum()
+    }
+
+    /// Groups per reduce task (Figure 1's y-axis).
+    pub fn groups_per_task(&self) -> Vec<usize> {
+        self.buckets.iter().map(|b| b.len()).collect()
+    }
+}
+
+/// Partition + group the intermediate pairs into `num_tasks` buckets.
+pub fn shuffle<K: Key, V: Value>(
+    pairs: Vec<Pair<K, V>>,
+    partitioner: &dyn Partitioner<K>,
+    num_tasks: usize,
+) -> Shuffled<K, V> {
+    assert!(num_tasks > 0, "need at least one reduce task");
+    let mut buckets: Vec<BTreeMap<K, Vec<V>>> = (0..num_tasks).map(|_| BTreeMap::new()).collect();
+    for p in pairs {
+        let t = partitioner.partition(&p.key, num_tasks);
+        assert!(
+            t < num_tasks,
+            "partitioner returned {t} for {num_tasks} tasks"
+        );
+        buckets[t].entry(p.key).or_default().push(p.value);
+    }
+    Shuffled { buckets }
+}
+
+/// Count pairs and words of an intermediate pair set (pre-shuffle
+/// metric collection).
+pub fn measure<K: Key, V: Value>(pairs: &[Pair<K, V>]) -> (usize, usize) {
+    let words = pairs.iter().map(|p| p.value.words()).sum();
+    (pairs.len(), words)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::types::HashPartitioner;
+
+    /// Partitioner that routes key k to task k % T via identity.
+    struct ModPartitioner;
+    impl Partitioner<u32> for ModPartitioner {
+        fn partition(&self, key: &u32, num_tasks: usize) -> usize {
+            (*key as usize) % num_tasks
+        }
+    }
+
+    fn pairs(kvs: &[(u32, f32)]) -> Vec<Pair<u32, f32>> {
+        kvs.iter().map(|&(k, v)| Pair::new(k, v)).collect()
+    }
+
+    #[test]
+    fn groups_by_key() {
+        let s = shuffle(
+            pairs(&[(1, 1.0), (2, 2.0), (1, 3.0)]),
+            &ModPartitioner,
+            2,
+        );
+        assert_eq!(s.num_groups(), 2);
+        // key 1 -> task 1, key 2 -> task 0
+        assert_eq!(s.buckets[1][&1], vec![1.0, 3.0]);
+        assert_eq!(s.buckets[0][&2], vec![2.0]);
+    }
+
+    #[test]
+    fn preserves_emission_order_within_group() {
+        let s = shuffle(
+            pairs(&[(7, 1.0), (7, 2.0), (7, 3.0)]),
+            &ModPartitioner,
+            4,
+        );
+        assert_eq!(s.buckets[3][&7], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn all_pairs_land_somewhere() {
+        let input: Vec<Pair<u32, f32>> = (0..1000).map(|i| Pair::new(i % 37, i as f32)).collect();
+        let s = shuffle(input, &HashPartitioner, 8);
+        let total: usize = s
+            .buckets
+            .iter()
+            .flat_map(|b| b.values())
+            .map(|v| v.len())
+            .sum();
+        assert_eq!(total, 1000);
+        assert_eq!(s.num_groups(), 37);
+    }
+
+    #[test]
+    fn groups_per_task_sums_to_num_groups() {
+        let input: Vec<Pair<u32, f32>> = (0..100).map(|i| Pair::new(i, 0.0)).collect();
+        let s = shuffle(input, &HashPartitioner, 5);
+        assert_eq!(s.groups_per_task().iter().sum::<usize>(), s.num_groups());
+    }
+
+    #[test]
+    fn measure_counts_pairs_and_words() {
+        let (n, w) = measure(&pairs(&[(1, 1.0), (2, 2.0)]));
+        assert_eq!(n, 2);
+        assert_eq!(w, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one reduce task")]
+    fn zero_tasks_panics() {
+        let _ = shuffle(pairs(&[(1, 1.0)]), &ModPartitioner, 0);
+    }
+}

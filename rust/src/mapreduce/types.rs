@@ -1,0 +1,210 @@
+//! Core engine types: key-value pairs and the map / reduce /
+//! partitioner traits mirroring the paper's §2 MapReduce definition.
+
+use std::fmt::Debug;
+use std::hash::Hash;
+
+/// Key requirements: ordering gives deterministic shuffle output,
+/// hashing supports hash-based partitioners.
+pub trait Key: Clone + Eq + Ord + Hash + Send + Sync + Debug + 'static {}
+impl<T: Clone + Eq + Ord + Hash + Send + Sync + Debug + 'static> Key for T {}
+
+/// Value requirements. [`Value::words`] reports the size in memory
+/// words — the unit the paper uses for shuffle size and reducer size.
+pub trait Value: Clone + Send + Sync + 'static {
+    /// Size of this value in memory words.
+    fn words(&self) -> usize;
+}
+
+impl Value for f32 {
+    fn words(&self) -> usize {
+        1
+    }
+}
+
+impl Value for u64 {
+    fn words(&self) -> usize {
+        1
+    }
+}
+
+impl Value for String {
+    fn words(&self) -> usize {
+        self.len().div_ceil(4)
+    }
+}
+
+/// A key-value pair `⟨k; v⟩`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pair<K, V> {
+    /// The key.
+    pub key: K,
+    /// The value.
+    pub value: V,
+}
+
+impl<K, V> Pair<K, V> {
+    /// Construct a pair.
+    pub fn new(key: K, value: V) -> Self {
+        Self { key, value }
+    }
+}
+
+/// The map function: transforms one input pair into a multiset of
+/// intermediate pairs, with the round index available (the M3 map
+/// functions depend on `r`).
+pub trait Mapper<K: Key, V: Value>: Send + Sync {
+    /// Apply the map function to a single input pair; emit intermediate
+    /// pairs through `emit`.
+    fn map(&self, round: usize, key: &K, value: &V, emit: &mut dyn FnMut(K, V));
+}
+
+/// The reduce function: processes one group of same-key values.
+pub trait Reducer<K: Key, V: Value>: Send + Sync {
+    /// Apply the reduce function to the group for `key`; emit output
+    /// pairs through `emit`.
+    fn reduce(&self, round: usize, key: &K, values: Vec<V>, emit: &mut dyn FnMut(K, V));
+}
+
+/// Assigns each key's group to a reduce task in `[0, num_tasks)`
+/// (Hadoop's `Partitioner`).
+pub trait Partitioner<K: Key>: Send + Sync {
+    /// Reduce-task index for `key`.
+    fn partition(&self, key: &K, num_tasks: usize) -> usize;
+}
+
+/// Hash partitioner — Hadoop's default (`key.hashCode() % T`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HashPartitioner;
+
+impl<K: Key> Partitioner<K> for HashPartitioner {
+    fn partition(&self, key: &K, num_tasks: usize) -> usize {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::Hasher;
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() % num_tasks as u64) as usize
+    }
+}
+
+/// Function-backed mapper, for tests and small algorithms.
+pub struct FnMapper<K, V, F>(pub F, std::marker::PhantomData<(K, V)>)
+where
+    F: Fn(usize, &K, &V, &mut dyn FnMut(K, V)) + Send + Sync;
+
+impl<K, V, F> FnMapper<K, V, F>
+where
+    F: Fn(usize, &K, &V, &mut dyn FnMut(K, V)) + Send + Sync,
+{
+    /// Wrap a closure as a [`Mapper`].
+    pub fn new(f: F) -> Self {
+        Self(f, std::marker::PhantomData)
+    }
+}
+
+impl<K: Key, V: Value, F> Mapper<K, V> for FnMapper<K, V, F>
+where
+    F: Fn(usize, &K, &V, &mut dyn FnMut(K, V)) + Send + Sync,
+{
+    fn map(&self, round: usize, key: &K, value: &V, emit: &mut dyn FnMut(K, V)) {
+        (self.0)(round, key, value, emit)
+    }
+}
+
+/// Function-backed reducer, for tests and small algorithms.
+pub struct FnReducer<K, V, F>(pub F, std::marker::PhantomData<(K, V)>)
+where
+    F: Fn(usize, &K, Vec<V>, &mut dyn FnMut(K, V)) + Send + Sync;
+
+impl<K, V, F> FnReducer<K, V, F>
+where
+    F: Fn(usize, &K, Vec<V>, &mut dyn FnMut(K, V)) + Send + Sync,
+{
+    /// Wrap a closure as a [`Reducer`].
+    pub fn new(f: F) -> Self {
+        Self(f, std::marker::PhantomData)
+    }
+}
+
+impl<K: Key, V: Value, F> Reducer<K, V> for FnReducer<K, V, F>
+where
+    F: Fn(usize, &K, Vec<V>, &mut dyn FnMut(K, V)) + Send + Sync,
+{
+    fn reduce(&self, round: usize, key: &K, values: Vec<V>, emit: &mut dyn FnMut(K, V)) {
+        (self.0)(round, key, values, emit)
+    }
+}
+
+/// Identity mapper.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IdentityMapper;
+
+impl<K: Key, V: Value> Mapper<K, V> for IdentityMapper {
+    fn map(&self, _round: usize, key: &K, value: &V, emit: &mut dyn FnMut(K, V)) {
+        emit(key.clone(), value.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_construction() {
+        let p = Pair::new(3u32, 1.5f32);
+        assert_eq!(p.key, 3);
+        assert_eq!(p.value, 1.5);
+    }
+
+    #[test]
+    fn hash_partitioner_in_range_and_deterministic() {
+        let p = HashPartitioner;
+        for k in 0u32..1000 {
+            let t = Partitioner::partition(&p, &k, 7);
+            assert!(t < 7);
+            assert_eq!(t, Partitioner::partition(&p, &k, 7));
+        }
+    }
+
+    #[test]
+    fn hash_partitioner_spreads_keys() {
+        let p = HashPartitioner;
+        let mut counts = [0usize; 8];
+        for k in 0u32..8000 {
+            counts[Partitioner::partition(&p, &k, 8)] += 1;
+        }
+        // Each task should get a decent share (loose bound).
+        assert!(counts.iter().all(|&c| c > 500), "counts={counts:?}");
+    }
+
+    #[test]
+    fn fn_mapper_and_reducer() {
+        let m = FnMapper::new(|_r, k: &u32, v: &f32, emit: &mut dyn FnMut(u32, f32)| {
+            emit(*k + 1, *v * 2.0);
+        });
+        let mut got = vec![];
+        m.map(0, &1, &3.0, &mut |k, v| got.push((k, v)));
+        assert_eq!(got, vec![(2, 6.0)]);
+
+        let r = FnReducer::new(|_r, k: &u32, vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
+            emit(*k, vs.iter().sum());
+        });
+        let mut got = vec![];
+        r.reduce(0, &5, vec![1.0, 2.0, 3.0], &mut |k, v| got.push((k, v)));
+        assert_eq!(got, vec![(5, 6.0)]);
+    }
+
+    #[test]
+    fn identity_mapper_passthrough() {
+        let m = IdentityMapper;
+        let mut got = vec![];
+        Mapper::<u32, f32>::map(&m, 3, &9, &4.0, &mut |k, v| got.push((k, v)));
+        assert_eq!(got, vec![(9, 4.0)]);
+    }
+
+    #[test]
+    fn value_words() {
+        assert_eq!(1.0f32.words(), 1);
+        assert_eq!("abcdefgh".to_string().words(), 2);
+    }
+}

@@ -1,0 +1,209 @@
+//! Block-grid partitioning.
+//!
+//! The 3D algorithms divide the `√n × √n` matrices into `√m × √m`
+//! blocks, giving a `q × q` grid with `q = √(n/m)`. This module owns
+//! the index arithmetic — including the paper's group rotation
+//! `h = (i + j + ℓ) mod q` — so algorithms and tests share one
+//! implementation.
+
+use super::dense::DenseMatrix;
+
+/// Partitioning of a `side × side` matrix into `block_side × block_side`
+/// blocks (`q = side / block_side` per dimension).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockGrid {
+    /// Matrix side `√n`.
+    pub side: usize,
+    /// Block side `√m`.
+    pub block_side: usize,
+}
+
+impl BlockGrid {
+    /// Create a grid; `block_side` must divide `side` (paper's
+    /// simplifying assumption).
+    pub fn new(side: usize, block_side: usize) -> Self {
+        assert!(block_side > 0, "block side must be positive");
+        assert!(
+            side % block_side == 0,
+            "block side {block_side} must divide matrix side {side}"
+        );
+        Self { side, block_side }
+    }
+
+    /// Blocks per dimension, `q = √(n/m)`.
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.side / self.block_side
+    }
+
+    /// Total number of blocks `q²  = n/m`.
+    #[inline]
+    pub fn num_blocks(&self) -> usize {
+        self.q() * self.q()
+    }
+
+    /// Words per block, `m`.
+    #[inline]
+    pub fn block_words(&self) -> usize {
+        self.block_side * self.block_side
+    }
+
+    /// Total elementary block-products in the 3D decomposition, `q³`.
+    #[inline]
+    pub fn num_products(&self) -> usize {
+        self.q().pow(3)
+    }
+
+    /// The paper's group rotation: the block-row index `h` of the A/B
+    /// operand pair used by output block `(i, j)` in group `ℓ`:
+    /// `h = (i + j + ℓ) mod q`.
+    #[inline]
+    pub fn group_h(&self, i: usize, j: usize, l: usize) -> usize {
+        (i + j + l) % self.q()
+    }
+
+    /// Inverse of the rotation: the group `ℓ` in which product
+    /// `A[i,h]·B[h,j]` is computed: `ℓ = (h - i - j) mod q`.
+    #[inline]
+    pub fn group_of(&self, i: usize, h: usize, j: usize) -> usize {
+        let q = self.q() as isize;
+        (((h as isize - i as isize - j as isize) % q + q) % q) as usize
+    }
+
+    /// Split a dense matrix into blocks keyed by `(block_row, block_col)`.
+    pub fn split(&self, m: &DenseMatrix) -> Vec<((usize, usize), DenseMatrix)> {
+        assert_eq!(m.rows(), self.side);
+        assert_eq!(m.cols(), self.side);
+        let q = self.q();
+        let bs = self.block_side;
+        let mut out = Vec::with_capacity(q * q);
+        for bi in 0..q {
+            for bj in 0..q {
+                out.push(((bi, bj), m.block(bi, bj, bs, bs)));
+            }
+        }
+        out
+    }
+
+    /// Assemble a full matrix from `(block_row, block_col)`-keyed blocks.
+    /// Panics if any block is missing or duplicated.
+    pub fn assemble(&self, blocks: &[((usize, usize), DenseMatrix)]) -> DenseMatrix {
+        let q = self.q();
+        assert_eq!(blocks.len(), q * q, "expected {} blocks, got {}", q * q, blocks.len());
+        let mut seen = vec![false; q * q];
+        let mut out = DenseMatrix::zeros(self.side, self.side);
+        for ((bi, bj), blk) in blocks {
+            assert!(*bi < q && *bj < q, "block index out of range");
+            assert!(!seen[bi * q + bj], "duplicate block ({bi},{bj})");
+            seen[bi * q + bj] = true;
+            out.set_block(*bi, *bj, blk);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Xoshiro256ss;
+
+    #[test]
+    fn grid_arithmetic() {
+        let g = BlockGrid::new(16, 4);
+        assert_eq!(g.q(), 4);
+        assert_eq!(g.num_blocks(), 16);
+        assert_eq!(g.block_words(), 16);
+        assert_eq!(g.num_products(), 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn indivisible_block_panics() {
+        BlockGrid::new(10, 3);
+    }
+
+    #[test]
+    fn split_assemble_roundtrip() {
+        let mut rng = Xoshiro256ss::new(1);
+        let m = gen::dense_int(12, 12, &mut rng);
+        let g = BlockGrid::new(12, 3);
+        let blocks = g.split(&m);
+        assert_eq!(blocks.len(), 16);
+        assert_eq!(g.assemble(&blocks), m);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate block")]
+    fn assemble_rejects_duplicates() {
+        let g = BlockGrid::new(4, 2);
+        let b = DenseMatrix::zeros(2, 2);
+        let blocks = vec![
+            ((0, 0), b.clone()),
+            ((0, 0), b.clone()),
+            ((1, 0), b.clone()),
+            ((1, 1), b),
+        ];
+        g.assemble(&blocks);
+    }
+
+    #[test]
+    fn rotation_roundtrip() {
+        let g = BlockGrid::new(20, 4); // q = 5
+        for i in 0..5 {
+            for j in 0..5 {
+                for l in 0..5 {
+                    let h = g.group_h(i, j, l);
+                    assert_eq!(g.group_of(i, h, j), l);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn each_block_once_per_group() {
+        // Paper §3.1: "each submatrix of A and B appears exactly once in
+        // each group". For fixed ℓ and block-row i of A, the products in
+        // group ℓ using A[i,h] are those with h=(i+j+ℓ)%q — one per j,
+        // and each (i,h) pair occurs for exactly one j.
+        let g = BlockGrid::new(24, 4); // q = 6
+        let q = g.q();
+        for l in 0..q {
+            let mut a_used = vec![0usize; q * q];
+            let mut b_used = vec![0usize; q * q];
+            for i in 0..q {
+                for j in 0..q {
+                    let h = g.group_h(i, j, l);
+                    a_used[i * q + h] += 1;
+                    b_used[h * q + j] += 1;
+                }
+            }
+            assert!(a_used.iter().all(|&c| c == 1), "A blocks once per group");
+            assert!(b_used.iter().all(|&c| c == 1), "B blocks once per group");
+        }
+    }
+
+    #[test]
+    fn prop_groups_partition_products() {
+        // The q groups together cover every (i,h,j) product exactly once.
+        run_prop("groups partition q^3 products", 8, |case| {
+            let q = 1 + case.size(1, 7);
+            let g = BlockGrid::new(q * 2, 2);
+            assert_eq!(g.q(), q);
+            let mut count = vec![0usize; q * q * q];
+            for l in 0..q {
+                for i in 0..q {
+                    for j in 0..q {
+                        let h = g.group_h(i, j, l);
+                        count[(i * q + h) * q + j] += 1;
+                    }
+                }
+            }
+            if !count.iter().all(|&c| c == 1) {
+                return Err(format!("products not partitioned at q={q}"));
+            }
+            Ok(())
+        });
+    }
+}

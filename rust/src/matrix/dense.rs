@@ -1,0 +1,336 @@
+//! Dense row-major matrices.
+
+use super::semiring::{Arithmetic, Semiring};
+
+/// A dense `rows × cols` matrix of `f32` in row-major layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Matrix filled by `f(row, col)`.
+    pub fn from_fn<F: FnMut(usize, usize) -> f32>(rows: usize, cols: usize, mut f: F) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Build from a row-major vector (length must equal `rows*cols`).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    /// Element assignment.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Row-major backing slice.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable row-major backing slice.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// A single row as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Extract the `br × bc` sub-block whose top-left corner is
+    /// `(bi*br, bj*bc)`.
+    pub fn block(&self, bi: usize, bj: usize, br: usize, bc: usize) -> DenseMatrix {
+        assert!((bi + 1) * br <= self.rows, "block row out of range");
+        assert!((bj + 1) * bc <= self.cols, "block col out of range");
+        let mut out = DenseMatrix::zeros(br, bc);
+        for r in 0..br {
+            let src = (bi * br + r) * self.cols + bj * bc;
+            out.data[r * bc..(r + 1) * bc].copy_from_slice(&self.data[src..src + bc]);
+        }
+        out
+    }
+
+    /// Insert `blk` at block coordinates `(bi, bj)` (block size inferred
+    /// from `blk`).
+    pub fn set_block(&mut self, bi: usize, bj: usize, blk: &DenseMatrix) {
+        let (br, bc) = (blk.rows, blk.cols);
+        assert!((bi + 1) * br <= self.rows, "block row out of range");
+        assert!((bj + 1) * bc <= self.cols, "block col out of range");
+        for r in 0..br {
+            let dst = (bi * br + r) * self.cols + bj * bc;
+            self.data[dst..dst + bc].copy_from_slice(&blk.data[r * bc..(r + 1) * bc]);
+        }
+    }
+
+    /// In-place semiring addition `self ⊕= other`.
+    pub fn add_assign_sr<S: Semiring>(&mut self, other: &DenseMatrix) {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a = S::add(*a, *b);
+        }
+    }
+
+    /// In-place arithmetic addition.
+    pub fn add_assign(&mut self, other: &DenseMatrix) {
+        self.add_assign_sr::<Arithmetic>(other)
+    }
+
+    /// Naive triple-loop semiring multiply — the correctness oracle.
+    pub fn matmul_naive_sr<S: Semiring>(&self, other: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.cols, other.rows, "inner dimensions must agree");
+        let mut out = DenseMatrix::from_fn(self.rows, other.cols, |_, _| S::zero());
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a == S::zero() && S::name() == Arithmetic::name() {
+                    continue; // harmless skip in the arithmetic case
+                }
+                for j in 0..other.cols {
+                    let cur = out.get(i, j);
+                    out.set(i, j, S::add(cur, S::mul(a, other.get(k, j))));
+                }
+            }
+        }
+        out
+    }
+
+    /// Naive arithmetic multiply.
+    pub fn matmul_naive(&self, other: &DenseMatrix) -> DenseMatrix {
+        self.matmul_naive_sr::<Arithmetic>(other)
+    }
+
+    /// Number of non-zero entries (exact zero).
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Max absolute element-wise difference.
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f32 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Approximate size in memory words (the paper's unit for reducer
+    /// size accounting).
+    pub fn words(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::semiring::{BoolOrAnd, MinPlus};
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Xoshiro256ss;
+
+    fn random_int_matrix(r: usize, c: usize, rng: &mut Xoshiro256ss) -> DenseMatrix {
+        DenseMatrix::from_fn(r, c, |_, _| rng.small_int_f32())
+    }
+
+    #[test]
+    fn zeros_and_identity() {
+        let z = DenseMatrix::zeros(3, 4);
+        assert_eq!(z.rows(), 3);
+        assert_eq!(z.cols(), 4);
+        assert_eq!(z.nnz(), 0);
+        let i = DenseMatrix::identity(5);
+        assert_eq!(i.nnz(), 5);
+        assert_eq!(i.get(2, 2), 1.0);
+        assert_eq!(i.get(2, 3), 0.0);
+    }
+
+    #[test]
+    fn identity_is_multiplicative_identity() {
+        let mut rng = Xoshiro256ss::new(1);
+        let a = random_int_matrix(7, 7, &mut rng);
+        let i = DenseMatrix::identity(7);
+        assert_eq!(a.matmul_naive(&i), a);
+        assert_eq!(i.matmul_naive(&a), a);
+    }
+
+    #[test]
+    fn known_product() {
+        let a = DenseMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = DenseMatrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul_naive(&b);
+        assert_eq!(c.as_slice(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn rectangular_product_shapes() {
+        let a = DenseMatrix::zeros(2, 5);
+        let b = DenseMatrix::zeros(5, 3);
+        let c = a.matmul_naive(&b);
+        assert_eq!((c.rows(), c.cols()), (2, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimensions")]
+    fn mismatched_product_panics() {
+        let a = DenseMatrix::zeros(2, 3);
+        let b = DenseMatrix::zeros(2, 3);
+        let _ = a.matmul_naive(&b);
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        let mut rng = Xoshiro256ss::new(2);
+        let a = random_int_matrix(8, 8, &mut rng);
+        let mut out = DenseMatrix::zeros(8, 8);
+        for bi in 0..2 {
+            for bj in 0..2 {
+                let blk = a.block(bi, bj, 4, 4);
+                out.set_block(bi, bj, &blk);
+            }
+        }
+        assert_eq!(a, out);
+    }
+
+    #[test]
+    fn block_contents() {
+        let a = DenseMatrix::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let blk = a.block(1, 1, 2, 2);
+        assert_eq!(blk.as_slice(), &[10.0, 11.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn block_out_of_range_panics() {
+        let a = DenseMatrix::zeros(4, 4);
+        let _ = a.block(2, 0, 3, 3);
+    }
+
+    #[test]
+    fn add_assign_works() {
+        let mut a = DenseMatrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = DenseMatrix::from_vec(1, 3, vec![10.0, 20.0, 30.0]);
+        a.add_assign(&b);
+        assert_eq!(a.as_slice(), &[11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn minplus_multiply_shortest_paths() {
+        // Path graph 0-1-2 with unit weights; A^2 in (min,+) gives the
+        // two-hop distance 0→2 = 2.
+        let inf = f32::INFINITY;
+        let a = DenseMatrix::from_vec(
+            3,
+            3,
+            vec![0.0, 1.0, inf, 1.0, 0.0, 1.0, inf, 1.0, 0.0],
+        );
+        let d2 = a.matmul_naive_sr::<MinPlus>(&a);
+        assert_eq!(d2.get(0, 2), 2.0);
+        assert_eq!(d2.get(0, 1), 1.0);
+        assert_eq!(d2.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn boolean_multiply_reachability() {
+        // Edge 0→1, 1→2: A² has 0→2.
+        let a = DenseMatrix::from_vec(3, 3, vec![0., 1., 0., 0., 0., 1., 0., 0., 0.]);
+        let r = a.matmul_naive_sr::<BoolOrAnd>(&a);
+        assert_eq!(r.get(0, 2), 1.0);
+        assert_eq!(r.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn prop_matmul_distributes_over_add() {
+        run_prop("A(B+C) = AB+AC", 20, |case| {
+            let n = case.size(1, 12);
+            let mut rng = Xoshiro256ss::new(case.rng.next_u64());
+            let a = random_int_matrix(n, n, &mut rng);
+            let b = random_int_matrix(n, n, &mut rng);
+            let c = random_int_matrix(n, n, &mut rng);
+            let mut bc = b.clone();
+            bc.add_assign(&c);
+            let lhs = a.matmul_naive(&bc);
+            let mut rhs = a.matmul_naive(&b);
+            rhs.add_assign(&a.matmul_naive(&c));
+            if lhs != rhs {
+                return Err(format!("mismatch at n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_matmul_associates() {
+        run_prop("(AB)C = A(BC)", 12, |case| {
+            let n = case.size(1, 10);
+            let mut rng = Xoshiro256ss::new(case.rng.next_u64());
+            let a = random_int_matrix(n, n, &mut rng);
+            let b = random_int_matrix(n, n, &mut rng);
+            let c = random_int_matrix(n, n, &mut rng);
+            let lhs = a.matmul_naive(&b).matmul_naive(&c);
+            let rhs = a.matmul_naive(&b.matmul_naive(&c));
+            // Integer entries in [-4,4], n ≤ 10: exact in f32.
+            if lhs != rhs {
+                return Err(format!("mismatch at n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn max_abs_diff_zero_on_equal() {
+        let mut rng = Xoshiro256ss::new(5);
+        let a = random_int_matrix(6, 6, &mut rng);
+        assert_eq!(a.max_abs_diff(&a), 0.0);
+    }
+}

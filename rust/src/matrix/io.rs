@@ -1,0 +1,287 @@
+//! Matrix (de)serialization — the role Hadoop SequenceFiles play in the
+//! paper (§4: "Matrices are represented as SequenceFiles where keys are
+//! triplets or pairs and values are serialized objects representing
+//! blocks").
+//!
+//! Format `M3SQ`: a little-endian binary container of typed records.
+//! Dense blocks store row-major f32; sparse blocks store (row, col,
+//! value) triples. A CRC-free magic/version header guards format drift.
+
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use super::dense::DenseMatrix;
+use super::sparse::CooMatrix;
+
+/// File magic.
+pub const MAGIC: &[u8; 4] = b"M3SQ";
+/// Format version.
+pub const VERSION: u32 = 1;
+
+const KIND_DENSE: u8 = 1;
+const KIND_SPARSE: u8 = 2;
+
+fn write_u32<W: Write>(w: &mut W, v: u32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn write_u64<W: Write>(w: &mut W, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn write_header<W: Write>(w: &mut W, kind: u8) -> io::Result<()> {
+    w.write_all(MAGIC)?;
+    write_u32(w, VERSION)?;
+    w.write_all(&[kind])?;
+    Ok(())
+}
+
+fn read_header<R: Read>(r: &mut R) -> io::Result<u8> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("not an M3SQ file"));
+    }
+    let version = read_u32(r)?;
+    if version != VERSION {
+        return Err(bad("unsupported M3SQ version"));
+    }
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind)?;
+    Ok(kind[0])
+}
+
+/// Serialize a dense matrix.
+pub fn write_dense<W: Write>(w: &mut W, m: &DenseMatrix) -> io::Result<()> {
+    write_header(w, KIND_DENSE)?;
+    write_u64(w, m.rows() as u64)?;
+    write_u64(w, m.cols() as u64)?;
+    for &v in m.as_slice() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Deserialize a dense matrix.
+pub fn read_dense<R: Read>(r: &mut R) -> io::Result<DenseMatrix> {
+    if read_header(r)? != KIND_DENSE {
+        return Err(bad("expected a dense record"));
+    }
+    let rows = read_u64(r)? as usize;
+    let cols = read_u64(r)? as usize;
+    let count = rows
+        .checked_mul(cols)
+        .ok_or_else(|| bad("dense shape overflow"))?;
+    let mut buf = vec![0u8; count * 4];
+    r.read_exact(&mut buf)?;
+    let data: Vec<f32> = buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(DenseMatrix::from_vec(rows, cols, data))
+}
+
+/// Serialize a sparse matrix (COO triples).
+pub fn write_sparse<W: Write>(w: &mut W, m: &CooMatrix) -> io::Result<()> {
+    write_header(w, KIND_SPARSE)?;
+    write_u64(w, m.rows() as u64)?;
+    write_u64(w, m.cols() as u64)?;
+    write_u64(w, m.nnz() as u64)?;
+    for &(r, c, v) in m.entries() {
+        write_u32(w, r)?;
+        write_u32(w, c)?;
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Deserialize a sparse matrix.
+pub fn read_sparse<R: Read>(r: &mut R) -> io::Result<CooMatrix> {
+    if read_header(r)? != KIND_SPARSE {
+        return Err(bad("expected a sparse record"));
+    }
+    let rows = read_u64(r)? as usize;
+    let cols = read_u64(r)? as usize;
+    let nnz = read_u64(r)? as usize;
+    let mut out = CooMatrix::new(rows, cols);
+    for _ in 0..nnz {
+        let row = read_u32(r)? as usize;
+        let col = read_u32(r)? as usize;
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        if row >= rows || col >= cols {
+            return Err(bad("sparse entry out of range"));
+        }
+        out.push(row, col, f32::from_le_bytes(b));
+    }
+    Ok(out)
+}
+
+/// Save a dense matrix to a file.
+pub fn save_dense<P: AsRef<Path>>(path: P, m: &DenseMatrix) -> io::Result<()> {
+    let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+    write_dense(&mut f, m)
+}
+
+/// Load a dense matrix from a file.
+pub fn load_dense<P: AsRef<Path>>(path: P) -> io::Result<DenseMatrix> {
+    let mut f = io::BufReader::new(std::fs::File::open(path)?);
+    read_dense(&mut f)
+}
+
+/// Save a sparse matrix to a file.
+pub fn save_sparse<P: AsRef<Path>>(path: P, m: &CooMatrix) -> io::Result<()> {
+    let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+    write_sparse(&mut f, m)
+}
+
+/// Load a sparse matrix from a file.
+pub fn load_sparse<P: AsRef<Path>>(path: P) -> io::Result<CooMatrix> {
+    let mut f = io::BufReader::new(std::fs::File::open(path)?);
+    read_sparse(&mut f)
+}
+
+/// Parse a MatrixMarket-style text listing `row col value` (1-based,
+/// `%` comments) — for interoperability with standard sparse corpora.
+pub fn parse_matrix_market(text: &str) -> io::Result<CooMatrix> {
+    let mut lines = text.lines().filter(|l| !l.trim_start().starts_with('%'));
+    let header = lines.next().ok_or_else(|| bad("empty matrix market"))?;
+    let dims: Vec<usize> = header
+        .split_whitespace()
+        .map(|t| t.parse().map_err(|_| bad("bad header")))
+        .collect::<io::Result<_>>()?;
+    if dims.len() < 2 {
+        return Err(bad("bad matrix market header"));
+    }
+    let (rows, cols) = (dims[0], dims[1]);
+    let mut out = CooMatrix::new(rows, cols);
+    for line in lines {
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks.is_empty() {
+            continue;
+        }
+        if toks.len() < 2 {
+            return Err(bad("bad matrix market entry"));
+        }
+        let r: usize = toks[0].parse().map_err(|_| bad("bad row"))?;
+        let c: usize = toks[1].parse().map_err(|_| bad("bad col"))?;
+        let v: f32 = if toks.len() > 2 {
+            toks[2].parse().map_err(|_| bad("bad value"))?
+        } else {
+            1.0
+        };
+        if r == 0 || c == 0 || r > rows || c > cols {
+            return Err(bad("matrix market index out of range"));
+        }
+        out.push(r - 1, c - 1, v);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::util::rng::Xoshiro256ss;
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Xoshiro256ss::new(1);
+        let m = gen::dense_int(17, 9, &mut rng);
+        let mut buf = vec![];
+        write_dense(&mut buf, &m).unwrap();
+        let got = read_dense(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, m);
+    }
+
+    #[test]
+    fn sparse_roundtrip() {
+        let mut rng = Xoshiro256ss::new(2);
+        let m = gen::erdos_renyi_coo(64, 0.05, &mut rng);
+        let mut buf = vec![];
+        write_sparse(&mut buf, &m).unwrap();
+        let got = read_sparse(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, m);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("m3-io-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Xoshiro256ss::new(3);
+        let d = gen::dense_int(8, 8, &mut rng);
+        let s = gen::erdos_renyi_coo(32, 0.1, &mut rng);
+        save_dense(dir.join("d.m3"), &d).unwrap();
+        save_sparse(dir.join("s.m3"), &s).unwrap();
+        assert_eq!(load_dense(dir.join("d.m3")).unwrap(), d);
+        assert_eq!(load_sparse(dir.join("s.m3")).unwrap(), s);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = b"NOPE\x01\x00\x00\x00\x01".to_vec();
+        assert!(read_dense(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_kind_mismatch() {
+        let mut buf = vec![];
+        write_dense(&mut buf, &DenseMatrix::zeros(2, 2)).unwrap();
+        assert!(read_sparse(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let mut buf = vec![];
+        write_dense(&mut buf, &DenseMatrix::zeros(4, 4)).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_dense(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_sparse_entry() {
+        let mut buf = vec![];
+        write_header(&mut buf, KIND_SPARSE).unwrap();
+        write_u64(&mut buf, 2).unwrap();
+        write_u64(&mut buf, 2).unwrap();
+        write_u64(&mut buf, 1).unwrap();
+        write_u32(&mut buf, 5).unwrap(); // row 5 ≥ 2
+        write_u32(&mut buf, 0).unwrap();
+        buf.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(read_sparse(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn matrix_market_parses() {
+        let text = "% comment\n3 3 3\n1 1 2.5\n2 3 1.0\n3 2\n";
+        let m = parse_matrix_market(text).unwrap();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.to_dense().get(0, 0), 2.5);
+        assert_eq!(m.to_dense().get(1, 2), 1.0);
+        assert_eq!(m.to_dense().get(2, 1), 1.0); // implicit value
+    }
+
+    #[test]
+    fn matrix_market_rejects_garbage() {
+        assert!(parse_matrix_market("").is_err());
+        assert!(parse_matrix_market("3 3 1\n9 9 1.0\n").is_err());
+        assert!(parse_matrix_market("3 3 1\n0 1 1.0\n").is_err());
+    }
+}

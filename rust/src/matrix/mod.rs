@@ -1,0 +1,18 @@
+//! Matrix substrate: dense and sparse representations, block
+//! partitioning, semirings, generators, and reference multiplies.
+//!
+//! The paper multiplies `√n × √n` matrices over a general semiring
+//! (Strassen-like algorithms are ruled out). Values here are `f32`
+//! (see DESIGN.md §7); correctness tests use small integer entries so
+//! products are exactly representable and can be compared with `==`.
+
+pub mod blocked;
+pub mod dense;
+pub mod gen;
+pub mod io;
+pub mod semiring;
+pub mod sparse;
+
+pub use blocked::BlockGrid;
+pub use dense::DenseMatrix;
+pub use sparse::{CooMatrix, CsrMatrix};

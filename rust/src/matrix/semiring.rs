@@ -1,0 +1,181 @@
+//! Semiring abstraction.
+//!
+//! The paper studies matrix multiplication *in a general semiring*,
+//! explicitly ruling out Strassen-like algorithms (which need a ring).
+//! The M3 algorithms only use `⊕` (associative, commutative, with
+//! identity `zero`) and `⊗` (associative, with identity `one`,
+//! distributing over `⊕`), so they are generic over this trait.
+//!
+//! The arithmetic `(+, ×)` semiring is the hot path (lowered to the
+//! XLA/Pallas artifact); `(min, +)` (shortest paths) and `(∨, ∧)`
+//! (transitive closure) demonstrate generality and are exercised by the
+//! examples and tests.
+
+/// A semiring over `f32`-representable elements.
+pub trait Semiring: Copy + Send + Sync + 'static {
+    /// Identity of `⊕` (and annihilator of `⊗`).
+    fn zero() -> f32;
+    /// Identity of `⊗`.
+    fn one() -> f32;
+    /// The additive operation `⊕`.
+    fn add(a: f32, b: f32) -> f32;
+    /// The multiplicative operation `⊗`.
+    fn mul(a: f32, b: f32) -> f32;
+    /// Human-readable name.
+    fn name() -> &'static str;
+}
+
+/// The standard arithmetic semiring `(+, ×)`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Arithmetic;
+
+impl Semiring for Arithmetic {
+    #[inline]
+    fn zero() -> f32 {
+        0.0
+    }
+    #[inline]
+    fn one() -> f32 {
+        1.0
+    }
+    #[inline]
+    fn add(a: f32, b: f32) -> f32 {
+        a + b
+    }
+    #[inline]
+    fn mul(a: f32, b: f32) -> f32 {
+        a * b
+    }
+    fn name() -> &'static str {
+        "arithmetic(+,*)"
+    }
+}
+
+/// The tropical semiring `(min, +)`; `zero = +∞`, `one = 0`.
+/// Iterated multiplication computes all-pairs shortest paths.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MinPlus;
+
+impl Semiring for MinPlus {
+    #[inline]
+    fn zero() -> f32 {
+        f32::INFINITY
+    }
+    #[inline]
+    fn one() -> f32 {
+        0.0
+    }
+    #[inline]
+    fn add(a: f32, b: f32) -> f32 {
+        a.min(b)
+    }
+    #[inline]
+    fn mul(a: f32, b: f32) -> f32 {
+        a + b
+    }
+    fn name() -> &'static str {
+        "tropical(min,+)"
+    }
+}
+
+/// The boolean semiring `(∨, ∧)` encoded on `{0.0, 1.0}`.
+/// Iterated multiplication computes reachability / transitive closure.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BoolOrAnd;
+
+impl Semiring for BoolOrAnd {
+    #[inline]
+    fn zero() -> f32 {
+        0.0
+    }
+    #[inline]
+    fn one() -> f32 {
+        1.0
+    }
+    #[inline]
+    fn add(a: f32, b: f32) -> f32 {
+        if a != 0.0 || b != 0.0 {
+            1.0
+        } else {
+            0.0
+        }
+    }
+    #[inline]
+    fn mul(a: f32, b: f32) -> f32 {
+        if a != 0.0 && b != 0.0 {
+            1.0
+        } else {
+            0.0
+        }
+    }
+    fn name() -> &'static str {
+        "boolean(or,and)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    fn check_axioms<S: Semiring>(vals: &[f32]) {
+        for &a in vals {
+            // identities
+            assert_eq!(S::add(a, S::zero()), a, "{}: a ⊕ 0 = a", S::name());
+            assert_eq!(S::mul(a, S::one()), a, "{}: a ⊗ 1 = a", S::name());
+            assert_eq!(S::mul(S::zero(), a), S::zero(), "{}: 0 ⊗ a = 0", S::name());
+            for &b in vals {
+                assert_eq!(S::add(a, b), S::add(b, a), "{}: ⊕ commutes", S::name());
+                for &c in vals {
+                    assert_eq!(
+                        S::add(S::add(a, b), c),
+                        S::add(a, S::add(b, c)),
+                        "{}: ⊕ associates",
+                        S::name()
+                    );
+                    assert_eq!(
+                        S::mul(S::mul(a, b), c),
+                        S::mul(a, S::mul(b, c)),
+                        "{}: ⊗ associates",
+                        S::name()
+                    );
+                    assert_eq!(
+                        S::mul(a, S::add(b, c)),
+                        S::add(S::mul(a, b), S::mul(a, c)),
+                        "{}: left distributivity",
+                        S::name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic_axioms() {
+        check_axioms::<Arithmetic>(&[-2.0, 0.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn minplus_axioms() {
+        check_axioms::<MinPlus>(&[0.0, 1.0, 5.0, f32::INFINITY]);
+    }
+
+    #[test]
+    fn boolean_axioms() {
+        check_axioms::<BoolOrAnd>(&[0.0, 1.0]);
+    }
+
+    #[test]
+    fn boolean_is_closed() {
+        run_prop("bool closed", 50, |case| {
+            let a = if case.rng.bernoulli(0.5) { 1.0 } else { 0.0 };
+            let b = if case.rng.bernoulli(0.5) { 1.0 } else { 0.0 };
+            for v in [BoolOrAnd::add(a, b), BoolOrAnd::mul(a, b)] {
+                if v != 0.0 && v != 1.0 {
+                    return Err(format!("not boolean: {v}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,445 @@
+//! Sparse matrices: COO (construction / interchange) and CSR
+//! (computation), plus a Gustavson-style sequential SpGEMM used by the
+//! sparse reducers (the paper used MTJ for this role; see DESIGN.md §2).
+
+use super::dense::DenseMatrix;
+use super::semiring::{Arithmetic, Semiring};
+
+/// Coordinate-format sparse matrix (row, col, value) triples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CooMatrix {
+    rows: usize,
+    cols: usize,
+    entries: Vec<(u32, u32, f32)>,
+}
+
+impl CooMatrix {
+    /// Empty matrix of the given shape.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows <= u32::MAX as usize && cols <= u32::MAX as usize);
+        Self {
+            rows,
+            cols,
+            entries: vec![],
+        }
+    }
+
+    /// Construct from triples.
+    pub fn from_entries(rows: usize, cols: usize, entries: Vec<(u32, u32, f32)>) -> Self {
+        for &(r, c, _) in &entries {
+            assert!((r as usize) < rows && (c as usize) < cols, "entry out of range");
+        }
+        Self {
+            rows,
+            cols,
+            entries,
+        }
+    }
+
+    /// Append one entry (no dedup; duplicates are summed on CSR
+    /// conversion).
+    pub fn push(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.entries.push((r as u32, c as u32, v));
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// The stored triples.
+    pub fn entries(&self) -> &[(u32, u32, f32)] {
+        &self.entries
+    }
+
+    /// Density of stored entries.
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+        }
+    }
+
+    /// Convert to CSR, summing duplicate coordinates (semiring ⊕).
+    pub fn to_csr_sr<S: Semiring>(&self) -> CsrMatrix {
+        let mut triples = self.entries.clone();
+        triples.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        let mut col_idx = Vec::with_capacity(triples.len());
+        let mut values = Vec::with_capacity(triples.len());
+        row_ptr.push(0u32);
+        let mut cur_row = 0usize;
+        for &(r, c, v) in &triples {
+            while cur_row < r as usize {
+                row_ptr.push(col_idx.len() as u32);
+                cur_row += 1;
+            }
+            if let Some(&last_c) = col_idx.last() {
+                if row_ptr.last().copied().unwrap() as usize != col_idx.len() && last_c == c {
+                    let lv = values.last_mut().unwrap();
+                    *lv = S::add(*lv, v);
+                    continue;
+                }
+            }
+            col_idx.push(c);
+            values.push(v);
+        }
+        while cur_row < self.rows {
+            row_ptr.push(col_idx.len() as u32);
+            cur_row += 1;
+        }
+        CsrMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr,
+            col_idx,
+            values,
+        }
+    }
+
+    /// Convert to CSR in the arithmetic semiring.
+    pub fn to_csr(&self) -> CsrMatrix {
+        self.to_csr_sr::<Arithmetic>()
+    }
+
+    /// Densify (for small correctness checks only).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut d = DenseMatrix::zeros(self.rows, self.cols);
+        for &(r, c, v) in &self.entries {
+            let cur = d.get(r as usize, c as usize);
+            d.set(r as usize, c as usize, cur + v);
+        }
+        d
+    }
+
+    /// Extract the sparse sub-block at block coordinates `(bi, bj)` with
+    /// block shape `br × bc`, with indices rebased to the block.
+    pub fn block(&self, bi: usize, bj: usize, br: usize, bc: usize) -> CooMatrix {
+        let (r0, c0) = (bi * br, bj * bc);
+        assert!(r0 + br <= self.rows && c0 + bc <= self.cols, "block out of range");
+        let entries = self
+            .entries
+            .iter()
+            .filter(|&&(r, c, _)| {
+                (r as usize) >= r0
+                    && (r as usize) < r0 + br
+                    && (c as usize) >= c0
+                    && (c as usize) < c0 + bc
+            })
+            .map(|&(r, c, v)| (r - r0 as u32, c - c0 as u32, v))
+            .collect();
+        CooMatrix {
+            rows: br,
+            cols: bc,
+            entries,
+        }
+    }
+
+    /// Split into a `q × q` grid of blocks of shape `br × bc` in one
+    /// pass (O(nnz), unlike calling [`CooMatrix::block`] q² times).
+    pub fn split_blocks(&self, br: usize, bc: usize) -> Vec<((usize, usize), CooMatrix)> {
+        assert!(self.rows % br == 0 && self.cols % bc == 0, "block size must divide shape");
+        let qr = self.rows / br;
+        let qc = self.cols / bc;
+        let mut blocks: Vec<CooMatrix> = (0..qr * qc).map(|_| CooMatrix::new(br, bc)).collect();
+        for &(r, c, v) in &self.entries {
+            let (bi, bj) = (r as usize / br, c as usize / bc);
+            blocks[bi * qc + bj].push(r as usize % br, c as usize % bc, v);
+        }
+        blocks
+            .into_iter()
+            .enumerate()
+            .map(|(k, b)| ((k / qc, k % qc), b))
+            .collect()
+    }
+}
+
+/// Compressed sparse row matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<u32>,
+    col_idx: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// (column, value) pairs of row `i`.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let lo = self.row_ptr[i] as usize;
+        let hi = self.row_ptr[i + 1] as usize;
+        self.col_idx[lo..hi]
+            .iter()
+            .zip(&self.values[lo..hi])
+            .map(|(&c, &v)| (c as usize, v))
+    }
+
+    /// Convert back to COO.
+    pub fn to_coo(&self) -> CooMatrix {
+        let mut out = CooMatrix::new(self.rows, self.cols);
+        for i in 0..self.rows {
+            for (c, v) in self.row(i) {
+                out.push(i, c, v);
+            }
+        }
+        out
+    }
+
+    /// Densify (small checks only).
+    pub fn to_dense(&self) -> DenseMatrix {
+        self.to_coo().to_dense()
+    }
+
+    /// Sequential SpGEMM `C = A ⊗ B` via Gustavson's algorithm with a
+    /// dense accumulator + touched-list per output row. This is the
+    /// sparse reducer's local multiply.
+    pub fn spgemm_sr<S: Semiring>(&self, other: &CsrMatrix) -> CsrMatrix {
+        assert_eq!(self.cols, other.rows, "inner dimensions must agree");
+        let n_out_cols = other.cols;
+        let mut acc: Vec<f32> = vec![S::zero(); n_out_cols];
+        let mut touched: Vec<u32> = Vec::new();
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        let mut col_idx: Vec<u32> = vec![];
+        let mut values: Vec<f32> = vec![];
+        row_ptr.push(0u32);
+        for i in 0..self.rows {
+            touched.clear();
+            for (k, a) in self.row(i) {
+                for (j, b) in other.row(k) {
+                    let cur = acc[j];
+                    if cur == S::zero() && !touched.contains(&(j as u32)) {
+                        touched.push(j as u32);
+                    }
+                    acc[j] = S::add(cur, S::mul(a, b));
+                }
+            }
+            touched.sort_unstable();
+            for &j in &touched {
+                let v = acc[j as usize];
+                if v != S::zero() {
+                    col_idx.push(j);
+                    values.push(v);
+                }
+                acc[j as usize] = S::zero();
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        CsrMatrix {
+            rows: self.rows,
+            cols: n_out_cols,
+            row_ptr,
+            col_idx,
+            values,
+        }
+    }
+
+    /// Arithmetic SpGEMM.
+    pub fn spgemm(&self, other: &CsrMatrix) -> CsrMatrix {
+        self.spgemm_sr::<Arithmetic>(other)
+    }
+
+    /// Semiring sparse addition `self ⊕ other`.
+    pub fn add_sr<S: Semiring>(&self, other: &CsrMatrix) -> CsrMatrix {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        let mut out = CooMatrix::new(self.rows, self.cols);
+        for i in 0..self.rows {
+            for (c, v) in self.row(i) {
+                out.push(i, c, v);
+            }
+            for (c, v) in other.row(i) {
+                out.push(i, c, v);
+            }
+        }
+        // to_csr sums duplicates with ⊕ and keeps zeros out via spgemm's
+        // convention; explicit zeros from cancellation are retained —
+        // they are harmless and rare with our integer test entries.
+        out.to_csr_sr::<S>()
+    }
+
+    /// Arithmetic sparse addition.
+    pub fn add(&self, other: &CsrMatrix) -> CsrMatrix {
+        self.add_sr::<Arithmetic>(other)
+    }
+
+    /// Memory words used (values + index overhead in 32-bit words).
+    pub fn words(&self) -> usize {
+        self.values.len() * 2 + self.row_ptr.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Xoshiro256ss;
+
+    fn random_coo(rows: usize, cols: usize, nnz: usize, rng: &mut Xoshiro256ss) -> CooMatrix {
+        let mut m = CooMatrix::new(rows, cols);
+        for _ in 0..nnz {
+            let r = rng.next_usize(rows);
+            let c = rng.next_usize(cols);
+            m.push(r, c, rng.small_int_f32());
+        }
+        m
+    }
+
+    #[test]
+    fn coo_roundtrip_csr() {
+        let mut rng = Xoshiro256ss::new(1);
+        let m = random_coo(10, 12, 30, &mut rng);
+        let d1 = m.to_dense();
+        let d2 = m.to_csr().to_dense();
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn csr_sums_duplicates() {
+        let mut m = CooMatrix::new(2, 2);
+        m.push(0, 1, 2.0);
+        m.push(0, 1, 3.0);
+        let csr = m.to_csr();
+        assert_eq!(csr.nnz(), 1);
+        assert_eq!(csr.to_dense().get(0, 1), 5.0);
+    }
+
+    #[test]
+    fn csr_row_iteration_sorted() {
+        let mut m = CooMatrix::new(1, 5);
+        m.push(0, 4, 1.0);
+        m.push(0, 0, 2.0);
+        m.push(0, 2, 3.0);
+        let csr = m.to_csr();
+        let cols: Vec<usize> = csr.row(0).map(|(c, _)| c).collect();
+        assert_eq!(cols, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn spgemm_matches_dense_small() {
+        let mut rng = Xoshiro256ss::new(2);
+        let a = random_coo(8, 9, 20, &mut rng);
+        let b = random_coo(9, 7, 20, &mut rng);
+        let sparse = a.to_csr().spgemm(&b.to_csr()).to_dense();
+        let dense = a.to_dense().matmul_naive(&b.to_dense());
+        assert_eq!(sparse.max_abs_diff(&dense), 0.0);
+    }
+
+    #[test]
+    fn prop_spgemm_matches_dense() {
+        run_prop("spgemm == dense matmul", 25, |case| {
+            let n = case.size(1, 24);
+            let mut rng = Xoshiro256ss::new(case.rng.next_u64());
+            let nnz = rng.next_usize(3 * n + 1);
+            let a = random_coo(n, n, nnz, &mut rng);
+            let b = random_coo(n, n, nnz, &mut rng);
+            let s = a.to_csr().spgemm(&b.to_csr()).to_dense();
+            let d = a.to_dense().matmul_naive(&b.to_dense());
+            if s.max_abs_diff(&d) != 0.0 {
+                return Err(format!("mismatch at n={n} nnz={nnz}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sparse_add_matches_dense() {
+        let mut rng = Xoshiro256ss::new(3);
+        let a = random_coo(6, 6, 12, &mut rng);
+        let b = random_coo(6, 6, 12, &mut rng);
+        let s = a.to_csr().add(&b.to_csr()).to_dense();
+        let mut d = a.to_dense();
+        d.add_assign(&b.to_dense());
+        assert_eq!(s.max_abs_diff(&d), 0.0);
+    }
+
+    #[test]
+    fn block_extraction_rebases_indices() {
+        let mut m = CooMatrix::new(4, 4);
+        m.push(2, 3, 7.0);
+        let blk = m.block(1, 1, 2, 2);
+        assert_eq!(blk.nnz(), 1);
+        assert_eq!(blk.entries()[0], (0, 1, 7.0));
+    }
+
+    #[test]
+    fn split_blocks_partition_preserves_all_entries() {
+        let mut rng = Xoshiro256ss::new(4);
+        let m = random_coo(12, 12, 40, &mut rng);
+        let blocks = m.split_blocks(4, 4);
+        assert_eq!(blocks.len(), 9);
+        let total: usize = blocks.iter().map(|(_, b)| b.nnz()).sum();
+        assert_eq!(total, m.nnz());
+        // Reassemble and compare densely.
+        let mut d = DenseMatrix::zeros(12, 12);
+        for ((bi, bj), b) in &blocks {
+            let mut sub = DenseMatrix::zeros(4, 4);
+            sub.add_assign(&b.to_dense());
+            d.set_block(*bi, *bj, &sub);
+        }
+        assert_eq!(d, m.to_dense());
+    }
+
+    #[test]
+    fn spgemm_output_density_er() {
+        // Product of two ER matrices with delta << 1/n^(1/4) has expected
+        // output density ~ delta^2 * side (paper §2).
+        let side = 512;
+        let delta = 8.0 / side as f64; // 8 nnz per row
+        let mut rng = Xoshiro256ss::new(5);
+        let a = gen::erdos_renyi_coo(side, delta, &mut rng);
+        let b = gen::erdos_renyi_coo(side, delta, &mut rng);
+        let c = a.to_csr().spgemm(&b.to_csr());
+        let expect = delta * delta * side as f64;
+        let got = c.to_coo().density();
+        assert!(
+            (got - expect).abs() / expect < 0.35,
+            "output density {got} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn empty_matrix_operations() {
+        let a = CooMatrix::new(3, 3).to_csr();
+        let b = CooMatrix::new(3, 3).to_csr();
+        assert_eq!(a.spgemm(&b).nnz(), 0);
+        assert_eq!(a.add(&b).nnz(), 0);
+    }
+
+    #[test]
+    fn words_accounting() {
+        let mut m = CooMatrix::new(4, 4);
+        m.push(0, 0, 1.0);
+        m.push(1, 1, 1.0);
+        let csr = m.to_csr();
+        assert_eq!(csr.words(), 2 * 2 + 5);
+    }
+}

@@ -1,0 +1,126 @@
+//! AOT artifact discovery.
+//!
+//! `make artifacts` runs `python/compile/aot.py`, which lowers the L2
+//! JAX reducer computation (wrapping the L1 Pallas kernel) to **HLO
+//! text** — one file per supported block side — into `artifacts/`:
+//!
+//! ```text
+//! artifacts/matmul_acc_256.hlo.txt     # f(a,b,c) = (c + a·b,)  256×256
+//! artifacts/matmul_acc_512.hlo.txt
+//! ...
+//! ```
+//!
+//! HLO *text* (not serialized protos) is the interchange format: jax
+//! ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see DESIGN.md and
+//! /opt/xla-example/README.md).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Prefix of dense multiply-accumulate artifacts.
+pub const MATMUL_ACC_PREFIX: &str = "matmul_acc_";
+/// Artifact file suffix.
+pub const HLO_SUFFIX: &str = ".hlo.txt";
+
+/// The set of AOT artifacts found on disk: block side → file path.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactSet {
+    matmul_acc: BTreeMap<usize, PathBuf>,
+}
+
+impl ArtifactSet {
+    /// Scan `dir` for artifacts. Missing directory yields an empty set
+    /// (the caller falls back to the native backend).
+    pub fn discover<P: AsRef<Path>>(dir: P) -> Self {
+        let mut set = ArtifactSet::default();
+        let entries = match std::fs::read_dir(dir.as_ref()) {
+            Ok(e) => e,
+            Err(_) => return set,
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(side) = parse_matmul_acc_name(&name) {
+                set.matmul_acc.insert(side, entry.path());
+            }
+        }
+        set
+    }
+
+    /// Path of the multiply-accumulate artifact for `side`, if present.
+    pub fn matmul_acc(&self, side: usize) -> Option<&Path> {
+        self.matmul_acc.get(&side).map(|p| p.as_path())
+    }
+
+    /// All available block sides, ascending.
+    pub fn sides(&self) -> Vec<usize> {
+        self.matmul_acc.keys().copied().collect()
+    }
+
+    /// True if no artifacts were found.
+    pub fn is_empty(&self) -> bool {
+        self.matmul_acc.is_empty()
+    }
+
+    /// The conventional artifact file name for a block side.
+    pub fn file_name(side: usize) -> String {
+        format!("{MATMUL_ACC_PREFIX}{side}{HLO_SUFFIX}")
+    }
+}
+
+/// Parse `matmul_acc_<side>.hlo.txt` → `side`.
+fn parse_matmul_acc_name(name: &str) -> Option<usize> {
+    let rest = name.strip_prefix(MATMUL_ACC_PREFIX)?;
+    let side = rest.strip_suffix(HLO_SUFFIX)?;
+    side.parse().ok()
+}
+
+/// Default artifacts directory: `$M3_ARTIFACTS` or `artifacts/` next to
+/// the current working directory.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("M3_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_artifact_names() {
+        assert_eq!(parse_matmul_acc_name("matmul_acc_256.hlo.txt"), Some(256));
+        assert_eq!(parse_matmul_acc_name("matmul_acc_1.hlo.txt"), Some(1));
+        assert_eq!(parse_matmul_acc_name("matmul_acc_x.hlo.txt"), None);
+        assert_eq!(parse_matmul_acc_name("other_256.hlo.txt"), None);
+        assert_eq!(parse_matmul_acc_name("matmul_acc_256.txt"), None);
+    }
+
+    #[test]
+    fn file_name_roundtrips() {
+        let n = ArtifactSet::file_name(512);
+        assert_eq!(parse_matmul_acc_name(&n), Some(512));
+    }
+
+    #[test]
+    fn discover_missing_dir_is_empty() {
+        let set = ArtifactSet::discover("/nonexistent/path/xyz");
+        assert!(set.is_empty());
+        assert!(set.matmul_acc(256).is_none());
+    }
+
+    #[test]
+    fn discover_finds_files() {
+        let dir = std::env::temp_dir().join(format!("m3-artifacts-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("matmul_acc_128.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("matmul_acc_256.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("readme.md"), "x").unwrap();
+        let set = ArtifactSet::discover(&dir);
+        assert_eq!(set.sides(), vec![128, 256]);
+        assert!(set.matmul_acc(128).is_some());
+        assert!(set.matmul_acc(64).is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,75 @@
+//! Local-multiply runtime.
+//!
+//! Each M3 reducer performs one *local multiply* — the paper used JBLAS
+//! (native BLAS) for dense blocks and MTJ for sparse ones. Here the
+//! dense hot path is an AOT-compiled JAX/Pallas kernel executed through
+//! the PJRT C API ([`xla_backend`]); a hand-written blocked GEMM
+//! ([`native`]) serves as fallback and performance baseline, and the
+//! naive triple loop is the correctness oracle. All backends implement
+//! [`LocalMultiply`], so algorithms are backend-agnostic and Python is
+//! never on the request path.
+
+pub mod artifacts;
+pub mod native;
+pub mod xla_backend;
+
+use std::time::Duration;
+
+use crate::matrix::DenseMatrix;
+
+/// A backend that computes the fused reducer kernel `C + A·B` for
+/// square dense blocks (the arithmetic-semiring hot path).
+pub trait LocalMultiply: Send + Sync {
+    /// Return `c + a·b`. Shapes: `a: s×t`, `b: t×u`, `c: s×u`.
+    fn multiply_acc(&self, a: &DenseMatrix, b: &DenseMatrix, c: &DenseMatrix) -> DenseMatrix;
+
+    /// Backend name for logs and benchmarks.
+    fn name(&self) -> &'static str;
+
+    /// Cumulative time spent inside the kernel, if the backend tracks it.
+    fn kernel_time(&self) -> Duration {
+        Duration::ZERO
+    }
+}
+
+/// Naive triple-loop oracle backend.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NaiveMultiply;
+
+impl LocalMultiply for NaiveMultiply {
+    fn multiply_acc(&self, a: &DenseMatrix, b: &DenseMatrix, c: &DenseMatrix) -> DenseMatrix {
+        let mut out = a.matmul_naive(b);
+        out.add_assign(c);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::util::rng::Xoshiro256ss;
+
+    #[test]
+    fn naive_multiply_acc_known() {
+        let a = DenseMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = DenseMatrix::identity(2);
+        let c = DenseMatrix::from_vec(2, 2, vec![10.0, 10.0, 10.0, 10.0]);
+        let out = NaiveMultiply.multiply_acc(&a, &b, &c);
+        assert_eq!(out.as_slice(), &[11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn naive_rectangular() {
+        let mut rng = Xoshiro256ss::new(1);
+        let a = gen::dense_int(3, 5, &mut rng);
+        let b = gen::dense_int(5, 2, &mut rng);
+        let c = DenseMatrix::zeros(3, 2);
+        let out = NaiveMultiply.multiply_acc(&a, &b, &c);
+        assert_eq!(out, a.matmul_naive(&b));
+    }
+}

@@ -1,0 +1,147 @@
+//! Hand-written blocked GEMM backend.
+//!
+//! Row-major `i-k-j` loop order: the innermost loop walks contiguous
+//! rows of B and C, which the compiler auto-vectorises. Serves as the
+//! fallback when no XLA artifacts are present and as the baseline the
+//! XLA backend is benchmarked against (§Perf in EXPERIMENTS.md).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use super::LocalMultiply;
+use crate::matrix::DenseMatrix;
+
+/// Blocked/vectorised f32 GEMM with kernel-time tracking.
+#[derive(Debug, Default)]
+pub struct NativeMultiply {
+    nanos: AtomicU64,
+}
+
+impl NativeMultiply {
+    /// New backend.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// `c += a·b` on raw row-major slices.
+///
+/// `a`: `m×k`, `b`: `k×n`, `c`: `m×n`. The k-loop is tiled so the active
+/// rows of `b` stay in cache across the vectorised j-loop.
+pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    const KB: usize = 64; // k-tile
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KB).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                // Vectorisable fused multiply-add over the row.
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+impl LocalMultiply for NativeMultiply {
+    fn multiply_acc(&self, a: &DenseMatrix, b: &DenseMatrix, c: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(a.cols(), b.rows(), "inner dimensions must agree");
+        assert_eq!(c.rows(), a.rows());
+        assert_eq!(c.cols(), b.cols());
+        let t0 = Instant::now();
+        let mut out = c.clone();
+        gemm_acc(
+            a.rows(),
+            a.cols(),
+            b.cols(),
+            a.as_slice(),
+            b.as_slice(),
+            out.as_mut_slice(),
+        );
+        self.nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "native-gemm"
+    }
+
+    fn kernel_time(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::runtime::NaiveMultiply;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Xoshiro256ss;
+
+    #[test]
+    fn matches_naive_square() {
+        let mut rng = Xoshiro256ss::new(1);
+        for n in [1, 2, 7, 16, 33, 64] {
+            let a = gen::dense_int(n, n, &mut rng);
+            let b = gen::dense_int(n, n, &mut rng);
+            let c = gen::dense_int(n, n, &mut rng);
+            let fast = NativeMultiply::new().multiply_acc(&a, &b, &c);
+            let slow = NaiveMultiply.multiply_acc(&a, &b, &c);
+            assert_eq!(fast, slow, "n={n}");
+        }
+    }
+
+    #[test]
+    fn prop_matches_naive_rectangular() {
+        run_prop("native gemm == naive", 20, |case| {
+            let m = 1 + case.rng.next_usize(20);
+            let k = 1 + case.rng.next_usize(80); // cross the KB=64 tile
+            let n = 1 + case.rng.next_usize(20);
+            let mut rng = Xoshiro256ss::new(case.rng.next_u64());
+            let a = gen::dense_int(m, k, &mut rng);
+            let b = gen::dense_int(k, n, &mut rng);
+            let c = gen::dense_int(m, n, &mut rng);
+            let fast = NativeMultiply::new().multiply_acc(&a, &b, &c);
+            let slow = NaiveMultiply.multiply_acc(&a, &b, &c);
+            if fast != slow {
+                return Err(format!("mismatch at {m}x{k}x{n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn accumulates_into_c() {
+        let a = DenseMatrix::identity(3);
+        let b = DenseMatrix::identity(3);
+        let c = DenseMatrix::from_fn(3, 3, |_, _| 5.0);
+        let out = NativeMultiply::new().multiply_acc(&a, &b, &c);
+        assert_eq!(out.get(0, 0), 6.0);
+        assert_eq!(out.get(0, 1), 5.0);
+    }
+
+    #[test]
+    fn tracks_kernel_time() {
+        let backend = NativeMultiply::new();
+        let mut rng = Xoshiro256ss::new(2);
+        let a = gen::dense_int(64, 64, &mut rng);
+        let b = gen::dense_int(64, 64, &mut rng);
+        let c = DenseMatrix::zeros(64, 64);
+        let _ = backend.multiply_acc(&a, &b, &c);
+        assert!(backend.kernel_time() > Duration::ZERO);
+    }
+}

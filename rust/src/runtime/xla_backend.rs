@@ -1,0 +1,321 @@
+//! PJRT/XLA local-multiply backend.
+//!
+//! Loads the AOT HLO-text artifacts produced by `python/compile/aot.py`,
+//! compiles them on PJRT CPU clients, and serves `C + A·B` requests from
+//! the reduce hot path.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and thread-confined, so
+//! the backend runs a small pool of *kernel server* threads — each owns
+//! its own client and compiled executables — and dispatches requests
+//! round-robin over channels. This keeps [`XlaMultiply`] `Send + Sync`
+//! for the engine's worker pool while compiling each artifact once per
+//! server. Block sides without an artifact fall back to the native GEMM.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::artifacts::ArtifactSet;
+use super::native::NativeMultiply;
+use super::LocalMultiply;
+use crate::matrix::DenseMatrix;
+
+/// A kernel request: square blocks `a`, `b`, `c` of side `side`, reply
+/// with the row-major result of `c + a·b`.
+struct Request {
+    side: usize,
+    a: Vec<f32>,
+    b: Vec<f32>,
+    c: Vec<f32>,
+    reply: Sender<Result<Vec<f32>, String>>,
+}
+
+/// PJRT-backed [`LocalMultiply`] with native fallback.
+pub struct XlaMultiply {
+    servers: Vec<Mutex<Sender<Request>>>,
+    next: AtomicUsize,
+    sides: Vec<usize>,
+    fallback: NativeMultiply,
+    nanos: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl XlaMultiply {
+    /// Load all artifacts in `dir` and spin up `num_servers` kernel
+    /// server threads. Errors if the directory has no artifacts or any
+    /// artifact fails to compile.
+    pub fn load(dir: impl Into<PathBuf>, num_servers: usize) -> Result<Self> {
+        let dir = dir.into();
+        let set = ArtifactSet::discover(&dir);
+        anyhow::ensure!(
+            !set.is_empty(),
+            "no artifacts found in {} — run `make artifacts`",
+            dir.display()
+        );
+        let sides = set.sides();
+        let num_servers = num_servers.max(1);
+        let mut servers = Vec::with_capacity(num_servers);
+        for sid in 0..num_servers {
+            let (tx, rx) = channel::<Request>();
+            let set = set.clone();
+            let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+            std::thread::Builder::new()
+                .name(format!("xla-kernel-{sid}"))
+                .spawn(move || {
+                    // Build client + executables inside the thread
+                    // (thread-confined Rc internals).
+                    let built = build_executables(&set);
+                    match built {
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(format!("{e:#}")));
+                        }
+                        Ok((client, exes)) => {
+                            let _ = ready_tx.send(Ok(()));
+                            while let Ok(req) = rx.recv() {
+                                let res = run_kernel(&client, &exes, &req);
+                                let _ = req.reply.send(res);
+                            }
+                        }
+                    }
+                })
+                .context("spawning kernel server")?;
+            ready_rx
+                .recv()
+                .context("kernel server died before ready")?
+                .map_err(|e| anyhow::anyhow!("kernel server {sid} failed to initialise: {e}"))?;
+            servers.push(Mutex::new(tx));
+        }
+        Ok(Self {
+            servers,
+            next: AtomicUsize::new(0),
+            sides,
+            fallback: NativeMultiply::new(),
+            nanos: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    /// Load with server count = available parallelism (capped at 4:
+    /// PJRT CPU already parallelises internally).
+    pub fn load_default(dir: impl Into<PathBuf>) -> Result<Self> {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .min(4);
+        Self::load(dir, n)
+    }
+
+    /// Block sides with a compiled artifact.
+    pub fn sides(&self) -> &[usize] {
+        &self.sides
+    }
+
+    /// Number of requests served by XLA (vs native fallback).
+    pub fn xla_hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Number of requests that fell back to the native GEMM.
+    pub fn native_misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    fn supported(&self, a: &DenseMatrix, b: &DenseMatrix, c: &DenseMatrix) -> Option<usize> {
+        let s = a.rows();
+        if a.cols() == s
+            && b.rows() == s
+            && b.cols() == s
+            && c.rows() == s
+            && c.cols() == s
+            && self.sides.contains(&s)
+        {
+            Some(s)
+        } else {
+            None
+        }
+    }
+}
+
+/// Compile every artifact on a fresh CPU client.
+#[allow(clippy::type_complexity)]
+fn build_executables(
+    set: &ArtifactSet,
+) -> Result<(xla::PjRtClient, BTreeMap<usize, xla::PjRtLoadedExecutable>)> {
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+    let mut exes = BTreeMap::new();
+    for side in set.sides() {
+        let path = set.matmul_acc(side).unwrap();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile side {side}: {e:?}"))?;
+        exes.insert(side, exe);
+    }
+    Ok((client, exes))
+}
+
+/// Execute one request on the server's executables.
+///
+/// Inputs go host→device via `buffer_from_host_buffer` (one copy,
+/// avoiding the literal `vec1` + `reshape` double copy — §Perf L3) and
+/// the executable runs on device buffers (`execute_b`).
+fn run_kernel(
+    client: &xla::PjRtClient,
+    exes: &BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    req: &Request,
+) -> Result<Vec<f32>, String> {
+    let exe = exes
+        .get(&req.side)
+        .ok_or_else(|| format!("no executable for side {}", req.side))?;
+    let dims = [req.side, req.side];
+    let to_buf = |v: &[f32]| -> Result<xla::PjRtBuffer, String> {
+        client
+            .buffer_from_host_buffer::<f32>(v, &dims, None)
+            .map_err(|e| format!("host->device: {e:?}"))
+    };
+    let a = to_buf(&req.a)?;
+    let b = to_buf(&req.b)?;
+    let c = to_buf(&req.c)?;
+    let result = exe
+        .execute_b::<xla::PjRtBuffer>(&[a, b, c])
+        .map_err(|e| format!("execute: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| format!("to_literal: {e:?}"))?;
+    // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+    let out = result
+        .to_tuple1()
+        .map_err(|e| format!("to_tuple1: {e:?}"))?;
+    out.to_vec::<f32>().map_err(|e| format!("to_vec: {e:?}"))
+}
+
+impl LocalMultiply for XlaMultiply {
+    fn multiply_acc(&self, a: &DenseMatrix, b: &DenseMatrix, c: &DenseMatrix) -> DenseMatrix {
+        let side = match self.supported(a, b, c) {
+            Some(s) => s,
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return self.fallback.multiply_acc(a, b, c);
+            }
+        };
+        let t0 = Instant::now();
+        let (reply_tx, reply_rx) = channel();
+        let req = Request {
+            side,
+            a: a.as_slice().to_vec(),
+            b: b.as_slice().to_vec(),
+            c: c.as_slice().to_vec(),
+            reply: reply_tx,
+        };
+        let sid = self.next.fetch_add(1, Ordering::Relaxed) % self.servers.len();
+        self.servers[sid]
+            .lock()
+            .unwrap()
+            .send(req)
+            .expect("kernel server hung up");
+        let data = reply_rx
+            .recv()
+            .expect("kernel server dropped reply")
+            .unwrap_or_else(|e| panic!("xla kernel failed: {e}"));
+        self.nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        DenseMatrix::from_vec(side, side, data)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn kernel_time(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::Relaxed)) + self.fallback.kernel_time()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::runtime::NaiveMultiply;
+    use crate::util::rng::Xoshiro256ss;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        // Tests run from the crate root; artifacts exist after
+        // `make artifacts`.
+        let dir = super::super::artifacts::default_dir();
+        if ArtifactSet::discover(&dir).is_empty() {
+            eprintln!("skipping XLA test: no artifacts in {}", dir.display());
+            None
+        } else {
+            Some(dir)
+        }
+    }
+
+    #[test]
+    fn load_fails_without_artifacts() {
+        assert!(XlaMultiply::load("/nonexistent/dir", 1).is_err());
+    }
+
+    #[test]
+    fn xla_matches_naive_when_artifacts_present() {
+        let Some(dir) = artifacts_dir() else { return };
+        let backend = XlaMultiply::load(&dir, 2).unwrap();
+        let mut rng = Xoshiro256ss::new(1);
+        for &side in &backend.sides().to_vec() {
+            if side > 512 {
+                continue; // keep the test fast
+            }
+            let a = gen::dense_int(side, side, &mut rng);
+            let b = gen::dense_int(side, side, &mut rng);
+            let c = gen::dense_int(side, side, &mut rng);
+            let got = backend.multiply_acc(&a, &b, &c);
+            let want = NaiveMultiply.multiply_acc(&a, &b, &c);
+            assert_eq!(got.max_abs_diff(&want), 0.0, "side={side}");
+        }
+        assert!(backend.xla_hits() > 0);
+    }
+
+    #[test]
+    fn unsupported_size_falls_back_to_native() {
+        let Some(dir) = artifacts_dir() else { return };
+        let backend = XlaMultiply::load(&dir, 1).unwrap();
+        let mut rng = Xoshiro256ss::new(2);
+        let a = gen::dense_int(3, 3, &mut rng); // no 3×3 artifact
+        let b = gen::dense_int(3, 3, &mut rng);
+        let c = gen::dense_int(3, 3, &mut rng);
+        let got = backend.multiply_acc(&a, &b, &c);
+        let want = NaiveMultiply.multiply_acc(&a, &b, &c);
+        assert_eq!(got, want);
+        assert_eq!(backend.native_misses(), 1);
+    }
+
+    #[test]
+    fn concurrent_requests_from_many_threads() {
+        let Some(dir) = artifacts_dir() else { return };
+        let backend = std::sync::Arc::new(XlaMultiply::load(&dir, 2).unwrap());
+        let side = backend.sides()[0];
+        let mut rng = Xoshiro256ss::new(3);
+        let a = gen::dense_int(side, side, &mut rng);
+        let b = gen::dense_int(side, side, &mut rng);
+        let c = gen::dense_int(side, side, &mut rng);
+        let want = NaiveMultiply.multiply_acc(&a, &b, &c);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let backend = backend.clone();
+                let (a, b, c, want) = (a.clone(), b.clone(), c.clone(), want.clone());
+                s.spawn(move || {
+                    let got = backend.multiply_acc(&a, &b, &c);
+                    assert_eq!(got.max_abs_diff(&want), 0.0);
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,155 @@
+//! Calibration: fit profile constants from real engine runs.
+//!
+//! The simulator's constants are anchored on the paper's published
+//! numbers; this module closes the loop the other way, deriving a
+//! profile for *this machine* from measured [`JobMetrics`] so the
+//! real-engine runs in `examples/e2e_dense.rs` and the simulator can be
+//! cross-checked (EXPERIMENTS.md §Calibration).
+
+use crate::mapreduce::JobMetrics;
+use crate::util::stats;
+
+use super::profile::ClusterProfile;
+
+/// A single calibration observation: a real multi-round run with its
+/// plan-level volumes.
+#[derive(Debug, Clone)]
+pub struct Observation {
+    /// Measured per-round metrics.
+    pub metrics: JobMetrics,
+    /// Total flops the run performed.
+    pub flops: f64,
+}
+
+/// Fit an effective single-node profile from measured runs.
+///
+/// * `flops_per_node` — total flops / total kernel seconds;
+/// * `net_bw` — shuffled bytes / (map+shuffle wall seconds);
+/// * `disk_bw` — materialised bytes / write seconds;
+/// * `round_setup` — intercept of a linear fit of total time vs rounds
+///   (floored at 0).
+pub fn fit_local_profile(obs: &[Observation], bytes_per_word: f64) -> ClusterProfile {
+    assert!(!obs.is_empty(), "need at least one observation");
+    let mut kernel_secs = 0.0;
+    let mut flops = 0.0;
+    let mut shuffle_bytes = 0.0;
+    let mut shuffle_secs = 0.0;
+    let mut write_bytes = 0.0;
+    let mut write_secs = 0.0;
+    let mut xs = vec![];
+    let mut ys = vec![];
+    for o in obs {
+        flops += o.flops;
+        kernel_secs += o.metrics.total_kernel_time().as_secs_f64();
+        for r in &o.metrics.rounds {
+            shuffle_bytes += r.shuffle_words as f64 * bytes_per_word;
+            shuffle_secs += (r.map_time + r.shuffle_time).as_secs_f64();
+            write_bytes += r.output_words as f64 * bytes_per_word;
+            write_secs += r.write_time.as_secs_f64();
+        }
+        xs.push(o.metrics.num_rounds() as f64);
+        ys.push(o.metrics.total_time().as_secs_f64());
+    }
+    let round_setup = if xs.len() >= 2 {
+        let (_a, b) = stats::linear_fit(&xs, &ys);
+        // Marginal cost per round is mostly volume-driven here; the
+        // engine's true setup cost is tiny. Keep the fitted slope as a
+        // conservative upper bound on per-round overhead.
+        b.max(0.0) * 0.1
+    } else {
+        0.0
+    };
+    ClusterProfile {
+        name: "local-fit",
+        nodes: 1,
+        slots_per_node: std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4),
+        flops_per_node: safe_div(flops, kernel_secs, 1e9),
+        disk_bw: safe_div(write_bytes, write_secs, 1e9),
+        net_bw: safe_div(shuffle_bytes, shuffle_secs, 1e9),
+        round_setup,
+        small_chunk_coeff: 0.0, // in-memory engine has no HDFS penalty
+        chunk_ref_bytes: 1.0,
+        bytes_per_word,
+        spill_factor: 0.0, // in-memory rounds: no shuffle spill
+    }
+}
+
+fn safe_div(num: f64, den: f64, default: f64) -> f64 {
+    if den > 0.0 && num > 0.0 {
+        num / den
+    } else {
+        default
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::RoundMetrics;
+    use std::time::Duration;
+
+    fn metrics(rounds: usize, secs_per_round: f64) -> JobMetrics {
+        JobMetrics {
+            rounds: (0..rounds)
+                .map(|r| RoundMetrics {
+                    round: r,
+                    shuffle_words: 1_000_000,
+                    output_words: 500_000,
+                    map_time: Duration::from_secs_f64(secs_per_round * 0.3),
+                    shuffle_time: Duration::from_secs_f64(secs_per_round * 0.2),
+                    reduce_time: Duration::from_secs_f64(secs_per_round * 0.4),
+                    write_time: Duration::from_secs_f64(secs_per_round * 0.1),
+                    kernel_time: Duration::from_secs_f64(secs_per_round * 0.35),
+                    ..Default::default()
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn fits_flops_rate() {
+        let obs = vec![Observation {
+            metrics: metrics(2, 1.0),
+            flops: 7e9,
+        }];
+        let p = fit_local_profile(&obs, 4.0);
+        // kernel secs = 2 * 0.35 = 0.7 → 10 GFLOP/s.
+        assert!((p.flops_per_node - 1e10).abs() / 1e10 < 1e-6);
+    }
+
+    #[test]
+    fn fits_bandwidths() {
+        let obs = vec![Observation {
+            metrics: metrics(1, 2.0),
+            flops: 1e9,
+        }];
+        let p = fit_local_profile(&obs, 4.0);
+        // shuffle: 4 MB over 1.0s; write: 2 MB over 0.2s.
+        assert!((p.net_bw - 4e6).abs() < 1e-3);
+        assert!((p.disk_bw - 1e7).abs() < 1e-3);
+    }
+
+    #[test]
+    fn multiple_observations_fit_setup() {
+        let obs = vec![
+            Observation {
+                metrics: metrics(2, 1.0),
+                flops: 1e9,
+            },
+            Observation {
+                metrics: metrics(5, 1.0),
+                flops: 1e9,
+            },
+        ];
+        let p = fit_local_profile(&obs, 4.0);
+        assert!(p.round_setup >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one observation")]
+    fn empty_observations_panic() {
+        let _ = fit_local_profile(&[], 4.0);
+    }
+}

@@ -1,0 +1,216 @@
+//! The per-round cost model.
+//!
+//! A round is described by its I/O and compute volumes
+//! ([`RoundVolumes`]); the model prices it on a [`ClusterProfile`]:
+//!
+//! * `T_infr` — fixed round setup;
+//! * `T_read` — round input from HDFS (with small-chunk penalty on
+//!   carried accumulators, which the previous round wrote in per-task
+//!   chunks);
+//! * `T_shuffle` — intermediate pairs over the shuffle fabric;
+//! * `T_comp` — local multiplies;
+//! * `T_write` — round output to HDFS (small-chunk penalty).
+//!
+//! The phases are sequential within a round, as Hadoop's barriers make
+//! them; overlap inside a phase is captured by the aggregate
+//! bandwidths. `T_comm = T_read + T_shuffle + T_write` mirrors the
+//! paper's measurement procedure (§5.1 Q3).
+
+use super::profile::ClusterProfile;
+
+/// Word/flop volumes of one round.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundVolumes {
+    /// Words read from HDFS at full-stream rates (the static inputs).
+    pub read_words: f64,
+    /// Words read from HDFS that were written as per-task chunks by the
+    /// previous round (carried accumulators — penalised).
+    pub read_chunked_words: f64,
+    /// Intermediate words through the shuffle.
+    pub shuffle_words: f64,
+    /// Local-multiply floating-point operations.
+    pub flops: f64,
+    /// Words written to HDFS as per-task chunks.
+    pub write_words: f64,
+}
+
+/// Priced cost of one round, seconds per component.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundCost {
+    /// Fixed setup.
+    pub infra: f64,
+    /// HDFS reads.
+    pub read: f64,
+    /// Shuffle.
+    pub shuffle: f64,
+    /// Local compute.
+    pub comp: f64,
+    /// HDFS writes.
+    pub write: f64,
+}
+
+impl RoundCost {
+    /// Total round seconds.
+    pub fn total(&self) -> f64 {
+        self.infra + self.read + self.shuffle + self.comp + self.write
+    }
+
+    /// The paper's communication component.
+    pub fn comm(&self) -> f64 {
+        self.read + self.shuffle + self.write
+    }
+}
+
+/// Result of simulating a full multi-round execution.
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    /// Per-round priced costs.
+    pub rounds: Vec<RoundCost>,
+}
+
+impl SimResult {
+    /// Total seconds.
+    pub fn total(&self) -> f64 {
+        self.rounds.iter().map(|r| r.total()).sum()
+    }
+
+    /// Total communication seconds.
+    pub fn comm(&self) -> f64 {
+        self.rounds.iter().map(|r| r.comm()).sum()
+    }
+
+    /// Total computation seconds.
+    pub fn comp(&self) -> f64 {
+        self.rounds.iter().map(|r| r.comp).sum()
+    }
+
+    /// Total infrastructure seconds.
+    pub fn infra(&self) -> f64 {
+        self.rounds.iter().map(|r| r.infra).sum()
+    }
+
+    /// Per-round totals (the stacked bars of Figures 3/8/10a).
+    pub fn per_round(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.total()).collect()
+    }
+}
+
+/// Price one round on a profile. `chunk_bytes` is the per-task chunk
+/// size this round *writes*; `read_chunk_bytes` the chunk size the
+/// carried input was written with (0 disables the read penalty).
+pub fn price_round(
+    v: &RoundVolumes,
+    p: &ClusterProfile,
+    chunk_bytes: f64,
+    read_chunk_bytes: f64,
+) -> RoundCost {
+    let bw = p.bytes_per_word;
+    let read_plain = v.read_words * bw / p.agg_disk();
+    let read_chunked =
+        v.read_chunked_words * bw / p.agg_disk() * p.chunk_penalty(read_chunk_bytes);
+    // Hadoop's shuffle spills map output to local disk, then reducers
+    // fetch it over the network and merge — intermediate bytes touch
+    // both the network and the disks. `spill_factor = 0` models an
+    // in-memory engine (ablation).
+    let shuffle = v.shuffle_words * bw / p.agg_net()
+        + p.spill_factor * v.shuffle_words * bw / p.agg_disk();
+    RoundCost {
+        infra: p.round_setup,
+        read: read_plain + read_chunked,
+        shuffle,
+        comp: v.flops / p.agg_flops(),
+        write: v.write_words * bw / p.agg_disk() * p.chunk_penalty(chunk_bytes),
+    }
+}
+
+/// Per-task chunk size (bytes) when `words` are written across the
+/// cluster's reduce tasks.
+pub fn chunk_bytes(words: f64, p: &ClusterProfile) -> f64 {
+    if words <= 0.0 {
+        return 0.0;
+    }
+    words * p.bytes_per_word / p.reduce_tasks() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vol() -> RoundVolumes {
+        RoundVolumes {
+            read_words: 1e9,
+            read_chunked_words: 0.0,
+            shuffle_words: 3e9,
+            flops: 1e12,
+            write_words: 1e9,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn price_round_components_positive() {
+        let p = ClusterProfile::inhouse();
+        let c = price_round(&vol(), &p, 1e9, 0.0);
+        assert_eq!(c.infra, 17.0);
+        assert!(c.read > 0.0 && c.shuffle > 0.0 && c.comp > 0.0 && c.write > 0.0);
+        assert!((c.total() - (c.infra + c.comm() + c.comp)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smaller_chunks_cost_more() {
+        let p = ClusterProfile::inhouse();
+        let big = price_round(&vol(), &p, 1e9, 0.0);
+        let small = price_round(&vol(), &p, 1e7, 0.0);
+        assert!(small.write > big.write);
+        assert_eq!(small.read, big.read);
+    }
+
+    #[test]
+    fn read_penalty_applies_to_chunked_reads_only() {
+        let p = ClusterProfile::inhouse();
+        let mut v = vol();
+        v.read_chunked_words = 1e9;
+        let plain = price_round(&v, &p, 1e9, 1e9);
+        let penal = price_round(&v, &p, 1e9, 1e6);
+        assert!(penal.read > plain.read);
+        assert_eq!(penal.write, plain.write);
+    }
+
+    #[test]
+    fn more_nodes_cheaper() {
+        let v = vol();
+        let p4 = ClusterProfile::inhouse().with_nodes(4);
+        let p16 = ClusterProfile::inhouse().with_nodes(16);
+        let c4 = price_round(&v, &p4, 1e9, 0.0);
+        let c16 = price_round(&v, &p16, 1e9, 0.0);
+        assert!(c16.comm() < c4.comm());
+        assert!(c16.comp < c4.comp);
+        assert_eq!(c16.infra, c4.infra, "setup does not parallelise");
+    }
+
+    #[test]
+    fn sim_result_aggregation() {
+        let r = RoundCost {
+            infra: 17.0,
+            read: 10.0,
+            shuffle: 20.0,
+            comp: 30.0,
+            write: 5.0,
+        };
+        let s = SimResult {
+            rounds: vec![r, r],
+        };
+        assert_eq!(s.total(), 164.0);
+        assert_eq!(s.comm(), 70.0);
+        assert_eq!(s.comp(), 60.0);
+        assert_eq!(s.infra(), 34.0);
+        assert_eq!(s.per_round(), vec![82.0, 82.0]);
+    }
+
+    #[test]
+    fn chunk_bytes_per_task() {
+        let p = ClusterProfile::inhouse(); // 32 reduce tasks
+        assert_eq!(chunk_bytes(32e6, &p), 32e6 * 8.0 / 32.0);
+        assert_eq!(chunk_bytes(0.0, &p), 0.0);
+    }
+}

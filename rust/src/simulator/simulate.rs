@@ -1,0 +1,338 @@
+//! Per-algorithm round-volume derivation + simulation drivers.
+//!
+//! The volumes follow the algorithms exactly (Theorems 3.1–3.3):
+//!
+//! **3D dense** (`q = √(n/m)`, rounds `q/ρ` product + 1 sum):
+//! product round r: reads `2n` (A, B) plus — for `r > 0` — `ρn` carried
+//! accumulators; shuffles `2ρn + [r>0]·ρn`; computes `2ρn√m` flops;
+//! writes `ρn`. Final round: reads/shuffles `ρn`, adds `ρn` words,
+//! writes `n`.
+//!
+//! **2D dense** (`s = n/m` strips, `s/ρ` independent rounds): each round
+//! reads `2n`, shuffles `2ρn`, computes `2ρm√n` flops, writes `ρm`.
+//!
+//! **3D sparse** (Erdős–Rényi δ, block side `√m'`): as 3D dense with
+//! input words `δn`, accumulator words `δ_O·n`, and expected
+//! `2δ²·m'^{3/2}` flops per block product.
+
+use crate::m3::planner::{Plan2d, Plan3d, SparsePlan};
+
+use super::costmodel::{chunk_bytes, price_round, RoundVolumes, SimResult};
+use super::profile::ClusterProfile;
+
+/// Simulate the 3D dense algorithm (paper Algorithm 1).
+pub fn simulate_dense3d(plan: &Plan3d, p: &ClusterProfile) -> SimResult {
+    let n = plan.n() as f64;
+    let rho = plan.rho as f64;
+    let sqrt_m = plan.block_side as f64;
+    let product_rounds = plan.q() / plan.rho;
+
+    let mut rounds = Vec::with_capacity(plan.rounds());
+    // Chunk size of the accumulator files each product round writes.
+    let acc_chunk = chunk_bytes(rho * n, p);
+    for r in 0..product_rounds {
+        let carried = if r > 0 { rho * n } else { 0.0 };
+        let v = RoundVolumes {
+            read_words: 2.0 * n,
+            read_chunked_words: carried,
+            shuffle_words: 2.0 * rho * n + carried,
+            flops: 2.0 * rho * n * sqrt_m,
+            write_words: rho * n,
+        };
+        rounds.push(price_round(&v, p, acc_chunk, acc_chunk));
+    }
+    // Final summation round: read + shuffle the ρ accumulators, add
+    // them (ρn adds ≈ ρn flops), write the n-word result.
+    let v = RoundVolumes {
+        read_words: 0.0,
+        read_chunked_words: rho * n,
+        shuffle_words: rho * n,
+        flops: rho * n,
+        write_words: n,
+    };
+    rounds.push(price_round(&v, p, chunk_bytes(n, p), acc_chunk));
+    SimResult { rounds }
+}
+
+/// Simulate the 2D dense algorithm (paper Algorithm 2).
+pub fn simulate_dense2d(plan: &Plan2d, p: &ClusterProfile) -> SimResult {
+    let n = (plan.side * plan.side) as f64;
+    let rho = plan.rho as f64;
+    let m = plan.m as f64;
+    let sqrt_n = plan.side as f64;
+
+    let out_chunk = chunk_bytes(rho * m, p);
+    let rounds = (0..plan.rounds())
+        .map(|_| {
+            let v = RoundVolumes {
+                read_words: 2.0 * n,
+                read_chunked_words: 0.0,
+                shuffle_words: 2.0 * rho * n,
+                flops: 2.0 * rho * m * sqrt_n,
+                write_words: rho * m,
+            };
+            price_round(&v, p, out_chunk, 0.0)
+        })
+        .collect();
+    SimResult { rounds }
+}
+
+/// Simulate the 3D sparse algorithm (paper §3.2) for Erdős–Rényi
+/// inputs of density `plan.delta` and output-density bound
+/// `plan.delta_m`.
+pub fn simulate_sparse3d(plan: &SparsePlan, p: &ClusterProfile) -> SimResult {
+    let n = (plan.side as f64) * (plan.side as f64);
+    let rho = plan.rho as f64;
+    let m_prime = (plan.block_side as f64) * (plan.block_side as f64);
+    let delta = plan.delta;
+    let delta_o = plan.delta_m;
+    let q = plan.q() as f64;
+    let product_rounds = plan.q() / plan.rho;
+
+    let input_words = delta * n; // nnz of one input matrix
+    let acc_words = delta_o * n; // nnz of the ρ accumulators ≈ ρ·δ_O·n/ρ... per set
+    let mut rounds = Vec::with_capacity(plan.rounds());
+    let acc_chunk = chunk_bytes(rho * acc_words, p);
+    // Expected flops of one block product: δ²·m'^{3/2} multiplications
+    // (+ as many adds).
+    let flops_per_product = 2.0 * delta * delta * m_prime * (plan.block_side as f64);
+    for r in 0..product_rounds {
+        let carried = if r > 0 { rho * acc_words } else { 0.0 };
+        let v = RoundVolumes {
+            read_words: 2.0 * input_words,
+            read_chunked_words: carried,
+            shuffle_words: 2.0 * rho * input_words + carried,
+            flops: rho * q * q * flops_per_product,
+            write_words: rho * acc_words,
+        };
+        rounds.push(price_round(&v, p, acc_chunk, acc_chunk));
+    }
+    let v = RoundVolumes {
+        read_words: 0.0,
+        read_chunked_words: rho * acc_words,
+        shuffle_words: rho * acc_words,
+        flops: rho * acc_words,
+        write_words: acc_words,
+    };
+    rounds.push(price_round(&v, p, chunk_bytes(acc_words, p), acc_chunk));
+    SimResult { rounds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(side: usize, bs: usize, rho: usize) -> Plan3d {
+        Plan3d::new(side, bs, rho).unwrap()
+    }
+
+    // ---- anchors from the paper ----
+
+    #[test]
+    fn anchor_multiround_overhead_inhouse_near_7pct_per_round() {
+        // §5.1 Q2: ~7% average overhead per additional round, in-house,
+        // √n = 32000, √m = 4000.
+        let p = ClusterProfile::inhouse();
+        let mono = simulate_dense3d(&plan(32000, 4000, 8), &p); // R=2
+        for rho in [1usize, 2, 4] {
+            let multi = simulate_dense3d(&plan(32000, 4000, rho), &p);
+            let extra_rounds = (multi.rounds.len() - mono.rounds.len()) as f64;
+            let overhead = (multi.total() - mono.total()) / mono.total() / extra_rounds;
+            assert!(
+                (0.03..=0.12).contains(&overhead),
+                "rho={rho}: overhead/round {overhead:.3} outside 3-12%"
+            );
+        }
+    }
+
+    #[test]
+    fn anchor_emr_overhead_larger_than_inhouse() {
+        // §5.2 Q2: ~17%/round on EMR vs ~7% in-house.
+        let inh = ClusterProfile::inhouse();
+        let emr = ClusterProfile::emr_c3_8xlarge();
+        let per_round = |p: &ClusterProfile| {
+            let mono = simulate_dense3d(&plan(16000, 4000, 4), p);
+            let multi = simulate_dense3d(&plan(16000, 4000, 1), p);
+            (multi.total() - mono.total()) / mono.total() / 3.0
+        };
+        let o_in = per_round(&inh);
+        let o_emr = per_round(&emr);
+        assert!(o_emr > o_in, "EMR {o_emr:.3} should exceed in-house {o_in:.3}");
+        assert!((0.10..=0.30).contains(&o_emr), "EMR overhead {o_emr:.3}");
+    }
+
+    #[test]
+    fn anchor_emr_slower_than_inhouse_at_16000() {
+        // §5.2 Q2: ≈4.7× slower at √n=16000; gap narrows at 32000 (≈1.4×).
+        let inh = ClusterProfile::inhouse();
+        let emr = ClusterProfile::emr_c3_8xlarge();
+        let r16 = simulate_dense3d(&plan(16000, 4000, 4), &emr).total()
+            / simulate_dense3d(&plan(16000, 4000, 4), &inh).total();
+        let r32 = simulate_dense3d(&plan(32000, 4000, 8), &emr).total()
+            / simulate_dense3d(&plan(32000, 4000, 8), &inh).total();
+        assert!((2.5..=7.0).contains(&r16), "EMR/in-house at 16000: {r16:.2}");
+        assert!(r32 < r16, "gap should narrow with size: {r32:.2} vs {r16:.2}");
+    }
+
+    #[test]
+    fn anchor_comm_dominates_inhouse() {
+        // §5.1 Q3: communication dominates the total time.
+        let p = ClusterProfile::inhouse();
+        for rho in [1, 2, 4] {
+            let s = simulate_dense3d(&plan(16000, 4000, rho), &p);
+            assert!(
+                s.comm() > s.comp(),
+                "rho={rho}: comm {:.0}s !> comp {:.0}s",
+                s.comm(),
+                s.comp()
+            );
+        }
+    }
+
+    #[test]
+    fn anchor_comp_independent_of_rho() {
+        // Fig 4: computation cost flat across ρ.
+        let p = ClusterProfile::inhouse();
+        let c1 = simulate_dense3d(&plan(32000, 4000, 1), &p).comp();
+        let c8 = simulate_dense3d(&plan(32000, 4000, 8), &p).comp();
+        let rel = (c1 - c8).abs() / c8;
+        assert!(rel < 0.05, "comp varies {rel:.3} with rho");
+    }
+
+    #[test]
+    fn anchor_infra_linear_in_rounds() {
+        let p = ClusterProfile::inhouse();
+        for rho in [1, 2, 4, 8] {
+            let pl = plan(32000, 4000, rho);
+            let s = simulate_dense3d(&pl, &p);
+            assert_eq!(s.infra(), 17.0 * pl.rounds() as f64);
+        }
+    }
+
+    #[test]
+    fn anchor_monolithic_fastest() {
+        // Fig 3: best time at ρ = q, but multi-round stays comparable.
+        let p = ClusterProfile::inhouse();
+        let t: Vec<f64> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&r| simulate_dense3d(&plan(32000, 4000, r), &p).total())
+            .collect();
+        assert!(t[3] < t[2] && t[2] < t[1] && t[1] < t[0], "{t:?}");
+        assert!(t[0] / t[3] < 1.8, "ρ=1 should stay within ~2× of monolithic");
+    }
+
+    #[test]
+    fn anchor_time_scales_cubically_with_side() {
+        // §5.1 Q2: ×~8 when the side doubles, in-house.
+        let p = ClusterProfile::inhouse();
+        let t16 = simulate_dense3d(&plan(16000, 4000, 4), &p).total();
+        let t32 = simulate_dense3d(&plan(32000, 4000, 4), &p).total();
+        let factor = t32 / t16;
+        assert!((5.0..=9.5).contains(&factor), "scale factor {factor:.2}");
+    }
+
+    #[test]
+    fn anchor_larger_m_faster() {
+        // Fig 2: performance improves with m, with diminishing gains.
+        let p = ClusterProfile::inhouse();
+        let t1000 = simulate_dense3d(&Plan3d::monolithic(32000, 1000).unwrap(), &p).total();
+        let t2000 = simulate_dense3d(&Plan3d::monolithic(32000, 2000).unwrap(), &p).total();
+        let t4000 = simulate_dense3d(&Plan3d::monolithic(32000, 4000).unwrap(), &p).total();
+        assert!(t1000 > t2000 && t2000 > t4000);
+        let g12 = t1000 / t2000;
+        let g24 = t2000 / t4000;
+        assert!(g12 > g24, "gain should diminish: {g12:.2} vs {g24:.2}");
+        // Paper: gain 1.99 from 1000→2000, 1.12 from 2000→4000.
+        assert!((1.4..=2.6).contains(&g12), "g12={g12:.2}");
+        assert!((1.02..=1.6).contains(&g24), "g24={g24:.2}");
+    }
+
+    #[test]
+    fn anchor_3d_beats_2d() {
+        // Fig 6: the 2D approach loses at every replication.
+        let p = ClusterProfile::inhouse();
+        let best_3d = simulate_dense3d(&plan(16000, 4000, 4), &p).total();
+        for rho2 in [1usize, 2, 4, 8, 16] {
+            let p2 = Plan2d::new(16000, 4000 * 4000, rho2).unwrap();
+            let t2 = simulate_dense2d(&p2, &p).total();
+            assert!(
+                t2 > best_3d,
+                "2D rho={rho2} ({t2:.0}s) should exceed 3D monolithic ({best_3d:.0}s)"
+            );
+        }
+    }
+
+    #[test]
+    fn anchor_scalability_with_nodes() {
+        // Fig 5: 4 → 8 → 16 nodes speeds up, sub-linearly at 16.
+        let t: Vec<f64> = [4usize, 8, 16]
+            .iter()
+            .map(|&nodes| {
+                let p = ClusterProfile::inhouse().with_nodes(nodes);
+                simulate_dense3d(&plan(16000, 4000, 2), &p).total()
+            })
+            .collect();
+        assert!(t[0] > t[1] && t[1] > t[2], "{t:?}");
+        let s48 = t[0] / t[1];
+        let s816 = t[1] / t[2];
+        assert!(s48 > s816, "speedup should taper: {s48:.2} vs {s816:.2}");
+        assert!(s48 < 2.0 && s816 < 2.0);
+    }
+
+    #[test]
+    fn anchor_sparse_much_cheaper_than_dense_same_virtual_side() {
+        // Q6: sparsity lets much larger sides fit the same budget.
+        let p = ClusterProfile::inhouse();
+        let side = 1 << 20;
+        let delta = 8.0 / side as f64;
+        let delta_o = delta * delta * side as f64;
+        let sp = SparsePlan::new(side, 1 << 18, 1, delta, delta_o).unwrap();
+        let t_sparse = simulate_sparse3d(&sp, &p).total();
+        // A dense run at the in-house 32000-side already takes longer.
+        let t_dense = simulate_dense3d(&plan(32000, 4000, 1), &p).total();
+        assert!(
+            t_sparse < t_dense,
+            "sparse 2^20 ({t_sparse:.0}s) should beat dense 32000 ({t_dense:.0}s)"
+        );
+    }
+
+    #[test]
+    fn sparse_rounds_match_plan() {
+        let side = 1 << 20;
+        let delta = 8.0 / side as f64;
+        let sp = SparsePlan::new(side, 1 << 18, 2, delta, delta * delta * side as f64).unwrap();
+        let p = ClusterProfile::inhouse();
+        let s = simulate_sparse3d(&sp, &p);
+        assert_eq!(s.rounds.len(), sp.rounds());
+    }
+
+    #[test]
+    fn per_round_breakdown_final_round_cheaper() {
+        // Figs 3/8: the last round (ρ-way sum) is faster than product
+        // rounds.
+        let p = ClusterProfile::inhouse();
+        let s = simulate_dense3d(&plan(32000, 4000, 2), &p);
+        let rounds = s.per_round();
+        let last = *rounds.last().unwrap();
+        for &t in &rounds[..rounds.len() - 1] {
+            assert!(last < t, "final round {last:.0}s !< product round {t:.0}s");
+        }
+    }
+
+    #[test]
+    fn i2_comm_below_c3_at_16000() {
+        // Fig 9b: i2.xlarge communication below c3.8xlarge despite the
+        // slower network — the disk handles small chunks better.
+        let c3 = ClusterProfile::emr_c3_8xlarge();
+        let i2 = ClusterProfile::emr_i2_xlarge();
+        for rho in [1usize, 2, 4] {
+            let pl = plan(16000, 4000, rho);
+            let comm_c3 = simulate_dense3d(&pl, &c3).comm();
+            let comm_i2 = simulate_dense3d(&pl, &i2).comm();
+            assert!(
+                comm_i2 < comm_c3,
+                "rho={rho}: i2 comm {comm_i2:.0} !< c3 comm {comm_c3:.0}"
+            );
+        }
+    }
+}

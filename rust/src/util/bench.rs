@@ -1,0 +1,196 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! [`Bencher::bench`] warms up, then runs timed iterations until either a
+//! target wall-clock budget or a maximum iteration count is hit, and
+//! reports mean / median / p95 / stddev. Used by `rust/benches/` (with
+//! `harness = false`) and by the figure harness for real measurements.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Number of timed iterations.
+    pub iters: usize,
+    /// Per-iteration times in seconds.
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    /// Mean seconds per iteration.
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    /// Median seconds per iteration.
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    /// p95 seconds per iteration.
+    pub fn p95(&self) -> f64 {
+        stats::percentile(&self.samples, 95.0)
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        stats::stddev(&self.samples)
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<48} {:>10} {:>10} {:>10} {:>6}",
+            self.name,
+            fmt_secs(self.mean()),
+            fmt_secs(self.median()),
+            fmt_secs(self.p95()),
+            self.iters
+        )
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Benchmark driver with a configurable budget.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Wall-clock budget for the timed phase of each benchmark.
+    pub budget: Duration,
+    /// Number of warmup iterations.
+    pub warmup_iters: usize,
+    /// Minimum timed iterations.
+    pub min_iters: usize,
+    /// Maximum timed iterations.
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            budget: Duration::from_secs(2),
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 200,
+        }
+    }
+}
+
+impl Bencher {
+    /// A quick configuration for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Self {
+            budget: Duration::from_millis(800),
+            warmup_iters: 1,
+            min_iters: 2,
+            max_iters: 20,
+        }
+    }
+
+    /// Run `f` repeatedly and collect per-iteration timings. The closure
+    /// returns a value which is black-boxed to prevent dead-code
+    /// elimination.
+    pub fn bench<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = vec![];
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed() < self.budget && samples.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            samples,
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding the benchmarked computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print the standard header row matching [`BenchResult::summary`].
+pub fn print_header() {
+    println!(
+        "{:<48} {:>10} {:>10} {:>10} {:>6}",
+        "benchmark", "mean", "median", "p95", "iters"
+    );
+    println!("{}", "-".repeat(90));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_min_iters() {
+        let b = Bencher {
+            budget: Duration::from_millis(1),
+            warmup_iters: 0,
+            min_iters: 5,
+            max_iters: 10,
+        };
+        let r = b.bench("noop", || 1 + 1);
+        assert!(r.iters >= 5);
+        assert!(r.iters <= 10);
+        assert_eq!(r.samples.len(), r.iters);
+    }
+
+    #[test]
+    fn bench_respects_max_iters() {
+        let b = Bencher {
+            budget: Duration::from_secs(10),
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 7,
+        };
+        let r = b.bench("noop", || ());
+        assert_eq!(r.iters, 7);
+    }
+
+    #[test]
+    fn timings_are_positive() {
+        let b = Bencher::quick();
+        let r = b.bench("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            s
+        });
+        assert!(r.mean() > 0.0);
+        assert!(r.median() > 0.0);
+        assert!(r.p95() >= r.median());
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(2.5).ends_with('s'));
+        assert!(fmt_secs(2.5e-3).ends_with("ms"));
+        assert!(fmt_secs(2.5e-6).ends_with("us"));
+        assert!(fmt_secs(2.5e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,164 @@
+//! Dependency-free command-line parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, key-value options, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: Vec<String>,
+    opts: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+/// Option/flag names that take a value (needed to disambiguate
+/// `--key value` from a flag followed by a positional).
+#[derive(Debug, Clone, Default)]
+pub struct Spec {
+    valued: Vec<&'static str>,
+}
+
+impl Spec {
+    /// Create a spec listing the options that take values.
+    pub fn new(valued: &[&'static str]) -> Self {
+        Self {
+            valued: valued.to_vec(),
+        }
+    }
+}
+
+impl Args {
+    /// Parse from an explicit token list.
+    pub fn parse_from<I: IntoIterator<Item = String>>(spec: &Spec, it: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    let (k, v) = rest.split_at(eq);
+                    out.opts.insert(k.to_string(), v[1..].to_string());
+                } else if spec.valued.contains(&rest) {
+                    match it.next() {
+                        Some(v) => {
+                            out.opts.insert(rest.to_string(), v);
+                        }
+                        None => return Err(format!("option --{rest} requires a value")),
+                    }
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn parse(spec: &Spec) -> Result<Self, String> {
+        Self::parse_from(spec, std::env::args().skip(1))
+    }
+
+    /// Is the boolean flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Raw string option.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; errors on parse failure.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("invalid value for --{name}: {s:?}")),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--rho 1,2,4`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>, String>
+    where
+        T: Clone,
+    {
+        match self.opt(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| format!("invalid list element for --{name}: {p:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_opts_positionals() {
+        let spec = Spec::new(&["n", "rho"]);
+        let a = Args::parse_from(&spec, toks("run --verbose --n 4096 --rho=2 extra")).unwrap();
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.opt("n"), Some("4096"));
+        assert_eq!(a.opt("rho"), Some("2"));
+        assert_eq!(a.positional(), &["run".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let spec = Spec::new(&["n"]);
+        let a = Args::parse_from(&spec, toks("--n 128")).unwrap();
+        let n: usize = a.get("n", 0).unwrap();
+        assert_eq!(n, 128);
+        let m: usize = a.get("m", 7).unwrap();
+        assert_eq!(m, 7);
+    }
+
+    #[test]
+    fn list_option() {
+        let spec = Spec::new(&["rho"]);
+        let a = Args::parse_from(&spec, toks("--rho 1,2,4")).unwrap();
+        let v: Vec<usize> = a.get_list("rho", &[9]).unwrap();
+        assert_eq!(v, vec![1, 2, 4]);
+        let d: Vec<usize> = a.get_list("m", &[9]).unwrap();
+        assert_eq!(d, vec![9]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let spec = Spec::new(&["n"]);
+        assert!(Args::parse_from(&spec, toks("--n")).is_err());
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let spec = Spec::new(&["n"]);
+        let a = Args::parse_from(&spec, toks("--n banana")).unwrap();
+        assert!(a.get::<usize>("n", 0).is_err());
+    }
+}

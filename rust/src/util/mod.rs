@@ -1,0 +1,14 @@
+//! In-house utility layer.
+//!
+//! The build environment is fully offline with a minimal crate set, so
+//! this module provides the small pieces that would normally come from
+//! crates: a seedable PRNG ([`rng`]), a property-testing harness
+//! ([`prop`]), summary statistics ([`stats`]), a dependency-free CLI
+//! parser ([`cli`]), and table / ASCII-chart printing ([`table`]).
+
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

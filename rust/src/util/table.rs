@@ -1,0 +1,237 @@
+//! Aligned table and ASCII bar-chart printing for the figure harness.
+//!
+//! The paper's figures are bar charts (time vs ρ, stacked per-round or
+//! per-component bars); [`BarChart`] renders a faithful textual version
+//! and [`Table`] prints the underlying series, which are also written to
+//! CSV for external plotting.
+
+use std::fmt::Write as _;
+
+/// A simple aligned text table.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given header.
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Render to a string with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:<width$}  ", c, width = w[i]);
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.header);
+        let sep: Vec<String> = w.iter().map(|&n| "-".repeat(n)).collect();
+        line(&mut out, &sep);
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        out.push_str(&self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// One bar of a (possibly stacked) bar chart.
+#[derive(Debug, Clone)]
+pub struct Bar {
+    /// Bar label (x-axis category).
+    pub label: String,
+    /// Stacked segments: (segment name, value).
+    pub segments: Vec<(String, f64)>,
+}
+
+impl Bar {
+    /// Total bar height.
+    pub fn total(&self) -> f64 {
+        self.segments.iter().map(|(_, v)| v).sum()
+    }
+}
+
+/// A horizontal ASCII bar chart with stacked segments, mirroring the
+/// paper's stacked per-round / per-component figures.
+#[derive(Debug, Default)]
+pub struct BarChart {
+    title: String,
+    unit: String,
+    bars: Vec<Bar>,
+}
+
+/// Glyphs used to distinguish stacked segments.
+const GLYPHS: &[char] = &['#', '=', '+', ':', '*', '%', '@', 'o', 'x', '.'];
+
+impl BarChart {
+    /// Create a chart with a title and a value unit (e.g. "s").
+    pub fn new(title: &str, unit: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            unit: unit.to_string(),
+            bars: vec![],
+        }
+    }
+
+    /// Add a single-segment bar.
+    pub fn bar(&mut self, label: &str, value: f64) -> &mut Self {
+        self.stacked(label, &[("", value)])
+    }
+
+    /// Add a stacked bar.
+    pub fn stacked(&mut self, label: &str, segments: &[(&str, f64)]) -> &mut Self {
+        self.bars.push(Bar {
+            label: label.to_string(),
+            segments: segments
+                .iter()
+                .map(|(n, v)| (n.to_string(), *v))
+                .collect(),
+        });
+        self
+    }
+
+    /// Render the chart.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        if self.bars.is_empty() {
+            return out;
+        }
+        let maxv = self
+            .bars
+            .iter()
+            .map(|b| b.total())
+            .fold(f64::NEG_INFINITY, f64::max)
+            .max(1e-12);
+        let lw = self.bars.iter().map(|b| b.label.len()).max().unwrap_or(0);
+        const WIDTH: f64 = 60.0;
+        for b in &self.bars {
+            let _ = write!(out, "{:<width$} |", b.label, width = lw);
+            for (si, (_, v)) in b.segments.iter().enumerate() {
+                let n = (v / maxv * WIDTH).round() as usize;
+                let g = GLYPHS[si % GLYPHS.len()];
+                for _ in 0..n {
+                    out.push(g);
+                }
+            }
+            let _ = writeln!(out, " {:.1}{}", b.total(), self.unit);
+        }
+        // Legend for stacked charts.
+        if self.bars.iter().any(|b| b.segments.len() > 1) {
+            let names: Vec<&str> = self.bars[0]
+                .segments
+                .iter()
+                .map(|(n, _)| n.as_str())
+                .collect();
+            let legend: Vec<String> = names
+                .iter()
+                .enumerate()
+                .map(|(i, n)| format!("{}={}", GLYPHS[i % GLYPHS.len()], n))
+                .collect();
+            let _ = writeln!(out, "legend: {}", legend.join("  "));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["rho", "time"]);
+        t.row(&["1".into(), "100.5".into()]);
+        t.row(&["16".into(), "42.0".into()]);
+        let s = t.render();
+        assert!(s.contains("rho"));
+        assert!(s.contains("100.5"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new(&["k", "v"]);
+        t.row(&["a,b".into(), "1".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\""));
+    }
+
+    #[test]
+    fn barchart_scales_to_max() {
+        let mut c = BarChart::new("t", "s");
+        c.bar("short", 1.0).bar("long", 2.0);
+        let s = c.render();
+        let short_len = s.lines().find(|l| l.starts_with("short")).unwrap().matches('#').count();
+        let long_len = s.lines().find(|l| l.starts_with("long")).unwrap().matches('#').count();
+        assert!(long_len > short_len);
+    }
+
+    #[test]
+    fn stacked_chart_has_legend() {
+        let mut c = BarChart::new("t", "s");
+        c.stacked("x", &[("comm", 1.0), ("comp", 2.0)]);
+        let s = c.render();
+        assert!(s.contains("legend:"));
+        assert!(s.contains("comm"));
+    }
+
+    #[test]
+    fn bar_total() {
+        let b = Bar {
+            label: "x".into(),
+            segments: vec![("a".into(), 1.5), ("b".into(), 2.5)],
+        };
+        assert_eq!(b.total(), 4.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Integration over the figure harness + simulator: every figure
+//! regenerates, its CSV parses, and the paper's qualitative findings
+//! hold in the emitted series (not just in the simulator's internals).
+
+use m3::harness::{all_figures, figure};
+
+/// Parse a CSV column as f64 (skipping the header and non-numeric
+/// cells).
+fn column(csv: &str, idx: usize) -> Vec<f64> {
+    csv.lines()
+        .skip(1)
+        .filter_map(|l| l.split(',').nth(idx).and_then(|c| c.parse().ok()))
+        .collect()
+}
+
+#[test]
+fn every_figure_regenerates_with_csv() {
+    for rep in all_figures() {
+        assert!(!rep.text.is_empty(), "{}: empty text", rep.id);
+        for (name, csv) in &rep.csv {
+            assert!(csv.lines().count() >= 2, "{}/{name}: empty csv", rep.id);
+            let header_cols = csv.lines().next().unwrap().split(',').count();
+            for (i, line) in csv.lines().enumerate() {
+                assert_eq!(
+                    line.split(',').count(),
+                    header_cols,
+                    "{}/{name}: ragged row {i}",
+                    rep.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fig1_balanced_perfectly_even_naive_not() {
+    let rep = &figure(1)[0];
+    let csv = &rep.csv[0].1; // per-task counts
+    let naive = column(csv, 1);
+    let balanced = column(csv, 2);
+    assert_eq!(naive.len(), 64);
+    let total_n: f64 = naive.iter().sum();
+    let total_b: f64 = balanced.iter().sum();
+    assert_eq!(total_n, 512.0, "all reducers assigned (naive)");
+    assert_eq!(total_b, 512.0, "all reducers assigned (balanced)");
+    assert!(balanced.iter().all(|&c| c == 8.0), "balanced: 8 per task");
+    assert!(naive.iter().any(|&c| c != 8.0), "naive: uneven");
+}
+
+#[test]
+fn fig2_time_decreases_with_m() {
+    let rep = &figure(2)[0];
+    let csv = &rep.csv[0].1;
+    // Columns: sqrt_n, sqrt_m, max, min. For each sqrt_n the max-rho
+    // times must decrease as sqrt_m grows (1000 → 2000 → 4000).
+    for side in ["16000", "32000"] {
+        let rows: Vec<Vec<&str>> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').collect())
+            .filter(|c: &Vec<&str>| c[0] == side && c[2] != "OOM")
+            .collect();
+        let times: Vec<f64> = rows.iter().map(|r| r[2].parse().unwrap()).collect();
+        assert!(times.windows(2).all(|w| w[0] > w[1]), "side {side}: {times:?}");
+    }
+}
+
+#[test]
+fn fig3_monolithic_fastest_multiround_close() {
+    for rep in figure(3) {
+        let csv = &rep.csv[0].1;
+        let rhos = column(csv, 0);
+        let totals = column(csv, 2);
+        // Totals decrease as rho increases (monolithic last).
+        let mut pairs: Vec<(f64, f64)> = rhos.into_iter().zip(totals).collect();
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let ts: Vec<f64> = pairs.iter().map(|p| p.1).collect();
+        assert!(
+            ts.windows(2).all(|w| w[0] > w[1]),
+            "{}: not monotone {ts:?}",
+            rep.id
+        );
+        // Extreme multi-round within 2× of monolithic.
+        assert!(ts[0] / ts[ts.len() - 1] < 2.0, "{}: gap too large", rep.id);
+    }
+}
+
+#[test]
+fn fig4_communication_dominates() {
+    for rep in figure(4) {
+        let csv = &rep.csv[0].1;
+        let comm = column(csv, 1);
+        let comp = column(csv, 2);
+        for (c, p) in comm.iter().zip(&comp) {
+            assert!(c > p, "{}: comm {c} !> comp {p}", rep.id);
+        }
+    }
+}
+
+#[test]
+fn fig5_speedup_with_nodes_tapers() {
+    let rep = &figure(5)[0];
+    let csv = &rep.csv[0].1;
+    // Columns: nodes, rho=1, rho=2, rho=4.
+    for col in 1..=3 {
+        let t = column(csv, col);
+        assert_eq!(t.len(), 3);
+        assert!(t[0] > t[1] && t[1] > t[2], "col {col}: {t:?}");
+        let s1 = t[0] / t[1];
+        let s2 = t[1] / t[2];
+        assert!(s1 > s2, "col {col}: speedup should taper ({s1:.2} vs {s2:.2})");
+    }
+}
+
+#[test]
+fn fig7_sparse_times_grow_with_virtual_side() {
+    let rep = &figure(7)[0];
+    let csv = &rep.csv[0].1;
+    // For rho=1 rows, time must grow with log2(side) 20 → 22 → 24.
+    let rows: Vec<Vec<&str>> = csv.lines().skip(1).map(|l| l.split(',').collect()).collect();
+    let t_at = |lg: &str| -> f64 {
+        rows.iter()
+            .find(|r| r[0] == lg && r[2] == "1")
+            .map(|r| r[4].parse().unwrap())
+            .unwrap()
+    };
+    assert!(t_at("20") < t_at("22"));
+    assert!(t_at("22") < t_at("24"));
+}
+
+#[test]
+fn fig8_fig10_emr_slower_than_inhouse() {
+    let in3 = &figure(3); // 3a = 16000 in-house
+    let emr = &figure(8)[0]; // 16000 c3
+    let t_in = column(&in3[0].csv[0].1, 2);
+    let t_emr = column(&emr.csv[0].1, 2);
+    for (i, e) in t_in.iter().zip(&t_emr) {
+        assert!(e > i, "EMR {e} !> in-house {i}");
+    }
+}
+
+#[test]
+fn fig9_i2_comm_below_c3() {
+    let figs = figure(9);
+    let c3 = column(&figs[0].csv[0].1, 1);
+    let i2 = column(&figs[1].csv[0].1, 1);
+    for (c, i) in c3.iter().zip(&i2) {
+        assert!(i < c, "i2 comm {i} !< c3 comm {c}");
+    }
+}
+
+#[test]
+fn fig10_per_round_breakdown_sums_to_total() {
+    let figs = figure(10);
+    let csv = &figs[0].csv[0].1; // fig10a time_vs_rho
+    for line in csv.lines().skip(1) {
+        let cells: Vec<&str> = line.split(',').collect();
+        let total: f64 = cells[2].parse().unwrap();
+        let per_round: f64 = cells[3].split('+').map(|x| x.parse::<f64>().unwrap()).sum();
+        assert!(
+            (total - per_round).abs() <= 1.0 + 0.01 * total,
+            "total {total} vs per-round sum {per_round}"
+        );
+    }
+}

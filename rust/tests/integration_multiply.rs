@@ -1,0 +1,272 @@
+//! Cross-module integration: the full M3 pipeline (engine + algorithms
+//! + partitioners + backends) against reference products, across
+//! geometries, payloads, and failure modes.
+
+use std::sync::Arc;
+
+use m3::m3::algo3d::{Algo3d, Geometry};
+use m3::m3::multiply::{DenseBlock, DenseOps};
+use m3::m3::partitioner::BalancedPartitioner3d;
+use m3::m3::{
+    multiply_dense_2d, multiply_dense_3d, multiply_sparse_3d, M3Config, PartitionerKind, Plan3d,
+    SparsePlan, TripleKey,
+};
+use m3::mapreduce::{Driver, EngineConfig, Pair};
+use m3::matrix::{gen, BlockGrid, DenseMatrix};
+use m3::runtime::native::NativeMultiply;
+use m3::runtime::NaiveMultiply;
+use m3::util::rng::Xoshiro256ss;
+
+fn engine() -> EngineConfig {
+    EngineConfig {
+        map_tasks: 8,
+        reduce_tasks: 8,
+        workers: 4,
+    }
+}
+
+fn cfg(block: usize, rho: usize, part: PartitionerKind) -> M3Config {
+    M3Config {
+        block_side: block,
+        rho,
+        engine: engine(),
+        partitioner: part,
+    }
+}
+
+#[test]
+fn dense_3d_full_sweep_exact() {
+    let side = 64;
+    let mut rng = Xoshiro256ss::new(10);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let want = a.matmul_naive(&b);
+    for block in [8usize, 16, 32] {
+        let q = side / block;
+        for rho in (1..=q).filter(|r| q % r == 0) {
+            for part in [PartitionerKind::Balanced, PartitionerKind::Naive] {
+                let (got, metrics) =
+                    multiply_dense_3d(&a, &b, &cfg(block, rho, part), Arc::new(NativeMultiply::new()))
+                        .unwrap();
+                assert_eq!(got, want, "block={block} rho={rho} part={part:?}");
+                assert_eq!(metrics.num_rounds(), q / rho + 1);
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_2d_full_sweep_exact() {
+    let side = 32;
+    let mut rng = Xoshiro256ss::new(11);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let want = a.matmul_naive(&b);
+    // m = block², strips s = n/m.
+    for block in [8usize, 16] {
+        let s = side * side / (block * block);
+        for rho in (1..=s).filter(|r| s % r == 0) {
+            let (got, metrics) = multiply_dense_2d(
+                &a,
+                &b,
+                &cfg(block, rho, PartitionerKind::Balanced),
+                Arc::new(NativeMultiply::new()),
+            )
+            .unwrap();
+            assert_eq!(got, want, "block={block} rho={rho}");
+            assert_eq!(metrics.num_rounds(), s / rho);
+        }
+    }
+}
+
+#[test]
+fn sparse_3d_matches_dense_pipeline() {
+    let side = 128;
+    let mut rng = Xoshiro256ss::new(12);
+    let a = gen::erdos_renyi_coo(side, 0.05, &mut rng);
+    let b = gen::erdos_renyi_coo(side, 0.05, &mut rng);
+    let want = a.to_dense().matmul_naive(&b.to_dense());
+    for (block, rho) in [(16usize, 1usize), (16, 2), (32, 4), (64, 2)] {
+        let plan = SparsePlan::new(side, block, rho, 0.05, 0.3).unwrap();
+        let (got, _) =
+            multiply_sparse_3d(&a, &b, &plan, engine(), PartitionerKind::Balanced).unwrap();
+        assert_eq!(
+            got.to_dense().max_abs_diff(&want),
+            0.0,
+            "block={block} rho={rho}"
+        );
+    }
+}
+
+#[test]
+fn dense_3d_and_2d_agree() {
+    let side = 32;
+    let mut rng = Xoshiro256ss::new(13);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let (c3, _) = multiply_dense_3d(
+        &a,
+        &b,
+        &cfg(8, 2, PartitionerKind::Balanced),
+        Arc::new(NaiveMultiply),
+    )
+    .unwrap();
+    let (c2, _) = multiply_dense_2d(
+        &a,
+        &b,
+        &cfg(8, 2, PartitionerKind::Balanced),
+        Arc::new(NaiveMultiply),
+    )
+    .unwrap();
+    assert_eq!(c3, c2);
+}
+
+#[test]
+fn theorem_bounds_hold_across_sweep() {
+    // Shuffle ≤ 3ρn words and reducer ≤ 3m words in every round, for
+    // every geometry (Theorem 3.1).
+    let side = 48;
+    let mut rng = Xoshiro256ss::new(14);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    for block in [8usize, 12, 16, 24] {
+        let q = side / block;
+        for rho in (1..=q).filter(|r| q % r == 0) {
+            let plan = Plan3d::new(side, block, rho).unwrap();
+            let (_, metrics) = multiply_dense_3d(
+                &a,
+                &b,
+                &cfg(block, rho, PartitionerKind::Balanced),
+                Arc::new(NativeMultiply::new()),
+            )
+            .unwrap();
+            let last = metrics.num_rounds() - 1;
+            for r in &metrics.rounds {
+                assert!(
+                    r.shuffle_words <= plan.shuffle_words_bound(),
+                    "shuffle bound violated at block={block} rho={rho} round={}",
+                    r.round
+                );
+                if r.round < last {
+                    // Product rounds: A + B + C = 3m words (Thm 3.1).
+                    assert!(
+                        r.max_reducer_words <= plan.reducer_words_bound(),
+                        "reducer bound violated at block={block} rho={rho} round={}",
+                        r.round
+                    );
+                } else {
+                    // Final round: ρ accumulators arrive (ρm input
+                    // words); the 3m bound is on *memory*, which a
+                    // streaming sum satisfies — check input = ρm.
+                    assert!(
+                        r.max_reducer_words <= rho * plan.m(),
+                        "final-round input exceeds rho*m at block={block} rho={rho}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn shuffle_pairs_scale_with_rho_rounds_inverse() {
+    // The paper's core tradeoff: per-round shuffle ∝ ρ, rounds ∝ 1/ρ.
+    let side = 64;
+    let block = 8; // q = 8
+    let mut rng = Xoshiro256ss::new(15);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let mut prev_shuffle = 0;
+    let mut prev_rounds = usize::MAX;
+    for rho in [1usize, 2, 4, 8] {
+        let (_, metrics) = multiply_dense_3d(
+            &a,
+            &b,
+            &cfg(block, rho, PartitionerKind::Balanced),
+            Arc::new(NativeMultiply::new()),
+        )
+        .unwrap();
+        assert!(metrics.max_shuffle_pairs() > prev_shuffle);
+        assert!(metrics.num_rounds() < prev_rounds);
+        prev_shuffle = metrics.max_shuffle_pairs();
+        prev_rounds = metrics.num_rounds();
+    }
+}
+
+#[test]
+fn preempted_pipeline_still_exact() {
+    let side = 64;
+    let block = 16; // q = 4
+    let rho = 2;
+    let mut rng = Xoshiro256ss::new(16);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let want = a.matmul_naive(&b);
+    let grid = BlockGrid::new(side, block);
+    let geo: Geometry = Plan3d::new(side, block, rho).unwrap().into();
+    let alg = Algo3d::new(
+        geo,
+        Arc::new(DenseOps::new(Arc::new(NativeMultiply::new()))),
+        Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+    );
+    let mut input: Vec<Pair<TripleKey, DenseBlock>> = vec![];
+    for ((i, j), blk) in grid.split(&a) {
+        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::A(blk)));
+    }
+    for ((i, j), blk) in grid.split(&b) {
+        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::B(blk)));
+    }
+    let mut driver = Driver::new(engine());
+    let res = driver.run_preempted(&alg, &input, &[1e-9, 2e-9, 3e-9]);
+    assert_eq!(res.preemptions, 3);
+    let blocks: Vec<((usize, usize), DenseMatrix)> = res
+        .output
+        .into_iter()
+        .map(|p| {
+            let m = match p.value {
+                DenseBlock::C(m) => m,
+                _ => panic!("non-C output"),
+            };
+            ((p.key.i as usize, p.key.j as usize), m)
+        })
+        .collect();
+    assert_eq!(grid.assemble(&blocks), want);
+}
+
+#[test]
+fn works_on_minimum_geometry() {
+    // 1×1 blocks, q = side: stress the index arithmetic.
+    let side = 6;
+    let mut rng = Xoshiro256ss::new(17);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let want = a.matmul_naive(&b);
+    for rho in [1usize, 2, 3, 6] {
+        let (got, _) = multiply_dense_3d(
+            &a,
+            &b,
+            &cfg(1, rho, PartitionerKind::Balanced),
+            Arc::new(NaiveMultiply),
+        )
+        .unwrap();
+        assert_eq!(got, want, "rho={rho}");
+    }
+}
+
+#[test]
+fn single_block_degenerate_case() {
+    // block = side: q = 1, one product, two rounds (1 product + 1 sum).
+    let side = 16;
+    let mut rng = Xoshiro256ss::new(18);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let (got, metrics) = multiply_dense_3d(
+        &a,
+        &b,
+        &cfg(side, 1, PartitionerKind::Balanced),
+        Arc::new(NaiveMultiply),
+    )
+    .unwrap();
+    assert_eq!(got, a.matmul_naive(&b));
+    assert_eq!(metrics.num_rounds(), 2);
+}

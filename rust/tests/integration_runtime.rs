@@ -1,0 +1,126 @@
+//! Integration of the PJRT runtime with the full pipeline: AOT
+//! artifacts → kernel servers → M3 reducers → exact products.
+//!
+//! These tests exercise the production hot path (XLA backend). They
+//! skip gracefully when `make artifacts` has not run, so `cargo test`
+//! stays green on a fresh checkout; CI runs them after the artifact
+//! build.
+
+use std::sync::Arc;
+
+use m3::m3::{multiply_dense_3d, M3Config, PartitionerKind};
+use m3::mapreduce::EngineConfig;
+use m3::matrix::gen;
+use m3::runtime::artifacts::{default_dir, ArtifactSet};
+use m3::runtime::xla_backend::XlaMultiply;
+use m3::runtime::{LocalMultiply, NaiveMultiply};
+use m3::util::rng::Xoshiro256ss;
+
+fn xla() -> Option<Arc<XlaMultiply>> {
+    let dir = default_dir();
+    if ArtifactSet::discover(&dir).is_empty() {
+        eprintln!("skipping: no artifacts in {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Arc::new(XlaMultiply::load(&dir, 2).expect("artifacts must compile")))
+}
+
+#[test]
+fn artifact_set_covers_default_sides() {
+    let dir = default_dir();
+    let set = ArtifactSet::discover(&dir);
+    if set.is_empty() {
+        return;
+    }
+    for side in [64usize, 128, 256, 512] {
+        assert!(
+            set.matmul_acc(side).is_some(),
+            "missing artifact for side {side}"
+        );
+    }
+}
+
+#[test]
+fn xla_pipeline_exact_product_block128() {
+    let Some(backend) = xla() else { return };
+    let side = 512;
+    let mut rng = Xoshiro256ss::new(20);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let cfg = M3Config {
+        block_side: 128,
+        rho: 2,
+        engine: EngineConfig::default(),
+        partitioner: PartitionerKind::Balanced,
+    };
+    let (got, _) = multiply_dense_3d(&a, &b, &cfg, backend.clone()).unwrap();
+    assert_eq!(got, a.matmul_naive(&b));
+    assert!(backend.xla_hits() > 0, "XLA path must actually be used");
+    assert_eq!(backend.native_misses(), 0, "all blocks should hit XLA");
+}
+
+#[test]
+fn xla_pipeline_all_artifact_sides() {
+    let Some(backend) = xla() else { return };
+    let mut rng = Xoshiro256ss::new(21);
+    for &block in backend.sides().to_vec().iter().filter(|&&s| s <= 256) {
+        let side = block * 2; // q = 2
+        let a = gen::dense_int(side, side, &mut rng);
+        let b = gen::dense_int(side, side, &mut rng);
+        let cfg = M3Config {
+            block_side: block,
+            rho: 1,
+            engine: EngineConfig::default(),
+            partitioner: PartitionerKind::Balanced,
+        };
+        let (got, _) = multiply_dense_3d(&a, &b, &cfg, backend.clone()).unwrap();
+        assert_eq!(got, a.matmul_naive(&b), "block={block}");
+    }
+}
+
+#[test]
+fn xla_kernel_matches_naive_on_float_data() {
+    // Float (non-integer) data: XLA dot vs naive within f32 tolerance.
+    let Some(backend) = xla() else { return };
+    let side = 128;
+    let mut rng = Xoshiro256ss::new(22);
+    let a = gen::dense_uniform(side, side, &mut rng);
+    let b = gen::dense_uniform(side, side, &mut rng);
+    let c = gen::dense_uniform(side, side, &mut rng);
+    let got = backend.multiply_acc(&a, &b, &c);
+    let want = NaiveMultiply.multiply_acc(&a, &b, &c);
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < 1e-3, "max abs diff {diff}");
+}
+
+#[test]
+fn xla_kernel_time_accumulates() {
+    let Some(backend) = xla() else { return };
+    let side = 64;
+    let mut rng = Xoshiro256ss::new(23);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let c = gen::dense_int(side, side, &mut rng);
+    let t0 = backend.kernel_time();
+    let _ = backend.multiply_acc(&a, &b, &c);
+    assert!(backend.kernel_time() > t0);
+}
+
+#[test]
+fn hlo_text_artifacts_are_parseable() {
+    // Each artifact must contain an HloModule with our f32 shapes —
+    // guards against aot.py format drift.
+    let dir = default_dir();
+    let set = ArtifactSet::discover(&dir);
+    if set.is_empty() {
+        return;
+    }
+    for side in set.sides() {
+        let text = std::fs::read_to_string(set.matmul_acc(side).unwrap()).unwrap();
+        assert!(text.contains("HloModule"), "side {side}: no HloModule");
+        assert!(
+            text.contains(&format!("f32[{side},{side}]")),
+            "side {side}: shape missing"
+        );
+    }
+}
