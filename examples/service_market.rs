@@ -1,0 +1,77 @@
+//! Multi-tenant service market: concurrent multi-round jobs on one
+//! shared cluster.
+//!
+//! ```sh
+//! cargo run --release --example service_market
+//! ```
+//!
+//! The paper's §1 argument is that multi-round algorithms fit cloud
+//! "service markets": the round count adapts to the execution context.
+//! This example makes the context concrete — a skewed multi-tenant
+//! workload (one 16-round job, six 3-round jobs) plus two spot
+//! preemptions — and runs it under all three scheduling policies. Fair
+//! share and SRPT interleave rounds of different jobs; FIFO cannot, and
+//! its short jobs pay for it in queue wait. Every job's product is
+//! verified against the reference multiply.
+
+use std::sync::Arc;
+
+use m3::mapreduce::EngineConfig;
+use m3::runtime::native::NativeMultiply;
+use m3::service::{run_service, skewed, Policy, ServiceConfig};
+
+fn main() -> anyhow::Result<()> {
+    let specs = skewed(6, 42);
+    println!(
+        "workload: {} jobs ({} rounds of work in job 0, 3 rounds each after)",
+        specs.len(),
+        16
+    );
+    let engine = EngineConfig {
+        map_tasks: 8,
+        reduce_tasks: 8,
+        workers: 4,
+    };
+
+    for policy in [Policy::Fifo, Policy::Fair, Policy::Srpt] {
+        let cfg = ServiceConfig {
+            engine,
+            policy,
+            preemptions: vec![40.0, 120.0],
+        };
+        let out = run_service(&specs, &cfg, Arc::new(NativeMultiply::new()))?;
+        for c in &out.completed {
+            anyhow::ensure!(c.output.matches(&c.spec), "job {} wrong!", c.spec.id);
+        }
+        // Show the round-grain interleaving as a job-id string.
+        let sequence: String = out
+            .trace
+            .iter()
+            .map(|t| {
+                if t.committed {
+                    char::from_digit(t.job as u32 % 10, 10).unwrap()
+                } else {
+                    'x'
+                }
+            })
+            .collect();
+        println!(
+            "\npolicy={:<5} rounds=[{}]  (x = preempted attempt)",
+            policy.name(),
+            sequence
+        );
+        println!(
+            "  mean wait {:>6.1}s   p95 wait {:>6.1}s   makespan {:>6.1}s   lost {:>5.1}s — all products exact",
+            out.metrics.mean_queue_wait_secs(),
+            out.metrics.p95_queue_wait_secs(),
+            out.metrics.makespan_secs(),
+            out.metrics.total_discarded_secs(),
+        );
+    }
+    println!(
+        "\nsmall-rho jobs expose more round boundaries, so fair/SRPT can slot \
+         them between the long job's rounds — the service-market payoff of \
+         the multi-round design."
+    );
+    Ok(())
+}

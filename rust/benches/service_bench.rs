@@ -1,0 +1,134 @@
+//! Service + executor benchmarks (in-house driver, `harness = false`).
+//!
+//! Groups:
+//!
+//! 1. **executor hot path** — `Pool::run_indexed` with many tiny tasks,
+//!    against a per-result `Mutex<Option<T>>` baseline (the
+//!    implementation the §Perf pass replaced) to show the win of the
+//!    lock-free disjoint-slot writes.
+//! 2. **service** — workload generation, and the round-level scheduler
+//!    end-to-end under each policy on a small seeded workload.
+//!
+//! Run: `cargo bench --bench service_bench [-- --quick]`
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use m3::mapreduce::executor::Pool;
+use m3::mapreduce::EngineConfig;
+use m3::runtime::native::NativeMultiply;
+use m3::service::{generate, run_service, Policy, ServiceConfig, WorkloadConfig};
+use m3::util::bench::{black_box, print_header, Bencher};
+
+/// The pre-optimisation `run_indexed`: one `Mutex<Option<T>>` per task.
+/// Kept here as the benchmark baseline only.
+fn mutex_run_indexed<T, F>(workers: usize, num_tasks: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Send + Sync,
+{
+    if num_tasks == 0 {
+        return vec![];
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<T>>> = (0..num_tasks).map(|_| Mutex::new(None)).collect();
+    let nthreads = workers.max(1).min(num_tasks);
+    std::thread::scope(|scope| {
+        let mut handles = vec![];
+        for _ in 0..nthreads {
+            handles.push(scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= num_tasks {
+                    break;
+                }
+                let out = f(i);
+                *results[i].lock().unwrap() = Some(out);
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("task not executed"))
+        .collect()
+}
+
+fn bench_executor(b: &Bencher) {
+    println!("\n--- executor: many small tasks ---");
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let pool = Pool::new(workers);
+    for &n in &[10_000usize, 100_000] {
+        let r = b.bench(&format!("pool_run_indexed_{n}_tiny_tasks"), || {
+            pool.run_indexed(n, |i| i.wrapping_mul(i)).len()
+        });
+        println!("{}", r.summary());
+        let r = b.bench(&format!("mutex_baseline_{n}_tiny_tasks"), || {
+            mutex_run_indexed(workers, n, |i| i.wrapping_mul(i)).len()
+        });
+        println!("{}", r.summary());
+    }
+    // Non-trivial payload: moves through the slots instead of copies.
+    let r = b.bench("pool_run_indexed_20k_string_tasks", || {
+        pool.run_indexed(20_000, |i| format!("{i}")).len()
+    });
+    println!("{}", r.summary());
+    let r = b.bench("mutex_baseline_20k_string_tasks", || {
+        mutex_run_indexed(workers, 20_000, |i| format!("{i}")).len()
+    });
+    println!("{}", r.summary());
+}
+
+fn bench_service(b: &Bencher) {
+    println!("\n--- service: round-level scheduler ---");
+    let cfg = WorkloadConfig {
+        jobs: 8,
+        tenants: 3,
+        seed: 11,
+        mean_interarrival_secs: 20.0,
+    };
+    let r = b.bench("workload_generate_256_specs", || {
+        generate(&WorkloadConfig {
+            jobs: 256,
+            ..cfg.clone()
+        })
+        .len()
+    });
+    println!("{}", r.summary());
+
+    let specs = generate(&cfg);
+    let engine = EngineConfig {
+        map_tasks: 4,
+        reduce_tasks: 4,
+        workers: 4,
+    };
+    for policy in [Policy::Fifo, Policy::Fair, Policy::Srpt] {
+        let scfg = ServiceConfig {
+            engine,
+            policy,
+            preemptions: vec![],
+        };
+        let r = b.bench(&format!("serve_8_jobs_{}", policy.name()), || {
+            let out = run_service(&specs, &scfg, Arc::new(NativeMultiply::new())).unwrap();
+            black_box(out.completed.len())
+        });
+        println!("{}", r.summary());
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick") || std::env::var("M3_BENCH_QUICK").is_ok();
+    let b = if quick {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    println!("M3 service/executor benchmarks (in-house driver)");
+    print_header();
+    bench_executor(&b);
+    bench_service(&b);
+    println!("\ndone.");
+}

@@ -1,9 +1,12 @@
 //! Figure/benchmark harness: regenerates every figure of the paper's
 //! evaluation section (Figures 1–10) as text tables, ASCII bar charts,
-//! and CSV files.
+//! and CSV files, plus the service-market scheduling report
+//! ([`service_report`]).
 
 pub mod ablations;
 pub mod figures;
+pub mod service_report;
 
 pub use ablations::all_ablations;
 pub use figures::{all_figures, figure, Report};
+pub use service_report::service_report;

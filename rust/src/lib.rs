@@ -17,6 +17,10 @@
 //! * [`runtime`] — PJRT/XLA runtime that loads the AOT-compiled
 //!   JAX/Pallas block-multiply artifacts and runs them on the reduce
 //!   hot path (Python is never on the request path).
+//! * [`service`] — multi-tenant job service: a round-level scheduler
+//!   (FIFO / fair-share / SRPT) that multiplexes concurrent multi-round
+//!   jobs over the shared cluster, with spot-market preemptions that
+//!   discard only the in-flight round (§1 "service market").
 //! * [`simulator`] — a discrete cost-model simulator of the paper's
 //!   clusters (in-house 16-node, EMR c3.8xlarge / i2.xlarge) used to
 //!   regenerate the paper-scale figures.
@@ -30,5 +34,6 @@ pub mod m3;
 pub mod mapreduce;
 pub mod matrix;
 pub mod runtime;
+pub mod service;
 pub mod simulator;
 pub mod util;

@@ -192,6 +192,42 @@ impl<S: Semiring> BlockOps<DenseBlock> for SemiringOps<S> {
     }
 }
 
+/// Build the 3D static input pairs `⟨(i,-1,j); A|B block⟩` from two
+/// dense matrices split on `grid`.
+pub fn dense_3d_static_input(
+    grid: &BlockGrid,
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+) -> Vec<Pair<TripleKey, DenseBlock>> {
+    let mut input: Vec<Pair<TripleKey, DenseBlock>> = Vec::with_capacity(2 * grid.num_blocks());
+    for ((i, j), blk) in grid.split(a) {
+        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::A(blk)));
+    }
+    for ((i, j), blk) in grid.split(b) {
+        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::B(blk)));
+    }
+    input
+}
+
+/// Assemble the product matrix from the final-round `C` blocks.
+pub fn dense_3d_assemble(
+    grid: &BlockGrid,
+    output: Vec<Pair<TripleKey, DenseBlock>>,
+) -> DenseMatrix {
+    let blocks: Vec<((usize, usize), DenseMatrix)> = output
+        .into_iter()
+        .map(|p| {
+            assert!(p.key.is_io());
+            let m = match p.value {
+                DenseBlock::C(m) => m,
+                _ => panic!("final output must be C blocks"),
+            };
+            ((p.key.i as usize, p.key.j as usize), m)
+        })
+        .collect();
+    grid.assemble(&blocks)
+}
+
 /// Shared driver for dense 3D runs over any block algebra.
 fn run_dense_3d(
     a: &DenseMatrix,
@@ -205,15 +241,7 @@ fn run_dense_3d(
     let plan = Plan3d::new(a.rows(), cfg.block_side, cfg.rho)?;
     let geo: Geometry = plan.into();
     let grid = BlockGrid::new(plan.side, plan.block_side);
-
-    let mut input: Vec<Pair<TripleKey, DenseBlock>> =
-        Vec::with_capacity(2 * grid.num_blocks());
-    for ((i, j), blk) in grid.split(a) {
-        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::A(blk)));
-    }
-    for ((i, j), blk) in grid.split(b) {
-        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::B(blk)));
-    }
+    let input = dense_3d_static_input(&grid, a, b);
 
     let alg = Algo3d::new(
         geo,
@@ -222,20 +250,7 @@ fn run_dense_3d(
     );
     let mut driver = Driver::new(cfg.engine);
     let res = driver.run(&alg, &input);
-
-    let blocks: Vec<((usize, usize), DenseMatrix)> = res
-        .output
-        .into_iter()
-        .map(|p| {
-            assert!(p.key.is_io());
-            let m = match p.value {
-                DenseBlock::C(m) => m,
-                _ => panic!("final output must be C blocks"),
-            };
-            ((p.key.i as usize, p.key.j as usize), m)
-        })
-        .collect();
-    Ok((grid.assemble(&blocks), res.metrics))
+    Ok((dense_3d_assemble(&grid, res.output), res.metrics))
 }
 
 /// Multiply two dense square matrices with the 3D multi-round
@@ -356,44 +371,33 @@ impl BlockOps<SparseBlock> for SparseOps {
     }
 }
 
-/// Multiply two sparse square matrices with the 3D multi-round sparse
-/// algorithm (paper §3.2). `plan` fixes the sparse block side
-/// `√m' = √(m/δ_M)`.
-pub fn multiply_sparse_3d(
+/// Build the 3D static input pairs for the sparse algorithm: each
+/// `block_side`-square block of `a`/`b` converted to CSR.
+pub fn sparse_3d_static_input(
+    block_side: usize,
     a: &CooMatrix,
     b: &CooMatrix,
-    plan: &SparsePlan,
-    engine: EngineConfig,
-    partitioner: PartitionerKind,
-) -> Result<(CooMatrix, JobMetrics)> {
-    anyhow::ensure!(a.rows() == a.cols(), "A must be square");
-    anyhow::ensure!(b.rows() == b.cols() && a.rows() == b.rows());
-    anyhow::ensure!(a.rows() == plan.side, "plan side mismatch");
-    let bs = plan.block_side;
-    let geo = Geometry {
-        q: plan.q(),
-        rho: plan.rho,
-    };
-
+) -> Vec<Pair<TripleKey, SparseBlock>> {
     let mut input: Vec<Pair<TripleKey, SparseBlock>> = vec![];
-    for ((i, j), blk) in a.split_blocks(bs, bs) {
+    for ((i, j), blk) in a.split_blocks(block_side, block_side) {
         input.push(Pair::new(TripleKey::io(i, j), SparseBlock::A(blk.to_csr())));
     }
-    for ((i, j), blk) in b.split_blocks(bs, bs) {
+    for ((i, j), blk) in b.split_blocks(block_side, block_side) {
         input.push(Pair::new(TripleKey::io(i, j), SparseBlock::B(blk.to_csr())));
     }
+    input
+}
 
-    let alg = Algo3d::new(
-        geo,
-        Arc::new(SparseOps),
-        make_partitioner_3d(partitioner, geo.q, geo.rho),
-    );
-    let mut driver = Driver::new(engine);
-    let res = driver.run(&alg, &input);
-
-    // Reassemble: offset each block's entries by its block origin.
-    let mut out = CooMatrix::new(plan.side, plan.side);
-    for p in res.output {
+/// Reassemble the sparse product: offset each final `C` block's entries
+/// by its block origin.
+pub fn sparse_3d_assemble(
+    side: usize,
+    block_side: usize,
+    output: Vec<Pair<TripleKey, SparseBlock>>,
+) -> CooMatrix {
+    let bs = block_side;
+    let mut out = CooMatrix::new(side, side);
+    for p in output {
         assert!(p.key.is_io());
         let (bi, bj) = (p.key.i as usize, p.key.j as usize);
         let csr = match p.value {
@@ -408,7 +412,39 @@ pub fn multiply_sparse_3d(
             }
         }
     }
-    Ok((out, res.metrics))
+    out
+}
+
+/// Multiply two sparse square matrices with the 3D multi-round sparse
+/// algorithm (paper §3.2). `plan` fixes the sparse block side
+/// `√m' = √(m/δ_M)`.
+pub fn multiply_sparse_3d(
+    a: &CooMatrix,
+    b: &CooMatrix,
+    plan: &SparsePlan,
+    engine: EngineConfig,
+    partitioner: PartitionerKind,
+) -> Result<(CooMatrix, JobMetrics)> {
+    anyhow::ensure!(a.rows() == a.cols(), "A must be square");
+    anyhow::ensure!(b.rows() == b.cols() && a.rows() == b.rows());
+    anyhow::ensure!(a.rows() == plan.side, "plan side mismatch");
+    let geo = Geometry {
+        q: plan.q(),
+        rho: plan.rho,
+    };
+
+    let input = sparse_3d_static_input(plan.block_side, a, b);
+    let alg = Algo3d::new(
+        geo,
+        Arc::new(SparseOps),
+        make_partitioner_3d(partitioner, geo.q, geo.rho),
+    );
+    let mut driver = Driver::new(engine);
+    let res = driver.run(&alg, &input);
+    Ok((
+        sparse_3d_assemble(plan.side, plan.block_side, res.output),
+        res.metrics,
+    ))
 }
 
 /// The paper's §3.2 *general* sparse flow: estimate the output density

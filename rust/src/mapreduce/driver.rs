@@ -117,9 +117,11 @@ impl Driver {
         RunResult { output, metrics }
     }
 
-    /// Execute a single round with explicit carry; used by [`Self::run`]
-    /// and by the preemption replay.
-    fn run_round<A: MultiRoundAlgorithm>(
+    /// Execute a single round with explicit carry. This is the resumable
+    /// step primitive: [`Self::run`], [`Self::run_preempted`], and the
+    /// round-level scheduler in [`crate::service`] (via [`StepRun`]) are
+    /// all built on it.
+    pub fn run_round<A: MultiRoundAlgorithm>(
         &mut self,
         alg: &A,
         r: usize,
@@ -210,23 +212,151 @@ impl Driver {
     }
 }
 
-/// Approximate Hadoop's per-reduce-task output chunking: distribute the
-/// round's output words across the reduce tasks that produced them.
-fn chunk_sizes<K: Key, V: Value>(out: &[Pair<K, V>], m: &RoundMetrics) -> Vec<usize> {
-    let tasks = m.reducers_per_task.len().max(1);
-    let total: usize = out.iter().map(|p| p.value.words()).sum();
-    let active = m.reducers_per_task.iter().filter(|&&g| g > 0).count().max(1);
-    let per = total / active;
-    let mut chunks = vec![];
-    for &g in m.reducers_per_task.iter().take(tasks) {
-        if g > 0 {
-            chunks.push(per);
+/// A resumable multi-round execution: owns the driver, the algorithm,
+/// and the inter-round carry state, and exposes one-round-at-a-time
+/// stepping. This is the unit a round-level scheduler
+/// ([`crate::service`]) multiplexes — between any two steps the job can
+/// be parked while rounds of *other* jobs run on the shared cluster,
+/// exactly as Hadoop interleaves jobs at round granularity.
+pub struct StepRun<A: MultiRoundAlgorithm> {
+    driver: Driver,
+    alg: A,
+    static_input: Vec<Pair<A::K, A::V>>,
+    carry: Vec<Pair<A::K, A::V>>,
+    sink: Vec<Pair<A::K, A::V>>,
+    next_round: usize,
+    metrics: JobMetrics,
+}
+
+impl<A: MultiRoundAlgorithm> StepRun<A> {
+    /// Set up a resumable run (no round is executed yet).
+    pub fn new(config: EngineConfig, alg: A, static_input: Vec<Pair<A::K, A::V>>) -> Self {
+        Self {
+            driver: Driver::new(config),
+            alg,
+            static_input,
+            carry: vec![],
+            sink: vec![],
+            next_round: 0,
+            metrics: JobMetrics::default(),
         }
     }
-    if chunks.is_empty() && total > 0 {
-        chunks.push(total);
+
+    /// Total logical rounds of the underlying algorithm.
+    pub fn num_rounds(&self) -> usize {
+        self.alg.num_rounds()
     }
-    chunks
+
+    /// The next round to execute (`== num_rounds()` when done).
+    pub fn next_round(&self) -> usize {
+        self.next_round
+    }
+
+    /// Whether every round has committed.
+    pub fn is_done(&self) -> bool {
+        self.next_round >= self.alg.num_rounds()
+    }
+
+    /// Metrics of all executed round attempts so far (committed and
+    /// discarded, in execution order).
+    pub fn metrics(&self) -> &JobMetrics {
+        &self.metrics
+    }
+
+    /// The driver (for DFS accounting inspection).
+    pub fn driver(&self) -> &Driver {
+        &self.driver
+    }
+
+    /// The algorithm being executed.
+    pub fn alg(&self) -> &A {
+        &self.alg
+    }
+
+    /// Execute the next round and commit its output (it becomes the
+    /// carry, or part of the final result for non-carrying algorithms).
+    ///
+    /// # Panics
+    /// Panics if the run [`is_done`](Self::is_done).
+    pub fn step_commit(&mut self) -> RoundMetrics {
+        assert!(!self.is_done(), "step_commit on a finished run");
+        let carry = std::mem::take(&mut self.carry);
+        let (out, m) = self
+            .driver
+            .run_round(&self.alg, self.next_round, &self.static_input, carry);
+        if self.alg.carries_output() {
+            self.carry = out;
+        } else {
+            self.sink.extend(out);
+        }
+        self.metrics.rounds.push(m.clone());
+        self.next_round += 1;
+        m
+    }
+
+    /// Execute the next round but *discard* its output — the spot-market
+    /// preemption semantics: Hadoop cannot resume mid-round, so the
+    /// in-flight round's work is lost and the round stays pending
+    /// (the next [`step_commit`](Self::step_commit) re-executes it).
+    /// Committed rounds are unaffected.
+    ///
+    /// # Panics
+    /// Panics if the run [`is_done`](Self::is_done).
+    pub fn step_discard(&mut self) -> RoundMetrics {
+        assert!(!self.is_done(), "step_discard on a finished run");
+        let (_, m) =
+            self.driver
+                .run_round(&self.alg, self.next_round, &self.static_input, self.carry.clone());
+        self.metrics.rounds.push(m.clone());
+        m
+    }
+
+    /// Consume the run and return the final output and metrics.
+    ///
+    /// # Panics
+    /// Panics unless [`is_done`](Self::is_done).
+    pub fn into_result(self) -> RunResult<A::K, A::V> {
+        assert!(self.is_done(), "into_result before all rounds committed");
+        let output = if self.alg.carries_output() {
+            self.carry
+        } else {
+            self.sink
+        };
+        RunResult {
+            output,
+            metrics: self.metrics,
+        }
+    }
+}
+
+/// Hadoop's per-reduce-task output chunking: one chunk per reduce task,
+/// sized by the words that task actually wrote. Word conservation —
+/// `sum(chunks) == total output words` — is required for the DFS
+/// accounting the cost model calibrates against.
+fn chunk_sizes<K: Key, V: Value>(out: &[Pair<K, V>], m: &RoundMetrics) -> Vec<usize> {
+    let total: usize = out.iter().map(|p| p.value.words()).sum();
+    // Exact path: the engine recorded each reduce task's output words.
+    if !m.output_words_per_task.is_empty() {
+        let chunks: Vec<usize> = m
+            .output_words_per_task
+            .iter()
+            .copied()
+            .filter(|&w| w > 0)
+            .collect();
+        // Per-task words are computed from the same outputs as `total`,
+        // so they always agree.
+        debug_assert_eq!(chunks.iter().sum::<usize>(), total);
+        return chunks;
+    }
+    // Fallback (per-task words unknown): spread the total across the
+    // active tasks, remainder to the first chunks so no word is dropped.
+    let active = m.reducers_per_task.iter().filter(|&&g| g > 0).count();
+    if active == 0 {
+        return if total > 0 { vec![total] } else { vec![] };
+    }
+    let per = total / active;
+    let extra = total % active;
+    (0..active).map(|i| per + usize::from(i < extra)).collect()
 }
 
 #[cfg(test)]
@@ -377,5 +507,162 @@ mod tests {
         for p in &pre.output {
             assert_eq!(p.value, 2.0);
         }
+    }
+
+    #[test]
+    fn two_preemptions_striking_the_same_round() {
+        let alg = IncAlg::new(2);
+        let input: Vec<Pair<u32, f32>> = (0..50).map(|i| Pair::new(i, 0.0)).collect();
+        let mut d = Driver::new(small_cfg());
+        // Both strikes land inside round 0 (any real round takes far
+        // longer than 2e-12 s), forcing two re-executions of it.
+        let pre = d.run_preempted(&alg, &input, &[1e-12, 2e-12]);
+        assert_eq!(pre.preemptions, 2);
+        // 2 logical rounds + 2 aborted attempts of round 0.
+        assert_eq!(pre.metrics.num_rounds(), 4);
+        assert_eq!(pre.metrics.rounds[0].round, 0);
+        assert_eq!(pre.metrics.rounds[1].round, 0);
+        assert_eq!(pre.metrics.rounds[2].round, 0);
+        assert_eq!(pre.metrics.rounds[3].round, 1);
+        for p in &pre.output {
+            assert_eq!(p.value, 2.0, "output must survive double re-execution");
+        }
+    }
+
+    #[test]
+    fn preemption_past_total_useful_work_is_ignored() {
+        let alg = IncAlg::new(3);
+        let input: Vec<Pair<u32, f32>> = (0..10).map(|i| Pair::new(i, 0.0)).collect();
+        let mut d = Driver::new(small_cfg());
+        // 1e9 s of useful work never accrues, so the strike never fires.
+        let pre = d.run_preempted(&alg, &input, &[1e9]);
+        assert_eq!(pre.preemptions, 0);
+        assert_eq!(pre.discarded_secs, 0.0);
+        assert_eq!(pre.metrics.num_rounds(), 3, "no aborted attempts");
+        for p in &pre.output {
+            assert_eq!(p.value, 3.0);
+        }
+    }
+
+    #[test]
+    fn discarded_secs_monotone_in_schedule_size() {
+        // All strikes land in round 0 at known offsets, so the lost work
+        // is exactly the sum of the schedule — deterministic despite the
+        // engine's real timing — and grows with every added preemption.
+        let input: Vec<Pair<u32, f32>> = (0..20).map(|i| Pair::new(i, 0.0)).collect();
+        let mut prev = -1.0;
+        for k in 0..4usize {
+            let schedule: Vec<f64> = (1..=k).map(|i| i as f64 * 1e-12).collect();
+            let alg = IncAlg::new(2);
+            let mut d = Driver::new(small_cfg());
+            let pre = d.run_preempted(&alg, &input, &schedule);
+            assert_eq!(pre.preemptions, k);
+            let expect: f64 = schedule.iter().sum();
+            assert!(
+                (pre.discarded_secs - expect).abs() < 1e-15,
+                "k={k}: discarded {} != {}",
+                pre.discarded_secs,
+                expect
+            );
+            assert!(pre.discarded_secs > prev, "monotone in k");
+            prev = pre.discarded_secs;
+        }
+    }
+
+    #[test]
+    fn chunk_sizes_conserve_words_exact_path() {
+        let out: Vec<Pair<u32, f32>> = (0..7).map(|i| Pair::new(i, 1.0)).collect();
+        let m = RoundMetrics {
+            reducers_per_task: vec![3, 0, 4],
+            output_words_per_task: vec![3, 0, 4],
+            ..Default::default()
+        };
+        let chunks = chunk_sizes(&out, &m);
+        assert_eq!(chunks, vec![3, 4]);
+        assert_eq!(chunks.iter().sum::<usize>(), 7);
+    }
+
+    #[test]
+    fn chunk_sizes_conserve_words_fallback_path() {
+        // total = 7 over 3 active tasks: 7 % 3 != 0 used to drop the
+        // remainder (7/3 = 2 → 3×2 = 6 words accounted).
+        let out: Vec<Pair<u32, f32>> = (0..7).map(|i| Pair::new(i, 1.0)).collect();
+        let m = RoundMetrics {
+            reducers_per_task: vec![3, 2, 2],
+            ..Default::default()
+        };
+        let chunks = chunk_sizes(&out, &m);
+        assert_eq!(chunks.iter().sum::<usize>(), 7, "no words dropped");
+        assert_eq!(chunks.len(), 3);
+    }
+
+    #[test]
+    fn dfs_written_words_match_round_outputs_exactly() {
+        // End-to-end word conservation: what the DFS records per round
+        // equals the round's actual output words, even when the output
+        // does not divide evenly across reduce tasks.
+        let alg = IncAlg::new(2);
+        let mut d = Driver::new(EngineConfig {
+            map_tasks: 2,
+            reduce_tasks: 3,
+            workers: 2,
+        });
+        let input: Vec<Pair<u32, f32>> = (0..7).map(|i| Pair::new(i, 0.0)).collect();
+        let res = d.run(&alg, &input);
+        let out_words: usize = res.metrics.rounds.iter().map(|r| r.output_words).sum();
+        assert_eq!(d.dfs.total_written_words(), out_words);
+        for r in &res.metrics.rounds {
+            assert_eq!(d.dfs.round_words(r.round), r.output_words);
+        }
+    }
+
+    #[test]
+    fn step_run_matches_monolithic_run() {
+        let input: Vec<Pair<u32, f32>> = (0..9).map(|i| Pair::new(i, 0.0)).collect();
+        let mut d = Driver::new(small_cfg());
+        let plain = d.run(&IncAlg::new(3), &input);
+
+        let mut step = StepRun::new(small_cfg(), IncAlg::new(3), input);
+        assert_eq!(step.num_rounds(), 3);
+        let mut executed = 0;
+        while !step.is_done() {
+            assert_eq!(step.next_round(), executed);
+            step.step_commit();
+            executed += 1;
+        }
+        let stepped = step.into_result();
+        assert_eq!(executed, 3);
+        let mut a = plain.output;
+        let mut b = stepped.output;
+        a.sort_by_key(|p| p.key);
+        b.sort_by_key(|p| p.key);
+        assert_eq!(a, b, "stepping must reproduce the monolithic run");
+        assert_eq!(stepped.metrics.num_rounds(), 3);
+    }
+
+    #[test]
+    fn step_discard_leaves_round_pending() {
+        let input: Vec<Pair<u32, f32>> = (0..5).map(|i| Pair::new(i, 0.0)).collect();
+        let mut step = StepRun::new(small_cfg(), IncAlg::new(2), input);
+        step.step_commit();
+        assert_eq!(step.next_round(), 1);
+        step.step_discard(); // preempted attempt of round 1
+        assert_eq!(step.next_round(), 1, "discard must not advance");
+        step.step_commit();
+        assert!(step.is_done());
+        let res = step.into_result();
+        // 2 committed + 1 discarded attempt recorded.
+        assert_eq!(res.metrics.num_rounds(), 3);
+        for p in &res.output {
+            assert_eq!(p.value, 2.0, "discarded attempt must not corrupt the carry");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "into_result before all rounds committed")]
+    fn step_run_into_result_requires_completion() {
+        let input = vec![Pair::new(1u32, 0.0f32)];
+        let step = StepRun::new(small_cfg(), IncAlg::new(2), input);
+        let _ = step.into_result();
     }
 }

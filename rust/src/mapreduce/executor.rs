@@ -6,12 +6,39 @@
 //! order so the engine stays deterministic regardless of interleaving.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// A fixed-width worker pool.
 #[derive(Debug, Clone, Copy)]
 pub struct Pool {
     workers: usize,
+}
+
+/// Shared view of the result slots: workers write through a raw pointer
+/// into disjoint indices, so no per-slot lock or allocation is needed.
+///
+/// Safety contract (upheld by [`Pool::run_indexed`]): the atomic task
+/// counter hands every index to exactly one worker, so no two threads
+/// ever write the same slot; the scoped-thread join completes all
+/// writes before the owning `Vec` is read again.
+struct Slots<T> {
+    ptr: *mut Option<T>,
+}
+
+// SAFETY: `Slots` is only a conduit for sending disjoint `&mut`-like
+// access to the slots across the scoped threads; `T: Send` is all that
+// moving values into the slots requires.
+unsafe impl<T: Send> Send for Slots<T> {}
+unsafe impl<T: Send> Sync for Slots<T> {}
+
+impl<T> Slots<T> {
+    /// Write `value` into slot `i`.
+    ///
+    /// # Safety
+    /// `i` must be in bounds and written by at most one thread, with the
+    /// underlying vector outliving all writers.
+    unsafe fn write(&self, i: usize, value: T) {
+        *self.ptr.add(i) = Some(value);
+    }
 }
 
 impl Pool {
@@ -39,18 +66,30 @@ impl Pool {
             return vec![];
         }
         let next = AtomicUsize::new(0);
-        let results: Vec<Mutex<Option<T>>> = (0..num_tasks).map(|_| Mutex::new(None)).collect();
+        // Pre-sized slot vector written through disjoint indices — no
+        // per-result Mutex allocation or lock traffic on the hot path.
+        let mut results: Vec<Option<T>> = Vec::with_capacity(num_tasks);
+        results.resize_with(num_tasks, || None);
+        let slots = Slots {
+            ptr: results.as_mut_ptr(),
+        };
         let nthreads = self.workers.min(num_tasks);
         std::thread::scope(|scope| {
+            let next = &next;
+            let slots = &slots;
+            let f = &f;
             let mut handles = vec![];
             for _ in 0..nthreads {
-                handles.push(scope.spawn(|| loop {
+                handles.push(scope.spawn(move || loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= num_tasks {
                         break;
                     }
                     let out = f(i);
-                    *results[i].lock().unwrap() = Some(out);
+                    // SAFETY: the atomic counter yields each `i` exactly
+                    // once, `i < num_tasks == results.len()`, and the
+                    // scope joins every worker before `results` is used.
+                    unsafe { slots.write(i, out) };
                 }));
             }
             for h in handles {
@@ -59,7 +98,7 @@ impl Pool {
         });
         results
             .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("task not executed"))
+            .map(|m| m.expect("task not executed"))
             .collect()
     }
 
@@ -124,6 +163,28 @@ mod tests {
         let items: Vec<u64> = (0..50).collect();
         let out = pool.map_slice(&items, |&x| x * 2);
         assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn non_copy_results_land_in_order() {
+        // Heap-owning results exercise the raw-slot writes (moves, drops).
+        let pool = Pool::new(6);
+        let out = pool.run_indexed(5000, |i| format!("task-{i}"));
+        for (i, s) in out.iter().enumerate() {
+            assert_eq!(s, &format!("task-{i}"));
+        }
+    }
+
+    #[test]
+    fn uneven_task_durations_still_complete() {
+        let pool = Pool::new(4);
+        let out = pool.run_indexed(64, |i| {
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            i * 3
+        });
+        assert_eq!(out, (0..64).map(|i| i * 3).collect::<Vec<_>>());
     }
 
     #[test]

@@ -140,6 +140,10 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
             out
         });
         metrics.max_reducer_words = max_red_words.into_inner().unwrap();
+        metrics.output_words_per_task = reduced
+            .iter()
+            .map(|task_out| task_out.iter().map(|p| p.value.words()).sum())
+            .collect();
         let output: Vec<Pair<K, V>> = reduced.into_iter().flatten().collect();
         metrics.reduce_time = t2.elapsed();
         metrics.output_pairs = output.len();
@@ -351,6 +355,34 @@ mod tests {
         assert_eq!(m_a.shuffle_pairs, 400);
         // 4 map tasks × ≤4 keys each = ≤16 combined pairs.
         assert!(m_b.shuffle_pairs <= 16, "combined shuffle {}", m_b.shuffle_pairs);
+    }
+
+    #[test]
+    fn output_words_per_task_conserve_total() {
+        // Uneven key → task routing must still account for every output
+        // word exactly once (the DFS chunk accounting relies on this).
+        let input: Vec<Pair<u32, f32>> = (0..7).map(|i| Pair::new(i, 1.0)).collect();
+        let reducer = FnReducer::new(|_r, k: &u32, vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
+            emit(*k, vs.iter().sum());
+        });
+        let job = Job {
+            config: EngineConfig {
+                map_tasks: 2,
+                reduce_tasks: 3,
+                workers: 2,
+            },
+            combiner: None,
+            mapper: &IdentityMapper,
+            reducer: &reducer,
+            partitioner: &HashPartitioner,
+        };
+        let (_, m) = job.run(0, &input);
+        assert_eq!(m.output_words_per_task.len(), 3, "one entry per reduce task");
+        assert_eq!(
+            m.output_words_per_task.iter().sum::<usize>(),
+            m.output_words,
+            "per-task words must sum to the round total"
+        );
     }
 
     #[test]

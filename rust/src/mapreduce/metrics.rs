@@ -34,6 +34,10 @@ pub struct RoundMetrics {
     pub output_words: usize,
     /// Reducer groups per reduce task (for Figure 1 load-balance plots).
     pub reducers_per_task: Vec<usize>,
+    /// Output words written by each reduce task — the exact per-chunk
+    /// accounting the DFS materialisation uses
+    /// (`sum == output_words`; empty when the engine did not record it).
+    pub output_words_per_task: Vec<usize>,
     /// Wall time of the map step.
     pub map_time: Duration,
     /// Wall time of the shuffle step (partition + group).

@@ -21,7 +21,7 @@ pub mod metrics;
 pub mod shuffle;
 pub mod types;
 
-pub use driver::{Driver, MultiRoundAlgorithm};
+pub use driver::{Driver, MultiRoundAlgorithm, StepRun};
 pub use job::{EngineConfig, Job};
 pub use metrics::{JobMetrics, RoundMetrics};
 pub use types::{Mapper, Pair, Partitioner, Reducer, Value};

@@ -1,0 +1,466 @@
+//! Job submissions and their resumable executions.
+//!
+//! A [`JobSpec`] names a tenant, a multiplication kind (with per-job ρ
+//! and block side), and a seed that deterministically generates the
+//! input matrices. [`spawn_job`] turns a spec into a type-erased
+//! [`ActiveJob`] — a [`StepRun`] plus output assembly and per-round
+//! time predictions from the cost-model simulator — which the
+//! round-level scheduler steps one round at a time.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::m3::algo3d::{Algo3d, Geometry};
+use crate::m3::dense2d::Algo2d;
+use crate::m3::multiply::{
+    dense_3d_assemble, dense_3d_static_input, sparse_3d_assemble, sparse_3d_static_input,
+    DenseBlock, DenseOps, SparseBlock, SparseOps,
+};
+use crate::m3::partitioner::{BalancedPartitioner2d, BalancedPartitioner3d};
+use crate::m3::planner::{Plan2d, Plan3d, SparsePlan};
+use crate::mapreduce::{
+    EngineConfig, JobMetrics, MultiRoundAlgorithm, Pair, RoundMetrics, StepRun,
+};
+use crate::matrix::{gen, BlockGrid, CooMatrix, DenseMatrix};
+use crate::runtime::LocalMultiply;
+use crate::simulator::{simulate_dense2d, simulate_dense3d, simulate_sparse3d, ClusterProfile};
+use crate::util::rng::Xoshiro256ss;
+
+/// Which multiplication a job runs, with its tradeoff knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// Dense 3D (paper Algorithm 1): `q = side/block_side`, `ρ | q`.
+    Dense3d {
+        /// Matrix side `√n`.
+        side: usize,
+        /// Block side `√m`.
+        block_side: usize,
+        /// Replication factor ρ.
+        rho: usize,
+    },
+    /// Dense 2D baseline (paper Algorithm 2) with `m = block_side²`.
+    Dense2d {
+        /// Matrix side `√n`.
+        side: usize,
+        /// `√m` (subproblem size `m = block_side²`).
+        block_side: usize,
+        /// Replication factor ρ.
+        rho: usize,
+    },
+    /// Sparse 3D (paper §3.2) on an Erdős–Rényi input.
+    Sparse3d {
+        /// Matrix side `√n`.
+        side: usize,
+        /// Sparse block side `√m'`.
+        block_side: usize,
+        /// Replication factor ρ.
+        rho: usize,
+        /// Expected non-zeros per row (density `δ = nnz_per_row/side`).
+        nnz_per_row: usize,
+    },
+}
+
+impl JobKind {
+    /// The job's replication factor ρ.
+    pub fn rho(&self) -> usize {
+        match *self {
+            JobKind::Dense3d { rho, .. }
+            | JobKind::Dense2d { rho, .. }
+            | JobKind::Sparse3d { rho, .. } => rho,
+        }
+    }
+
+    /// Short human-readable label for tables.
+    pub fn label(&self) -> String {
+        match *self {
+            JobKind::Dense3d {
+                side,
+                block_side,
+                rho,
+            } => format!("3d n={side} b={block_side} rho={rho}"),
+            JobKind::Dense2d {
+                side,
+                block_side,
+                rho,
+            } => format!("2d n={side} b={block_side} rho={rho}"),
+            JobKind::Sparse3d {
+                side,
+                block_side,
+                rho,
+                nnz_per_row,
+            } => format!("sp n={side} b={block_side} rho={rho} k={nnz_per_row}"),
+        }
+    }
+}
+
+/// A job submission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Service-unique job id.
+    pub id: usize,
+    /// Owning tenant.
+    pub tenant: usize,
+    /// What to multiply and how.
+    pub kind: JobKind,
+    /// Seed that deterministically generates the input matrices.
+    pub seed: u64,
+    /// Submission instant on the service's virtual clock, seconds.
+    pub arrival_secs: f64,
+}
+
+/// A finished job's product.
+#[derive(Debug, Clone)]
+pub enum JobOutput {
+    /// Dense product matrix.
+    Dense(DenseMatrix),
+    /// Sparse product matrix.
+    Sparse(CooMatrix),
+}
+
+impl JobOutput {
+    /// Verify this output against the reference multiply for `spec`
+    /// (exact equality — inputs are small-integer valued).
+    pub fn matches(&self, spec: &JobSpec) -> bool {
+        match (self, reference_product(spec)) {
+            (JobOutput::Dense(got), JobOutput::Dense(want)) => got.max_abs_diff(&want) == 0.0,
+            (JobOutput::Sparse(got), JobOutput::Sparse(want)) => {
+                got.to_dense().max_abs_diff(&want.to_dense()) == 0.0
+            }
+            _ => false,
+        }
+    }
+}
+
+/// Regenerate `spec`'s inputs from its seed and compute the product
+/// with the reference (naive / SpGEMM) multiply.
+pub fn reference_product(spec: &JobSpec) -> JobOutput {
+    match spec.kind {
+        JobKind::Dense3d { side, .. } | JobKind::Dense2d { side, .. } => {
+            let (a, b) = dense_inputs(side, spec.seed);
+            JobOutput::Dense(a.matmul_naive(&b))
+        }
+        JobKind::Sparse3d {
+            side, nnz_per_row, ..
+        } => {
+            let (a, b) = sparse_inputs(side, nnz_per_row, spec.seed);
+            JobOutput::Sparse(a.to_csr().spgemm(&b.to_csr()).to_coo())
+        }
+    }
+}
+
+fn dense_inputs(side: usize, seed: u64) -> (DenseMatrix, DenseMatrix) {
+    let mut rng = Xoshiro256ss::new(seed);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    (a, b)
+}
+
+fn sparse_inputs(side: usize, nnz_per_row: usize, seed: u64) -> (CooMatrix, CooMatrix) {
+    let delta = nnz_per_row as f64 / side as f64;
+    let mut rng = Xoshiro256ss::new(seed);
+    let a = gen::erdos_renyi_coo(side, delta, &mut rng);
+    let b = gen::erdos_renyi_coo(side, delta, &mut rng);
+    (a, b)
+}
+
+/// A spawned, resumable job the scheduler can step round by round.
+/// Type-erases the per-payload [`StepRun`]s so heterogeneous jobs share
+/// one queue.
+pub trait ActiveJob: Send {
+    /// Next round to execute (`== num_rounds()` when done).
+    fn next_round(&self) -> usize;
+    /// Total logical rounds.
+    fn num_rounds(&self) -> usize;
+    /// Whether every round has committed.
+    fn is_done(&self) -> bool {
+        self.next_round() >= self.num_rounds()
+    }
+    /// Cost-model prediction of round `round`'s duration in seconds —
+    /// the scheduler's virtual-clock increment and SRPT signal.
+    fn predicted_round_secs(&self, round: usize) -> f64;
+    /// Predicted seconds of work left (including the pending round).
+    fn predicted_remaining_secs(&self) -> f64 {
+        (self.next_round()..self.num_rounds())
+            .map(|r| self.predicted_round_secs(r))
+            .sum()
+    }
+    /// Run and commit the next round.
+    fn step_commit(&mut self) -> RoundMetrics;
+    /// Run the next round but discard its output (spot preemption hit
+    /// mid-round); the round stays pending.
+    fn step_discard(&mut self) -> RoundMetrics;
+    /// Consume the finished job, returning its product and engine
+    /// metrics. Panics if not [`is_done`](Self::is_done).
+    fn finish(self: Box<Self>) -> (JobOutput, JobMetrics);
+}
+
+/// The one concrete [`ActiveJob`]: a resumable [`StepRun`], the
+/// cost-model round predictions, and a deferred output assembler
+/// (the only thing that differs between the three job kinds).
+struct SteppedJob<A: MultiRoundAlgorithm> {
+    run: StepRun<A>,
+    predicted: Vec<f64>,
+    assemble: Box<dyn FnOnce(Vec<Pair<A::K, A::V>>) -> JobOutput + Send>,
+}
+
+impl<A: MultiRoundAlgorithm + Send + 'static> ActiveJob for SteppedJob<A> {
+    fn next_round(&self) -> usize {
+        self.run.next_round()
+    }
+    fn num_rounds(&self) -> usize {
+        self.run.num_rounds()
+    }
+    fn predicted_round_secs(&self, round: usize) -> f64 {
+        self.predicted[round]
+    }
+    fn step_commit(&mut self) -> RoundMetrics {
+        self.run.step_commit()
+    }
+    fn step_discard(&mut self) -> RoundMetrics {
+        self.run.step_discard()
+    }
+    fn finish(self: Box<Self>) -> (JobOutput, JobMetrics) {
+        let this = *self;
+        let res = this.run.into_result();
+        ((this.assemble)(res.output), res.metrics)
+    }
+}
+
+/// Validate `spec`, generate its inputs, and spawn the resumable job.
+/// All jobs share `engine` (the cluster) and `backend` (the local
+/// multiply); predictions are priced on the in-house cluster profile so
+/// scheduling decisions are deterministic across machines.
+pub fn spawn_job(
+    spec: &JobSpec,
+    engine: EngineConfig,
+    backend: Arc<dyn LocalMultiply>,
+) -> Result<Box<dyn ActiveJob>> {
+    let profile = ClusterProfile::inhouse();
+    match spec.kind {
+        JobKind::Dense3d {
+            side,
+            block_side,
+            rho,
+        } => {
+            let plan = Plan3d::new(side, block_side, rho)?;
+            let (a, b) = dense_inputs(side, spec.seed);
+            let grid = BlockGrid::new(side, block_side);
+            let input = dense_3d_static_input(&grid, &a, &b);
+            let geo: Geometry = plan.into();
+            let alg = Algo3d::new(
+                geo,
+                Arc::new(DenseOps::new(backend)),
+                Box::new(BalancedPartitioner3d {
+                    q: geo.q,
+                    rho: geo.rho,
+                }),
+            );
+            Ok(Box::new(SteppedJob {
+                run: StepRun::new(engine, alg, input),
+                predicted: simulate_dense3d(&plan, &profile).per_round(),
+                assemble: Box::new(move |out| {
+                    JobOutput::Dense(dense_3d_assemble(&grid, out))
+                }),
+            }))
+        }
+        JobKind::Dense2d {
+            side,
+            block_side,
+            rho,
+        } => {
+            let plan = Plan2d::new(side, block_side * block_side, rho)?;
+            let (a, b) = dense_inputs(side, spec.seed);
+            let input = Algo2d::static_input(plan, &a, &b);
+            let alg = Algo2d::new(
+                plan,
+                backend,
+                Box::new(BalancedPartitioner2d {
+                    strips: plan.strips(),
+                    rho: plan.rho,
+                }),
+            );
+            Ok(Box::new(SteppedJob {
+                run: StepRun::new(engine, alg, input),
+                predicted: simulate_dense2d(&plan, &profile).per_round(),
+                assemble: Box::new(move |out| {
+                    JobOutput::Dense(Algo2d::assemble_output(plan, &out))
+                }),
+            }))
+        }
+        JobKind::Sparse3d {
+            side,
+            block_side,
+            rho,
+            nnz_per_row,
+        } => {
+            let delta = nnz_per_row as f64 / side as f64;
+            let delta_m = delta.max(gen::er_output_density(side, delta));
+            let plan = SparsePlan::new(side, block_side, rho, delta, delta_m)?;
+            let (a, b) = sparse_inputs(side, nnz_per_row, spec.seed);
+            let input = sparse_3d_static_input(block_side, &a, &b);
+            let geo = Geometry {
+                q: plan.q(),
+                rho: plan.rho,
+            };
+            let alg = Algo3d::new(
+                geo,
+                Arc::new(SparseOps),
+                Box::new(BalancedPartitioner3d {
+                    q: geo.q,
+                    rho: geo.rho,
+                }),
+            );
+            Ok(Box::new(SteppedJob {
+                run: StepRun::new(engine, alg, input),
+                predicted: simulate_sparse3d(&plan, &profile).per_round(),
+                assemble: Box::new(move |out| {
+                    JobOutput::Sparse(sparse_3d_assemble(side, block_side, out))
+                }),
+            }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NaiveMultiply;
+
+    fn engine() -> EngineConfig {
+        EngineConfig {
+            map_tasks: 4,
+            reduce_tasks: 4,
+            workers: 4,
+        }
+    }
+
+    fn spec(kind: JobKind) -> JobSpec {
+        JobSpec {
+            id: 0,
+            tenant: 0,
+            kind,
+            seed: 11,
+            arrival_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn dense_3d_job_steps_to_exact_product() {
+        let s = spec(JobKind::Dense3d {
+            side: 16,
+            block_side: 4,
+            rho: 2,
+        });
+        let mut job = spawn_job(&s, engine(), Arc::new(NaiveMultiply)).unwrap();
+        assert_eq!(job.num_rounds(), 3); // q/ρ + 1 = 4/2 + 1
+        assert!(job.predicted_remaining_secs() > 0.0);
+        while !job.is_done() {
+            job.step_commit();
+        }
+        assert_eq!(job.predicted_remaining_secs(), 0.0);
+        let (out, metrics) = job.finish();
+        assert_eq!(metrics.num_rounds(), 3);
+        assert!(out.matches(&s), "stepped product must be exact");
+    }
+
+    #[test]
+    fn dense_2d_job_steps_to_exact_product() {
+        let s = spec(JobKind::Dense2d {
+            side: 16,
+            block_side: 8,
+            rho: 2,
+        });
+        let mut job = spawn_job(&s, engine(), Arc::new(NaiveMultiply)).unwrap();
+        assert_eq!(job.num_rounds(), 2); // s/ρ = 4/2
+        while !job.is_done() {
+            job.step_commit();
+        }
+        let (out, _) = job.finish();
+        assert!(out.matches(&s));
+    }
+
+    #[test]
+    fn sparse_job_steps_to_exact_product() {
+        let s = spec(JobKind::Sparse3d {
+            side: 64,
+            block_side: 16,
+            rho: 2,
+            nnz_per_row: 6,
+        });
+        let mut job = spawn_job(&s, engine(), Arc::new(NaiveMultiply)).unwrap();
+        while !job.is_done() {
+            job.step_commit();
+        }
+        let (out, _) = job.finish();
+        assert!(out.matches(&s));
+    }
+
+    #[test]
+    fn discarded_round_does_not_corrupt_output() {
+        let s = spec(JobKind::Dense3d {
+            side: 16,
+            block_side: 4,
+            rho: 1,
+        });
+        let mut job = spawn_job(&s, engine(), Arc::new(NaiveMultiply)).unwrap();
+        job.step_commit();
+        job.step_discard(); // preempted attempt
+        let pending = job.next_round();
+        assert_eq!(pending, 1, "discard must not advance the round");
+        while !job.is_done() {
+            job.step_commit();
+        }
+        let (out, metrics) = job.finish();
+        assert!(out.matches(&s), "re-executed round must reproduce the product");
+        assert_eq!(metrics.num_rounds(), job_rounds_with_one_retry());
+    }
+
+    fn job_rounds_with_one_retry() -> usize {
+        // q/ρ + 1 = 5 logical rounds + 1 discarded attempt.
+        6
+    }
+
+    #[test]
+    fn spawn_rejects_invalid_geometry() {
+        let bad = spec(JobKind::Dense3d {
+            side: 16,
+            block_side: 5,
+            rho: 1,
+        });
+        assert!(spawn_job(&bad, engine(), Arc::new(NaiveMultiply)).is_err());
+        let bad = spec(JobKind::Dense3d {
+            side: 16,
+            block_side: 4,
+            rho: 3,
+        });
+        assert!(spawn_job(&bad, engine(), Arc::new(NaiveMultiply)).is_err());
+    }
+
+    #[test]
+    fn predictions_match_round_count() {
+        for kind in [
+            JobKind::Dense3d {
+                side: 32,
+                block_side: 8,
+                rho: 2,
+            },
+            JobKind::Dense2d {
+                side: 32,
+                block_side: 8,
+                rho: 4,
+            },
+            JobKind::Sparse3d {
+                side: 64,
+                block_side: 16,
+                rho: 4,
+                nnz_per_row: 4,
+            },
+        ] {
+            let job = spawn_job(&spec(kind), engine(), Arc::new(NaiveMultiply)).unwrap();
+            for r in 0..job.num_rounds() {
+                assert!(job.predicted_round_secs(r) > 0.0, "{kind:?} round {r}");
+            }
+        }
+    }
+}

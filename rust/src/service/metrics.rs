@@ -1,0 +1,286 @@
+//! Per-job and per-tenant service metrics.
+//!
+//! The engine-level [`crate::mapreduce::JobMetrics`] describe what
+//! happened *inside* a job's rounds; these types describe what happened
+//! *around* them on the shared cluster: queue wait (arrival → first
+//! round), sojourn/makespan (arrival → completion), committed virtual
+//! service, and the work discarded by spot preemptions. All durations
+//! are virtual-clock seconds, so they are deterministic per seed.
+
+use crate::util::stats;
+use crate::util::table::Table;
+
+use super::job::JobSpec;
+
+/// Service-level record of one job.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    /// Job id.
+    pub job: usize,
+    /// Owning tenant.
+    pub tenant: usize,
+    /// Human-readable kind label.
+    pub label: String,
+    /// The job's replication factor ρ.
+    pub rho: usize,
+    /// Logical rounds of the job.
+    pub rounds_total: usize,
+    /// Round attempts actually run (committed + discarded).
+    pub rounds_executed: usize,
+    /// Submission instant.
+    pub arrival_secs: f64,
+    /// Instant the job first occupied the cluster (NaN until served).
+    pub first_service_secs: f64,
+    /// Instant the last round committed (NaN until done).
+    pub completion_secs: f64,
+    /// Committed virtual service, seconds.
+    pub service_secs: f64,
+    /// Virtual work discarded by spot preemptions, seconds.
+    pub discarded_secs: f64,
+    /// Spot preemptions that struck this job mid-round.
+    pub preemptions: usize,
+    /// Measured engine wall time across all round attempts, seconds.
+    pub wall_secs: f64,
+}
+
+impl JobReport {
+    /// Fresh report for a submitted job.
+    pub fn submitted(spec: &JobSpec, rounds_total: usize) -> Self {
+        JobReport {
+            job: spec.id,
+            tenant: spec.tenant,
+            label: spec.kind.label(),
+            rho: spec.kind.rho(),
+            rounds_total,
+            rounds_executed: 0,
+            arrival_secs: spec.arrival_secs,
+            first_service_secs: f64::NAN,
+            completion_secs: f64::NAN,
+            service_secs: 0.0,
+            discarded_secs: 0.0,
+            preemptions: 0,
+            wall_secs: 0.0,
+        }
+    }
+
+    /// Arrival → first round on the cluster.
+    pub fn queue_wait_secs(&self) -> f64 {
+        self.first_service_secs - self.arrival_secs
+    }
+
+    /// Arrival → completion (the job's makespan).
+    pub fn sojourn_secs(&self) -> f64 {
+        self.completion_secs - self.arrival_secs
+    }
+}
+
+/// Aggregate view of one tenant.
+#[derive(Debug, Clone)]
+pub struct TenantSummary {
+    /// Tenant id.
+    pub tenant: usize,
+    /// Completed jobs.
+    pub jobs: usize,
+    /// Mean queue wait, seconds.
+    pub mean_queue_wait_secs: f64,
+    /// Mean sojourn, seconds.
+    pub mean_sojourn_secs: f64,
+    /// Committed virtual service, seconds.
+    pub service_secs: f64,
+    /// Discarded virtual work, seconds.
+    pub discarded_secs: f64,
+}
+
+/// Service metrics of a full workload.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceMetrics {
+    /// One report per completed job, sorted by job id.
+    pub jobs: Vec<JobReport>,
+}
+
+impl ServiceMetrics {
+    fn queue_waits(&self) -> Vec<f64> {
+        self.jobs.iter().map(|j| j.queue_wait_secs()).collect()
+    }
+
+    fn sojourns(&self) -> Vec<f64> {
+        self.jobs.iter().map(|j| j.sojourn_secs()).collect()
+    }
+
+    /// Mean queue wait across jobs.
+    pub fn mean_queue_wait_secs(&self) -> f64 {
+        stats::mean(&self.queue_waits())
+    }
+
+    /// 95th-percentile queue wait.
+    pub fn p95_queue_wait_secs(&self) -> f64 {
+        stats::percentile(&self.queue_waits(), 95.0)
+    }
+
+    /// Mean sojourn (per-job makespan).
+    pub fn mean_sojourn_secs(&self) -> f64 {
+        stats::mean(&self.sojourns())
+    }
+
+    /// 95th-percentile sojourn.
+    pub fn p95_sojourn_secs(&self) -> f64 {
+        stats::percentile(&self.sojourns(), 95.0)
+    }
+
+    /// Workload makespan: first arrival → last completion.
+    pub fn makespan_secs(&self) -> f64 {
+        let first = self
+            .jobs
+            .iter()
+            .map(|j| j.arrival_secs)
+            .fold(f64::INFINITY, f64::min);
+        let last = self
+            .jobs
+            .iter()
+            .map(|j| j.completion_secs)
+            .fold(0.0f64, f64::max);
+        if self.jobs.is_empty() {
+            0.0
+        } else {
+            last - first
+        }
+    }
+
+    /// Total virtual work discarded by preemptions.
+    pub fn total_discarded_secs(&self) -> f64 {
+        self.jobs.iter().map(|j| j.discarded_secs).sum()
+    }
+
+    /// Total spot preemptions that hit mid-round.
+    pub fn total_preemptions(&self) -> usize {
+        self.jobs.iter().map(|j| j.preemptions).sum()
+    }
+
+    /// Per-tenant aggregates, sorted by tenant id.
+    pub fn by_tenant(&self) -> Vec<TenantSummary> {
+        let mut tenants: Vec<usize> = self.jobs.iter().map(|j| j.tenant).collect();
+        tenants.sort_unstable();
+        tenants.dedup();
+        tenants
+            .into_iter()
+            .map(|t| {
+                let js: Vec<&JobReport> = self.jobs.iter().filter(|j| j.tenant == t).collect();
+                let waits: Vec<f64> = js.iter().map(|j| j.queue_wait_secs()).collect();
+                let sojourns: Vec<f64> = js.iter().map(|j| j.sojourn_secs()).collect();
+                TenantSummary {
+                    tenant: t,
+                    jobs: js.len(),
+                    mean_queue_wait_secs: stats::mean(&waits),
+                    mean_sojourn_secs: stats::mean(&sojourns),
+                    service_secs: js.iter().map(|j| j.service_secs).sum(),
+                    discarded_secs: js.iter().map(|j| j.discarded_secs).sum(),
+                }
+            })
+            .collect()
+    }
+
+    /// Render the per-job table.
+    pub fn table(&self) -> String {
+        let mut t = Table::new(&[
+            "job", "tenant", "kind", "rounds", "arrive", "wait(s)", "sojourn(s)", "service(s)",
+            "lost(s)", "preempt",
+        ]);
+        for j in &self.jobs {
+            t.row(&[
+                j.job.to_string(),
+                j.tenant.to_string(),
+                j.label.clone(),
+                format!("{}/{}", j.rounds_executed, j.rounds_total),
+                format!("{:.1}", j.arrival_secs),
+                format!("{:.1}", j.queue_wait_secs()),
+                format!("{:.1}", j.sojourn_secs()),
+                format!("{:.1}", j.service_secs),
+                format!("{:.1}", j.discarded_secs),
+                j.preemptions.to_string(),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Render the per-tenant table.
+    pub fn tenant_table(&self) -> String {
+        let mut t = Table::new(&[
+            "tenant",
+            "jobs",
+            "mean_wait(s)",
+            "mean_sojourn(s)",
+            "service(s)",
+            "lost(s)",
+        ]);
+        for s in self.by_tenant() {
+            t.row(&[
+                s.tenant.to_string(),
+                s.jobs.to_string(),
+                format!("{:.1}", s.mean_queue_wait_secs),
+                format!("{:.1}", s.mean_sojourn_secs),
+                format!("{:.1}", s.service_secs),
+                format!("{:.1}", s.discarded_secs),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::job::JobKind;
+
+    fn report(job: usize, tenant: usize, arrive: f64, first: f64, done: f64) -> JobReport {
+        let spec = JobSpec {
+            id: job,
+            tenant,
+            kind: JobKind::Dense3d {
+                side: 16,
+                block_side: 4,
+                rho: 2,
+            },
+            seed: 1,
+            arrival_secs: arrive,
+        };
+        let mut r = JobReport::submitted(&spec, 3);
+        r.first_service_secs = first;
+        r.completion_secs = done;
+        r.service_secs = done - first;
+        r
+    }
+
+    #[test]
+    fn waits_and_sojourns() {
+        let r = report(0, 0, 10.0, 15.0, 40.0);
+        assert_eq!(r.queue_wait_secs(), 5.0);
+        assert_eq!(r.sojourn_secs(), 30.0);
+    }
+
+    #[test]
+    fn aggregates() {
+        let m = ServiceMetrics {
+            jobs: vec![
+                report(0, 0, 0.0, 0.0, 20.0),
+                report(1, 1, 5.0, 15.0, 45.0),
+            ],
+        };
+        assert_eq!(m.mean_queue_wait_secs(), 5.0);
+        assert_eq!(m.mean_sojourn_secs(), 30.0);
+        assert_eq!(m.makespan_secs(), 45.0);
+        assert_eq!(m.total_preemptions(), 0);
+        let tenants = m.by_tenant();
+        assert_eq!(tenants.len(), 2);
+        assert_eq!(tenants[0].jobs, 1);
+        assert_eq!(tenants[1].mean_queue_wait_secs, 10.0);
+    }
+
+    #[test]
+    fn tables_render() {
+        let m = ServiceMetrics {
+            jobs: vec![report(0, 0, 0.0, 1.0, 2.0)],
+        };
+        assert!(m.table().contains("tenant"));
+        assert!(m.tenant_table().contains("mean_wait"));
+    }
+}

@@ -1,0 +1,47 @@
+//! Multi-tenant job service: a round-level scheduler that multiplexes
+//! concurrent M3 jobs over the shared cluster.
+//!
+//! The paper's §1 "service market" argument is that multi-round
+//! algorithms let the round count adapt to the *execution context*; the
+//! sharpest such context is a shared cluster where many jobs compete
+//! for slots and spot preemptions strike mid-round. This subsystem
+//! realises that setting in-process:
+//!
+//! * [`job`] — [`job::JobSpec`] submissions (dense 3D/2D and sparse
+//!   multiplications with per-job ρ, block side, and tenant id), spawned
+//!   into type-erased [`job::ActiveJob`]s built on the resumable
+//!   [`crate::mapreduce::StepRun`] step API. Round-time predictions come
+//!   from the [`crate::simulator`] cost model.
+//! * [`scheduler`] — the round-level scheduler: between any two rounds
+//!   it may switch jobs, interleaving the round sequences of concurrent
+//!   jobs over the shared [`crate::mapreduce::executor::Pool`] under a
+//!   pluggable [`scheduler::Policy`] — FIFO, fair share per tenant, or
+//!   SRPT on predicted remaining work. Rounds are never run
+//!   concurrently with each other: like Hadoop, the cluster's slots are
+//!   fully devoted to one round at a time, and multiplexing happens at
+//!   the round boundary — which is exactly why small-ρ (more, shorter
+//!   rounds) jobs interleave better under contention.
+//! * [`spot`] — spot-market semantics: injected preemptions discard
+//!   only the in-flight round of the victim job (generalising
+//!   [`crate::mapreduce::Driver::run_preempted`] to a multi-job
+//!   setting), plus a pure replay used at paper scale.
+//! * [`workload`] — deterministic seeded workload generator (arrival
+//!   process over mixed job sizes and tenants).
+//! * [`metrics`] — per-job / per-tenant service metrics: queue wait,
+//!   sojourn (makespan), committed service, and discarded work, built on
+//!   [`crate::mapreduce::JobMetrics`].
+//!
+//! Entry point: [`scheduler::run_service`], exposed on the CLI as
+//! `m3 serve`.
+
+pub mod job;
+pub mod metrics;
+pub mod scheduler;
+pub mod spot;
+pub mod workload;
+
+pub use job::{reference_product, spawn_job, JobKind, JobOutput, JobSpec};
+pub use metrics::{JobReport, ServiceMetrics, TenantSummary};
+pub use scheduler::{run_service, CompletedJob, Policy, RoundTrace, ServiceConfig, ServiceOutcome};
+pub use spot::{poisson_preemptions, replay_with_preemptions, SpotReplay};
+pub use workload::{generate, skewed, WorkloadConfig};

@@ -1,0 +1,428 @@
+//! The round-level scheduler.
+//!
+//! The cluster (one [`EngineConfig`]-worth of slots) runs exactly one
+//! round at a time — Hadoop's barriers make a round an indivisible unit
+//! of cluster occupation. The scheduler's only decision point is the
+//! round boundary: after every committed (or preempted) round it picks,
+//! under a [`Policy`], which active job's next round occupies the
+//! cluster. Jobs with small ρ expose more boundaries, so they interleave
+//! better under contention — the service-market argument of the paper,
+//! §1, made operational.
+//!
+//! Time: scheduling runs on a deterministic *virtual clock* advanced by
+//! the cost-model prediction of each round (the same numbers SRPT
+//! ranks by), so a given seed and policy always produce the same
+//! schedule regardless of host speed; real wall times are recorded
+//! alongside for reporting.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::mapreduce::EngineConfig;
+use crate::runtime::LocalMultiply;
+
+use super::job::{spawn_job, ActiveJob, JobOutput, JobSpec};
+use super::metrics::{JobReport, ServiceMetrics};
+
+/// Round-selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Earliest arrival runs to completion first (no interleaving —
+    /// the monolithic baseline).
+    Fifo,
+    /// Fair share per tenant: the tenant with the least committed
+    /// virtual service runs next (earliest arrival within the tenant).
+    Fair,
+    /// Shortest remaining (predicted) processing time first.
+    Srpt,
+}
+
+impl Policy {
+    /// Parse a CLI name.
+    pub fn parse(name: &str) -> Result<Policy> {
+        Ok(match name {
+            "fifo" => Policy::Fifo,
+            "fair" => Policy::Fair,
+            "srpt" => Policy::Srpt,
+            other => anyhow::bail!("unknown policy {other:?} (fifo|fair|srpt)"),
+        })
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::Fair => "fair",
+            Policy::Srpt => "srpt",
+        }
+    }
+}
+
+/// Service configuration: the shared cluster, the policy, and the
+/// spot-market preemption schedule (virtual-time instants).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Shared cluster (slots / workers) every round runs on.
+    pub engine: EngineConfig,
+    /// Round-selection policy.
+    pub policy: Policy,
+    /// Virtual-time instants at which a spot preemption strikes the
+    /// job occupying the cluster; each discards only that in-flight
+    /// round. Instants that land on an idle cluster are ignored.
+    pub preemptions: Vec<f64>,
+}
+
+/// One scheduled round attempt, for interleaving analysis and tests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundTrace {
+    /// Job id.
+    pub job: usize,
+    /// Tenant id.
+    pub tenant: usize,
+    /// Logical round index attempted.
+    pub round: usize,
+    /// Virtual start time, seconds.
+    pub start_secs: f64,
+    /// Virtual duration: the prediction if committed, the truncated
+    /// partial work if preempted.
+    pub duration_secs: f64,
+    /// `false` when a spot preemption discarded this attempt.
+    pub committed: bool,
+}
+
+/// A job that ran to completion.
+pub struct CompletedJob {
+    /// The original submission.
+    pub spec: JobSpec,
+    /// The product.
+    pub output: JobOutput,
+    /// Engine metrics of every round attempt.
+    pub metrics: crate::mapreduce::JobMetrics,
+}
+
+/// Everything the service produced for one workload.
+pub struct ServiceOutcome {
+    /// Per-job service metrics (sorted by job id).
+    pub metrics: ServiceMetrics,
+    /// The full round-grain schedule in execution order.
+    pub trace: Vec<RoundTrace>,
+    /// Completed jobs with outputs (sorted by job id).
+    pub completed: Vec<CompletedJob>,
+}
+
+struct Entry {
+    spec: JobSpec,
+    job: Box<dyn ActiveJob>,
+    report: JobReport,
+}
+
+/// Run `specs` to completion on the shared cluster under `cfg`.
+///
+/// Deterministic: the schedule depends only on the specs (arrivals,
+/// seeds), the policy, and the preemption schedule — never on measured
+/// wall time.
+pub fn run_service(
+    specs: &[JobSpec],
+    cfg: &ServiceConfig,
+    backend: Arc<dyn LocalMultiply>,
+) -> Result<ServiceOutcome> {
+    let mut order: Vec<JobSpec> = specs.to_vec();
+    order.sort_by(|a, b| {
+        a.arrival_secs
+            .partial_cmp(&b.arrival_secs)
+            .unwrap()
+            .then(a.id.cmp(&b.id))
+    });
+    let mut preempts = cfg.preemptions.clone();
+    preempts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut next_preempt = 0usize;
+
+    let mut arrivals = order.into_iter().peekable();
+    let mut active: Vec<Entry> = Vec::new();
+    let mut trace: Vec<RoundTrace> = Vec::new();
+    let mut reports: Vec<JobReport> = Vec::new();
+    let mut completed: Vec<CompletedJob> = Vec::new();
+    let mut tenant_service: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut clock = 0.0f64;
+
+    loop {
+        // Admit every job that has arrived by now.
+        while arrivals.peek().is_some_and(|s| s.arrival_secs <= clock) {
+            let spec = arrivals.next().unwrap();
+            let job = spawn_job(&spec, cfg.engine, backend.clone())?;
+            let report = JobReport::submitted(&spec, job.num_rounds());
+            active.push(Entry { spec, job, report });
+        }
+        if active.is_empty() {
+            match arrivals.peek() {
+                None => break, // drained
+                Some(s) => {
+                    // Idle until the next arrival.
+                    clock = clock.max(s.arrival_secs);
+                    continue;
+                }
+            }
+        }
+
+        // Pick the job whose round occupies the cluster next.
+        let idx = pick(cfg.policy, &active, &tenant_service);
+        let e = &mut active[idx];
+        if e.report.first_service_secs.is_nan() {
+            e.report.first_service_secs = clock;
+        }
+        let round = e.job.next_round();
+        let pred = e.job.predicted_round_secs(round).max(1e-9);
+
+        // Preemptions that struck an idle cluster or a round boundary
+        // in the past hit nothing.
+        while next_preempt < preempts.len() && preempts[next_preempt] < clock {
+            next_preempt += 1;
+        }
+        let strike = next_preempt < preempts.len() && preempts[next_preempt] < clock + pred;
+        if strike {
+            // Spot preemption mid-round: the in-flight round's partial
+            // work is lost; committed rounds are untouched and the
+            // round re-runs at the job's next turn.
+            let at = preempts[next_preempt];
+            next_preempt += 1;
+            let m = e.job.step_discard();
+            let lost = at - clock;
+            e.report.discarded_secs += lost;
+            e.report.preemptions += 1;
+            e.report.rounds_executed += 1;
+            e.report.wall_secs += m.total_time().as_secs_f64();
+            trace.push(RoundTrace {
+                job: e.spec.id,
+                tenant: e.spec.tenant,
+                round,
+                start_secs: clock,
+                duration_secs: lost,
+                committed: false,
+            });
+            clock = at;
+            continue;
+        }
+
+        let m = e.job.step_commit();
+        e.report.rounds_executed += 1;
+        e.report.service_secs += pred;
+        e.report.wall_secs += m.total_time().as_secs_f64();
+        *tenant_service.entry(e.spec.tenant).or_default() += pred;
+        trace.push(RoundTrace {
+            job: e.spec.id,
+            tenant: e.spec.tenant,
+            round,
+            start_secs: clock,
+            duration_secs: pred,
+            committed: true,
+        });
+        clock += pred;
+
+        if e.job.is_done() {
+            let ent = active.swap_remove(idx);
+            let mut report = ent.report;
+            report.completion_secs = clock;
+            let (output, metrics) = ent.job.finish();
+            reports.push(report);
+            completed.push(CompletedJob {
+                spec: ent.spec,
+                output,
+                metrics,
+            });
+        }
+    }
+
+    reports.sort_by_key(|r| r.job);
+    completed.sort_by_key(|c| c.spec.id);
+    Ok(ServiceOutcome {
+        metrics: ServiceMetrics { jobs: reports },
+        trace,
+        completed,
+    })
+}
+
+/// Pick the next job index under `policy` (deterministic tie-breaks:
+/// arrival instant, then job id).
+fn pick(policy: Policy, active: &[Entry], tenant_service: &BTreeMap<usize, f64>) -> usize {
+    let key = |e: &Entry| -> (f64, f64, usize) {
+        match policy {
+            Policy::Fifo => (0.0, e.spec.arrival_secs, e.spec.id),
+            Policy::Fair => (
+                tenant_service.get(&e.spec.tenant).copied().unwrap_or(0.0),
+                e.spec.arrival_secs,
+                e.spec.id,
+            ),
+            Policy::Srpt => (
+                e.job.predicted_remaining_secs(),
+                e.spec.arrival_secs,
+                e.spec.id,
+            ),
+        }
+    };
+    let mut best = 0usize;
+    let mut best_key = key(&active[0]);
+    for (i, e) in active.iter().enumerate().skip(1) {
+        let k = key(e);
+        if k.partial_cmp(&best_key) == Some(std::cmp::Ordering::Less) {
+            best = i;
+            best_key = k;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NaiveMultiply;
+    use crate::service::job::JobKind;
+
+    fn engine() -> EngineConfig {
+        EngineConfig {
+            map_tasks: 4,
+            reduce_tasks: 4,
+            workers: 4,
+        }
+    }
+
+    fn small3d(id: usize, tenant: usize, arrival: f64, rho: usize) -> JobSpec {
+        JobSpec {
+            id,
+            tenant,
+            kind: JobKind::Dense3d {
+                side: 16,
+                block_side: 4,
+                rho,
+            },
+            seed: 100 + id as u64,
+            arrival_secs: arrival,
+        }
+    }
+
+    fn cfg(policy: Policy) -> ServiceConfig {
+        ServiceConfig {
+            engine: engine(),
+            policy,
+            preemptions: vec![],
+        }
+    }
+
+    fn run(specs: &[JobSpec], c: &ServiceConfig) -> ServiceOutcome {
+        run_service(specs, c, Arc::new(NaiveMultiply)).unwrap()
+    }
+
+    #[test]
+    fn single_job_completes_exactly() {
+        let specs = vec![small3d(0, 0, 0.0, 2)];
+        let out = run(&specs, &cfg(Policy::Fifo));
+        assert_eq!(out.completed.len(), 1);
+        assert!(out.completed[0].output.matches(&specs[0]));
+        let r = &out.metrics.jobs[0];
+        assert_eq!(r.rounds_total, 3);
+        assert_eq!(r.rounds_executed, 3);
+        assert_eq!(r.queue_wait_secs(), 0.0);
+        assert!(r.completion_secs > 0.0);
+    }
+
+    #[test]
+    fn fair_interleaves_rounds_of_concurrent_jobs() {
+        // Two identical 5-round jobs from different tenants, both at
+        // t=0: fair share must alternate their rounds on the cluster.
+        let specs = vec![small3d(0, 0, 0.0, 1), small3d(1, 1, 0.0, 1)];
+        let out = run(&specs, &cfg(Policy::Fair));
+        let jobs: Vec<usize> = out.trace.iter().map(|t| t.job).collect();
+        assert_eq!(jobs.len(), 10);
+        let switches = jobs.windows(2).filter(|w| w[0] != w[1]).count();
+        assert!(
+            switches >= 8,
+            "fair share should alternate nearly every round: {jobs:?}"
+        );
+        for c in &out.completed {
+            let spec = &c.spec;
+            assert!(c.output.matches(spec), "job {} wrong product", spec.id);
+        }
+    }
+
+    #[test]
+    fn fifo_never_interleaves() {
+        let specs = vec![small3d(0, 0, 0.0, 1), small3d(1, 1, 0.0, 1)];
+        let out = run(&specs, &cfg(Policy::Fifo));
+        let jobs: Vec<usize> = out.trace.iter().map(|t| t.job).collect();
+        assert_eq!(jobs, vec![0, 0, 0, 0, 0, 1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn srpt_runs_shorter_job_first() {
+        // Job 0: rho=1 → 5 rounds; job 1: rho=2 → 3 rounds. Both at t=0.
+        let specs = vec![small3d(0, 0, 0.0, 1), small3d(1, 1, 0.0, 2)];
+        let out = run(&specs, &cfg(Policy::Srpt));
+        let r0 = &out.metrics.jobs[0];
+        let r1 = &out.metrics.jobs[1];
+        assert!(
+            r1.completion_secs < r0.completion_secs,
+            "shorter job must finish first under SRPT"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_policy() {
+        let specs: Vec<JobSpec> = (0..4).map(|i| small3d(i, i % 2, i as f64, 1)).collect();
+        for policy in [Policy::Fifo, Policy::Fair, Policy::Srpt] {
+            let a = run(&specs, &cfg(policy));
+            let b = run(&specs, &cfg(policy));
+            assert_eq!(a.trace, b.trace, "policy {policy:?} must be deterministic");
+        }
+    }
+
+    #[test]
+    fn late_arrival_waits_for_admission() {
+        let specs = vec![small3d(0, 0, 0.0, 2), small3d(1, 1, 1e6, 2)];
+        let out = run(&specs, &cfg(Policy::Fair));
+        let r1 = &out.metrics.jobs[1];
+        assert!(r1.first_service_secs >= 1e6, "job 1 cannot start before arriving");
+        assert_eq!(r1.queue_wait_secs(), 0.0, "idle cluster serves it immediately");
+    }
+
+    #[test]
+    fn preemption_discards_only_inflight_round() {
+        let specs = vec![small3d(0, 0, 0.0, 1)];
+        // Strike mid-way through the job's second round.
+        let probe = run(&specs, &cfg(Policy::Fifo));
+        let second_round_start = probe.trace[1].start_secs;
+        let strike_at = second_round_start + 0.5 * probe.trace[1].duration_secs;
+
+        let mut c = cfg(Policy::Fifo);
+        c.preemptions = vec![strike_at];
+        let out = run(&specs, &c);
+        let r = &out.metrics.jobs[0];
+        assert_eq!(r.preemptions, 1);
+        assert!(r.discarded_secs > 0.0);
+        assert_eq!(r.rounds_executed, r.rounds_total + 1, "one retried round");
+        let discarded: Vec<&RoundTrace> =
+            out.trace.iter().filter(|t| !t.committed).collect();
+        assert_eq!(discarded.len(), 1);
+        assert_eq!(discarded[0].round, 1, "only the in-flight round is lost");
+        assert!(out.completed[0].output.matches(&specs[0]), "output still exact");
+    }
+
+    #[test]
+    fn preemption_past_all_work_is_ignored() {
+        let specs = vec![small3d(0, 0, 0.0, 2)];
+        let mut c = cfg(Policy::Fair);
+        c.preemptions = vec![1e12];
+        let out = run(&specs, &c);
+        let r = &out.metrics.jobs[0];
+        assert_eq!(r.preemptions, 0);
+        assert_eq!(r.discarded_secs, 0.0);
+    }
+
+    #[test]
+    fn policy_parse_round_trips() {
+        for p in [Policy::Fifo, Policy::Fair, Policy::Srpt] {
+            assert_eq!(Policy::parse(p.name()).unwrap(), p);
+        }
+        assert!(Policy::parse("rr").is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! Spot-market preemption schedules and their pure replay.
+//!
+//! The paper's §1 service-market argument: spot/preemptible nodes make
+//! preemptions routine, Hadoop cannot resume mid-round, so every strike
+//! discards the in-flight round — and small ρ (short rounds) bounds the
+//! loss. [`poisson_preemptions`] draws a deterministic strike schedule;
+//! [`replay_with_preemptions`] prices its effect on a round sequence
+//! without running the engine (the paper-scale counterpart of
+//! [`crate::mapreduce::Driver::run_preempted`], with identical
+//! semantics: a strike during round `r` loses the partial work and
+//! restarts `r`).
+
+use crate::util::rng::Xoshiro256ss;
+
+/// Deterministic Poisson strike process: exponential inter-arrival
+/// times with rate `rate_per_sec`, truncated at `horizon_secs`.
+pub fn poisson_preemptions(rate_per_sec: f64, horizon_secs: f64, seed: u64) -> Vec<f64> {
+    assert!(rate_per_sec >= 0.0 && horizon_secs >= 0.0);
+    let mut out = vec![];
+    if rate_per_sec == 0.0 {
+        return out;
+    }
+    let mut rng = Xoshiro256ss::new(seed);
+    let mut t = 0.0f64;
+    loop {
+        // Exponential(-ln U / λ); 1-U ∈ (0, 1] avoids ln(0).
+        let u = 1.0 - rng.next_f64();
+        t += -u.ln() / rate_per_sec;
+        if t >= horizon_secs {
+            return out;
+        }
+        out.push(t);
+    }
+}
+
+/// Result of replaying a preemption schedule over a round sequence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpotReplay {
+    /// Wall seconds including re-executed partial rounds.
+    pub total_secs: f64,
+    /// Seconds of work discarded by strikes.
+    pub discarded_secs: f64,
+    /// Strikes that hit mid-round.
+    pub preemptions: usize,
+}
+
+/// Replay `preempt_at` (instants in *useful-work* time, like
+/// [`crate::mapreduce::Driver::run_preempted`]'s schedule) over a job
+/// whose rounds take `round_secs`. A strike during a round discards the
+/// partial work accrued in it and restarts the round; strikes past the
+/// total useful work never fire.
+pub fn replay_with_preemptions(round_secs: &[f64], preempt_at: &[f64]) -> SpotReplay {
+    let mut schedule = preempt_at.to_vec();
+    schedule.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut next = 0usize;
+    let mut done = 0.0f64; // committed useful seconds
+    let mut total = 0.0f64; // wall seconds incl. lost partials
+    let mut discarded = 0.0f64;
+    let mut preemptions = 0usize;
+    for &r in round_secs {
+        loop {
+            let strike =
+                next < schedule.len() && schedule[next] >= done && schedule[next] < done + r;
+            if strike {
+                let lost = schedule[next] - done;
+                discarded += lost;
+                total += lost;
+                preemptions += 1;
+                next += 1;
+                continue; // restart the round
+            }
+            done += r;
+            total += r;
+            break;
+        }
+    }
+    SpotReplay {
+        total_secs: total,
+        discarded_secs: discarded,
+        preemptions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_preemptions_is_plain_sum() {
+        let r = replay_with_preemptions(&[10.0, 20.0, 5.0], &[]);
+        assert_eq!(r.total_secs, 35.0);
+        assert_eq!(r.discarded_secs, 0.0);
+        assert_eq!(r.preemptions, 0);
+    }
+
+    #[test]
+    fn strike_mid_round_restarts_it() {
+        // Strike at t=5 inside the first 10 s round: 5 s lost, round
+        // re-runs → total 5 + 10 + 10 = 25.
+        let r = replay_with_preemptions(&[10.0, 10.0], &[5.0]);
+        assert_eq!(r.total_secs, 25.0);
+        assert_eq!(r.discarded_secs, 5.0);
+        assert_eq!(r.preemptions, 1);
+    }
+
+    #[test]
+    fn strike_on_boundary_hits_next_round_start() {
+        // done=10 after round 0; strike at exactly 10 → round 1 loses
+        // 0 s and restarts (the Hadoop job is re-submitted).
+        let r = replay_with_preemptions(&[10.0, 10.0], &[10.0]);
+        assert_eq!(r.total_secs, 20.0);
+        assert_eq!(r.discarded_secs, 0.0);
+        assert_eq!(r.preemptions, 1);
+    }
+
+    #[test]
+    fn strikes_past_total_work_ignored() {
+        let r = replay_with_preemptions(&[10.0, 10.0], &[100.0]);
+        assert_eq!(r.total_secs, 20.0);
+        assert_eq!(r.preemptions, 0);
+    }
+
+    #[test]
+    fn two_strikes_same_round() {
+        // Strikes at 2 and 7 both inside round 0 (10 s): lost 2 + 7.
+        let r = replay_with_preemptions(&[10.0], &[2.0, 7.0]);
+        assert_eq!(r.discarded_secs, 9.0);
+        assert_eq!(r.total_secs, 19.0);
+        assert_eq!(r.preemptions, 2);
+    }
+
+    #[test]
+    fn shorter_rounds_lose_less_per_schedule() {
+        // Same total useful work (40 s), same strikes: the 8×5 s job
+        // discards less than the 2×20 s job — the paper's small-ρ
+        // resilience argument in one assert.
+        let strikes = [7.0, 23.0, 33.0];
+        let coarse = replay_with_preemptions(&[20.0, 20.0], &strikes);
+        let fine = replay_with_preemptions(&[5.0; 8], &strikes);
+        assert!(
+            fine.discarded_secs < coarse.discarded_secs,
+            "fine {} !< coarse {}",
+            fine.discarded_secs,
+            coarse.discarded_secs
+        );
+    }
+
+    #[test]
+    fn poisson_schedule_is_sorted_deterministic_and_bounded() {
+        let a = poisson_preemptions(0.1, 100.0, 9);
+        let b = poisson_preemptions(0.1, 100.0, 9);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        assert!(a.iter().all(|&t| (0.0..100.0).contains(&t)));
+        assert!(poisson_preemptions(0.0, 100.0, 9).is_empty());
+        // Expected ~10 strikes at rate 0.1 over 100 s.
+        assert!((2..=30).contains(&a.len()), "got {} strikes", a.len());
+    }
+}

@@ -1,0 +1,223 @@
+//! Deterministic synthetic workload generation.
+//!
+//! A seeded arrival process (exponential inter-arrival times) over a
+//! menu of mixed job shapes — dense 3D at several sizes and ρ, the 2D
+//! baseline, and sparse Erdős–Rényi jobs — assigned round-robin-free to
+//! random tenants. Every spec is valid by construction (ρ divides the
+//! geometry), and the same seed always yields byte-identical specs.
+
+use crate::util::rng::Xoshiro256ss;
+
+use super::job::{JobKind, JobSpec};
+
+/// Workload generator parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Number of jobs to generate.
+    pub jobs: usize,
+    /// Number of tenants jobs are drawn from.
+    pub tenants: usize,
+    /// Master seed (drives arrivals, shapes, and per-job input seeds).
+    pub seed: u64,
+    /// Mean of the exponential inter-arrival time, virtual seconds.
+    pub mean_interarrival_secs: f64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            jobs: 16,
+            tenants: 4,
+            seed: 7,
+            mean_interarrival_secs: 25.0,
+        }
+    }
+}
+
+/// Divisors of `q` in increasing order (valid ρ choices).
+fn divisors(q: usize) -> Vec<usize> {
+    (1..=q).filter(|d| q % d == 0).collect()
+}
+
+/// Draw one job shape from the menu. Sizes are kept small enough that a
+/// 16-job workload completes in seconds on the real engine while still
+/// spanning 2–9 rounds per job.
+fn draw_kind(rng: &mut Xoshiro256ss) -> JobKind {
+    // (side, block) menus with their q/s values; ρ drawn from divisors.
+    match rng.next_usize(6) {
+        // Dense 3D dominates the mix, as in the paper's evaluation.
+        0 | 1 => {
+            let (side, block_side) = [(16, 4), (32, 8)][rng.next_usize(2)];
+            let q = side / block_side;
+            let ds = divisors(q);
+            JobKind::Dense3d {
+                side,
+                block_side,
+                rho: ds[rng.next_usize(ds.len())],
+            }
+        }
+        2 | 3 => {
+            let (side, block_side) = [(48, 8), (64, 16)][rng.next_usize(2)];
+            let q = side / block_side;
+            let ds = divisors(q);
+            JobKind::Dense3d {
+                side,
+                block_side,
+                rho: ds[rng.next_usize(ds.len())],
+            }
+        }
+        4 => {
+            // 2D baseline: m = block², s = n/m strips.
+            let (side, block_side) = [(16, 8), (32, 8)][rng.next_usize(2)];
+            let s = (side * side) / (block_side * block_side);
+            let ds = divisors(s);
+            JobKind::Dense2d {
+                side,
+                block_side,
+                rho: ds[rng.next_usize(ds.len())],
+            }
+        }
+        _ => {
+            let side = 64;
+            let block_side = 16; // q = 4
+            let ds = divisors(4);
+            JobKind::Sparse3d {
+                side,
+                block_side,
+                rho: ds[rng.next_usize(ds.len())],
+                nnz_per_row: 4 + rng.next_usize(5),
+            }
+        }
+    }
+}
+
+/// Generate a deterministic workload.
+pub fn generate(cfg: &WorkloadConfig) -> Vec<JobSpec> {
+    let mut rng = Xoshiro256ss::new(cfg.seed);
+    let mut clock = 0.0f64;
+    (0..cfg.jobs)
+        .map(|id| {
+            // Exponential inter-arrival; 1-U ∈ (0,1] avoids ln(0).
+            let u = 1.0 - rng.next_f64();
+            clock += -u.ln() * cfg.mean_interarrival_secs;
+            JobSpec {
+                id,
+                tenant: rng.next_usize(cfg.tenants.max(1)),
+                kind: draw_kind(&mut rng),
+                seed: rng.next_u64(),
+                arrival_secs: clock,
+            }
+        })
+        .collect()
+}
+
+/// A skewed workload: one long-running low-priority job submitted
+/// first (tenant 0), then `small_jobs` short jobs from distinct
+/// tenants arriving shortly after — the scenario where round-level
+/// fair sharing beats FIFO hardest.
+pub fn skewed(small_jobs: usize, seed: u64) -> Vec<JobSpec> {
+    let mut rng = Xoshiro256ss::new(seed);
+    let mut specs = vec![JobSpec {
+        id: 0,
+        tenant: 0,
+        // 2D with s = 16 strips and ρ = 1: 16 rounds of work.
+        kind: JobKind::Dense2d {
+            side: 32,
+            block_side: 8,
+            rho: 1,
+        },
+        seed: rng.next_u64(),
+        arrival_secs: 0.0,
+    }];
+    for i in 0..small_jobs {
+        specs.push(JobSpec {
+            id: i + 1,
+            tenant: i + 1,
+            // 3 rounds each.
+            kind: JobKind::Dense3d {
+                side: 16,
+                block_side: 4,
+                rho: 2,
+            },
+            seed: rng.next_u64(),
+            arrival_secs: 1.0 + i as f64,
+        });
+    }
+    specs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::EngineConfig;
+    use crate::runtime::NaiveMultiply;
+    use crate::service::job::spawn_job;
+    use std::sync::Arc;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = WorkloadConfig::default();
+        assert_eq!(generate(&cfg), generate(&cfg));
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_ids_unique() {
+        let specs = generate(&WorkloadConfig {
+            jobs: 32,
+            ..Default::default()
+        });
+        assert_eq!(specs.len(), 32);
+        assert!(specs
+            .windows(2)
+            .all(|w| w[0].arrival_secs <= w[1].arrival_secs));
+        for (i, s) in specs.iter().enumerate() {
+            assert_eq!(s.id, i);
+            assert!(s.tenant < 4);
+        }
+    }
+
+    #[test]
+    fn every_generated_spec_spawns() {
+        // The whole menu must produce valid geometries.
+        let specs = generate(&WorkloadConfig {
+            jobs: 48,
+            seed: 123,
+            ..Default::default()
+        });
+        let engine = EngineConfig {
+            map_tasks: 2,
+            reduce_tasks: 2,
+            workers: 2,
+        };
+        for s in &specs {
+            let job = spawn_job(s, engine, Arc::new(NaiveMultiply))
+                .unwrap_or_else(|e| panic!("spec {s:?} invalid: {e}"));
+            // 3D jobs have ≥ 2 rounds; a 2D job with ρ = s has exactly 1.
+            assert!(job.num_rounds() >= 1);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate(&WorkloadConfig {
+            seed: 1,
+            ..Default::default()
+        });
+        let b = generate(&WorkloadConfig {
+            seed: 2,
+            ..Default::default()
+        });
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn skewed_shape() {
+        let specs = skewed(6, 3);
+        assert_eq!(specs.len(), 7);
+        assert_eq!(specs[0].arrival_secs, 0.0);
+        assert_eq!(specs[0].kind.rho(), 1);
+        // The long job has many more rounds than any short one.
+        let tenants: Vec<usize> = specs.iter().map(|s| s.tenant).collect();
+        assert_eq!(tenants, vec![0, 1, 2, 3, 4, 5, 6]);
+    }
+}
