@@ -51,10 +51,10 @@ fn main() -> anyhow::Result<()> {
         );
         let mut input: Vec<Pair<TripleKey, m3::m3::multiply::DenseBlock>> = vec![];
         for ((i, j), blk) in grid.split(&a) {
-            input.push(Pair::new(TripleKey::io(i, j), m3::m3::multiply::DenseBlock::A(blk)));
+            input.push(Pair::new(TripleKey::io(i, j), m3::m3::multiply::DenseBlock::a(blk)));
         }
         for ((i, j), blk) in grid.split(&b) {
-            input.push(Pair::new(TripleKey::io(i, j), m3::m3::multiply::DenseBlock::B(blk)));
+            input.push(Pair::new(TripleKey::io(i, j), m3::m3::multiply::DenseBlock::b(blk)));
         }
         let mut driver = Driver::new(EngineConfig::default());
         // Preempt twice, early in the run: both strikes land mid-round.
@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
             .into_iter()
             .map(|p| {
                 let mat = match p.value {
-                    m3::m3::multiply::DenseBlock::C(m) => m,
+                    m3::m3::multiply::DenseBlock::C(m) => (*m).clone(),
                     _ => unreachable!(),
                 };
                 ((p.key.i as usize, p.key.j as usize), mat)

@@ -1,0 +1,39 @@
+//! Engine-scaling benchmark (`cargo bench --bench engine_bench`):
+//! shuffle throughput (pairs/sec) and per-round wall time for dense
+//! n = 512 at ρ ∈ {1, q}, old sequential shuffle vs the parallel
+//! map-side-partitioned pipeline, across worker counts.
+//!
+//! The same measurements back the `m3 bench-engine` CLI, which can
+//! write them to `BENCH_engine.json` — see
+//! `m3::harness::engine_bench`.
+//!
+//! Flags: `--quick` (or `M3_BENCH_QUICK=1`) shrinks the sweep for CI.
+
+use m3::harness::{run_engine_bench, EngineBenchConfig};
+
+fn main() {
+    let quick =
+        std::env::args().any(|a| a == "--quick") || std::env::var("M3_BENCH_QUICK").is_ok();
+    let cfg = if quick {
+        EngineBenchConfig {
+            n: 64,
+            block: 16,
+            workers: vec![1, 8],
+            synthetic_pairs: 1 << 16,
+            quick: true,
+            ..EngineBenchConfig::default()
+        }
+    } else {
+        EngineBenchConfig::default()
+    };
+    println!(
+        "M3 engine benchmark (in-house driver; criterion unavailable offline){}",
+        if quick { " [quick]" } else { "" }
+    );
+    let rep = run_engine_bench(&cfg);
+    println!("{}", rep.text);
+    println!(
+        "headline speedup: {:.2}x (target: >=2x at 8 workers)",
+        rep.headline_speedup
+    );
+}

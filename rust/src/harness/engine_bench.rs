@@ -1,0 +1,584 @@
+//! Engine-scaling benchmark: the parallel map-side-partitioned shuffle
+//! pipeline vs the old sequential global shuffle (kept in
+//! [`crate::mapreduce::shuffle`] as the reference implementation), on
+//! both a synthetic pair-heavy workload and real dense 3D rounds.
+//!
+//! Two front-ends share this module: `cargo bench --bench engine_bench`
+//! and the `m3 bench-engine` CLI (which can also write the results as
+//! `BENCH_engine.json` to seed the perf trajectory).
+
+use std::sync::Arc;
+
+use crate::m3::algo3d::{Geometry, Mapper3d};
+use crate::m3::multiply::{dense_3d_static_input, multiply_dense_3d, DenseBlock, M3Config};
+use crate::m3::partitioner::BalancedPartitioner3d;
+use crate::m3::PartitionerKind;
+use crate::mapreduce::job::chunk_evenly;
+use crate::mapreduce::shuffle::{measure, merge_slices, shuffle, MapSlices, PartitionedSink};
+use crate::mapreduce::types::{HashPartitioner, Mapper};
+use crate::mapreduce::{EngineConfig, Pair, Pool};
+use crate::matrix::{gen, BlockGrid};
+use crate::runtime::native::NativeMultiply;
+use crate::util::bench::{black_box, fmt_secs, Bencher};
+use crate::util::rng::Xoshiro256ss;
+use crate::util::table::Table;
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct EngineBenchConfig {
+    /// Dense matrix side (ISSUE baseline: 512).
+    pub n: usize,
+    /// Dense block side (512/64 → q = 8).
+    pub block: usize,
+    /// Worker counts to sweep.
+    pub workers: Vec<usize>,
+    /// Synthetic shuffle size in pairs.
+    pub synthetic_pairs: usize,
+    /// Reduce tasks for the standalone shuffle benches.
+    pub reduce_tasks: usize,
+    /// Fewer/shorter iterations (CI smoke).
+    pub quick: bool,
+}
+
+impl Default for EngineBenchConfig {
+    fn default() -> Self {
+        Self {
+            n: 512,
+            block: 64,
+            workers: vec![1, 2, 4, 8],
+            synthetic_pairs: 1 << 20,
+            reduce_tasks: 16,
+            quick: false,
+        }
+    }
+}
+
+/// One old-vs-new shuffle measurement.
+#[derive(Debug, Clone)]
+pub struct ShufflePoint {
+    /// Worker count of the parallel pipeline.
+    pub workers: usize,
+    /// Median seconds per parallel-pipeline iteration.
+    pub par_secs: f64,
+    /// Speedup over the sequential reference on the same data.
+    pub speedup: f64,
+    /// Parallel throughput in pairs/second.
+    pub pairs_per_sec: f64,
+}
+
+/// A measured dense engine run.
+#[derive(Debug, Clone)]
+pub struct DenseRun {
+    /// Replication factor of the run.
+    pub rho: usize,
+    /// Worker count.
+    pub workers: usize,
+    /// Number of rounds executed.
+    pub rounds: usize,
+    /// Total wall seconds.
+    pub wall_secs: f64,
+    /// Mean wall seconds per round.
+    pub per_round_secs: f64,
+    /// Total shuffle-phase seconds (map-side partition + merge).
+    pub shuffle_phase_secs: f64,
+    /// Total shuffled pairs across rounds.
+    pub shuffle_pairs: usize,
+}
+
+/// Full benchmark result.
+#[derive(Debug, Clone)]
+pub struct EngineBenchReport {
+    /// Human-readable report.
+    pub text: String,
+    /// Machine-readable JSON (the `BENCH_engine.json` payload).
+    pub json: String,
+    /// Headline: parallel-shuffle speedup at the widest worker count.
+    pub headline_speedup: f64,
+}
+
+fn bencher(quick: bool) -> Bencher {
+    if quick {
+        Bencher {
+            budget: std::time::Duration::from_millis(300),
+            warmup_iters: 1,
+            min_iters: 2,
+            max_iters: 10,
+        }
+    } else {
+        Bencher::quick()
+    }
+}
+
+/// Synthetic old-vs-new shuffle: `pairs` small key-value pairs already
+/// split across 16 map-task emission lists. The sequential reference
+/// materialises one flat vector, measures it, and groups it on one
+/// thread; the pipeline partitions per map task on the pool and merges
+/// per reduce task.
+fn bench_synthetic(
+    cfg: &EngineBenchConfig,
+    b: &Bencher,
+    text: &mut String,
+) -> (f64, Vec<ShufflePoint>) {
+    let num_chunks = 16usize;
+    let keys = (cfg.synthetic_pairs / 8).max(1) as u64;
+    let chunks: Vec<Vec<Pair<u64, f32>>> = (0..num_chunks)
+        .map(|c| {
+            let lo = c * cfg.synthetic_pairs / num_chunks;
+            let hi = (c + 1) * cfg.synthetic_pairs / num_chunks;
+            (lo..hi)
+                .map(|i| Pair::new((i as u64).wrapping_mul(0x9e37_79b9) % keys, i as f32))
+                .collect()
+        })
+        .collect();
+    let total: usize = chunks.iter().map(|c| c.len()).sum();
+
+    let seq = b.bench("shuffle_seq_reference", || {
+        let flat: Vec<Pair<u64, f32>> = chunks.iter().flat_map(|c| c.iter().cloned()).collect();
+        let (sp, sw) = measure(&flat);
+        let s = shuffle(flat, &HashPartitioner, cfg.reduce_tasks);
+        black_box((sp, sw, s.num_groups()))
+    });
+    text.push_str(&format!("{}\n", seq.summary()));
+
+    let mut points = vec![];
+    for &w in &cfg.workers {
+        let pool = Pool::new(w);
+        let r = b.bench(&format!("shuffle_pipeline_{w}w"), || {
+            let outputs: Vec<MapSlices<u64, f32>> = pool.run_indexed(chunks.len(), |ti| {
+                let mut sink = PartitionedSink::new(&HashPartitioner, cfg.reduce_tasks);
+                for p in &chunks[ti] {
+                    sink.push(p.key, p.value);
+                }
+                sink.finish()
+            });
+            let sp: usize = outputs.iter().map(|o| o.pairs).sum();
+            let s = merge_slices(outputs, cfg.reduce_tasks, &pool);
+            black_box((sp, s.num_groups()))
+        });
+        text.push_str(&format!("{}\n", r.summary()));
+        points.push(ShufflePoint {
+            workers: w,
+            par_secs: r.median(),
+            speedup: seq.median() / r.median().max(1e-12),
+            pairs_per_sec: total as f64 / r.median().max(1e-12),
+        });
+    }
+    (seq.median(), points)
+}
+
+/// Old-vs-new shuffle on a real dense round-0 workload: ρ-way block
+/// fan-out of `n/block`-grid `DenseBlock`s, balanced partitioner. Both
+/// sides map in parallel at the same worker count (the old engine did
+/// too); what differs is the shuffle itself — sequential flatten +
+/// `measure` + global group-by vs inline partitioning + parallel merge
+/// — so the speedup isolates the pipeline change.
+fn bench_dense_shuffle(
+    cfg: &EngineBenchConfig,
+    b: &Bencher,
+    rho: usize,
+    text: &mut String,
+) -> Vec<ShufflePoint> {
+    let q = cfg.n / cfg.block;
+    let geo = Geometry { q, rho };
+    let grid = BlockGrid::new(cfg.n, cfg.block);
+    let mut rng = Xoshiro256ss::new(7);
+    let a = gen::dense_int(cfg.n, cfg.n, &mut rng);
+    let bm = gen::dense_int(cfg.n, cfg.n, &mut rng);
+    let input = dense_3d_static_input(&grid, &a, &bm);
+    let mapper = Mapper3d::<DenseBlock>::new(geo);
+    let part = BalancedPartitioner3d { q, rho };
+    let map_tasks = 16usize.min(input.len().max(1));
+
+    let mut points = vec![];
+    for &w in &cfg.workers {
+        let pool = Pool::new(w);
+        let old = b.bench(&format!("dense_shuffle_old_rho{rho}_{w}w"), || {
+            let chunks = chunk_evenly(&input, map_tasks);
+            let mapped: Vec<Vec<Pair<_, _>>> = pool.run_indexed(chunks.len(), |ti| {
+                let mut out = Vec::new();
+                for p in chunks[ti] {
+                    mapper.map(0, &p.key, &p.value, &mut |k, v| out.push(Pair::new(k, v)));
+                }
+                out
+            });
+            let flat: Vec<Pair<_, _>> = mapped.into_iter().flatten().collect();
+            let (sp, sw) = measure(&flat);
+            let s = shuffle(flat, &part, cfg.reduce_tasks);
+            black_box((sp, sw, s.num_groups()))
+        });
+        text.push_str(&format!("{}\n", old.summary()));
+        let new = b.bench(&format!("dense_shuffle_pipeline_rho{rho}_{w}w"), || {
+            let chunks = chunk_evenly(&input, map_tasks);
+            let outputs: Vec<MapSlices<_, _>> = pool.run_indexed(chunks.len(), |ti| {
+                let mut sink = PartitionedSink::new(&part, cfg.reduce_tasks);
+                for p in chunks[ti] {
+                    mapper.map(0, &p.key, &p.value, &mut |k, v| sink.push(k, v));
+                }
+                sink.finish()
+            });
+            let sp: usize = outputs.iter().map(|o| o.pairs).sum();
+            let s = merge_slices(outputs, cfg.reduce_tasks, &pool);
+            black_box((sp, s.num_groups()))
+        });
+        text.push_str(&format!("{}\n", new.summary()));
+        points.push(ShufflePoint {
+            workers: w,
+            par_secs: new.median(),
+            speedup: old.median() / new.median().max(1e-12),
+            // Round 0 shuffles the A and B fan-outs (no C yet): 2ρq².
+            pairs_per_sec: 2.0 * (rho * q * q) as f64 / new.median().max(1e-12),
+        });
+    }
+    points
+}
+
+/// Per-round wall time of full dense runs at each (ρ, workers).
+fn bench_dense_rounds(cfg: &EngineBenchConfig, rho: usize, text: &mut String) -> Vec<DenseRun> {
+    let mut runs = vec![];
+    let mut rng = Xoshiro256ss::new(11);
+    let a = gen::dense_int(cfg.n, cfg.n, &mut rng);
+    let bm = gen::dense_int(cfg.n, cfg.n, &mut rng);
+    for &w in &cfg.workers {
+        let m3cfg = M3Config {
+            block_side: cfg.block,
+            rho,
+            engine: EngineConfig {
+                map_tasks: 16,
+                reduce_tasks: cfg.reduce_tasks,
+                workers: w,
+            },
+            partitioner: PartitionerKind::Balanced,
+        };
+        let t0 = std::time::Instant::now();
+        let (_, metrics) = multiply_dense_3d(&a, &bm, &m3cfg, Arc::new(NativeMultiply::new()))
+            .expect("bench geometry must be valid");
+        let wall = t0.elapsed().as_secs_f64();
+        let rounds = metrics.num_rounds();
+        let shuffle_phase: f64 = metrics
+            .rounds
+            .iter()
+            .map(|r| (r.map_time + r.shuffle_time).as_secs_f64())
+            .sum();
+        let run = DenseRun {
+            rho,
+            workers: w,
+            rounds,
+            wall_secs: wall,
+            per_round_secs: wall / rounds.max(1) as f64,
+            shuffle_phase_secs: shuffle_phase,
+            shuffle_pairs: metrics.rounds.iter().map(|r| r.shuffle_pairs).sum(),
+        };
+        text.push_str(&format!(
+            "dense_run rho={rho} workers={w}: {} rounds, wall {}, per-round {}, shuffle-phase {}\n",
+            rounds,
+            fmt_secs(run.wall_secs),
+            fmt_secs(run.per_round_secs),
+            fmt_secs(run.shuffle_phase_secs),
+        ));
+        runs.push(run);
+    }
+    runs
+}
+
+/// Deep copies of block storage observed across a real engine run: an
+/// allocation-counting `Arc` payload is driven through `StepRun`
+/// (static input re-fed every round, one commit, two preempted
+/// discards, then run to completion), and every `Storage::clone` —
+/// i.e. every time the engine duplicated block storage instead of
+/// bumping an `Arc` — is counted. Must be 0.
+mod copy_probe {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    use crate::mapreduce::driver::MultiRoundAlgorithm;
+    use crate::mapreduce::types::{
+        FnMapper, FnReducer, HashPartitioner, Mapper, Partitioner, Reducer, Value,
+    };
+    use crate::mapreduce::{EngineConfig, Pair, StepRun};
+
+    static DEEP_CLONES: AtomicUsize = AtomicUsize::new(0);
+
+    /// Logical rounds of the probe algorithm.
+    const ROUNDS: usize = 3;
+
+    #[derive(Debug, PartialEq)]
+    struct Storage(Vec<f32>);
+
+    impl Clone for Storage {
+        fn clone(&self) -> Self {
+            DEEP_CLONES.fetch_add(1, Ordering::SeqCst);
+            Storage(self.0.clone())
+        }
+    }
+
+    /// Tagged like the M3 payloads: `Static` plays A/B (durably owned
+    /// by the run's static input, legitimately shared), `Acc` plays C
+    /// (created by a reducer, carried, and unwrapped by the next
+    /// reducer that consumes it — which must be a move, not a copy).
+    #[derive(Debug, Clone, PartialEq)]
+    enum CountedBlock {
+        Static(Arc<Storage>),
+        Acc(Arc<Storage>),
+    }
+
+    impl Value for CountedBlock {
+        fn words(&self) -> usize {
+            match self {
+                CountedBlock::Static(s) | CountedBlock::Acc(s) => s.0.len(),
+            }
+        }
+    }
+
+    type MapFn = fn(usize, &u32, &CountedBlock, &mut dyn FnMut(u32, CountedBlock));
+    type RedFn = fn(usize, &u32, Vec<CountedBlock>, &mut dyn FnMut(u32, CountedBlock));
+
+    /// Same shape as the engine-layer regression tests in
+    /// `mapreduce::driver`'s `no_copy` test module — change both
+    /// together. This one additionally mirrors the accumulator
+    /// `unshare` (unwrap-or-clone) the M3 reducers perform, so an
+    /// engine that kept a reference to a carried accumulator alive
+    /// into the reduce step shows up as a counted copy.
+    struct CountAlg {
+        mapper: FnMapper<u32, CountedBlock, MapFn>,
+        reducer: FnReducer<u32, CountedBlock, RedFn>,
+        part: HashPartitioner,
+    }
+
+    impl CountAlg {
+        fn new() -> Self {
+            fn m(_r: usize, k: &u32, v: &CountedBlock, emit: &mut dyn FnMut(u32, CountedBlock)) {
+                emit(*k, v.clone());
+            }
+            fn red(
+                r: usize,
+                k: &u32,
+                vs: Vec<CountedBlock>,
+                emit: &mut dyn FnMut(u32, CountedBlock),
+            ) {
+                let mut acc = None;
+                for v in vs {
+                    if let CountedBlock::Acc(a) = v {
+                        acc = Some(a);
+                    }
+                }
+                let storage = if r + 1 == ROUNDS {
+                    // Final round: sum-style `unshare` of the carried
+                    // accumulator — must be a move, not a copy. (Only
+                    // the final round unwraps, exactly like the M3
+                    // reducers: product rounds allocate fresh output,
+                    // and a discarded attempt's carry clone stays
+                    // legitimately shared with the retained carry.)
+                    let a = acc.expect("final round needs an accumulator");
+                    Arc::try_unwrap(a).unwrap_or_else(|shared| (*shared).clone())
+                } else {
+                    // Product round: fma-style fresh accumulator
+                    // (reads its inputs, allocates new storage).
+                    Storage(vec![0.0; 128])
+                };
+                emit(*k, CountedBlock::Acc(Arc::new(storage)));
+            }
+            Self {
+                mapper: FnMapper::new(m as MapFn),
+                reducer: FnReducer::new(red as RedFn),
+                part: HashPartitioner,
+            }
+        }
+    }
+
+    impl MultiRoundAlgorithm for CountAlg {
+        type K = u32;
+        type V = CountedBlock;
+        fn num_rounds(&self) -> usize {
+            ROUNDS
+        }
+        fn mapper(&self, _r: usize) -> &dyn Mapper<u32, CountedBlock> {
+            &self.mapper
+        }
+        fn reducer(&self, _r: usize) -> &dyn Reducer<u32, CountedBlock> {
+            &self.reducer
+        }
+        fn partitioner(&self, _r: usize) -> &dyn Partitioner<u32> {
+            &self.part
+        }
+        // `reads_static_input` defaults to true for every round — the
+        // per-round re-feed is exactly the path being probed.
+    }
+
+    /// Run the engine and return the number of block-storage deep
+    /// copies it performed (0 = fully zero-copy).
+    pub fn engine_deep_copies() -> usize {
+        let input: Vec<Pair<u32, CountedBlock>> = (0..64)
+            .map(|i| Pair::new(i, CountedBlock::Static(Arc::new(Storage(vec![0.0; 128])))))
+            .collect();
+        let config = EngineConfig {
+            map_tasks: 8,
+            reduce_tasks: 8,
+            workers: 4,
+        };
+        let before = DEEP_CLONES.load(Ordering::SeqCst);
+        let mut run = StepRun::new(config, CountAlg::new(), input);
+        run.step_commit();
+        run.step_discard();
+        run.step_discard();
+        while !run.is_done() {
+            run.step_commit();
+        }
+        let _ = run.into_result();
+        DEEP_CLONES.load(Ordering::SeqCst) - before
+    }
+}
+
+fn json_f(x: f64) -> String {
+    format!("{x:.6e}")
+}
+
+fn shuffle_points_json(points: &[ShufflePoint]) -> String {
+    let items: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"workers\":{},\"secs\":{},\"speedup_vs_seq\":{},\"pairs_per_sec\":{}}}",
+                p.workers,
+                json_f(p.par_secs),
+                json_f(p.speedup),
+                json_f(p.pairs_per_sec)
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
+fn dense_runs_json(runs: &[DenseRun]) -> String {
+    let items: Vec<String> = runs
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"rho\":{},\"workers\":{},\"rounds\":{},\"wall_secs\":{},\
+                 \"per_round_secs\":{},\"shuffle_phase_secs\":{},\"shuffle_pairs\":{}}}",
+                r.rho,
+                r.workers,
+                r.rounds,
+                json_f(r.wall_secs),
+                json_f(r.per_round_secs),
+                json_f(r.shuffle_phase_secs),
+                r.shuffle_pairs
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
+/// Run the full engine benchmark.
+pub fn run_engine_bench(cfg: &EngineBenchConfig) -> EngineBenchReport {
+    let b = bencher(cfg.quick);
+    let q = cfg.n / cfg.block;
+    assert!(q >= 1 && cfg.n % cfg.block == 0, "block must divide n");
+    let mut text = String::new();
+    text.push_str(&format!(
+        "engine bench: n={} block={} q={} synthetic_pairs={} reduce_tasks={}\n\n",
+        cfg.n, cfg.block, q, cfg.synthetic_pairs, cfg.reduce_tasks
+    ));
+
+    text.push_str("--- synthetic shuffle: sequential reference vs pipeline ---\n");
+    let (seq_secs, synth) = bench_synthetic(cfg, &b, &mut text);
+
+    text.push_str("\n--- dense shuffle (round-0 fan-out), old vs new ---\n");
+    let rhos = if q > 1 { vec![1, q] } else { vec![1] };
+    let mut dense_shuffles: Vec<(usize, Vec<ShufflePoint>)> = vec![];
+    for &rho in &rhos {
+        dense_shuffles.push((rho, bench_dense_shuffle(cfg, &b, rho, &mut text)));
+    }
+
+    text.push_str("\n--- full dense runs: per-round wall time ---\n");
+    let mut dense_runs: Vec<DenseRun> = vec![];
+    for &rho in &rhos {
+        dense_runs.extend(bench_dense_rounds(cfg, rho, &mut text));
+    }
+
+    let deep_copies = copy_probe::engine_deep_copies();
+    text.push_str(&format!(
+        "\nblock-storage deep copies across a counted engine run \
+         (3 rounds + 2 discards, static input re-fed each round): {deep_copies}\n"
+    ));
+
+    let widest = *cfg.workers.iter().max().unwrap_or(&1);
+    let headline = synth
+        .iter()
+        .find(|p| p.workers == widest)
+        .map(|p| p.speedup)
+        .unwrap_or(1.0);
+    let mut t = Table::new(&["workers", "synthetic speedup", "pairs/sec"]);
+    for p in &synth {
+        t.row(&[
+            p.workers.to_string(),
+            format!("{:.2}x", p.speedup),
+            format!("{:.0}", p.pairs_per_sec),
+        ]);
+    }
+    text.push_str(&format!("\n{}\n", t.render()));
+    text.push_str(&format!(
+        "headline: {headline:.2}x shuffle speedup at {widest} workers\n"
+    ));
+
+    let dense_shuffle_json: Vec<String> = dense_shuffles
+        .iter()
+        .map(|(rho, pts)| format!("{{\"rho\":{},\"points\":{}}}", rho, shuffle_points_json(pts)))
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"engine\",\n  \"config\": {{\"n\":{},\"block\":{},\"q\":{},\
+         \"synthetic_pairs\":{},\"reduce_tasks\":{},\"quick\":{}}},\n  \
+         \"synthetic_shuffle\": {{\"pairs\":{},\"seq_secs\":{},\"points\":{},\
+         \"speedup_at_{}w\":{}}},\n  \
+         \"dense_shuffle\": [{}],\n  \"dense_runs\": {},\n  \
+         \"static_block_deep_copies\": {}\n}}\n",
+        cfg.n,
+        cfg.block,
+        q,
+        cfg.synthetic_pairs,
+        cfg.reduce_tasks,
+        cfg.quick,
+        cfg.synthetic_pairs,
+        json_f(seq_secs),
+        shuffle_points_json(&synth),
+        widest,
+        json_f(headline),
+        dense_shuffle_json.join(","),
+        dense_runs_json(&dense_runs),
+        deep_copies
+    );
+
+    EngineBenchReport {
+        text,
+        json,
+        headline_speedup: headline,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_bench_runs_and_reports() {
+        // A miniature end-to-end pass: valid JSON-ish payload, zero
+        // deep copies, all sections present.
+        let cfg = EngineBenchConfig {
+            n: 16,
+            block: 8,
+            workers: vec![1, 2],
+            synthetic_pairs: 2000,
+            reduce_tasks: 4,
+            quick: true,
+        };
+        let rep = run_engine_bench(&cfg);
+        assert!(rep.text.contains("synthetic shuffle"));
+        assert!(rep.json.contains("\"bench\": \"engine\""));
+        assert!(rep.json.contains("\"static_block_deep_copies\": 0"));
+        assert!(rep.headline_speedup > 0.0);
+    }
+
+    #[test]
+    fn engine_copy_probe_reports_zero_copies() {
+        assert_eq!(copy_probe::engine_deep_copies(), 0);
+    }
+}

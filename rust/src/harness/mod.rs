@@ -4,9 +4,11 @@
 //! ([`service_report`]).
 
 pub mod ablations;
+pub mod engine_bench;
 pub mod figures;
 pub mod service_report;
 
 pub use ablations::all_ablations;
+pub use engine_bench::{run_engine_bench, EngineBenchConfig, EngineBenchReport};
 pub use figures::{all_figures, figure, Report};
 pub use service_report::service_report;

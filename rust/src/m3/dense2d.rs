@@ -18,15 +18,35 @@ use crate::runtime::LocalMultiply;
 use super::keys::{umod, PairKey};
 use super::planner::Plan2d;
 
-/// A 2D payload: an input strip or an output block.
+/// A 2D payload: an input strip or an output block. `Arc`-backed so
+/// the ρ-way map fan-out and per-round static-input re-feed clone
+/// pointers, not strip storage (same ownership rules as
+/// [`crate::m3::multiply::DenseBlock`]).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Strip {
     /// Row strip `A_i`, shape `m/√n × √n`.
-    A(DenseMatrix),
+    A(Arc<DenseMatrix>),
     /// Column strip `B_j`, shape `√n × m/√n`.
-    B(DenseMatrix),
+    B(Arc<DenseMatrix>),
     /// Output block `C[i,j]`, shape `m/√n × m/√n`.
-    C(DenseMatrix),
+    C(Arc<DenseMatrix>),
+}
+
+impl Strip {
+    /// Wrap a row strip of `A`.
+    pub fn a(m: DenseMatrix) -> Self {
+        Strip::A(Arc::new(m))
+    }
+
+    /// Wrap a column strip of `B`.
+    pub fn b(m: DenseMatrix) -> Self {
+        Strip::B(Arc::new(m))
+    }
+
+    /// Wrap an output block.
+    pub fn c(m: DenseMatrix) -> Self {
+        Strip::C(Arc::new(m))
+    }
 }
 
 impl Value for Strip {
@@ -111,7 +131,7 @@ impl Reducer<PairKey, Strip> for Reducer2d {
         let b = b.unwrap_or_else(|| panic!("missing B strip at {key:?}"));
         let zero = DenseMatrix::zeros(a.rows(), b.cols());
         let c = self.backend.multiply_acc(&a, &b, &zero);
-        emit(*key, Strip::C(c));
+        emit(*key, Strip::c(c));
     }
 }
 
@@ -159,13 +179,13 @@ impl Algo2d {
             // Row strip of A: block (i, 0) of an (h × side)-block grid.
             out.push(crate::mapreduce::Pair::new(
                 PairKey::a_input(i),
-                Strip::A(a.block(i, 0, h, side)),
+                Strip::a(a.block(i, 0, h, side)),
             ));
         }
         for j in 0..s {
             out.push(crate::mapreduce::Pair::new(
                 PairKey::b_input(j),
-                Strip::B(b.block(0, j, side, h)),
+                Strip::b(b.block(0, j, side, h)),
             ));
         }
         out

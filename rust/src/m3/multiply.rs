@@ -71,23 +71,53 @@ fn make_partitioner_3d(
 // ---------------------------------------------------------------------
 
 /// Dense block payload for the 3D algorithm.
+///
+/// Variants hold `Arc<DenseMatrix>` so every payload clone on the
+/// engine's hot path — the ρ-way map fan-out, the per-round
+/// static-input re-feed, and preemption carry clones — is a pointer
+/// bump, never a matrix copy. Ownership rule: blocks are immutable
+/// once wrapped; mutation happens only on freshly computed matrices
+/// (reducer `fma`/`sum` results) before they are wrapped via
+/// [`DenseBlock::a`]/[`b`](DenseBlock::b)/[`c`](DenseBlock::c).
 #[derive(Debug, Clone, PartialEq)]
 pub enum DenseBlock {
     /// A block of the left matrix.
-    A(DenseMatrix),
+    A(Arc<DenseMatrix>),
     /// A block of the right matrix.
-    B(DenseMatrix),
+    B(Arc<DenseMatrix>),
     /// An accumulator block.
-    C(DenseMatrix),
+    C(Arc<DenseMatrix>),
 }
 
 impl DenseBlock {
+    /// Wrap a left-matrix block.
+    pub fn a(m: DenseMatrix) -> Self {
+        DenseBlock::A(Arc::new(m))
+    }
+
+    /// Wrap a right-matrix block.
+    pub fn b(m: DenseMatrix) -> Self {
+        DenseBlock::B(Arc::new(m))
+    }
+
+    /// Wrap an accumulator block.
+    pub fn c(m: DenseMatrix) -> Self {
+        DenseBlock::C(Arc::new(m))
+    }
+
     /// The wrapped matrix.
     pub fn matrix(&self) -> &DenseMatrix {
         match self {
             DenseBlock::A(m) | DenseBlock::B(m) | DenseBlock::C(m) => m,
         }
     }
+}
+
+/// Take the matrix out of its `Arc`, copying only if it is still
+/// shared (final-round outputs are uniquely owned, so assembling the
+/// product is copy-free).
+fn unshare<T: Clone>(m: Arc<T>) -> T {
+    Arc::try_unwrap(m).unwrap_or_else(|shared| (*shared).clone())
 }
 
 impl Value for DenseBlock {
@@ -130,23 +160,22 @@ impl BlockOps<DenseBlock> for DenseOps {
                 &zero
             }
         };
-        DenseBlock::C(self.backend.multiply_acc(a, b, c))
+        DenseBlock::c(self.backend.multiply_acc(a, b, c))
     }
 
     fn sum(&self, parts: Vec<DenseBlock>) -> DenseBlock {
         let mut it = parts.into_iter();
-        let first = match it.next().expect("sum of zero parts") {
-            DenseBlock::C(m) => m,
+        let mut acc = match it.next().expect("sum of zero parts") {
+            DenseBlock::C(m) => unshare(m),
             _ => panic!("sum over non-C block"),
         };
-        let mut acc = first;
         for p in it {
             match p {
                 DenseBlock::C(m) => acc.add_assign(&m),
                 _ => panic!("sum over non-C block"),
             }
         }
-        DenseBlock::C(acc)
+        DenseBlock::c(acc)
     }
 }
 
@@ -164,22 +193,19 @@ impl<S: Semiring> Default for SemiringOps<S> {
 
 impl<S: Semiring> BlockOps<DenseBlock> for SemiringOps<S> {
     fn fma(&self, a: &DenseBlock, b: &DenseBlock, c: Option<&DenseBlock>) -> DenseBlock {
-        let prod = a.matrix().matmul_naive_sr::<S>(b.matrix());
-        let out = match c {
-            Some(c) => {
-                let mut acc = c.matrix().clone();
-                acc.add_assign_sr::<S>(&prod);
-                acc
-            }
-            None => prod,
-        };
-        DenseBlock::C(out)
+        let mut prod = a.matrix().matmul_naive_sr::<S>(b.matrix());
+        if let Some(c) = c {
+            // ⊕ is commutative in every semiring here, so accumulate
+            // into the fresh product instead of copying `c`.
+            prod.add_assign_sr::<S>(c.matrix());
+        }
+        DenseBlock::c(prod)
     }
 
     fn sum(&self, parts: Vec<DenseBlock>) -> DenseBlock {
         let mut it = parts.into_iter();
         let mut acc = match it.next().expect("sum of zero parts") {
-            DenseBlock::C(m) => m,
+            DenseBlock::C(m) => unshare(m),
             _ => panic!("sum over non-C block"),
         };
         for p in it {
@@ -188,7 +214,7 @@ impl<S: Semiring> BlockOps<DenseBlock> for SemiringOps<S> {
                 _ => panic!("sum over non-C block"),
             }
         }
-        DenseBlock::C(acc)
+        DenseBlock::c(acc)
     }
 }
 
@@ -201,10 +227,10 @@ pub fn dense_3d_static_input(
 ) -> Vec<Pair<TripleKey, DenseBlock>> {
     let mut input: Vec<Pair<TripleKey, DenseBlock>> = Vec::with_capacity(2 * grid.num_blocks());
     for ((i, j), blk) in grid.split(a) {
-        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::A(blk)));
+        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::a(blk)));
     }
     for ((i, j), blk) in grid.split(b) {
-        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::B(blk)));
+        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::b(blk)));
     }
     input
 }
@@ -219,7 +245,7 @@ pub fn dense_3d_assemble(
         .map(|p| {
             assert!(p.key.is_io());
             let m = match p.value {
-                DenseBlock::C(m) => m,
+                DenseBlock::C(m) => unshare(m),
                 _ => panic!("final output must be C blocks"),
             };
             ((p.key.i as usize, p.key.j as usize), m)
@@ -305,18 +331,34 @@ pub fn multiply_dense_2d(
 // Sparse payload
 // ---------------------------------------------------------------------
 
-/// Sparse (CSR) block payload for the 3D algorithm.
+/// Sparse (CSR) block payload for the 3D algorithm. `Arc`-backed for
+/// the same zero-copy clone semantics as [`DenseBlock`].
 #[derive(Debug, Clone, PartialEq)]
 pub enum SparseBlock {
     /// A block of the left matrix.
-    A(CsrMatrix),
+    A(Arc<CsrMatrix>),
     /// A block of the right matrix.
-    B(CsrMatrix),
+    B(Arc<CsrMatrix>),
     /// An accumulator block.
-    C(CsrMatrix),
+    C(Arc<CsrMatrix>),
 }
 
 impl SparseBlock {
+    /// Wrap a left-matrix block.
+    pub fn a(m: CsrMatrix) -> Self {
+        SparseBlock::A(Arc::new(m))
+    }
+
+    /// Wrap a right-matrix block.
+    pub fn b(m: CsrMatrix) -> Self {
+        SparseBlock::B(Arc::new(m))
+    }
+
+    /// Wrap an accumulator block.
+    pub fn c(m: CsrMatrix) -> Self {
+        SparseBlock::C(Arc::new(m))
+    }
+
     /// The wrapped CSR block.
     pub fn csr(&self) -> &CsrMatrix {
         match self {
@@ -352,13 +394,13 @@ impl BlockOps<SparseBlock> for SparseOps {
             Some(c) => c.csr().add(&prod),
             None => prod,
         };
-        SparseBlock::C(out)
+        SparseBlock::c(out)
     }
 
     fn sum(&self, parts: Vec<SparseBlock>) -> SparseBlock {
         let mut it = parts.into_iter();
         let mut acc = match it.next().expect("sum of zero parts") {
-            SparseBlock::C(m) => m,
+            SparseBlock::C(m) => unshare(m),
             _ => panic!("sum over non-C block"),
         };
         for p in it {
@@ -367,7 +409,7 @@ impl BlockOps<SparseBlock> for SparseOps {
                 _ => panic!("sum over non-C block"),
             }
         }
-        SparseBlock::C(acc)
+        SparseBlock::c(acc)
     }
 }
 
@@ -380,10 +422,10 @@ pub fn sparse_3d_static_input(
 ) -> Vec<Pair<TripleKey, SparseBlock>> {
     let mut input: Vec<Pair<TripleKey, SparseBlock>> = vec![];
     for ((i, j), blk) in a.split_blocks(block_side, block_side) {
-        input.push(Pair::new(TripleKey::io(i, j), SparseBlock::A(blk.to_csr())));
+        input.push(Pair::new(TripleKey::io(i, j), SparseBlock::a(blk.to_csr())));
     }
     for ((i, j), blk) in b.split_blocks(block_side, block_side) {
-        input.push(Pair::new(TripleKey::io(i, j), SparseBlock::B(blk.to_csr())));
+        input.push(Pair::new(TripleKey::io(i, j), SparseBlock::b(blk.to_csr())));
     }
     input
 }
@@ -750,5 +792,41 @@ mod tests {
         let (got, _) =
             multiply_dense_3d(&a, &a, &cfg(2, 2), Arc::new(NaiveMultiply)).unwrap();
         assert_eq!(got, DenseMatrix::identity(side));
+    }
+
+    #[test]
+    fn dense_block_clone_is_zero_copy() {
+        // Every engine-side payload clone (ρ-way fan-out, static-input
+        // re-feed, carry clones) must be an Arc bump, never a matrix
+        // copy: cloning bumps the strong count of the *same* storage.
+        let m = Arc::new(DenseMatrix::zeros(32, 32));
+        let blk = DenseBlock::A(m.clone());
+        assert_eq!(Arc::strong_count(&m), 2);
+        let c1 = blk.clone();
+        let c2 = blk.clone();
+        assert_eq!(Arc::strong_count(&m), 4, "clones share storage");
+        assert!(std::ptr::eq(blk.matrix(), c1.matrix()), "no new allocation");
+        drop((c1, c2));
+        assert_eq!(Arc::strong_count(&m), 2);
+    }
+
+    #[test]
+    fn sparse_block_clone_is_zero_copy() {
+        let csr = Arc::new(CooMatrix::new(8, 8).to_csr());
+        let blk = SparseBlock::B(csr.clone());
+        let c1 = blk.clone();
+        assert_eq!(Arc::strong_count(&csr), 3, "clones share storage");
+        assert!(std::ptr::eq(blk.csr(), c1.csr()));
+    }
+
+    #[test]
+    fn unshare_is_move_when_unique() {
+        // Final-round outputs are uniquely owned, so assembling the
+        // product takes the matrix without copying.
+        let m = DenseMatrix::identity(4);
+        let data_ptr = m.as_slice().as_ptr();
+        let arc = Arc::new(m);
+        let back = unshare(arc);
+        assert_eq!(back.as_slice().as_ptr(), data_ptr, "moved, not copied");
     }
 }

@@ -9,6 +9,8 @@
 //!   job scheduler (FIFO / fair / SRPT, optional spot preemptions).
 //! * `figures`  — regenerate the paper's figures (tables + CSV).
 //! * `simulate` — price a configuration on a cluster profile.
+//! * `bench-engine` — measure the parallel shuffle pipeline vs the
+//!   sequential reference; `--json` writes `BENCH_engine.json`.
 //! * `info`     — show artifact and environment status.
 
 use std::sync::Arc;
@@ -45,6 +47,9 @@ USAGE:
   m3 simulate --profile inhouse|c3|i2 --n <side> --block <side>
               [--rho 1,2,4,8] [--algo 3d|2d] [--nodes <p>]
   m3 calibrate [--n <side>] [--block <side>] [--backend xla|native|naive|auto]
+  m3 bench-engine [--n <side>] [--block <side>] [--workers 1,2,4,8]
+              [--pairs <count>] [--reduce-tasks <t>] [--quick]
+              [--json] [--out BENCH_engine.json]
   m3 info
 ";
 
@@ -52,7 +57,7 @@ fn main() {
     let spec = Spec::new(&[
         "n", "block", "rho", "algo", "backend", "partitioner", "seed", "nodes", "slots", "fig",
         "out-dir", "profile", "nnz-per-row", "workers", "policy", "jobs", "tenants",
-        "mean-arrival", "preempt-rate",
+        "mean-arrival", "preempt-rate", "pairs", "reduce-tasks", "out",
     ]);
     let args = match Args::parse(&spec) {
         Ok(a) => a,
@@ -69,6 +74,7 @@ fn main() {
         "figures" => cmd_figures(&args),
         "simulate" => cmd_simulate(&args),
         "calibrate" => cmd_calibrate(&args),
+        "bench-engine" => cmd_bench_engine(&args),
         "info" => cmd_info(),
         _ => {
             println!("{USAGE}");
@@ -405,6 +411,47 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     }
     println!("{}", t.render());
     println!("(local fit: this box vs the paper-anchored cluster profiles)");
+    Ok(())
+}
+
+/// Measure the parallel shuffle pipeline against the sequential
+/// reference (synthetic pairs + real dense rounds); `--json` writes the
+/// results to `--out` (default `BENCH_engine.json`, intended to live at
+/// the repo root to seed the perf trajectory).
+fn cmd_bench_engine(args: &Args) -> Result<()> {
+    use m3::harness::{run_engine_bench, EngineBenchConfig};
+    let default = EngineBenchConfig::default();
+    let n: usize = args.get("n", default.n).map_err(anyhow::Error::msg)?;
+    let block: usize = args.get("block", default.block).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(block > 0 && n % block == 0, "--block must divide --n");
+    let cfg = EngineBenchConfig {
+        n,
+        block,
+        workers: args
+            .get_list("workers", &default.workers)
+            .map_err(anyhow::Error::msg)?,
+        synthetic_pairs: args
+            .get("pairs", default.synthetic_pairs)
+            .map_err(anyhow::Error::msg)?,
+        reduce_tasks: args
+            .get("reduce-tasks", default.reduce_tasks)
+            .map_err(anyhow::Error::msg)?,
+        quick: args.flag("quick"),
+    };
+    eprintln!(
+        "[m3] engine bench: n={} block={} workers={:?}{}",
+        cfg.n,
+        cfg.block,
+        cfg.workers,
+        if cfg.quick { " (quick)" } else { "" }
+    );
+    let rep = run_engine_bench(&cfg);
+    println!("{}", rep.text);
+    if args.flag("json") {
+        let out = args.opt_or("out", "BENCH_engine.json");
+        std::fs::write(&out, &rep.json)?;
+        eprintln!("[m3] wrote {out}");
+    }
     Ok(())
 }
 

@@ -11,9 +11,11 @@
 //! measures that discarded work, which the `spot_market` example sweeps
 //! against ρ.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::dfs::SimDfs;
+use super::executor::Pool;
 use super::job::{EngineConfig, Job};
 use super::metrics::{JobMetrics, RoundMetrics};
 use super::types::{Key, Mapper, Pair, Partitioner, Reducer, Value};
@@ -76,20 +78,33 @@ pub struct PreemptedResult<K, V> {
     pub preemptions: usize,
 }
 
-/// The multi-round execution driver.
+/// The multi-round execution driver. Holds the persistent worker pool
+/// all of its rounds execute on — threads are spawned once (lazily),
+/// not twice per round. Several drivers can share one pool
+/// ([`Driver::with_pool`]): the service layer gives every concurrent
+/// job's driver the same cluster pool, since rounds never run
+/// concurrently.
 pub struct Driver {
     /// Engine configuration for every round.
     pub config: EngineConfig,
     /// DFS used to materialise round outputs.
     pub dfs: SimDfs,
+    /// Persistent worker pool every round of this driver runs on.
+    pool: Arc<Pool>,
 }
 
 impl Driver {
-    /// New driver with the given engine config.
+    /// New driver with the given engine config and its own pool.
     pub fn new(config: EngineConfig) -> Self {
+        Self::with_pool(config, Arc::new(Pool::new(config.workers)))
+    }
+
+    /// New driver running its rounds on an existing (shared) pool.
+    pub fn with_pool(config: EngineConfig, pool: Arc<Pool>) -> Self {
         Self {
             config,
             dfs: SimDfs::new(),
+            pool,
         }
     }
 
@@ -128,7 +143,9 @@ impl Driver {
         static_input: &[Pair<A::K, A::V>],
         carry: Vec<Pair<A::K, A::V>>,
     ) -> (Vec<Pair<A::K, A::V>>, RoundMetrics) {
-        // Compose round input: static (re-read from DFS) + carry.
+        // Compose round input: static (re-read from DFS) + carry. With
+        // `Arc`-backed block payloads these clones are pointer bumps,
+        // not matrix copies.
         let mut input = carry;
         if alg.reads_static_input(r) {
             input.extend(static_input.iter().cloned());
@@ -143,7 +160,7 @@ impl Driver {
             combiner: alg.combiner(r),
             partitioner: alg.partitioner(r),
         };
-        let (out, mut m) = job.run(r, &input);
+        let (out, mut m) = job.run(&self.pool, r, input);
 
         // Materialise output: one chunk per reduce task, as Hadoop does.
         let t = Instant::now();
@@ -229,10 +246,23 @@ pub struct StepRun<A: MultiRoundAlgorithm> {
 }
 
 impl<A: MultiRoundAlgorithm> StepRun<A> {
-    /// Set up a resumable run (no round is executed yet).
+    /// Set up a resumable run (no round is executed yet) with its own
+    /// worker pool.
     pub fn new(config: EngineConfig, alg: A, static_input: Vec<Pair<A::K, A::V>>) -> Self {
+        Self::with_pool(config, alg, static_input, Arc::new(Pool::new(config.workers)))
+    }
+
+    /// Set up a resumable run whose rounds execute on an existing
+    /// (shared) pool — what a round-level scheduler passes so all of
+    /// its jobs use one set of cluster slots.
+    pub fn with_pool(
+        config: EngineConfig,
+        alg: A,
+        static_input: Vec<Pair<A::K, A::V>>,
+        pool: Arc<Pool>,
+    ) -> Self {
         Self {
-            driver: Driver::new(config),
+            driver: Driver::with_pool(config, pool),
             alg,
             static_input,
             carry: vec![],
@@ -298,7 +328,11 @@ impl<A: MultiRoundAlgorithm> StepRun<A> {
     /// preemption semantics: Hadoop cannot resume mid-round, so the
     /// in-flight round's work is lost and the round stays pending
     /// (the next [`step_commit`](Self::step_commit) re-executes it).
-    /// Committed rounds are unaffected.
+    /// Committed rounds are unaffected. The carry handed to the doomed
+    /// attempt is a clone, but with `Arc`-backed payloads that is a
+    /// pointer bump per pair, not a copy of block storage (asserted by
+    /// the `discarded_attempts_never_copy_payload_storage` regression
+    /// test).
     ///
     /// # Panics
     /// Panics if the run [`is_done`](Self::is_done).
@@ -664,5 +698,160 @@ mod tests {
         let input = vec![Pair::new(1u32, 0.0f32)];
         let step = StepRun::new(small_cfg(), IncAlg::new(2), input);
         let _ = step.into_result();
+    }
+
+    #[test]
+    fn concurrent_step_runs_share_one_pool() {
+        // The service layer hands every job's driver the same cluster
+        // pool; interleaved rounds must stay correct and independent.
+        let pool = Arc::new(Pool::new(2));
+        let input: Vec<Pair<u32, f32>> = (0..6).map(|i| Pair::new(i, 0.0)).collect();
+        let mut s1 = StepRun::with_pool(small_cfg(), IncAlg::new(2), input.clone(), pool.clone());
+        let mut s2 = StepRun::with_pool(small_cfg(), IncAlg::new(3), input, pool.clone());
+        while !s1.is_done() || !s2.is_done() {
+            if !s1.is_done() {
+                s1.step_commit();
+            }
+            if !s2.is_done() {
+                s2.step_commit();
+            }
+        }
+        for p in &s1.into_result().output {
+            assert_eq!(p.value, 2.0);
+        }
+        for p in &s2.into_result().output {
+            assert_eq!(p.value, 3.0);
+        }
+        assert_eq!(Arc::strong_count(&pool), 1, "drivers released the shared pool");
+    }
+
+    /// Regression guard for the zero-copy carry/static-input path: an
+    /// allocation-counting payload proves that preemption re-attempts
+    /// (`run_preempted`, `step_discard`) and the per-round static-input
+    /// re-feed never duplicate block storage — every payload clone is
+    /// an `Arc` pointer bump. The bench-surface twin of this guard
+    /// (which additionally exercises the final-round accumulator
+    /// unwrap) lives in `harness::engine_bench::copy_probe` — change
+    /// both together.
+    mod no_copy {
+        use super::*;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+
+        /// Deep copies of this storage are counted; `Arc`-backed
+        /// payload clones must never trigger one.
+        static DEEP_CLONES: AtomicUsize = AtomicUsize::new(0);
+
+        #[derive(Debug, PartialEq)]
+        struct Storage(Vec<f32>);
+
+        impl Clone for Storage {
+            fn clone(&self) -> Self {
+                DEEP_CLONES.fetch_add(1, Ordering::SeqCst);
+                Storage(self.0.clone())
+            }
+        }
+
+        /// An `Arc`-backed block payload, shaped like `DenseBlock`.
+        #[derive(Debug, Clone, PartialEq)]
+        struct ArcBlock(Arc<Storage>);
+
+        impl Value for ArcBlock {
+            fn words(&self) -> usize {
+                self.0 .0.len()
+            }
+        }
+
+        struct ArcAlg {
+            mapper: FnMapper<u32, ArcBlock, MapFn>,
+            reducer: FnReducer<u32, ArcBlock, RedFn>,
+            part: HashPartitioner,
+            rounds: usize,
+        }
+
+        type MapFn = fn(usize, &u32, &ArcBlock, &mut dyn FnMut(u32, ArcBlock));
+        type RedFn = fn(usize, &u32, Vec<ArcBlock>, &mut dyn FnMut(u32, ArcBlock));
+
+        impl ArcAlg {
+            fn new(rounds: usize) -> Self {
+                fn m(_r: usize, k: &u32, v: &ArcBlock, emit: &mut dyn FnMut(u32, ArcBlock)) {
+                    emit(*k, v.clone()); // pointer bump, not storage copy
+                }
+                fn red(
+                    _r: usize,
+                    k: &u32,
+                    vs: Vec<ArcBlock>,
+                    emit: &mut dyn FnMut(u32, ArcBlock),
+                ) {
+                    emit(*k, vs.into_iter().next().expect("non-empty group"));
+                }
+                Self {
+                    mapper: FnMapper::new(m as MapFn),
+                    reducer: FnReducer::new(red as RedFn),
+                    part: HashPartitioner,
+                    rounds,
+                }
+            }
+        }
+
+        impl MultiRoundAlgorithm for ArcAlg {
+            type K = u32;
+            type V = ArcBlock;
+            fn num_rounds(&self) -> usize {
+                self.rounds
+            }
+            fn mapper(&self, _r: usize) -> &dyn Mapper<u32, ArcBlock> {
+                &self.mapper
+            }
+            fn reducer(&self, _r: usize) -> &dyn Reducer<u32, ArcBlock> {
+                &self.reducer
+            }
+            fn partitioner(&self, _r: usize) -> &dyn Partitioner<u32> {
+                &self.part
+            }
+            // Static input is re-fed (and so re-cloned) every round —
+            // exactly the path that used to deep-copy whole matrices.
+        }
+
+        fn arc_input(n: u32) -> Vec<Pair<u32, ArcBlock>> {
+            (0..n)
+                .map(|i| Pair::new(i, ArcBlock(Arc::new(Storage(vec![0.0; 64])))))
+                .collect()
+        }
+
+        #[test]
+        fn discarded_attempts_never_copy_payload_storage() {
+            let input = arc_input(6);
+            let before = DEEP_CLONES.load(Ordering::SeqCst);
+            let mut step = StepRun::new(small_cfg(), ArcAlg::new(3), input);
+            step.step_commit();
+            for _ in 0..3 {
+                step.step_discard(); // each re-attempt clones the carry…
+            }
+            while !step.is_done() {
+                step.step_commit();
+            }
+            let res = step.into_result();
+            assert_eq!(res.output.len(), 6);
+            assert_eq!(
+                DEEP_CLONES.load(Ordering::SeqCst),
+                before,
+                "…but a carry clone must be an Arc bump, not a storage copy"
+            );
+        }
+
+        #[test]
+        fn preempted_reattempts_never_copy_payload_storage() {
+            let input = arc_input(8);
+            let before = DEEP_CLONES.load(Ordering::SeqCst);
+            let mut d = Driver::new(small_cfg());
+            let pre = d.run_preempted(&ArcAlg::new(2), &input, &[1e-12, 2e-12]);
+            assert_eq!(pre.preemptions, 2);
+            assert_eq!(
+                DEEP_CLONES.load(Ordering::SeqCst),
+                before,
+                "re-executed rounds must not copy block storage"
+            );
+        }
     }
 }

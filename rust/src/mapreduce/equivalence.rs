@@ -1,0 +1,300 @@
+//! Equivalence suite: the parallel map-side-partitioned shuffle
+//! pipeline must be observationally identical to the old sequential
+//! engine — same buckets, same groups, same outputs, and bit-for-bit
+//! identical shuffle-cost metrics (`shuffle_pairs`, `shuffle_words`,
+//! `max_reducer_words`, `reducers_per_task`, …) — for dense-3D,
+//! dense-2D, and sparse runs across worker counts {1, 2, 8}.
+//!
+//! The reference implementation below replicates the pre-pipeline
+//! engine exactly: materialise every intermediate pair in one global
+//! vector, measure it, group it with the sequential [`shuffle`], and
+//! reduce bucket by bucket on one thread.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::driver::{Driver, MultiRoundAlgorithm};
+use super::job::{chunk_evenly, EngineConfig, Job};
+use super::metrics::RoundMetrics;
+use super::shuffle::{measure, shuffle};
+use super::types::{FnReducer, HashPartitioner, IdentityMapper, Key, Pair, Value};
+
+use crate::m3::algo3d::{Algo3d, Geometry};
+use crate::m3::dense2d::Algo2d;
+use crate::m3::multiply::{
+    dense_3d_static_input, sparse_3d_static_input, DenseOps, SparseOps,
+};
+use crate::m3::partitioner::{BalancedPartitioner2d, BalancedPartitioner3d};
+use crate::m3::planner::{Plan2d, Plan3d, SparsePlan};
+use crate::matrix::{gen, BlockGrid};
+use crate::runtime::NaiveMultiply;
+use crate::util::rng::Xoshiro256ss;
+
+/// The old engine's round execution, verbatim: sequential map with a
+/// task-wide combiner regroup, global intermediate vector, `measure`
+/// pass, sequential `shuffle`, sequential reduce.
+fn run_round_reference<K: Key, V: Value>(
+    job: &Job<'_, K, V>,
+    round: usize,
+    input: &[Pair<K, V>],
+) -> (Vec<Pair<K, V>>, RoundMetrics) {
+    let mut metrics = RoundMetrics {
+        round,
+        input_pairs: input.len(),
+        input_words: input.iter().map(|p| p.value.words()).sum(),
+        ..Default::default()
+    };
+
+    let num_map_tasks = job.config.map_tasks.max(1).min(input.len().max(1));
+    let chunks: Vec<&[Pair<K, V>]> = chunk_evenly(input, num_map_tasks);
+    let mapped: Vec<Vec<Pair<K, V>>> = chunks
+        .iter()
+        .map(|chunk| {
+            let mut out = Vec::new();
+            for p in *chunk {
+                job.mapper
+                    .map(round, &p.key, &p.value, &mut |k, v| out.push(Pair::new(k, v)));
+            }
+            match job.combiner {
+                None => out,
+                Some(comb) => {
+                    let mut groups: BTreeMap<K, Vec<V>> = BTreeMap::new();
+                    for p in out {
+                        groups.entry(p.key).or_default().push(p.value);
+                    }
+                    let mut combined = Vec::new();
+                    for (k, vs) in groups {
+                        comb.reduce(round, &k, vs, &mut |k, v| combined.push(Pair::new(k, v)));
+                    }
+                    combined
+                }
+            }
+        })
+        .collect();
+    let intermediate: Vec<Pair<K, V>> = mapped.into_iter().flatten().collect();
+
+    let (sp, sw) = measure(&intermediate);
+    metrics.shuffle_pairs = sp;
+    metrics.shuffle_words = sw;
+    let shuffled = shuffle(intermediate, job.partitioner, job.config.reduce_tasks);
+    metrics.num_reducers = shuffled.num_groups();
+    metrics.reducers_per_task = shuffled.groups_per_task();
+
+    let mut max_red_words = 0usize;
+    let mut reduced: Vec<Vec<Pair<K, V>>> = Vec::with_capacity(shuffled.buckets.len());
+    for bucket in shuffled.buckets {
+        let mut out = Vec::new();
+        for (key, values) in bucket {
+            let in_words: usize = values.iter().map(|v| v.words()).sum();
+            max_red_words = max_red_words.max(in_words);
+            job.reducer
+                .reduce(round, &key, values, &mut |k, v| out.push(Pair::new(k, v)));
+        }
+        reduced.push(out);
+    }
+    metrics.max_reducer_words = max_red_words;
+    metrics.output_words_per_task = reduced
+        .iter()
+        .map(|task_out| task_out.iter().map(|p| p.value.words()).sum())
+        .collect();
+    let output: Vec<Pair<K, V>> = reduced.into_iter().flatten().collect();
+    metrics.output_pairs = output.len();
+    metrics.output_words = output.iter().map(|p| p.value.words()).sum();
+    (output, metrics)
+}
+
+/// The old multi-round composition (carry + static input), on the
+/// reference round executor.
+fn run_reference<A: MultiRoundAlgorithm>(
+    alg: &A,
+    config: EngineConfig,
+    static_input: &[Pair<A::K, A::V>],
+) -> (Vec<Pair<A::K, A::V>>, Vec<RoundMetrics>) {
+    let mut metrics = Vec::new();
+    let mut carry: Vec<Pair<A::K, A::V>> = vec![];
+    let mut sink: Vec<Pair<A::K, A::V>> = vec![];
+    for r in 0..alg.num_rounds() {
+        let mut input = carry;
+        if alg.reads_static_input(r) {
+            input.extend(static_input.iter().cloned());
+        }
+        let job = Job {
+            config,
+            mapper: alg.mapper(r),
+            reducer: alg.reducer(r),
+            combiner: alg.combiner(r),
+            partitioner: alg.partitioner(r),
+        };
+        let (out, m) = run_round_reference(&job, r, &input);
+        if alg.carries_output() {
+            carry = out;
+        } else {
+            sink.extend(out);
+            carry = vec![];
+        }
+        metrics.push(m);
+    }
+    let output = if alg.carries_output() { carry } else { sink };
+    (output, metrics)
+}
+
+/// Shuffle-cost metrics must match bit for bit; times are excluded
+/// (they are measurements, not costs).
+fn assert_metrics_match(got: &[RoundMetrics], want: &[RoundMetrics], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: round count");
+    for (g, w) in got.iter().zip(want) {
+        let r = g.round;
+        assert_eq!(g.round, w.round, "{ctx}: round index");
+        assert_eq!(g.input_pairs, w.input_pairs, "{ctx} r{r}: input_pairs");
+        assert_eq!(g.input_words, w.input_words, "{ctx} r{r}: input_words");
+        assert_eq!(g.shuffle_pairs, w.shuffle_pairs, "{ctx} r{r}: shuffle_pairs");
+        assert_eq!(g.shuffle_words, w.shuffle_words, "{ctx} r{r}: shuffle_words");
+        assert_eq!(g.num_reducers, w.num_reducers, "{ctx} r{r}: num_reducers");
+        assert_eq!(
+            g.reducers_per_task, w.reducers_per_task,
+            "{ctx} r{r}: reducers_per_task"
+        );
+        assert_eq!(
+            g.max_reducer_words, w.max_reducer_words,
+            "{ctx} r{r}: max_reducer_words"
+        );
+        assert_eq!(g.output_pairs, w.output_pairs, "{ctx} r{r}: output_pairs");
+        assert_eq!(g.output_words, w.output_words, "{ctx} r{r}: output_words");
+        assert_eq!(
+            g.output_words_per_task, w.output_words_per_task,
+            "{ctx} r{r}: output_words_per_task"
+        );
+    }
+}
+
+fn assert_outputs_match<K: Key, V: Value + PartialEq + std::fmt::Debug>(
+    mut got: Vec<Pair<K, V>>,
+    mut want: Vec<Pair<K, V>>,
+    ctx: &str,
+) {
+    got.sort_by(|a, b| a.key.cmp(&b.key));
+    want.sort_by(|a, b| a.key.cmp(&b.key));
+    assert_eq!(got, want, "{ctx}: outputs");
+}
+
+fn engine(workers: usize) -> EngineConfig {
+    EngineConfig {
+        map_tasks: 5,
+        reduce_tasks: 4,
+        workers,
+    }
+}
+
+#[test]
+fn dense_3d_pipeline_matches_reference() {
+    let (side, block, rho) = (16usize, 4usize, 2usize);
+    let plan = Plan3d::new(side, block, rho).unwrap();
+    let geo: Geometry = plan.into();
+    let grid = BlockGrid::new(side, block);
+    let mut rng = Xoshiro256ss::new(31);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let input = dense_3d_static_input(&grid, &a, &b);
+    for workers in [1usize, 2, 8] {
+        let alg = Algo3d::new(
+            geo,
+            Arc::new(DenseOps::new(Arc::new(NaiveMultiply))),
+            Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+        );
+        let cfg = engine(workers);
+        let mut d = Driver::new(cfg);
+        let got = d.run(&alg, &input);
+        let (want_out, want_m) = run_reference(&alg, cfg, &input);
+        let ctx = format!("dense3d workers={workers}");
+        assert_metrics_match(&got.metrics.rounds, &want_m, &ctx);
+        assert_outputs_match(got.output, want_out, &ctx);
+    }
+}
+
+#[test]
+fn dense_2d_pipeline_matches_reference() {
+    let (side, m, rho) = (16usize, 64usize, 2usize);
+    let plan = Plan2d::new(side, m, rho).unwrap();
+    let mut rng = Xoshiro256ss::new(32);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let input = Algo2d::static_input(plan, &a, &b);
+    for workers in [1usize, 2, 8] {
+        let alg = Algo2d::new(
+            plan,
+            Arc::new(NaiveMultiply),
+            Box::new(BalancedPartitioner2d {
+                strips: plan.strips(),
+                rho,
+            }),
+        );
+        let cfg = engine(workers);
+        let mut d = Driver::new(cfg);
+        let got = d.run(&alg, &input);
+        let (want_out, want_m) = run_reference(&alg, cfg, &input);
+        let ctx = format!("dense2d workers={workers}");
+        assert_metrics_match(&got.metrics.rounds, &want_m, &ctx);
+        assert_outputs_match(got.output, want_out, &ctx);
+    }
+}
+
+#[test]
+fn sparse_3d_pipeline_matches_reference() {
+    let (side, block, rho) = (32usize, 8usize, 2usize);
+    let plan = SparsePlan::new(side, block, rho, 0.15, 0.4).unwrap();
+    let geo = Geometry {
+        q: plan.q(),
+        rho: plan.rho,
+    };
+    let mut rng = Xoshiro256ss::new(33);
+    let a = gen::erdos_renyi_coo(side, 0.15, &mut rng);
+    let b = gen::erdos_renyi_coo(side, 0.15, &mut rng);
+    let input = sparse_3d_static_input(block, &a, &b);
+    for workers in [1usize, 2, 8] {
+        let alg = Algo3d::new(
+            geo,
+            Arc::new(SparseOps),
+            Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+        );
+        let cfg = engine(workers);
+        let mut d = Driver::new(cfg);
+        let got = d.run(&alg, &input);
+        let (want_out, want_m) = run_reference(&alg, cfg, &input);
+        let ctx = format!("sparse3d workers={workers}");
+        assert_metrics_match(&got.metrics.rounds, &want_m, &ctx);
+        assert_outputs_match(got.output, want_out, &ctx);
+    }
+}
+
+/// A key-preserving combiner must leave metrics and outputs identical
+/// between the in-pass combine (new) and the task-wide regroup (old).
+#[test]
+fn combiner_round_matches_reference() {
+    let input: Vec<Pair<u32, f32>> = (0..600).map(|i| Pair::new(i % 13, 1.0)).collect();
+    let reducer = FnReducer::new(|_r, k: &u32, vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
+        emit(*k, vs.iter().sum());
+    });
+    let combiner = FnReducer::new(|_r, k: &u32, vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
+        emit(*k, vs.iter().sum());
+    });
+    for workers in [1usize, 2, 8] {
+        let cfg = engine(workers);
+        let job = Job {
+            config: cfg,
+            mapper: &IdentityMapper,
+            reducer: &reducer,
+            combiner: Some(&combiner),
+            partitioner: &HashPartitioner,
+        };
+        let pool = super::executor::Pool::new(workers);
+        let (got_out, got_m) = job.run(&pool, 0, input.clone());
+        let (want_out, want_m) = run_round_reference(&job, 0, &input);
+        let ctx = format!("combiner workers={workers}");
+        assert_metrics_match(
+            std::slice::from_ref(&got_m),
+            std::slice::from_ref(&want_m),
+            &ctx,
+        );
+        assert_outputs_match(got_out, want_out, &ctx);
+    }
+}

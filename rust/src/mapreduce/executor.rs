@@ -1,15 +1,84 @@
 //! Task execution pool.
 //!
 //! Hadoop runs a fixed number of map/reduce *slots* per node; we model
-//! the cluster's total slot count with a scoped thread pool that pulls
-//! indexed tasks from an atomic counter. Results are returned in task
-//! order so the engine stays deterministic regardless of interleaving.
+//! the cluster's total slot count with a **persistent** worker pool:
+//! `workers - 1` long-lived threads plus the submitting thread itself.
+//! A round used to pay two `thread::scope` spawn/join cycles (map +
+//! reduce); with the pool owned by the [`crate::mapreduce::Driver`] the
+//! threads are spawned once per driver and every batch is a condvar
+//! wake, so per-round overhead stays flat no matter how many rounds —
+//! or how many concurrent service jobs — execute.
+//!
+//! Workers pull indexed tasks from an atomic counter and write results
+//! into disjoint slots, so the engine stays deterministic regardless of
+//! interleaving.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
-/// A fixed-width worker pool.
-#[derive(Debug, Clone, Copy)]
+/// A batch of indexed tasks published to the workers. The closure and
+/// claim counter live on the submitting thread's stack; lifetimes are
+/// erased to thin pointers so persistent threads can run borrowed
+/// closures (the scoped-thread guarantee is re-established manually —
+/// see the safety notes on [`Pool::run_indexed`]).
+#[derive(Clone, Copy)]
+struct Batch {
+    /// Type-erased `&closure` (a `Fn(usize)` running one task).
+    data: *const (),
+    /// Monomorphized shim that calls `data` as its concrete closure.
+    call: unsafe fn(*const (), usize),
+    /// Shared claim counter handing out task indices exactly once.
+    next: *const AtomicUsize,
+    /// Number of tasks in the batch.
+    num_tasks: usize,
+}
+
+// SAFETY: `Batch` only ferries pointers to state on the submitting
+// thread's stack; `run_indexed` blocks until every worker is done with
+// the batch before that stack frame is released, and the pointed-to
+// closure is `Sync` (required by `run_indexed`'s bounds).
+unsafe impl Send for Batch {}
+
+/// Pool state guarded by one mutex.
+struct State {
+    /// The currently published batch, if any.
+    batch: Option<Batch>,
+    /// Monotone batch id so workers adopt each batch exactly once.
+    generation: u64,
+    /// Tasks completed in the current batch.
+    done: usize,
+    /// Workers currently inside the current batch.
+    active: usize,
+    /// A task in the current batch panicked.
+    panicked: bool,
+    /// Pool is shutting down (set by `Drop`).
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new batch (or shutdown).
+    work_cv: Condvar,
+    /// The submitter waits here for batch completion.
+    done_cv: Condvar,
+}
+
+unsafe fn call_closure<F: Fn(usize)>(data: *const (), i: usize) {
+    // SAFETY: `data` was created from `&F` by the monomorphized caller
+    // and outlives the batch (see `Batch` safety contract).
+    unsafe { (*(data as *const F))(i) }
+}
+
+/// A fixed-width persistent worker pool. Threads are spawned lazily on
+/// the first parallel batch, so a pool that never runs (e.g. a queued
+/// service job waiting for its first round) costs nothing.
 pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Serialises submitters: one batch in flight at a time.
+    submit: Mutex<()>,
     workers: usize,
 }
 
@@ -18,15 +87,15 @@ pub struct Pool {
 ///
 /// Safety contract (upheld by [`Pool::run_indexed`]): the atomic task
 /// counter hands every index to exactly one worker, so no two threads
-/// ever write the same slot; the scoped-thread join completes all
+/// ever write the same slot; the batch-completion wait finishes all
 /// writes before the owning `Vec` is read again.
 struct Slots<T> {
     ptr: *mut Option<T>,
 }
 
 // SAFETY: `Slots` is only a conduit for sending disjoint `&mut`-like
-// access to the slots across the scoped threads; `T: Send` is all that
-// moving values into the slots requires.
+// access to the slots across threads; `T: Send` is all that moving
+// values into the slots requires.
 unsafe impl<T: Send> Send for Slots<T> {}
 unsafe impl<T: Send> Sync for Slots<T> {}
 
@@ -37,26 +106,58 @@ impl<T> Slots<T> {
     /// `i` must be in bounds and written by at most one thread, with the
     /// underlying vector outliving all writers.
     unsafe fn write(&self, i: usize, value: T) {
-        *self.ptr.add(i) = Some(value);
+        unsafe { *self.ptr.add(i) = Some(value) };
     }
 }
 
 impl Pool {
-    /// Pool with `workers` threads (≥ 1).
+    /// Pool with `workers` total execution width (≥ 1): `workers - 1`
+    /// persistent threads (spawned lazily on first use) plus the
+    /// submitting thread, which always participates in its own batches.
     pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                batch: None,
+                generation: 0,
+                done: 0,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
         Self {
-            workers: workers.max(1),
+            shared,
+            handles: Mutex::new(Vec::new()),
+            submit: Mutex::new(()),
+            workers,
         }
     }
 
-    /// Number of worker threads.
+    /// Spawn the persistent worker threads if they are not running yet.
+    fn ensure_spawned(&self) {
+        let mut handles = self.handles.lock().unwrap_or_else(|e| e.into_inner());
+        if handles.is_empty() {
+            for _ in 1..self.workers {
+                let shared = Arc::clone(&self.shared);
+                handles.push(std::thread::spawn(move || worker_loop(&shared)));
+            }
+        }
+    }
+
+    /// Number of execution slots (threads, counting the submitter).
     pub fn workers(&self) -> usize {
         self.workers
     }
 
     /// Run `f(task_index)` for every index in `0..num_tasks` across the
     /// pool; returns the results ordered by task index. Panics in tasks
-    /// propagate.
+    /// propagate (as `"worker panicked"`) after the batch drains.
+    ///
+    /// Batches are serialised per pool; do not call re-entrantly from
+    /// inside a task of the same pool.
     pub fn run_indexed<T, F>(&self, num_tasks: usize, f: F) -> Vec<T>
     where
         T: Send,
@@ -65,7 +166,6 @@ impl Pool {
         if num_tasks == 0 {
             return vec![];
         }
-        let next = AtomicUsize::new(0);
         // Pre-sized slot vector written through disjoint indices — no
         // per-result Mutex allocation or lock traffic on the hot path.
         let mut results: Vec<Option<T>> = Vec::with_capacity(num_tasks);
@@ -73,33 +173,78 @@ impl Pool {
         let slots = Slots {
             ptr: results.as_mut_ptr(),
         };
-        let nthreads = self.workers.min(num_tasks);
-        std::thread::scope(|scope| {
-            let next = &next;
-            let slots = &slots;
-            let f = &f;
-            let mut handles = vec![];
-            for _ in 0..nthreads {
-                handles.push(scope.spawn(move || loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= num_tasks {
-                        break;
-                    }
-                    let out = f(i);
-                    // SAFETY: the atomic counter yields each `i` exactly
-                    // once, `i < num_tasks == results.len()`, and the
-                    // scope joins every worker before `results` is used.
-                    unsafe { slots.write(i, out) };
-                }));
+        let next = AtomicUsize::new(0);
+        let task = |i: usize| {
+            let out = f(i);
+            // SAFETY: the claim counter yields each `i` exactly once,
+            // `i < num_tasks == results.len()`, and `results` is only
+            // read after the batch fully drains.
+            unsafe { slots.write(i, out) };
+        };
+
+        if self.workers == 1 || num_tasks == 1 {
+            // Sequential fast path: no workers to wake (or nothing to
+            // share). Runs on the submitting thread only.
+            let mut panicked = false;
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= num_tasks {
+                    break;
+                }
+                if catch_unwind(AssertUnwindSafe(|| task(i))).is_err() {
+                    panicked = true;
+                }
             }
-            for h in handles {
-                h.join().expect("worker panicked");
-            }
-        });
+            assert!(!panicked, "worker panicked");
+        } else {
+            self.ensure_spawned();
+            self.run_batch(&task, &next, num_tasks);
+        }
+
         results
             .into_iter()
             .map(|m| m.expect("task not executed"))
             .collect()
+    }
+
+    /// Publish a batch, help execute it, and wait until it drains.
+    fn run_batch(&self, task: &(impl Fn(usize) + Sync), next: &AtomicUsize, num_tasks: usize) {
+        fn shim_of<F: Fn(usize)>(_: &F) -> unsafe fn(*const (), usize) {
+            call_closure::<F>
+        }
+        let batch = Batch {
+            data: (task as *const _) as *const (),
+            call: shim_of(task),
+            next: next as *const AtomicUsize,
+            num_tasks,
+        };
+        // One batch in flight at a time. A previous batch may have
+        // poisoned the lock by panicking while holding it; the pool
+        // state is still consistent then (the batch was retired before
+        // the panic), so poisoning is ignored.
+        let _guard = self.submit.lock().unwrap_or_else(|e| e.into_inner());
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.batch = Some(batch);
+            st.generation += 1;
+            st.done = 0;
+            st.panicked = false;
+            self.shared.work_cv.notify_all();
+        }
+        // The submitter participates in its own batch.
+        let (local_done, local_panic) = run_claims(&batch);
+        let mut st = self.shared.state.lock().unwrap();
+        st.done += local_done;
+        st.panicked |= local_panic;
+        while st.done < num_tasks || st.active > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        // Retire the batch before the closure/counter frame is released
+        // so no late-waking worker can adopt dangling pointers.
+        st.batch = None;
+        let panicked = st.panicked;
+        drop(st);
+        assert!(!panicked, "worker panicked");
     }
 
     /// Map `f` over the items of a slice in parallel, preserving order.
@@ -110,6 +255,83 @@ impl Pool {
         F: Fn(&'a I) -> T + Send + Sync,
     {
         self.run_indexed(items.len(), |i| f(&items[i]))
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        let mut handles = self.handles.lock().unwrap_or_else(|e| e.into_inner());
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("workers", &self.workers).finish()
+    }
+}
+
+/// Claim and run tasks from `batch` until the counter is exhausted;
+/// returns (tasks completed, whether any panicked).
+fn run_claims(batch: &Batch) -> (usize, bool) {
+    let mut done = 0usize;
+    let mut panicked = false;
+    loop {
+        // SAFETY: `next` lives on the submitter's stack, which is
+        // pinned until the batch retires (see `run_batch`).
+        let i = unsafe { (*batch.next).fetch_add(1, Ordering::Relaxed) };
+        if i >= batch.num_tasks {
+            break;
+        }
+        // SAFETY: same pinning argument for the closure behind `data`.
+        if catch_unwind(AssertUnwindSafe(|| unsafe { (batch.call)(batch.data, i) })).is_err() {
+            panicked = true;
+        }
+        done += 1;
+    }
+    (done, panicked)
+}
+
+/// Body of a persistent worker thread: adopt each published batch once,
+/// run claims, report completion, sleep.
+fn worker_loop(shared: &Shared) {
+    let mut last_gen = 0u64;
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        let gen = st.generation;
+        let published: Option<Batch> = st.batch; // `Batch` is `Copy`
+        let adopt = match published {
+            Some(b) if gen != last_gen => {
+                last_gen = gen;
+                st.active += 1;
+                Some(b)
+            }
+            _ => None,
+        };
+        match adopt {
+            Some(batch) => {
+                drop(st);
+                let (done, panicked) = run_claims(&batch);
+                st = shared.state.lock().unwrap();
+                st.done += done;
+                st.active -= 1;
+                st.panicked |= panicked;
+                shared.done_cv.notify_all();
+            }
+            None => {
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        }
     }
 }
 
@@ -176,6 +398,27 @@ mod tests {
     }
 
     #[test]
+    fn threads_spawn_lazily() {
+        // Pools owned by queued (not-yet-running) drivers must cost no
+        // OS threads until their first parallel batch.
+        let pool = Pool::new(4);
+        assert!(pool.handles.lock().unwrap().is_empty(), "idle pool holds no threads");
+        let _ = pool.run_indexed(8, |i| i);
+        assert_eq!(pool.handles.lock().unwrap().len(), 3, "workers - 1 threads after first batch");
+    }
+
+    #[test]
+    fn pool_survives_many_batches() {
+        // The point of persistence: thousands of batches on one pool,
+        // no per-batch thread spawns, results always in order.
+        let pool = Pool::new(4);
+        for round in 0..300usize {
+            let out = pool.run_indexed(16, |i| i + round);
+            assert_eq!(out, (0..16).map(|i| i + round).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
     fn uneven_task_durations_still_complete() {
         let pool = Pool::new(4);
         let out = pool.run_indexed(64, |i| {
@@ -188,6 +431,14 @@ mod tests {
     }
 
     #[test]
+    fn pool_is_send() {
+        // Drivers (and the StepRuns that own them) cross thread
+        // boundaries in the service layer.
+        fn assert_send<T: Send>() {}
+        assert_send::<Pool>();
+    }
+
+    #[test]
     #[should_panic(expected = "worker panicked")]
     fn panics_propagate() {
         let pool = Pool::new(2);
@@ -197,5 +448,33 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn panics_propagate_sequential_path() {
+        let pool = Pool::new(1);
+        pool.run_indexed(4, |i| {
+            if i == 2 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn pool_usable_after_a_panicked_batch() {
+        let pool = Pool::new(4);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_indexed(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err());
+        let out = pool.run_indexed(8, |i| i * 2);
+        assert_eq!(out, (0..8).map(|i| i * 2).collect::<Vec<_>>());
     }
 }

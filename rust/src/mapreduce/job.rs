@@ -1,11 +1,20 @@
-//! One MapReduce round (a Hadoop job): map step → shuffle → reduce step.
+//! One MapReduce round (a Hadoop job): map step → shuffle step →
+//! reduce step, executed on the driver's persistent [`Pool`].
+//!
+//! The shuffle is map-side partitioned (see [`super::shuffle`]): each
+//! map task routes its emissions into per-reduce-task sub-buckets *as
+//! it emits*, accumulating the shuffle metrics in the same pass, and
+//! each reduce task merges its column of map slices in parallel. No
+//! global intermediate vector is ever materialised and no separate
+//! measuring pass runs.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use super::executor::Pool;
 use super::metrics::RoundMetrics;
-use super::shuffle::{measure, shuffle};
+use super::shuffle::{merge_slices, MapSlices, PartitionedSink};
 use super::types::{Key, Mapper, Pair, Partitioner, Reducer, Value};
 
 /// Engine configuration, mirroring the paper's Hadoop setup (§4.2):
@@ -62,10 +71,19 @@ pub struct Job<'a, K: Key, V: Value> {
 }
 
 impl<'a, K: Key, V: Value> Job<'a, K, V> {
-    /// Execute the round on `input`, returning the output pairs and the
-    /// round metrics.
-    pub fn run(&self, round: usize, input: &[Pair<K, V>]) -> (Vec<Pair<K, V>>, RoundMetrics) {
-        let pool = Pool::new(self.config.workers);
+    /// Execute the round on `input` using `pool`, returning the output
+    /// pairs and the round metrics. Takes the input by value so it can
+    /// be released before the reduce step — with `Arc`-backed payloads
+    /// that makes the reducers the sole owners of their blocks, so
+    /// accumulator unwraps (e.g. the final-round ρ-way sum) are moves,
+    /// not copies.
+    pub fn run(
+        &self,
+        pool: &Pool,
+        round: usize,
+        input: Vec<Pair<K, V>>,
+    ) -> (Vec<Pair<K, V>>, RoundMetrics) {
+        let reduce_tasks = self.config.reduce_tasks;
         let mut metrics = RoundMetrics {
             round,
             input_pairs: input.len(),
@@ -74,43 +92,53 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
         };
 
         // --- Map step: split input evenly across map tasks (Hadoop's
-        // runtime distributes input pairs to map tasks).
+        // runtime distributes input pairs to map tasks); each task
+        // partitions its emissions into reduce-task sub-buckets as it
+        // emits, and the shuffle metrics accumulate in the same pass.
         let t0 = Instant::now();
         let num_map_tasks = self.config.map_tasks.max(1).min(input.len().max(1));
-        let chunks: Vec<&[Pair<K, V>]> = chunk_evenly(input, num_map_tasks);
-        let mapped: Vec<Vec<Pair<K, V>>> = pool.run_indexed(chunks.len(), |ti| {
-            let mut out = Vec::new();
-            for p in chunks[ti] {
-                self.mapper
-                    .map(round, &p.key, &p.value, &mut |k, v| out.push(Pair::new(k, v)));
-            }
-            match self.combiner {
-                None => out,
-                Some(comb) => {
-                    // Map-side combine: group this task's output by key
-                    // and pre-reduce each group.
-                    let mut groups: std::collections::BTreeMap<K, Vec<V>> =
-                        std::collections::BTreeMap::new();
-                    for p in out {
-                        groups.entry(p.key).or_default().push(p.value);
+        let map_outputs: Vec<MapSlices<K, V>> = {
+            let chunks: Vec<&[Pair<K, V>]> = chunk_evenly(&input, num_map_tasks);
+            pool.run_indexed(chunks.len(), |ti| {
+                let mut sink = PartitionedSink::new(self.partitioner, reduce_tasks);
+                match self.combiner {
+                    None => {
+                        for p in chunks[ti] {
+                            self.mapper
+                                .map(round, &p.key, &p.value, &mut |k, v| sink.push(k, v));
+                        }
                     }
-                    let mut combined = Vec::new();
-                    for (k, vs) in groups {
-                        comb.reduce(round, &k, vs, &mut |k, v| combined.push(Pair::new(k, v)));
+                    Some(comb) => {
+                        // Map-side combine: raw emissions group straight
+                        // into the task-wide key map (no intermediate
+                        // vector), and only the combined pairs go through
+                        // the partition sink — so the shuffle metrics
+                        // count the post-combine volume.
+                        let mut groups: BTreeMap<K, Vec<V>> = BTreeMap::new();
+                        for p in chunks[ti] {
+                            self.mapper.map(round, &p.key, &p.value, &mut |k, v| {
+                                groups.entry(k).or_default().push(v)
+                            });
+                        }
+                        for (k, vs) in groups {
+                            comb.reduce(round, &k, vs, &mut |k, v| sink.push(k, v));
+                        }
                     }
-                    combined
                 }
-            }
-        });
-        let intermediate: Vec<Pair<K, V>> = mapped.into_iter().flatten().collect();
+                sink.finish()
+            })
+        };
+        // The map step is done with the input: release it now so the
+        // pipeline holds the only references to the block payloads.
+        drop(input);
+        metrics.shuffle_pairs = map_outputs.iter().map(|m| m.pairs).sum();
+        metrics.shuffle_words = map_outputs.iter().map(|m| m.words).sum();
         metrics.map_time = t0.elapsed();
 
-        // --- Shuffle step.
+        // --- Shuffle step: each reduce task merges its column of map
+        // slices on the pool.
         let t1 = Instant::now();
-        let (sp, sw) = measure(&intermediate);
-        metrics.shuffle_pairs = sp;
-        metrics.shuffle_words = sw;
-        let shuffled = shuffle(intermediate, self.partitioner, self.config.reduce_tasks);
+        let shuffled = merge_slices(map_outputs, reduce_tasks, pool);
         metrics.num_reducers = shuffled.num_groups();
         metrics.reducers_per_task = shuffled.groups_per_task();
         metrics.shuffle_time = t1.elapsed();
@@ -120,7 +148,7 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
         // into the reduce function, not deep-copied (§Perf L3).
         let t2 = Instant::now();
         let max_red_words = Mutex::new(0usize);
-        let buckets: Vec<Mutex<Option<std::collections::BTreeMap<K, Vec<V>>>>> = shuffled
+        let buckets: Vec<Mutex<Option<BTreeMap<K, Vec<V>>>>> = shuffled
             .buckets
             .into_iter()
             .map(|b| Mutex::new(Some(b)))
@@ -155,7 +183,7 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
 }
 
 /// Split `xs` into `n` contiguous chunks whose sizes differ by at most 1.
-fn chunk_evenly<T>(xs: &[T], n: usize) -> Vec<&[T]> {
+pub(crate) fn chunk_evenly<T>(xs: &[T], n: usize) -> Vec<&[T]> {
     let n = n.max(1);
     let len = xs.len();
     let base = len / n;
@@ -184,11 +212,19 @@ mod tests {
         }
     }
 
+    fn run_job<K: Key, V: Value>(
+        job: &Job<'_, K, V>,
+        round: usize,
+        input: &[Pair<K, V>],
+    ) -> (Vec<Pair<K, V>>, RoundMetrics) {
+        let pool = Pool::new(job.config.workers);
+        job.run(&pool, round, input.to_vec())
+    }
+
     #[test]
     fn word_count_style_round() {
         // Classic word count: map emits (k,1), reduce sums.
-        let input: Vec<Pair<u32, f32>> =
-            (0..100).map(|i| Pair::new(i % 10, 1.0)).collect();
+        let input: Vec<Pair<u32, f32>> = (0..100).map(|i| Pair::new(i % 10, 1.0)).collect();
         let mapper = IdentityMapper;
         let reducer = FnReducer::new(|_r, k: &u32, vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
             emit(*k, vs.iter().sum());
@@ -200,7 +236,7 @@ mod tests {
             reducer: &reducer,
             partitioner: &HashPartitioner,
         };
-        let (out, m) = job.run(0, &input);
+        let (out, m) = run_job(&job, 0, &input);
         assert_eq!(out.len(), 10);
         for p in &out {
             assert_eq!(p.value, 10.0);
@@ -230,7 +266,7 @@ mod tests {
             reducer: &reducer,
             partitioner: &HashPartitioner,
         };
-        let (out, m) = job.run(0, &input);
+        let (out, m) = run_job(&job, 0, &input);
         assert_eq!(m.shuffle_pairs, 150);
         assert_eq!(out.len(), 150);
     }
@@ -253,13 +289,14 @@ mod tests {
             reducer: &reducer,
             partitioner: &HashPartitioner,
         };
-        let (_, m) = job.run(0, &input);
+        let (_, m) = run_job(&job, 0, &input);
         assert_eq!(m.max_reducer_words, 9);
     }
 
     #[test]
     fn deterministic_across_worker_counts() {
-        let input: Vec<Pair<u32, f32>> = (0..200).map(|i| Pair::new(i % 17, (i % 5) as f32)).collect();
+        let input: Vec<Pair<u32, f32>> =
+            (0..200).map(|i| Pair::new(i % 17, (i % 5) as f32)).collect();
         let reducer = FnReducer::new(|_r, k: &u32, vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
             emit(*k, vs.iter().sum());
         });
@@ -277,7 +314,7 @@ mod tests {
                 reducer: &reducer,
                 partitioner: &HashPartitioner,
             };
-            let (mut out, _) = job.run(0, &input);
+            let (mut out, _) = run_job(&job, 0, &input);
             out.sort_by_key(|p| p.key);
             outs.push(out);
         }
@@ -300,7 +337,7 @@ mod tests {
             reducer: &reducer,
             partitioner: &HashPartitioner,
         };
-        let (out, _) = job.run(5, &[Pair::new(1u32, 0.0f32)]);
+        let (out, _) = run_job(&job, 5, &[Pair::new(1u32, 0.0f32)]);
         assert_eq!(out[0].value, 10.0);
     }
 
@@ -316,7 +353,7 @@ mod tests {
             reducer: &reducer,
             partitioner: &HashPartitioner,
         };
-        let (out, m) = job.run(0, &[]);
+        let (out, m) = run_job(&job, 0, &[]);
         assert!(out.is_empty());
         assert_eq!(m.shuffle_pairs, 0);
         assert_eq!(m.num_reducers, 0);
@@ -347,8 +384,8 @@ mod tests {
             reducer: &reducer,
             partitioner: &HashPartitioner,
         };
-        let (mut out_a, m_a) = plain.run(0, &input);
-        let (mut out_b, m_b) = combined.run(0, &input);
+        let (mut out_a, m_a) = run_job(&plain, 0, &input);
+        let (mut out_b, m_b) = run_job(&combined, 0, &input);
         out_a.sort_by_key(|p| p.key);
         out_b.sort_by_key(|p| p.key);
         assert_eq!(out_a, out_b, "combiner must not change the result");
@@ -376,7 +413,7 @@ mod tests {
             reducer: &reducer,
             partitioner: &HashPartitioner,
         };
-        let (_, m) = job.run(0, &input);
+        let (_, m) = run_job(&job, 0, &input);
         assert_eq!(m.output_words_per_task.len(), 3, "one entry per reduce task");
         assert_eq!(
             m.output_words_per_task.iter().sum::<usize>(),

@@ -6,6 +6,12 @@
 //! communication). The engine records all of these so tests can assert
 //! the theoretical bounds (Theorems 3.1–3.3) and the harness can print
 //! paper-style component breakdowns.
+//!
+//! Shuffle metrics are accumulated *inside* the map-side partitioning
+//! pass ([`crate::mapreduce::shuffle::PartitionedSink`]) — there is no
+//! separate measuring sweep over a materialised intermediate vector —
+//! and the equivalence suite pins them bit-for-bit against the
+//! sequential reference engine.
 
 use std::time::Duration;
 

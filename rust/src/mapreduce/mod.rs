@@ -1,17 +1,21 @@
 //! A Hadoop-like MapReduce engine.
 //!
 //! This is the substrate the paper ran on (Hadoop 2.x), rebuilt
-//! in-process: a round is a *job* with a map step, a shuffle step that
-//! groups intermediate pairs by key and routes groups to reduce tasks
-//! through a pluggable [`types::Partitioner`], and a reduce step. Pairs
-//! are materialised between rounds in a simulated distributed file
-//! system ([`dfs::SimDfs`]) exactly as Hadoop stores round outputs on
-//! HDFS — the behaviour the paper identifies as the main multi-round
-//! overhead. Map/reduce tasks execute on a thread-pool
-//! ([`executor::Pool`]) whose width models cluster slots.
+//! in-process: a round is a *job* with a map step, a **map-side
+//! partitioned** shuffle step (each map task spills its emissions into
+//! per-reduce-task sub-buckets as it emits, routed by a pluggable
+//! [`types::Partitioner`]; each reduce task merges its column of map
+//! slices in parallel — see [`shuffle`]), and a reduce step. Pairs are
+//! materialised between rounds in a simulated distributed file system
+//! ([`dfs::SimDfs`]) exactly as Hadoop stores round outputs on HDFS —
+//! the behaviour the paper identifies as the main multi-round
+//! overhead. Map/reduce tasks execute on a **persistent** thread pool
+//! ([`executor::Pool`], owned by the [`Driver`]) whose width models
+//! cluster slots.
 //!
 //! The engine is generic over key/value types; the M3 algorithms in
-//! [`crate::m3`] instantiate it with block keys and matrix-block values.
+//! [`crate::m3`] instantiate it with block keys and `Arc`-backed
+//! matrix-block values, so inter-round pair clones are pointer bumps.
 
 pub mod dfs;
 pub mod driver;
@@ -21,7 +25,11 @@ pub mod metrics;
 pub mod shuffle;
 pub mod types;
 
+#[cfg(test)]
+mod equivalence;
+
 pub use driver::{Driver, MultiRoundAlgorithm, StepRun};
+pub use executor::Pool;
 pub use job::{EngineConfig, Job};
 pub use metrics::{JobMetrics, RoundMetrics};
 pub use types::{Mapper, Pair, Partitioner, Reducer, Value};

@@ -1,13 +1,34 @@
 //! The shuffle step: partition intermediate pairs to reduce tasks and
 //! group them by key.
 //!
-//! Hadoop's shuffle routes each key's group to a reduce task through the
-//! job's `Partitioner`, then sorts/groups within each task. We reproduce
-//! that structure: a bucket per reduce task, each bucket a sorted
-//! key → values map (BTreeMap keeps the engine deterministic).
+//! Hadoop's shuffle is *map-side partitioned*: each map task spills its
+//! emissions into one local sub-bucket per reduce task as it produces
+//! them, and each reduce task then merges its column of map-side slices.
+//! We reproduce that pipeline exactly:
+//!
+//! ```text
+//! map task 0 ──► [slice→R0][slice→R1]…[slice→RT-1]   (PartitionedSink)
+//! map task 1 ──► [slice→R0][slice→R1]…[slice→RT-1]
+//!      ⋮                      │ column t
+//!                             ▼
+//! reduce task t ◄── merge slices 0..M in map-task order (merge_slices)
+//! ```
+//!
+//! Shuffle metrics (`pairs`, `words`) are accumulated *during*
+//! partitioning, so no global intermediate vector is ever materialised
+//! and no separate measuring pass runs. Grouping within each reduce
+//! task uses a `BTreeMap` (sorted keys keep the engine deterministic),
+//! and merging the map slices in map-task order reproduces the exact
+//! value order of a sequential global shuffle.
+//!
+//! [`shuffle`] — the old single-threaded global group-by — is kept as
+//! the *reference implementation*: the equivalence suite and
+//! `benches/engine_bench.rs` compare the parallel pipeline against it.
 
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 
+use super::executor::Pool;
 use super::types::{Key, Pair, Partitioner, Value};
 
 /// Output of the shuffle: one bucket per reduce task, each mapping key
@@ -29,7 +50,109 @@ impl<K: Key, V: Value> Shuffled<K, V> {
     }
 }
 
-/// Partition + group the intermediate pairs into `num_tasks` buckets.
+/// One map task's partitioned output: a slice of pairs per reduce task,
+/// in emission order, plus the task's shuffle metrics.
+pub struct MapSlices<K, V> {
+    /// `slices[t]` = this task's pairs routed to reduce task `t`.
+    pub slices: Vec<Vec<Pair<K, V>>>,
+    /// Intermediate pairs this task emitted (post-combine).
+    pub pairs: usize,
+    /// Intermediate words this task emitted (post-combine).
+    pub words: usize,
+}
+
+/// Map-side partitioning sink: routes each emission to its reduce
+/// task's local sub-bucket as it happens (Hadoop's spill/partition
+/// design) and accumulates the shuffle metrics in the same pass.
+pub struct PartitionedSink<'a, K: Key, V: Value> {
+    partitioner: &'a dyn Partitioner<K>,
+    num_tasks: usize,
+    slices: Vec<Vec<Pair<K, V>>>,
+    pairs: usize,
+    words: usize,
+}
+
+impl<'a, K: Key, V: Value> PartitionedSink<'a, K, V> {
+    /// A sink routing to `num_tasks` reduce tasks.
+    pub fn new(partitioner: &'a dyn Partitioner<K>, num_tasks: usize) -> Self {
+        assert!(num_tasks > 0, "need at least one reduce task");
+        Self {
+            partitioner,
+            num_tasks,
+            slices: (0..num_tasks).map(|_| Vec::new()).collect(),
+            pairs: 0,
+            words: 0,
+        }
+    }
+
+    /// Route one emission to its reduce task's sub-bucket.
+    pub fn push(&mut self, key: K, value: V) {
+        let t = self.partitioner.partition(&key, self.num_tasks);
+        assert!(
+            t < self.num_tasks,
+            "partitioner returned {t} for {} tasks",
+            self.num_tasks
+        );
+        self.pairs += 1;
+        self.words += value.words();
+        self.slices[t].push(Pair::new(key, value));
+    }
+
+    /// Finish the map task, yielding its slices and metrics.
+    pub fn finish(self) -> MapSlices<K, V> {
+        MapSlices {
+            slices: self.slices,
+            pairs: self.pairs,
+            words: self.words,
+        }
+    }
+}
+
+/// Merge the map tasks' partitioned slices into grouped buckets, one
+/// reduce task at a time on the pool. Merging column `t` in map-task
+/// order reproduces the value order of a sequential global shuffle, so
+/// the result is identical to [`shuffle`] over the concatenated
+/// emissions.
+pub fn merge_slices<K: Key, V: Value>(
+    map_outputs: Vec<MapSlices<K, V>>,
+    num_tasks: usize,
+    pool: &Pool,
+) -> Shuffled<K, V> {
+    assert!(num_tasks > 0, "need at least one reduce task");
+    // Transpose ownership: columns[t][m] = map task m's slice for t.
+    // Vec moves only — no pair is copied.
+    let mut columns: Vec<Vec<Vec<Pair<K, V>>>> = (0..num_tasks)
+        .map(|_| Vec::with_capacity(map_outputs.len()))
+        .collect();
+    for mo in map_outputs {
+        assert_eq!(mo.slices.len(), num_tasks, "map output arity mismatch");
+        for (t, slice) in mo.slices.into_iter().enumerate() {
+            columns[t].push(slice);
+        }
+    }
+    let columns: Vec<Mutex<Option<Vec<Vec<Pair<K, V>>>>>> =
+        columns.into_iter().map(|c| Mutex::new(Some(c))).collect();
+    let buckets = pool.run_indexed(num_tasks, |t| {
+        let column = columns[t]
+            .lock()
+            .unwrap()
+            .take()
+            .expect("column merged twice");
+        let mut bucket: BTreeMap<K, Vec<V>> = BTreeMap::new();
+        for slice in column {
+            for p in slice {
+                bucket.entry(p.key).or_default().push(p.value);
+            }
+        }
+        bucket
+    });
+    Shuffled { buckets }
+}
+
+/// Partition + group the intermediate pairs into `num_tasks` buckets —
+/// the single-threaded **reference implementation** the parallel
+/// pipeline ([`PartitionedSink`] + [`merge_slices`]) is checked and
+/// benchmarked against. The engine itself no longer calls this.
 pub fn shuffle<K: Key, V: Value>(
     pairs: Vec<Pair<K, V>>,
     partitioner: &dyn Partitioner<K>,
@@ -48,8 +171,8 @@ pub fn shuffle<K: Key, V: Value>(
     Shuffled { buckets }
 }
 
-/// Count pairs and words of an intermediate pair set (pre-shuffle
-/// metric collection).
+/// Count pairs and words of an intermediate pair set — reference
+/// counterpart of the metrics [`PartitionedSink`] accumulates inline.
 pub fn measure<K: Key, V: Value>(pairs: &[Pair<K, V>]) -> (usize, usize) {
     let words = pairs.iter().map(|p| p.value.words()).sum();
     (pairs.len(), words)
@@ -72,13 +195,32 @@ mod tests {
         kvs.iter().map(|&(k, v)| Pair::new(k, v)).collect()
     }
 
+    /// Run the parallel pipeline over `chunks` (one chunk per map task).
+    fn pipeline(
+        chunks: &[Vec<Pair<u32, f32>>],
+        partitioner: &dyn Partitioner<u32>,
+        num_tasks: usize,
+        workers: usize,
+    ) -> (Shuffled<u32, f32>, usize, usize) {
+        let pool = Pool::new(workers);
+        let outputs: Vec<MapSlices<u32, f32>> = chunks
+            .iter()
+            .map(|chunk| {
+                let mut sink = PartitionedSink::new(partitioner, num_tasks);
+                for p in chunk {
+                    sink.push(p.key, p.value);
+                }
+                sink.finish()
+            })
+            .collect();
+        let pairs: usize = outputs.iter().map(|o| o.pairs).sum();
+        let words: usize = outputs.iter().map(|o| o.words).sum();
+        (merge_slices(outputs, num_tasks, &pool), pairs, words)
+    }
+
     #[test]
     fn groups_by_key() {
-        let s = shuffle(
-            pairs(&[(1, 1.0), (2, 2.0), (1, 3.0)]),
-            &ModPartitioner,
-            2,
-        );
+        let s = shuffle(pairs(&[(1, 1.0), (2, 2.0), (1, 3.0)]), &ModPartitioner, 2);
         assert_eq!(s.num_groups(), 2);
         // key 1 -> task 1, key 2 -> task 0
         assert_eq!(s.buckets[1][&1], vec![1.0, 3.0]);
@@ -87,11 +229,7 @@ mod tests {
 
     #[test]
     fn preserves_emission_order_within_group() {
-        let s = shuffle(
-            pairs(&[(7, 1.0), (7, 2.0), (7, 3.0)]),
-            &ModPartitioner,
-            4,
-        );
+        let s = shuffle(pairs(&[(7, 1.0), (7, 2.0), (7, 3.0)]), &ModPartitioner, 4);
         assert_eq!(s.buckets[3][&7], vec![1.0, 2.0, 3.0]);
     }
 
@@ -124,8 +262,60 @@ mod tests {
     }
 
     #[test]
+    fn sink_accumulates_metrics_inline() {
+        let mut sink = PartitionedSink::new(&ModPartitioner, 3);
+        for (k, v) in [(0u32, 1.0f32), (1, 2.0), (4, 3.0)] {
+            sink.push(k, v);
+        }
+        let out = sink.finish();
+        assert_eq!(out.pairs, 3);
+        assert_eq!(out.words, 3);
+        assert_eq!(out.slices[0].len(), 1);
+        assert_eq!(out.slices[1].len(), 2, "keys 1 and 4 both route to 1");
+        assert!(out.slices[2].is_empty());
+    }
+
+    #[test]
+    fn pipeline_matches_reference_exactly() {
+        // Identical buckets (keys, value order) and metrics, across
+        // worker counts — the core shuffle equivalence invariant.
+        let flat: Vec<Pair<u32, f32>> =
+            (0..2000).map(|i| Pair::new(i * 7919 % 97, i as f32)).collect();
+        let chunks: Vec<Vec<Pair<u32, f32>>> =
+            flat.chunks(123).map(|c| c.to_vec()).collect();
+        let (rp, rw) = measure(&flat);
+        let reference = shuffle(flat, &HashPartitioner, 6);
+        for workers in [1usize, 2, 8] {
+            let (got, gp, gw) = pipeline(&chunks, &HashPartitioner, 6, workers);
+            assert_eq!(gp, rp, "pairs metric (workers={workers})");
+            assert_eq!(gw, rw, "words metric (workers={workers})");
+            assert_eq!(got.num_groups(), reference.num_groups());
+            assert_eq!(got.groups_per_task(), reference.groups_per_task());
+            assert_eq!(got.buckets.len(), reference.buckets.len());
+            for (b_got, b_ref) in got.buckets.iter().zip(&reference.buckets) {
+                assert_eq!(b_got, b_ref, "bucket mismatch (workers={workers})");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_preserves_map_task_order_within_group() {
+        // Two map tasks emit to the same key; the merged group must
+        // list task 0's values before task 1's.
+        let chunks = vec![pairs(&[(3, 1.0), (3, 2.0)]), pairs(&[(3, 9.0)])];
+        let (s, _, _) = pipeline(&chunks, &ModPartitioner, 4, 2);
+        assert_eq!(s.buckets[3][&3], vec![1.0, 2.0, 9.0]);
+    }
+
+    #[test]
     #[should_panic(expected = "at least one reduce task")]
     fn zero_tasks_panics() {
         let _ = shuffle(pairs(&[(1, 1.0)]), &ModPartitioner, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one reduce task")]
+    fn sink_zero_tasks_panics() {
+        let _ = PartitionedSink::<u32, f32>::new(&ModPartitioner, 0);
     }
 }

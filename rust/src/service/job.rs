@@ -20,7 +20,7 @@ use crate::m3::multiply::{
 use crate::m3::partitioner::{BalancedPartitioner2d, BalancedPartitioner3d};
 use crate::m3::planner::{Plan2d, Plan3d, SparsePlan};
 use crate::mapreduce::{
-    EngineConfig, JobMetrics, MultiRoundAlgorithm, Pair, RoundMetrics, StepRun,
+    EngineConfig, JobMetrics, MultiRoundAlgorithm, Pair, Pool, RoundMetrics, StepRun,
 };
 use crate::matrix::{gen, BlockGrid, CooMatrix, DenseMatrix};
 use crate::runtime::LocalMultiply;
@@ -227,14 +227,29 @@ impl<A: MultiRoundAlgorithm + Send + 'static> ActiveJob for SteppedJob<A> {
     }
 }
 
-/// Validate `spec`, generate its inputs, and spawn the resumable job.
-/// All jobs share `engine` (the cluster) and `backend` (the local
-/// multiply); predictions are priced on the in-house cluster profile so
-/// scheduling decisions are deterministic across machines.
+/// Validate `spec`, generate its inputs, and spawn the resumable job
+/// with its own (lazily spawned) worker pool. The scheduler uses
+/// [`spawn_job_on`] instead so all jobs share one set of cluster
+/// threads.
 pub fn spawn_job(
     spec: &JobSpec,
     engine: EngineConfig,
     backend: Arc<dyn LocalMultiply>,
+) -> Result<Box<dyn ActiveJob>> {
+    spawn_job_on(spec, engine, backend, Arc::new(Pool::new(engine.workers)))
+}
+
+/// Like [`spawn_job`], but the job's rounds execute on `pool` — the
+/// shared cluster slots every concurrent job of the service uses (one
+/// round occupies them at a time, so sharing is free).
+/// All jobs share `engine` (the cluster) and `backend` (the local
+/// multiply); predictions are priced on the in-house cluster profile so
+/// scheduling decisions are deterministic across machines.
+pub fn spawn_job_on(
+    spec: &JobSpec,
+    engine: EngineConfig,
+    backend: Arc<dyn LocalMultiply>,
+    pool: Arc<Pool>,
 ) -> Result<Box<dyn ActiveJob>> {
     let profile = ClusterProfile::inhouse();
     match spec.kind {
@@ -257,7 +272,7 @@ pub fn spawn_job(
                 }),
             );
             Ok(Box::new(SteppedJob {
-                run: StepRun::new(engine, alg, input),
+                run: StepRun::with_pool(engine, alg, input, pool.clone()),
                 predicted: simulate_dense3d(&plan, &profile).per_round(),
                 assemble: Box::new(move |out| {
                     JobOutput::Dense(dense_3d_assemble(&grid, out))
@@ -281,7 +296,7 @@ pub fn spawn_job(
                 }),
             );
             Ok(Box::new(SteppedJob {
-                run: StepRun::new(engine, alg, input),
+                run: StepRun::with_pool(engine, alg, input, pool.clone()),
                 predicted: simulate_dense2d(&plan, &profile).per_round(),
                 assemble: Box::new(move |out| {
                     JobOutput::Dense(Algo2d::assemble_output(plan, &out))
@@ -312,7 +327,7 @@ pub fn spawn_job(
                 }),
             );
             Ok(Box::new(SteppedJob {
-                run: StepRun::new(engine, alg, input),
+                run: StepRun::with_pool(engine, alg, input, pool.clone()),
                 predicted: simulate_sparse3d(&plan, &profile).per_round(),
                 assemble: Box::new(move |out| {
                     JobOutput::Sparse(sparse_3d_assemble(side, block_side, out))

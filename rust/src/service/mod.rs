@@ -40,7 +40,7 @@ pub mod scheduler;
 pub mod spot;
 pub mod workload;
 
-pub use job::{reference_product, spawn_job, JobKind, JobOutput, JobSpec};
+pub use job::{reference_product, spawn_job, spawn_job_on, JobKind, JobOutput, JobSpec};
 pub use metrics::{JobReport, ServiceMetrics, TenantSummary};
 pub use scheduler::{run_service, CompletedJob, Policy, RoundTrace, ServiceConfig, ServiceOutcome};
 pub use spot::{poisson_preemptions, replay_with_preemptions, SpotReplay};

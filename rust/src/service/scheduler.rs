@@ -20,10 +20,10 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::mapreduce::EngineConfig;
+use crate::mapreduce::{EngineConfig, Pool};
 use crate::runtime::LocalMultiply;
 
-use super::job::{spawn_job, ActiveJob, JobOutput, JobSpec};
+use super::job::{spawn_job_on, ActiveJob, JobOutput, JobSpec};
 use super::metrics::{JobReport, ServiceMetrics};
 
 /// Round-selection policy.
@@ -146,12 +146,16 @@ pub fn run_service(
     let mut completed: Vec<CompletedJob> = Vec::new();
     let mut tenant_service: BTreeMap<usize, f64> = BTreeMap::new();
     let mut clock = 0.0f64;
+    // One set of cluster threads for the whole service: every job's
+    // driver runs its rounds on this shared pool (rounds never overlap,
+    // so per-job pools would only multiply idle threads).
+    let pool = Arc::new(Pool::new(cfg.engine.workers));
 
     loop {
         // Admit every job that has arrived by now.
         while arrivals.peek().is_some_and(|s| s.arrival_secs <= clock) {
             let spec = arrivals.next().unwrap();
-            let job = spawn_job(&spec, cfg.engine, backend.clone())?;
+            let job = spawn_job_on(&spec, cfg.engine, backend.clone(), pool.clone())?;
             let report = JobReport::submitted(&spec, job.num_rounds());
             active.push(Entry { spec, job, report });
         }

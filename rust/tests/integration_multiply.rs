@@ -211,10 +211,10 @@ fn preempted_pipeline_still_exact() {
     );
     let mut input: Vec<Pair<TripleKey, DenseBlock>> = vec![];
     for ((i, j), blk) in grid.split(&a) {
-        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::A(blk)));
+        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::a(blk)));
     }
     for ((i, j), blk) in grid.split(&b) {
-        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::B(blk)));
+        input.push(Pair::new(TripleKey::io(i, j), DenseBlock::b(blk)));
     }
     let mut driver = Driver::new(engine());
     let res = driver.run_preempted(&alg, &input, &[1e-9, 2e-9, 3e-9]);
@@ -224,7 +224,7 @@ fn preempted_pipeline_still_exact() {
         .into_iter()
         .map(|p| {
             let m = match p.value {
-                DenseBlock::C(m) => m,
+                DenseBlock::C(m) => (*m).clone(),
                 _ => panic!("non-C output"),
             };
             ((p.key.i as usize, p.key.j as usize), m)
