@@ -1,0 +1,41 @@
+//! Kernel-throughput benchmark (`cargo bench --bench kernel_bench`):
+//! every reduce-side compute kernel raced against the reference it
+//! replaced — register-tiled f32 GEMM vs the scalar `i-k-j` row loop
+//! and the naive triple loop, tiled semiring GEMM vs
+//! `matmul_naive_sr` (Arithmetic / MinPlus / BoolOrAnd), and the
+//! epoch-marked Gustavson SpGEMM vs the old touched-scan accumulator —
+//! at sides {64, 256, 512} and ER inputs with {8, 32} nnz/row.
+//!
+//! The same measurements back the `m3 bench-kernels` CLI, which can
+//! write them to `BENCH_kernels.json` — see
+//! `m3::harness::kernel_bench`.
+//!
+//! Flags: `--quick` (or `M3_BENCH_QUICK=1`) shrinks the sweep for CI.
+
+use m3::harness::{run_kernel_bench, KernelBenchConfig};
+
+fn main() {
+    let quick =
+        std::env::args().any(|a| a == "--quick") || std::env::var("M3_BENCH_QUICK").is_ok();
+    let cfg = if quick {
+        KernelBenchConfig {
+            sides: vec![64, 128],
+            sparse_side: 256,
+            quick: true,
+            ..KernelBenchConfig::default()
+        }
+    } else {
+        KernelBenchConfig::default()
+    };
+    println!(
+        "M3 kernel benchmark (in-house driver; criterion unavailable offline){}",
+        if quick { " [quick]" } else { "" }
+    );
+    let rep = run_kernel_bench(&cfg);
+    println!("{}", rep.text);
+    println!(
+        "headline: semiring GEMM {:.2}x vs naive (target: >=2x at side 256), \
+         SpGEMM {:.2}x vs touched-scan (target: >=1x)",
+        rep.semiring_speedup_headline, rep.spgemm_speedup_headline
+    );
+}

@@ -96,19 +96,6 @@ pub struct EngineBenchReport {
     pub headline_speedup: f64,
 }
 
-fn bencher(quick: bool) -> Bencher {
-    if quick {
-        Bencher {
-            budget: std::time::Duration::from_millis(300),
-            warmup_iters: 1,
-            min_iters: 2,
-            max_iters: 10,
-        }
-    } else {
-        Bencher::quick()
-    }
-}
-
 /// Synthetic old-vs-new shuffle: `pairs` small key-value pairs already
 /// split across 16 map-task emission lists. The sequential reference
 /// materialises one flat vector, measures it, and groups it on one
@@ -470,7 +457,7 @@ fn dense_runs_json(runs: &[DenseRun]) -> String {
 
 /// Run the full engine benchmark.
 pub fn run_engine_bench(cfg: &EngineBenchConfig) -> EngineBenchReport {
-    let b = bencher(cfg.quick);
+    let b = Bencher::for_harness(cfg.quick);
     let q = cfg.n / cfg.block;
     assert!(q >= 1 && cfg.n % cfg.block == 0, "block must divide n");
     let mut text = String::new();

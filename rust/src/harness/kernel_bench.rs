@@ -1,0 +1,462 @@
+//! Kernel-throughput benchmark: every reduce-side compute kernel
+//! (register-tiled f32 GEMM, tiled semiring GEMM, epoch-marked
+//! Gustavson SpGEMM) raced against the reference implementation it
+//! replaced, with effective FLOP/s per kernel.
+//!
+//! Two front-ends share this module: `cargo bench --bench kernel_bench`
+//! and the `m3 bench-kernels` CLI (which can also write the results as
+//! `BENCH_kernels.json` to seed the perf trajectory).
+
+use crate::matrix::semiring::{Arithmetic, BoolOrAnd, MinPlus, Semiring};
+use crate::matrix::{gen, DenseMatrix};
+use crate::runtime::kernels::{gemm_acc, gemm_acc_ikj, gemm_acc_sr};
+use crate::util::bench::{black_box, Bencher};
+use crate::util::rng::Xoshiro256ss;
+use crate::util::table::Table;
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct KernelBenchConfig {
+    /// Dense/semiring GEMM sides to sweep (ISSUE baseline:
+    /// {64, 256, 512}).
+    pub sides: Vec<usize>,
+    /// Side of the sparse SpGEMM instances.
+    pub sparse_side: usize,
+    /// Average non-zeros per row of the Erdős–Rényi SpGEMM inputs.
+    pub nnz_per_row: Vec<usize>,
+    /// Fewer/shorter iterations (CI smoke).
+    pub quick: bool,
+}
+
+impl Default for KernelBenchConfig {
+    fn default() -> Self {
+        Self {
+            sides: vec![64, 256, 512],
+            sparse_side: 512,
+            nnz_per_row: vec![8, 32],
+            quick: false,
+        }
+    }
+}
+
+/// One f32 GEMM measurement.
+#[derive(Debug, Clone)]
+pub struct DensePoint {
+    /// Matrix side.
+    pub side: usize,
+    /// Median seconds: register-tiled kernel.
+    pub tiled_secs: f64,
+    /// Median seconds: pre-overhaul scalar `i-k-j` row loop.
+    pub ikj_secs: f64,
+    /// Median seconds: naive triple-loop oracle.
+    pub naive_secs: f64,
+    /// Tiled-kernel throughput in GFLOP/s (`2·side³` flops).
+    pub gflops: f64,
+    /// Tiled speedup over the naive oracle.
+    pub speedup_vs_naive: f64,
+    /// Tiled speedup over the scalar row loop.
+    pub speedup_vs_ikj: f64,
+}
+
+/// One semiring GEMM measurement.
+#[derive(Debug, Clone)]
+pub struct SemiringPoint {
+    /// Semiring name.
+    pub semiring: &'static str,
+    /// Matrix side.
+    pub side: usize,
+    /// Median seconds: tiled semiring kernel.
+    pub tiled_secs: f64,
+    /// Median seconds: naive `matmul_naive_sr` triple loop.
+    pub naive_secs: f64,
+    /// Tiled throughput in effective GFLOP/s (`2·side³` ⊕/⊗ pairs).
+    pub gflops: f64,
+    /// Tiled speedup over the naive triple loop.
+    pub speedup_vs_naive: f64,
+}
+
+/// One SpGEMM measurement.
+#[derive(Debug, Clone)]
+pub struct SpgemmPoint {
+    /// Matrix side.
+    pub side: usize,
+    /// Average non-zeros per input row.
+    pub nnz_per_row: usize,
+    /// Exact multiply count of the instance (`Σ_{(i,k)∈A} nnz(B_k)`).
+    pub multiplies: usize,
+    /// Median seconds: epoch-marked accumulator.
+    pub epoch_secs: f64,
+    /// Median seconds: old touched-scan accumulator.
+    pub scan_secs: f64,
+    /// Epoch-kernel throughput in effective MFLOP/s (2 flops per
+    /// multiply).
+    pub mflops: f64,
+    /// Epoch speedup over the touched-scan accumulator.
+    pub speedup_vs_scan: f64,
+}
+
+/// Full benchmark result.
+#[derive(Debug, Clone)]
+pub struct KernelBenchReport {
+    /// Human-readable report.
+    pub text: String,
+    /// Machine-readable JSON (the `BENCH_kernels.json` payload).
+    pub json: String,
+    /// Headline: worst semiring-GEMM speedup vs naive at side 256 (or
+    /// the largest measured side when 256 is not in the sweep).
+    pub semiring_speedup_headline: f64,
+    /// Headline: worst SpGEMM speedup vs the touched-scan accumulator
+    /// among the ≥32 nnz/row points (the acceptance criterion's
+    /// regime; falls back to all points when the sweep has none).
+    pub spgemm_speedup_headline: f64,
+}
+
+fn bench_dense(sides: &[usize], b: &Bencher, text: &mut String) -> Vec<DensePoint> {
+    let mut points = vec![];
+    for &s in sides {
+        let mut rng = Xoshiro256ss::new(0xD0 ^ s as u64);
+        let a = gen::dense_int(s, s, &mut rng);
+        let bm = gen::dense_int(s, s, &mut rng);
+        let c = gen::dense_int(s, s, &mut rng);
+        let tiled = b.bench(&format!("gemm_tiled_{s}"), || {
+            let mut out = c.clone();
+            gemm_acc(s, s, s, a.as_slice(), bm.as_slice(), out.as_mut_slice());
+            black_box(out)
+        });
+        text.push_str(&format!("{}\n", tiled.summary()));
+        let ikj = b.bench(&format!("gemm_ikj_{s}"), || {
+            let mut out = c.clone();
+            gemm_acc_ikj(s, s, s, a.as_slice(), bm.as_slice(), out.as_mut_slice());
+            black_box(out)
+        });
+        text.push_str(&format!("{}\n", ikj.summary()));
+        let naive = b.bench(&format!("gemm_naive_{s}"), || {
+            let mut out = a.matmul_naive(&bm);
+            out.add_assign(&c);
+            black_box(out)
+        });
+        text.push_str(&format!("{}\n", naive.summary()));
+        let t = tiled.median().max(1e-12);
+        points.push(DensePoint {
+            side: s,
+            tiled_secs: tiled.median(),
+            ikj_secs: ikj.median(),
+            naive_secs: naive.median(),
+            gflops: 2.0 * (s as f64).powi(3) / t / 1e9,
+            speedup_vs_naive: naive.median() / t,
+            speedup_vs_ikj: ikj.median() / t,
+        });
+    }
+    points
+}
+
+/// Semiring-specific input: the ⊕-identity must actually occur, so
+/// MinPlus gets distance-like matrices (∞ = no edge) and BoolOrAnd
+/// gets a 0/1 adjacency matrix.
+fn semiring_input<S: Semiring>(side: usize, rng: &mut Xoshiro256ss) -> DenseMatrix {
+    if S::name() == MinPlus::name() {
+        DenseMatrix::from_fn(side, side, |_, _| {
+            if rng.bernoulli(0.5) {
+                rng.range_u64(0, 9) as f32
+            } else {
+                f32::INFINITY
+            }
+        })
+    } else if S::name() == BoolOrAnd::name() {
+        DenseMatrix::from_fn(side, side, |_, _| {
+            if rng.bernoulli(0.5) {
+                1.0
+            } else {
+                0.0
+            }
+        })
+    } else {
+        gen::dense_int(side, side, rng)
+    }
+}
+
+fn bench_semiring_one<S: Semiring>(
+    sides: &[usize],
+    b: &Bencher,
+    text: &mut String,
+    points: &mut Vec<SemiringPoint>,
+) {
+    for &s in sides {
+        let mut rng = Xoshiro256ss::new(0x5e ^ s as u64);
+        let a = semiring_input::<S>(s, &mut rng);
+        let bm = semiring_input::<S>(s, &mut rng);
+        let tiled = b.bench(&format!("sr_gemm_tiled_{}_{s}", S::name()), || {
+            let mut out = DenseMatrix::filled(s, s, S::zero());
+            gemm_acc_sr::<S>(s, s, s, a.as_slice(), bm.as_slice(), out.as_mut_slice());
+            black_box(out)
+        });
+        text.push_str(&format!("{}\n", tiled.summary()));
+        let naive = b.bench(&format!("sr_gemm_naive_{}_{s}", S::name()), || {
+            black_box(a.matmul_naive_sr::<S>(&bm))
+        });
+        text.push_str(&format!("{}\n", naive.summary()));
+        let t = tiled.median().max(1e-12);
+        points.push(SemiringPoint {
+            semiring: S::name(),
+            side: s,
+            tiled_secs: tiled.median(),
+            naive_secs: naive.median(),
+            gflops: 2.0 * (s as f64).powi(3) / t / 1e9,
+            speedup_vs_naive: naive.median() / t,
+        });
+    }
+}
+
+fn bench_spgemm(cfg: &KernelBenchConfig, b: &Bencher, text: &mut String) -> Vec<SpgemmPoint> {
+    let side = cfg.sparse_side;
+    let mut points = vec![];
+    for &k in &cfg.nnz_per_row {
+        let delta = (k as f64 / side as f64).min(1.0);
+        let mut rng = Xoshiro256ss::new(0x59 ^ k as u64);
+        let a = gen::erdos_renyi_coo(side, delta, &mut rng).to_csr();
+        let bm = gen::erdos_renyi_coo(side, delta, &mut rng).to_csr();
+        // Exact multiply count: every A entry (i, kk) touches nnz(B_kk).
+        let bnnz: Vec<usize> = (0..bm.rows()).map(|i| bm.row(i).count()).collect();
+        let multiplies: usize = (0..a.rows())
+            .flat_map(|i| a.row(i))
+            .map(|(kk, _)| bnnz[kk])
+            .sum();
+        let epoch = b.bench(&format!("spgemm_epoch_{side}_k{k}"), || {
+            black_box(a.spgemm_sr::<Arithmetic>(&bm))
+        });
+        text.push_str(&format!("{}\n", epoch.summary()));
+        let scan = b.bench(&format!("spgemm_scan_{side}_k{k}"), || {
+            black_box(a.spgemm_scan_sr::<Arithmetic>(&bm))
+        });
+        text.push_str(&format!("{}\n", scan.summary()));
+        let t = epoch.median().max(1e-12);
+        points.push(SpgemmPoint {
+            side,
+            nnz_per_row: k,
+            multiplies,
+            epoch_secs: epoch.median(),
+            scan_secs: scan.median(),
+            mflops: 2.0 * multiplies as f64 / t / 1e6,
+            speedup_vs_scan: scan.median() / t,
+        });
+    }
+    points
+}
+
+fn json_f(x: f64) -> String {
+    format!("{x:.6e}")
+}
+
+fn dense_json(points: &[DensePoint]) -> String {
+    let items: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"side\":{},\"tiled_secs\":{},\"ikj_secs\":{},\"naive_secs\":{},\
+                 \"gflops\":{},\"speedup_vs_naive\":{},\"speedup_vs_ikj\":{}}}",
+                p.side,
+                json_f(p.tiled_secs),
+                json_f(p.ikj_secs),
+                json_f(p.naive_secs),
+                json_f(p.gflops),
+                json_f(p.speedup_vs_naive),
+                json_f(p.speedup_vs_ikj)
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
+fn semiring_json(points: &[SemiringPoint]) -> String {
+    let items: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"semiring\":\"{}\",\"side\":{},\"tiled_secs\":{},\"naive_secs\":{},\
+                 \"gflops\":{},\"speedup_vs_naive\":{}}}",
+                p.semiring,
+                p.side,
+                json_f(p.tiled_secs),
+                json_f(p.naive_secs),
+                json_f(p.gflops),
+                json_f(p.speedup_vs_naive)
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
+fn spgemm_json(points: &[SpgemmPoint]) -> String {
+    let items: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"side\":{},\"nnz_per_row\":{},\"multiplies\":{},\"epoch_secs\":{},\
+                 \"scan_secs\":{},\"mflops\":{},\"speedup_vs_scan\":{}}}",
+                p.side,
+                p.nnz_per_row,
+                p.multiplies,
+                json_f(p.epoch_secs),
+                json_f(p.scan_secs),
+                json_f(p.mflops),
+                json_f(p.speedup_vs_scan)
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
+/// Run the full kernel benchmark.
+pub fn run_kernel_bench(cfg: &KernelBenchConfig) -> KernelBenchReport {
+    let b = Bencher::for_harness(cfg.quick);
+    let mut text = String::new();
+    text.push_str(&format!(
+        "kernel bench: sides={:?} sparse_side={} nnz_per_row={:?}\n\n",
+        cfg.sides, cfg.sparse_side, cfg.nnz_per_row
+    ));
+
+    text.push_str("--- f32 GEMM: register-tiled vs scalar ikj vs naive ---\n");
+    let dense = bench_dense(&cfg.sides, &b, &mut text);
+
+    text.push_str("\n--- semiring GEMM: tiled vs naive triple loop ---\n");
+    let mut semiring: Vec<SemiringPoint> = vec![];
+    bench_semiring_one::<Arithmetic>(&cfg.sides, &b, &mut text, &mut semiring);
+    bench_semiring_one::<MinPlus>(&cfg.sides, &b, &mut text, &mut semiring);
+    bench_semiring_one::<BoolOrAnd>(&cfg.sides, &b, &mut text, &mut semiring);
+
+    text.push_str("\n--- SpGEMM: epoch-marked vs touched-scan accumulator ---\n");
+    let spgemm = bench_spgemm(cfg, &b, &mut text);
+
+    let mut t = Table::new(&["kernel", "instance", "median", "GFLOP/s", "speedup"]);
+    for p in &dense {
+        t.row(&[
+            "gemm f32 tiled".to_string(),
+            format!("{0}x{0}x{0}", p.side),
+            format!("{:.3}ms", p.tiled_secs * 1e3),
+            format!("{:.2}", p.gflops),
+            format!("{:.2}x naive / {:.2}x ikj", p.speedup_vs_naive, p.speedup_vs_ikj),
+        ]);
+    }
+    for p in &semiring {
+        t.row(&[
+            format!("gemm {}", p.semiring),
+            format!("{0}x{0}x{0}", p.side),
+            format!("{:.3}ms", p.tiled_secs * 1e3),
+            format!("{:.2}", p.gflops),
+            format!("{:.2}x naive", p.speedup_vs_naive),
+        ]);
+    }
+    for p in &spgemm {
+        t.row(&[
+            "spgemm epoch".to_string(),
+            format!("ER {} k={}", p.side, p.nnz_per_row),
+            format!("{:.3}ms", p.epoch_secs * 1e3),
+            format!("{:.4}", p.mflops / 1e3),
+            format!("{:.2}x scan", p.speedup_vs_scan),
+        ]);
+    }
+    text.push_str(&format!("\n{}\n", t.render()));
+
+    // Headline 1: worst semiring speedup at side 256 (fall back to the
+    // largest measured side when 256 is not in the sweep).
+    let headline_side = if cfg.sides.contains(&256) {
+        256
+    } else {
+        cfg.sides.iter().copied().max().unwrap_or(0)
+    };
+    let semiring_headline = semiring
+        .iter()
+        .filter(|p| p.side == headline_side)
+        .map(|p| p.speedup_vs_naive)
+        .fold(f64::INFINITY, f64::min);
+    let semiring_headline = if semiring_headline.is_finite() {
+        semiring_headline
+    } else {
+        0.0
+    };
+    // Headline 2: worst SpGEMM speedup among the points the acceptance
+    // criterion names (≥32 nnz/row, where the accumulator scan cost
+    // dominates); sweeps without such a point fall back to all points.
+    let dense_enough: Vec<f64> = spgemm
+        .iter()
+        .filter(|p| p.nnz_per_row >= 32)
+        .map(|p| p.speedup_vs_scan)
+        .collect();
+    let spgemm_headline = if dense_enough.is_empty() {
+        spgemm
+            .iter()
+            .map(|p| p.speedup_vs_scan)
+            .fold(f64::INFINITY, f64::min)
+    } else {
+        dense_enough.into_iter().fold(f64::INFINITY, f64::min)
+    };
+    let spgemm_headline = if spgemm_headline.is_finite() {
+        spgemm_headline
+    } else {
+        0.0
+    };
+    text.push_str(&format!(
+        "headline: semiring GEMM {semiring_headline:.2}x vs naive at side {headline_side} \
+         (worst semiring); SpGEMM {spgemm_headline:.2}x vs touched-scan (worst nnz/row)\n"
+    ));
+
+    let json = format!(
+        "{{\n  \"bench\": \"kernels\",\n  \"config\": {{\"sides\":{:?},\"sparse_side\":{},\
+         \"nnz_per_row\":{:?},\"quick\":{}}},\n  \
+         \"dense_f32\": {},\n  \"semiring\": {},\n  \"spgemm\": {},\n  \
+         \"semiring_speedup_at_{}\": {},\n  \"spgemm_speedup_min\": {}\n}}\n",
+        cfg.sides,
+        cfg.sparse_side,
+        cfg.nnz_per_row,
+        cfg.quick,
+        dense_json(&dense),
+        semiring_json(&semiring),
+        spgemm_json(&spgemm),
+        headline_side,
+        json_f(semiring_headline),
+        json_f(spgemm_headline)
+    );
+
+    KernelBenchReport {
+        text,
+        json,
+        semiring_speedup_headline: semiring_headline,
+        spgemm_speedup_headline: spgemm_headline,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_bench_runs_and_reports() {
+        let cfg = KernelBenchConfig {
+            sides: vec![8, 17],
+            sparse_side: 32,
+            nnz_per_row: vec![2],
+            quick: true,
+        };
+        let rep = run_kernel_bench(&cfg);
+        assert!(rep.text.contains("f32 GEMM"));
+        assert!(rep.text.contains("semiring GEMM"));
+        assert!(rep.text.contains("SpGEMM"));
+        assert!(rep.json.contains("\"bench\": \"kernels\""));
+        assert!(rep.json.contains("\"semiring_speedup_at_17\""));
+        assert!(rep.semiring_speedup_headline > 0.0);
+        assert!(rep.spgemm_speedup_headline > 0.0);
+    }
+
+    #[test]
+    fn headline_side_falls_back_to_largest() {
+        let cfg = KernelBenchConfig {
+            sides: vec![8],
+            sparse_side: 16,
+            nnz_per_row: vec![1],
+            quick: true,
+        };
+        let rep = run_kernel_bench(&cfg);
+        // 256 not in the sweep: falls back to the largest side.
+        assert!(rep.json.contains("\"semiring_speedup_at_8\""));
+    }
+}

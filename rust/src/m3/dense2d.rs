@@ -129,8 +129,11 @@ impl Reducer<PairKey, Strip> for Reducer2d {
         }
         let a = a.unwrap_or_else(|| panic!("missing A strip at {key:?}"));
         let b = b.unwrap_or_else(|| panic!("missing B strip at {key:?}"));
-        let zero = DenseMatrix::zeros(a.rows(), b.cols());
-        let c = self.backend.multiply_acc(&a, &b, &zero);
+        // The 2D reducer never carries an accumulator, so the product
+        // is written straight into one fresh zero buffer.
+        let c = self
+            .backend
+            .multiply_acc_into(&a, &b, DenseMatrix::zeros(a.rows(), b.cols()));
         emit(*key, Strip::c(c));
     }
 }

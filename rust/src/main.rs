@@ -11,6 +11,9 @@
 //! * `simulate` — price a configuration on a cluster profile.
 //! * `bench-engine` — measure the parallel shuffle pipeline vs the
 //!   sequential reference; `--json` writes `BENCH_engine.json`.
+//! * `bench-kernels` — race every reduce-side compute kernel (tiled
+//!   f32 GEMM, tiled semiring GEMM, epoch SpGEMM) against its
+//!   reference; `--json` writes `BENCH_kernels.json`.
 //! * `info`     — show artifact and environment status.
 
 use std::sync::Arc;
@@ -50,6 +53,9 @@ USAGE:
   m3 bench-engine [--n <side>] [--block <side>] [--workers 1,2,4,8]
               [--pairs <count>] [--reduce-tasks <t>] [--quick]
               [--json] [--out BENCH_engine.json]
+  m3 bench-kernels [--sides 64,256,512] [--sparse-side <side>]
+              [--nnz-per-row 8,32] [--quick]
+              [--json] [--out BENCH_kernels.json]
   m3 info
 ";
 
@@ -57,7 +63,7 @@ fn main() {
     let spec = Spec::new(&[
         "n", "block", "rho", "algo", "backend", "partitioner", "seed", "nodes", "slots", "fig",
         "out-dir", "profile", "nnz-per-row", "workers", "policy", "jobs", "tenants",
-        "mean-arrival", "preempt-rate", "pairs", "reduce-tasks", "out",
+        "mean-arrival", "preempt-rate", "pairs", "reduce-tasks", "out", "sides", "sparse-side",
     ]);
     let args = match Args::parse(&spec) {
         Ok(a) => a,
@@ -75,6 +81,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "calibrate" => cmd_calibrate(&args),
         "bench-engine" => cmd_bench_engine(&args),
+        "bench-kernels" => cmd_bench_kernels(&args),
         "info" => cmd_info(),
         _ => {
             println!("{USAGE}");
@@ -449,6 +456,46 @@ fn cmd_bench_engine(args: &Args) -> Result<()> {
     println!("{}", rep.text);
     if args.flag("json") {
         let out = args.opt_or("out", "BENCH_engine.json");
+        std::fs::write(&out, &rep.json)?;
+        eprintln!("[m3] wrote {out}");
+    }
+    Ok(())
+}
+
+/// Race every reduce-side compute kernel against the reference it
+/// replaced (naive triple loops, touched-scan SpGEMM accumulator);
+/// `--json` writes the results to `--out` (default `BENCH_kernels.json`,
+/// intended to live at the repo root to seed the perf trajectory).
+fn cmd_bench_kernels(args: &Args) -> Result<()> {
+    use m3::harness::{run_kernel_bench, KernelBenchConfig};
+    let default = KernelBenchConfig::default();
+    let cfg = KernelBenchConfig {
+        sides: args
+            .get_list("sides", &default.sides)
+            .map_err(anyhow::Error::msg)?,
+        sparse_side: args
+            .get("sparse-side", default.sparse_side)
+            .map_err(anyhow::Error::msg)?,
+        nnz_per_row: args
+            .get_list("nnz-per-row", &default.nnz_per_row)
+            .map_err(anyhow::Error::msg)?,
+        quick: args.flag("quick"),
+    };
+    anyhow::ensure!(
+        cfg.sides.iter().all(|&s| s > 0) && cfg.sparse_side > 0,
+        "sides must be positive"
+    );
+    eprintln!(
+        "[m3] kernel bench: sides={:?} sparse_side={} nnz_per_row={:?}{}",
+        cfg.sides,
+        cfg.sparse_side,
+        cfg.nnz_per_row,
+        if cfg.quick { " (quick)" } else { "" }
+    );
+    let rep = run_kernel_bench(&cfg);
+    println!("{}", rep.text);
+    if args.flag("json") {
+        let out = args.opt_or("out", "BENCH_kernels.json");
         std::fs::write(&out, &rep.json)?;
         eprintln!("[m3] wrote {out}");
     }

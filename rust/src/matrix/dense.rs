@@ -13,10 +13,17 @@ pub struct DenseMatrix {
 impl DenseMatrix {
     /// All-zeros matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self::filled(rows, cols, 0.0)
+    }
+
+    /// Matrix filled with a constant — e.g. a semiring's ⊕-identity
+    /// (`f32::INFINITY` for `(min,+)`), the required initial state of a
+    /// fresh accumulator fed to the semiring GEMM kernel.
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
         Self {
             rows,
             cols,
-            data: vec![0.0; rows * cols],
+            data: vec![v; rows * cols],
         }
     }
 

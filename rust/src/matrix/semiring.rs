@@ -23,6 +23,13 @@ pub trait Semiring: Copy + Send + Sync + 'static {
     fn mul(a: f32, b: f32) -> f32;
     /// Human-readable name.
     fn name() -> &'static str;
+    /// Whether `v` is the ⊕-identity. Because `zero` also annihilates
+    /// `⊗`, the kernels use this to skip work (zero-valued `A` entries
+    /// in the tiled GEMM) and to compact sparse accumulator rows.
+    #[inline]
+    fn is_zero(v: f32) -> bool {
+        v == Self::zero()
+    }
 }
 
 /// The standard arithmetic semiring `(+, ×)`.

@@ -1,6 +1,16 @@
 //! Sparse matrices: COO (construction / interchange) and CSR
-//! (computation), plus a Gustavson-style sequential SpGEMM used by the
-//! sparse reducers (the paper used MTJ for this role; see DESIGN.md §2).
+//! (computation), plus the sparse half of the reduce-side kernel layer
+//! (the paper used MTJ for this role; see DESIGN.md §2):
+//!
+//! * [`CsrMatrix::spgemm_sr`] — Gustavson SpGEMM with an epoch-marked
+//!   dense accumulator: first touch of an output column is detected by
+//!   a per-row epoch stamp, O(1) per flop, instead of the old
+//!   O(touched) membership scan (kept as
+//!   [`CsrMatrix::spgemm_scan_sr`], the reference implementation).
+//! * [`CsrMatrix::add_sr`] — direct two-pointer merge of the operands'
+//!   sorted rows, no COO round-trip and no re-sort.
+//! * [`CsrMatrix::sum_sr`] — ρ-way k-way sorted-row merge for the
+//!   sparse reducers' `sum`, replacing pairwise adds.
 
 use super::dense::DenseMatrix;
 use super::semiring::{Arithmetic, Semiring};
@@ -218,10 +228,71 @@ impl CsrMatrix {
         self.to_coo().to_dense()
     }
 
-    /// Sequential SpGEMM `C = A ⊗ B` via Gustavson's algorithm with a
-    /// dense accumulator + touched-list per output row. This is the
-    /// sparse reducer's local multiply.
+    /// Sequential SpGEMM `C = A ⊗ B` via Gustavson's algorithm with an
+    /// epoch-marked dense accumulator. This is the sparse reducer's
+    /// local multiply.
+    ///
+    /// First touch of an output column in the current row is detected
+    /// by comparing its epoch stamp against the row index — O(1) per
+    /// flop, no membership scan of the touched list, no accumulator
+    /// clearing pass (a stale slot is simply overwritten on its next
+    /// first touch).
     pub fn spgemm_sr<S: Semiring>(&self, other: &CsrMatrix) -> CsrMatrix {
+        assert_eq!(self.cols, other.rows, "inner dimensions must agree");
+        let n_out_cols = other.cols;
+        let mut acc: Vec<f32> = vec![S::zero(); n_out_cols];
+        let mut mark: Vec<u32> = vec![u32::MAX; n_out_cols];
+        let mut touched: Vec<u32> = Vec::new();
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        let mut col_idx: Vec<u32> = vec![];
+        let mut values: Vec<f32> = vec![];
+        row_ptr.push(0u32);
+        for i in 0..self.rows {
+            // Row index as the epoch: `rows < u32::MAX` (enforced at
+            // COO construction), so a stamp can never collide with the
+            // u32::MAX initial value.
+            let epoch = i as u32;
+            touched.clear();
+            for (k, a) in self.row(i) {
+                for (j, b) in other.row(k) {
+                    let prod = S::mul(a, b);
+                    if mark[j] != epoch {
+                        mark[j] = epoch;
+                        // ⊕ with zero normalises fp edge cases (-0.0)
+                        // exactly like the scan reference.
+                        acc[j] = S::add(S::zero(), prod);
+                        touched.push(j as u32);
+                    } else {
+                        acc[j] = S::add(acc[j], prod);
+                    }
+                }
+            }
+            touched.sort_unstable();
+            for &j in &touched {
+                let v = acc[j as usize];
+                if !S::is_zero(v) {
+                    col_idx.push(j);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        CsrMatrix {
+            rows: self.rows,
+            cols: n_out_cols,
+            row_ptr,
+            col_idx,
+            values,
+        }
+    }
+
+    /// The pre-overhaul SpGEMM: dense accumulator + `touched.contains`
+    /// membership scan on every first-ish touch (O(touched) per flop).
+    /// Kept as the reference implementation [`spgemm_sr`] is pinned
+    /// against, and as the baseline for `m3 bench-kernels`.
+    ///
+    /// [`spgemm_sr`]: CsrMatrix::spgemm_sr
+    pub fn spgemm_scan_sr<S: Semiring>(&self, other: &CsrMatrix) -> CsrMatrix {
         assert_eq!(self.cols, other.rows, "inner dimensions must agree");
         let n_out_cols = other.cols;
         let mut acc: Vec<f32> = vec![S::zero(); n_out_cols];
@@ -266,28 +337,120 @@ impl CsrMatrix {
         self.spgemm_sr::<Arithmetic>(other)
     }
 
-    /// Semiring sparse addition `self ⊕ other`.
+    /// Semiring sparse addition `self ⊕ other`: a direct two-pointer
+    /// merge of each pair of sorted rows — no COO round-trip, no
+    /// re-sort. Explicit zeros from cancellation are retained (as the
+    /// old COO-based implementation did); they are harmless and rare
+    /// with our integer test entries.
     pub fn add_sr<S: Semiring>(&self, other: &CsrMatrix) -> CsrMatrix {
         assert_eq!(self.rows, other.rows);
         assert_eq!(self.cols, other.cols);
-        let mut out = CooMatrix::new(self.rows, self.cols);
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        let mut col_idx: Vec<u32> = Vec::with_capacity(self.nnz() + other.nnz());
+        let mut values: Vec<f32> = Vec::with_capacity(self.nnz() + other.nnz());
+        row_ptr.push(0u32);
         for i in 0..self.rows {
-            for (c, v) in self.row(i) {
-                out.push(i, c, v);
+            let (mut p, pe) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+            let (mut q, qe) = (other.row_ptr[i] as usize, other.row_ptr[i + 1] as usize);
+            while p < pe && q < qe {
+                let (ca, cb) = (self.col_idx[p], other.col_idx[q]);
+                if ca < cb {
+                    col_idx.push(ca);
+                    values.push(self.values[p]);
+                    p += 1;
+                } else if cb < ca {
+                    col_idx.push(cb);
+                    values.push(other.values[q]);
+                    q += 1;
+                } else {
+                    col_idx.push(ca);
+                    values.push(S::add(self.values[p], other.values[q]));
+                    p += 1;
+                    q += 1;
+                }
             }
-            for (c, v) in other.row(i) {
-                out.push(i, c, v);
-            }
+            col_idx.extend_from_slice(&self.col_idx[p..pe]);
+            values.extend_from_slice(&self.values[p..pe]);
+            col_idx.extend_from_slice(&other.col_idx[q..qe]);
+            values.extend_from_slice(&other.values[q..qe]);
+            row_ptr.push(col_idx.len() as u32);
         }
-        // to_csr sums duplicates with ⊕ and keeps zeros out via spgemm's
-        // convention; explicit zeros from cancellation are retained —
-        // they are harmless and rare with our integer test entries.
-        out.to_csr_sr::<S>()
+        CsrMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr,
+            col_idx,
+            values,
+        }
     }
 
     /// Arithmetic sparse addition.
     pub fn add(&self, other: &CsrMatrix) -> CsrMatrix {
         self.add_sr::<Arithmetic>(other)
+    }
+
+    /// ρ-way semiring sum via a k-way merge of the parts' sorted rows.
+    ///
+    /// Each output row is produced in one linear pass over ρ cursors
+    /// (ρ is small, so the min-column scan beats a heap); values on the
+    /// same column are folded left-to-right in part order, matching a
+    /// pairwise [`add_sr`](CsrMatrix::add_sr) fold exactly.
+    pub fn sum_sr<S: Semiring>(parts: &[&CsrMatrix]) -> CsrMatrix {
+        let first = *parts.first().expect("sum of zero parts");
+        let (rows, cols) = (first.rows, first.cols);
+        for p in parts {
+            assert_eq!((p.rows, p.cols), (rows, cols), "part shape mismatch");
+        }
+        if parts.len() == 1 {
+            return first.clone();
+        }
+        let total: usize = parts.iter().map(|p| p.nnz()).sum();
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx: Vec<u32> = Vec::with_capacity(total);
+        let mut values: Vec<f32> = Vec::with_capacity(total);
+        row_ptr.push(0u32);
+        let mut cursors: Vec<(usize, usize)> = vec![(0, 0); parts.len()];
+        for i in 0..rows {
+            for (cur, p) in cursors.iter_mut().zip(parts) {
+                *cur = (p.row_ptr[i] as usize, p.row_ptr[i + 1] as usize);
+            }
+            loop {
+                let mut min_col = u32::MAX;
+                let mut live = false;
+                for (&(pos, end), p) in cursors.iter().zip(parts) {
+                    if pos < end {
+                        let c = p.col_idx[pos];
+                        if !live || c < min_col {
+                            min_col = c;
+                            live = true;
+                        }
+                    }
+                }
+                if !live {
+                    break;
+                }
+                let mut acc: Option<f32> = None;
+                for ((pos, end), p) in cursors.iter_mut().zip(parts) {
+                    if *pos < *end && p.col_idx[*pos] == min_col {
+                        acc = Some(match acc {
+                            None => p.values[*pos],
+                            Some(x) => S::add(x, p.values[*pos]),
+                        });
+                        *pos += 1;
+                    }
+                }
+                col_idx.push(min_col);
+                values.push(acc.expect("min column must come from some part"));
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        CsrMatrix {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            values,
+        }
     }
 
     /// Memory words used (values + index overhead in 32-bit words).
@@ -432,6 +595,127 @@ mod tests {
         let b = CooMatrix::new(3, 3).to_csr();
         assert_eq!(a.spgemm(&b).nnz(), 0);
         assert_eq!(a.add(&b).nnz(), 0);
+        assert_eq!(CsrMatrix::sum_sr::<Arithmetic>(&[&a, &b]).nnz(), 0);
+    }
+
+    /// ER matrix with a few dense-ish rows mixed in — the accumulator's
+    /// worst case (the old touched-scan is O(touched) per flop there).
+    fn er_with_dense_rows(side: usize, nnz: usize, rng: &mut Xoshiro256ss) -> CooMatrix {
+        let mut m = random_coo(side, side, nnz, rng);
+        for r in [0, side / 2] {
+            for c in 0..side {
+                if rng.bernoulli(0.7) {
+                    m.push(r, c, rng.small_int_f32());
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn prop_epoch_spgemm_matches_scan_reference() {
+        run_prop("epoch spgemm == touched-scan spgemm", 20, |case| {
+            let n = case.size(1, 48);
+            let mut rng = Xoshiro256ss::new(case.rng.next_u64());
+            let nnz = rng.next_usize(6 * n + 1);
+            let a = er_with_dense_rows(n, nnz, &mut rng).to_csr();
+            let b = er_with_dense_rows(n, nnz, &mut rng).to_csr();
+            let epoch = a.spgemm_sr::<Arithmetic>(&b);
+            let scan = a.spgemm_scan_sr::<Arithmetic>(&b);
+            if epoch != scan {
+                return Err(format!("arithmetic mismatch at n={n} nnz={nnz}"));
+            }
+            // Boolean view: same supports, saturating ⊕.
+            use crate::matrix::semiring::BoolOrAnd;
+            if a.spgemm_sr::<BoolOrAnd>(&b) != a.spgemm_scan_sr::<BoolOrAnd>(&b) {
+                return Err(format!("boolean mismatch at n={n} nnz={nnz}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn epoch_spgemm_matches_scan_on_er_inputs() {
+        // The bench workload shape: ER with ≥32 nnz/row.
+        let side = 128;
+        let mut rng = Xoshiro256ss::new(9);
+        let a = gen::erdos_renyi_coo(side, 32.0 / side as f64, &mut rng).to_csr();
+        let b = gen::erdos_renyi_coo(side, 32.0 / side as f64, &mut rng).to_csr();
+        assert_eq!(a.spgemm_sr::<Arithmetic>(&b), a.spgemm_scan_sr::<Arithmetic>(&b));
+    }
+
+    #[test]
+    fn prop_two_pointer_add_matches_coo_roundtrip() {
+        // The reference is the old implementation: concatenate both
+        // operands' triples and rebuild via the duplicate-summing CSR
+        // conversion.
+        run_prop("two-pointer add == coo-roundtrip add", 25, |case| {
+            let n = case.size(1, 32);
+            let mut rng = Xoshiro256ss::new(case.rng.next_u64());
+            let (na, nb) = (rng.next_usize(4 * n + 1), rng.next_usize(4 * n + 1));
+            let a = random_coo(n, n, na, &mut rng).to_csr();
+            let b = random_coo(n, n, nb, &mut rng).to_csr();
+            let mut coo = CooMatrix::new(n, n);
+            for i in 0..n {
+                for (c, v) in a.row(i) {
+                    coo.push(i, c, v);
+                }
+                for (c, v) in b.row(i) {
+                    coo.push(i, c, v);
+                }
+            }
+            if a.add(&b) != coo.to_csr() {
+                return Err(format!("mismatch at n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn add_handles_cancellation_like_reference() {
+        // +2 and -2 on the same coordinate: the merged entry is an
+        // explicit zero, exactly like the old COO round-trip kept it.
+        let mut a = CooMatrix::new(2, 2);
+        a.push(0, 1, 2.0);
+        let mut b = CooMatrix::new(2, 2);
+        b.push(0, 1, -2.0);
+        b.push(1, 0, 3.0);
+        let sum = a.to_csr().add(&b.to_csr());
+        assert_eq!(sum.nnz(), 2, "cancellation zero is retained");
+        assert_eq!(sum.to_dense().get(0, 1), 0.0);
+        assert_eq!(sum.to_dense().get(1, 0), 3.0);
+    }
+
+    #[test]
+    fn prop_kway_sum_matches_pairwise_adds() {
+        run_prop("k-way sum == pairwise add fold", 20, |case| {
+            let n = case.size(1, 24);
+            let rho = 1 + case.rng.next_usize(6);
+            let mut rng = Xoshiro256ss::new(case.rng.next_u64());
+            let parts: Vec<CsrMatrix> = (0..rho)
+                .map(|_| {
+                    let nnz = rng.next_usize(3 * n + 1);
+                    random_coo(n, n, nnz, &mut rng).to_csr()
+                })
+                .collect();
+            let refs: Vec<&CsrMatrix> = parts.iter().collect();
+            let kway = CsrMatrix::sum_sr::<Arithmetic>(&refs);
+            let mut pairwise = parts[0].clone();
+            for p in &parts[1..] {
+                pairwise = pairwise.add(p);
+            }
+            if kway != pairwise {
+                return Err(format!("mismatch at n={n} rho={rho}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kway_sum_single_part_is_identity() {
+        let mut rng = Xoshiro256ss::new(11);
+        let a = random_coo(6, 6, 14, &mut rng).to_csr();
+        assert_eq!(CsrMatrix::sum_sr::<Arithmetic>(&[&a]), a);
     }
 
     #[test]

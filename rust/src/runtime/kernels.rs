@@ -1,0 +1,384 @@
+//! The unified reduce-side compute kernel layer.
+//!
+//! Every block algebra's local multiply bottoms out here:
+//!
+//! * [`gemm_acc`] — register-tiled f32 GEMM (`C += A·B`): MR×NR
+//!   register accumulator blocks over packed B column panels, with the
+//!   k-loop tiled so each packed panel stays in cache across all row
+//!   blocks. This is the arithmetic hot path behind
+//!   [`NativeMultiply`](super::native::NativeMultiply).
+//! * [`gemm_acc_sr`] — generic tiled semiring GEMM (`C ⊕= A ⊗ B`) in
+//!   the same `i-k-j` contiguous-row layout; `(min,+)` and `(∨,∧)`
+//!   products (APSP / transitive-closure reductions) run through it
+//!   instead of the naive `get()`-based triple loop.
+//! * [`gemm_acc_ikj`] — the pre-overhaul vectorised scalar row loop,
+//!   kept as the perf baseline the tiled kernel is benchmarked against
+//!   (`m3 bench-kernels`).
+//!
+//! The naive triple loops in [`crate::matrix::DenseMatrix`]
+//! (`matmul_naive` / `matmul_naive_sr`) remain the correctness oracles;
+//! the property tests below pin each kernel against them bit-for-bit on
+//! integer-valued inputs at shapes that straddle every tile boundary.
+//!
+//! The sparse counterpart (epoch-marked Gustavson SpGEMM, merged-row
+//! CSR add/sum) lives with the CSR representation in
+//! [`crate::matrix::sparse`].
+
+use crate::matrix::semiring::Semiring;
+
+/// Rows per register block: MR accumulator rows are held in registers
+/// across the entire k-tile.
+pub const MR: usize = 4;
+
+/// Columns per register block / packed-panel width: NR accumulator
+/// lanes per row, sized for two 4-wide SIMD registers.
+pub const NR: usize = 8;
+
+/// k-tile length: the packed `KB × NR` B panel (8 KiB at f32) stays in
+/// L1 while every MR-row block of A streams over it.
+pub const KB: usize = 256;
+
+/// Pack the `[k0, k1) × [j0, j0+NR)` tile of row-major `b` into
+/// `packb` so the microkernel reads it as contiguous NR-wide rows.
+#[inline]
+fn pack_b_panel(b: &[f32], n: usize, k0: usize, k1: usize, j0: usize, packb: &mut [f32]) {
+    for (kk, krow) in (k0..k1).enumerate() {
+        let src = &b[krow * n + j0..krow * n + j0 + NR];
+        packb[kk * NR..kk * NR + NR].copy_from_slice(src);
+    }
+}
+
+/// MR×NR microkernel: accumulate the k-tile product into the register
+/// block, then flush it into `c_tile`. `a_tile`/`c_tile` are the full
+/// row-major slices offset to the block's top-left corner (strides
+/// `lda`/`ldc`). The `MR`/`NR` loops have constant bounds, so they
+/// unroll into straight-line FMAs.
+#[inline]
+fn microkernel(
+    kt: usize,
+    a_tile: &[f32],
+    lda: usize,
+    packb: &[f32],
+    c_tile: &mut [f32],
+    ldc: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..kt {
+        let bp = &packb[kk * NR..kk * NR + NR];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = a_tile[r * lda + kk];
+            for jj in 0..NR {
+                accr[jj] += av * bp[jj];
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let crow = &mut c_tile[r * ldc..r * ldc + NR];
+        for jj in 0..NR {
+            crow[jj] += accr[jj];
+        }
+    }
+}
+
+/// Register-tiled `c += a·b` on raw row-major slices.
+///
+/// `a`: `m×k`, `b`: `k×n`, `c`: `m×n`. Full `MR × NR` tiles go through
+/// the packed microkernel; row and column remainders fall back to the
+/// scalar row loop so every shape is supported.
+pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let n_main = n - n % NR; // columns covered by full packed panels
+    let m_main = m - m % MR; // rows covered by full register blocks
+    let mut packb = [0.0f32; KB * NR];
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KB).min(k);
+        let kt = k1 - k0;
+        let mut j0 = 0;
+        while j0 < n_main {
+            // One pack per (k-tile, panel) amortised over all m/MR
+            // register blocks.
+            pack_b_panel(b, n, k0, k1, j0, &mut packb);
+            let mut i0 = 0;
+            while i0 < m_main {
+                microkernel(kt, &a[i0 * k + k0..], k, &packb, &mut c[i0 * n + j0..], n);
+                i0 += MR;
+            }
+            // Row remainder against the packed panel.
+            for i in m_main..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n + j0..i * n + j0 + NR];
+                for kk in 0..kt {
+                    let av = arow[k0 + kk];
+                    let bp = &packb[kk * NR..kk * NR + NR];
+                    for jj in 0..NR {
+                        crow[jj] += av * bp[jj];
+                    }
+                }
+            }
+            j0 += NR;
+        }
+        // Column remainder (n % NR) for all rows: scalar row loop. No
+        // zero-skip here — the microkernel path has none, so every
+        // output column sees identical `c += a*b` IEEE semantics.
+        if n_main < n {
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for j in n_main..n {
+                        crow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// The pre-overhaul kernel: scalar `i-k-j` row loop with k-tiling, no
+/// register blocking or packing. Kept verbatim — including its
+/// original `KB = 64` k-tile — as the perf baseline for
+/// `m3 bench-kernels`, so `speedup_vs_ikj` is a true before/after
+/// comparison; [`gemm_acc`] must beat it.
+pub fn gemm_acc_ikj(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    const KB_IKJ: usize = 64; // the shipped pre-overhaul k-tile
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KB_IKJ).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// Tiled semiring GEMM `c ⊕= a ⊗ b` on raw row-major slices.
+///
+/// Same `i-k-j` contiguous-row layout and k-tiling as [`gemm_acc`]: the
+/// inner loop walks rows of `b` and `c` as slices, so `⊕`/`⊗` pairs
+/// that lower to machine ops (`min`+`add` for the tropical semiring)
+/// auto-vectorise — unlike the `get()`-based naive triple loop.
+///
+/// `c` must be initialised by the caller (to `S::zero()` for a fresh
+/// product). Entries of `a` equal to `S::zero()` are skipped: `zero`
+/// is the ⊗-annihilator and the ⊕-identity in every semiring, so the
+/// skip is exact.
+pub fn gemm_acc_sr<S: Semiring>(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KB).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let av = arow[kk];
+                if S::is_zero(av) {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv = S::add(*cv, S::mul(av, bv));
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::matrix::semiring::{Arithmetic, BoolOrAnd, MinPlus};
+    use crate::matrix::DenseMatrix;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Xoshiro256ss;
+
+    /// Run the f32 kernel on matrices and return the result.
+    fn run_gemm(a: &DenseMatrix, b: &DenseMatrix, c: &DenseMatrix) -> DenseMatrix {
+        let mut out = c.clone();
+        gemm_acc(
+            a.rows(),
+            a.cols(),
+            b.cols(),
+            a.as_slice(),
+            b.as_slice(),
+            out.as_mut_slice(),
+        );
+        out
+    }
+
+    fn run_gemm_sr<S: Semiring>(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+        let mut out = DenseMatrix::filled(a.rows(), b.cols(), S::zero());
+        gemm_acc_sr::<S>(
+            a.rows(),
+            a.cols(),
+            b.cols(),
+            a.as_slice(),
+            b.as_slice(),
+            out.as_mut_slice(),
+        );
+        out
+    }
+
+    #[test]
+    fn tiled_gemm_matches_naive_at_tile_boundaries() {
+        // Shapes straddling MR (4), NR (8), and KB (256): one below,
+        // exact, one above each boundary.
+        let mut rng = Xoshiro256ss::new(1);
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 7),
+            (4, 8, 8),
+            (5, 9, 9),
+            (7, 255, 6),
+            (8, 256, 16),
+            (9, 257, 17),
+            (12, 300, 23),
+        ] {
+            let a = gen::dense_int(m, k, &mut rng);
+            let b = gen::dense_int(k, n, &mut rng);
+            let c = gen::dense_int(m, n, &mut rng);
+            let mut want = a.matmul_naive(&b);
+            want.add_assign(&c);
+            assert_eq!(run_gemm(&a, &b, &c), want, "shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn prop_tiled_gemm_matches_naive() {
+        run_prop("register-tiled gemm == naive", 30, |case| {
+            // Cross every tile size: m over MR, n over NR, k over KB.
+            let m = 1 + case.rng.next_usize(2 * MR + 3);
+            let n = 1 + case.rng.next_usize(3 * NR + 3);
+            let k = 1 + case.rng.next_usize(KB + 40);
+            let mut rng = Xoshiro256ss::new(case.rng.next_u64());
+            let a = gen::dense_int(m, k, &mut rng);
+            let b = gen::dense_int(k, n, &mut rng);
+            let c = gen::dense_int(m, n, &mut rng);
+            let mut want = a.matmul_naive(&b);
+            want.add_assign(&c);
+            if run_gemm(&a, &b, &c) != want {
+                return Err(format!("mismatch at {m}x{k}x{n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_tiled_gemm_matches_ikj_baseline() {
+        run_prop("register-tiled gemm == ikj baseline", 15, |case| {
+            let m = 1 + case.rng.next_usize(12);
+            let n = 1 + case.rng.next_usize(20);
+            let k = 1 + case.rng.next_usize(64);
+            let mut rng = Xoshiro256ss::new(case.rng.next_u64());
+            let a = gen::dense_int(m, k, &mut rng);
+            let b = gen::dense_int(k, n, &mut rng);
+            let c = gen::dense_int(m, n, &mut rng);
+            let tiled = run_gemm(&a, &b, &c);
+            let mut base = c.clone();
+            gemm_acc_ikj(m, k, n, a.as_slice(), b.as_slice(), base.as_mut_slice());
+            if tiled != base {
+                return Err(format!("mismatch at {m}x{k}x{n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn semiring_gemm_matches_naive_all_semirings() {
+        fn check<S: Semiring>(rng: &mut Xoshiro256ss) {
+            for &(m, k, n) in &[(1, 1, 1), (3, 7, 5), (8, 9, 8), (5, 257, 11)] {
+                let a = gen::dense_int(m, k, rng);
+                let b = gen::dense_int(k, n, rng);
+                let want = a.matmul_naive_sr::<S>(&b);
+                assert_eq!(
+                    run_gemm_sr::<S>(&a, &b),
+                    want,
+                    "{} shape {m}x{k}x{n}",
+                    S::name()
+                );
+            }
+        }
+        fn dist(rows: usize, cols: usize, rng: &mut Xoshiro256ss) -> DenseMatrix {
+            DenseMatrix::from_fn(rows, cols, |_, _| {
+                if rng.bernoulli(0.4) {
+                    rng.range_u64(0, 9) as f32
+                } else {
+                    f32::INFINITY
+                }
+            })
+        }
+        let mut rng = Xoshiro256ss::new(2);
+        check::<Arithmetic>(&mut rng);
+        check::<BoolOrAnd>(&mut rng);
+        // MinPlus over distance-like matrices (∞ = no edge), so the
+        // ⊕-identity actually occurs in the data.
+        for &(m, k, n) in &[(3, 3, 3), (6, 9, 7), (4, 258, 5)] {
+            let a = dist(m, k, &mut rng);
+            let b = dist(k, n, &mut rng);
+            let want = a.matmul_naive_sr::<MinPlus>(&b);
+            assert_eq!(run_gemm_sr::<MinPlus>(&a, &b), want, "minplus {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn prop_semiring_gemm_matches_naive() {
+        run_prop("tiled semiring gemm == naive", 20, |case| {
+            let m = 1 + case.rng.next_usize(10);
+            let k = 1 + case.rng.next_usize(40);
+            let n = 1 + case.rng.next_usize(14);
+            let mut rng = Xoshiro256ss::new(case.rng.next_u64());
+            let a = gen::dense_int(m, k, &mut rng);
+            let b = gen::dense_int(k, n, &mut rng);
+            if run_gemm_sr::<Arithmetic>(&a, &b) != a.matmul_naive_sr::<Arithmetic>(&b) {
+                return Err(format!("arithmetic mismatch at {m}x{k}x{n}"));
+            }
+            // Boolean view of the same supports.
+            let ab = DenseMatrix::from_fn(m, k, |i, j| if a.get(i, j) != 0.0 { 1.0 } else { 0.0 });
+            let bb = DenseMatrix::from_fn(k, n, |i, j| if b.get(i, j) != 0.0 { 1.0 } else { 0.0 });
+            if run_gemm_sr::<BoolOrAnd>(&ab, &bb) != ab.matmul_naive_sr::<BoolOrAnd>(&bb) {
+                return Err(format!("boolean mismatch at {m}x{k}x{n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_shapes_are_noops() {
+        gemm_acc(0, 3, 3, &[], &[0.0; 9], &mut []);
+        let mut c1 = [7.0f32; 4];
+        gemm_acc(2, 0, 2, &[], &[], &mut c1);
+        assert_eq!(c1, [7.0; 4]);
+        gemm_acc_sr::<Arithmetic>(2, 0, 2, &[], &[], &mut c1);
+        assert_eq!(c1, [7.0; 4]);
+    }
+}

@@ -8,8 +8,14 @@
 //! naive triple loop is the correctness oracle. All backends implement
 //! [`LocalMultiply`], so algorithms are backend-agnostic and Python is
 //! never on the request path.
+//!
+//! The raw compute kernels every backend and block algebra bottom out
+//! in — the register-tiled f32 GEMM and the tiled semiring GEMM — live
+//! in [`kernels`]; their sparse counterparts live with the CSR
+//! representation in [`crate::matrix::sparse`].
 
 pub mod artifacts;
+pub mod kernels;
 pub mod native;
 pub mod xla_backend;
 
@@ -22,6 +28,15 @@ use crate::matrix::DenseMatrix;
 pub trait LocalMultiply: Send + Sync {
     /// Return `c + a·b`. Shapes: `a: s×t`, `b: t×u`, `c: s×u`.
     fn multiply_acc(&self, a: &DenseMatrix, b: &DenseMatrix, c: &DenseMatrix) -> DenseMatrix;
+
+    /// Return `c + a·b`, consuming `c`. The default delegates to
+    /// [`multiply_acc`](LocalMultiply::multiply_acc); backends that can
+    /// accumulate in place override it so the no-carry reducer path
+    /// (fresh zero accumulator) writes straight into one buffer instead
+    /// of allocating zeros and then cloning them.
+    fn multiply_acc_into(&self, a: &DenseMatrix, b: &DenseMatrix, c: DenseMatrix) -> DenseMatrix {
+        self.multiply_acc(a, b, &c)
+    }
 
     /// Backend name for logs and benchmarks.
     fn name(&self) -> &'static str;

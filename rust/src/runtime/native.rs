@@ -1,9 +1,11 @@
-//! Hand-written blocked GEMM backend.
+//! Hand-written native GEMM backend.
 //!
-//! Row-major `i-k-j` loop order: the innermost loop walks contiguous
-//! rows of B and C, which the compiler auto-vectorises. Serves as the
-//! fallback when no XLA artifacts are present and as the baseline the
-//! XLA backend is benchmarked against (§Perf in EXPERIMENTS.md).
+//! Backed by the register-tiled microkernel in
+//! [`kernels`](super::kernels) ([`gemm_acc`]): MR×NR register
+//! accumulator blocks with unrolled FMAs over packed B column panels,
+//! k-tiled so each panel stays in cache. Serves as the fallback when no
+//! XLA artifacts are present and as the baseline the XLA backend is
+//! benchmarked against (§Perf in EXPERIMENTS.md).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
@@ -11,7 +13,9 @@ use std::time::{Duration, Instant};
 use super::LocalMultiply;
 use crate::matrix::DenseMatrix;
 
-/// Blocked/vectorised f32 GEMM with kernel-time tracking.
+pub use super::kernels::gemm_acc;
+
+/// Register-tiled f32 GEMM backend with kernel-time tracking.
 #[derive(Debug, Default)]
 pub struct NativeMultiply {
     nanos: AtomicU64,
@@ -24,55 +28,32 @@ impl NativeMultiply {
     }
 }
 
-/// `c += a·b` on raw row-major slices.
-///
-/// `a`: `m×k`, `b`: `k×n`, `c`: `m×n`. The k-loop is tiled so the active
-/// rows of `b` stay in cache across the vectorised j-loop.
-pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    const KB: usize = 64; // k-tile
-    let mut k0 = 0;
-    while k0 < k {
-        let k1 = (k0 + KB).min(k);
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let crow = &mut c[i * n..(i + 1) * n];
-            for kk in k0..k1 {
-                let aik = arow[kk];
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = &b[kk * n..(kk + 1) * n];
-                // Vectorisable fused multiply-add over the row.
-                for j in 0..n {
-                    crow[j] += aik * brow[j];
-                }
-            }
-        }
-        k0 = k1;
-    }
-}
-
 impl LocalMultiply for NativeMultiply {
     fn multiply_acc(&self, a: &DenseMatrix, b: &DenseMatrix, c: &DenseMatrix) -> DenseMatrix {
+        self.multiply_acc_into(a, b, c.clone())
+    }
+
+    fn multiply_acc_into(
+        &self,
+        a: &DenseMatrix,
+        b: &DenseMatrix,
+        mut c: DenseMatrix,
+    ) -> DenseMatrix {
         assert_eq!(a.cols(), b.rows(), "inner dimensions must agree");
         assert_eq!(c.rows(), a.rows());
         assert_eq!(c.cols(), b.cols());
         let t0 = Instant::now();
-        let mut out = c.clone();
         gemm_acc(
             a.rows(),
             a.cols(),
             b.cols(),
             a.as_slice(),
             b.as_slice(),
-            out.as_mut_slice(),
+            c.as_mut_slice(),
         );
         self.nanos
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        out
+        c
     }
 
     fn name(&self) -> &'static str {
@@ -109,7 +90,7 @@ mod tests {
     fn prop_matches_naive_rectangular() {
         run_prop("native gemm == naive", 20, |case| {
             let m = 1 + case.rng.next_usize(20);
-            let k = 1 + case.rng.next_usize(80); // cross the KB=64 tile
+            let k = 1 + case.rng.next_usize(300); // cross the KB=256 k-tile
             let n = 1 + case.rng.next_usize(20);
             let mut rng = Xoshiro256ss::new(case.rng.next_u64());
             let a = gen::dense_int(m, k, &mut rng);
@@ -132,6 +113,20 @@ mod tests {
         let out = NativeMultiply::new().multiply_acc(&a, &b, &c);
         assert_eq!(out.get(0, 0), 6.0);
         assert_eq!(out.get(0, 1), 5.0);
+    }
+
+    #[test]
+    fn acc_into_reuses_the_buffer_and_matches() {
+        let mut rng = Xoshiro256ss::new(3);
+        let a = gen::dense_int(9, 17, &mut rng);
+        let b = gen::dense_int(17, 11, &mut rng);
+        let c = gen::dense_int(9, 11, &mut rng);
+        let want = NaiveMultiply.multiply_acc(&a, &b, &c);
+        let owned = c.clone();
+        let ptr = owned.as_slice().as_ptr();
+        let out = NativeMultiply::new().multiply_acc_into(&a, &b, owned);
+        assert_eq!(out, want);
+        assert_eq!(out.as_slice().as_ptr(), ptr, "accumulated in place, no copy");
     }
 
     #[test]

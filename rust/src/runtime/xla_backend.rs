@@ -231,6 +231,19 @@ impl LocalMultiply for XlaMultiply {
         DenseMatrix::from_vec(side, side, data)
     }
 
+    fn multiply_acc_into(&self, a: &DenseMatrix, b: &DenseMatrix, c: DenseMatrix) -> DenseMatrix {
+        // Artifact hit: the PJRT call copies operands into device
+        // buffers regardless, so owning `c` buys nothing — but on a
+        // miss, forward the owned buffer so the native fallback keeps
+        // its accumulate-in-place path.
+        if self.supported(a, b, &c).is_some() {
+            self.multiply_acc(a, b, &c)
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.fallback.multiply_acc_into(a, b, c)
+        }
+    }
+
     fn name(&self) -> &'static str {
         "xla-pjrt"
     }

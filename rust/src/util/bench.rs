@@ -102,6 +102,27 @@ impl Bencher {
         }
     }
 
+    /// The CI-smoke configuration shared by the bench harnesses'
+    /// `--quick` modes (`bench-engine`, `bench-kernels`).
+    pub fn ci_smoke() -> Self {
+        Self {
+            budget: Duration::from_millis(300),
+            warmup_iters: 1,
+            min_iters: 2,
+            max_iters: 10,
+        }
+    }
+
+    /// Harness dispatch: [`ci_smoke`](Bencher::ci_smoke) when `quick`,
+    /// [`quick`](Bencher::quick) otherwise.
+    pub fn for_harness(quick: bool) -> Self {
+        if quick {
+            Self::ci_smoke()
+        } else {
+            Self::quick()
+        }
+    }
+
     /// Run `f` repeatedly and collect per-iteration timings. The closure
     /// returns a value which is black-boxed to prevent dead-code
     /// elimination.
