@@ -9,15 +9,18 @@
 
 use std::sync::Arc;
 
-use crate::m3::algo3d::{Geometry, Mapper3d};
-use crate::m3::multiply::{dense_3d_static_input, multiply_dense_3d, DenseBlock, M3Config};
+use crate::m3::algo3d::{Algo3d, Geometry, Mapper3d};
+use crate::m3::multiply::{
+    dense_3d_assemble, dense_3d_static_input, multiply_dense_3d, DenseBlock, DenseOps, M3Config,
+};
 use crate::m3::partitioner::BalancedPartitioner3d;
 use crate::m3::PartitionerKind;
+use crate::mapreduce::executor::run_subtasks;
 use crate::mapreduce::job::chunk_evenly;
 use crate::mapreduce::shuffle::{measure, merge_slices, shuffle, MapSlices, PartitionedSink};
 use crate::mapreduce::types::{HashPartitioner, Mapper};
-use crate::mapreduce::{EngineConfig, Pair, Pool};
-use crate::matrix::{gen, BlockGrid};
+use crate::mapreduce::{Driver, EngineConfig, JobMetrics, Pair, Pool};
+use crate::matrix::{gen, BlockGrid, DenseMatrix};
 use crate::runtime::native::NativeMultiply;
 use crate::util::bench::{black_box, fmt_secs, Bencher};
 use crate::util::rng::Xoshiro256ss;
@@ -415,6 +418,163 @@ mod copy_probe {
     }
 }
 
+/// Pool-saturation probe: a deliberately slot-underfilled dense run
+/// (reduce tasks < slots) measured twice — tile subtasks off (the
+/// pre-stealing engine's behaviour: each local multiply pinned to one
+/// worker) vs on (row panels stolen by idle workers) — with
+/// bit-identical outputs asserted, plus a direct steal probe on a bare
+/// pool. This is the `BENCH_engine.json` `pool` section the CI smoke
+/// step checks for non-zero stealing.
+#[derive(Debug, Clone)]
+pub struct PoolSaturation {
+    /// Pool width (slots) of the probe.
+    pub workers: usize,
+    /// Reduce tasks per round (deliberately < `workers`).
+    pub reduce_tasks: usize,
+    /// Replication factor of the probe run.
+    pub rho: usize,
+    /// Matrix side of the probe run.
+    pub n: usize,
+    /// Block side of the probe run.
+    pub block: usize,
+    /// Wall seconds with tile subtasks disabled.
+    pub baseline_secs: f64,
+    /// Wall seconds with tile stealing enabled.
+    pub stealing_secs: f64,
+    /// `baseline_secs / stealing_secs`.
+    pub speedup: f64,
+    /// Stolen claims during the stealing engine run.
+    pub engine_steals: u64,
+    /// Tile subtasks spawned during the stealing engine run.
+    pub engine_subtasks: u64,
+    /// Mean per-round pool utilisation of the stealing run.
+    pub utilisation: f64,
+    /// Steals observed by the direct bare-pool probe.
+    pub probe_steals: u64,
+    /// `engine_steals + probe_steals` (the CI non-zero assertion).
+    pub total_steals: u64,
+}
+
+/// One probe run: a dense 3D multiply driven on a dedicated pool with
+/// tile subtasks on or off. Returns (product, metrics, wall seconds).
+fn probe_run(
+    a: &DenseMatrix,
+    bm: &DenseMatrix,
+    block: usize,
+    rho: usize,
+    engine: EngineConfig,
+    tiling: bool,
+) -> (DenseMatrix, JobMetrics, f64) {
+    let n = a.rows();
+    let q = n / block;
+    let geo = Geometry { q, rho };
+    let grid = BlockGrid::new(n, block);
+    let input = dense_3d_static_input(&grid, a, bm);
+    let alg = Algo3d::new(
+        geo,
+        Arc::new(DenseOps::new(Arc::new(NativeMultiply::new()))),
+        Box::new(BalancedPartitioner3d { q, rho }),
+    );
+    let pool = Arc::new(Pool::new(engine.workers));
+    pool.set_tiling(tiling);
+    let mut driver = Driver::with_pool(engine, pool);
+    let t0 = std::time::Instant::now();
+    let res = driver.run(&alg, &input);
+    let wall = t0.elapsed().as_secs_f64();
+    (dense_3d_assemble(&grid, res.output), res.metrics, wall)
+}
+
+/// Run the pool-saturation probe. Geometry is fixed (independent of
+/// the sweep config) so the slot-underfill and the tile threshold are
+/// guaranteed: ρ=2 rounds whose reduce step occupies only
+/// `workers / 4` tasks, each local multiply a `block³` product at or
+/// above the tile-split threshold.
+fn bench_pool_saturation(quick: bool, text: &mut String) -> PoolSaturation {
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 8);
+    let reduce_tasks = (workers / 4).max(1); // deliberately underfilled
+    let (n, block) = if quick { (128, 64) } else { (256, 128) };
+    let rho = 2;
+    let engine = EngineConfig {
+        map_tasks: workers,
+        reduce_tasks,
+        workers,
+    };
+    let mut rng = Xoshiro256ss::new(23);
+    let a = gen::dense_int(n, n, &mut rng);
+    let bm = gen::dense_int(n, n, &mut rng);
+
+    // Baseline: tiles off — the pre-stealing engine, where a round
+    // with fewer reduce tasks than slots strands the rest of the pool.
+    let (c_base, _, baseline_secs) = probe_run(&a, &bm, block, rho, engine, false);
+
+    // Work-stealing engine: oversized multiplies split into stealable
+    // row panels.
+    let (c_steal, metrics, stealing_secs) = probe_run(&a, &bm, block, rho, engine, true);
+    assert_eq!(c_base, c_steal, "tile stealing must be bit-identical");
+
+    let engine_steals: u64 = metrics.rounds.iter().map(|r| r.steals as u64).sum();
+    let engine_subtasks: u64 = metrics.rounds.iter().map(|r| r.subtasks as u64).sum();
+    let utilisation = metrics.mean_pool_utilisation();
+
+    // Direct steal probe on a bare pool: one oversized task fans out
+    // spinning tiles; the only way other workers participate is by
+    // stealing. Retried because stealing is scheduling-dependent.
+    let pool = Pool::new(workers);
+    let mut probe_steals = 0u64;
+    for _ in 0..10 {
+        let before = pool.stats().steals;
+        pool.run_indexed(1, |_| {
+            run_subtasks(64, |_| {
+                let t = std::time::Instant::now();
+                while t.elapsed() < std::time::Duration::from_micros(100) {
+                    std::hint::spin_loop();
+                }
+            });
+        });
+        probe_steals = pool.stats().steals - before;
+        if probe_steals > 0 {
+            break;
+        }
+    }
+
+    let sat = PoolSaturation {
+        workers,
+        reduce_tasks,
+        rho,
+        n,
+        block,
+        baseline_secs,
+        stealing_secs,
+        speedup: baseline_secs / stealing_secs.max(1e-12),
+        engine_steals,
+        engine_subtasks,
+        utilisation,
+        probe_steals,
+        total_steals: engine_steals + probe_steals,
+    };
+    text.push_str(&format!(
+        "pool saturation (n={} block={} rho={} reduce_tasks={} workers={}):\n  \
+         baseline (tiles off) {}, stealing {}, speedup {:.2}x\n  \
+         engine steals {}, tile subtasks {}, utilisation {:.2}, probe steals {}\n",
+        sat.n,
+        sat.block,
+        sat.rho,
+        sat.reduce_tasks,
+        sat.workers,
+        fmt_secs(sat.baseline_secs),
+        fmt_secs(sat.stealing_secs),
+        sat.speedup,
+        sat.engine_steals,
+        sat.engine_subtasks,
+        sat.utilisation,
+        sat.probe_steals,
+    ));
+    sat
+}
+
 fn json_f(x: f64) -> String {
     format!("{x:.6e}")
 }
@@ -482,6 +642,9 @@ pub fn run_engine_bench(cfg: &EngineBenchConfig) -> EngineBenchReport {
         dense_runs.extend(bench_dense_rounds(cfg, rho, &mut text));
     }
 
+    text.push_str("\n--- pool saturation: slot-underfilled rounds, tiles off vs on ---\n");
+    let pool_sat = bench_pool_saturation(cfg.quick, &mut text);
+
     let deep_copies = copy_probe::engine_deep_copies();
     text.push_str(&format!(
         "\nblock-storage deep copies across a counted engine run \
@@ -511,12 +674,32 @@ pub fn run_engine_bench(cfg: &EngineBenchConfig) -> EngineBenchReport {
         .iter()
         .map(|(rho, pts)| format!("{{\"rho\":{},\"points\":{}}}", rho, shuffle_points_json(pts)))
         .collect();
+    let pool_json = format!(
+        "{{\"workers\":{},\"reduce_tasks\":{},\"rho\":{},\"n\":{},\"block\":{},\
+         \"baseline_secs\":{},\"stealing_secs\":{},\"speedup\":{},\
+         \"engine_steals\":{},\"engine_subtasks\":{},\"utilisation\":{},\
+         \"probe_steals\":{},\"total_steals\":{}}}",
+        pool_sat.workers,
+        pool_sat.reduce_tasks,
+        pool_sat.rho,
+        pool_sat.n,
+        pool_sat.block,
+        json_f(pool_sat.baseline_secs),
+        json_f(pool_sat.stealing_secs),
+        json_f(pool_sat.speedup),
+        pool_sat.engine_steals,
+        pool_sat.engine_subtasks,
+        json_f(pool_sat.utilisation),
+        pool_sat.probe_steals,
+        pool_sat.total_steals
+    );
     let json = format!(
         "{{\n  \"bench\": \"engine\",\n  \"config\": {{\"n\":{},\"block\":{},\"q\":{},\
          \"synthetic_pairs\":{},\"reduce_tasks\":{},\"quick\":{}}},\n  \
          \"synthetic_shuffle\": {{\"pairs\":{},\"seq_secs\":{},\"points\":{},\
          \"speedup_at_{}w\":{}}},\n  \
          \"dense_shuffle\": [{}],\n  \"dense_runs\": {},\n  \
+         \"pool\": {},\n  \
          \"static_block_deep_copies\": {}\n}}\n",
         cfg.n,
         cfg.block,
@@ -531,6 +714,7 @@ pub fn run_engine_bench(cfg: &EngineBenchConfig) -> EngineBenchReport {
         json_f(headline),
         dense_shuffle_json.join(","),
         dense_runs_json(&dense_runs),
+        pool_json,
         deep_copies
     );
 
@@ -559,9 +743,24 @@ mod tests {
         };
         let rep = run_engine_bench(&cfg);
         assert!(rep.text.contains("synthetic shuffle"));
+        assert!(rep.text.contains("pool saturation"));
         assert!(rep.json.contains("\"bench\": \"engine\""));
         assert!(rep.json.contains("\"static_block_deep_copies\": 0"));
+        assert!(rep.json.contains("\"pool\": {"));
+        assert!(rep.json.contains("\"total_steals\":"));
+        assert!(rep.json.contains("\"utilisation\":"));
         assert!(rep.headline_speedup > 0.0);
+    }
+
+    #[test]
+    fn pool_saturation_probe_reports_stealing() {
+        let mut text = String::new();
+        let sat = bench_pool_saturation(true, &mut text);
+        assert!(sat.reduce_tasks < sat.workers, "probe must underfill the slots");
+        assert!(sat.engine_subtasks > 0, "oversized multiplies must split into tiles");
+        assert!(sat.total_steals > 0, "idle workers must steal on an underfilled config");
+        assert!(sat.utilisation > 0.0);
+        assert!(text.contains("pool saturation"));
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use crate::matrix::semiring::{Arithmetic, BoolOrAnd, MinPlus, Semiring};
 use crate::matrix::{gen, DenseMatrix};
-use crate::runtime::kernels::{gemm_acc, gemm_acc_ikj, gemm_acc_sr};
+use crate::runtime::kernels::{autotune_report, gemm_acc, gemm_acc_ikj, gemm_acc_sr};
 use crate::util::bench::{black_box, Bencher};
 use crate::util::rng::Xoshiro256ss;
 use crate::util::table::Table;
@@ -315,6 +315,25 @@ pub fn run_kernel_bench(cfg: &KernelBenchConfig) -> KernelBenchReport {
         cfg.sides, cfg.sparse_side, cfg.nnz_per_row
     ));
 
+    // Surface the one-shot MR/NR autotune (probed at pool startup and
+    // cached for the process) before the sweeps that run on it.
+    let tune = autotune_report();
+    text.push_str("--- register-tile autotune: candidates and winner ---\n");
+    for p in &tune.candidates {
+        let mark = if (p.mr, p.nr) == tune.chosen {
+            "  <- chosen"
+        } else {
+            ""
+        };
+        text.push_str(&format!(
+            "tile {}x{}: {:.3}ms{mark}\n",
+            p.mr,
+            p.nr,
+            p.secs * 1e3
+        ));
+    }
+    text.push('\n');
+
     text.push_str("--- f32 GEMM: register-tiled vs scalar ikj vs naive ---\n");
     let dense = bench_dense(&cfg.sides, &b, &mut text);
 
@@ -400,15 +419,35 @@ pub fn run_kernel_bench(cfg: &KernelBenchConfig) -> KernelBenchReport {
          (worst semiring); SpGEMM {spgemm_headline:.2}x vs touched-scan (worst nnz/row)\n"
     ));
 
+    let tune_candidates: Vec<String> = tune
+        .candidates
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"mr\":{},\"nr\":{},\"secs\":{}}}",
+                p.mr,
+                p.nr,
+                json_f(p.secs)
+            )
+        })
+        .collect();
+    let autotune_json = format!(
+        "{{\"mr\":{},\"nr\":{},\"candidates\":[{}]}}",
+        tune.chosen.0,
+        tune.chosen.1,
+        tune_candidates.join(",")
+    );
     let json = format!(
         "{{\n  \"bench\": \"kernels\",\n  \"config\": {{\"sides\":{:?},\"sparse_side\":{},\
          \"nnz_per_row\":{:?},\"quick\":{}}},\n  \
+         \"autotune\": {},\n  \
          \"dense_f32\": {},\n  \"semiring\": {},\n  \"spgemm\": {},\n  \
          \"semiring_speedup_at_{}\": {},\n  \"spgemm_speedup_min\": {}\n}}\n",
         cfg.sides,
         cfg.sparse_side,
         cfg.nnz_per_row,
         cfg.quick,
+        autotune_json,
         dense_json(&dense),
         semiring_json(&semiring),
         spgemm_json(&spgemm),
@@ -441,7 +480,11 @@ mod tests {
         assert!(rep.text.contains("f32 GEMM"));
         assert!(rep.text.contains("semiring GEMM"));
         assert!(rep.text.contains("SpGEMM"));
+        assert!(rep.text.contains("register-tile autotune"));
+        assert!(rep.text.contains("<- chosen"));
         assert!(rep.json.contains("\"bench\": \"kernels\""));
+        assert!(rep.json.contains("\"autotune\": {\"mr\":"));
+        assert!(rep.json.contains("\"candidates\":["));
         assert!(rep.json.contains("\"semiring_speedup_at_17\""));
         assert!(rep.semiring_speedup_headline > 0.0);
         assert!(rep.spgemm_speedup_headline > 0.0);

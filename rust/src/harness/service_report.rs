@@ -55,6 +55,8 @@ pub fn service_report() -> Report {
         "makespan(s)",
         "lost(s)",
         "preempt",
+        "steals",
+        "util",
     ]);
     let mut chart = BarChart::new("mean queue wait by policy", "s");
     for policy in [Policy::Fifo, Policy::Fair, Policy::Srpt] {
@@ -66,6 +68,21 @@ pub fn service_report() -> Report {
         let out = run_service(&specs, &cfg, Arc::new(NativeMultiply::new()))
             .expect("skewed workload must run");
         let m = &out.metrics;
+        // Pool-saturation view: engine-level steal counts and mean
+        // utilisation aggregated over every completed job's rounds.
+        let steals: usize = out.completed.iter().map(|c| c.metrics.total_steals()).sum();
+        let rounds: usize = out.completed.iter().map(|c| c.metrics.num_rounds()).sum();
+        let mut util_sum = 0.0f64;
+        for c in &out.completed {
+            for r in &c.metrics.rounds {
+                util_sum += r.pool_utilisation;
+            }
+        }
+        let util = if rounds == 0 {
+            0.0
+        } else {
+            util_sum / rounds as f64
+        };
         t.row(&[
             policy.name().to_string(),
             format!("{:.1}", m.mean_queue_wait_secs()),
@@ -74,12 +91,19 @@ pub fn service_report() -> Report {
             format!("{:.1}", m.makespan_secs()),
             format!("{:.1}", m.total_discarded_secs()),
             m.total_preemptions().to_string(),
+            steals.to_string(),
+            format!("{util:.2}"),
         ]);
         chart.bar(policy.name(), m.mean_queue_wait_secs());
     }
     rep.text.push_str(
         "Skewed workload: 1 long 2D job (16 rounds) + 6 short 3D jobs \
-         from distinct tenants, shared preemption schedule.\n",
+         from distinct tenants, shared preemption schedule. `steals` / \
+         `util` are the work-stealing pool's per-round counters \
+         aggregated over every job's rounds (RoundMetrics.steals, \
+         .pool_utilisation); the counters are cluster-wide over each \
+         round's wall window, so gang-scheduled overlap is counted in \
+         both partners' rounds.\n",
     );
     rep.push_table(&t, "service_policies.csv");
     rep.push_chart(&chart);
@@ -135,6 +159,8 @@ mod tests {
         assert_eq!(rep.id, "service");
         assert!(rep.text.contains("fifo"));
         assert!(rep.text.contains("srpt"));
+        assert!(rep.text.contains("steals"), "pool counters surfaced in the report");
+        assert!(rep.text.contains("util"));
         assert!(rep.text.contains("rho=8"));
         assert_eq!(rep.csv.len(), 2);
         for (_, csv) in &rep.csv {

@@ -280,6 +280,18 @@ impl<P: Block3d> MultiRoundAlgorithm for Algo3d<P> {
         // final summation round reads only the carried accumulators.
         !self.geo.is_final(round)
     }
+
+    fn groups_hint(&self, round: usize) -> Option<usize> {
+        // Known analytically (asserted by `shuffle_and_reducer_bounds_hold`):
+        // ρq² live (i,h,j) keys per product round, q² (i,-1,j) keys in
+        // the summation round.
+        let Geometry { q, rho } = self.geo;
+        Some(if self.geo.is_final(round) {
+            q * q
+        } else {
+            rho * q * q
+        })
+    }
 }
 
 #[cfg(test)]

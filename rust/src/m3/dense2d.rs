@@ -239,6 +239,12 @@ impl MultiRoundAlgorithm for Algo2d {
     fn carries_output(&self) -> bool {
         false // every round's C blocks are final output
     }
+
+    fn groups_hint(&self, _round: usize) -> Option<usize> {
+        // Round r computes the ρ subproblems (i, (i+ℓ+rρ) mod s) for
+        // each of the s row strips: sρ live (i,j) keys every round.
+        Some(self.plan.strips() * self.plan.rho)
+    }
 }
 
 #[cfg(test)]

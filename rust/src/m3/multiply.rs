@@ -184,10 +184,12 @@ impl BlockOps<DenseBlock> for DenseOps {
 /// Semiring block algebra: the 3D algorithm over an arbitrary
 /// [`Semiring`] (the paper rules out Strassen precisely to keep this
 /// generality). `(min,+)` and `(∨,∧)` have no MXU/BLAS form, so the
-/// local multiply is the tiled semiring GEMM kernel
-/// ([`kernels::gemm_acc_sr`]) — same `i-k-j` contiguous-row layout as
-/// the f32 path, vectorisable `⊕`/`⊗` inner loop, and bit-for-bit
-/// equal to the naive triple-loop oracle it replaced.
+/// local multiply is the tiled semiring GEMM kernel via its
+/// tile-parallel entry point ([`kernels::gemm_acc_sr_par`]) — same
+/// `i-k-j` contiguous-row layout as the f32 path, vectorisable `⊕`/`⊗`
+/// inner loop, bit-for-bit equal to the naive triple-loop oracle it
+/// replaced, and split into stealable row panels when the block is big
+/// enough and idle pool workers are available.
 pub struct SemiringOps<S: Semiring>(std::marker::PhantomData<S>);
 
 impl<S: Semiring> Default for SemiringOps<S> {
@@ -201,7 +203,7 @@ impl<S: Semiring> BlockOps<DenseBlock> for SemiringOps<S> {
         let (am, bm) = (a.matrix(), b.matrix());
         assert_eq!(am.cols(), bm.rows(), "inner dimensions must agree");
         let mut prod = DenseMatrix::filled(am.rows(), bm.cols(), S::zero());
-        kernels::gemm_acc_sr::<S>(
+        kernels::gemm_acc_sr_par::<S>(
             am.rows(),
             am.cols(),
             bm.cols(),
@@ -398,14 +400,15 @@ impl Block3d for SparseBlock {
     }
 }
 
-/// Sparse block algebra: epoch-marked Gustavson SpGEMM, two-pointer
-/// merged-row add, and a k-way sorted-row merge for the ρ-way sum (the
-/// role MTJ played in the paper's implementation).
+/// Sparse block algebra: epoch-marked Gustavson SpGEMM (with stealable
+/// row panels for oversized blocks — `CsrMatrix::spgemm_par`),
+/// two-pointer merged-row add, and a k-way sorted-row merge for the
+/// ρ-way sum (the role MTJ played in the paper's implementation).
 pub struct SparseOps;
 
 impl BlockOps<SparseBlock> for SparseOps {
     fn fma(&self, a: &SparseBlock, b: &SparseBlock, c: Option<&SparseBlock>) -> SparseBlock {
-        let prod = a.csr().spgemm(b.csr());
+        let prod = a.csr().spgemm_par(b.csr());
         let out = match c {
             Some(c) => c.csr().add(&prod),
             None => prod,

@@ -55,6 +55,37 @@ pub trait MultiRoundAlgorithm {
     fn carries_output(&self) -> bool {
         true
     }
+
+    /// Upper bound on the number of distinct reducer groups of round
+    /// `r`, when the algorithm knows it analytically (`None` when
+    /// unknown). Lets schedulers estimate how many reduce slots the
+    /// round can actually occupy ([`slot_demand`]) without running its
+    /// map phase.
+    fn groups_hint(&self, round: usize) -> Option<usize> {
+        let _ = round;
+        None
+    }
+}
+
+/// Cluster slots round `r` of `alg` can occupy at *task* granularity:
+/// the map step parallelises over `min(map_tasks, input_pairs)` tasks,
+/// the reduce step over `min(reduce_tasks, groups)` tasks, and the
+/// round's demand is the wider of the two, clamped to the pool width.
+/// Tile subtasks ([`crate::runtime::kernels::gemm_acc_par`]) can pull
+/// in further slots mid-task; gang-scheduling packs rounds by this
+/// task-level figure and lets stealing soak up the rest.
+pub fn slot_demand<A: MultiRoundAlgorithm>(
+    config: &EngineConfig,
+    alg: &A,
+    r: usize,
+    input_pairs: usize,
+) -> usize {
+    let map_par = config.map_tasks.max(1).min(input_pairs.max(1));
+    let reduce_par = match alg.groups_hint(r) {
+        Some(g) => config.reduce_tasks.min(g.max(1)),
+        None => config.reduce_tasks,
+    };
+    map_par.max(reduce_par).min(config.workers.max(1))
 }
 
 /// Result of a full multi-round execution.
@@ -106,6 +137,17 @@ impl Driver {
             dfs: SimDfs::new(),
             pool,
         }
+    }
+
+    /// Slot demand of round `r` of `alg` on this driver's cluster for
+    /// an input of `input_pairs` pairs (see [`slot_demand`]).
+    pub fn slot_demand<A: MultiRoundAlgorithm>(
+        &self,
+        alg: &A,
+        r: usize,
+        input_pairs: usize,
+    ) -> usize {
+        slot_demand(&self.config, alg, r, input_pairs)
     }
 
     /// Execute all rounds of `alg`. `static_input` is re-fed to every
@@ -285,6 +327,21 @@ impl<A: MultiRoundAlgorithm> StepRun<A> {
     /// Whether every round has committed.
     pub fn is_done(&self) -> bool {
         self.next_round >= self.alg.num_rounds()
+    }
+
+    /// Cluster slots the *next* round can occupy at task granularity
+    /// (0 when the run is done) — what a gang-scheduler packs rounds
+    /// by (see [`slot_demand`]).
+    pub fn slot_demand(&self) -> usize {
+        if self.is_done() {
+            return 0;
+        }
+        let r = self.next_round;
+        let mut pairs = self.carry.len();
+        if self.alg.reads_static_input(r) {
+            pairs += self.static_input.len();
+        }
+        slot_demand(&self.driver.config, &self.alg, r, pairs)
     }
 
     /// Metrics of all executed round attempts so far (committed and
@@ -690,6 +747,66 @@ mod tests {
         for p in &res.output {
             assert_eq!(p.value, 2.0, "discarded attempt must not corrupt the carry");
         }
+    }
+
+    #[test]
+    fn slot_demand_tracks_round_structure() {
+        // IncAlg has no groups hint → reduce demand = reduce_tasks;
+        // map demand = min(map_tasks, input pairs).
+        let cfg = EngineConfig {
+            map_tasks: 8,
+            reduce_tasks: 2,
+            workers: 4,
+        };
+        let input: Vec<Pair<u32, f32>> = (0..3).map(|i| Pair::new(i, 0.0)).collect();
+        let mut step = StepRun::new(cfg, IncAlg::new(2), input);
+        assert_eq!(step.slot_demand(), 3, "max(map_par 3, reduce_par 2)");
+        while !step.is_done() {
+            step.step_commit();
+        }
+        assert_eq!(step.slot_demand(), 0, "finished runs demand nothing");
+    }
+
+    #[test]
+    fn slot_demand_respects_groups_hint_and_width() {
+        /// IncAlg with a 1-group hint: reduce demand collapses to 1.
+        struct Hinted(IncAlg);
+        impl MultiRoundAlgorithm for Hinted {
+            type K = u32;
+            type V = f32;
+            fn num_rounds(&self) -> usize {
+                self.0.num_rounds()
+            }
+            fn mapper(&self, r: usize) -> &dyn Mapper<u32, f32> {
+                self.0.mapper(r)
+            }
+            fn reducer(&self, r: usize) -> &dyn Reducer<u32, f32> {
+                self.0.reducer(r)
+            }
+            fn partitioner(&self, r: usize) -> &dyn Partitioner<u32> {
+                self.0.partitioner(r)
+            }
+            fn groups_hint(&self, _round: usize) -> Option<usize> {
+                Some(1)
+            }
+        }
+        let cfg = EngineConfig {
+            map_tasks: 1,
+            reduce_tasks: 16,
+            workers: 4,
+        };
+        let input = vec![Pair::new(1u32, 0.0f32)];
+        let step = StepRun::new(cfg, Hinted(IncAlg::new(1)), input);
+        assert_eq!(step.slot_demand(), 1, "hint caps the reduce demand");
+        // Demand is clamped to the pool width.
+        let cfg = EngineConfig {
+            map_tasks: 64,
+            reduce_tasks: 64,
+            workers: 4,
+        };
+        let input: Vec<Pair<u32, f32>> = (0..100).map(|i| Pair::new(i, 0.0)).collect();
+        let step = StepRun::new(cfg, IncAlg::new(1), input);
+        assert_eq!(step.slot_demand(), 4, "clamped to workers");
     }
 
     #[test]

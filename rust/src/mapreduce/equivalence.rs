@@ -1,9 +1,12 @@
-//! Equivalence suite: the parallel map-side-partitioned shuffle
-//! pipeline must be observationally identical to the old sequential
-//! engine — same buckets, same groups, same outputs, and bit-for-bit
-//! identical shuffle-cost metrics (`shuffle_pairs`, `shuffle_words`,
-//! `max_reducer_words`, `reducers_per_task`, …) — for dense-3D,
-//! dense-2D, and sparse runs across worker counts {1, 2, 8}.
+//! Equivalence suite: the work-stealing engine (per-worker deques,
+//! stolen claims, tile subtasks inside oversized local multiplies, and
+//! gang-scheduled concurrent rounds) must be observationally identical
+//! to the old sequential engine — same buckets, same groups, same
+//! outputs, and bit-for-bit identical shuffle-cost metrics
+//! (`shuffle_pairs`, `shuffle_words`, `max_reducer_words`,
+//! `reducers_per_task`, …) — for dense-3D, dense-2D, and sparse runs
+//! across worker counts {1, 2, 8}. (Stealing/utilisation counters are
+//! measurements, not costs, and are excluded like the times.)
 //!
 //! The reference implementation below replicates the pre-pipeline
 //! engine exactly: materialise every intermediate pair in one global
@@ -264,6 +267,154 @@ fn sparse_3d_pipeline_matches_reference() {
         assert_metrics_match(&got.metrics.rounds, &want_m, &ctx);
         assert_outputs_match(got.output, want_out, &ctx);
     }
+}
+
+/// A slot-underfilled dense run with a real (tile-splitting) backend:
+/// one reduce task per round on an 8-slot pool, with 64³ block
+/// products big enough to split into stealable row panels. The
+/// reference reduces sequentially off-pool (no tiles), so equality
+/// here pins the work-stealing + tile path end to end, at workers
+/// {1, 2, 8}.
+#[test]
+fn dense_3d_with_tile_stealing_matches_reference() {
+    use crate::runtime::native::NativeMultiply;
+    let (side, block, rho) = (128usize, 64usize, 2usize);
+    let plan = Plan3d::new(side, block, rho).unwrap();
+    let geo: Geometry = plan.into();
+    let grid = BlockGrid::new(side, block);
+    let mut rng = Xoshiro256ss::new(41);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let input = dense_3d_static_input(&grid, &a, &b);
+    for workers in [1usize, 2, 8] {
+        let alg = Algo3d::new(
+            geo,
+            Arc::new(DenseOps::new(Arc::new(NativeMultiply::new()))),
+            Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+        );
+        // One reduce task: the pool is saturated only through stealing.
+        let cfg = EngineConfig {
+            map_tasks: 2,
+            reduce_tasks: 1,
+            workers,
+        };
+        let mut d = Driver::new(cfg);
+        let got = d.run(&alg, &input);
+        let (want_out, want_m) = run_reference(&alg, cfg, &input);
+        let ctx = format!("dense3d-steal workers={workers}");
+        assert_metrics_match(&got.metrics.rounds, &want_m, &ctx);
+        assert_outputs_match(got.output, want_out, &ctx);
+        if workers == 8 {
+            let subtasks: usize = got.metrics.rounds.iter().map(|r| r.subtasks).sum();
+            assert!(subtasks > 0, "64³ products on 8 slots must split into tiles");
+        }
+    }
+}
+
+/// Gang-scheduled round pairs: two `StepRun`s stepping concurrently on
+/// one shared pool (what the service scheduler does for underfilled
+/// rounds) must produce exactly the outputs and cost metrics of solo
+/// runs.
+#[test]
+fn gang_scheduled_round_pairs_match_solo_runs() {
+    use super::driver::StepRun;
+    use super::executor::Pool;
+    let (side, block, rho) = (16usize, 4usize, 2usize);
+    let plan = Plan3d::new(side, block, rho).unwrap();
+    let geo: Geometry = plan.into();
+    let grid = BlockGrid::new(side, block);
+    let mut rng = Xoshiro256ss::new(42);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let input = dense_3d_static_input(&grid, &a, &b);
+    let mk_alg = || {
+        Algo3d::new(
+            geo,
+            Arc::new(DenseOps::new(Arc::new(NaiveMultiply))),
+            Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+        )
+    };
+    let cfg = EngineConfig {
+        map_tasks: 2,
+        reduce_tasks: 2,
+        workers: 8,
+    };
+    // Solo baselines.
+    let mut d1 = Driver::new(cfg);
+    let solo1 = d1.run(&mk_alg(), &input);
+    let mut d2 = Driver::new(cfg);
+    let solo2 = d2.run(&mk_alg(), &input);
+
+    // Gang: both runs step their rounds concurrently on one pool.
+    let pool = Arc::new(Pool::new(cfg.workers));
+    let mut s1 = StepRun::with_pool(cfg, mk_alg(), input.clone(), pool.clone());
+    let mut s2 = StepRun::with_pool(cfg, mk_alg(), input.clone(), pool.clone());
+    while !s1.is_done() || !s2.is_done() {
+        std::thread::scope(|scope| {
+            let h = scope.spawn(|| {
+                if !s2.is_done() {
+                    s2.step_commit();
+                }
+            });
+            if !s1.is_done() {
+                s1.step_commit();
+            }
+            h.join().unwrap();
+        });
+    }
+    let g1 = s1.into_result();
+    let g2 = s2.into_result();
+    assert_metrics_match(&g1.metrics.rounds, &solo1.metrics.rounds, "gang run 1");
+    assert_metrics_match(&g2.metrics.rounds, &solo2.metrics.rounds, "gang run 2");
+    assert_outputs_match(g1.output, solo1.output, "gang run 1");
+    assert_outputs_match(g2.output, solo2.output, "gang run 2");
+}
+
+/// Preemption mid-steal: discard a round whose oversized reduce
+/// multiplies are being stolen as row-panel tiles, then commit — the
+/// re-executed round must reproduce the reference output exactly, and
+/// the discarded attempt must leave no trace in the carry.
+#[test]
+fn preemption_mid_steal_reproduces_reference() {
+    use super::driver::StepRun;
+    use super::executor::Pool;
+    use crate::runtime::native::NativeMultiply;
+    // q = 3, ρ = 1 → rounds 0..2 are product rounds, so the discarded
+    // round 1 attempt really runs 64³ tile-split multiplies.
+    let (side, block, rho) = (192usize, 64usize, 1usize);
+    let plan = Plan3d::new(side, block, rho).unwrap();
+    let geo: Geometry = plan.into();
+    let grid = BlockGrid::new(side, block);
+    let mut rng = Xoshiro256ss::new(43);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let input = dense_3d_static_input(&grid, &a, &b);
+    let mk_alg = || {
+        Algo3d::new(
+            geo,
+            Arc::new(DenseOps::new(Arc::new(NativeMultiply::new()))),
+            Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+        )
+    };
+    // 1 reduce task on 8 slots: the discarded attempt's local
+    // multiplies run tile-stolen across the pool.
+    let cfg = EngineConfig {
+        map_tasks: 2,
+        reduce_tasks: 1,
+        workers: 8,
+    };
+    let (want_out, _) = run_reference(&mk_alg(), cfg, &input);
+
+    let mut step = StepRun::with_pool(cfg, mk_alg(), input.clone(), Arc::new(Pool::new(8)));
+    step.step_commit();
+    let m = step.step_discard(); // preempted mid-steal
+    assert!(m.subtasks > 0, "the doomed attempt must actually have stolen tiles");
+    assert_eq!(step.next_round(), 1, "discard must not advance");
+    while !step.is_done() {
+        step.step_commit();
+    }
+    let got = step.into_result();
+    assert_outputs_match(got.output, want_out, "mid-steal preemption");
 }
 
 /// A key-preserving combiner must leave metrics and outputs identical

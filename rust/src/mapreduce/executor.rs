@@ -1,84 +1,455 @@
-//! Task execution pool.
+//! Work-stealing task execution pool.
 //!
 //! Hadoop runs a fixed number of map/reduce *slots* per node; we model
-//! the cluster's total slot count with a **persistent** worker pool:
-//! `workers - 1` long-lived threads plus the submitting thread itself.
-//! A round used to pay two `thread::scope` spawn/join cycles (map +
-//! reduce); with the pool owned by the [`crate::mapreduce::Driver`] the
-//! threads are spawned once per driver and every batch is a condvar
-//! wake, so per-round overhead stays flat no matter how many rounds —
-//! or how many concurrent service jobs — execute.
+//! the cluster's total slot count with a **persistent** pool of
+//! `workers - 1` long-lived threads plus any submitting thread, which
+//! always participates in the work it publishes.
 //!
-//! Workers pull indexed tasks from an atomic counter and write results
-//! into disjoint slots, so the engine stays deterministic regardless of
-//! interleaving.
+//! The pool is a work-stealing executor:
+//!
+//! * every worker thread owns a **deque** of published task sets; a
+//!   submitter (an external thread, e.g. a driver committing a round)
+//!   publishes to a shared *injector* deque;
+//! * a task set hands out its task indices through one atomic claim
+//!   counter, so any number of workers can chew on the same set at
+//!   once — a worker with an empty deque **steals** claims from other
+//!   deques (oldest set first) instead of idling;
+//! * a task may itself publish **subtasks** ([`run_subtasks`]) onto its
+//!   worker's own deque — this is how an oversized local GEMM/SpGEMM
+//!   inside one reduce task splits into row-panel tiles that idle
+//!   workers steal (`runtime/kernels.rs`), so a round with fewer reduce
+//!   tasks than slots no longer strands the rest of the pool;
+//! * several task sets can be in flight at once: two gang-scheduled
+//!   rounds ([`crate::service`]) each publish their batches to the same
+//!   pool from two threads and the claims interleave freely.
+//!
+//! Workers claim indices exactly once and write results into disjoint
+//! slots, so the engine stays deterministic regardless of interleaving
+//! or stealing. Idle workers run a **bounded steal-spin** before
+//! parking on a condvar; publishes bump an epoch counter re-checked
+//! under the state lock, so no wakeup is ever lost. Shutdown asserts
+//! (in debug builds) that no queued subtask was dropped.
 
+use std::cell::Cell;
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
-/// A batch of indexed tasks published to the workers. The closure and
-/// claim counter live on the submitting thread's stack; lifetimes are
-/// erased to thin pointers so persistent threads can run borrowed
-/// closures (the scoped-thread guarantee is re-established manually —
-/// see the safety notes on [`Pool::run_indexed`]).
-#[derive(Clone, Copy)]
-struct Batch {
+/// A set of indexed tasks published to the pool. The closure and the
+/// counters live on the publishing thread's stack; lifetimes are erased
+/// to thin pointers so persistent threads can run borrowed closures.
+/// The scoped-thread guarantee is re-established manually: the
+/// publisher removes the set from its deque and waits for every claimed
+/// index to complete before the stack frame is released (see the safety
+/// notes on [`Shared::join`]).
+struct TaskSet {
     /// Type-erased `&closure` (a `Fn(usize)` running one task).
     data: *const (),
     /// Monomorphized shim that calls `data` as its concrete closure.
     call: unsafe fn(*const (), usize),
-    /// Shared claim counter handing out task indices exactly once.
-    next: *const AtomicUsize,
-    /// Number of tasks in the batch.
+    /// Claim counter handing out task indices exactly once.
+    next: AtomicUsize,
+    /// Number of tasks in the set.
     num_tasks: usize,
-}
-
-// SAFETY: `Batch` only ferries pointers to state on the submitting
-// thread's stack; `run_indexed` blocks until every worker is done with
-// the batch before that stack frame is released, and the pointed-to
-// closure is `Sync` (required by `run_indexed`'s bounds).
-unsafe impl Send for Batch {}
-
-/// Pool state guarded by one mutex.
-struct State {
-    /// The currently published batch, if any.
-    batch: Option<Batch>,
-    /// Monotone batch id so workers adopt each batch exactly once.
-    generation: u64,
-    /// Tasks completed in the current batch.
-    done: usize,
-    /// Workers currently inside the current batch.
-    active: usize,
-    /// A task in the current batch panicked.
-    panicked: bool,
-    /// Pool is shutting down (set by `Drop`).
-    shutdown: bool,
-}
-
-struct Shared {
-    state: Mutex<State>,
-    /// Workers wait here for a new batch (or shutdown).
-    work_cv: Condvar,
-    /// The submitter waits here for batch completion.
-    done_cv: Condvar,
+    /// Completed task executions (join condition: `done == num_tasks`).
+    done: AtomicUsize,
+    /// A task in this set panicked.
+    panicked: AtomicBool,
+    /// Whether this set is a nested subtask fan-out (for stats).
+    subtask: bool,
+    /// Deque slot the set was published to. A subtask claim by any
+    /// other slot is a *steal* (an idle worker picking up another
+    /// worker's tile); top-level batch claims are ordinary dispatch
+    /// and never counted as steals.
+    owner_slot: usize,
 }
 
 unsafe fn call_closure<F: Fn(usize)>(data: *const (), i: usize) {
     // SAFETY: `data` was created from `&F` by the monomorphized caller
-    // and outlives the batch (see `Batch` safety contract).
+    // and outlives the set (see `TaskSet` safety contract).
     unsafe { (*(data as *const F))(i) }
 }
 
-/// A fixed-width persistent worker pool. Threads are spawned lazily on
-/// the first parallel batch, so a pool that never runs (e.g. a queued
-/// service job waiting for its first round) costs nothing.
+impl TaskSet {
+    fn new<F: Fn(usize)>(f: &F, num_tasks: usize, subtask: bool, owner_slot: usize) -> TaskSet {
+        TaskSet {
+            data: f as *const F as *const (),
+            call: call_closure::<F>,
+            next: AtomicUsize::new(0),
+            num_tasks,
+            done: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            subtask,
+            owner_slot,
+        }
+    }
+}
+
+/// A reference to a published [`TaskSet`], ferried between threads
+/// through the deques.
+#[derive(Clone, Copy)]
+struct SetRef(*const TaskSet);
+
+// SAFETY: `SetRef` only ferries a pointer to a set pinned on the
+// publishing thread's stack; `Shared::join` guarantees the pointee
+// outlives every access (removal from the deque under the deque lock,
+// then a wait for all claimed indices).
+unsafe impl Send for SetRef {}
+
+impl SetRef {
+    fn get(&self) -> &TaskSet {
+        // SAFETY: see the `Send` justification above.
+        unsafe { &*self.0 }
+    }
+}
+
+/// Mutable pool state guarded by one mutex (parking only — the work
+/// itself flows through the deques and atomics).
+struct PoolState {
+    /// Workers currently parked on `work_cv`.
+    sleepers: usize,
+    /// Pool is shutting down (set by `Drop`).
+    shutdown: bool,
+}
+
+/// Activity counters (monotone; snapshot via [`Pool::stats`]).
+#[derive(Default)]
+struct StatCells {
+    tasks: AtomicU64,
+    steals: AtomicU64,
+    subtasks: AtomicU64,
+    busy_nanos: AtomicU64,
+}
+
+/// A monotone snapshot of pool activity, for per-round utilisation and
+/// steal accounting ([`crate::mapreduce::RoundMetrics`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Task executions (top-level batch tasks and subtasks).
+    pub tasks: u64,
+    /// Subtask (tile) claims executed by a slot other than the one
+    /// that spawned the fan-out — actual work stealing. Top-level
+    /// batch claims are ordinary dispatch and are not counted.
+    pub steals: u64,
+    /// Subtask executions (nested [`run_subtasks`] tiles).
+    pub subtasks: u64,
+    /// Nanoseconds spent inside task bodies, summed over workers.
+    /// Nested pool activity (tiles running inside a task, condvar
+    /// waits inside a nested join) is excluded from the enclosing
+    /// task's share, so each busy nanosecond is counted exactly once
+    /// and `busy / (wall × slots)` is a true utilisation.
+    pub busy_nanos: u64,
+}
+
+struct Shared {
+    /// `workers` deques: worker thread `i` owns deque `i`
+    /// (`i < workers - 1`); the last is the *injector* deque external
+    /// submitters publish to.
+    deques: Vec<Mutex<VecDeque<SetRef>>>,
+    state: Mutex<PoolState>,
+    /// Workers park here when every deque is drained.
+    work_cv: Condvar,
+    /// Publishers wait here for their set's last claims to finish.
+    done_cv: Condvar,
+    /// Bumped on every publish; a worker re-checks it under the state
+    /// lock before parking so a racing publish is never missed.
+    epoch: AtomicU64,
+    stats: StatCells,
+    /// Whether kernel-layer tile subtasks may fan out on this pool
+    /// (default true; benches flip it off for the no-stealing
+    /// baseline).
+    tiling: AtomicBool,
+    workers: usize,
+}
+
+/// Identity of the pool task the current thread is executing, if any.
+/// Lets nested fan-outs ([`run_subtasks`], re-entrant
+/// [`Pool::run_indexed`]) publish to the right deque, and lets the
+/// kernel layer discover that tile parallelism is available without
+/// threading the pool through every reducer signature.
+#[derive(Clone, Copy)]
+struct Ctx {
+    shared: *const Shared,
+    slot: usize,
+}
+
+thread_local! {
+    static CTX: Cell<Option<Ctx>> = const { Cell::new(None) };
+    /// Nanoseconds of *nested* pool activity (child task executions,
+    /// condvar waits inside a nested join) accrued on this thread
+    /// since the innermost enclosing `execute` began. Subtracted from
+    /// that task's busy share so no nanosecond is counted twice.
+    static EXCLUDED_NANOS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Whether the pool the current thread is executing a task on allows
+/// oversized local multiplies to split into stealable tiles (`true`
+/// when not on a pool — the inline fallback is harmless there). The
+/// switch is **per-pool** ([`Pool::set_tiling`]) so a benchmark's
+/// tiles-off baseline cannot perturb unrelated pools in the process.
+pub fn subtask_tiling() -> bool {
+    CTX.with(|c| match c.get() {
+        // SAFETY: the ctx is only set while its pool task executes, and
+        // `Shared` outlives every in-flight task.
+        Some(ctx) => unsafe { (*ctx.shared).tiling.load(Ordering::Relaxed) },
+        None => true,
+    })
+}
+
+/// Width of the pool the current thread is executing a task on
+/// (1 when the thread is not inside a pool task).
+pub fn current_pool_width() -> usize {
+    CTX.with(|c| match c.get() {
+        // SAFETY: the ctx is only set while its pool task executes, and
+        // `Shared` outlives every in-flight task.
+        Some(ctx) => unsafe { (*ctx.shared).workers },
+        None => 1,
+    })
+}
+
+/// Run `f(i)` for every `i in 0..num` as stealable subtasks of the
+/// current pool task: the fan-out is published on the executing
+/// worker's own deque, the worker chews through it, and idle workers
+/// steal claims. Falls back to an inline loop when the calling thread
+/// is not inside a pool task (or the fan-out is trivial). Panics in
+/// subtasks propagate as `"worker panicked"` after the set drains.
+pub fn run_subtasks<F: Fn(usize) + Sync>(num: usize, f: F) {
+    let ctx = CTX.with(|c| c.get());
+    let Some(ctx) = ctx else {
+        for i in 0..num {
+            f(i);
+        }
+        return;
+    };
+    // SAFETY: `shared` is alive for the duration of the enclosing task.
+    let shared = unsafe { &*ctx.shared };
+    if shared.workers == 1 || num <= 1 {
+        for i in 0..num {
+            f(i);
+        }
+        return;
+    }
+    let set = TaskSet::new(&f, num, true, ctx.slot);
+    shared.publish(SetRef(&set), ctx.slot);
+    shared.join(SetRef(&set), ctx.slot);
+    assert!(!set.panicked.load(Ordering::SeqCst), "worker panicked");
+}
+
+impl Shared {
+    /// Push a set onto deque `slot` and wake parked workers — at most
+    /// as many as the set has tasks, so a 1-task round on a wide pool
+    /// does not stampede every sleeper through a futile steal-spin.
+    fn publish(&self, set: SetRef, slot: usize) {
+        let num_tasks = set.get().num_tasks;
+        let mut dq = self.deques[slot].lock().unwrap_or_else(|e| e.into_inner());
+        dq.push_back(set);
+        drop(dq);
+        self.epoch.fetch_add(1, Ordering::Release);
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if st.sleepers > 0 {
+            if num_tasks >= st.sleepers {
+                self.work_cv.notify_all();
+            } else {
+                for _ in 0..num_tasks {
+                    self.work_cv.notify_one();
+                }
+            }
+        }
+        drop(st);
+    }
+
+    /// Remove `set` from deque `slot` if a claimer has not already
+    /// retired it.
+    fn retire(&self, set: SetRef, slot: usize) {
+        let mut dq = self.deques[slot].lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(pos) = dq.iter().position(|s| std::ptr::eq(s.0, set.0)) {
+            dq.remove(pos);
+        }
+    }
+
+    /// Claim one task index from the deque at `idx`. Own-deque scans
+    /// take the newest set (nested fan-outs run before older work);
+    /// steals take the oldest. Exhausted sets are retired lazily here,
+    /// under the deque lock — the same lock the publisher's `retire`
+    /// takes, so no claimer can touch a set after its publisher
+    /// returned.
+    fn try_claim(&self, idx: usize, own: bool) -> Option<(SetRef, usize)> {
+        let mut dq = self.deques[idx].lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            let set = if own { dq.back() } else { dq.front() }.copied()?;
+            let i = set.get().next.fetch_add(1, Ordering::Relaxed);
+            if i < set.get().num_tasks {
+                return Some((set, i));
+            }
+            if own {
+                dq.pop_back();
+            } else {
+                dq.pop_front();
+            }
+        }
+    }
+
+    /// Find one claim: own deque first, then scan the other deques
+    /// round-robin.
+    fn find_work(&self, slot: usize) -> Option<(SetRef, usize)> {
+        if let Some(claim) = self.try_claim(slot, true) {
+            return Some(claim);
+        }
+        let n = self.deques.len();
+        for d in 1..n {
+            let idx = (slot + d) % n;
+            if let Some(claim) = self.try_claim(idx, false) {
+                return Some(claim);
+            }
+        }
+        None
+    }
+
+    /// Execute one claimed task: set the thread's task context, run the
+    /// closure (catching panics), account stats, and publish the
+    /// completion to any waiting joiner.
+    ///
+    /// A claim counts as a *steal* when it is a subtask (tile) executed
+    /// by a slot other than the one that spawned the fan-out; top-level
+    /// batch claims are ordinary dispatch. Busy time is the task body's
+    /// own span minus any nested pool activity on this thread, so tiles
+    /// are never double-counted into their parent.
+    fn execute(&self, set: SetRef, i: usize, slot: usize) {
+        let s = set.get();
+        self.stats.tasks.fetch_add(1, Ordering::Relaxed);
+        if s.subtask {
+            self.stats.subtasks.fetch_add(1, Ordering::Relaxed);
+            if slot != s.owner_slot {
+                self.stats.steals.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let saved_excluded = EXCLUDED_NANOS.with(|e| e.replace(0));
+        let t0 = Instant::now();
+        let prev = CTX.with(|c| {
+            c.replace(Some(Ctx {
+                shared: self as *const Shared,
+                slot,
+            }))
+        });
+        let r = catch_unwind(AssertUnwindSafe(|| unsafe { (s.call)(s.data, i) }));
+        CTX.with(|c| c.set(prev));
+        let elapsed = t0.elapsed().as_nanos() as u64;
+        let nested = EXCLUDED_NANOS.with(|e| e.get());
+        let busy = elapsed.saturating_sub(nested);
+        self.stats.busy_nanos.fetch_add(busy, Ordering::Relaxed);
+        // This task's whole span is nested activity from the enclosing
+        // task's point of view (if any).
+        EXCLUDED_NANOS.with(|e| e.set(saved_excluded.saturating_add(elapsed)));
+        if r.is_err() {
+            s.panicked.store(true, Ordering::SeqCst);
+        }
+        // The set may be freed the instant the final `done` increment
+        // lands (the publisher's join returns), so read everything the
+        // notification needs *before* incrementing.
+        let num_tasks = s.num_tasks;
+        let finished = s.done.fetch_add(1, Ordering::AcqRel) + 1 == num_tasks;
+        if finished {
+            // Publish the completion under the state lock so a joiner
+            // that just re-checked `done` cannot park past this notify.
+            // Only the final completion can unblock a joiner, so
+            // intermediate tasks skip the lock entirely.
+            let _st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Drive `set` (published on deque `slot`) to completion from the
+    /// publishing thread: claim its tasks first, then — once the
+    /// counter is exhausted — retire it from the deque and help with
+    /// other queued work until every claimed index has finished.
+    ///
+    /// # Safety contract
+    /// On return, no other thread holds a reference into the set: the
+    /// retire happens under the deque lock (mutually exclusive with
+    /// every claim), and the `done` wait covers all claims handed out.
+    fn join(&self, set: SetRef, slot: usize) {
+        let s = set.get();
+        loop {
+            let i = s.next.fetch_add(1, Ordering::Relaxed);
+            if i >= s.num_tasks {
+                break;
+            }
+            self.execute(set, i, slot);
+        }
+        // Unpublish before this stack frame can be released.
+        self.retire(set, slot);
+        while s.done.load(Ordering::Acquire) < s.num_tasks {
+            // Stragglers are still inside claims of this set; help with
+            // any other queued work instead of blocking outright.
+            if let Some((other, i)) = self.find_work(slot) {
+                self.execute(other, i, slot);
+                continue;
+            }
+            let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            if s.done.load(Ordering::Acquire) >= s.num_tasks {
+                break;
+            }
+            // Waiting is not work: exclude it from any enclosing
+            // task's busy share.
+            let t_wait = Instant::now();
+            drop(self.done_cv.wait(st).unwrap_or_else(|e| e.into_inner()));
+            let waited = t_wait.elapsed().as_nanos() as u64;
+            EXCLUDED_NANOS.with(|e| e.set(e.get().saturating_add(waited)));
+        }
+    }
+}
+
+/// Claim attempts an idle worker makes (yielding between rounds)
+/// before parking on the condvar.
+const STEAL_SPIN: usize = 32;
+
+/// Body of a persistent worker thread: drain available work (stealing
+/// when the own deque is dry), steal-spin a bounded number of rounds,
+/// then park until a publish or shutdown.
+fn worker_loop(shared: &Shared, slot: usize) {
+    let mut spins = 0usize;
+    loop {
+        let epoch = shared.epoch.load(Ordering::Acquire);
+        if let Some((set, i)) = shared.find_work(slot) {
+            shared.execute(set, i, slot);
+            spins = 0;
+            continue;
+        }
+        if spins < STEAL_SPIN {
+            spins += 1;
+            std::thread::yield_now();
+            continue;
+        }
+        let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        if st.shutdown {
+            return;
+        }
+        if shared.epoch.load(Ordering::Acquire) != epoch {
+            // A publish raced the idle scan; rescan instead of parking.
+            drop(st);
+            spins = 0;
+            continue;
+        }
+        st.sleepers += 1;
+        st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        st.sleepers -= 1;
+        if st.shutdown {
+            return;
+        }
+        drop(st);
+        spins = 0;
+    }
+}
+
+/// A fixed-width persistent work-stealing pool. Threads are spawned
+/// lazily on the first parallel batch, so a pool that never runs (e.g.
+/// a queued service job waiting for its first round) costs nothing.
 pub struct Pool {
     shared: Arc<Shared>,
     handles: Mutex<Vec<JoinHandle<()>>>,
-    /// Serialises submitters: one batch in flight at a time.
-    submit: Mutex<()>,
     workers: usize,
 }
 
@@ -87,7 +458,7 @@ pub struct Pool {
 ///
 /// Safety contract (upheld by [`Pool::run_indexed`]): the atomic task
 /// counter hands every index to exactly one worker, so no two threads
-/// ever write the same slot; the batch-completion wait finishes all
+/// ever write the same slot; the set-completion wait finishes all
 /// writes before the owning `Vec` is read again.
 struct Slots<T> {
     ptr: *mut Option<T>,
@@ -112,37 +483,42 @@ impl<T> Slots<T> {
 
 impl Pool {
     /// Pool with `workers` total execution width (≥ 1): `workers - 1`
-    /// persistent threads (spawned lazily on first use) plus the
+    /// persistent threads (spawned lazily on first use) plus any
     /// submitting thread, which always participates in its own batches.
     pub fn new(workers: usize) -> Self {
         let workers = workers.max(1);
+        // One deque per worker thread plus the injector.
+        let deques = (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
         let shared = Arc::new(Shared {
-            state: Mutex::new(State {
-                batch: None,
-                generation: 0,
-                done: 0,
-                active: 0,
-                panicked: false,
+            deques,
+            state: Mutex::new(PoolState {
+                sleepers: 0,
                 shutdown: false,
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
+            epoch: AtomicU64::new(0),
+            stats: StatCells::default(),
+            tiling: AtomicBool::new(true),
+            workers,
         });
         Self {
             shared,
             handles: Mutex::new(Vec::new()),
-            submit: Mutex::new(()),
             workers,
         }
     }
 
     /// Spawn the persistent worker threads if they are not running yet.
+    /// Also runs the one-shot kernel tile autotune, so the probe's cost
+    /// lands at pool startup rather than inside a timed round.
     fn ensure_spawned(&self) {
         let mut handles = self.handles.lock().unwrap_or_else(|e| e.into_inner());
         if handles.is_empty() {
-            for _ in 1..self.workers {
+            crate::runtime::kernels::ensure_tuned();
+            for slot in 0..self.workers - 1 {
                 let shared = Arc::clone(&self.shared);
-                handles.push(std::thread::spawn(move || worker_loop(&shared)));
+                handles.push(std::thread::spawn(move || worker_loop(&shared, slot)));
             }
         }
     }
@@ -152,12 +528,42 @@ impl Pool {
         self.workers
     }
 
+    /// Enable/disable kernel-layer tile subtasks on this pool's tasks
+    /// (on by default). The engine bench's no-stealing baseline turns
+    /// it off so a local multiply stays pinned to one worker, exactly
+    /// like the pre-stealing engine.
+    pub fn set_tiling(&self, on: bool) {
+        self.shared.tiling.store(on, Ordering::SeqCst);
+    }
+
+    /// Snapshot of the pool's monotone activity counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            tasks: self.shared.stats.tasks.load(Ordering::Relaxed),
+            steals: self.shared.stats.steals.load(Ordering::Relaxed),
+            subtasks: self.shared.stats.subtasks.load(Ordering::Relaxed),
+            busy_nanos: self.shared.stats.busy_nanos.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The deque the calling thread should publish to: its own when it
+    /// is a task of this pool (nested fan-out), the injector otherwise.
+    fn submit_slot(&self) -> usize {
+        let injector = self.shared.deques.len() - 1;
+        CTX.with(|c| match c.get() {
+            Some(ctx) if std::ptr::eq(ctx.shared, Arc::as_ptr(&self.shared)) => ctx.slot,
+            _ => injector,
+        })
+    }
+
     /// Run `f(task_index)` for every index in `0..num_tasks` across the
     /// pool; returns the results ordered by task index. Panics in tasks
-    /// propagate (as `"worker panicked"`) after the batch drains.
+    /// propagate (as `"worker panicked"`) after the set drains.
     ///
-    /// Batches are serialised per pool; do not call re-entrantly from
-    /// inside a task of the same pool.
+    /// Concurrent calls from several threads are supported (their
+    /// claims interleave on the same workers — how gang-scheduled
+    /// rounds share the cluster), as are nested calls from inside a
+    /// task of the same pool.
     pub fn run_indexed<T, F>(&self, num_tasks: usize, f: F) -> Vec<T>
     where
         T: Send,
@@ -173,78 +579,47 @@ impl Pool {
         let slots = Slots {
             ptr: results.as_mut_ptr(),
         };
-        let next = AtomicUsize::new(0);
         let task = |i: usize| {
             let out = f(i);
             // SAFETY: the claim counter yields each `i` exactly once,
             // `i < num_tasks == results.len()`, and `results` is only
-            // read after the batch fully drains.
+            // read after the set fully drains.
             unsafe { slots.write(i, out) };
         };
 
-        if self.workers == 1 || num_tasks == 1 {
-            // Sequential fast path: no workers to wake (or nothing to
-            // share). Runs on the submitting thread only.
+        if self.workers == 1 {
+            // Sequential fast path: no workers to wake. Runs on the
+            // submitting thread only — but still feeds the activity
+            // counters, so a single-slot round reports its true
+            // (~1.0) utilisation instead of 0.
             let mut panicked = false;
-            loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= num_tasks {
-                    break;
-                }
+            for i in 0..num_tasks {
+                let saved = EXCLUDED_NANOS.with(|e| e.replace(0));
+                let t0 = Instant::now();
                 if catch_unwind(AssertUnwindSafe(|| task(i))).is_err() {
                     panicked = true;
                 }
+                let elapsed = t0.elapsed().as_nanos() as u64;
+                let nested = EXCLUDED_NANOS.with(|e| e.get());
+                let busy = elapsed.saturating_sub(nested);
+                self.shared.stats.tasks.fetch_add(1, Ordering::Relaxed);
+                self.shared.stats.busy_nanos.fetch_add(busy, Ordering::Relaxed);
+                EXCLUDED_NANOS.with(|e| e.set(saved.saturating_add(elapsed)));
             }
             assert!(!panicked, "worker panicked");
         } else {
             self.ensure_spawned();
-            self.run_batch(&task, &next, num_tasks);
+            let slot = self.submit_slot();
+            let set = TaskSet::new(&task, num_tasks, false, slot);
+            self.shared.publish(SetRef(&set), slot);
+            self.shared.join(SetRef(&set), slot);
+            assert!(!set.panicked.load(Ordering::SeqCst), "worker panicked");
         }
 
         results
             .into_iter()
             .map(|m| m.expect("task not executed"))
             .collect()
-    }
-
-    /// Publish a batch, help execute it, and wait until it drains.
-    fn run_batch(&self, task: &(impl Fn(usize) + Sync), next: &AtomicUsize, num_tasks: usize) {
-        fn shim_of<F: Fn(usize)>(_: &F) -> unsafe fn(*const (), usize) {
-            call_closure::<F>
-        }
-        let batch = Batch {
-            data: (task as *const _) as *const (),
-            call: shim_of(task),
-            next: next as *const AtomicUsize,
-            num_tasks,
-        };
-        // One batch in flight at a time. A previous batch may have
-        // poisoned the lock by panicking while holding it; the pool
-        // state is still consistent then (the batch was retired before
-        // the panic), so poisoning is ignored.
-        let _guard = self.submit.lock().unwrap_or_else(|e| e.into_inner());
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            st.batch = Some(batch);
-            st.generation += 1;
-            st.done = 0;
-            st.panicked = false;
-            self.shared.work_cv.notify_all();
-        }
-        // The submitter participates in its own batch.
-        let (local_done, local_panic) = run_claims(&batch);
-        let mut st = self.shared.state.lock().unwrap();
-        st.done += local_done;
-        st.panicked |= local_panic;
-        while st.done < num_tasks || st.active > 0 {
-            st = self.shared.done_cv.wait(st).unwrap();
-        }
-        // Retire the batch before the closure/counter frame is released
-        // so no late-waking worker can adopt dangling pointers.
-        st.batch = None;
-        let panicked = st.panicked;
-        drop(st);
-        assert!(!panicked, "worker panicked");
     }
 
     /// Map `f` over the items of a slice in parallel, preserving order.
@@ -263,75 +638,29 @@ impl Drop for Pool {
         {
             let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
             st.shutdown = true;
+            self.shared.work_cv.notify_all();
         }
-        self.shared.work_cv.notify_all();
         let mut handles = self.handles.lock().unwrap_or_else(|e| e.into_inner());
         for h in handles.drain(..) {
             let _ = h.join();
+        }
+        // Every set retires before its publisher returns, so shutdown
+        // must never strand a queued (sub)task.
+        if cfg!(debug_assertions) {
+            for dq in &self.shared.deques {
+                let dq = dq.lock().unwrap_or_else(|e| e.into_inner());
+                debug_assert!(dq.is_empty(), "pool shutdown lost queued subtasks");
+            }
         }
     }
 }
 
 impl std::fmt::Debug for Pool {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Pool").field("workers", &self.workers).finish()
-    }
-}
-
-/// Claim and run tasks from `batch` until the counter is exhausted;
-/// returns (tasks completed, whether any panicked).
-fn run_claims(batch: &Batch) -> (usize, bool) {
-    let mut done = 0usize;
-    let mut panicked = false;
-    loop {
-        // SAFETY: `next` lives on the submitter's stack, which is
-        // pinned until the batch retires (see `run_batch`).
-        let i = unsafe { (*batch.next).fetch_add(1, Ordering::Relaxed) };
-        if i >= batch.num_tasks {
-            break;
-        }
-        // SAFETY: same pinning argument for the closure behind `data`.
-        if catch_unwind(AssertUnwindSafe(|| unsafe { (batch.call)(batch.data, i) })).is_err() {
-            panicked = true;
-        }
-        done += 1;
-    }
-    (done, panicked)
-}
-
-/// Body of a persistent worker thread: adopt each published batch once,
-/// run claims, report completion, sleep.
-fn worker_loop(shared: &Shared) {
-    let mut last_gen = 0u64;
-    let mut st = shared.state.lock().unwrap();
-    loop {
-        if st.shutdown {
-            return;
-        }
-        let gen = st.generation;
-        let published: Option<Batch> = st.batch; // `Batch` is `Copy`
-        let adopt = match published {
-            Some(b) if gen != last_gen => {
-                last_gen = gen;
-                st.active += 1;
-                Some(b)
-            }
-            _ => None,
-        };
-        match adopt {
-            Some(batch) => {
-                drop(st);
-                let (done, panicked) = run_claims(&batch);
-                st = shared.state.lock().unwrap();
-                st.done += done;
-                st.active -= 1;
-                st.panicked |= panicked;
-                shared.done_cv.notify_all();
-            }
-            None => {
-                st = shared.work_cv.wait(st).unwrap();
-            }
-        }
+        f.debug_struct("Pool")
+            .field("workers", &self.workers)
+            .field("stats", &self.stats())
+            .finish()
     }
 }
 
@@ -431,11 +760,12 @@ mod tests {
     }
 
     #[test]
-    fn pool_is_send() {
+    fn pool_is_send_and_sync() {
         // Drivers (and the StepRuns that own them) cross thread
-        // boundaries in the service layer.
-        fn assert_send<T: Send>() {}
-        assert_send::<Pool>();
+        // boundaries in the service layer; gang-scheduled rounds submit
+        // to one pool from two threads at once.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Pool>();
     }
 
     #[test]
@@ -476,5 +806,201 @@ mod tests {
         assert!(r.is_err());
         let out = pool.run_indexed(8, |i| i * 2);
         assert_eq!(out, (0..8).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_batches_from_two_threads() {
+        // Two gang-scheduled rounds publish to the same pool at once;
+        // both must drain with results in order.
+        let pool = Pool::new(4);
+        std::thread::scope(|s| {
+            let h = s.spawn(|| pool.run_indexed(500, |i| i + 1));
+            let a = pool.run_indexed(500, |i| i * 2);
+            let b = h.join().unwrap();
+            assert_eq!(a, (0..500).map(|i| i * 2).collect::<Vec<_>>());
+            assert_eq!(b, (0..500).map(|i| i + 1).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn subtasks_run_inline_off_pool() {
+        // Not inside a pool task: run_subtasks degrades to a loop.
+        let hits = AtomicU64::new(0);
+        run_subtasks(5, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+        assert_eq!(current_pool_width(), 1);
+    }
+
+    #[test]
+    fn subtasks_fan_out_from_a_pool_task() {
+        // One task on a wide pool fans out subtasks; all must run
+        // exactly once and the results land in disjoint slots.
+        let pool = Pool::new(8);
+        let before = pool.stats();
+        let out = pool.run_indexed(1, |_| {
+            assert_eq!(current_pool_width(), 8);
+            let mut buf = vec![0u64; 64];
+            let sums: Vec<AtomicU64> = (0..64).map(|_| AtomicU64::new(0)).collect();
+            run_subtasks(64, |i| {
+                // Emulate a tile's work so idle workers have a window
+                // to steal.
+                let t = Instant::now();
+                while t.elapsed() < std::time::Duration::from_micros(50) {
+                    std::hint::spin_loop();
+                }
+                sums[i].store(i as u64 + 1, Ordering::Relaxed);
+            });
+            for (i, s) in sums.iter().enumerate() {
+                buf[i] = s.load(Ordering::Relaxed);
+                assert_eq!(buf[i], i as u64 + 1);
+            }
+            buf.iter().sum::<u64>()
+        });
+        assert_eq!(out[0], (1..=64).sum::<u64>());
+        let after = pool.stats();
+        assert_eq!(after.subtasks - before.subtasks, 64, "every tile ran exactly once");
+        assert!(after.tasks - before.tasks >= 65);
+    }
+
+    #[test]
+    fn idle_workers_steal_subtasks() {
+        // A single oversized task on a wide pool: the only way the
+        // other workers can participate is by stealing its tiles.
+        let pool = Pool::new(8);
+        let mut stole = 0;
+        for _ in 0..20 {
+            let before = pool.stats().steals;
+            pool.run_indexed(1, |_| {
+                run_subtasks(64, |_| {
+                    let t = Instant::now();
+                    while t.elapsed() < std::time::Duration::from_micros(100) {
+                        std::hint::spin_loop();
+                    }
+                });
+            });
+            stole = (pool.stats().steals - before) as usize;
+            if stole > 0 {
+                break;
+            }
+        }
+        assert!(stole > 0, "idle workers never stole a tile");
+    }
+
+    #[test]
+    fn nested_run_indexed_on_same_pool() {
+        // A task may re-enter the pool it runs on; the nested batch is
+        // published to the worker's own deque and drains correctly.
+        let pool = Pool::new(4);
+        let out = pool.run_indexed(3, |i| {
+            let inner = pool.run_indexed(5, |j| i * 10 + j);
+            inner.iter().sum::<usize>()
+        });
+        assert_eq!(out, vec![10, 60, 110]);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn subtask_panics_propagate() {
+        let pool = Pool::new(4);
+        pool.run_indexed(1, |_| {
+            run_subtasks(8, |i| {
+                if i == 5 {
+                    panic!("tile boom");
+                }
+            });
+        });
+    }
+
+    #[test]
+    fn busy_time_counts_each_nanosecond_once() {
+        // A parent task that fans out one sleeping tile must not be
+        // charged the tile's span on top of the tile's own share, and
+        // top-level batch pickup must not count as stealing.
+        let pool = Pool::new(2);
+        let s0 = pool.stats();
+        pool.run_indexed(1, |_| {
+            run_subtasks(2, |_| {
+                let t = Instant::now();
+                while t.elapsed() < std::time::Duration::from_millis(10) {
+                    std::hint::spin_loop();
+                }
+            });
+        });
+        let s1 = pool.stats();
+        let busy_ms = (s1.busy_nanos - s0.busy_nanos) as f64 / 1e6;
+        // 2 tiles × 10 ms of real work; double counting the parent's
+        // span would push this towards 40 ms.
+        assert!(busy_ms >= 18.0, "tile work must be counted: {busy_ms}ms");
+        assert!(busy_ms < 32.0, "no double counting: {busy_ms}ms");
+    }
+
+    #[test]
+    fn single_worker_pool_still_records_stats() {
+        // The sequential fast path must feed the same counters, so a
+        // 1-slot round reports its real (busy) utilisation, not 0.
+        let pool = Pool::new(1);
+        let s0 = pool.stats();
+        let _ = pool.run_indexed(8, |i| {
+            let t = Instant::now();
+            while t.elapsed() < std::time::Duration::from_micros(50) {
+                std::hint::spin_loop();
+            }
+            i
+        });
+        let s1 = pool.stats();
+        assert_eq!(s1.tasks - s0.tasks, 8);
+        assert!(s1.busy_nanos > s0.busy_nanos, "sequential busy time accrues");
+        assert_eq!(s1.steals, s0.steals);
+    }
+
+    #[test]
+    fn batch_dispatch_is_not_a_steal() {
+        // Workers picking plain batch tasks off the injector is
+        // ordinary dispatch; the steal counter is reserved for tiles
+        // executed away from their spawning slot.
+        let pool = Pool::new(4);
+        let s0 = pool.stats();
+        let _ = pool.run_indexed(64, |i| i);
+        let s1 = pool.stats();
+        assert_eq!(s1.steals, s0.steals, "no subtasks → no steals");
+        assert_eq!(s1.tasks - s0.tasks, 64);
+    }
+
+    #[test]
+    fn stats_are_monotone_and_busy_time_accrues() {
+        let pool = Pool::new(2);
+        let s0 = pool.stats();
+        let _ = pool.run_indexed(32, |i| {
+            let t = Instant::now();
+            while t.elapsed() < std::time::Duration::from_micros(20) {
+                std::hint::spin_loop();
+            }
+            i
+        });
+        let s1 = pool.stats();
+        assert_eq!(s1.tasks - s0.tasks, 32);
+        assert!(s1.busy_nanos > s0.busy_nanos, "busy time must accrue");
+        assert!(s1.steals >= s0.steals);
+    }
+
+    #[test]
+    fn tiling_switch_is_per_pool() {
+        // Off-pool threads always report tiling available (the inline
+        // fallback is harmless); a pool's own tasks see its switch.
+        assert!(subtask_tiling());
+        let pool = Pool::new(2);
+        pool.set_tiling(false);
+        let seen = pool.run_indexed(1, |_| subtask_tiling()).remove(0);
+        assert!(!seen, "tasks of a tiles-off pool must see the switch");
+        pool.set_tiling(true);
+        let seen = pool.run_indexed(1, |_| subtask_tiling()).remove(0);
+        assert!(seen);
+        // Another pool is unaffected by the first one's switch.
+        pool.set_tiling(false);
+        let other = Pool::new(2);
+        let seen = other.run_indexed(1, |_| subtask_tiling()).remove(0);
+        assert!(seen, "tiling is per-pool, not global");
     }
 }

@@ -90,6 +90,11 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
             input_words: input.iter().map(|p| p.value.words()).sum(),
             ..Default::default()
         };
+        // Pool activity over the round's window (steals, tile
+        // subtasks, busy time) is the delta of the pool's monotone
+        // counters across the round.
+        let round_start = Instant::now();
+        let stats0 = pool.stats();
 
         // --- Map step: split input evenly across map tasks (Hadoop's
         // runtime distributes input pairs to map tasks); each task
@@ -177,6 +182,17 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
         metrics.output_pairs = output.len();
         metrics.output_words = output.iter().map(|p| p.value.words()).sum();
         metrics.write_time = Duration::ZERO; // set by the driver when materialising
+
+        let stats1 = pool.stats();
+        let wall = round_start.elapsed().as_secs_f64();
+        metrics.steals = (stats1.steals - stats0.steals) as usize;
+        metrics.subtasks = (stats1.subtasks - stats0.subtasks) as usize;
+        let busy = (stats1.busy_nanos - stats0.busy_nanos) as f64 * 1e-9;
+        metrics.pool_utilisation = if wall > 0.0 {
+            busy / (wall * pool.workers() as f64)
+        } else {
+            0.0
+        };
 
         (output, metrics)
     }
@@ -420,6 +436,26 @@ mod tests {
             m.output_words,
             "per-task words must sum to the round total"
         );
+    }
+
+    #[test]
+    fn pool_activity_recorded_per_round() {
+        // A multi-worker round runs through the pool, so busy time (and
+        // with it a non-zero utilisation) must be recorded.
+        let input: Vec<Pair<u32, f32>> = (0..200).map(|i| Pair::new(i % 13, 1.0)).collect();
+        let reducer = FnReducer::new(|_r, k: &u32, vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
+            emit(*k, vs.iter().sum());
+        });
+        let job = Job {
+            config: cfg(),
+            combiner: None,
+            mapper: &IdentityMapper,
+            reducer: &reducer,
+            partitioner: &HashPartitioner,
+        };
+        let (_, m) = run_job(&job, 0, &input);
+        assert!(m.pool_utilisation > 0.0, "utilisation recorded: {}", m.pool_utilisation);
+        assert_eq!(m.subtasks, 0, "no oversized multiply, no tiles");
     }
 
     #[test]

@@ -44,6 +44,22 @@ pub struct RoundMetrics {
     /// accounting the DFS materialisation uses
     /// (`sum == output_words`; empty when the engine did not record it).
     pub output_words_per_task: Vec<usize>,
+    /// Tile subtasks executed by a worker other than the one that
+    /// spawned them — actual stolen claims — during the round's window
+    /// on the pool (ordinary batch dispatch is not counted;
+    /// shared-pool note: with gang-scheduled rounds the window
+    /// overlaps the partner round, so this counts cluster-wide
+    /// stealing during the round).
+    pub steals: usize,
+    /// Row-panel tile subtasks spawned by oversized local multiplies
+    /// during the round's window.
+    pub subtasks: usize,
+    /// Busy fraction of the pool over the round's wall time: task-body
+    /// seconds summed across workers (each nanosecond counted exactly
+    /// once — nested tiles and join waits are excluded from the
+    /// enclosing task's share) divided by `wall × slots`
+    /// (1.0 = every slot busy for the whole round).
+    pub pool_utilisation: f64,
     /// Wall time of the map step.
     pub map_time: Duration,
     /// Wall time of the shuffle step (partition + group).
@@ -113,6 +129,25 @@ impl JobMetrics {
         self.rounds.iter().map(|r| r.kernel_time).sum()
     }
 
+    /// Total stolen claims across rounds (work-stealing activity).
+    pub fn total_steals(&self) -> usize {
+        self.rounds.iter().map(|r| r.steals).sum()
+    }
+
+    /// Total tile subtasks across rounds (oversized local multiplies
+    /// split across the pool).
+    pub fn total_subtasks(&self) -> usize {
+        self.rounds.iter().map(|r| r.subtasks).sum()
+    }
+
+    /// Mean per-round pool utilisation (0 when no rounds ran).
+    pub fn mean_pool_utilisation(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.pool_utilisation).sum::<f64>() / self.rounds.len() as f64
+    }
+
     /// Render a per-round summary table.
     pub fn table(&self) -> String {
         use crate::util::table::Table;
@@ -175,6 +210,23 @@ mod tests {
         assert_eq!(j.max_shuffle_pairs(), 300);
         assert_eq!(j.max_reducer_words(), 48);
         assert_eq!(j.total_time(), Duration::from_millis(111));
+    }
+
+    #[test]
+    fn stealing_aggregates() {
+        let mut a = mk(0, 1, 1);
+        a.steals = 3;
+        a.subtasks = 10;
+        a.pool_utilisation = 0.5;
+        let mut b = mk(1, 1, 1);
+        b.steals = 1;
+        b.subtasks = 2;
+        b.pool_utilisation = 1.0;
+        let j = JobMetrics { rounds: vec![a, b] };
+        assert_eq!(j.total_steals(), 4);
+        assert_eq!(j.total_subtasks(), 12);
+        assert!((j.mean_pool_utilisation() - 0.75).abs() < 1e-12);
+        assert_eq!(JobMetrics::default().mean_pool_utilisation(), 0.0);
     }
 
     #[test]

@@ -9,9 +9,13 @@
 //! materialised between rounds in a simulated distributed file system
 //! ([`dfs::SimDfs`]) exactly as Hadoop stores round outputs on HDFS —
 //! the behaviour the paper identifies as the main multi-round
-//! overhead. Map/reduce tasks execute on a **persistent** thread pool
-//! ([`executor::Pool`], owned by the [`Driver`]) whose width models
-//! cluster slots.
+//! overhead. Map/reduce tasks execute on a **persistent work-stealing
+//! pool** ([`executor::Pool`], owned by the [`Driver`]) whose width
+//! models cluster slots: per-worker deques with stolen claims keep the
+//! slots busy when a round has fewer tasks than workers, oversized
+//! local multiplies split into stealable row-panel subtasks
+//! ([`executor::run_subtasks`]), and two gang-scheduled rounds can run
+//! side by side on the same pool.
 //!
 //! The engine is generic over key/value types; the M3 algorithms in
 //! [`crate::m3`] instantiate it with block keys and `Arc`-backed
@@ -28,8 +32,8 @@ pub mod types;
 #[cfg(test)]
 mod equivalence;
 
-pub use driver::{Driver, MultiRoundAlgorithm, StepRun};
-pub use executor::Pool;
+pub use driver::{slot_demand, Driver, MultiRoundAlgorithm, StepRun};
+pub use executor::{Pool, PoolStats};
 pub use job::{EngineConfig, Job};
 pub use metrics::{JobMetrics, RoundMetrics};
 pub use types::{Mapper, Pair, Partitioner, Reducer, Value};

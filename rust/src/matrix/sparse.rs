@@ -7,6 +7,10 @@
 //!   a per-row epoch stamp, O(1) per flop, instead of the old
 //!   O(touched) membership scan (kept as
 //!   [`CsrMatrix::spgemm_scan_sr`], the reference implementation).
+//! * [`CsrMatrix::spgemm_par_sr`] — the same SpGEMM with stealable
+//!   row-panel subtasks when it runs inside a pool task and crosses a
+//!   size threshold (bit-identical to the sequential kernel; rows are
+//!   independent in Gustavson's algorithm).
 //! * [`CsrMatrix::add_sr`] — direct two-pointer merge of the operands'
 //!   sorted rows, no COO round-trip and no re-sort.
 //! * [`CsrMatrix::sum_sr`] — ρ-way k-way sorted-row merge for the
@@ -14,6 +18,15 @@
 
 use super::dense::DenseMatrix;
 use super::semiring::{Arithmetic, Semiring};
+
+/// Estimated multiply count below which an SpGEMM is not worth
+/// splitting into stealable row panels (matches the dense kernel's
+/// [`crate::runtime::kernels::PAR_MIN_VOLUME`] scale).
+const SPGEMM_PAR_MIN_MULS: usize = 1 << 18;
+
+/// One row panel's CSR fragment: (panel-relative `row_ptr`, `col_idx`,
+/// `values`).
+type CsrPanel = (Vec<u32>, Vec<u32>, Vec<f32>);
 
 /// Coordinate-format sparse matrix (row, col, value) triples.
 #[derive(Debug, Clone, PartialEq)]
@@ -228,30 +241,31 @@ impl CsrMatrix {
         self.to_coo().to_dense()
     }
 
-    /// Sequential SpGEMM `C = A ⊗ B` via Gustavson's algorithm with an
-    /// epoch-marked dense accumulator. This is the sparse reducer's
-    /// local multiply.
+    /// Gustavson SpGEMM of the row range `[r0, r1)` with an
+    /// epoch-marked dense accumulator; returns the panel's CSR triple
+    /// with `row_ptr` relative to the panel (`row_ptr[0] == 0`).
     ///
     /// First touch of an output column in the current row is detected
-    /// by comparing its epoch stamp against the row index — O(1) per
-    /// flop, no membership scan of the touched list, no accumulator
-    /// clearing pass (a stale slot is simply overwritten on its next
-    /// first touch).
-    pub fn spgemm_sr<S: Semiring>(&self, other: &CsrMatrix) -> CsrMatrix {
-        assert_eq!(self.cols, other.rows, "inner dimensions must agree");
+    /// by comparing its epoch stamp against the panel-local row index —
+    /// O(1) per flop, no membership scan of the touched list, no
+    /// accumulator clearing pass (a stale slot is simply overwritten on
+    /// its next first touch). Per-row output is independent of the
+    /// panel split, which is what makes the row-panel parallel SpGEMM
+    /// ([`Self::spgemm_par_sr`]) bit-identical to the sequential one.
+    fn spgemm_rows_sr<S: Semiring>(&self, other: &CsrMatrix, r0: usize, r1: usize) -> CsrPanel {
         let n_out_cols = other.cols;
         let mut acc: Vec<f32> = vec![S::zero(); n_out_cols];
         let mut mark: Vec<u32> = vec![u32::MAX; n_out_cols];
         let mut touched: Vec<u32> = Vec::new();
-        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        let mut row_ptr = Vec::with_capacity(r1 - r0 + 1);
         let mut col_idx: Vec<u32> = vec![];
         let mut values: Vec<f32> = vec![];
         row_ptr.push(0u32);
-        for i in 0..self.rows {
-            // Row index as the epoch: `rows < u32::MAX` (enforced at
-            // COO construction), so a stamp can never collide with the
-            // u32::MAX initial value.
-            let epoch = i as u32;
+        for i in r0..r1 {
+            // Panel-local row index as the epoch: `rows < u32::MAX`
+            // (enforced at COO construction), so a stamp can never
+            // collide with the u32::MAX initial value.
+            let epoch = (i - r0) as u32;
             touched.clear();
             for (k, a) in self.row(i) {
                 for (j, b) in other.row(k) {
@@ -277,9 +291,73 @@ impl CsrMatrix {
             }
             row_ptr.push(col_idx.len() as u32);
         }
+        (row_ptr, col_idx, values)
+    }
+
+    /// Sequential SpGEMM `C = A ⊗ B` via Gustavson's algorithm with an
+    /// epoch-marked dense accumulator. This is the sparse reducer's
+    /// local multiply.
+    pub fn spgemm_sr<S: Semiring>(&self, other: &CsrMatrix) -> CsrMatrix {
+        assert_eq!(self.cols, other.rows, "inner dimensions must agree");
+        let (row_ptr, col_idx, values) = self.spgemm_rows_sr::<S>(other, 0, self.rows);
         CsrMatrix {
             rows: self.rows,
-            cols: n_out_cols,
+            cols: other.cols,
+            row_ptr,
+            col_idx,
+            values,
+        }
+    }
+
+    /// [`Self::spgemm_sr`] with intra-task row-panel parallelism: when
+    /// the calling thread is a task of a multi-worker pool and the
+    /// estimated multiply count crosses the threshold, the A rows split
+    /// into panels published as stealable subtasks
+    /// ([`crate::mapreduce::executor::run_subtasks`]), each producing
+    /// an independent CSR fragment that is concatenated afterwards.
+    /// Rows are computed identically regardless of the split, so the
+    /// result is bit-for-bit equal to the sequential SpGEMM.
+    pub fn spgemm_par_sr<S: Semiring>(&self, other: &CsrMatrix) -> CsrMatrix {
+        use crate::mapreduce::executor::{current_pool_width, run_subtasks, subtask_tiling};
+        assert_eq!(self.cols, other.rows, "inner dimensions must agree");
+        let width = current_pool_width();
+        // Expected multiplies: every A entry (i,k) touches nnz(B_k) ≈
+        // nnz(B)/rows(B) on average — an O(1) estimate of the flop
+        // count that gates the split.
+        let est = self.nnz() as f64 * other.nnz() as f64 / other.rows.max(1) as f64;
+        if !subtask_tiling() || width <= 1 || self.rows < 2 || est < SPGEMM_PAR_MIN_MULS as f64 {
+            return self.spgemm_sr::<S>(other);
+        }
+        let panels = self.rows.min(2 * width);
+        let rows_pp = self.rows.div_ceil(panels);
+        let num_panels = self.rows.div_ceil(rows_pp);
+        // Each panel slot is written by exactly one subtask; OnceLock
+        // is the lock-free way to say so.
+        let mut parts: Vec<std::sync::OnceLock<CsrPanel>> = Vec::with_capacity(num_panels);
+        for _ in 0..num_panels {
+            parts.push(std::sync::OnceLock::new());
+        }
+        run_subtasks(num_panels, |p| {
+            let r0 = p * rows_pp;
+            let r1 = (r0 + rows_pp).min(self.rows);
+            let panel = self.spgemm_rows_sr::<S>(other, r0, r1);
+            parts[p].set(panel).expect("panel written once");
+        });
+        // Concatenate the fragments in panel order.
+        let mut row_ptr: Vec<u32> = Vec::with_capacity(self.rows + 1);
+        let mut col_idx: Vec<u32> = vec![];
+        let mut values: Vec<f32> = vec![];
+        row_ptr.push(0u32);
+        for cell in parts {
+            let (rp, ci, vs) = cell.into_inner().expect("panel computed");
+            let base = col_idx.len() as u32;
+            row_ptr.extend(rp[1..].iter().map(|&x| base + x));
+            col_idx.extend_from_slice(&ci);
+            values.extend_from_slice(&vs);
+        }
+        CsrMatrix {
+            rows: self.rows,
+            cols: other.cols,
             row_ptr,
             col_idx,
             values,
@@ -335,6 +413,12 @@ impl CsrMatrix {
     /// Arithmetic SpGEMM.
     pub fn spgemm(&self, other: &CsrMatrix) -> CsrMatrix {
         self.spgemm_sr::<Arithmetic>(other)
+    }
+
+    /// Arithmetic SpGEMM with stealable row panels (the sparse
+    /// reducer's local multiply; see [`Self::spgemm_par_sr`]).
+    pub fn spgemm_par(&self, other: &CsrMatrix) -> CsrMatrix {
+        self.spgemm_par_sr::<Arithmetic>(other)
     }
 
     /// Semiring sparse addition `self ⊕ other`: a direct two-pointer
@@ -725,5 +809,41 @@ mod tests {
         m.push(1, 1, 1.0);
         let csr = m.to_csr();
         assert_eq!(csr.words(), 2 * 2 + 5);
+    }
+
+    #[test]
+    fn par_spgemm_bit_identical_on_a_pool() {
+        use crate::mapreduce::executor::Pool;
+        // Dense enough that the estimated multiply count crosses the
+        // split threshold: 512 rows × ~32 nnz/row each side.
+        let side = 512;
+        let mut rng = Xoshiro256ss::new(77);
+        let a = gen::erdos_renyi_coo(side, 32.0 / side as f64, &mut rng).to_csr();
+        let b = gen::erdos_renyi_coo(side, 32.0 / side as f64, &mut rng).to_csr();
+        let seq = a.spgemm_sr::<Arithmetic>(&b);
+        let pool = Pool::new(8);
+        let stats0 = pool.stats();
+        let par = pool
+            .run_indexed(1, |_| a.spgemm_par_sr::<Arithmetic>(&b))
+            .remove(0);
+        assert_eq!(seq, par, "row-panel SpGEMM must be bit-identical");
+        assert!(
+            pool.stats().subtasks > stats0.subtasks,
+            "row panels must actually engage"
+        );
+    }
+
+    #[test]
+    fn par_spgemm_small_instance_stays_sequential() {
+        use crate::mapreduce::executor::Pool;
+        let mut rng = Xoshiro256ss::new(78);
+        let a = random_coo(20, 20, 40, &mut rng).to_csr();
+        let b = random_coo(20, 20, 40, &mut rng).to_csr();
+        let seq = a.spgemm(&b);
+        let pool = Pool::new(4);
+        let s0 = pool.stats();
+        let par = pool.run_indexed(1, |_| a.spgemm_par(&b)).remove(0);
+        assert_eq!(seq, par);
+        assert_eq!(pool.stats().subtasks, s0.subtasks, "no panels for a tiny SpGEMM");
     }
 }

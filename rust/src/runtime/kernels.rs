@@ -5,12 +5,24 @@
 //! * [`gemm_acc`] — register-tiled f32 GEMM (`C += A·B`): MR×NR
 //!   register accumulator blocks over packed B column panels, with the
 //!   k-loop tiled so each packed panel stays in cache across all row
-//!   blocks. This is the arithmetic hot path behind
-//!   [`NativeMultiply`](super::native::NativeMultiply).
-//! * [`gemm_acc_sr`] — generic tiled semiring GEMM (`C ⊕= A ⊗ B`) in
-//!   the same `i-k-j` contiguous-row layout; `(min,+)` and `(∨,∧)`
-//!   products (APSP / transitive-closure reductions) run through it
-//!   instead of the naive `get()`-based triple loop.
+//!   blocks. The MR/NR shape is **autotuned** once per process: a small
+//!   fixed candidate set ([`TILE_CANDIDATES`]) is probed at pool
+//!   startup ([`ensure_tuned`], triggered by the executor's first
+//!   spawn) and the winner is cached — SIMD-width differences between
+//!   hosts pick different register blocks without recompiling.
+//! * [`gemm_acc_par`] — the same kernel with **intra-task tile
+//!   parallelism**: when the calling thread is a pool task and the
+//!   product volume crosses [`PAR_MIN_VOLUME`], the C rows are split
+//!   into MR-aligned row panels published as stealable subtasks
+//!   ([`crate::mapreduce::executor::run_subtasks`]). Panels write
+//!   disjoint C row ranges, so no locking — and because every panel
+//!   boundary is a multiple of the register-block height MR, each row
+//!   sees exactly the accumulation order of the sequential kernel: the
+//!   parallel result is **bit-identical** to [`gemm_acc`].
+//! * [`gemm_acc_sr`] / [`gemm_acc_sr_par`] — generic tiled semiring
+//!   GEMM (`C ⊕= A ⊗ B`) in the same `i-k-j` contiguous-row layout
+//!   (rows are fully independent, so its row-panel split is trivially
+//!   bit-identical); `(min,+)` and `(∨,∧)` products run through it.
 //! * [`gemm_acc_ikj`] — the pre-overhaul vectorised scalar row loop,
 //!   kept as the perf baseline the tiled kernel is benchmarked against
 //!   (`m3 bench-kernels`).
@@ -18,43 +30,72 @@
 //! The naive triple loops in [`crate::matrix::DenseMatrix`]
 //! (`matmul_naive` / `matmul_naive_sr`) remain the correctness oracles;
 //! the property tests below pin each kernel against them bit-for-bit on
-//! integer-valued inputs at shapes that straddle every tile boundary.
+//! integer-valued inputs at shapes that straddle every tile boundary,
+//! and the parallel entry points against their sequential twins
+//! bit-for-bit on *fractional* inputs (which pins the accumulation
+//! order itself).
 //!
-//! The sparse counterpart (epoch-marked Gustavson SpGEMM, merged-row
-//! CSR add/sum) lives with the CSR representation in
-//! [`crate::matrix::sparse`].
+//! The sparse counterpart (epoch-marked Gustavson SpGEMM with the same
+//! row-panel subtask split, merged-row CSR add/sum) lives with the CSR
+//! representation in [`crate::matrix::sparse`].
 
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::mapreduce::executor::{current_pool_width, run_subtasks, subtask_tiling};
 use crate::matrix::semiring::Semiring;
 
-/// Rows per register block: MR accumulator rows are held in registers
-/// across the entire k-tile.
+/// Default rows per register block: MR accumulator rows are held in
+/// registers across the entire k-tile.
 pub const MR: usize = 4;
 
-/// Columns per register block / packed-panel width: NR accumulator
-/// lanes per row, sized for two 4-wide SIMD registers.
+/// Default columns per register block / packed-panel width: NR
+/// accumulator lanes per row, sized for two 4-wide SIMD registers.
 pub const NR: usize = 8;
 
 /// k-tile length: the packed `KB × NR` B panel (8 KiB at f32) stays in
 /// L1 while every MR-row block of A streams over it.
 pub const KB: usize = 256;
 
-/// Pack the `[k0, k1) × [j0, j0+NR)` tile of row-major `b` into
-/// `packb` so the microkernel reads it as contiguous NR-wide rows.
+/// Widest candidate NR (sizes the packed-panel scratch buffer).
+pub const NR_MAX: usize = 16;
+
+/// The fixed candidate register-tile shapes the autotuner probes, in
+/// preference order (ties go to the earlier entry). `(4, 8)` is the
+/// portable default; wider NR suits 8-lane SIMD, taller MR suits
+/// register-rich targets.
+pub const TILE_CANDIDATES: &[(usize, usize)] = &[(4, 8), (8, 8), (4, 16), (2, 16)];
+
+/// Product volume `m·k·n` below which a local GEMM is not worth
+/// splitting into stealable tiles (a 64³ block product sits exactly on
+/// the threshold).
+pub const PAR_MIN_VOLUME: usize = 64 * 64 * 64;
+
+/// Pack the `[k0, k1) × [j0, j0+nr)` tile of row-major `b` into
+/// `packb` so the microkernel reads it as contiguous nr-wide rows.
 #[inline]
-fn pack_b_panel(b: &[f32], n: usize, k0: usize, k1: usize, j0: usize, packb: &mut [f32]) {
+fn pack_b_panel(
+    b: &[f32],
+    n: usize,
+    k0: usize,
+    k1: usize,
+    j0: usize,
+    nr: usize,
+    packb: &mut [f32],
+) {
     for (kk, krow) in (k0..k1).enumerate() {
-        let src = &b[krow * n + j0..krow * n + j0 + NR];
-        packb[kk * NR..kk * NR + NR].copy_from_slice(src);
+        let src = &b[krow * n + j0..krow * n + j0 + nr];
+        packb[kk * nr..kk * nr + nr].copy_from_slice(src);
     }
 }
 
-/// MR×NR microkernel: accumulate the k-tile product into the register
+/// MRV×NRV microkernel: accumulate the k-tile product into the register
 /// block, then flush it into `c_tile`. `a_tile`/`c_tile` are the full
 /// row-major slices offset to the block's top-left corner (strides
-/// `lda`/`ldc`). The `MR`/`NR` loops have constant bounds, so they
+/// `lda`/`ldc`). The `MRV`/`NRV` loops have constant bounds, so they
 /// unroll into straight-line FMAs.
 #[inline]
-fn microkernel(
+fn microkernel<const MRV: usize, const NRV: usize>(
     kt: usize,
     a_tile: &[f32],
     lda: usize,
@@ -62,68 +103,78 @@ fn microkernel(
     c_tile: &mut [f32],
     ldc: usize,
 ) {
-    let mut acc = [[0.0f32; NR]; MR];
+    let mut acc = [[0.0f32; NRV]; MRV];
     for kk in 0..kt {
-        let bp = &packb[kk * NR..kk * NR + NR];
+        let bp = &packb[kk * NRV..kk * NRV + NRV];
         for (r, accr) in acc.iter_mut().enumerate() {
             let av = a_tile[r * lda + kk];
-            for jj in 0..NR {
+            for jj in 0..NRV {
                 accr[jj] += av * bp[jj];
             }
         }
     }
     for (r, accr) in acc.iter().enumerate() {
-        let crow = &mut c_tile[r * ldc..r * ldc + NR];
-        for jj in 0..NR {
+        let crow = &mut c_tile[r * ldc..r * ldc + NRV];
+        for jj in 0..NRV {
             crow[jj] += accr[jj];
         }
     }
 }
 
-/// Register-tiled `c += a·b` on raw row-major slices.
-///
-/// `a`: `m×k`, `b`: `k×n`, `c`: `m×n`. Full `MR × NR` tiles go through
-/// the packed microkernel; row and column remainders fall back to the
-/// scalar row loop so every shape is supported.
-pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
+/// Register-tiled `c += a·b` at a fixed MRV×NRV register-block shape.
+/// Full tiles go through the packed microkernel; row and column
+/// remainders fall back to the scalar row loop so every shape is
+/// supported.
+fn gemm_acc_shape<const MRV: usize, const NRV: usize>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    let n_main = n - n % NR; // columns covered by full packed panels
-    let m_main = m - m % MR; // rows covered by full register blocks
-    let mut packb = [0.0f32; KB * NR];
+    let n_main = n - n % NRV; // columns covered by full packed panels
+    let m_main = m - m % MRV; // rows covered by full register blocks
+    let mut packb = [0.0f32; KB * NR_MAX];
     let mut k0 = 0;
     while k0 < k {
         let k1 = (k0 + KB).min(k);
         let kt = k1 - k0;
         let mut j0 = 0;
         while j0 < n_main {
-            // One pack per (k-tile, panel) amortised over all m/MR
+            // One pack per (k-tile, panel) amortised over all m/MRV
             // register blocks.
-            pack_b_panel(b, n, k0, k1, j0, &mut packb);
+            pack_b_panel(b, n, k0, k1, j0, NRV, &mut packb);
             let mut i0 = 0;
             while i0 < m_main {
-                microkernel(kt, &a[i0 * k + k0..], k, &packb, &mut c[i0 * n + j0..], n);
-                i0 += MR;
+                microkernel::<MRV, NRV>(
+                    kt,
+                    &a[i0 * k + k0..],
+                    k,
+                    &packb,
+                    &mut c[i0 * n + j0..],
+                    n,
+                );
+                i0 += MRV;
             }
             // Row remainder against the packed panel.
             for i in m_main..m {
                 let arow = &a[i * k..(i + 1) * k];
-                let crow = &mut c[i * n + j0..i * n + j0 + NR];
+                let crow = &mut c[i * n + j0..i * n + j0 + NRV];
                 for kk in 0..kt {
                     let av = arow[k0 + kk];
-                    let bp = &packb[kk * NR..kk * NR + NR];
-                    for jj in 0..NR {
+                    let bp = &packb[kk * NRV..kk * NRV + NRV];
+                    for jj in 0..NRV {
                         crow[jj] += av * bp[jj];
                     }
                 }
             }
-            j0 += NR;
+            j0 += NRV;
         }
-        // Column remainder (n % NR) for all rows: scalar row loop. No
+        // Column remainder (n % NRV) for all rows: scalar row loop. No
         // zero-skip here — the microkernel path has none, so every
         // output column sees identical `c += a*b` IEEE semantics.
         if n_main < n {
@@ -141,6 +192,161 @@ pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32
         }
         k0 = k1;
     }
+}
+
+/// Dispatch to the monomorphized kernel for `(mr, nr)`; unknown shapes
+/// fall back to the default `(MR, NR)` instantiation.
+fn gemm_acc_dispatch(
+    shape: (usize, usize),
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    match shape {
+        (8, 8) => gemm_acc_shape::<8, 8>(m, k, n, a, b, c),
+        (4, 16) => gemm_acc_shape::<4, 16>(m, k, n, a, b, c),
+        (2, 16) => gemm_acc_shape::<2, 16>(m, k, n, a, b, c),
+        _ => gemm_acc_shape::<MR, NR>(m, k, n, a, b, c),
+    }
+}
+
+/// One probed candidate of the MR/NR autotune.
+#[derive(Debug, Clone, Copy)]
+pub struct TileProbe {
+    /// Register-block rows.
+    pub mr: usize,
+    /// Register-block columns.
+    pub nr: usize,
+    /// Best-of-reps seconds for the probe GEMM.
+    pub secs: f64,
+}
+
+/// Result of the one-shot register-tile autotune, cached for the whole
+/// process and surfaced by `m3 bench-kernels --json`.
+#[derive(Debug, Clone)]
+pub struct AutotuneReport {
+    /// The winning `(mr, nr)` shape every `gemm_acc`-family call uses.
+    pub chosen: (usize, usize),
+    /// All probed candidates with their timings.
+    pub candidates: Vec<TileProbe>,
+}
+
+static TUNED: OnceLock<AutotuneReport> = OnceLock::new();
+
+fn probe_shapes() -> AutotuneReport {
+    use crate::util::rng::Xoshiro256ss;
+    // One full k-tile, several register blocks in each dimension —
+    // large enough to rank shapes, small enough to probe in
+    // milliseconds at pool startup.
+    const M: usize = 64;
+    const K: usize = 256;
+    const N: usize = 64;
+    const REPS: usize = 3;
+    let mut rng = Xoshiro256ss::new(0xA070);
+    let a: Vec<f32> = (0..M * K).map(|_| rng.range_u64(0, 255) as f32 / 16.0).collect();
+    let b: Vec<f32> = (0..K * N).map(|_| rng.range_u64(0, 255) as f32 / 16.0).collect();
+    let mut candidates = Vec::with_capacity(TILE_CANDIDATES.len());
+    let mut chosen = TILE_CANDIDATES[0];
+    let mut best = f64::INFINITY;
+    for &(mr, nr) in TILE_CANDIDATES {
+        let mut c = vec![0.0f32; M * N];
+        gemm_acc_dispatch((mr, nr), M, K, N, &a, &b, &mut c); // warm-up
+        let mut secs = f64::INFINITY;
+        for _ in 0..REPS {
+            let t = Instant::now();
+            gemm_acc_dispatch((mr, nr), M, K, N, &a, &b, &mut c);
+            secs = secs.min(t.elapsed().as_secs_f64());
+        }
+        std::hint::black_box(&c);
+        candidates.push(TileProbe { mr, nr, secs });
+        if secs < best {
+            best = secs;
+            chosen = (mr, nr);
+        }
+    }
+    AutotuneReport { chosen, candidates }
+}
+
+/// The cached autotune result (probing on first use).
+pub fn autotune_report() -> &'static AutotuneReport {
+    TUNED.get_or_init(probe_shapes)
+}
+
+/// The `(mr, nr)` register-block shape in use.
+pub fn tuned_shape() -> (usize, usize) {
+    autotune_report().chosen
+}
+
+/// Run the autotune probe now if it has not run yet. Called at pool
+/// startup ([`crate::mapreduce::executor::Pool`] spawning its workers)
+/// so the probe's cost lands outside timed rounds.
+pub fn ensure_tuned() {
+    let _ = autotune_report();
+}
+
+/// Register-tiled `c += a·b` on raw row-major slices, at the autotuned
+/// register-block shape.
+///
+/// `a`: `m×k`, `b`: `k×n`, `c`: `m×n`. Deterministic within a process:
+/// the tuned shape is probed once and cached, so repeated runs produce
+/// bit-identical results.
+pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    gemm_acc_dispatch(tuned_shape(), m, k, n, a, b, c);
+}
+
+/// Disjoint-panel output pointer ferried into tile subtasks. Each
+/// subtask manufactures a `&mut` slice over its own row range only.
+struct SendPtr(*mut f32);
+// SAFETY: subtasks write disjoint row panels (see `gemm_acc_par`), and
+// the spawning call joins before the buffer is touched again.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// [`gemm_acc`] with intra-task tile parallelism: when the calling
+/// thread is a task of a multi-worker pool and `m·k·n ≥`
+/// [`PAR_MIN_VOLUME`], the C rows split into MR-aligned row panels
+/// published as stealable subtasks; idle workers steal panels instead
+/// of waiting out one oversized local multiply.
+///
+/// **Ownership rule:** each panel owns a disjoint `[i0, i1) × n` slice
+/// of `c` — no two subtasks ever touch the same C element, so there is
+/// no locking and no non-determinism. **Bit-identity:** every panel
+/// boundary is a multiple of the register-block height `mr`, so each
+/// row takes exactly the register/remainder path it takes in the
+/// sequential kernel — the result is bit-for-bit equal to
+/// [`gemm_acc`]'s regardless of worker count or stealing order.
+pub fn gemm_acc_par(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let width = current_pool_width();
+    let (mr, nr) = tuned_shape();
+    if !subtask_tiling() || width <= 1 || m < 2 * mr || m * k * n < PAR_MIN_VOLUME {
+        gemm_acc_dispatch((mr, nr), m, k, n, a, b, c);
+        return;
+    }
+    // MR-aligned row panels, about two per worker so stealing can
+    // rebalance mid-flight.
+    let blocks = m / mr;
+    let panels = blocks.min(2 * width);
+    let rows_pp = blocks.div_ceil(panels) * mr;
+    let num_panels = m.div_ceil(rows_pp);
+    let cp = SendPtr(c.as_mut_ptr());
+    run_subtasks(num_panels, |p| {
+        let i0 = p * rows_pp;
+        let i1 = (i0 + rows_pp).min(m);
+        // SAFETY: panels cover disjoint row ranges [i0, i1); each
+        // subtask writes only its own C rows, and `run_subtasks` joins
+        // before `c` is read again.
+        let cpan = unsafe { std::slice::from_raw_parts_mut(cp.0.add(i0 * n), (i1 - i0) * n) };
+        gemm_acc_dispatch((mr, nr), i1 - i0, k, n, &a[i0 * k..i1 * k], b, cpan);
+    });
 }
 
 /// The pre-overhaul kernel: scalar `i-k-j` row loop with k-tiling, no
@@ -213,9 +419,43 @@ pub fn gemm_acc_sr<S: Semiring>(m: usize, k: usize, n: usize, a: &[f32], b: &[f3
     }
 }
 
+/// [`gemm_acc_sr`] with the same stealable row-panel split as
+/// [`gemm_acc_par`]. The semiring kernel's rows are fully independent
+/// (no register blocking), so any row split is trivially bit-identical
+/// to the sequential kernel.
+pub fn gemm_acc_sr_par<S: Semiring>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let width = current_pool_width();
+    if !subtask_tiling() || width <= 1 || m < 2 || m * k * n < PAR_MIN_VOLUME {
+        gemm_acc_sr::<S>(m, k, n, a, b, c);
+        return;
+    }
+    let panels = m.min(2 * width);
+    let rows_pp = m.div_ceil(panels);
+    let num_panels = m.div_ceil(rows_pp);
+    let cp = SendPtr(c.as_mut_ptr());
+    run_subtasks(num_panels, |p| {
+        let i0 = p * rows_pp;
+        let i1 = (i0 + rows_pp).min(m);
+        // SAFETY: disjoint row panels; see `gemm_acc_par`.
+        let cpan = unsafe { std::slice::from_raw_parts_mut(cp.0.add(i0 * n), (i1 - i0) * n) };
+        gemm_acc_sr::<S>(i1 - i0, k, n, &a[i0 * k..i1 * k], b, cpan);
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mapreduce::executor::Pool;
     use crate::matrix::gen;
     use crate::matrix::semiring::{Arithmetic, BoolOrAnd, MinPlus};
     use crate::matrix::DenseMatrix;
@@ -274,6 +514,50 @@ mod tests {
     }
 
     #[test]
+    fn every_candidate_shape_matches_naive() {
+        // The autotuner may pick any candidate on any host; each must
+        // be exact at shapes that straddle its own tile boundaries.
+        let mut rng = Xoshiro256ss::new(4);
+        for &(mr, nr) in TILE_CANDIDATES {
+            for &(m, k, n) in &[
+                (1, 1, 1),
+                (mr - 1, 3, nr - 1),
+                (mr, 7, nr),
+                (2 * mr + 1, 257, 2 * nr + 3),
+                (3 * mr, KB, nr + 1),
+            ] {
+                let a = gen::dense_int(m, k, &mut rng);
+                let b = gen::dense_int(k, n, &mut rng);
+                let c = gen::dense_int(m, n, &mut rng);
+                let mut want = a.matmul_naive(&b);
+                want.add_assign(&c);
+                let mut got = c.clone();
+                gemm_acc_dispatch(
+                    (mr, nr),
+                    m,
+                    k,
+                    n,
+                    a.as_slice(),
+                    b.as_slice(),
+                    got.as_mut_slice(),
+                );
+                assert_eq!(got, want, "shape ({mr},{nr}) at {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn autotune_report_is_sane() {
+        let rep = autotune_report();
+        assert_eq!(rep.candidates.len(), TILE_CANDIDATES.len());
+        assert!(TILE_CANDIDATES.contains(&rep.chosen), "winner from the candidate set");
+        for p in &rep.candidates {
+            assert!(p.secs > 0.0, "({},{}) probed", p.mr, p.nr);
+        }
+        assert_eq!(tuned_shape(), rep.chosen, "cached winner is stable");
+    }
+
+    #[test]
     fn prop_tiled_gemm_matches_naive() {
         run_prop("register-tiled gemm == naive", 30, |case| {
             // Cross every tile size: m over MR, n over NR, k over KB.
@@ -311,6 +595,86 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Fractional entries whose partial sums are not exactly
+    /// representable — any change in accumulation order shows up in the
+    /// low bits, so equality here pins the fp order itself.
+    fn fractional(rows: usize, cols: usize, rng: &mut Xoshiro256ss) -> Vec<f32> {
+        (0..rows * cols)
+            .map(|_| (rng.range_u64(1, 1 << 20) as f32) / 1048576.0)
+            .collect()
+    }
+
+    #[test]
+    fn par_gemm_bit_identical_to_sequential_on_a_pool() {
+        // 70·300·40 = 840k ≥ PAR_MIN_VOLUME: the pool path splits into
+        // MR-aligned panels, which must not perturb a single bit.
+        let (m, k, n) = (70usize, 300usize, 40usize);
+        let mut rng = Xoshiro256ss::new(9);
+        let a = fractional(m, k, &mut rng);
+        let b = fractional(k, n, &mut rng);
+        let c0 = fractional(m, n, &mut rng);
+        let mut seq = c0.clone();
+        gemm_acc(m, k, n, &a, &b, &mut seq);
+        let pool = Pool::new(8);
+        let stats0 = pool.stats();
+        let par = pool
+            .run_indexed(1, |_| {
+                let mut out = c0.clone();
+                gemm_acc_par(m, k, n, &a, &b, &mut out);
+                out
+            })
+            .remove(0);
+        assert!(
+            pool.stats().subtasks > stats0.subtasks,
+            "tile subtasks must actually engage"
+        );
+        for (i, (x, y)) in seq.iter().zip(&par).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "bit mismatch at {i}");
+        }
+    }
+
+    #[test]
+    fn par_gemm_below_threshold_stays_sequential() {
+        let (m, k, n) = (8usize, 8usize, 8usize);
+        let mut rng = Xoshiro256ss::new(10);
+        let a = fractional(m, k, &mut rng);
+        let b = fractional(k, n, &mut rng);
+        let mut seq = vec![0.0f32; m * n];
+        gemm_acc(m, k, n, &a, &b, &mut seq);
+        let pool = Pool::new(4);
+        let s0 = pool.stats();
+        let par = pool
+            .run_indexed(1, |_| {
+                let mut out = vec![0.0f32; m * n];
+                gemm_acc_par(m, k, n, &a, &b, &mut out);
+                out
+            })
+            .remove(0);
+        assert_eq!(seq, par);
+        assert_eq!(pool.stats().subtasks, s0.subtasks, "no tiles for a tiny GEMM");
+    }
+
+    #[test]
+    fn par_semiring_gemm_bit_identical_on_a_pool() {
+        let (m, k, n) = (70usize, 300usize, 40usize);
+        let mut rng = Xoshiro256ss::new(11);
+        let a = fractional(m, k, &mut rng);
+        let b = fractional(k, n, &mut rng);
+        let mut seq = vec![0.0f32; m * n];
+        gemm_acc_sr::<Arithmetic>(m, k, n, &a, &b, &mut seq);
+        let pool = Pool::new(8);
+        let par = pool
+            .run_indexed(1, |_| {
+                let mut out = vec![0.0f32; m * n];
+                gemm_acc_sr_par::<Arithmetic>(m, k, n, &a, &b, &mut out);
+                out
+            })
+            .remove(0);
+        for (x, y) in seq.iter().zip(&par) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]
@@ -379,6 +743,8 @@ mod tests {
         gemm_acc(2, 0, 2, &[], &[], &mut c1);
         assert_eq!(c1, [7.0; 4]);
         gemm_acc_sr::<Arithmetic>(2, 0, 2, &[], &[], &mut c1);
+        assert_eq!(c1, [7.0; 4]);
+        gemm_acc_par(2, 0, 2, &[], &[], &mut c1);
         assert_eq!(c1, [7.0; 4]);
     }
 }

@@ -1,15 +1,20 @@
 //! Hand-written native GEMM backend.
 //!
 //! Backed by the register-tiled microkernel in
-//! [`kernels`](super::kernels) ([`gemm_acc`]): MR×NR register
-//! accumulator blocks with unrolled FMAs over packed B column panels,
-//! k-tiled so each panel stays in cache. Serves as the fallback when no
-//! XLA artifacts are present and as the baseline the XLA backend is
-//! benchmarked against (§Perf in EXPERIMENTS.md).
+//! [`kernels`](super::kernels) via the tile-parallel entry point
+//! ([`kernels::gemm_acc_par`]): autotuned MR×NR register accumulator
+//! blocks with unrolled FMAs over packed B column panels, k-tiled so
+//! each panel stays in cache — and, when the multiply runs inside a
+//! pool task and is big enough, split into MR-aligned row panels that
+//! idle workers steal (bit-identical to the sequential kernel). Serves
+//! as the fallback when no XLA artifacts are present and as the
+//! baseline the XLA backend is benchmarked against (§Perf in
+//! EXPERIMENTS.md).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
+use super::kernels::gemm_acc_par;
 use super::LocalMultiply;
 use crate::matrix::DenseMatrix;
 
@@ -43,7 +48,7 @@ impl LocalMultiply for NativeMultiply {
         assert_eq!(c.rows(), a.rows());
         assert_eq!(c.cols(), b.cols());
         let t0 = Instant::now();
-        gemm_acc(
+        gemm_acc_par(
             a.rows(),
             a.cols(),
             b.cols(),

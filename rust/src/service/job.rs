@@ -179,6 +179,10 @@ pub trait ActiveJob: Send {
     /// Cost-model prediction of round `round`'s duration in seconds —
     /// the scheduler's virtual-clock increment and SRPT signal.
     fn predicted_round_secs(&self, round: usize) -> f64;
+    /// Cluster slots the next round can occupy at task granularity
+    /// (0 when done) — the scheduler's gang-packing signal
+    /// ([`crate::mapreduce::slot_demand`]).
+    fn slot_demand(&self) -> usize;
     /// Predicted seconds of work left (including the pending round).
     fn predicted_remaining_secs(&self) -> f64 {
         (self.next_round()..self.num_rounds())
@@ -213,6 +217,9 @@ impl<A: MultiRoundAlgorithm + Send + 'static> ActiveJob for SteppedJob<A> {
     }
     fn predicted_round_secs(&self, round: usize) -> f64 {
         self.predicted[round]
+    }
+    fn slot_demand(&self) -> usize {
+        self.run.slot_demand()
     }
     fn step_commit(&mut self) -> RoundMetrics {
         self.run.step_commit()
@@ -434,6 +441,22 @@ mod tests {
     fn job_rounds_with_one_retry() -> usize {
         // q/ρ + 1 = 5 logical rounds + 1 discarded attempt.
         6
+    }
+
+    #[test]
+    fn slot_demand_positive_until_done_then_zero() {
+        let s = spec(JobKind::Dense3d {
+            side: 16,
+            block_side: 4,
+            rho: 2,
+        });
+        let mut job = spawn_job(&s, engine(), Arc::new(NaiveMultiply)).unwrap();
+        while !job.is_done() {
+            let d = job.slot_demand();
+            assert!((1..=engine().workers).contains(&d), "demand {d} within cluster width");
+            job.step_commit();
+        }
+        assert_eq!(job.slot_demand(), 0);
     }
 
     #[test]

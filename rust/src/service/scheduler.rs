@@ -1,19 +1,31 @@
 //! The round-level scheduler.
 //!
-//! The cluster (one [`EngineConfig`]-worth of slots) runs exactly one
+//! The cluster (one [`EngineConfig`]-worth of slots) normally runs one
 //! round at a time — Hadoop's barriers make a round an indivisible unit
-//! of cluster occupation. The scheduler's only decision point is the
-//! round boundary: after every committed (or preempted) round it picks,
+//! of cluster occupation. The scheduler's decision point is the round
+//! boundary: after every committed (or preempted) round it picks,
 //! under a [`Policy`], which active job's next round occupies the
 //! cluster. Jobs with small ρ expose more boundaries, so they interleave
 //! better under contention — the service-market argument of the paper,
 //! §1, made operational.
 //!
+//! **Gang-scheduling.** A round whose task-level slot demand
+//! ([`crate::mapreduce::slot_demand`]) is below the cluster width would
+//! strand the remaining slots. When the policy-picked round underfills
+//! the cluster and another active job's round fits the residual, the
+//! two rounds run **side by side** on the shared work-stealing pool
+//! (their task claims interleave on the same workers) and both commit
+//! at the round boundary. Gang rounds are marked in the trace
+//! ([`RoundTrace::gang`]); a preemption striking inside the window
+//! suppresses the gang for that turn so spot semantics stay
+//! single-victim.
+//!
 //! Time: scheduling runs on a deterministic *virtual clock* advanced by
 //! the cost-model prediction of each round (the same numbers SRPT
-//! ranks by), so a given seed and policy always produce the same
-//! schedule regardless of host speed; real wall times are recorded
-//! alongside for reporting.
+//! ranks by; a gang window advances by the longer of the pair), so a
+//! given seed and policy always produce the same schedule regardless
+//! of host speed; real wall times are recorded alongside for
+//! reporting.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -90,6 +102,9 @@ pub struct RoundTrace {
     pub duration_secs: f64,
     /// `false` when a spot preemption discarded this attempt.
     pub committed: bool,
+    /// `true` when this round ran gang-scheduled beside another job's
+    /// round (both share the same `start_secs`).
+    pub gang: bool,
 }
 
 /// A job that ran to completion.
@@ -116,6 +131,60 @@ struct Entry {
     spec: JobSpec,
     job: Box<dyn ActiveJob>,
     report: JobReport,
+}
+
+/// Book-keep one *committed* round attempt — service accounting,
+/// tenant share, and the trace entry — identically for solo and
+/// gang-scheduled rounds.
+#[allow(clippy::too_many_arguments)]
+fn record_commit(
+    e: &mut Entry,
+    round: usize,
+    pred: f64,
+    m: &crate::mapreduce::RoundMetrics,
+    clock: f64,
+    gang: bool,
+    trace: &mut Vec<RoundTrace>,
+    tenant_service: &mut BTreeMap<usize, f64>,
+) {
+    if e.report.first_service_secs.is_nan() {
+        e.report.first_service_secs = clock;
+    }
+    e.report.rounds_executed += 1;
+    e.report.service_secs += pred;
+    e.report.wall_secs += m.total_time().as_secs_f64();
+    *tenant_service.entry(e.spec.tenant).or_default() += pred;
+    trace.push(RoundTrace {
+        job: e.spec.id,
+        tenant: e.spec.tenant,
+        round,
+        start_secs: clock,
+        duration_secs: pred,
+        committed: true,
+        gang,
+    });
+}
+
+/// Retire the job at `active[i]` if all of its rounds have committed.
+fn retire_if_done(
+    active: &mut Vec<Entry>,
+    i: usize,
+    clock: f64,
+    reports: &mut Vec<JobReport>,
+    completed: &mut Vec<CompletedJob>,
+) {
+    if active[i].job.is_done() {
+        let ent = active.swap_remove(i);
+        let mut report = ent.report;
+        report.completion_secs = clock;
+        let (output, metrics) = ent.job.finish();
+        reports.push(report);
+        completed.push(CompletedJob {
+            spec: ent.spec,
+            output,
+            metrics,
+        });
+    }
 }
 
 /// Run `specs` to completion on the shared cluster under `cfg`.
@@ -172,6 +241,85 @@ pub fn run_service(
 
         // Pick the job whose round occupies the cluster next.
         let idx = pick(cfg.policy, &active, &tenant_service);
+
+        // Preemptions that struck an idle cluster or a round boundary
+        // in the past hit nothing.
+        while next_preempt < preempts.len() && preempts[next_preempt] < clock {
+            next_preempt += 1;
+        }
+
+        // Gang-scheduling: when the picked round underfills the
+        // cluster, back-fill the residual slots with the best-ranked
+        // other job whose round fits. A preemption inside the gang
+        // window falls back to solo scheduling so spot strikes keep a
+        // single victim.
+        let width = cfg.engine.workers.max(1);
+        let demand = active[idx].job.slot_demand();
+        let partner = if demand < width && active.len() > 1 {
+            pick_partner(cfg.policy, &active, &tenant_service, idx, width - demand)
+        } else {
+            None
+        };
+        if let Some(pidx) = partner {
+            let pred_a = active[idx]
+                .job
+                .predicted_round_secs(active[idx].job.next_round())
+                .max(1e-9);
+            let pred_b = active[pidx]
+                .job
+                .predicted_round_secs(active[pidx].job.next_round())
+                .max(1e-9);
+            let window = pred_a.max(pred_b);
+            let strike = next_preempt < preempts.len() && preempts[next_preempt] < clock + window;
+            if !strike {
+                // Both rounds occupy the cluster for the window: run
+                // them concurrently on the shared work-stealing pool.
+                let (lo, hi) = (idx.min(pidx), idx.max(pidx));
+                let (left, right) = active.split_at_mut(hi);
+                let (e_lo, e_hi) = (&mut left[lo], &mut right[0]);
+                let round_lo = e_lo.job.next_round();
+                let round_hi = e_hi.job.next_round();
+                let (m_lo, m_hi) = std::thread::scope(|s| {
+                    let h = s.spawn(|| e_hi.job.step_commit());
+                    let m_lo = e_lo.job.step_commit();
+                    let m_hi = match h.join() {
+                        Ok(m) => m,
+                        Err(p) => std::panic::resume_unwind(p),
+                    };
+                    (m_lo, m_hi)
+                });
+                // Record in (primary, partner) order for a
+                // deterministic trace.
+                let order = if idx == lo {
+                    [(lo, round_lo, pred_a, &m_lo), (hi, round_hi, pred_b, &m_hi)]
+                } else {
+                    [(hi, round_hi, pred_a, &m_hi), (lo, round_lo, pred_b, &m_lo)]
+                };
+                for (i, round, pred, m) in order {
+                    record_commit(
+                        &mut active[i],
+                        round,
+                        pred,
+                        m,
+                        clock,
+                        true,
+                        &mut trace,
+                        &mut tenant_service,
+                    );
+                }
+                clock += window;
+                // Retire completed jobs, higher index first so the
+                // lower swap_remove index stays valid (lo < hi by
+                // construction).
+                for i in [hi, lo] {
+                    retire_if_done(&mut active, i, clock, &mut reports, &mut completed);
+                }
+                continue;
+            }
+        }
+
+        // Even a soon-to-be-preempted attempt occupies the cluster, so
+        // first service is recorded before the strike check.
         let e = &mut active[idx];
         if e.report.first_service_secs.is_nan() {
             e.report.first_service_secs = clock;
@@ -179,11 +327,6 @@ pub fn run_service(
         let round = e.job.next_round();
         let pred = e.job.predicted_round_secs(round).max(1e-9);
 
-        // Preemptions that struck an idle cluster or a round boundary
-        // in the past hit nothing.
-        while next_preempt < preempts.len() && preempts[next_preempt] < clock {
-            next_preempt += 1;
-        }
         let strike = next_preempt < preempts.len() && preempts[next_preempt] < clock + pred;
         if strike {
             // Spot preemption mid-round: the in-flight round's partial
@@ -204,38 +347,25 @@ pub fn run_service(
                 start_secs: clock,
                 duration_secs: lost,
                 committed: false,
+                gang: false,
             });
             clock = at;
             continue;
         }
 
         let m = e.job.step_commit();
-        e.report.rounds_executed += 1;
-        e.report.service_secs += pred;
-        e.report.wall_secs += m.total_time().as_secs_f64();
-        *tenant_service.entry(e.spec.tenant).or_default() += pred;
-        trace.push(RoundTrace {
-            job: e.spec.id,
-            tenant: e.spec.tenant,
+        record_commit(
+            &mut active[idx],
             round,
-            start_secs: clock,
-            duration_secs: pred,
-            committed: true,
-        });
+            pred,
+            &m,
+            clock,
+            false,
+            &mut trace,
+            &mut tenant_service,
+        );
         clock += pred;
-
-        if e.job.is_done() {
-            let ent = active.swap_remove(idx);
-            let mut report = ent.report;
-            report.completion_secs = clock;
-            let (output, metrics) = ent.job.finish();
-            reports.push(report);
-            completed.push(CompletedJob {
-                spec: ent.spec,
-                output,
-                metrics,
-            });
-        }
+        retire_if_done(&mut active, idx, clock, &mut reports, &mut completed);
     }
 
     reports.sort_by_key(|r| r.job);
@@ -247,34 +377,72 @@ pub fn run_service(
     })
 }
 
-/// Pick the next job index under `policy` (deterministic tie-breaks:
-/// arrival instant, then job id).
+/// Policy ranking key — lower wins (deterministic tie-breaks: arrival
+/// instant, then job id).
+fn policy_key(
+    policy: Policy,
+    e: &Entry,
+    tenant_service: &BTreeMap<usize, f64>,
+) -> (f64, f64, usize) {
+    match policy {
+        Policy::Fifo => (0.0, e.spec.arrival_secs, e.spec.id),
+        Policy::Fair => (
+            tenant_service.get(&e.spec.tenant).copied().unwrap_or(0.0),
+            e.spec.arrival_secs,
+            e.spec.id,
+        ),
+        Policy::Srpt => (
+            e.job.predicted_remaining_secs(),
+            e.spec.arrival_secs,
+            e.spec.id,
+        ),
+    }
+}
+
+/// Pick the next job index under `policy`.
 fn pick(policy: Policy, active: &[Entry], tenant_service: &BTreeMap<usize, f64>) -> usize {
-    let key = |e: &Entry| -> (f64, f64, usize) {
-        match policy {
-            Policy::Fifo => (0.0, e.spec.arrival_secs, e.spec.id),
-            Policy::Fair => (
-                tenant_service.get(&e.spec.tenant).copied().unwrap_or(0.0),
-                e.spec.arrival_secs,
-                e.spec.id,
-            ),
-            Policy::Srpt => (
-                e.job.predicted_remaining_secs(),
-                e.spec.arrival_secs,
-                e.spec.id,
-            ),
-        }
-    };
     let mut best = 0usize;
-    let mut best_key = key(&active[0]);
+    let mut best_key = policy_key(policy, &active[0], tenant_service);
     for (i, e) in active.iter().enumerate().skip(1) {
-        let k = key(e);
+        let k = policy_key(policy, e, tenant_service);
         if k.partial_cmp(&best_key) == Some(std::cmp::Ordering::Less) {
             best = i;
             best_key = k;
         }
     }
     best
+}
+
+/// Best-ranked job other than `primary` whose next round fits in
+/// `residual` slots (`None` when nothing fits) — the gang-scheduling
+/// back-fill choice, ranked by the same policy key as `pick` so the
+/// pairing is deterministic.
+fn pick_partner(
+    policy: Policy,
+    active: &[Entry],
+    tenant_service: &BTreeMap<usize, f64>,
+    primary: usize,
+    residual: usize,
+) -> Option<usize> {
+    let mut best: Option<(usize, (f64, f64, usize))> = None;
+    for (i, e) in active.iter().enumerate() {
+        if i == primary {
+            continue;
+        }
+        let d = e.job.slot_demand();
+        if d == 0 || d > residual {
+            continue;
+        }
+        let k = policy_key(policy, e, tenant_service);
+        let better = match &best {
+            None => true,
+            Some((_, bk)) => k.partial_cmp(bk) == Some(std::cmp::Ordering::Less),
+        };
+        if better {
+            best = Some((i, k));
+        }
+    }
+    best.map(|(i, _)| i)
 }
 
 #[cfg(test)]
@@ -420,6 +588,97 @@ mod tests {
         let r = &out.metrics.jobs[0];
         assert_eq!(r.preemptions, 0);
         assert_eq!(r.discarded_secs, 0.0);
+    }
+
+    fn underfilled_engine() -> EngineConfig {
+        // 2-task rounds on an 8-slot cluster: each round's task-level
+        // demand is 2, so two rounds pack side by side.
+        EngineConfig {
+            map_tasks: 2,
+            reduce_tasks: 2,
+            workers: 8,
+        }
+    }
+
+    #[test]
+    fn gang_schedules_two_underfilled_rounds() {
+        let specs = vec![small3d(0, 0, 0.0, 2), small3d(1, 1, 0.0, 2)];
+        let c = ServiceConfig {
+            engine: underfilled_engine(),
+            policy: Policy::Fair,
+            preemptions: vec![],
+        };
+        let out = run(&specs, &c);
+        let gang: Vec<&RoundTrace> = out.trace.iter().filter(|t| t.gang).collect();
+        assert!(!gang.is_empty(), "underfilled rounds must gang: {:?}", out.trace);
+        // Gang rounds come in same-start pairs from different jobs.
+        for pair in gang.chunks(2) {
+            assert_eq!(pair.len(), 2);
+            assert_eq!(pair[0].start_secs, pair[1].start_secs);
+            assert_ne!(pair[0].job, pair[1].job);
+            assert!(pair[0].committed && pair[1].committed);
+        }
+        // Concurrency must not corrupt either product.
+        assert_eq!(out.completed.len(), 2);
+        for c in &out.completed {
+            assert!(c.output.matches(&c.spec), "job {} wrong product", c.spec.id);
+        }
+    }
+
+    #[test]
+    fn gang_never_fires_when_rounds_fill_the_cluster() {
+        let specs = vec![small3d(0, 0, 0.0, 2), small3d(1, 1, 0.0, 2)];
+        let out = run(&specs, &cfg(Policy::Fair)); // 4-slot engine, demand 4
+        assert!(out.trace.iter().all(|t| !t.gang), "full rounds must run solo");
+    }
+
+    #[test]
+    fn gang_scheduling_is_deterministic() {
+        let specs: Vec<JobSpec> = (0..4).map(|i| small3d(i, i % 2, 0.0, 2)).collect();
+        for policy in [Policy::Fifo, Policy::Fair, Policy::Srpt] {
+            let c = ServiceConfig {
+                engine: underfilled_engine(),
+                policy,
+                preemptions: vec![],
+            };
+            let a = run(&specs, &c);
+            let b = run(&specs, &c);
+            assert_eq!(a.trace, b.trace, "policy {policy:?} gang schedule must be deterministic");
+            assert!(a.trace.iter().any(|t| t.gang), "4 small jobs must gang somewhere");
+        }
+    }
+
+    #[test]
+    fn strike_in_window_suppresses_the_gang() {
+        // A preemption due inside the would-be gang window forces the
+        // solo path: the victim is single and spot accounting is
+        // unchanged.
+        let specs = vec![small3d(0, 0, 0.0, 2), small3d(1, 1, 0.0, 2)];
+        let probe = run(
+            &specs,
+            &ServiceConfig {
+                engine: underfilled_engine(),
+                policy: Policy::Fair,
+                preemptions: vec![],
+            },
+        );
+        let first = &probe.trace[0];
+        let strike_at = first.start_secs + 0.5 * first.duration_secs;
+        let out = run(
+            &specs,
+            &ServiceConfig {
+                engine: underfilled_engine(),
+                policy: Policy::Fair,
+                preemptions: vec![strike_at],
+            },
+        );
+        let discarded: Vec<&RoundTrace> = out.trace.iter().filter(|t| !t.committed).collect();
+        assert_eq!(discarded.len(), 1, "exactly one victim round");
+        assert!(!discarded[0].gang, "the struck round ran solo");
+        assert_eq!(out.metrics.jobs.iter().map(|j| j.preemptions).sum::<usize>(), 1);
+        for c in &out.completed {
+            assert!(c.output.matches(&c.spec));
+        }
     }
 
     #[test]
