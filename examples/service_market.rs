@@ -35,9 +35,8 @@ fn main() -> anyhow::Result<()> {
 
     for policy in [Policy::Fifo, Policy::Fair, Policy::Srpt] {
         let cfg = ServiceConfig {
-            engine,
-            policy,
             preemptions: vec![40.0, 120.0],
+            ..ServiceConfig::new(engine, policy)
         };
         let out = run_service(&specs, &cfg, Arc::new(NativeMultiply::new()))?;
         for c in &out.completed {

@@ -89,6 +89,7 @@ fn bench_service(b: &Bencher) {
         tenants: 3,
         seed: 11,
         mean_interarrival_secs: 20.0,
+        ..Default::default()
     };
     let r = b.bench("workload_generate_256_specs", || {
         generate(&WorkloadConfig {
@@ -106,11 +107,7 @@ fn bench_service(b: &Bencher) {
         workers: 4,
     };
     for policy in [Policy::Fifo, Policy::Fair, Policy::Srpt] {
-        let scfg = ServiceConfig {
-            engine,
-            policy,
-            preemptions: vec![],
-        };
+        let scfg = ServiceConfig::new(engine, policy);
         let r = b.bench(&format!("serve_8_jobs_{}", policy.name()), || {
             let out = run_service(&specs, &scfg, Arc::new(NativeMultiply::new())).unwrap();
             black_box(out.completed.len())

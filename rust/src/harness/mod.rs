@@ -7,10 +7,12 @@ pub mod ablations;
 pub mod engine_bench;
 pub mod figures;
 pub mod kernel_bench;
+pub mod planner_bench;
 pub mod service_report;
 
 pub use ablations::all_ablations;
 pub use engine_bench::{run_engine_bench, EngineBenchConfig, EngineBenchReport};
 pub use figures::{all_figures, figure, Report};
 pub use kernel_bench::{run_kernel_bench, KernelBenchConfig, KernelBenchReport};
+pub use planner_bench::{run_planner_bench, PlannerBenchConfig, PlannerBenchReport};
 pub use service_report::service_report;

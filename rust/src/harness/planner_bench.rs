@@ -1,0 +1,240 @@
+//! Planner benchmark: the auto-planner's chosen plan against the best
+//! and worst enumerated candidates on each paper profile, plus the
+//! mechanical context-dependence check (high-memory context → the
+//! monolithic plan; memory-constrained context → ρ < q).
+//!
+//! Two front-ends share this module: the `m3 bench-planner` CLI (which
+//! writes `BENCH_planner.json` for CI to assert on) and `m3 plan`'s
+//! underlying search. The JSON carries three machine-checked booleans:
+//!
+//! * `"best_is_argmin"` per entry — the chosen plan's predicted cost is
+//!   ≤ every feasible enumerated candidate's;
+//! * `"unconstrained_monolithic"` — the stock in-house profile picks
+//!   ρ = q (paper Figure 3);
+//! * `"constrained_rho_lt_q"` — the same search on a memory-starved
+//!   profile is forced to ρ < q (paper §1's execution-context claim).
+
+use crate::m3::autoplan::{plan_dense3d, plan_sparse3d, PlanSearch};
+use crate::simulator::ClusterProfile;
+use crate::util::table::Table;
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct PlannerBenchConfig {
+    /// Dense shape: matrix side √n.
+    pub dense_side: usize,
+    /// Sparse shape: matrix side √n.
+    pub sparse_side: usize,
+    /// Sparse shape: expected non-zeros per row.
+    pub nnz_per_row: usize,
+    /// Reducer-memory budget, words (paper scale: 3·4000²).
+    pub memory_budget: usize,
+    /// Per-node memory, bytes, of the synthetic memory-constrained
+    /// context (small enough that the monolithic round cannot fit).
+    pub constrained_mem_per_node: f64,
+}
+
+impl Default for PlannerBenchConfig {
+    fn default() -> Self {
+        Self {
+            dense_side: 32000,
+            sparse_side: 1 << 20,
+            nnz_per_row: 8,
+            memory_budget: 48_000_000,
+            constrained_mem_per_node: 4.0e9,
+        }
+    }
+}
+
+/// One (shape, profile) search summarised.
+#[derive(Debug, Clone)]
+pub struct PlannerEntry {
+    /// Shape label (`dense3d` / `sparse3d`).
+    pub shape: &'static str,
+    /// Profile name.
+    pub profile: &'static str,
+    /// Chosen plan label.
+    pub chosen: String,
+    /// Chosen plan's round count.
+    pub rounds: usize,
+    /// Chosen plan's predicted seconds.
+    pub chosen_secs: f64,
+    /// Cheapest enumerated candidate (feasible or not), seconds.
+    pub best_secs: f64,
+    /// Costliest enumerated candidate, seconds.
+    pub worst_secs: f64,
+    /// Number of enumerated candidates.
+    pub candidates: usize,
+    /// Chosen cost ≤ every feasible candidate's cost (recomputed from
+    /// the table, not assumed from the search).
+    pub best_is_argmin: bool,
+    /// Chosen plan uses ρ = q.
+    pub monolithic: bool,
+}
+
+fn summarise(shape: &'static str, profile: &ClusterProfile, search: &PlanSearch) -> PlannerEntry {
+    let chosen = search.chosen();
+    let feasible_min = search
+        .candidates
+        .iter()
+        .filter(|c| c.feasible)
+        .map(|c| c.total_secs)
+        .fold(f64::INFINITY, f64::min);
+    PlannerEntry {
+        shape,
+        profile: profile.name,
+        chosen: chosen.desc.label(),
+        rounds: chosen.rounds,
+        chosen_secs: chosen.total_secs,
+        best_secs: search.min_total_secs(),
+        worst_secs: search.max_total_secs(),
+        candidates: search.candidates.len(),
+        best_is_argmin: chosen.total_secs <= feasible_min,
+        monolithic: chosen.desc.is_monolithic(),
+    }
+}
+
+fn entry_json(e: &PlannerEntry) -> String {
+    format!(
+        "{{\"shape\":\"{}\",\"profile\":\"{}\",\"chosen\":\"{}\",\"rounds\":{},\
+         \"chosen_secs\":{:.6e},\"best_secs\":{:.6e},\"worst_secs\":{:.6e},\
+         \"candidates\":{},\"best_is_argmin\":{},\"monolithic\":{}}}",
+        e.shape,
+        e.profile,
+        e.chosen,
+        e.rounds,
+        e.chosen_secs,
+        e.best_secs,
+        e.worst_secs,
+        e.candidates,
+        e.best_is_argmin,
+        e.monolithic
+    )
+}
+
+/// Full benchmark result.
+#[derive(Debug, Clone)]
+pub struct PlannerBenchReport {
+    /// Human-readable report.
+    pub text: String,
+    /// Machine-readable JSON (the `BENCH_planner.json` payload).
+    pub json: String,
+    /// Per-(shape, profile) summaries.
+    pub entries: Vec<PlannerEntry>,
+    /// Context check: the stock in-house profile picked ρ = q.
+    pub unconstrained_monolithic: bool,
+    /// Context check: the memory-starved profile picked ρ < q.
+    pub constrained_rho_lt_q: bool,
+}
+
+/// Run the planner benchmark.
+pub fn run_planner_bench(cfg: &PlannerBenchConfig) -> PlannerBenchReport {
+    let profiles = [
+        ClusterProfile::inhouse(),
+        ClusterProfile::emr_c3_8xlarge(),
+        ClusterProfile::emr_i2_xlarge(),
+    ];
+    let mut text = String::new();
+    let mut entries = vec![];
+    text.push_str(&format!(
+        "planner bench: dense side {} / sparse side {} (k={}), budget {} words\n\n",
+        cfg.dense_side, cfg.sparse_side, cfg.nnz_per_row, cfg.memory_budget
+    ));
+
+    let mut t = Table::new(&[
+        "shape", "profile", "chosen", "rounds", "secs", "best", "worst", "cands",
+    ]);
+    for p in &profiles {
+        let (_, dense) = plan_dense3d(cfg.dense_side, cfg.memory_budget, p)
+            .expect("dense search must succeed on the paper profiles");
+        entries.push(summarise("dense3d", p, &dense));
+        let (_, sparse) = plan_sparse3d(cfg.sparse_side, cfg.nnz_per_row, cfg.memory_budget, p)
+            .expect("sparse search must succeed on the paper profiles");
+        entries.push(summarise("sparse3d", p, &sparse));
+    }
+    for e in &entries {
+        t.row(&[
+            e.shape.to_string(),
+            e.profile.to_string(),
+            e.chosen.clone(),
+            e.rounds.to_string(),
+            format!("{:.0}", e.chosen_secs),
+            format!("{:.0}", e.best_secs),
+            format!("{:.0}", e.worst_secs),
+            e.candidates.to_string(),
+        ]);
+    }
+    text.push_str(&format!("{}\n", t.render()));
+
+    // Context dependence: the same shape and budget, planned in a
+    // high-memory vs a memory-starved context.
+    let unconstrained = entries
+        .iter()
+        .find(|e| e.shape == "dense3d" && e.profile == "in-house-16")
+        .map(|e| e.monolithic)
+        .unwrap_or(false);
+    let starved = ClusterProfile::inhouse().with_mem_per_node(cfg.constrained_mem_per_node);
+    let (constrained_plan, constrained_search) =
+        plan_dense3d(cfg.dense_side, cfg.memory_budget, &starved)
+            .expect("a multi-round plan must fit the starved context");
+    let constrained_rho_lt_q = constrained_plan.rho < constrained_plan.q();
+    text.push_str(&format!(
+        "context dependence: in-house picks {} (monolithic: {unconstrained}); \
+         starved ({} B/node) picks rho={} of q={} over {} candidates\n",
+        entries[0].chosen,
+        cfg.constrained_mem_per_node,
+        constrained_plan.rho,
+        constrained_plan.q(),
+        constrained_search.candidates.len(),
+    ));
+
+    let entries_json: Vec<String> = entries.iter().map(entry_json).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"planner\",\n  \"config\": {{\"dense_side\":{},\"sparse_side\":{},\
+         \"nnz_per_row\":{},\"memory_budget\":{},\"constrained_mem_per_node\":{:.3e}}},\n  \
+         \"entries\": [{}],\n  \
+         \"context\": {{\"unconstrained_monolithic\":{},\"constrained_rho_lt_q\":{},\
+         \"constrained_chosen\":\"3d n={} b={} rho={}\"}}\n}}\n",
+        cfg.dense_side,
+        cfg.sparse_side,
+        cfg.nnz_per_row,
+        cfg.memory_budget,
+        cfg.constrained_mem_per_node,
+        entries_json.join(",\n              "),
+        unconstrained,
+        constrained_rho_lt_q,
+        constrained_plan.side,
+        constrained_plan.block_side,
+        constrained_plan.rho,
+    );
+    PlannerBenchReport {
+        text,
+        json,
+        entries,
+        unconstrained_monolithic: unconstrained,
+        constrained_rho_lt_q,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_argmin_and_context_dependence() {
+        let rep = run_planner_bench(&PlannerBenchConfig::default());
+        assert_eq!(rep.entries.len(), 6, "2 shapes × 3 profiles");
+        for e in &rep.entries {
+            assert!(e.best_is_argmin, "{} on {}: chosen must be argmin", e.shape, e.profile);
+            assert!(e.chosen_secs > 0.0 && e.worst_secs >= e.best_secs);
+        }
+        assert!(rep.unconstrained_monolithic, "in-house has memory to spare");
+        assert!(rep.constrained_rho_lt_q, "starved context must multi-round");
+        assert!(rep.json.contains("\"bench\": \"planner\""));
+        assert!(rep.json.contains("\"best_is_argmin\":true"));
+        assert!(!rep.json.contains("\"best_is_argmin\":false"));
+        assert!(rep.json.contains("\"unconstrained_monolithic\":true"));
+        assert!(rep.json.contains("\"constrained_rho_lt_q\":true"));
+        assert!(rep.text.contains("context dependence"));
+    }
+}

@@ -61,9 +61,8 @@ pub fn service_report() -> Report {
     let mut chart = BarChart::new("mean queue wait by policy", "s");
     for policy in [Policy::Fifo, Policy::Fair, Policy::Srpt] {
         let cfg = ServiceConfig {
-            engine,
-            policy,
             preemptions: preemptions.clone(),
+            ..ServiceConfig::new(engine, policy)
         };
         let out = run_service(&specs, &cfg, Arc::new(NativeMultiply::new()))
             .expect("skewed workload must run");

@@ -25,6 +25,8 @@
 use std::marker::PhantomData;
 use std::sync::Arc;
 
+use anyhow::{bail, Result};
+
 use crate::mapreduce::driver::MultiRoundAlgorithm;
 use crate::mapreduce::types::{Mapper, Partitioner, Reducer, Value};
 
@@ -88,17 +90,147 @@ impl From<Plan3d> for Geometry {
     }
 }
 
+/// A per-round ρ *schedule*: product round `r` computes `widths[r]`
+/// consecutive groups, with `Σ widths = q`. Uniform widths are the
+/// paper's fixed-ρ plan; a non-uniform tail is what the auto-planner's
+/// mid-job re-plan installs on the pending rounds.
+///
+/// Widths must be **non-decreasing**: round `r` carries `widths[r-1]`
+/// accumulator slots into round `r`, where slots `< widths[r-1]` keep
+/// accumulating and slots `[widths[r-1], widths[r])` start fresh. A
+/// shrinking width would strand accumulators with no group to join —
+/// hence re-plans may only widen the tail (fewer remaining rounds),
+/// never narrow it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RhoSchedule {
+    q: usize,
+    widths: Vec<usize>,
+    /// `offsets[r]` = first group of product round `r` (prefix sums of
+    /// `widths`, precomputed: [`Self::offset`] sits on the per-key
+    /// mapper/reducer hot path).
+    offsets: Vec<usize>,
+}
+
+impl RhoSchedule {
+    /// Validate and construct a schedule over `q` groups.
+    pub fn new(q: usize, widths: Vec<usize>) -> Result<Self> {
+        if q == 0 || widths.is_empty() {
+            bail!("schedule needs q ≥ 1 and at least one product round");
+        }
+        if widths.iter().any(|&w| w == 0) {
+            bail!("round widths must be positive: {widths:?}");
+        }
+        if widths.windows(2).any(|w| w[1] < w[0]) {
+            bail!("round widths must be non-decreasing: {widths:?}");
+        }
+        let total: usize = widths.iter().sum();
+        if total != q {
+            bail!("round widths sum to {total}, expected q = {q}");
+        }
+        let mut offsets = Vec::with_capacity(widths.len());
+        let mut acc = 0usize;
+        for &w in &widths {
+            offsets.push(acc);
+            acc += w;
+        }
+        Ok(Self { q, widths, offsets })
+    }
+
+    /// The uniform schedule of a fixed-ρ plan (`q/ρ` rounds of `ρ`).
+    ///
+    /// # Panics
+    /// Panics unless `1 ≤ ρ ≤ q` and `ρ | q` (what [`Plan3d`] validates).
+    pub fn uniform(q: usize, rho: usize) -> Self {
+        assert!(
+            (1..=q).contains(&rho) && q % rho == 0,
+            "invalid uniform rho={rho} q={q}"
+        );
+        Self::new(q, vec![rho; q / rho]).expect("uniform schedules are valid by construction")
+    }
+
+    /// Blocks per dimension `q`.
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    /// Per-product-round group widths.
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    /// Number of product rounds.
+    pub fn product_rounds(&self) -> usize {
+        self.widths.len()
+    }
+
+    /// Total rounds (product rounds + the final summation round).
+    pub fn rounds(&self) -> usize {
+        self.widths.len() + 1
+    }
+
+    /// Is `r` the final (summation) round?
+    pub fn is_final(&self, r: usize) -> bool {
+        r + 1 == self.rounds()
+    }
+
+    /// Width of product round `r`.
+    pub fn width(&self, r: usize) -> usize {
+        self.widths[r]
+    }
+
+    /// First group index of product round `r` (precomputed prefix sum).
+    pub fn offset(&self, r: usize) -> usize {
+        self.offsets[r]
+    }
+
+    /// Accumulator slots carried *into* round `r` (0 for round 0; the
+    /// final round receives the last product round's width).
+    pub fn carried_width(&self, r: usize) -> usize {
+        if r == 0 {
+            0
+        } else {
+            self.widths[r - 1]
+        }
+    }
+
+    /// Replace the widths from product round `from_round` on with
+    /// `tail`, keeping the committed prefix; the combined schedule is
+    /// re-validated (sum `q`, non-decreasing across the splice).
+    pub fn with_tail(&self, from_round: usize, tail: Vec<usize>) -> Result<Self> {
+        if from_round > self.widths.len() {
+            bail!(
+                "tail starts at product round {from_round}, schedule has {}",
+                self.widths.len()
+            );
+        }
+        let mut widths = self.widths[..from_round].to_vec();
+        widths.extend(tail);
+        Self::new(self.q, widths)
+    }
+}
+
+impl From<Geometry> for RhoSchedule {
+    fn from(g: Geometry) -> Self {
+        RhoSchedule::uniform(g.q, g.rho)
+    }
+}
+
 /// Map function of Algorithm 1.
 pub struct Mapper3d<P> {
-    geo: Geometry,
+    sched: RhoSchedule,
     _pd: PhantomData<fn() -> P>,
 }
 
 impl<P> Mapper3d<P> {
-    /// New mapper for the given geometry.
+    /// New mapper for the given (uniform-ρ) geometry.
     pub fn new(geo: Geometry) -> Self {
+        Self::with_schedule(geo.into())
+    }
+
+    /// New mapper for an explicit ρ schedule.
+    pub fn with_schedule(sched: RhoSchedule) -> Self {
         Self {
-            geo,
+            sched,
             _pd: PhantomData,
         }
     }
@@ -106,17 +238,19 @@ impl<P> Mapper3d<P> {
 
 impl<P: Block3d> Mapper<TripleKey, P> for Mapper3d<P> {
     fn map(&self, round: usize, key: &TripleKey, value: &P, emit: &mut dyn FnMut(TripleKey, P)) {
-        let Geometry { q, rho } = self.geo;
-        let last = self.geo.is_final(round);
+        let q = self.sched.q();
+        let last = self.sched.is_final(round);
         match value.tag() {
             Tag::A => {
                 if last {
                     return; // A is not consumed by the summation round
                 }
                 // key = (i, -1, k): block A[i,k]; k is the inner index.
+                // Round `round` computes groups offset..offset+width.
+                let offset = self.sched.offset(round) as isize;
                 let (i, k) = (key.i as isize, key.j as isize);
-                for l in 0..rho {
-                    let j = umod(k - i - l as isize - (round * rho) as isize, q);
+                for l in 0..self.sched.width(round) {
+                    let j = umod(k - i - l as isize - offset, q);
                     emit(
                         TripleKey::new(key.i as usize, key.j as usize, j),
                         value.clone(),
@@ -128,9 +262,10 @@ impl<P: Block3d> Mapper<TripleKey, P> for Mapper3d<P> {
                     return;
                 }
                 // key = (k, -1, j): block B[k,j]; k is the inner index.
+                let offset = self.sched.offset(round) as isize;
                 let (k, j) = (key.i as isize, key.j as isize);
-                for l in 0..rho {
-                    let i = umod(k - j - l as isize - (round * rho) as isize, q);
+                for l in 0..self.sched.width(round) {
+                    let i = umod(k - j - l as isize - offset, q);
                     emit(
                         TripleKey::new(i, key.i as usize, key.j as usize),
                         value.clone(),
@@ -138,13 +273,18 @@ impl<P: Block3d> Mapper<TripleKey, P> for Mapper3d<P> {
                 }
             }
             Tag::C => {
-                // key = (i, ℓ', j): accumulator C^ℓ'.
+                // key = (i, ℓ', j): accumulator C^ℓ' from the previous
+                // round, which had `carried_width(round)` slots.
                 let (i, l, j) = (key.i as usize, key.h as usize, key.j as usize);
-                debug_assert!(l < rho, "carry slot {l} out of range (rho={rho})");
+                debug_assert!(
+                    l < self.sched.carried_width(round),
+                    "carry slot {l} out of range (round {round})"
+                );
                 if last {
                     emit(TripleKey::io(i, j), value.clone());
                 } else {
-                    let h = (i + j + l + round * rho) % q;
+                    // Slot ℓ' continues as group offset+ℓ' this round.
+                    let h = (i + j + l + self.sched.offset(round)) % q;
                     emit(TripleKey::new(i, h, j), value.clone());
                 }
             }
@@ -154,14 +294,19 @@ impl<P: Block3d> Mapper<TripleKey, P> for Mapper3d<P> {
 
 /// Reduce function of Algorithm 1.
 pub struct Reducer3d<P: Block3d> {
-    geo: Geometry,
+    sched: RhoSchedule,
     ops: Arc<dyn BlockOps<P>>,
 }
 
 impl<P: Block3d> Reducer3d<P> {
-    /// New reducer with the payload algebra `ops`.
+    /// New reducer with the payload algebra `ops` (uniform-ρ geometry).
     pub fn new(geo: Geometry, ops: Arc<dyn BlockOps<P>>) -> Self {
-        Self { geo, ops }
+        Self::with_schedule(geo.into(), ops)
+    }
+
+    /// New reducer for an explicit ρ schedule.
+    pub fn with_schedule(sched: RhoSchedule, ops: Arc<dyn BlockOps<P>>) -> Self {
+        Self { sched, ops }
     }
 }
 
@@ -173,8 +318,8 @@ impl<P: Block3d> Reducer<TripleKey, P> for Reducer3d<P> {
         values: Vec<P>,
         emit: &mut dyn FnMut(TripleKey, P),
     ) {
-        let Geometry { q, rho } = self.geo;
-        if self.geo.is_final(round) {
+        let q = self.sched.q();
+        if self.sched.is_final(round) {
             // Key (i,-1,j): sum the ρ accumulators.
             debug_assert!(key.is_io(), "final round key must be (i,-1,j): {key:?}");
             debug_assert!(
@@ -208,16 +353,27 @@ impl<P: Block3d> Reducer<TripleKey, P> for Reducer3d<P> {
         }
         let a = a.unwrap_or_else(|| panic!("missing A at {key:?} round {round}"));
         let b = b.unwrap_or_else(|| panic!("missing B at {key:?} round {round}"));
-        if round > 0 {
-            assert!(c.is_some(), "missing C at {key:?} round {round}");
-        }
-        let result = self.ops.fma(&a, &b, c.as_ref());
-        // ℓ' = (h - i - j - rρ) mod q, guaranteed < ρ for live keys.
+        // ℓ' = (h - i - j - offset) mod q, guaranteed < width for live
+        // keys. Slots below the carried width continue an accumulator
+        // from the previous round; slots at or above it (the widened
+        // part of a re-planned tail, or all of round 0) start fresh.
         let l = umod(
-            key.h as isize - key.i as isize - key.j as isize - (round * rho) as isize,
+            key.h as isize
+                - key.i as isize
+                - key.j as isize
+                - self.sched.offset(round) as isize,
             q,
         );
-        debug_assert!(l < rho, "reducer key {key:?} not live in round {round}");
+        debug_assert!(
+            l < self.sched.width(round),
+            "reducer key {key:?} not live in round {round}"
+        );
+        if l < self.sched.carried_width(round) {
+            assert!(c.is_some(), "missing C at {key:?} round {round}");
+        } else {
+            assert!(c.is_none(), "unexpected C on a fresh slot at {key:?} round {round}");
+        }
+        let result = self.ops.fma(&a, &b, c.as_ref());
         emit(
             TripleKey::carry(key.i as usize, l, key.j as usize),
             result,
@@ -225,33 +381,60 @@ impl<P: Block3d> Reducer<TripleKey, P> for Reducer3d<P> {
     }
 }
 
-/// The full 3D multi-round algorithm: geometry + payload algebra +
+/// The full 3D multi-round algorithm: ρ schedule + payload algebra +
 /// partitioner, pluggable into [`crate::mapreduce::Driver`].
 pub struct Algo3d<P: Block3d> {
-    geo: Geometry,
+    sched: RhoSchedule,
+    ops: Arc<dyn BlockOps<P>>,
     mapper: Mapper3d<P>,
     reducer: Reducer3d<P>,
     partitioner: Box<dyn Partitioner<TripleKey>>,
 }
 
 impl<P: Block3d> Algo3d<P> {
-    /// Assemble the algorithm.
+    /// Assemble the algorithm for a uniform-ρ geometry.
     pub fn new(
         geo: Geometry,
         ops: Arc<dyn BlockOps<P>>,
         partitioner: Box<dyn Partitioner<TripleKey>>,
     ) -> Self {
+        Self::with_schedule(geo.into(), ops, partitioner)
+    }
+
+    /// Assemble the algorithm for an explicit ρ schedule.
+    pub fn with_schedule(
+        sched: RhoSchedule,
+        ops: Arc<dyn BlockOps<P>>,
+        partitioner: Box<dyn Partitioner<TripleKey>>,
+    ) -> Self {
         Self {
-            geo,
-            mapper: Mapper3d::new(geo),
-            reducer: Reducer3d::new(geo, ops),
+            mapper: Mapper3d::with_schedule(sched.clone()),
+            reducer: Reducer3d::with_schedule(sched.clone(), ops.clone()),
+            sched,
+            ops,
             partitioner,
         }
     }
 
-    /// The geometry in use.
-    pub fn geometry(&self) -> Geometry {
-        self.geo
+    /// The ρ schedule in use.
+    pub fn schedule(&self) -> &RhoSchedule {
+        &self.sched
+    }
+
+    /// Re-plan the rounds from product round `from_round` on with a new
+    /// width sequence (the committed prefix is untouched, so a resumable
+    /// run may call this at any round boundary ≤ its next pending
+    /// round). The new tail must keep the schedule non-decreasing and
+    /// group-complete; the round count shrinks when the tail widens.
+    /// The partitioner is kept as constructed — partitioning is
+    /// correctness-neutral, so a widened round may spread its extra
+    /// keys slightly less evenly than a dedicated partitioner would.
+    pub fn set_tail_widths(&mut self, from_round: usize, tail: Vec<usize>) -> Result<()> {
+        let sched = self.sched.with_tail(from_round, tail)?;
+        self.mapper = Mapper3d::with_schedule(sched.clone());
+        self.reducer = Reducer3d::with_schedule(sched.clone(), self.ops.clone());
+        self.sched = sched;
+        Ok(())
     }
 }
 
@@ -260,7 +443,7 @@ impl<P: Block3d> MultiRoundAlgorithm for Algo3d<P> {
     type V = P;
 
     fn num_rounds(&self) -> usize {
-        self.geo.rounds()
+        self.sched.rounds()
     }
 
     fn mapper(&self, _round: usize) -> &dyn Mapper<TripleKey, P> {
@@ -278,18 +461,18 @@ impl<P: Block3d> MultiRoundAlgorithm for Algo3d<P> {
     fn reads_static_input(&self, round: usize) -> bool {
         // A and B are re-read from the DFS in every product round; the
         // final summation round reads only the carried accumulators.
-        !self.geo.is_final(round)
+        !self.sched.is_final(round)
     }
 
     fn groups_hint(&self, round: usize) -> Option<usize> {
         // Known analytically (asserted by `shuffle_and_reducer_bounds_hold`):
-        // ρq² live (i,h,j) keys per product round, q² (i,-1,j) keys in
-        // the summation round.
-        let Geometry { q, rho } = self.geo;
-        Some(if self.geo.is_final(round) {
+        // width·q² live (i,h,j) keys per product round, q² (i,-1,j)
+        // keys in the summation round.
+        let q = self.sched.q();
+        Some(if self.sched.is_final(round) {
             q * q
         } else {
-            rho * q * q
+            self.sched.width(round) * q * q
         })
     }
 }
@@ -381,21 +564,9 @@ mod tests {
         out
     }
 
-    fn run_symbolic(q: usize, rho: usize) -> BTreeMap<(usize, usize), Vec<(usize, usize, usize)>> {
-        use crate::m3::partitioner::BalancedPartitioner3d;
-        use crate::mapreduce::{Driver, EngineConfig};
-        let geo = Geometry { q, rho };
-        let alg = Algo3d::new(
-            geo,
-            Arc::new(SymOps),
-            Box::new(BalancedPartitioner3d { q, rho }),
-        );
-        let mut driver = Driver::new(EngineConfig {
-            map_tasks: 4,
-            reduce_tasks: 4,
-            workers: 4,
-        });
-        let res = driver.run(&alg, &static_input(q));
+    type SymProducts = BTreeMap<(usize, usize), Vec<(usize, usize, usize)>>;
+
+    fn collect_symbolic(res: crate::mapreduce::driver::RunResult<TripleKey, Sym>) -> SymProducts {
         let mut out = BTreeMap::new();
         for p in res.output {
             assert!(p.key.is_io(), "final keys must be (i,-1,j)");
@@ -410,6 +581,28 @@ mod tests {
             assert!(prev.is_none(), "duplicate output block");
         }
         out
+    }
+
+    fn run_symbolic(q: usize, rho: usize) -> SymProducts {
+        run_symbolic_schedule(RhoSchedule::uniform(q, rho))
+    }
+
+    fn run_symbolic_schedule(sched: RhoSchedule) -> SymProducts {
+        use crate::m3::partitioner::BalancedPartitioner3d;
+        use crate::mapreduce::{Driver, EngineConfig};
+        let q = sched.q();
+        let rho = *sched.widths().last().unwrap();
+        let alg = Algo3d::with_schedule(
+            sched,
+            Arc::new(SymOps),
+            Box::new(BalancedPartitioner3d { q, rho }),
+        );
+        let mut driver = Driver::new(EngineConfig {
+            map_tasks: 4,
+            reduce_tasks: 4,
+            workers: 4,
+        });
+        collect_symbolic(driver.run(&alg, &static_input(q)))
     }
 
     fn expected(q: usize) -> BTreeMap<(usize, usize), Vec<(usize, usize, usize)>> {
@@ -455,6 +648,111 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn symbolic_routing_non_uniform_schedules() {
+        // Non-decreasing width schedules cover every group exactly once:
+        // widened tails (the mid-job re-plan shape) route identically to
+        // the uniform plans they replace.
+        for widths in [vec![1, 1, 2, 4], vec![2, 6], vec![1, 3, 4], vec![8]] {
+            let sched = RhoSchedule::new(8, widths.clone()).unwrap();
+            assert_eq!(
+                run_symbolic_schedule(sched),
+                expected(8),
+                "widths {widths:?}"
+            );
+        }
+        for widths in [vec![1, 2, 3], vec![3, 3], vec![1, 1, 2, 2]] {
+            let sched = RhoSchedule::new(6, widths.clone()).unwrap();
+            assert_eq!(
+                run_symbolic_schedule(sched),
+                expected(6),
+                "widths {widths:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_symbolic_routing_random_schedules() {
+        // Random valid (non-decreasing, q-complete) schedules all route
+        // correctly — the re-planner may install any of them.
+        run_prop("3d routing correct under schedules", 12, |case| {
+            let q = 2 + case.size(1, 10);
+            let mut widths = vec![];
+            let mut left = q;
+            let mut floor = 1usize;
+            while left > 0 {
+                let w = (floor + case.rng.next_usize(left.saturating_sub(floor) + 1)).min(left);
+                // Keep the remainder coverable: the last width may need
+                // to swallow whatever is left, which stays ≥ floor.
+                if left - w > 0 && left - w < w {
+                    widths.push(left);
+                    break;
+                }
+                widths.push(w);
+                floor = w;
+                left -= w;
+            }
+            let sched = match RhoSchedule::new(q, widths.clone()) {
+                Ok(s) => s,
+                Err(e) => return Err(format!("generator made invalid {widths:?}: {e}")),
+            };
+            if run_symbolic_schedule(sched) != expected(q) {
+                return Err(format!("routing wrong at q={q} widths={widths:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mid_run_tail_replan_preserves_the_product() {
+        // Commit two ρ=1 rounds of a q=8 run, then widen the pending
+        // tail to [2, 4]: the committed prefix's accumulators must flow
+        // into the re-planned rounds and the output stay exact.
+        use crate::m3::partitioner::BalancedPartitioner3d;
+        use crate::mapreduce::{EngineConfig, StepRun};
+        let q = 8;
+        let alg = Algo3d::new(
+            Geometry { q, rho: 1 },
+            Arc::new(SymOps),
+            Box::new(BalancedPartitioner3d { q, rho: 4 }),
+        );
+        let cfg = EngineConfig {
+            map_tasks: 4,
+            reduce_tasks: 4,
+            workers: 4,
+        };
+        let mut run = StepRun::new(cfg, alg, static_input(q));
+        assert_eq!(run.num_rounds(), 9);
+        run.step_commit();
+        run.step_commit();
+        run.alg_mut().set_tail_widths(2, vec![2, 4]).unwrap();
+        assert_eq!(run.num_rounds(), 5, "widths [1,1,2,4] + final");
+        assert_eq!(run.next_round(), 2);
+        while !run.is_done() {
+            run.step_commit();
+        }
+        assert_eq!(collect_symbolic(run.into_result()), expected(q));
+    }
+
+    #[test]
+    fn schedule_validation_rejects_bad_widths() {
+        assert!(RhoSchedule::new(8, vec![4, 2, 2]).is_err(), "decreasing");
+        assert!(RhoSchedule::new(8, vec![2, 2]).is_err(), "incomplete");
+        assert!(RhoSchedule::new(8, vec![2, 2, 2, 2, 2]).is_err(), "overfull");
+        assert!(RhoSchedule::new(8, vec![]).is_err(), "empty");
+        assert!(RhoSchedule::new(8, vec![0, 8]).is_err(), "zero width");
+        assert!(RhoSchedule::new(0, vec![1]).is_err(), "q = 0");
+        let s = RhoSchedule::new(8, vec![1, 3, 4]).unwrap();
+        assert_eq!(s.rounds(), 4);
+        assert_eq!(s.offset(2), 4);
+        assert_eq!(s.carried_width(0), 0);
+        assert_eq!(s.carried_width(2), 3);
+        assert!(s.with_tail(1, vec![7]).is_ok());
+        assert!(s.with_tail(1, vec![3, 4]).is_ok());
+        assert!(s.with_tail(2, vec![2, 2]).is_err(), "tail must keep the sum");
+        assert!(s.with_tail(4, vec![]).is_err(), "past the last product round");
     }
 
     #[test]

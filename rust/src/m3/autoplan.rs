@@ -1,0 +1,598 @@
+//! The auto-planner: cost-model plan search over the paper's tradeoff
+//! space.
+//!
+//! The paper's central claim (§1) is that multi-round algorithms win by
+//! "suitably setting the round number according to the execution
+//! context". This module makes that operational: for a job's *shape*
+//! (matrix side, density) and a reducer-memory budget it enumerates
+//! every valid `(block_side / m, ρ)` pair — the space Theorems 3.1–3.3
+//! validate — prices each candidate with the cost-model simulator on a
+//! [`ClusterProfile`], and returns the predicted-argmin plan together
+//! with the full tradeoff table (Figures 3/6 as data).
+//!
+//! Two context knobs decide the winner:
+//!
+//! * **Reducer memory** (`memory_budget`, words) bounds the subproblem
+//!   size: dense plans need `3m` words per reducer, sparse plans
+//!   `≈ m` words once the `δ_M` density bound is folded in.
+//! * **Aggregate cluster memory** ([`ClusterProfile::agg_mem_bytes`])
+//!   bounds the per-round working set `≈ shuffle words`: a
+//!   memory-constrained context cannot hold the monolithic `3qn`-word
+//!   round in flight and is forced to `ρ < q` — the mechanical form of
+//!   the paper's context dependence (checked by `BENCH_planner.json`).
+
+use anyhow::{bail, Result};
+
+/// Candidates needing more rounds than this are pruned from the
+/// enumeration (not silently mis-priced): at `round_setup` seconds of
+/// fixed cost per round, a plan with thousands of rounds is never
+/// competitive, and pricing a million-round candidate per search would
+/// make `m3 plan` O(q) per ρ for no decision value.
+pub const MAX_PLAN_ROUNDS: usize = 4096;
+
+use crate::matrix::gen::er_output_density;
+use crate::simulator::{
+    simulate_dense2d, simulate_dense3d, simulate_sparse3d, ClusterProfile, SimResult,
+};
+
+use super::planner::{Plan2d, Plan3d, SparsePlan};
+
+/// The knobs of one candidate plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanDesc {
+    /// 3D dense: `(block_side, ρ)` with `q = side/block_side`.
+    Dense3d {
+        /// Matrix side `√n`.
+        side: usize,
+        /// Block side `√m`.
+        block_side: usize,
+        /// Replication factor ρ.
+        rho: usize,
+    },
+    /// 2D dense: `(m, ρ)` with `s = n/m` strips.
+    Dense2d {
+        /// Matrix side `√n`.
+        side: usize,
+        /// Subproblem size `m` in words.
+        m: usize,
+        /// Replication factor ρ.
+        rho: usize,
+    },
+    /// 3D sparse: `(block_side, ρ)` over an Erdős–Rényi input.
+    Sparse3d {
+        /// Matrix side `√n`.
+        side: usize,
+        /// Sparse block side `√m'`.
+        block_side: usize,
+        /// Replication factor ρ.
+        rho: usize,
+    },
+}
+
+impl PlanDesc {
+    /// The candidate's replication factor.
+    pub fn rho(&self) -> usize {
+        match *self {
+            PlanDesc::Dense3d { rho, .. }
+            | PlanDesc::Dense2d { rho, .. }
+            | PlanDesc::Sparse3d { rho, .. } => rho,
+        }
+    }
+
+    /// Blocks/strips per dimension (the ρ ≤ · bound): `q` for 3D plans,
+    /// `s` for 2D.
+    pub fn q(&self) -> usize {
+        match *self {
+            PlanDesc::Dense3d {
+                side, block_side, ..
+            }
+            | PlanDesc::Sparse3d {
+                side, block_side, ..
+            } => side / block_side,
+            PlanDesc::Dense2d { side, m, .. } => side * side / m,
+        }
+    }
+
+    /// Is this the monolithic (minimum-round) plan for its block size?
+    pub fn is_monolithic(&self) -> bool {
+        self.rho() == self.q()
+    }
+
+    /// Short human-readable label.
+    pub fn label(&self) -> String {
+        match *self {
+            PlanDesc::Dense3d {
+                side,
+                block_side,
+                rho,
+            } => format!("3d n={side} b={block_side} rho={rho}"),
+            PlanDesc::Dense2d { side, m, rho } => format!("2d n={side} m={m} rho={rho}"),
+            PlanDesc::Sparse3d {
+                side,
+                block_side,
+                rho,
+            } => format!("sp n={side} b={block_side} rho={rho}"),
+        }
+    }
+}
+
+/// One candidate plan with its predicted cost on the search profile.
+#[derive(Debug, Clone)]
+pub struct PricedPlan {
+    /// The candidate's knobs.
+    pub desc: PlanDesc,
+    /// Round count.
+    pub rounds: usize,
+    /// Reducer-memory words the plan needs (≤ the search budget).
+    pub reducer_words: f64,
+    /// Per-round shuffle-size bound in words (the round working set).
+    pub shuffle_words: f64,
+    /// Whether the round working set fits the profile's aggregate
+    /// memory. Infeasible candidates stay in the table (they are the
+    /// context-dependence evidence) but are never chosen.
+    pub feasible: bool,
+    /// Predicted total seconds.
+    pub total_secs: f64,
+    /// Predicted communication seconds.
+    pub comm_secs: f64,
+    /// Predicted computation seconds.
+    pub comp_secs: f64,
+    /// Predicted infrastructure seconds.
+    pub infra_secs: f64,
+}
+
+impl PricedPlan {
+    fn from_sim(
+        desc: PlanDesc,
+        reducer_words: f64,
+        shuffle_words: f64,
+        sim: &SimResult,
+        profile: &ClusterProfile,
+    ) -> Self {
+        PricedPlan {
+            desc,
+            rounds: sim.rounds.len(),
+            reducer_words,
+            shuffle_words,
+            feasible: fits_cluster_memory(shuffle_words, profile),
+            total_secs: sim.total(),
+            comm_secs: sim.comm(),
+            comp_secs: sim.comp(),
+            infra_secs: sim.infra(),
+        }
+    }
+}
+
+/// Does a round with `shuffle_words` in flight fit the profile's
+/// aggregate working memory?
+pub fn fits_cluster_memory(shuffle_words: f64, profile: &ClusterProfile) -> bool {
+    shuffle_words * profile.bytes_per_word <= profile.agg_mem_bytes()
+}
+
+/// A completed plan search: the full candidate table (deterministic
+/// order: block size ascending, then ρ ascending) and the chosen index.
+#[derive(Debug, Clone)]
+pub struct PlanSearch {
+    /// Every enumerated candidate, priced.
+    pub candidates: Vec<PricedPlan>,
+    /// Index of the predicted-argmin feasible candidate.
+    pub chosen: usize,
+}
+
+impl PlanSearch {
+    /// The chosen candidate.
+    pub fn chosen(&self) -> &PricedPlan {
+        &self.candidates[self.chosen]
+    }
+
+    /// Cheapest predicted total over all candidates (feasible or not).
+    pub fn min_total_secs(&self) -> f64 {
+        self.candidates
+            .iter()
+            .map(|c| c.total_secs)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Costliest predicted total over all candidates.
+    pub fn max_total_secs(&self) -> f64 {
+        self.candidates
+            .iter()
+            .map(|c| c.total_secs)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Pick the argmin feasible candidate (first wins ties, so the
+    /// search is deterministic for a fixed enumeration order).
+    fn pick(candidates: Vec<PricedPlan>) -> Result<Self> {
+        let mut chosen: Option<usize> = None;
+        for (i, c) in candidates.iter().enumerate() {
+            if !c.feasible {
+                continue;
+            }
+            let better = match chosen {
+                None => true,
+                Some(b) => c.total_secs < candidates[b].total_secs,
+            };
+            if better {
+                chosen = Some(i);
+            }
+        }
+        match chosen {
+            Some(chosen) => Ok(PlanSearch { candidates, chosen }),
+            None => bail!(
+                "no feasible plan: {} candidates all exceed the cluster memory",
+                candidates.len()
+            ),
+        }
+    }
+}
+
+/// Divisors of `x` in increasing order.
+fn divisors(x: usize) -> Vec<usize> {
+    let mut small = vec![];
+    let mut large = vec![];
+    let mut d = 1;
+    while d * d <= x {
+        if x % d == 0 {
+            small.push(d);
+            if d != x / d {
+                large.push(x / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// Enumerate and price every valid 3D dense plan for `side` under a
+/// reducer-memory budget of `memory_budget` words (`3m ≤ budget`),
+/// returning the search table and the chosen plan.
+pub fn plan_dense3d(
+    side: usize,
+    memory_budget: usize,
+    profile: &ClusterProfile,
+) -> Result<(Plan3d, PlanSearch)> {
+    if side == 0 {
+        bail!("side must be positive");
+    }
+    let mut candidates = vec![];
+    for block_side in divisors(side) {
+        if 3 * block_side * block_side > memory_budget {
+            break; // divisors ascend; everything later is too big too
+        }
+        let q = side / block_side;
+        for rho in divisors(q) {
+            if q / rho + 1 > MAX_PLAN_ROUNDS {
+                continue;
+            }
+            let plan = Plan3d::new(side, block_side, rho)?;
+            candidates.push(PricedPlan::from_sim(
+                PlanDesc::Dense3d {
+                    side,
+                    block_side,
+                    rho,
+                },
+                plan.reducer_words_bound() as f64,
+                plan.shuffle_words_bound() as f64,
+                &simulate_dense3d(&plan, profile),
+                profile,
+            ));
+        }
+    }
+    if candidates.is_empty() {
+        bail!("no valid 3D plan for side {side} under a {memory_budget}-word reducer budget");
+    }
+    let search = PlanSearch::pick(candidates)?;
+    let plan = match search.chosen().desc {
+        PlanDesc::Dense3d {
+            side,
+            block_side,
+            rho,
+        } => Plan3d::new(side, block_side, rho)?,
+        _ => unreachable!("dense-3D search yields dense-3D candidates"),
+    };
+    Ok((plan, search))
+}
+
+/// Enumerate and price every valid 2D dense plan (`m = side·h` with
+/// `h | side`, `3m ≤ budget`, `ρ | s`).
+pub fn plan_dense2d(
+    side: usize,
+    memory_budget: usize,
+    profile: &ClusterProfile,
+) -> Result<(Plan2d, PlanSearch)> {
+    if side == 0 {
+        bail!("side must be positive");
+    }
+    let mut candidates = vec![];
+    for h in divisors(side) {
+        let m = side * h;
+        if 3 * m > memory_budget {
+            break;
+        }
+        let s = side * side / m;
+        for rho in divisors(s) {
+            if s / rho > MAX_PLAN_ROUNDS {
+                continue;
+            }
+            let plan = Plan2d::new(side, m, rho)?;
+            candidates.push(PricedPlan::from_sim(
+                PlanDesc::Dense2d { side, m, rho },
+                plan.reducer_words_bound() as f64,
+                plan.shuffle_words_bound() as f64,
+                &simulate_dense2d(&plan, profile),
+                profile,
+            ));
+        }
+    }
+    if candidates.is_empty() {
+        bail!("no valid 2D plan for side {side} under a {memory_budget}-word reducer budget");
+    }
+    let search = PlanSearch::pick(candidates)?;
+    let plan = match search.chosen().desc {
+        PlanDesc::Dense2d { side, m, rho } => Plan2d::new(side, m, rho)?,
+        _ => unreachable!("dense-2D search yields dense-2D candidates"),
+    };
+    Ok((plan, search))
+}
+
+/// Enumerate and price every valid 3D sparse plan for an Erdős–Rényi
+/// input with `nnz_per_row` expected non-zeros per row. Block sides are
+/// the divisors of `side` whose expected block population fits the
+/// budget (`block² · δ_M ≤ budget`, the same sizing rule as
+/// [`SparsePlan::from_memory_budget`] without the power-of-two snap).
+pub fn plan_sparse3d(
+    side: usize,
+    nnz_per_row: usize,
+    memory_budget: usize,
+    profile: &ClusterProfile,
+) -> Result<(SparsePlan, PlanSearch)> {
+    if side == 0 {
+        bail!("side must be positive");
+    }
+    let delta = nnz_per_row as f64 / side as f64;
+    let delta_m = delta.max(er_output_density(side, delta));
+    if delta_m <= 0.0 {
+        bail!("density must be positive");
+    }
+    let mut candidates = vec![];
+    for block_side in divisors(side) {
+        if (block_side * block_side) as f64 * delta_m > memory_budget as f64 {
+            break;
+        }
+        let q = side / block_side;
+        for rho in divisors(q) {
+            if q / rho + 1 > MAX_PLAN_ROUNDS {
+                continue;
+            }
+            let plan = SparsePlan::new(side, block_side, rho, delta, delta_m)?;
+            candidates.push(PricedPlan::from_sim(
+                PlanDesc::Sparse3d {
+                    side,
+                    block_side,
+                    rho,
+                },
+                plan.expected_reducer_words(),
+                plan.expected_shuffle_words(),
+                &simulate_sparse3d(&plan, profile),
+                profile,
+            ));
+        }
+    }
+    if candidates.is_empty() {
+        bail!(
+            "no valid sparse plan for side {side} (k={nnz_per_row}) under a \
+             {memory_budget}-word reducer budget"
+        );
+    }
+    let search = PlanSearch::pick(candidates)?;
+    let plan = match search.chosen().desc {
+        PlanDesc::Sparse3d {
+            side, block_side, ..
+        } => SparsePlan::new(side, block_side, search.chosen().desc.rho(), delta, delta_m)?,
+        _ => unreachable!("sparse search yields sparse candidates"),
+    };
+    Ok((plan, search))
+}
+
+/// Re-plan the *tail* of a 3D dense run: given the committed product
+/// widths (`committed`, possibly empty) and the remaining group count,
+/// pick the uniform tail width ρ' — a divisor of the remaining groups,
+/// at least the last committed width, whose `3ρ'n`-word round working
+/// set still fits the profile's aggregate memory — whose pending
+/// rounds price cheapest on `profile`. Returns the winning tail widths
+/// and the predicted seconds of the pending rounds (tail + final).
+pub fn plan_dense3d_tail(
+    side: usize,
+    block_side: usize,
+    committed: &[usize],
+    profile: &ClusterProfile,
+) -> Result<(Vec<usize>, f64)> {
+    let q = side / block_side.max(1);
+    let done: usize = committed.iter().sum();
+    if done >= q {
+        bail!("all {q} groups already committed");
+    }
+    let remaining = q - done;
+    let n = (side * side) as f64;
+    let floor = committed.last().copied().unwrap_or(1).max(1);
+    let mut best: Option<(Vec<usize>, f64)> = None;
+    for rho in divisors(remaining) {
+        if rho < floor || remaining / rho + 1 > MAX_PLAN_ROUNDS {
+            continue;
+        }
+        // The same feasibility gate as the spawn-time search: a widened
+        // round must not put a working set in flight that the initial
+        // plan search would have rejected for this cluster.
+        if !fits_cluster_memory(3.0 * rho as f64 * n, profile) {
+            continue;
+        }
+        let tail = vec![rho; remaining / rho];
+        // Price only the pending rounds: a synthetic one-round prefix
+        // of the last committed width reproduces the first tail
+        // round's carry volume and read-chunk size exactly, without
+        // re-pricing (and discarding) the whole committed prefix on
+        // every candidate.
+        let mut pricing = Vec::with_capacity(tail.len() + 1);
+        if !committed.is_empty() {
+            pricing.push(floor);
+        }
+        pricing.extend(tail.iter().copied());
+        let sim =
+            crate::simulator::simulate_dense3d_schedule(side, block_side, &pricing, profile);
+        let skip = usize::from(!committed.is_empty());
+        let pending: f64 = sim.per_round()[skip..].iter().sum();
+        let better = match &best {
+            None => true,
+            Some((_, b)) => pending < *b,
+        };
+        if better {
+            best = Some((tail, pending));
+        }
+    }
+    best.ok_or_else(|| {
+        anyhow::anyhow!(
+            "no tail width ≥ {floor} divides the remaining {remaining} groups"
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_sorted_and_complete() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(16), vec![1, 2, 4, 8, 16]);
+        assert_eq!(divisors(7), vec![1, 7]);
+    }
+
+    #[test]
+    fn dense3d_search_prices_every_valid_pair() {
+        // side 16, budget 3·4² = 48: blocks {1, 2, 4}, ρ over divisors
+        // of q ∈ {16, 8, 4} → 5 + 4 + 3 candidates.
+        let p = ClusterProfile::inhouse();
+        let (_, search) = plan_dense3d(16, 48, &p).unwrap();
+        assert_eq!(search.candidates.len(), 12);
+        for c in &search.candidates {
+            assert!(c.total_secs > 0.0);
+            assert!(c.reducer_words <= 48.0);
+        }
+    }
+
+    #[test]
+    fn chosen_plan_is_the_argmin() {
+        let p = ClusterProfile::inhouse();
+        let (_, search) = plan_dense3d(32000, 48_000_000, &p).unwrap();
+        let best = search.chosen();
+        for c in &search.candidates {
+            assert!(
+                best.total_secs <= c.total_secs,
+                "{} ({:.0}s) beats chosen {} ({:.0}s)",
+                c.desc.label(),
+                c.total_secs,
+                best.desc.label(),
+                best.total_secs
+            );
+        }
+    }
+
+    #[test]
+    fn unconstrained_inhouse_picks_the_monolithic_paper_plan() {
+        // Paper Figures 2–3: biggest block the budget admits, ρ = q.
+        let p = ClusterProfile::inhouse();
+        let (plan, search) = plan_dense3d(32000, 48_000_000, &p).unwrap();
+        assert_eq!(plan.block_side, 4000, "largest block under 3m ≤ 48e6");
+        assert_eq!(plan.rho, plan.q(), "monolithic wins with memory to spare");
+        assert!(search.chosen().desc.is_monolithic());
+    }
+
+    #[test]
+    fn memory_constrained_context_forces_multi_round() {
+        // Shrink the cluster memory until the 3qn-word monolithic round
+        // cannot be in flight: the planner must fall back to ρ < q —
+        // the paper's context-dependence, mechanically.
+        let constrained = ClusterProfile::inhouse().with_mem_per_node(4.0e9);
+        let (plan, search) = plan_dense3d(32000, 48_000_000, &constrained).unwrap();
+        assert!(
+            plan.rho < plan.q(),
+            "constrained context must pick rho {} < q {}",
+            plan.rho,
+            plan.q()
+        );
+        assert!(search.chosen().feasible);
+        // The monolithic candidate is still enumerated, marked
+        // infeasible — the table is the evidence.
+        let mono = search
+            .candidates
+            .iter()
+            .find(|c| c.desc == PlanDesc::Dense3d { side: 32000, block_side: 4000, rho: 8 })
+            .expect("monolithic candidate stays in the table");
+        assert!(!mono.feasible);
+    }
+
+    #[test]
+    fn dense2d_search_works() {
+        let p = ClusterProfile::inhouse();
+        let (plan, search) = plan_dense2d(16, 768, &p).unwrap();
+        assert!(plan.m <= 256);
+        assert!(!search.candidates.is_empty());
+        assert!(search.chosen().feasible);
+    }
+
+    #[test]
+    fn sparse_search_respects_density_budget() {
+        let p = ClusterProfile::inhouse();
+        let side = 1 << 20;
+        let (plan, search) = plan_sparse3d(side, 8, 48_000_000, &p).unwrap();
+        let delta_m = plan.delta_m;
+        for c in &search.candidates {
+            if let PlanDesc::Sparse3d { block_side, .. } = c.desc {
+                assert!((block_side * block_side) as f64 * delta_m <= 48_000_000.0);
+            }
+        }
+        // Q6: the sparse planner reaches block sides far beyond the
+        // dense 4000 limit at the same budget.
+        assert!(plan.block_side > 4000);
+    }
+
+    #[test]
+    fn budget_too_small_errors() {
+        let p = ClusterProfile::inhouse();
+        assert!(plan_dense3d(16, 2, &p).is_err());
+        assert!(plan_dense2d(16, 2, &p).is_err());
+    }
+
+    #[test]
+    fn tail_replan_prefers_widest_remaining_width() {
+        // After two committed ρ=1 rounds of q=8, the in-house profile
+        // (memory to spare) widens the tail to one ρ=6 round.
+        let p = ClusterProfile::inhouse();
+        let (tail, secs) = plan_dense3d_tail(32000, 4000, &[1, 1], &p).unwrap();
+        assert_eq!(tail, vec![6]);
+        assert!(secs > 0.0);
+        // With nothing committed the tail is the full monolithic plan.
+        let (tail, _) = plan_dense3d_tail(32000, 4000, &[], &p).unwrap();
+        assert_eq!(tail, vec![8]);
+        // A fully committed run has nothing to re-plan.
+        assert!(plan_dense3d_tail(32000, 4000, &[8], &p).is_err());
+    }
+
+    #[test]
+    fn tail_replan_respects_cluster_memory() {
+        // On the starved context (ρ ≤ 2 fits), the re-planner must not
+        // widen past what the spawn-time search would admit: the best
+        // memory-feasible tail after two ρ=2 rounds of q=8 is [2, 2],
+        // never [4] — and if even the floor width no longer fits, the
+        // re-plan fails instead of installing an infeasible round.
+        let constrained = ClusterProfile::inhouse().with_mem_per_node(4.0e9);
+        let (tail, _) = plan_dense3d_tail(32000, 4000, &[2, 2], &constrained).unwrap();
+        assert_eq!(tail, vec![2, 2], "widening to [4] would exceed aggregate memory");
+        let starved = ClusterProfile::inhouse().with_mem_per_node(1.0e3);
+        assert!(plan_dense3d_tail(32000, 4000, &[2, 2], &starved).is_err());
+    }
+}

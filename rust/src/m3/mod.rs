@@ -9,10 +9,16 @@
 //! * [`partitioner`] — the naive `31²i + 31j + k` hash and the balanced
 //!   partitioner (paper Algorithm 3, Figure 1).
 //! * [`planner`] — parameter validation and the theorems' formulas.
+//! * [`autoplan`] — the auto-planner: enumerate every valid
+//!   `(block_side, ρ)` for a shape under a reducer-memory budget, price
+//!   each on a cluster profile, pick the predicted argmin (the paper's
+//!   "suitably setting the round number according to the execution
+//!   context", §1).
 //! * [`multiply`] — the high-level public API (`multiply_dense_3d`,
 //!   `multiply_sparse_3d`, `multiply_dense_2d`).
 
 pub mod algo3d;
+pub mod autoplan;
 pub mod dense2d;
 pub mod keys;
 pub mod multiply;
@@ -20,6 +26,9 @@ pub mod partitioner;
 pub mod planner;
 pub mod sparse_tools;
 
+pub use autoplan::{
+    plan_dense2d, plan_dense3d, plan_dense3d_tail, plan_sparse3d, PlanDesc, PlanSearch, PricedPlan,
+};
 pub use keys::{PairKey, TripleKey};
 pub use multiply::{
     multiply_dense_2d, multiply_dense_3d, multiply_dense_3d_sr, multiply_sparse_3d, M3Config,

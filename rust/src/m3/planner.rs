@@ -81,10 +81,14 @@ impl Plan3d {
         3 * self.m()
     }
 
-    /// Total shuffled words over all rounds, `O(n·q)` — independent of
-    /// ρ (paper Q1): product rounds shuffle ≈3ρn each for q/ρ rounds.
+    /// Total shuffled words over all rounds: exactly `3nq`, independent
+    /// of ρ (paper Q1). Per round (matching the simulator's
+    /// [`crate::simulator::volumes_dense3d`]): round 0 shuffles `2ρn`
+    /// (A and B fan-out, no carried C yet), each later product round
+    /// `3ρn`, and the final summation round `ρn` — summing to
+    /// `2ρn + (q/ρ − 1)·3ρn + ρn = 3nq`.
     pub fn total_shuffle_words(&self) -> usize {
-        3 * self.n() * self.q() / self.rho * self.rho + self.rho * self.n()
+        3 * self.n() * self.q()
     }
 
     /// Sequential work per reducer, `Θ(m^{3/2})` elementary products.
@@ -163,6 +167,15 @@ impl Plan2d {
     }
 }
 
+/// Largest power of two `≤ x` (1 for `x = 0`).
+fn prev_power_of_two(x: usize) -> usize {
+    if x == 0 {
+        1
+    } else {
+        1 << x.ilog2()
+    }
+}
+
 /// Plan of a 3D sparse execution (paper §3.2 / Theorem 3.2).
 #[derive(Debug, Clone, Copy)]
 pub struct SparsePlan {
@@ -195,9 +208,12 @@ impl SparsePlan {
         if delta_m <= 0.0 {
             bail!("density must be positive");
         }
-        // m' = m / delta_M; block side = sqrt(m').
+        // m' = m / delta_M; block side = largest power of two ≤ √m'.
+        // (The old `next_power_of_two() / 2` halved √m' whenever it was
+        // already an exact power of two — a 4× memory under-use and ~2×
+        // the rounds the budget actually needs.)
         let m_prime = (m as f64 / delta_m).max(1.0);
-        let mut block_side = (m_prime.sqrt() as usize).next_power_of_two() / 2;
+        let mut block_side = prev_power_of_two(m_prime.sqrt() as usize);
         block_side = block_side.clamp(1, side);
         while block_side > 1 && side % block_side != 0 {
             block_side /= 2;
@@ -298,18 +314,18 @@ mod tests {
 
     #[test]
     fn plan3d_total_shuffle_independent_of_rho() {
-        // Q1: total shuffled data is O(n·q), the same for all ρ up to
-        // the final round's ρn term.
-        let base = Plan3d::new(1024, 128, 1).unwrap();
+        // Q1: total shuffled data is exactly 3nq for every ρ — round 0
+        // carries no C (2ρn), later product rounds shuffle 3ρn, and the
+        // final round's ρn closes the telescope.
         for rho in [1, 2, 4, 8] {
             let p = Plan3d::new(1024, 128, rho).unwrap();
-            let product_rounds_words = 3 * p.n() * p.q();
-            assert_eq!(
-                p.total_shuffle_words() - p.rho * p.n(),
-                product_rounds_words,
-                "rho={rho}"
-            );
-            let _ = base;
+            assert_eq!(p.total_shuffle_words(), 3 * p.n() * p.q(), "rho={rho}");
+            // Cross-check against the explicit per-round sum.
+            let product_rounds = p.q() / p.rho;
+            let per_round_sum = 2 * p.rho * p.n()
+                + (product_rounds - 1) * 3 * p.rho * p.n()
+                + p.rho * p.n();
+            assert_eq!(p.total_shuffle_words(), per_round_sum, "rho={rho}");
         }
     }
 
@@ -347,17 +363,51 @@ mod tests {
     #[test]
     fn sparse_plan_from_budget() {
         // Paper Q6: √n = 2^20, 8 nnz/row → δ = 2^-17, δ_O = 2^-14,
-        // m ≈ dense 4000² → block side 2^18.
+        // m ≈ dense 4000² → √m' = √(m/δ_M) = 512000, so the block side
+        // must be exactly 2^18 (the largest power of two ≤ 512000) —
+        // the old `2^17..=2^19` window asserted nothing sharper. √m'
+        // is not an exact power of two here, so the halving bug itself
+        // is pinned by `sparse_plan_budget_exact_power_of_two_not_halved`.
         let side = 1 << 20;
         let delta = 8.0 / side as f64;
         let delta_out = delta * delta * side as f64;
         let m = 4000 * 4000;
         let p = SparsePlan::from_memory_budget(side, m, delta, delta_out, 1).unwrap();
-        assert!(p.block_side >= 1 << 17 && p.block_side <= 1 << 19,
-            "block side {} should be near 2^18", p.block_side);
-        // Expected reducer words near 3m up to the power-of-two rounding.
+        assert_eq!(p.block_side, 1 << 18, "largest power of two ≤ √m'");
+        // Expected reducer words stay within the 3m budget.
         let words = p.expected_reducer_words();
         assert!(words <= 3.0 * m as f64 * 1.1, "words={words}");
+    }
+
+    #[test]
+    fn sparse_plan_budget_exact_power_of_two_not_halved() {
+        // Regression for the headline bug: when √(m/δ_M) is an *exact*
+        // power of two the budget admits that block side exactly, and
+        // `from_memory_budget` must select it — the old code computed
+        // `(√m').next_power_of_two() / 2`, halving it to 2^17, which
+        // uses 4× less memory than budgeted and runs ~2× the rounds.
+        let side = 1usize << 20;
+        let delta_m = 2f64.powi(-14);
+        let m = 1usize << 22; // m / δ_M = 2^36 → √m' = 2^18 exactly
+        let p = SparsePlan::from_memory_budget(side, m, 2f64.powi(-17), delta_m, 1).unwrap();
+        assert_eq!(p.block_side, 1 << 18, "exact power of two must not be halved");
+        // The chosen block fills the budget exactly: block² · δ_M = m.
+        let used = (p.block_side * p.block_side) as f64 * delta_m;
+        assert_eq!(used, m as f64);
+        // Round count at ρ=1 is q+1 with q = side/block = 4 — the buggy
+        // half-size block would have doubled q (and nearly the rounds).
+        assert_eq!(p.rounds(), 5);
+    }
+
+    #[test]
+    fn prev_power_of_two_boundaries() {
+        assert_eq!(prev_power_of_two(0), 1);
+        assert_eq!(prev_power_of_two(1), 1);
+        assert_eq!(prev_power_of_two(2), 2);
+        assert_eq!(prev_power_of_two(3), 2);
+        assert_eq!(prev_power_of_two(256), 256, "exact powers map to themselves");
+        assert_eq!(prev_power_of_two(511), 256);
+        assert_eq!(prev_power_of_two(512), 512);
     }
 
     #[test]

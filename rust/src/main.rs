@@ -6,9 +6,16 @@
 //!   engine with the XLA (default), native, or naive backend.
 //! * `sparse`   — run the 3D sparse algorithm on an Erdős–Rényi input.
 //! * `serve`    — run a multi-tenant workload through the round-level
-//!   job scheduler (FIFO / fair / SRPT, optional spot preemptions).
+//!   job scheduler (FIFO / fair / SRPT, optional spot preemptions,
+//!   mixed fixed/auto-planned tenants, optional online profile
+//!   recalibration).
+//! * `plan`     — enumerate and price every valid plan for a shape
+//!   under a reducer-memory budget; print the tradeoff table and the
+//!   auto-chosen plan.
 //! * `figures`  — regenerate the paper's figures (tables + CSV).
 //! * `simulate` — price a configuration on a cluster profile.
+//! * `bench-planner` — auto-plan vs best/worst enumerated plan on the
+//!   paper profiles; `--json` writes `BENCH_planner.json`.
 //! * `bench-engine` — measure the parallel shuffle pipeline vs the
 //!   sequential reference; `--json` writes `BENCH_engine.json`.
 //! * `bench-kernels` — race every reduce-side compute kernel (tiled
@@ -45,7 +52,12 @@ USAGE:
   m3 sparse   --n <side> --nnz-per-row <k> --block <side> --rho <r> [--verify]
   m3 serve    [--policy fifo|fair|srpt] [--jobs <n>] [--tenants <t>]
               [--seed <u64>] [--mean-arrival <secs>] [--preempt-rate <per-100s>]
-              [--backend xla|native|naive|auto] [--verify] [--report]
+              [--auto-fraction <0..1>] [--budget <words>] [--recalibrate]
+              [--profile inhouse|c3|i2] [--backend xla|native|naive|auto]
+              [--verify] [--report]
+  m3 plan     [--algo 3d|2d|sparse] --n <side> [--budget <words>]
+              [--nnz-per-row <k>] [--profile inhouse|c3|i2] [--nodes <p>]
+              [--mem-per-node-gb <g>]
   m3 figures  [--fig <1..10>] [--ablations] [--out-dir figures]
   m3 simulate --profile inhouse|c3|i2 --n <side> --block <side>
               [--rho 1,2,4,8] [--algo 3d|2d] [--nodes <p>]
@@ -56,6 +68,8 @@ USAGE:
   m3 bench-kernels [--sides 64,256,512] [--sparse-side <side>]
               [--nnz-per-row 8,32] [--quick]
               [--json] [--out BENCH_kernels.json]
+  m3 bench-planner [--n <side>] [--sparse-side <side>] [--nnz-per-row <k>]
+              [--budget <words>] [--json] [--out BENCH_planner.json]
   m3 info
 ";
 
@@ -64,6 +78,7 @@ fn main() {
         "n", "block", "rho", "algo", "backend", "partitioner", "seed", "nodes", "slots", "fig",
         "out-dir", "profile", "nnz-per-row", "workers", "policy", "jobs", "tenants",
         "mean-arrival", "preempt-rate", "pairs", "reduce-tasks", "out", "sides", "sparse-side",
+        "budget", "auto-fraction", "mem-per-node-gb",
     ]);
     let args = match Args::parse(&spec) {
         Ok(a) => a,
@@ -77,11 +92,13 @@ fn main() {
         "multiply" => cmd_multiply(&args),
         "sparse" => cmd_sparse(&args),
         "serve" => cmd_serve(&args),
+        "plan" => cmd_plan(&args),
         "figures" => cmd_figures(&args),
         "simulate" => cmd_simulate(&args),
         "calibrate" => cmd_calibrate(&args),
         "bench-engine" => cmd_bench_engine(&args),
         "bench-kernels" => cmd_bench_kernels(&args),
+        "bench-planner" => cmd_bench_planner(&args),
         "info" => cmd_info(),
         _ => {
             println!("{USAGE}");
@@ -113,6 +130,24 @@ fn backend_from(args: &Args) -> Result<Arc<dyn LocalMultiply>> {
         },
         other => bail!("unknown backend {other:?}"),
     })
+}
+
+/// Resolve the cluster profile named by `--profile` (with `--nodes` and
+/// `--mem-per-node-gb` overrides) — shared by `simulate`, `plan`, and
+/// `serve`.
+fn profile_from(args: &Args) -> Result<ClusterProfile> {
+    let mut profile = match args.opt_or("profile", "inhouse").as_str() {
+        "inhouse" => ClusterProfile::inhouse(),
+        "c3" => ClusterProfile::emr_c3_8xlarge(),
+        "i2" => ClusterProfile::emr_i2_xlarge(),
+        other => bail!("unknown profile {other:?}"),
+    };
+    let nodes: usize = args.get("nodes", profile.nodes).map_err(anyhow::Error::msg)?;
+    profile = profile.with_nodes(nodes);
+    let mem_gb: f64 = args
+        .get("mem-per-node-gb", profile.mem_per_node_bytes / 1e9)
+        .map_err(anyhow::Error::msg)?;
+    Ok(profile.with_mem_per_node(mem_gb * 1e9))
 }
 
 fn engine_from(args: &Args) -> Result<EngineConfig> {
@@ -233,12 +268,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let seed: u64 = args.get("seed", 7).map_err(anyhow::Error::msg)?;
     let mean: f64 = args.get("mean-arrival", 25.0).map_err(anyhow::Error::msg)?;
     let preempt_rate: f64 = args.get("preempt-rate", 0.0).map_err(anyhow::Error::msg)?;
+    let auto_fraction: f64 = args.get("auto-fraction", 0.0).map_err(anyhow::Error::msg)?;
+    let memory_budget: usize = args.get("budget", 768).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&auto_fraction),
+        "--auto-fraction must be in [0, 1]"
+    );
 
     let specs = generate(&WorkloadConfig {
         jobs,
         tenants,
         seed,
         mean_interarrival_secs: mean,
+        auto_fraction,
+        memory_budget,
     });
     // Strike horizon: generous upper bound on the workload's virtual
     // span; late strikes land on an idle cluster and are ignored.
@@ -255,11 +298,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine: engine_from(args)?,
         policy,
         preemptions,
+        profile: profile_from(args)?,
+        recalibrate: args.flag("recalibrate"),
     };
     let backend = backend_from(args)?;
     eprintln!(
-        "[m3] serving {jobs} jobs / {tenants} tenants, policy={}, seed={seed}",
-        policy.name()
+        "[m3] serving {jobs} jobs / {tenants} tenants, policy={}, seed={seed}, \
+         auto={auto_fraction:.2}, profile={}, recalibrate={}",
+        policy.name(),
+        cfg.profile.name,
+        cfg.recalibrate,
     );
     let t0 = std::time::Instant::now();
     let out = run_service(&specs, &cfg, backend)?;
@@ -328,14 +376,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let profile = match args.opt_or("profile", "inhouse").as_str() {
-        "inhouse" => ClusterProfile::inhouse(),
-        "c3" => ClusterProfile::emr_c3_8xlarge(),
-        "i2" => ClusterProfile::emr_i2_xlarge(),
-        other => bail!("unknown profile {other:?}"),
-    };
-    let nodes: usize = args.get("nodes", profile.nodes).map_err(anyhow::Error::msg)?;
-    let profile = profile.with_nodes(nodes);
+    let profile = profile_from(args)?;
     let n: usize = args.get("n", 32000).map_err(anyhow::Error::msg)?;
     let block: usize = args.get("block", 4000).map_err(anyhow::Error::msg)?;
     let rhos: Vec<usize> = args
@@ -363,6 +404,129 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         profile.name, profile.nodes
     );
     println!("{}", t.render());
+    Ok(())
+}
+
+/// Enumerate and price every valid plan for a shape under a
+/// reducer-memory budget on a profile; print the tradeoff table
+/// (the paper's Figures 3/6 as data) and the auto-chosen plan.
+fn cmd_plan(args: &Args) -> Result<()> {
+    use m3::m3::autoplan::PlanSearch;
+    use m3::m3::{plan_dense2d, plan_dense3d, plan_sparse3d};
+    let algo = args.opt_or("algo", "3d");
+    let n: usize = args.get("n", 16000).map_err(anyhow::Error::msg)?;
+    let budget: usize = args.get("budget", 48_000_000).map_err(anyhow::Error::msg)?;
+    let profile = profile_from(args)?;
+    let (chosen_line, search): (String, PlanSearch) = match algo.as_str() {
+        "3d" => {
+            let (plan, s) = plan_dense3d(n, budget, &profile)?;
+            (
+                format!(
+                    "chosen: block={} rho={} -> {} rounds",
+                    plan.block_side,
+                    plan.rho,
+                    plan.rounds()
+                ),
+                s,
+            )
+        }
+        "2d" => {
+            let (plan, s) = plan_dense2d(n, budget, &profile)?;
+            (
+                format!(
+                    "chosen: m={} rho={} -> {} rounds",
+                    plan.m,
+                    plan.rho,
+                    plan.rounds()
+                ),
+                s,
+            )
+        }
+        "sparse" => {
+            let k: usize = args.get("nnz-per-row", 8).map_err(anyhow::Error::msg)?;
+            let (plan, s) = plan_sparse3d(n, k, budget, &profile)?;
+            (
+                format!(
+                    "chosen: block={} rho={} -> {} rounds (delta_M={:.2e})",
+                    plan.block_side,
+                    plan.rho,
+                    plan.rounds(),
+                    plan.delta_m
+                ),
+                s,
+            )
+        }
+        other => bail!("unknown algo {other:?} (3d|2d|sparse)"),
+    };
+    let mut t = Table::new(&[
+        "plan",
+        "rounds",
+        "reducer(w)",
+        "shuffle/rd(w)",
+        "fits",
+        "comm(s)",
+        "comp(s)",
+        "infra(s)",
+        "total(s)",
+        "",
+    ]);
+    for (i, c) in search.candidates.iter().enumerate() {
+        t.row(&[
+            c.desc.label(),
+            c.rounds.to_string(),
+            format!("{:.3e}", c.reducer_words),
+            format!("{:.3e}", c.shuffle_words),
+            if c.feasible { "yes" } else { "NO" }.to_string(),
+            format!("{:.0}", c.comm_secs),
+            format!("{:.0}", c.comp_secs),
+            format!("{:.0}", c.infra_secs),
+            format!("{:.0}", c.total_secs),
+            if i == search.chosen { "<= chosen" } else { "" }.to_string(),
+        ]);
+    }
+    println!(
+        "plan search: algo={algo} n={n} budget={budget} words, profile={} \
+         (nodes={}, mem={:.1} GB/node)",
+        profile.name,
+        profile.nodes,
+        profile.mem_per_node_bytes / 1e9
+    );
+    println!("{}", t.render());
+    println!("{chosen_line}");
+    Ok(())
+}
+
+/// Auto-plan cost vs the best/worst enumerated plan on the paper
+/// profiles, plus the mechanical context-dependence check; `--json`
+/// writes the results to `--out` (default `BENCH_planner.json`,
+/// intended to live at the repo root so CI can assert on it).
+fn cmd_bench_planner(args: &Args) -> Result<()> {
+    use m3::harness::{run_planner_bench, PlannerBenchConfig};
+    let default = PlannerBenchConfig::default();
+    let cfg = PlannerBenchConfig {
+        dense_side: args.get("n", default.dense_side).map_err(anyhow::Error::msg)?,
+        sparse_side: args
+            .get("sparse-side", default.sparse_side)
+            .map_err(anyhow::Error::msg)?,
+        nnz_per_row: args
+            .get("nnz-per-row", default.nnz_per_row)
+            .map_err(anyhow::Error::msg)?,
+        memory_budget: args
+            .get("budget", default.memory_budget)
+            .map_err(anyhow::Error::msg)?,
+        constrained_mem_per_node: default.constrained_mem_per_node,
+    };
+    eprintln!(
+        "[m3] planner bench: dense n={} sparse n={} k={} budget={}",
+        cfg.dense_side, cfg.sparse_side, cfg.nnz_per_row, cfg.memory_budget
+    );
+    let rep = run_planner_bench(&cfg);
+    println!("{}", rep.text);
+    if args.flag("json") {
+        let out = args.opt_or("out", "BENCH_planner.json");
+        std::fs::write(&out, &rep.json)?;
+        eprintln!("[m3] wrote {out}");
+    }
     Ok(())
 }
 

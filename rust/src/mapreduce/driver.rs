@@ -360,6 +360,16 @@ impl<A: MultiRoundAlgorithm> StepRun<A> {
         &self.alg
     }
 
+    /// Mutable access to the algorithm — the mid-run re-planning hook
+    /// (e.g. [`crate::m3::algo3d::Algo3d::set_tail_widths`] widening the
+    /// pending rounds' ρ schedule). The caller must only change the
+    /// structure of rounds `≥` [`next_round`](Self::next_round): already
+    /// committed rounds and the pending carry are part of the run's
+    /// state and must stay consistent with the algorithm.
+    pub fn alg_mut(&mut self) -> &mut A {
+        &mut self.alg
+    }
+
     /// Execute the next round and commit its output (it becomes the
     /// carry, or part of the final result for non-carrying algorithms).
     ///

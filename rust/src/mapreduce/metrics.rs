@@ -79,6 +79,26 @@ impl RoundMetrics {
         self.map_time + self.shuffle_time + self.reduce_time + self.write_time
     }
 
+    /// Mean words per non-empty output chunk (per-reduce-task file) —
+    /// the observed chunk size the online profile recalibration feeds
+    /// back into cost predictions. 0 when the engine recorded no
+    /// per-task output.
+    pub fn mean_output_chunk_words(&self) -> f64 {
+        let mut sum = 0usize;
+        let mut n = 0usize;
+        for &w in &self.output_words_per_task {
+            if w > 0 {
+                sum += w;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum as f64 / n as f64
+        }
+    }
+
     /// Communication-ish wall time (everything except reduce compute) —
     /// mirrors the paper's T_comm measurement procedure.
     pub fn comm_time(&self) -> Duration {
@@ -227,6 +247,14 @@ mod tests {
         assert_eq!(j.total_subtasks(), 12);
         assert!((j.mean_pool_utilisation() - 0.75).abs() < 1e-12);
         assert_eq!(JobMetrics::default().mean_pool_utilisation(), 0.0);
+    }
+
+    #[test]
+    fn mean_output_chunk_ignores_idle_tasks() {
+        let mut r = mk(0, 1, 1);
+        assert_eq!(r.mean_output_chunk_words(), 0.0, "no per-task record");
+        r.output_words_per_task = vec![6, 0, 2, 0];
+        assert_eq!(r.mean_output_chunk_words(), 4.0);
     }
 
     #[test]

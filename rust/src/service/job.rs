@@ -1,17 +1,24 @@
 //! Job submissions and their resumable executions.
 //!
-//! A [`JobSpec`] names a tenant, a multiplication kind (with per-job ρ
-//! and block side), and a seed that deterministically generates the
-//! input matrices. [`spawn_job`] turns a spec into a type-erased
-//! [`ActiveJob`] — a [`StepRun`] plus output assembly and per-round
-//! time predictions from the cost-model simulator — which the
-//! round-level scheduler steps one round at a time.
+//! A [`JobSpec`] names a tenant, a multiplication kind, a *plan choice*
+//! — explicit `(block_side, ρ)` knobs, or [`PlanChoice::Auto`] with a
+//! reducer-memory budget that the auto-planner
+//! ([`crate::m3::autoplan`]) turns into the predicted-cheapest plan on
+//! the service's cluster profile — and a seed that deterministically
+//! generates the input matrices. [`spawn_job`] turns a spec into a
+//! type-erased [`ActiveJob`] — a [`StepRun`] plus output assembly and
+//! per-round time predictions from the cost-model simulator — which the
+//! round-level scheduler steps one round at a time, re-pricing
+//! ([`ActiveJob::repredict`]) and, for auto dense-3D jobs, re-planning
+//! the pending rounds' ρ schedule ([`ActiveJob::replan`]) as the online
+//! recalibration updates the profile.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::m3::algo3d::{Algo3d, Geometry};
+use crate::m3::autoplan::{plan_dense2d, plan_dense3d, plan_dense3d_tail, plan_sparse3d};
 use crate::m3::dense2d::Algo2d;
 use crate::m3::multiply::{
     dense_3d_assemble, dense_3d_static_input, sparse_3d_assemble, sparse_3d_static_input,
@@ -24,7 +31,10 @@ use crate::mapreduce::{
 };
 use crate::matrix::{gen, BlockGrid, CooMatrix, DenseMatrix};
 use crate::runtime::LocalMultiply;
-use crate::simulator::{simulate_dense2d, simulate_dense3d, simulate_sparse3d, ClusterProfile};
+use crate::simulator::{
+    simulate_dense2d, simulate_dense3d_schedule, simulate_sparse3d, volumes_dense2d,
+    volumes_dense3d_schedule, volumes_sparse3d, ClusterProfile,
+};
 use crate::util::rng::Xoshiro256ss;
 
 /// Which multiplication a job runs, with its tradeoff knobs.
@@ -94,6 +104,32 @@ impl JobKind {
     }
 }
 
+/// How a job's tradeoff knobs are chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanChoice {
+    /// Run exactly the `(block_side, ρ)` carried by the [`JobKind`].
+    Fixed,
+    /// Ignore the kind's `(block_side, ρ)`: search every valid plan for
+    /// the job's shape under this reducer-memory budget (words) and run
+    /// the predicted argmin on the service's cluster profile — the
+    /// paper's "set the round number according to the execution
+    /// context" (§1), per job.
+    Auto {
+        /// Reducer-memory budget in words (`3m ≤ budget` for dense).
+        memory_budget: usize,
+    },
+}
+
+impl PlanChoice {
+    /// Short label for tables (`fixed` / `auto`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlanChoice::Fixed => "fixed",
+            PlanChoice::Auto { .. } => "auto",
+        }
+    }
+}
+
 /// A job submission.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobSpec {
@@ -103,6 +139,8 @@ pub struct JobSpec {
     pub tenant: usize,
     /// What to multiply and how.
     pub kind: JobKind,
+    /// Whether the kind's knobs are authoritative or auto-planned.
+    pub plan: PlanChoice,
     /// Seed that deterministically generates the input matrices.
     pub seed: u64,
     /// Submission instant on the service's virtual clock, seconds.
@@ -194,17 +232,35 @@ pub trait ActiveJob: Send {
     /// Run the next round but discard its output (spot preemption hit
     /// mid-round); the round stays pending.
     fn step_discard(&mut self) -> RoundMetrics;
+    /// Analytic flop volume of round `round` (from the plan's
+    /// per-round volumes) — what the scheduler feeds, with the round's
+    /// observed metrics, into the online profile recalibration.
+    fn round_flops(&self, round: usize) -> f64;
+    /// Re-price the round predictions on a (recalibrated) profile —
+    /// SRPT rankings then track the live cluster, not the seed
+    /// constants.
+    fn repredict(&mut self, profile: &ClusterProfile);
+    /// Re-plan the *pending* rounds under `profile` where the plan
+    /// permits it (auto-planned 3D jobs widen the tail ρ schedule via
+    /// the resumable [`StepRun`]); returns whether anything changed.
+    fn replan(&mut self, profile: &ClusterProfile) -> bool {
+        let _ = profile;
+        false
+    }
     /// Consume the finished job, returning its product and engine
     /// metrics. Panics if not [`is_done`](Self::is_done).
     fn finish(self: Box<Self>) -> (JobOutput, JobMetrics);
 }
 
-/// The one concrete [`ActiveJob`]: a resumable [`StepRun`], the
-/// cost-model round predictions, and a deferred output assembler
-/// (the only thing that differs between the three job kinds).
+/// Generic [`ActiveJob`] for the fixed-schedule kinds (2D dense,
+/// sparse): a resumable [`StepRun`], the cost-model round predictions
+/// and flop volumes, a profile-parametric re-predictor, and a deferred
+/// output assembler.
 struct SteppedJob<A: MultiRoundAlgorithm> {
     run: StepRun<A>,
     predicted: Vec<f64>,
+    flops: Vec<f64>,
+    predictor: Box<dyn Fn(&ClusterProfile) -> Vec<f64> + Send>,
     assemble: Box<dyn FnOnce(Vec<Pair<A::K, A::V>>) -> JobOutput + Send>,
 }
 
@@ -227,6 +283,12 @@ impl<A: MultiRoundAlgorithm + Send + 'static> ActiveJob for SteppedJob<A> {
     fn step_discard(&mut self) -> RoundMetrics {
         self.run.step_discard()
     }
+    fn round_flops(&self, round: usize) -> f64 {
+        self.flops[round]
+    }
+    fn repredict(&mut self, profile: &ClusterProfile) {
+        self.predicted = (self.predictor)(profile);
+    }
     fn finish(self: Box<Self>) -> (JobOutput, JobMetrics) {
         let this = *self;
         let res = this.run.into_result();
@@ -234,40 +296,139 @@ impl<A: MultiRoundAlgorithm + Send + 'static> ActiveJob for SteppedJob<A> {
     }
 }
 
+/// The 3D dense [`ActiveJob`]: concrete (not type-erased over the
+/// algorithm) so a mid-job re-plan can widen the pending rounds' ρ
+/// schedule through [`StepRun::alg_mut`] — the committed prefix and its
+/// carried accumulators stay untouched, only rounds ≥ `next_round` are
+/// restructured.
+struct Dense3dJob {
+    run: StepRun<Algo3d<DenseBlock>>,
+    side: usize,
+    block_side: usize,
+    grid: BlockGrid,
+    auto: bool,
+    predicted: Vec<f64>,
+    flops: Vec<f64>,
+}
+
+impl Dense3dJob {
+    /// Recompute predictions + flop volumes for the current schedule.
+    fn refresh(&mut self, profile: &ClusterProfile) {
+        let widths = self.run.alg().schedule().widths().to_vec();
+        self.predicted =
+            simulate_dense3d_schedule(self.side, self.block_side, &widths, profile).per_round();
+        self.flops = volumes_dense3d_schedule(self.side, self.block_side, &widths)
+            .iter()
+            .map(|v| v.flops)
+            .collect();
+    }
+}
+
+impl ActiveJob for Dense3dJob {
+    fn next_round(&self) -> usize {
+        self.run.next_round()
+    }
+    fn num_rounds(&self) -> usize {
+        self.run.num_rounds()
+    }
+    fn predicted_round_secs(&self, round: usize) -> f64 {
+        self.predicted[round]
+    }
+    fn slot_demand(&self) -> usize {
+        self.run.slot_demand()
+    }
+    fn step_commit(&mut self) -> RoundMetrics {
+        self.run.step_commit()
+    }
+    fn step_discard(&mut self) -> RoundMetrics {
+        self.run.step_discard()
+    }
+    fn round_flops(&self, round: usize) -> f64 {
+        self.flops[round]
+    }
+    fn repredict(&mut self, profile: &ClusterProfile) {
+        self.refresh(profile);
+    }
+    fn replan(&mut self, profile: &ClusterProfile) -> bool {
+        if !self.auto {
+            return false; // fixed plans are the tenant's to keep
+        }
+        let r0 = self.run.next_round();
+        let sched = self.run.alg().schedule();
+        if r0 >= sched.product_rounds() {
+            return false; // only the summation round (or nothing) left
+        }
+        let committed = sched.widths()[..r0].to_vec();
+        let current_tail = sched.widths()[r0..].to_vec();
+        let Ok((tail, _)) = plan_dense3d_tail(self.side, self.block_side, &committed, profile)
+        else {
+            return false;
+        };
+        if tail == current_tail {
+            return false;
+        }
+        if self.run.alg_mut().set_tail_widths(r0, tail).is_err() {
+            return false;
+        }
+        self.refresh(profile);
+        true
+    }
+    fn finish(self: Box<Self>) -> (JobOutput, JobMetrics) {
+        let this = *self;
+        let res = this.run.into_result();
+        (
+            JobOutput::Dense(dense_3d_assemble(&this.grid, res.output)),
+            res.metrics,
+        )
+    }
+}
+
 /// Validate `spec`, generate its inputs, and spawn the resumable job
-/// with its own (lazily spawned) worker pool. The scheduler uses
-/// [`spawn_job_on`] instead so all jobs share one set of cluster
-/// threads.
+/// with its own (lazily spawned) worker pool and predictions priced on
+/// the in-house profile. The scheduler uses [`spawn_job_on`] instead so
+/// all jobs share one set of cluster threads and its configured
+/// profile.
 pub fn spawn_job(
     spec: &JobSpec,
     engine: EngineConfig,
     backend: Arc<dyn LocalMultiply>,
 ) -> Result<Box<dyn ActiveJob>> {
-    spawn_job_on(spec, engine, backend, Arc::new(Pool::new(engine.workers)))
+    spawn_job_on(
+        spec,
+        engine,
+        backend,
+        Arc::new(Pool::new(engine.workers)),
+        &ClusterProfile::inhouse(),
+    )
 }
 
 /// Like [`spawn_job`], but the job's rounds execute on `pool` — the
 /// shared cluster slots every concurrent job of the service uses (one
-/// round occupies them at a time, so sharing is free).
-/// All jobs share `engine` (the cluster) and `backend` (the local
-/// multiply); predictions are priced on the in-house cluster profile so
-/// scheduling decisions are deterministic across machines.
+/// round occupies them at a time, so sharing is free) — and both the
+/// round-time predictions and any [`PlanChoice::Auto`] plan search are
+/// priced on `profile` (the service's configured or recalibrated
+/// cluster profile, not a hardcoded one).
 pub fn spawn_job_on(
     spec: &JobSpec,
     engine: EngineConfig,
     backend: Arc<dyn LocalMultiply>,
     pool: Arc<Pool>,
+    profile: &ClusterProfile,
 ) -> Result<Box<dyn ActiveJob>> {
-    let profile = ClusterProfile::inhouse();
     match spec.kind {
         JobKind::Dense3d {
             side,
             block_side,
             rho,
         } => {
-            let plan = Plan3d::new(side, block_side, rho)?;
+            let (plan, auto) = match spec.plan {
+                PlanChoice::Fixed => (Plan3d::new(side, block_side, rho)?, false),
+                PlanChoice::Auto { memory_budget } => {
+                    (plan_dense3d(side, memory_budget, profile)?.0, true)
+                }
+            };
             let (a, b) = dense_inputs(side, spec.seed);
-            let grid = BlockGrid::new(side, block_side);
+            let grid = BlockGrid::new(side, plan.block_side);
             let input = dense_3d_static_input(&grid, &a, &b);
             let geo: Geometry = plan.into();
             let alg = Algo3d::new(
@@ -278,20 +439,29 @@ pub fn spawn_job_on(
                     rho: geo.rho,
                 }),
             );
-            Ok(Box::new(SteppedJob {
+            let mut job = Dense3dJob {
                 run: StepRun::with_pool(engine, alg, input, pool.clone()),
-                predicted: simulate_dense3d(&plan, &profile).per_round(),
-                assemble: Box::new(move |out| {
-                    JobOutput::Dense(dense_3d_assemble(&grid, out))
-                }),
-            }))
+                side,
+                block_side: plan.block_side,
+                grid,
+                auto,
+                predicted: vec![],
+                flops: vec![],
+            };
+            job.refresh(profile);
+            Ok(Box::new(job))
         }
         JobKind::Dense2d {
             side,
             block_side,
             rho,
         } => {
-            let plan = Plan2d::new(side, block_side * block_side, rho)?;
+            let plan = match spec.plan {
+                PlanChoice::Fixed => Plan2d::new(side, block_side * block_side, rho)?,
+                PlanChoice::Auto { memory_budget } => {
+                    plan_dense2d(side, memory_budget, profile)?.0
+                }
+            };
             let (a, b) = dense_inputs(side, spec.seed);
             let input = Algo2d::static_input(plan, &a, &b);
             let alg = Algo2d::new(
@@ -304,7 +474,9 @@ pub fn spawn_job_on(
             );
             Ok(Box::new(SteppedJob {
                 run: StepRun::with_pool(engine, alg, input, pool.clone()),
-                predicted: simulate_dense2d(&plan, &profile).per_round(),
+                predicted: simulate_dense2d(&plan, profile).per_round(),
+                flops: volumes_dense2d(&plan).iter().map(|v| v.flops).collect(),
+                predictor: Box::new(move |p| simulate_dense2d(&plan, p).per_round()),
                 assemble: Box::new(move |out| {
                     JobOutput::Dense(Algo2d::assemble_output(plan, &out))
                 }),
@@ -318,9 +490,14 @@ pub fn spawn_job_on(
         } => {
             let delta = nnz_per_row as f64 / side as f64;
             let delta_m = delta.max(gen::er_output_density(side, delta));
-            let plan = SparsePlan::new(side, block_side, rho, delta, delta_m)?;
+            let plan = match spec.plan {
+                PlanChoice::Fixed => SparsePlan::new(side, block_side, rho, delta, delta_m)?,
+                PlanChoice::Auto { memory_budget } => {
+                    plan_sparse3d(side, nnz_per_row, memory_budget, profile)?.0
+                }
+            };
             let (a, b) = sparse_inputs(side, nnz_per_row, spec.seed);
-            let input = sparse_3d_static_input(block_side, &a, &b);
+            let input = sparse_3d_static_input(plan.block_side, &a, &b);
             let geo = Geometry {
                 q: plan.q(),
                 rho: plan.rho,
@@ -333,11 +510,14 @@ pub fn spawn_job_on(
                     rho: geo.rho,
                 }),
             );
+            let chosen_block = plan.block_side;
             Ok(Box::new(SteppedJob {
                 run: StepRun::with_pool(engine, alg, input, pool.clone()),
-                predicted: simulate_sparse3d(&plan, &profile).per_round(),
+                predicted: simulate_sparse3d(&plan, profile).per_round(),
+                flops: volumes_sparse3d(&plan).iter().map(|v| v.flops).collect(),
+                predictor: Box::new(move |p| simulate_sparse3d(&plan, p).per_round()),
                 assemble: Box::new(move |out| {
-                    JobOutput::Sparse(sparse_3d_assemble(side, block_side, out))
+                    JobOutput::Sparse(sparse_3d_assemble(side, chosen_block, out))
                 }),
             }))
         }
@@ -362,8 +542,16 @@ mod tests {
             id: 0,
             tenant: 0,
             kind,
+            plan: PlanChoice::Fixed,
             seed: 11,
             arrival_secs: 0.0,
+        }
+    }
+
+    fn auto_spec(kind: JobKind, memory_budget: usize) -> JobSpec {
+        JobSpec {
+            plan: PlanChoice::Auto { memory_budget },
+            ..spec(kind)
         }
     }
 
@@ -473,6 +661,148 @@ mod tests {
             rho: 3,
         });
         assert!(spawn_job(&bad, engine(), Arc::new(NaiveMultiply)).is_err());
+    }
+
+    #[test]
+    fn auto_jobs_of_every_kind_run_to_exact_products() {
+        // The kind's block/ρ are deliberately nonsense for Auto — the
+        // planner must override them with a valid searched plan.
+        for kind in [
+            JobKind::Dense3d {
+                side: 16,
+                block_side: 999,
+                rho: 999,
+            },
+            JobKind::Dense2d {
+                side: 16,
+                block_side: 999,
+                rho: 999,
+            },
+            JobKind::Sparse3d {
+                side: 64,
+                block_side: 999,
+                rho: 999,
+                nnz_per_row: 6,
+            },
+        ] {
+            let s = auto_spec(kind, 768);
+            let mut job = spawn_job(&s, engine(), Arc::new(NaiveMultiply)).unwrap();
+            assert!(job.num_rounds() >= 1, "{kind:?}");
+            while !job.is_done() {
+                job.step_commit();
+            }
+            let (out, _) = job.finish();
+            assert!(out.matches(&s), "{kind:?} auto product must be exact");
+        }
+    }
+
+    #[test]
+    fn auto_dense3d_picks_the_searched_plan() {
+        // Budget 3·4² = 48 on side 16 admits blocks up to 4; the
+        // unconstrained in-house profile picks the monolithic plan
+        // (block 4, ρ = q = 4) → 2 rounds.
+        let s = auto_spec(
+            JobKind::Dense3d {
+                side: 16,
+                block_side: 1,
+                rho: 1,
+            },
+            48,
+        );
+        let job = spawn_job(&s, engine(), Arc::new(NaiveMultiply)).unwrap();
+        assert_eq!(job.num_rounds(), 2, "auto must pick the monolithic plan");
+    }
+
+    #[test]
+    fn auto_with_impossible_budget_errors() {
+        let s = auto_spec(
+            JobKind::Dense3d {
+                side: 16,
+                block_side: 4,
+                rho: 2,
+            },
+            2,
+        );
+        assert!(spawn_job(&s, engine(), Arc::new(NaiveMultiply)).is_err());
+    }
+
+    #[test]
+    fn repredict_rescales_predictions_with_the_profile() {
+        let s = spec(JobKind::Dense3d {
+            side: 16,
+            block_side: 4,
+            rho: 2,
+        });
+        let mut job = spawn_job(&s, engine(), Arc::new(NaiveMultiply)).unwrap();
+        let before: Vec<f64> = (0..job.num_rounds())
+            .map(|r| job.predicted_round_secs(r))
+            .collect();
+        // A profile with 10× the bandwidth and flops must predict
+        // strictly cheaper rounds.
+        let mut fast = ClusterProfile::inhouse();
+        fast.net_bw *= 10.0;
+        fast.disk_bw *= 10.0;
+        fast.flops_per_node *= 10.0;
+        fast.round_setup /= 10.0;
+        job.repredict(&fast);
+        for (r, b) in before.iter().enumerate() {
+            assert!(
+                job.predicted_round_secs(r) < *b,
+                "round {r} must get cheaper on a faster profile"
+            );
+        }
+        for r in 0..job.num_rounds() {
+            assert!(job.round_flops(r) > 0.0);
+        }
+    }
+
+    #[test]
+    fn auto_dense3d_replans_the_pending_tail() {
+        // Plan on a memory-constrained profile (aggregate 16·3072 B
+        // admits 3ρn·8 B only for ρ ≤ 2 at n = 1024 → 5 rounds at
+        // q = 8), commit one round, then re-plan on the unconstrained
+        // profile: the tail must widen to one ρ=6 round, shrinking the
+        // job to 3 rounds — and the product stays exact.
+        let constrained = ClusterProfile::inhouse().with_mem_per_node(3072.0);
+        let s = auto_spec(
+            JobKind::Dense3d {
+                side: 32,
+                block_side: 1,
+                rho: 1,
+            },
+            48,
+        );
+        let mut job = spawn_job_on(
+            &s,
+            engine(),
+            Arc::new(NaiveMultiply),
+            Arc::new(Pool::new(engine().workers)),
+            &constrained,
+        )
+        .unwrap();
+        assert_eq!(job.num_rounds(), 5, "constrained auto plan: q=8, rho=2");
+        job.step_commit();
+        assert!(job.replan(&ClusterProfile::inhouse()), "tail must widen");
+        assert_eq!(job.num_rounds(), 3, "widths [2, 6] + final");
+        assert!(!job.replan(&ClusterProfile::inhouse()), "already optimal");
+        while !job.is_done() {
+            job.step_commit();
+        }
+        let (out, metrics) = job.finish();
+        assert_eq!(metrics.num_rounds(), 3);
+        assert!(out.matches(&s), "re-planned product must be exact");
+    }
+
+    #[test]
+    fn fixed_jobs_never_replan() {
+        let s = spec(JobKind::Dense3d {
+            side: 16,
+            block_side: 4,
+            rho: 1,
+        });
+        let mut job = spawn_job(&s, engine(), Arc::new(NaiveMultiply)).unwrap();
+        job.step_commit();
+        assert!(!job.replan(&ClusterProfile::inhouse()));
     }
 
     #[test]

@@ -240,6 +240,7 @@ mod tests {
                 block_side: 4,
                 rho: 2,
             },
+            plan: crate::service::job::PlanChoice::Fixed,
             seed: 1,
             arrival_secs: arrive,
         };

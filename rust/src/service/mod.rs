@@ -8,10 +8,14 @@
 //! realises that setting in-process:
 //!
 //! * [`job`] — [`job::JobSpec`] submissions (dense 3D/2D and sparse
-//!   multiplications with per-job ρ, block side, and tenant id), spawned
-//!   into type-erased [`job::ActiveJob`]s built on the resumable
-//!   [`crate::mapreduce::StepRun`] step API. Round-time predictions come
-//!   from the [`crate::simulator`] cost model.
+//!   multiplications with per-job ρ, block side, and tenant id — or
+//!   [`job::PlanChoice::Auto`] with a memory budget, letting the
+//!   auto-planner pick the knobs on the service's cluster profile),
+//!   spawned into type-erased [`job::ActiveJob`]s built on the
+//!   resumable [`crate::mapreduce::StepRun`] step API. Round-time
+//!   predictions come from the [`crate::simulator`] cost model and are
+//!   re-priced (auto jobs: re-planned) as online recalibration updates
+//!   the profile.
 //! * [`scheduler`] — the round-level scheduler: between any two rounds
 //!   it may switch jobs, interleaving the round sequences of concurrent
 //!   jobs over the shared [`crate::mapreduce::executor::Pool`] under a
@@ -40,7 +44,9 @@ pub mod scheduler;
 pub mod spot;
 pub mod workload;
 
-pub use job::{reference_product, spawn_job, spawn_job_on, JobKind, JobOutput, JobSpec};
+pub use job::{
+    reference_product, spawn_job, spawn_job_on, ActiveJob, JobKind, JobOutput, JobSpec, PlanChoice,
+};
 pub use metrics::{JobReport, ServiceMetrics, TenantSummary};
 pub use scheduler::{run_service, CompletedJob, Policy, RoundTrace, ServiceConfig, ServiceOutcome};
 pub use spot::{poisson_preemptions, replay_with_preemptions, SpotReplay};

@@ -20,12 +20,19 @@
 //! suppresses the gang for that turn so spot semantics stay
 //! single-victim.
 //!
-//! Time: scheduling runs on a deterministic *virtual clock* advanced by
-//! the cost-model prediction of each round (the same numbers SRPT
-//! ranks by; a gang window advances by the longer of the pair), so a
-//! given seed and policy always produce the same schedule regardless
-//! of host speed; real wall times are recorded alongside for
-//! reporting.
+//! Time: scheduling runs on a *virtual clock* advanced by the
+//! cost-model prediction of each round (the same numbers SRPT ranks
+//! by; a gang window advances by the longer of the pair). With
+//! recalibration off ([`ServiceConfig::recalibrate`]) a given seed and
+//! policy always produce the same schedule regardless of host speed;
+//! with it on, every *solo*-committed round's observed metrics are
+//! folded into an online [`ProfileTracker`] (gang-window rounds are
+//! excluded — their wall times include the partner round's pool
+//! contention and would bias the fitted rates), all active jobs are
+//! re-priced on the recalibrated profile (SRPT tracks the live
+//! cluster), and auto-planned jobs may re-plan their pending rounds' ρ
+//! schedule mid-job — at the cost of host-dependent schedules. Real
+//! wall times are recorded alongside in both modes.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -34,6 +41,7 @@ use anyhow::Result;
 
 use crate::mapreduce::{EngineConfig, Pool};
 use crate::runtime::LocalMultiply;
+use crate::simulator::{ClusterProfile, ProfileTracker};
 
 use super::job::{spawn_job_on, ActiveJob, JobOutput, JobSpec};
 use super::metrics::{JobReport, ServiceMetrics};
@@ -72,8 +80,9 @@ impl Policy {
     }
 }
 
-/// Service configuration: the shared cluster, the policy, and the
-/// spot-market preemption schedule (virtual-time instants).
+/// Service configuration: the shared cluster, the policy, the
+/// spot-market preemption schedule (virtual-time instants), and the
+/// cluster profile that prices predictions and auto-plans.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     /// Shared cluster (slots / workers) every round runs on.
@@ -84,6 +93,32 @@ pub struct ServiceConfig {
     /// job occupying the cluster; each discards only that in-flight
     /// round. Instants that land on an idle cluster are ignored.
     pub preemptions: Vec<f64>,
+    /// Cluster profile that prices round predictions (the SRPT signal
+    /// and virtual clock) and [`super::job::PlanChoice::Auto`] plan
+    /// searches — per service, not hardcoded.
+    pub profile: ClusterProfile,
+    /// Feed every solo-committed round's observed metrics back into an
+    /// online [`ProfileTracker`], re-pricing (and, for auto jobs,
+    /// re-planning) all active jobs on the recalibrated profile
+    /// (gang-window rounds are excluded — see the module docs).
+    /// Opt-in because the observations include measured wall times:
+    /// with it on, schedules track the live machine instead of being
+    /// bit-reproducible across hosts.
+    pub recalibrate: bool,
+}
+
+impl ServiceConfig {
+    /// A config with no preemptions, the in-house profile, and
+    /// recalibration off — the deterministic baseline.
+    pub fn new(engine: EngineConfig, policy: Policy) -> Self {
+        Self {
+            engine,
+            policy,
+            preemptions: vec![],
+            profile: ClusterProfile::inhouse(),
+            recalibrate: false,
+        }
+    }
 }
 
 /// One scheduled round attempt, for interleaving analysis and tests.
@@ -165,6 +200,34 @@ fn record_commit(
     });
 }
 
+/// Fold committed-round observations into the tracker, then re-price
+/// every active job on the recalibrated profile and let auto-planned
+/// jobs re-plan their pending rounds — the online feedback loop from
+/// observed metrics to SRPT predictions and ρ schedules.
+fn recalibrate_after_commit(
+    tracker: &mut ProfileTracker,
+    observations: &[(&crate::mapreduce::RoundMetrics, f64)],
+    active: &mut [Entry],
+) {
+    for (m, flops) in observations {
+        tracker.observe_round(m, *flops);
+    }
+    let profile = tracker.profile();
+    for e in active.iter_mut() {
+        // A successful replan already re-prices on `profile`, so only
+        // unchanged jobs need the explicit repredict.
+        if e.job.replan(&profile) {
+            // The schedule (and with it the logical round count)
+            // changed; the report's total must follow or every
+            // downstream `executed == total + preemptions` invariant
+            // breaks.
+            e.report.rounds_total = e.job.num_rounds();
+        } else {
+            e.job.repredict(&profile);
+        }
+    }
+}
+
 /// Retire the job at `active[i]` if all of its rounds have committed.
 fn retire_if_done(
     active: &mut Vec<Entry>,
@@ -189,9 +252,11 @@ fn retire_if_done(
 
 /// Run `specs` to completion on the shared cluster under `cfg`.
 ///
-/// Deterministic: the schedule depends only on the specs (arrivals,
-/// seeds), the policy, and the preemption schedule — never on measured
-/// wall time.
+/// With `cfg.recalibrate` off (the default) the schedule is
+/// deterministic: it depends only on the specs (arrivals, seeds), the
+/// policy, the profile, and the preemption schedule — never on measured
+/// wall time. With recalibration on, committed rounds' observed metrics
+/// feed predictions and re-plans, so the schedule tracks the live host.
 pub fn run_service(
     specs: &[JobSpec],
     cfg: &ServiceConfig,
@@ -219,12 +284,19 @@ pub fn run_service(
     // driver runs its rounds on this shared pool (rounds never overlap,
     // so per-job pools would only multiply idle threads).
     let pool = Arc::new(Pool::new(cfg.engine.workers));
+    // Online recalibration state: committed rounds' observed metrics
+    // blend the configured profile toward the live cluster. Without
+    // `cfg.recalibrate` the tracker never observes and `profile()`
+    // stays the seed.
+    let mut tracker = ProfileTracker::new(cfg.profile);
 
     loop {
-        // Admit every job that has arrived by now.
+        // Admit every job that has arrived by now, planned and priced
+        // on the current (possibly recalibrated) profile.
         while arrivals.peek().is_some_and(|s| s.arrival_secs <= clock) {
             let spec = arrivals.next().unwrap();
-            let job = spawn_job_on(&spec, cfg.engine, backend.clone(), pool.clone())?;
+            let profile = tracker.profile();
+            let job = spawn_job_on(&spec, cfg.engine, backend.clone(), pool.clone(), &profile)?;
             let report = JobReport::submitted(&spec, job.num_rounds());
             active.push(Entry { spec, job, report });
         }
@@ -307,6 +379,12 @@ pub fn run_service(
                         &mut tenant_service,
                     );
                 }
+                // Gang-window rounds are NOT fed to the profile
+                // tracker: both rounds share the pool for the window,
+                // so each one's phase wall times include the partner's
+                // contention and would bias the recalibrated rates
+                // (≈2× low when most rounds gang). Solo commits carry
+                // the recalibration signal.
                 clock += window;
                 // Retire completed jobs, higher index first so the
                 // lower swap_remove index stays valid (lo < hi by
@@ -326,6 +404,7 @@ pub fn run_service(
         }
         let round = e.job.next_round();
         let pred = e.job.predicted_round_secs(round).max(1e-9);
+        let flops = e.job.round_flops(round);
 
         let strike = next_preempt < preempts.len() && preempts[next_preempt] < clock + pred;
         if strike {
@@ -364,6 +443,9 @@ pub fn run_service(
             &mut trace,
             &mut tenant_service,
         );
+        if cfg.recalibrate {
+            recalibrate_after_commit(&mut tracker, &[(&m, flops)], &mut active);
+        }
         clock += pred;
         retire_if_done(&mut active, idx, clock, &mut reports, &mut completed);
     }
@@ -449,7 +531,7 @@ fn pick_partner(
 mod tests {
     use super::*;
     use crate::runtime::NaiveMultiply;
-    use crate::service::job::JobKind;
+    use crate::service::job::{JobKind, PlanChoice};
 
     fn engine() -> EngineConfig {
         EngineConfig {
@@ -468,17 +550,14 @@ mod tests {
                 block_side: 4,
                 rho,
             },
+            plan: PlanChoice::Fixed,
             seed: 100 + id as u64,
             arrival_secs: arrival,
         }
     }
 
     fn cfg(policy: Policy) -> ServiceConfig {
-        ServiceConfig {
-            engine: engine(),
-            policy,
-            preemptions: vec![],
-        }
+        ServiceConfig::new(engine(), policy)
     }
 
     fn run(specs: &[JobSpec], c: &ServiceConfig) -> ServiceOutcome {
@@ -603,11 +682,7 @@ mod tests {
     #[test]
     fn gang_schedules_two_underfilled_rounds() {
         let specs = vec![small3d(0, 0, 0.0, 2), small3d(1, 1, 0.0, 2)];
-        let c = ServiceConfig {
-            engine: underfilled_engine(),
-            policy: Policy::Fair,
-            preemptions: vec![],
-        };
+        let c = ServiceConfig::new(underfilled_engine(), Policy::Fair);
         let out = run(&specs, &c);
         let gang: Vec<&RoundTrace> = out.trace.iter().filter(|t| t.gang).collect();
         assert!(!gang.is_empty(), "underfilled rounds must gang: {:?}", out.trace);
@@ -636,11 +711,7 @@ mod tests {
     fn gang_scheduling_is_deterministic() {
         let specs: Vec<JobSpec> = (0..4).map(|i| small3d(i, i % 2, 0.0, 2)).collect();
         for policy in [Policy::Fifo, Policy::Fair, Policy::Srpt] {
-            let c = ServiceConfig {
-                engine: underfilled_engine(),
-                policy,
-                preemptions: vec![],
-            };
+            let c = ServiceConfig::new(underfilled_engine(), policy);
             let a = run(&specs, &c);
             let b = run(&specs, &c);
             assert_eq!(a.trace, b.trace, "policy {policy:?} gang schedule must be deterministic");
@@ -654,22 +725,14 @@ mod tests {
         // solo path: the victim is single and spot accounting is
         // unchanged.
         let specs = vec![small3d(0, 0, 0.0, 2), small3d(1, 1, 0.0, 2)];
-        let probe = run(
-            &specs,
-            &ServiceConfig {
-                engine: underfilled_engine(),
-                policy: Policy::Fair,
-                preemptions: vec![],
-            },
-        );
+        let probe = run(&specs, &ServiceConfig::new(underfilled_engine(), Policy::Fair));
         let first = &probe.trace[0];
         let strike_at = first.start_secs + 0.5 * first.duration_secs;
         let out = run(
             &specs,
             &ServiceConfig {
-                engine: underfilled_engine(),
-                policy: Policy::Fair,
                 preemptions: vec![strike_at],
+                ..ServiceConfig::new(underfilled_engine(), Policy::Fair)
             },
         );
         let discarded: Vec<&RoundTrace> = out.trace.iter().filter(|t| !t.committed).collect();
@@ -678,6 +741,74 @@ mod tests {
         assert_eq!(out.metrics.jobs.iter().map(|j| j.preemptions).sum::<usize>(), 1);
         for c in &out.completed {
             assert!(c.output.matches(&c.spec));
+        }
+    }
+
+    fn auto3d(id: usize, tenant: usize, arrival: f64, budget: usize) -> JobSpec {
+        JobSpec {
+            plan: PlanChoice::Auto {
+                memory_budget: budget,
+            },
+            ..small3d(id, tenant, arrival, 1)
+        }
+    }
+
+    #[test]
+    fn auto_jobs_run_through_the_service() {
+        // Mixed fixed/auto workload: every product exact, and the auto
+        // job's round count reflects the searched plan (monolithic on
+        // the unconstrained in-house profile → 2 rounds), not the
+        // kind's nominal ρ=1 (5 rounds).
+        let specs = vec![small3d(0, 0, 0.0, 1), auto3d(1, 1, 0.0, 48)];
+        let out = run(&specs, &cfg(Policy::Fair));
+        assert_eq!(out.completed.len(), 2);
+        for c in &out.completed {
+            assert!(c.output.matches(&c.spec), "job {} wrong product", c.spec.id);
+        }
+        let auto_report = &out.metrics.jobs[1];
+        assert_eq!(auto_report.rounds_total, 2, "auto job planned monolithic");
+    }
+
+    #[test]
+    fn auto_jobs_respect_the_configured_profile() {
+        // The same auto spec planned on a memory-constrained profile
+        // must choose ρ < q (more rounds) — ServiceConfig.profile is
+        // live, not the hardcoded in-house constants. n = 256 words →
+        // 3ρn·8 B = 6144ρ B against 16·400 B aggregate admits only
+        // ρ = 1, and block 4 (q = 4) still minimises rounds.
+        let specs = vec![auto3d(0, 0, 0.0, 48)];
+        let mut constrained = cfg(Policy::Fifo);
+        constrained.profile = ClusterProfile::inhouse().with_mem_per_node(400.0);
+        let out = run(&specs, &constrained);
+        let r = &out.metrics.jobs[0];
+        assert_eq!(r.rounds_total, 5, "constrained context → rho 1, q 4");
+        assert!(out.completed[0].output.matches(&specs[0]));
+    }
+
+    #[test]
+    fn recalibration_keeps_products_exact_and_completes() {
+        // With recalibration on, predictions chase measured wall times
+        // (host-dependent), but scheduling stays valid: every job
+        // completes with an exact product and a causally ordered
+        // report.
+        let specs = vec![
+            small3d(0, 0, 0.0, 1),
+            small3d(1, 1, 0.0, 2),
+            auto3d(2, 2, 0.0, 48),
+        ];
+        let mut c = cfg(Policy::Srpt);
+        c.recalibrate = true;
+        let out = run(&specs, &c);
+        assert_eq!(out.completed.len(), 3);
+        for cj in &out.completed {
+            assert!(cj.output.matches(&cj.spec), "job {} wrong product", cj.spec.id);
+        }
+        for r in &out.metrics.jobs {
+            assert!(r.completion_secs > 0.0);
+            assert!(r.rounds_executed >= 1);
+            // Holds even when a mid-job replan shrank the schedule:
+            // rounds_total is updated alongside the re-plan.
+            assert_eq!(r.rounds_executed, r.rounds_total + r.preemptions);
         }
     }
 

@@ -3,12 +3,15 @@
 //! A seeded arrival process (exponential inter-arrival times) over a
 //! menu of mixed job shapes — dense 3D at several sizes and ρ, the 2D
 //! baseline, and sparse Erdős–Rényi jobs — assigned round-robin-free to
-//! random tenants. Every spec is valid by construction (ρ divides the
-//! geometry), and the same seed always yields byte-identical specs.
+//! random tenants. A configurable fraction of jobs arrive with
+//! [`PlanChoice::Auto`] (the tenant supplies only a memory budget and
+//! lets the service pick the plan), the rest with explicit knobs.
+//! Every spec is valid by construction (ρ divides the geometry), and
+//! the same seed always yields byte-identical specs.
 
 use crate::util::rng::Xoshiro256ss;
 
-use super::job::{JobKind, JobSpec};
+use super::job::{JobKind, JobSpec, PlanChoice};
 
 /// Workload generator parameters.
 #[derive(Debug, Clone)]
@@ -21,6 +24,12 @@ pub struct WorkloadConfig {
     pub seed: u64,
     /// Mean of the exponential inter-arrival time, virtual seconds.
     pub mean_interarrival_secs: f64,
+    /// Fraction of jobs submitted with [`PlanChoice::Auto`] (0.0 keeps
+    /// the all-fixed workload; 1.0 makes every tenant delegate the
+    /// plan).
+    pub auto_fraction: f64,
+    /// Reducer-memory budget, words, carried by auto submissions.
+    pub memory_budget: usize,
 }
 
 impl Default for WorkloadConfig {
@@ -30,6 +39,8 @@ impl Default for WorkloadConfig {
             tenants: 4,
             seed: 7,
             mean_interarrival_secs: 25.0,
+            auto_fraction: 0.0,
+            memory_budget: 768,
         }
     }
 }
@@ -100,10 +111,20 @@ pub fn generate(cfg: &WorkloadConfig) -> Vec<JobSpec> {
             // Exponential inter-arrival; 1-U ∈ (0,1] avoids ln(0).
             let u = 1.0 - rng.next_f64();
             clock += -u.ln() * cfg.mean_interarrival_secs;
+            // The auto draw is unconditional so the spec stream stays
+            // identical across auto_fraction values.
+            let auto = rng.next_f64() < cfg.auto_fraction;
             JobSpec {
                 id,
                 tenant: rng.next_usize(cfg.tenants.max(1)),
                 kind: draw_kind(&mut rng),
+                plan: if auto {
+                    PlanChoice::Auto {
+                        memory_budget: cfg.memory_budget,
+                    }
+                } else {
+                    PlanChoice::Fixed
+                },
                 seed: rng.next_u64(),
                 arrival_secs: clock,
             }
@@ -126,6 +147,7 @@ pub fn skewed(small_jobs: usize, seed: u64) -> Vec<JobSpec> {
             block_side: 8,
             rho: 1,
         },
+        plan: PlanChoice::Fixed,
         seed: rng.next_u64(),
         arrival_secs: 0.0,
     }];
@@ -139,6 +161,7 @@ pub fn skewed(small_jobs: usize, seed: u64) -> Vec<JobSpec> {
                 block_side: 4,
                 rho: 2,
             },
+            plan: PlanChoice::Fixed,
             seed: rng.next_u64(),
             arrival_secs: 1.0 + i as f64,
         });
@@ -194,6 +217,42 @@ mod tests {
                 .unwrap_or_else(|e| panic!("spec {s:?} invalid: {e}"));
             // 3D jobs have ≥ 2 rounds; a 2D job with ρ = s has exactly 1.
             assert!(job.num_rounds() >= 1);
+        }
+    }
+
+    #[test]
+    fn auto_fraction_mixes_plan_choices_and_spawns() {
+        let specs = generate(&WorkloadConfig {
+            jobs: 48,
+            seed: 123,
+            auto_fraction: 0.5,
+            ..Default::default()
+        });
+        let autos = specs
+            .iter()
+            .filter(|s| matches!(s.plan, PlanChoice::Auto { .. }))
+            .count();
+        assert!(autos > 8 && autos < 40, "≈half the jobs auto: {autos}/48");
+        // Every auto spec must survive the plan search end-to-end.
+        let engine = EngineConfig {
+            map_tasks: 2,
+            reduce_tasks: 2,
+            workers: 2,
+        };
+        for s in specs.iter().filter(|s| s.plan != PlanChoice::Fixed) {
+            spawn_job(s, engine, Arc::new(NaiveMultiply))
+                .unwrap_or_else(|e| panic!("auto spec {s:?} invalid: {e}"));
+        }
+        // The only difference from the fixed stream is the plan field.
+        let fixed = generate(&WorkloadConfig {
+            jobs: 48,
+            seed: 123,
+            auto_fraction: 0.0,
+            ..Default::default()
+        });
+        for (a, f) in specs.iter().zip(&fixed) {
+            assert_eq!(a.kind, f.kind, "shape stream must not shift");
+            assert_eq!(a.seed, f.seed);
         }
     }
 

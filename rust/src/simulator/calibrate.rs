@@ -5,8 +5,19 @@
 //! profile for *this machine* from measured [`JobMetrics`] so the
 //! real-engine runs in `examples/e2e_dense.rs` and the simulator can be
 //! cross-checked (EXPERIMENTS.md §Calibration).
+//!
+//! Two fitting modes:
+//!
+//! * [`fit_local_profile`] — one-shot batch fit from a completed sweep.
+//! * [`ProfileTracker`] — *online* recalibration: the round-level
+//!   scheduler feeds every committed round's observed [`RoundMetrics`]
+//!   (shuffled bytes, output chunk sizes, phase wall times, pool
+//!   utilisation) into the tracker, which blends the seed profile's
+//!   rate constants toward the measured rates, so SRPT predictions and
+//!   mid-job re-plans track the live cluster instead of the seed
+//!   constants.
 
-use crate::mapreduce::JobMetrics;
+use crate::mapreduce::{JobMetrics, RoundMetrics};
 use crate::util::stats;
 
 use super::profile::ClusterProfile;
@@ -73,6 +84,7 @@ pub fn fit_local_profile(obs: &[Observation], bytes_per_word: f64) -> ClusterPro
         chunk_ref_bytes: 1.0,
         bytes_per_word,
         spill_factor: 0.0, // in-memory rounds: no shuffle spill
+        mem_per_node_bytes: 8.0e9, // one in-process box: a laptop's worth
     }
 }
 
@@ -81,6 +93,123 @@ fn safe_div(num: f64, den: f64, default: f64) -> f64 {
         num / den
     } else {
         default
+    }
+}
+
+/// Online profile recalibration from committed rounds.
+///
+/// Accumulates observed volumes and wall times; [`profile`] blends the
+/// seed profile's rate constants toward the observed aggregate rates
+/// with weight `rounds / (rounds + half_life)`, so early rounds barely
+/// move the seed and the estimate converges as evidence accumulates.
+/// Observed aggregate rates are divided across the seed's node count,
+/// keeping the simulator's `agg_*` arithmetic consistent.
+///
+/// Determinism note: the observations include measured wall times, so
+/// anything scheduled off a recalibrated profile depends on the host's
+/// actual speed. The service keeps recalibration opt-in
+/// (`ServiceConfig::recalibrate`) for exactly this reason.
+///
+/// [`profile`]: ProfileTracker::profile
+#[derive(Debug, Clone)]
+pub struct ProfileTracker {
+    seed: ClusterProfile,
+    half_life_rounds: f64,
+    rounds: usize,
+    flops: f64,
+    kernel_secs: f64,
+    shuffle_bytes: f64,
+    shuffle_secs: f64,
+    write_bytes: f64,
+    write_secs: f64,
+    setup_secs: f64,
+    chunk_bytes_sum: f64,
+    chunk_count: f64,
+}
+
+impl ProfileTracker {
+    /// New tracker around `seed` (half-life: 8 observed rounds).
+    pub fn new(seed: ClusterProfile) -> Self {
+        Self {
+            seed,
+            half_life_rounds: 8.0,
+            rounds: 0,
+            flops: 0.0,
+            kernel_secs: 0.0,
+            shuffle_bytes: 0.0,
+            shuffle_secs: 0.0,
+            write_bytes: 0.0,
+            write_secs: 0.0,
+            setup_secs: 0.0,
+            chunk_bytes_sum: 0.0,
+            chunk_count: 0.0,
+        }
+    }
+
+    /// The seed profile the tracker recalibrates.
+    pub fn seed(&self) -> &ClusterProfile {
+        &self.seed
+    }
+
+    /// Committed rounds observed so far.
+    pub fn rounds_observed(&self) -> usize {
+        self.rounds
+    }
+
+    /// Fold one committed round's observations in. `flops` is the
+    /// round's arithmetic volume (the plan's per-round flop count —
+    /// known analytically, not measured).
+    pub fn observe_round(&mut self, m: &RoundMetrics, flops: f64) {
+        let bpw = self.seed.bytes_per_word;
+        self.flops += flops;
+        self.kernel_secs += m.kernel_time.as_secs_f64();
+        self.shuffle_bytes += m.shuffle_words as f64 * bpw;
+        self.shuffle_secs += (m.map_time + m.shuffle_time).as_secs_f64();
+        self.write_bytes += m.output_words as f64 * bpw;
+        self.write_secs += m.write_time.as_secs_f64();
+        // The slack the pool could not fill is the round's effective
+        // fixed overhead (scheduling, barriers) — the engine-scale
+        // analogue of the paper's per-round infrastructure cost.
+        let wall = m.total_time().as_secs_f64();
+        self.setup_secs += wall * (1.0 - m.pool_utilisation.clamp(0.0, 1.0));
+        let chunk = m.mean_output_chunk_words();
+        if chunk > 0.0 {
+            self.chunk_bytes_sum += chunk * bpw;
+            self.chunk_count += 1.0;
+        }
+        self.rounds += 1;
+    }
+
+    /// Mean observed output-chunk size, bytes (0 before any evidence).
+    pub fn observed_mean_chunk_bytes(&self) -> f64 {
+        safe_div(self.chunk_bytes_sum, self.chunk_count, 0.0)
+    }
+
+    /// The recalibrated profile: seed constants blended toward the
+    /// observed rates (the seed itself before any observation).
+    pub fn profile(&self) -> ClusterProfile {
+        if self.rounds == 0 {
+            return self.seed;
+        }
+        let w = self.rounds as f64 / (self.rounds as f64 + self.half_life_rounds);
+        let nodes = self.seed.nodes.max(1) as f64;
+        let mix = |seed: f64, observed_agg: f64| -> f64 {
+            if observed_agg <= 0.0 {
+                return seed;
+            }
+            (1.0 - w) * seed + w * observed_agg / nodes
+        };
+        let flops_rate = safe_div(self.flops, self.kernel_secs, 0.0);
+        let net_rate = safe_div(self.shuffle_bytes, self.shuffle_secs, 0.0);
+        let disk_rate = safe_div(self.write_bytes, self.write_secs, 0.0);
+        let mut p = self.seed;
+        p.name = "recalibrated";
+        p.flops_per_node = mix(self.seed.flops_per_node, flops_rate);
+        p.net_bw = mix(self.seed.net_bw, net_rate);
+        p.disk_bw = mix(self.seed.disk_bw, disk_rate);
+        p.round_setup =
+            (1.0 - w) * self.seed.round_setup + w * self.setup_secs / self.rounds as f64;
+        p
     }
 }
 
@@ -151,5 +280,70 @@ mod tests {
     #[should_panic(expected = "at least one observation")]
     fn empty_observations_panic() {
         let _ = fit_local_profile(&[], 4.0);
+    }
+
+    fn observed_round(secs: f64) -> RoundMetrics {
+        RoundMetrics {
+            round: 0,
+            shuffle_words: 1_000_000,
+            output_words: 500_000,
+            output_words_per_task: vec![250_000, 250_000],
+            pool_utilisation: 0.5,
+            map_time: Duration::from_secs_f64(secs * 0.3),
+            shuffle_time: Duration::from_secs_f64(secs * 0.2),
+            reduce_time: Duration::from_secs_f64(secs * 0.4),
+            write_time: Duration::from_secs_f64(secs * 0.1),
+            kernel_time: Duration::from_secs_f64(secs * 0.35),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn tracker_without_evidence_returns_the_seed() {
+        let seed = ClusterProfile::inhouse();
+        let t = ProfileTracker::new(seed);
+        assert_eq!(t.profile(), seed);
+        assert_eq!(t.rounds_observed(), 0);
+    }
+
+    #[test]
+    fn tracker_pulls_rates_toward_observations() {
+        // Observed shuffle rate: 8 MB over 0.5 s = 16 MB/s aggregate =
+        // 1 MB/s per seed node — far below the in-house 40 MB/s, so
+        // every observation must pull net_bw down, monotonically.
+        let seed = ClusterProfile::inhouse();
+        let mut t = ProfileTracker::new(seed);
+        let mut prev = seed.net_bw;
+        for _ in 0..16 {
+            t.observe_round(&observed_round(1.0), 1e9);
+            let p = t.profile();
+            assert!(p.net_bw < prev, "net_bw must keep falling toward the evidence");
+            assert!(p.net_bw > 0.0);
+            prev = p.net_bw;
+        }
+        let p = t.profile();
+        assert_eq!(p.name, "recalibrated");
+        // Structural constants are not recalibrated.
+        assert_eq!(p.nodes, seed.nodes);
+        assert_eq!(p.small_chunk_coeff, seed.small_chunk_coeff);
+        assert_eq!(p.mem_per_node_bytes, seed.mem_per_node_bytes);
+        // Converges toward observed aggregate / nodes = 1 MB/s.
+        assert!(p.net_bw < seed.net_bw * 0.5, "p.net_bw = {}", p.net_bw);
+        // Chunk evidence is exposed for inspection.
+        assert_eq!(t.observed_mean_chunk_bytes(), 250_000.0 * 8.0);
+    }
+
+    #[test]
+    fn tracker_setup_reflects_unfilled_pool_time() {
+        // Utilisation 0.5 on a 1 s round → 0.5 s of per-round slack;
+        // after many rounds round_setup must sit well below the 17 s
+        // seed and above zero.
+        let mut t = ProfileTracker::new(ClusterProfile::inhouse());
+        for _ in 0..32 {
+            t.observe_round(&observed_round(1.0), 1e9);
+        }
+        let p = t.profile();
+        assert!(p.round_setup < 17.0);
+        assert!(p.round_setup > 0.0);
     }
 }

@@ -25,6 +25,10 @@ pub mod costmodel;
 pub mod profile;
 pub mod simulate;
 
-pub use costmodel::{RoundCost, SimResult};
+pub use calibrate::{fit_local_profile, Observation, ProfileTracker};
+pub use costmodel::{RoundCost, RoundVolumes, SimResult};
 pub use profile::ClusterProfile;
-pub use simulate::{simulate_dense2d, simulate_dense3d, simulate_sparse3d};
+pub use simulate::{
+    price_rounds, simulate_dense2d, simulate_dense3d, simulate_dense3d_schedule, simulate_sparse3d,
+    volumes_dense2d, volumes_dense3d, volumes_dense3d_schedule, volumes_sparse3d,
+};

@@ -39,6 +39,12 @@ pub struct ClusterProfile {
     /// the reduce side). 1.0 models Hadoop; 0.0 models a fully
     /// in-memory engine à la Spark (ablation knob).
     pub spill_factor: f64,
+    /// Working memory per node, bytes. Bounds the per-round working set
+    /// a plan may put in flight: a round shuffling `3ρn` words must fit
+    /// the cluster's aggregate memory, which is what forces `ρ < q` on
+    /// memory-constrained contexts (the auto-planner's feasibility
+    /// check; the paper's §1 "execution context" made concrete).
+    pub mem_per_node_bytes: f64,
 }
 
 impl ClusterProfile {
@@ -57,6 +63,7 @@ impl ClusterProfile {
             chunk_ref_bytes: 1.0e9,
             bytes_per_word: 8.0,
             spill_factor: 1.0,
+            mem_per_node_bytes: 24.0e9,
         }
     }
 
@@ -76,6 +83,7 @@ impl ClusterProfile {
             chunk_ref_bytes: 1.0e9,
             bytes_per_word: 8.0,
             spill_factor: 1.0,
+            mem_per_node_bytes: 60.0e9,
         }
     }
 
@@ -94,12 +102,20 @@ impl ClusterProfile {
             chunk_ref_bytes: 1.0e9,
             bytes_per_word: 8.0,
             spill_factor: 1.0,
+            mem_per_node_bytes: 30.0e9,
         }
     }
 
     /// A copy with a different node count (Figure 5's scalability sweep).
     pub fn with_nodes(mut self, nodes: usize) -> Self {
         self.nodes = nodes;
+        self
+    }
+
+    /// A copy with a different per-node memory (the auto-planner's
+    /// "memory-constrained context" knob).
+    pub fn with_mem_per_node(mut self, bytes: f64) -> Self {
+        self.mem_per_node_bytes = bytes;
         self
     }
 
@@ -134,6 +150,11 @@ impl ClusterProfile {
     /// Aggregate compute rate, FLOP/s.
     pub fn agg_flops(&self) -> f64 {
         self.flops_per_node * self.nodes as f64
+    }
+
+    /// Aggregate working memory, bytes.
+    pub fn agg_mem_bytes(&self) -> f64 {
+        self.mem_per_node_bytes * self.nodes as f64
     }
 
     /// The HDFS small-chunk penalty multiplier for a chunk of
@@ -203,5 +224,27 @@ mod tests {
         let p = ClusterProfile::inhouse().with_nodes(4);
         assert_eq!(p.nodes, 4);
         assert_eq!(p.agg_disk(), 4.0 * p.disk_bw);
+        assert_eq!(p.agg_mem_bytes(), 4.0 * p.mem_per_node_bytes);
+    }
+
+    #[test]
+    fn paper_monolithic_runs_fit_every_profile_memory() {
+        // The paper ran ρ = q at √n = 32000 on all three clusters, so
+        // each profile's aggregate memory must admit that round's 3ρn
+        // working set (the auto-planner's feasibility check).
+        let n = 32000.0f64 * 32000.0;
+        let working_set = 3.0 * 8.0 * n * 8.0; // 3ρn words at ρ = 8, 8 B/word
+        for p in [
+            ClusterProfile::inhouse(),
+            ClusterProfile::emr_c3_8xlarge(),
+            ClusterProfile::emr_i2_xlarge(),
+        ] {
+            assert!(
+                p.agg_mem_bytes() >= working_set,
+                "{}: {} < {working_set}",
+                p.name,
+                p.agg_mem_bytes()
+            );
+        }
     }
 }

@@ -20,67 +20,86 @@ use crate::m3::planner::{Plan2d, Plan3d, SparsePlan};
 use super::costmodel::{chunk_bytes, price_round, RoundVolumes, SimResult};
 use super::profile::ClusterProfile;
 
-/// Simulate the 3D dense algorithm (paper Algorithm 1).
-pub fn simulate_dense3d(plan: &Plan3d, p: &ClusterProfile) -> SimResult {
-    let n = plan.n() as f64;
-    let rho = plan.rho as f64;
-    let sqrt_m = plan.block_side as f64;
-    let product_rounds = plan.q() / plan.rho;
-
-    let mut rounds = Vec::with_capacity(plan.rounds());
-    // Chunk size of the accumulator files each product round writes.
-    let acc_chunk = chunk_bytes(rho * n, p);
-    for r in 0..product_rounds {
-        let carried = if r > 0 { rho * n } else { 0.0 };
-        let v = RoundVolumes {
-            read_words: 2.0 * n,
-            read_chunked_words: carried,
-            shuffle_words: 2.0 * rho * n + carried,
-            flops: 2.0 * rho * n * sqrt_m,
-            write_words: rho * n,
-        };
-        rounds.push(price_round(&v, p, acc_chunk, acc_chunk));
+/// Price a volume sequence on a profile. Each round writes its output
+/// as per-task chunks; the carried (chunked) part of round `r`'s input
+/// was written by round `r-1`, so its read penalty uses the previous
+/// round's write-chunk size.
+pub fn price_rounds(vols: &[RoundVolumes], p: &ClusterProfile) -> SimResult {
+    let mut rounds = Vec::with_capacity(vols.len());
+    let mut prev_write_chunk = 0.0;
+    for v in vols {
+        let write_chunk = chunk_bytes(v.write_words, p);
+        rounds.push(price_round(v, p, write_chunk, prev_write_chunk));
+        prev_write_chunk = write_chunk;
     }
-    // Final summation round: read + shuffle the ρ accumulators, add
-    // them (ρn adds ≈ ρn flops), write the n-word result.
-    let v = RoundVolumes {
-        read_words: 0.0,
-        read_chunked_words: rho * n,
-        shuffle_words: rho * n,
-        flops: rho * n,
-        write_words: n,
-    };
-    rounds.push(price_round(&v, p, chunk_bytes(n, p), acc_chunk));
     SimResult { rounds }
 }
 
-/// Simulate the 2D dense algorithm (paper Algorithm 2).
-pub fn simulate_dense2d(plan: &Plan2d, p: &ClusterProfile) -> SimResult {
+/// Per-round volumes of the 3D dense algorithm under a ρ *schedule*:
+/// product round `r` computes `widths[r]` of the `q` groups (uniform
+/// widths = the fixed-ρ plan; the mid-job re-planner raises the tail
+/// widths). Round `r` reads `2n` static input plus the previous round's
+/// `widths[r-1]·n` carried accumulators, and writes `widths[r]·n`.
+pub fn volumes_dense3d_schedule(
+    side: usize,
+    block_side: usize,
+    widths: &[usize],
+) -> Vec<RoundVolumes> {
+    assert!(!widths.is_empty(), "need at least one product round");
+    let n = (side * side) as f64;
+    let sqrt_m = block_side as f64;
+    let mut vols = Vec::with_capacity(widths.len() + 1);
+    let mut prev_w = 0.0;
+    for (r, &w) in widths.iter().enumerate() {
+        let w = w as f64;
+        let carried = if r > 0 { prev_w * n } else { 0.0 };
+        vols.push(RoundVolumes {
+            read_words: 2.0 * n,
+            read_chunked_words: carried,
+            shuffle_words: 2.0 * w * n + carried,
+            flops: 2.0 * w * n * sqrt_m,
+            write_words: w * n,
+        });
+        prev_w = w;
+    }
+    // Final summation round: read + shuffle the last round's
+    // accumulators, add them (≈ one flop per word), write the result.
+    vols.push(RoundVolumes {
+        read_words: 0.0,
+        read_chunked_words: prev_w * n,
+        shuffle_words: prev_w * n,
+        flops: prev_w * n,
+        write_words: n,
+    });
+    vols
+}
+
+/// Per-round volumes of the 3D dense algorithm (uniform ρ).
+pub fn volumes_dense3d(plan: &Plan3d) -> Vec<RoundVolumes> {
+    let widths = vec![plan.rho; plan.q() / plan.rho];
+    volumes_dense3d_schedule(plan.side, plan.block_side, &widths)
+}
+
+/// Per-round volumes of the 2D dense algorithm.
+pub fn volumes_dense2d(plan: &Plan2d) -> Vec<RoundVolumes> {
     let n = (plan.side * plan.side) as f64;
     let rho = plan.rho as f64;
     let m = plan.m as f64;
     let sqrt_n = plan.side as f64;
-
-    let out_chunk = chunk_bytes(rho * m, p);
-    let rounds = (0..plan.rounds())
-        .map(|_| {
-            let v = RoundVolumes {
-                read_words: 2.0 * n,
-                read_chunked_words: 0.0,
-                shuffle_words: 2.0 * rho * n,
-                flops: 2.0 * rho * m * sqrt_n,
-                write_words: rho * m,
-            };
-            price_round(&v, p, out_chunk, 0.0)
+    (0..plan.rounds())
+        .map(|_| RoundVolumes {
+            read_words: 2.0 * n,
+            read_chunked_words: 0.0,
+            shuffle_words: 2.0 * rho * n,
+            flops: 2.0 * rho * m * sqrt_n,
+            write_words: rho * m,
         })
-        .collect();
-    SimResult { rounds }
+        .collect()
 }
 
-/// Simulate the 3D sparse algorithm (paper §3.2) for Erdős–Rényi
-/// inputs of density `plan.delta` and output-density bound
-/// `plan.delta_m`.
-pub fn simulate_sparse3d(plan: &SparsePlan, p: &ClusterProfile) -> SimResult {
+/// Per-round volumes of the 3D sparse algorithm for Erdős–Rényi inputs
+/// of density `plan.delta` and output-density bound `plan.delta_m`.
+pub fn volumes_sparse3d(plan: &SparsePlan) -> Vec<RoundVolumes> {
     let n = (plan.side as f64) * (plan.side as f64);
     let rho = plan.rho as f64;
     let m_prime = (plan.block_side as f64) * (plan.block_side as f64);
@@ -90,32 +109,58 @@ pub fn simulate_sparse3d(plan: &SparsePlan, p: &ClusterProfile) -> SimResult {
     let product_rounds = plan.q() / plan.rho;
 
     let input_words = delta * n; // nnz of one input matrix
-    let acc_words = delta_o * n; // nnz of the ρ accumulators ≈ ρ·δ_O·n/ρ... per set
-    let mut rounds = Vec::with_capacity(plan.rounds());
-    let acc_chunk = chunk_bytes(rho * acc_words, p);
+    let acc_words = delta_o * n; // nnz of one accumulator set
+    let mut vols = Vec::with_capacity(plan.rounds());
     // Expected flops of one block product: δ²·m'^{3/2} multiplications
     // (+ as many adds).
     let flops_per_product = 2.0 * delta * delta * m_prime * (plan.block_side as f64);
     for r in 0..product_rounds {
         let carried = if r > 0 { rho * acc_words } else { 0.0 };
-        let v = RoundVolumes {
+        vols.push(RoundVolumes {
             read_words: 2.0 * input_words,
             read_chunked_words: carried,
             shuffle_words: 2.0 * rho * input_words + carried,
             flops: rho * q * q * flops_per_product,
             write_words: rho * acc_words,
-        };
-        rounds.push(price_round(&v, p, acc_chunk, acc_chunk));
+        });
     }
-    let v = RoundVolumes {
+    vols.push(RoundVolumes {
         read_words: 0.0,
         read_chunked_words: rho * acc_words,
         shuffle_words: rho * acc_words,
         flops: rho * acc_words,
         write_words: acc_words,
-    };
-    rounds.push(price_round(&v, p, chunk_bytes(acc_words, p), acc_chunk));
-    SimResult { rounds }
+    });
+    vols
+}
+
+/// Simulate the 3D dense algorithm (paper Algorithm 1).
+pub fn simulate_dense3d(plan: &Plan3d, p: &ClusterProfile) -> SimResult {
+    price_rounds(&volumes_dense3d(plan), p)
+}
+
+/// Simulate the 3D dense algorithm under a per-round ρ schedule (the
+/// auto-planner's mid-job re-plan path; uniform widths reproduce
+/// [`simulate_dense3d`] exactly).
+pub fn simulate_dense3d_schedule(
+    side: usize,
+    block_side: usize,
+    widths: &[usize],
+    p: &ClusterProfile,
+) -> SimResult {
+    price_rounds(&volumes_dense3d_schedule(side, block_side, widths), p)
+}
+
+/// Simulate the 2D dense algorithm (paper Algorithm 2).
+pub fn simulate_dense2d(plan: &Plan2d, p: &ClusterProfile) -> SimResult {
+    price_rounds(&volumes_dense2d(plan), p)
+}
+
+/// Simulate the 3D sparse algorithm (paper §3.2) for Erdős–Rényi
+/// inputs of density `plan.delta` and output-density bound
+/// `plan.delta_m`.
+pub fn simulate_sparse3d(plan: &SparsePlan, p: &ClusterProfile) -> SimResult {
+    price_rounds(&volumes_sparse3d(plan), p)
 }
 
 #[cfg(test)]
@@ -316,6 +361,57 @@ mod tests {
         let last = *rounds.last().unwrap();
         for &t in &rounds[..rounds.len() - 1] {
             assert!(last < t, "final round {last:.0}s !< product round {t:.0}s");
+        }
+    }
+
+    #[test]
+    fn uniform_schedule_reproduces_fixed_rho_exactly() {
+        // simulate_dense3d_schedule with uniform widths must price every
+        // round identically to simulate_dense3d (bit-for-bit): the
+        // fixed-ρ path is the uniform special case, not a twin.
+        let p = ClusterProfile::inhouse();
+        for rho in [1usize, 2, 4, 8] {
+            let pl = plan(32000, 4000, rho);
+            let widths = vec![rho; pl.q() / rho];
+            let a = simulate_dense3d(&pl, &p);
+            let b = simulate_dense3d_schedule(32000, 4000, &widths, &p);
+            assert_eq!(a.rounds.len(), b.rounds.len());
+            for (x, y) in a.rounds.iter().zip(&b.rounds) {
+                assert_eq!(x.total(), y.total(), "rho={rho}");
+            }
+        }
+    }
+
+    #[test]
+    fn widening_tail_schedule_prices_fewer_rounds() {
+        // A non-decreasing schedule [1, 1, 2, 4] covers q = 8 in 5
+        // rounds instead of ρ=1's 9; total time must drop (fewer infra
+        // charges, same compute volume).
+        let p = ClusterProfile::inhouse();
+        let uniform = simulate_dense3d_schedule(32000, 4000, &[1; 8], &p);
+        let widened = simulate_dense3d_schedule(32000, 4000, &[1, 1, 2, 4], &p);
+        assert_eq!(uniform.rounds.len(), 9);
+        assert_eq!(widened.rounds.len(), 5);
+        assert!(widened.total() < uniform.total());
+        // Compute volume is schedule-invariant (Fig 4 generalised).
+        let rel = (widened.comp() - uniform.comp()).abs() / uniform.comp();
+        assert!(rel < 0.05, "comp varies {rel:.3} across schedules");
+    }
+
+    #[test]
+    fn volumes_sum_matches_planner_totals() {
+        // The simulator's per-round volumes and the planner's closed
+        // forms are one model: summed shuffle words equal
+        // Plan3d::total_shuffle_words (= 3nq) and summed product-round
+        // flops equal 2·side³.
+        for (side, bs, rho) in [(1024, 128, 2), (32000, 4000, 8), (512, 64, 1)] {
+            let pl = plan(side, bs, rho);
+            let vols = volumes_dense3d(&pl);
+            let shuffle: f64 = vols.iter().map(|v| v.shuffle_words).sum();
+            assert_eq!(shuffle, pl.total_shuffle_words() as f64);
+            let product_flops: f64 =
+                vols[..vols.len() - 1].iter().map(|v| v.flops).sum();
+            assert_eq!(product_flops, 2.0 * (side as f64).powi(3));
         }
     }
 

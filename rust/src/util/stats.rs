@@ -20,13 +20,17 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// p-th percentile (0..=100) by linear interpolation on the sorted data.
+///
+/// NaN-tolerant: values are ordered with [`f64::total_cmp`] (NaNs sort
+/// to the top end), so timing data that picked up a NaN — e.g. from a
+/// failed calibration fit — ranks high instead of panicking mid-sort.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!((0.0..=100.0).contains(&p));
     if xs.is_empty() {
         return 0.0;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let rank = p / 100.0 * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -107,6 +111,18 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(median(&xs), 3.0);
         assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_input() {
+        // Regression: `partial_cmp(..).unwrap()` used to panic here. A
+        // NaN (e.g. from a failed calibration fit feeding the bench
+        // harness) must rank at the top, not abort the run.
+        let xs = [1.0, f64::NAN, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0, "NaN sorts above the finite data");
+        assert!(percentile(&xs, 100.0).is_nan());
+        assert!(median(&[f64::NAN]).is_nan());
     }
 
     #[test]

@@ -1,0 +1,236 @@
+//! Integration: the auto-planner against the planner formulas, the
+//! simulator's volumes, and the real engine.
+//!
+//! * Property tests pin the planner's closed forms
+//!   (`shuffle_words_bound`, `total_shuffle_words`, `reducer_flops`)
+//!   to the summed [`RoundVolumes`] the simulator derives for the same
+//!   plan, across a grid of valid `(side, block_side, ρ)` for all
+//!   three algorithms — one model, two views.
+//! * An equivalence test runs the same seed once with
+//!   [`PlanChoice::Auto`] and once with the chosen plan passed
+//!   explicitly: the products must be bit-identical and the round
+//!   structure the same.
+
+use std::sync::Arc;
+
+use m3::m3::{plan_dense2d, plan_dense3d, plan_sparse3d, Plan2d, Plan3d, SparsePlan};
+use m3::mapreduce::EngineConfig;
+use m3::matrix::gen;
+use m3::runtime::NaiveMultiply;
+use m3::service::{spawn_job, ActiveJob, JobKind, JobOutput, JobSpec, PlanChoice};
+use m3::simulator::{
+    volumes_dense2d, volumes_dense3d, volumes_sparse3d, ClusterProfile, RoundVolumes,
+};
+
+fn divisors(x: usize) -> Vec<usize> {
+    (1..=x).filter(|d| x % d == 0).collect()
+}
+
+fn sum_shuffle(vols: &[RoundVolumes]) -> f64 {
+    vols.iter().map(|v| v.shuffle_words).sum()
+}
+
+#[test]
+fn dense3d_formulas_agree_with_simulator_volumes() {
+    for side in [16usize, 48, 64, 1024] {
+        for block in divisors(side) {
+            let q = side / block;
+            if q > 32 {
+                continue; // keep the grid small; shapes stay diverse
+            }
+            for rho in divisors(q) {
+                let plan = Plan3d::new(side, block, rho).unwrap();
+                let vols = volumes_dense3d(&plan);
+                assert_eq!(vols.len(), plan.rounds(), "side={side} b={block} rho={rho}");
+                // Per-round shuffle obeys the Theorem 3.1 bound 3ρn.
+                for (r, v) in vols.iter().enumerate() {
+                    assert!(
+                        v.shuffle_words <= plan.shuffle_words_bound() as f64,
+                        "side={side} b={block} rho={rho} round {r}"
+                    );
+                }
+                // Summed shuffle equals the closed form 3nq exactly.
+                assert_eq!(
+                    sum_shuffle(&vols),
+                    plan.total_shuffle_words() as f64,
+                    "side={side} b={block} rho={rho}"
+                );
+                // Summed product-round flops equal reducer_flops ×
+                // (number of block products) = 2m^{3/2} · q³ = 2n^{3/2}.
+                let product_flops: f64 = vols[..vols.len() - 1].iter().map(|v| v.flops).sum();
+                assert_eq!(
+                    product_flops,
+                    (plan.reducer_flops() * q * q * q) as f64,
+                    "side={side} b={block} rho={rho}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dense2d_formulas_agree_with_simulator_volumes() {
+    for side in [16usize, 32, 64] {
+        for h in divisors(side) {
+            let m = side * h;
+            let s = side * side / m;
+            for rho in divisors(s) {
+                let plan = Plan2d::new(side, m, rho).unwrap();
+                let vols = volumes_dense2d(&plan);
+                assert_eq!(vols.len(), plan.rounds());
+                for v in &vols {
+                    assert_eq!(v.shuffle_words, plan.shuffle_words_bound() as f64);
+                }
+                assert_eq!(sum_shuffle(&vols), plan.total_shuffle_words() as f64);
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_formulas_bound_simulator_volumes() {
+    for side in [64usize, 256, 1024] {
+        for nnz in [2usize, 4, 8] {
+            let delta = nnz as f64 / side as f64;
+            let delta_m = delta.max(gen::er_output_density(side, delta));
+            for block in divisors(side) {
+                let q = side / block;
+                if q > 16 {
+                    continue;
+                }
+                for rho in divisors(q) {
+                    let plan = SparsePlan::new(side, block, rho, delta, delta_m).unwrap();
+                    let vols = volumes_sparse3d(&plan);
+                    assert_eq!(vols.len(), plan.rounds());
+                    // Every round's expected shuffle stays within the
+                    // Theorem 3.2 bound 3ρ·δ_M·n.
+                    for (r, v) in vols.iter().enumerate() {
+                        assert!(
+                            v.shuffle_words <= plan.expected_shuffle_words() * (1.0 + 1e-12),
+                            "side={side} b={block} rho={rho} round {r}: {} > {}",
+                            v.shuffle_words,
+                            plan.expected_shuffle_words()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn run_to_output(spec: &JobSpec) -> (JobOutput, usize) {
+    let engine = EngineConfig {
+        map_tasks: 4,
+        reduce_tasks: 4,
+        workers: 4,
+    };
+    let mut job = spawn_job(spec, engine, Arc::new(NaiveMultiply)).unwrap();
+    let rounds = job.num_rounds();
+    while !job.is_done() {
+        job.step_commit();
+    }
+    (job.finish().0, rounds)
+}
+
+/// Acceptance: an auto-planned job's output is bit-identical to the
+/// same job run with the chosen plan passed explicitly.
+#[test]
+fn auto_plan_output_identical_to_explicit_plan() {
+    let profile = ClusterProfile::inhouse();
+    let budget = 48;
+
+    // Dense 3D: resolve the search the spawn path will run, then
+    // submit both variants of the same seed.
+    let (plan, _) = plan_dense3d(16, budget, &profile).unwrap();
+    let auto = JobSpec {
+        id: 0,
+        tenant: 0,
+        kind: JobKind::Dense3d {
+            side: 16,
+            block_side: 1,
+            rho: 1,
+        },
+        plan: PlanChoice::Auto {
+            memory_budget: budget,
+        },
+        seed: 77,
+        arrival_secs: 0.0,
+    };
+    let explicit = JobSpec {
+        kind: JobKind::Dense3d {
+            side: 16,
+            block_side: plan.block_side,
+            rho: plan.rho,
+        },
+        plan: PlanChoice::Fixed,
+        ..auto.clone()
+    };
+    let (out_a, rounds_a) = run_to_output(&auto);
+    let (out_e, rounds_e) = run_to_output(&explicit);
+    assert_eq!(rounds_a, rounds_e, "auto must run the chosen plan's rounds");
+    match (&out_a, &out_e) {
+        (JobOutput::Dense(a), JobOutput::Dense(e)) => {
+            assert_eq!(a.max_abs_diff(e), 0.0, "products must be bit-identical")
+        }
+        _ => panic!("dense jobs must yield dense outputs"),
+    }
+
+    // Sparse: same contract.
+    let (splan, _) = plan_sparse3d(64, 6, 768, &profile).unwrap();
+    let auto = JobSpec {
+        kind: JobKind::Sparse3d {
+            side: 64,
+            block_side: 1,
+            rho: 1,
+            nnz_per_row: 6,
+        },
+        plan: PlanChoice::Auto { memory_budget: 768 },
+        ..auto.clone()
+    };
+    let explicit = JobSpec {
+        kind: JobKind::Sparse3d {
+            side: 64,
+            block_side: splan.block_side,
+            rho: splan.rho,
+            nnz_per_row: 6,
+        },
+        plan: PlanChoice::Fixed,
+        ..auto.clone()
+    };
+    let (out_a, rounds_a) = run_to_output(&auto);
+    let (out_e, rounds_e) = run_to_output(&explicit);
+    assert_eq!(rounds_a, rounds_e);
+    match (&out_a, &out_e) {
+        (JobOutput::Sparse(a), JobOutput::Sparse(e)) => {
+            assert_eq!(
+                a.to_dense().max_abs_diff(&e.to_dense()),
+                0.0,
+                "sparse products must be identical"
+            )
+        }
+        _ => panic!("sparse jobs must yield sparse outputs"),
+    }
+}
+
+/// The 2D auto path also spawns and matches its reference product.
+#[test]
+fn auto_plan_dense2d_runs_and_matches_reference() {
+    let profile = ClusterProfile::inhouse();
+    let (plan, search) = plan_dense2d(16, 768, &profile).unwrap();
+    assert!(search.chosen().feasible);
+    let auto = JobSpec {
+        id: 0,
+        tenant: 0,
+        kind: JobKind::Dense2d {
+            side: 16,
+            block_side: 1,
+            rho: 1,
+        },
+        plan: PlanChoice::Auto { memory_budget: 768 },
+        seed: 5,
+        arrival_secs: 0.0,
+    };
+    let (out, rounds) = run_to_output(&auto);
+    assert_eq!(rounds, plan.rounds());
+    assert!(out.matches(&auto), "auto 2D product must be exact");
+}

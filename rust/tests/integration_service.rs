@@ -9,7 +9,8 @@ use m3::mapreduce::EngineConfig;
 use m3::runtime::native::NativeMultiply;
 use m3::runtime::NaiveMultiply;
 use m3::service::{
-    generate, run_service, skewed, JobKind, JobSpec, Policy, ServiceConfig, WorkloadConfig,
+    generate, run_service, skewed, JobKind, JobSpec, PlanChoice, Policy, ServiceConfig,
+    WorkloadConfig,
 };
 
 fn engine() -> EngineConfig {
@@ -21,11 +22,7 @@ fn engine() -> EngineConfig {
 }
 
 fn cfg(policy: Policy) -> ServiceConfig {
-    ServiceConfig {
-        engine: engine(),
-        policy,
-        preemptions: vec![],
-    }
+    ServiceConfig::new(engine(), policy)
 }
 
 /// The acceptance workload: `m3 serve --policy fair --jobs 16 --seed 7`.
@@ -36,6 +33,7 @@ fn serve_fair_16_jobs_seed_7_all_products_exact() {
         tenants: 4,
         seed: 7,
         mean_interarrival_secs: 25.0,
+        ..Default::default()
     });
     let out = run_service(&specs, &cfg(Policy::Fair), Arc::new(NativeMultiply::new())).unwrap();
     assert_eq!(out.completed.len(), 16, "every job must run to completion");
@@ -68,6 +66,7 @@ fn concurrent_jobs_interleave_at_round_granularity() {
             block_side: 4,
             rho: 1, // 5 rounds: plenty of interleaving points
         },
+        plan: PlanChoice::Fixed,
         seed: 50 + id as u64,
         arrival_secs: 0.0,
     };
@@ -161,6 +160,7 @@ fn schedule_is_deterministic_per_seed_policy_and_preemptions() {
         tenants: 3,
         seed: 21,
         mean_interarrival_secs: 15.0,
+        ..Default::default()
     });
     for policy in [Policy::Fifo, Policy::Fair, Policy::Srpt] {
         let mut c = cfg(policy);
@@ -175,6 +175,39 @@ fn schedule_is_deterministic_per_seed_policy_and_preemptions() {
     }
 }
 
+/// Acceptance: `m3 serve --auto-fraction 0.5` — mixed fixed/auto
+/// tenants run end-to-end with exact products, with and without online
+/// profile recalibration.
+#[test]
+fn mixed_auto_fixed_workload_serves_exactly() {
+    let specs = generate(&WorkloadConfig {
+        jobs: 12,
+        tenants: 4,
+        seed: 19,
+        mean_interarrival_secs: 20.0,
+        auto_fraction: 0.5,
+        ..Default::default()
+    });
+    assert!(
+        specs.iter().any(|s| s.plan != PlanChoice::Fixed)
+            && specs.iter().any(|s| s.plan == PlanChoice::Fixed),
+        "workload must actually mix plan choices"
+    );
+    for recalibrate in [false, true] {
+        let mut c = cfg(Policy::Fair);
+        c.recalibrate = recalibrate;
+        let out = run_service(&specs, &c, Arc::new(NativeMultiply::new())).unwrap();
+        assert_eq!(out.completed.len(), 12);
+        for cj in &out.completed {
+            assert!(
+                cj.output.matches(&cj.spec),
+                "job {} (recalibrate={recalibrate}) wrong product",
+                cj.spec.id
+            );
+        }
+    }
+}
+
 #[test]
 fn tenant_accounting_covers_all_jobs() {
     let specs = generate(&WorkloadConfig {
@@ -182,6 +215,7 @@ fn tenant_accounting_covers_all_jobs() {
         tenants: 3,
         seed: 33,
         mean_interarrival_secs: 10.0,
+        ..Default::default()
     });
     let out = run_service(&specs, &cfg(Policy::Fair), Arc::new(NativeMultiply::new())).unwrap();
     let tenants = out.metrics.by_tenant();
