@@ -14,8 +14,16 @@
 //! * `"constrained_rho_lt_q"` — the same search on a memory-starved
 //!   profile is forced to ρ < q (paper §1's execution-context claim).
 
+use std::sync::Arc;
+
 use crate::m3::autoplan::{plan_dense3d, plan_sparse3d, PlanSearch};
-use crate::simulator::ClusterProfile;
+use crate::m3::multiply::{multiply_dense_3d, M3Config};
+use crate::m3::PartitionerKind;
+use crate::mapreduce::EngineConfig;
+use crate::matrix::gen;
+use crate::runtime::native::NativeMultiply;
+use crate::simulator::{fit_local_profile, ClusterProfile, Observation, ProfileTracker};
+use crate::util::rng::Xoshiro256ss;
 use crate::util::table::Table;
 
 /// Benchmark configuration.
@@ -112,6 +120,89 @@ fn entry_json(e: &PlannerEntry) -> String {
     )
 }
 
+/// Online-vs-batch calibration cross-check: the same measured rounds
+/// fed to the scheduler's [`ProfileTracker`] and to `m3 calibrate`'s
+/// batch [`fit_local_profile`], rate constants compared. Both consume
+/// the span-derived phase walls ([`crate::trace::PhaseWalls`] via
+/// `RoundMetrics::phase_walls`), so a drift between them would mean
+/// the online blend itself is off, not the measurement.
+#[derive(Debug, Clone)]
+pub struct TrackerVsBatch {
+    /// Committed rounds both fitters consumed.
+    pub rounds: usize,
+    /// `tracker.flops_per_node / batch.flops_per_node`.
+    pub flops_ratio: f64,
+    /// `tracker.net_bw / batch.net_bw`.
+    pub net_ratio: f64,
+    /// `tracker.disk_bw / batch.disk_bw`.
+    pub disk_ratio: f64,
+    /// All three ratios within the tolerance band `[0.1, 10]` — loose
+    /// because the tracker deliberately keeps seed weight
+    /// (`rounds / (rounds + half_life)` blending) while the batch fit
+    /// is pure evidence.
+    pub within_band: bool,
+}
+
+/// Run a real dense ρ sweep and fit its rounds both ways.
+fn bench_tracker_vs_batch(text: &mut String) -> TrackerVsBatch {
+    let n = 128usize;
+    let block = 32usize; // q = 4 → rho 1, 2, 4 all valid
+    let flops_total = 2.0 * (n as f64).powi(3);
+    // nodes = 1 so the tracker's per-node split matches the batch
+    // fit's single-box profile.
+    let seed_profile = ClusterProfile::inhouse().with_nodes(1);
+    let mut tracker = ProfileTracker::new(seed_profile);
+    let mut obs: Vec<Observation> = vec![];
+    for (run, rho) in [(1u64, 1usize), (2, 2), (3, 4), (4, 1), (5, 2), (6, 4)] {
+        let mut rng = Xoshiro256ss::new(40 + run);
+        let a = gen::dense_int(n, n, &mut rng);
+        let bm = gen::dense_int(n, n, &mut rng);
+        let m3cfg = M3Config {
+            block_side: block,
+            rho,
+            engine: EngineConfig {
+                map_tasks: 8,
+                reduce_tasks: 8,
+                workers: 4,
+            },
+            partitioner: PartitionerKind::Balanced,
+        };
+        let (_, metrics) = multiply_dense_3d(&a, &bm, &m3cfg, Arc::new(NativeMultiply::new()))
+            .expect("sweep geometry must be valid");
+        // The plan-level flop volume, split evenly across rounds — the
+        // same analytic quantity the scheduler passes per round.
+        let per_round = flops_total / metrics.num_rounds().max(1) as f64;
+        for r in &metrics.rounds {
+            tracker.observe_round(r, per_round);
+        }
+        obs.push(Observation {
+            metrics,
+            flops: flops_total,
+        });
+    }
+    let rounds = tracker.rounds_observed();
+    let batch = fit_local_profile(&obs, seed_profile.bytes_per_word);
+    let online = tracker.profile();
+    let ratio = |a: f64, b: f64| a / b.max(1e-12);
+    let flops_ratio = ratio(online.flops_per_node, batch.flops_per_node);
+    let net_ratio = ratio(online.net_bw, batch.net_bw);
+    let disk_ratio = ratio(online.disk_bw, batch.disk_bw);
+    let in_band = |r: f64| (0.1..=10.0).contains(&r);
+    let v = TrackerVsBatch {
+        rounds,
+        flops_ratio,
+        net_ratio,
+        disk_ratio,
+        within_band: in_band(flops_ratio) && in_band(net_ratio) && in_band(disk_ratio),
+    };
+    text.push_str(&format!(
+        "tracker vs batch fit ({rounds} rounds, n={n} block={block}): \
+         flops {:.2}x, net {:.2}x, disk {:.2}x (band [0.1, 10])\n",
+        v.flops_ratio, v.net_ratio, v.disk_ratio,
+    ));
+    v
+}
+
 /// Full benchmark result.
 #[derive(Debug, Clone)]
 pub struct PlannerBenchReport {
@@ -125,6 +216,8 @@ pub struct PlannerBenchReport {
     pub unconstrained_monolithic: bool,
     /// Context check: the memory-starved profile picked ρ < q.
     pub constrained_rho_lt_q: bool,
+    /// Online-vs-batch calibration cross-check.
+    pub tracker_vs_batch: TrackerVsBatch,
 }
 
 /// Run the planner benchmark.
@@ -188,11 +281,24 @@ pub fn run_planner_bench(cfg: &PlannerBenchConfig) -> PlannerBenchReport {
         constrained_search.candidates.len(),
     ));
 
+    text.push('\n');
+    let tracker_vs_batch = bench_tracker_vs_batch(&mut text);
+
     let entries_json: Vec<String> = entries.iter().map(entry_json).collect();
+    let tvb_json = format!(
+        "{{\"rounds\":{},\"flops_ratio\":{:.6e},\"net_ratio\":{:.6e},\
+         \"disk_ratio\":{:.6e},\"within_band\":{}}}",
+        tracker_vs_batch.rounds,
+        tracker_vs_batch.flops_ratio,
+        tracker_vs_batch.net_ratio,
+        tracker_vs_batch.disk_ratio,
+        tracker_vs_batch.within_band,
+    );
     let json = format!(
         "{{\n  \"bench\": \"planner\",\n  \"config\": {{\"dense_side\":{},\"sparse_side\":{},\
          \"nnz_per_row\":{},\"memory_budget\":{},\"constrained_mem_per_node\":{:.3e}}},\n  \
          \"entries\": [{}],\n  \
+         \"tracker_vs_batch\": {},\n  \
          \"context\": {{\"unconstrained_monolithic\":{},\"constrained_rho_lt_q\":{},\
          \"constrained_chosen\":\"3d n={} b={} rho={}\"}}\n}}\n",
         cfg.dense_side,
@@ -201,6 +307,7 @@ pub fn run_planner_bench(cfg: &PlannerBenchConfig) -> PlannerBenchReport {
         cfg.memory_budget,
         cfg.constrained_mem_per_node,
         entries_json.join(",\n              "),
+        tvb_json,
         unconstrained,
         constrained_rho_lt_q,
         constrained_plan.side,
@@ -213,6 +320,7 @@ pub fn run_planner_bench(cfg: &PlannerBenchConfig) -> PlannerBenchReport {
         entries,
         unconstrained_monolithic: unconstrained,
         constrained_rho_lt_q,
+        tracker_vs_batch,
     }
 }
 
@@ -236,5 +344,10 @@ mod tests {
         assert!(rep.json.contains("\"unconstrained_monolithic\":true"));
         assert!(rep.json.contains("\"constrained_rho_lt_q\":true"));
         assert!(rep.text.contains("context dependence"));
+        assert!(rep.json.contains("\"tracker_vs_batch\": {"));
+        assert!(rep.json.contains("\"within_band\":true"));
+        assert!(rep.tracker_vs_batch.within_band, "online blend must track the batch fit");
+        assert!(rep.tracker_vs_batch.rounds >= 10, "the sweep must commit real rounds");
+        assert!(rep.text.contains("tracker vs batch fit"));
     }
 }

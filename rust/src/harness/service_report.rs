@@ -25,6 +25,7 @@ use crate::service::{
     poisson_preemptions, replay_with_preemptions, run_service, skewed, Policy, ServiceConfig,
 };
 use crate::simulator::{simulate_dense3d, ClusterProfile};
+use crate::trace;
 use crate::util::table::{BarChart, Table};
 
 use super::figures::Report;
@@ -145,6 +146,58 @@ pub fn service_report() -> Report {
     );
     rep.push_table(&t, "service_spot_vs_rho.csv");
     rep.push_chart(&chart);
+
+    // ---- 3. Where each round's time goes (traced run) --------------
+    {
+        // Tracing state is process-global; serialise against every
+        // other traced test/bench in the binary.
+        let _guard = trace::exclusive();
+        trace::enable();
+        let specs = skewed(2, 7);
+        let cfg = ServiceConfig::new(engine, Policy::Fair);
+        let out = run_service(&specs, &cfg, Arc::new(NativeMultiply::new()))
+            .expect("traced workload must run");
+        trace::disable();
+        let snap = trace::snapshot();
+        let timelines = trace::fold_rounds(&snap.spans);
+        let ms = |ns: u64| format!("{:.2}", ns as f64 / 1e6);
+        let mut t = Table::new(&[
+            "job",
+            "round",
+            "wall(ms)",
+            "map(ms)",
+            "shuffle(ms)",
+            "reduce(ms)",
+            "commit(ms)",
+            "crit",
+            "crit_pct",
+        ]);
+        for tl in &timelines {
+            t.row(&[
+                tl.job.to_string(),
+                tl.round.to_string(),
+                ms(tl.wall_ns),
+                ms(tl.map_ns),
+                ms(tl.shuffle_ns),
+                ms(tl.reduce_ns),
+                ms(tl.commit_ns),
+                tl.crit_phase.to_string(),
+                format!("{:.0}%", 100.0 * tl.crit_frac()),
+            ]);
+        }
+        rep.text.push_str(&format!(
+            "\nSpan-traced rerun of a small workload ({} rounds folded \
+             from the recorder): per-round wall split into phase walls \
+             with the critical (longest) phase attributed.\n",
+            timelines.len(),
+        ));
+        assert_eq!(
+            out.completed.len(),
+            specs.len(),
+            "the traced rerun must still complete every job"
+        );
+        rep.push_table(&t, "service_round_breakdown.csv");
+    }
     rep
 }
 
@@ -161,9 +214,13 @@ mod tests {
         assert!(rep.text.contains("steals"), "pool counters surfaced in the report");
         assert!(rep.text.contains("util"));
         assert!(rep.text.contains("rho=8"));
-        assert_eq!(rep.csv.len(), 2);
+        assert!(rep.text.contains("Span-traced rerun"));
+        assert_eq!(rep.csv.len(), 3);
         for (_, csv) in &rep.csv {
             assert!(csv.lines().count() >= 4);
         }
+        let (name, breakdown) = &rep.csv[2];
+        assert_eq!(name.as_str(), "service_round_breakdown.csv");
+        assert!(breakdown.contains("crit"), "critical-phase column present");
     }
 }

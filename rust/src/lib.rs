@@ -24,6 +24,10 @@
 //! * [`simulator`] — a discrete cost-model simulator of the paper's
 //!   clusters (in-house 16-node, EMR c3.8xlarge / i2.xlarge) used to
 //!   regenerate the paper-scale figures.
+//! * [`trace`] — structured span tracing: lock-free per-thread span
+//!   recorders wired through the executor, round engine, and service
+//!   scheduler, with a Chrome `trace_event` exporter and per-round
+//!   critical-path reports.
 //! * [`harness`] — figure/benchmark harness that regenerates every
 //!   figure of the paper's evaluation section.
 //! * [`util`] — in-house PRNG, mini property-testing framework,
@@ -36,4 +40,5 @@ pub mod matrix;
 pub mod runtime;
 pub mod service;
 pub mod simulator;
+pub mod trace;
 pub mod util;

@@ -12,6 +12,9 @@
 //! * `plan`     — enumerate and price every valid plan for a shape
 //!   under a reducer-memory budget; print the tradeoff table and the
 //!   auto-chosen plan.
+//! * `trace`    — run one traced multiplication and export its span
+//!   timeline as Chrome `trace_event` JSON (Perfetto-loadable) plus a
+//!   per-round / per-worker breakdown report.
 //! * `figures`  — regenerate the paper's figures (tables + CSV).
 //! * `simulate` — price a configuration on a cluster profile.
 //! * `bench-planner` — auto-plan vs best/worst enumerated plan on the
@@ -54,7 +57,10 @@ USAGE:
               [--seed <u64>] [--mean-arrival <secs>] [--preempt-rate <per-100s>]
               [--auto-fraction <0..1>] [--budget <words>] [--recalibrate]
               [--profile inhouse|c3|i2] [--backend xla|native|naive|auto]
-              [--verify] [--report]
+              [--verify] [--report] [--trace] [--out trace.json]
+  m3 trace    [--n <side>] [--block <side>] [--rho <r>] [--algo 3d|2d]
+              [--backend xla|native|naive|auto] [--seed <u64>]
+              [--out trace.json]
   m3 plan     [--algo 3d|2d|sparse] --n <side> [--budget <words>]
               [--nnz-per-row <k>] [--profile inhouse|c3|i2] [--nodes <p>]
               [--mem-per-node-gb <g>]
@@ -92,6 +98,7 @@ fn main() {
         "multiply" => cmd_multiply(&args),
         "sparse" => cmd_sparse(&args),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
         "plan" => cmd_plan(&args),
         "figures" => cmd_figures(&args),
         "simulate" => cmd_simulate(&args),
@@ -309,9 +316,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.profile.name,
         cfg.recalibrate,
     );
+    let traced = args.flag("trace");
+    if traced {
+        m3::trace::enable();
+    }
     let t0 = std::time::Instant::now();
     let out = run_service(&specs, &cfg, backend)?;
     let wall = t0.elapsed();
+    if traced {
+        m3::trace::disable();
+        let snap = m3::trace::snapshot();
+        println!("{}", m3::trace::render_report(&snap.spans, snap.dropped));
+        println!("--- virtual-clock round timeline ---");
+        println!("{}", m3::service::ServiceMetrics::timeline_table(&out.trace));
+        // Only this run's service events go into the export; the spans
+        // are epoch-scoped to this enable already.
+        let events: Vec<m3::trace::ServiceEvent> = snap
+            .events
+            .iter()
+            .filter(|e| e.run == out.trace_run)
+            .cloned()
+            .collect();
+        let path = args.opt_or("out", "trace.json");
+        std::fs::write(&path, m3::trace::export_chrome_trace(&snap.spans, &events))?;
+        eprintln!(
+            "[m3] wrote {path} ({} spans, {} events) — load it in Perfetto or chrome://tracing",
+            snap.spans.len(),
+            events.len()
+        );
+    }
     println!("{}", out.metrics.table());
     println!("{}", out.metrics.tenant_table());
     println!(
@@ -344,6 +377,57 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         println!("verify: OK ({} jobs exact)", out.completed.len());
     }
+    Ok(())
+}
+
+/// Run one traced multiplication: span-record the whole run, print the
+/// per-round / per-worker breakdown, and export a Chrome `trace_event`
+/// JSON loadable in Perfetto or chrome://tracing.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use m3::trace;
+    let n: usize = args.get("n", 256).map_err(anyhow::Error::msg)?;
+    let block: usize = args.get("block", 64).map_err(anyhow::Error::msg)?;
+    let rho: usize = args.get("rho", 1).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get("seed", 42).map_err(anyhow::Error::msg)?;
+    let algo = args.opt_or("algo", "3d");
+    let cfg = M3Config {
+        block_side: block,
+        rho,
+        engine: engine_from(args)?,
+        partitioner: partitioner_from(args)?,
+    };
+    let backend = backend_from(args)?;
+    let mut rng = Xoshiro256ss::new(seed);
+    eprintln!("[m3] traced run: generating two {n}x{n} matrices (seed {seed})");
+    let a = gen::dense_int(n, n, &mut rng);
+    let b = gen::dense_int(n, n, &mut rng);
+
+    trace::enable();
+    // Phase spans attach to the job tagged on the submitting thread.
+    trace::set_current_job(0);
+    let run = match algo.as_str() {
+        "3d" => multiply_dense_3d(&a, &b, &cfg, backend.clone()),
+        "2d" => multiply_dense_2d(&a, &b, &cfg, backend.clone()),
+        other => bail!("unknown algo {other:?}"),
+    };
+    trace::clear_current_job();
+    trace::disable();
+    let (_, metrics) = run?;
+
+    let snap = trace::snapshot();
+    println!("{}", trace::render_report(&snap.spans, snap.dropped));
+    println!(
+        "algo={algo} n={n} block={block} rho={rho} rounds={} wall={:.3}s backend={}",
+        metrics.num_rounds(),
+        metrics.total_time().as_secs_f64(),
+        backend.name(),
+    );
+    let out = args.opt_or("out", "trace.json");
+    std::fs::write(&out, trace::export_chrome_trace(&snap.spans, &snap.events))?;
+    eprintln!(
+        "[m3] wrote {out} ({} spans) — load it in Perfetto or chrome://tracing",
+        snap.spans.len()
+    );
     Ok(())
 }
 

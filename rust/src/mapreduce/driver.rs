@@ -19,6 +19,8 @@ use super::executor::Pool;
 use super::job::{EngineConfig, Job};
 use super::metrics::{JobMetrics, RoundMetrics};
 use super::types::{Key, Mapper, Pair, Partitioner, Reducer, Value};
+use crate::trace;
+use crate::trace::SpanKind;
 
 /// A multi-round MapReduce algorithm: per-round map/reduce/partitioner
 /// plus the round count (the M3 algorithms implement this).
@@ -185,6 +187,9 @@ impl Driver {
         static_input: &[Pair<A::K, A::V>],
         carry: Vec<Pair<A::K, A::V>>,
     ) -> (Vec<Pair<A::K, A::V>>, RoundMetrics) {
+        let traced = trace::enabled();
+        let round_start_ns = if traced { trace::now_ns() } else { 0 };
+
         // Compose round input: static (re-read from DFS) + carry. With
         // `Arc`-backed block payloads these clones are pointer bumps,
         // not matrix copies.
@@ -205,10 +210,29 @@ impl Driver {
         let (out, mut m) = job.run(&self.pool, r, input);
 
         // Materialise output: one chunk per reduce task, as Hadoop does.
+        let commit_start_ns = if traced { trace::now_ns() } else { 0 };
         let t = Instant::now();
         let chunks = chunk_sizes(&out, &m);
         self.dfs.write_round(r, &chunks);
         m.write_time = t.elapsed();
+        if traced {
+            // Commit is stamped with the same duration as `write_time`;
+            // the enclosing round span closes after it, so every phase
+            // span nests inside its round.
+            trace::record_phase(
+                SpanKind::Commit,
+                r,
+                commit_start_ns,
+                m.write_time.as_nanos() as u64,
+            );
+            let end = trace::now_ns();
+            trace::record_phase(
+                SpanKind::Round,
+                r,
+                round_start_ns,
+                end.saturating_sub(round_start_ns),
+            );
+        }
         (out, m)
     }
 

@@ -417,6 +417,146 @@ fn preemption_mid_steal_reproduces_reference() {
     assert_outputs_match(got.output, want_out, "mid-steal preemption");
 }
 
+/// Tracing must be observationally inert: with span recording enabled
+/// (and the submitting thread tagged so phase spans record too), all
+/// three algorithm shapes must still match the reference bit for bit —
+/// outputs and shuffle-cost metrics — across worker counts {1, 2, 8}.
+#[test]
+fn traced_runs_match_reference_bit_for_bit() {
+    // Tracing state is process-global; serialise against every other
+    // traced test in the binary.
+    let _guard = crate::trace::exclusive();
+    crate::trace::enable();
+    crate::trace::set_current_job(7_000_001);
+
+    // Dense 3D.
+    {
+        let (side, block, rho) = (16usize, 4usize, 2usize);
+        let geo: Geometry = Plan3d::new(side, block, rho).unwrap().into();
+        let grid = BlockGrid::new(side, block);
+        let mut rng = Xoshiro256ss::new(31);
+        let a = gen::dense_int(side, side, &mut rng);
+        let b = gen::dense_int(side, side, &mut rng);
+        let input = dense_3d_static_input(&grid, &a, &b);
+        for workers in [1usize, 2, 8] {
+            let alg = Algo3d::new(
+                geo,
+                Arc::new(DenseOps::new(Arc::new(NaiveMultiply))),
+                Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+            );
+            let cfg = engine(workers);
+            let mut d = Driver::new(cfg);
+            let got = d.run(&alg, &input);
+            let (want_out, want_m) = run_reference(&alg, cfg, &input);
+            let ctx = format!("traced dense3d workers={workers}");
+            assert_metrics_match(&got.metrics.rounds, &want_m, &ctx);
+            assert_outputs_match(got.output, want_out, &ctx);
+        }
+    }
+
+    // Dense 2D.
+    {
+        let (side, m, rho) = (16usize, 64usize, 2usize);
+        let plan = Plan2d::new(side, m, rho).unwrap();
+        let mut rng = Xoshiro256ss::new(32);
+        let a = gen::dense_int(side, side, &mut rng);
+        let b = gen::dense_int(side, side, &mut rng);
+        let input = Algo2d::static_input(plan, &a, &b);
+        for workers in [1usize, 2, 8] {
+            let alg = Algo2d::new(
+                plan,
+                Arc::new(NaiveMultiply),
+                Box::new(BalancedPartitioner2d {
+                    strips: plan.strips(),
+                    rho,
+                }),
+            );
+            let cfg = engine(workers);
+            let mut d = Driver::new(cfg);
+            let got = d.run(&alg, &input);
+            let (want_out, want_m) = run_reference(&alg, cfg, &input);
+            let ctx = format!("traced dense2d workers={workers}");
+            assert_metrics_match(&got.metrics.rounds, &want_m, &ctx);
+            assert_outputs_match(got.output, want_out, &ctx);
+        }
+    }
+
+    // Sparse 3D.
+    {
+        let (side, block, rho) = (32usize, 8usize, 2usize);
+        let plan = SparsePlan::new(side, block, rho, 0.15, 0.4).unwrap();
+        let geo = Geometry {
+            q: plan.q(),
+            rho: plan.rho,
+        };
+        let mut rng = Xoshiro256ss::new(33);
+        let a = gen::erdos_renyi_coo(side, 0.15, &mut rng);
+        let b = gen::erdos_renyi_coo(side, 0.15, &mut rng);
+        let input = sparse_3d_static_input(block, &a, &b);
+        for workers in [1usize, 2, 8] {
+            let alg = Algo3d::new(
+                geo,
+                Arc::new(SparseOps),
+                Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+            );
+            let cfg = engine(workers);
+            let mut d = Driver::new(cfg);
+            let got = d.run(&alg, &input);
+            let (want_out, want_m) = run_reference(&alg, cfg, &input);
+            let ctx = format!("traced sparse3d workers={workers}");
+            assert_metrics_match(&got.metrics.rounds, &want_m, &ctx);
+            assert_outputs_match(got.output, want_out, &ctx);
+        }
+    }
+
+    crate::trace::clear_current_job();
+    crate::trace::disable();
+    let snap = crate::trace::snapshot();
+    assert!(
+        !snap.spans.is_empty(),
+        "the traced runs must actually have recorded spans"
+    );
+}
+
+/// The disabled path must be free: running the engine with tracing off
+/// records zero events and allocates zero recorder buffers.
+#[test]
+fn disabled_tracing_records_nothing() {
+    let _guard = crate::trace::exclusive();
+    // Disabled is the process default; make it explicit — under the
+    // exclusive guard nothing can re-enable mid-test.
+    crate::trace::disable();
+    let spans_before = crate::trace::total_recorded();
+    let bufs_before = crate::trace::buffer_count();
+
+    let (side, block, rho) = (16usize, 4usize, 2usize);
+    let geo: Geometry = Plan3d::new(side, block, rho).unwrap().into();
+    let grid = BlockGrid::new(side, block);
+    let mut rng = Xoshiro256ss::new(34);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let input = dense_3d_static_input(&grid, &a, &b);
+    let alg = Algo3d::new(
+        geo,
+        Arc::new(DenseOps::new(Arc::new(NaiveMultiply))),
+        Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+    );
+    let mut d = Driver::new(engine(4));
+    let got = d.run(&alg, &input);
+    assert!(!got.output.is_empty());
+
+    assert_eq!(
+        crate::trace::total_recorded(),
+        spans_before,
+        "disabled tracing must record nothing"
+    );
+    assert_eq!(
+        crate::trace::buffer_count(),
+        bufs_before,
+        "disabled tracing must allocate no recorder buffers"
+    );
+}
+
 /// A key-preserving combiner must leave metrics and outputs identical
 /// between the in-pass combine (new) and the task-wide regroup (old).
 #[test]

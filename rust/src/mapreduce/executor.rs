@@ -38,6 +38,10 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::trace;
+use crate::trace::recorder::{task_context, JOB_NONE};
+use crate::trace::SpanKind;
+
 /// A set of indexed tasks published to the pool. The closure and the
 /// counters live on the publishing thread's stack; lifetimes are erased
 /// to thin pointers so persistent threads can run borrowed closures.
@@ -65,6 +69,13 @@ struct TaskSet {
     /// worker's tile); top-level batch claims are ordinary dispatch
     /// and never counted as steals.
     owner_slot: usize,
+    /// Job id stamped into trace spans, captured from the publishing
+    /// thread's context at submission ([`JOB_NONE`] when untraced or
+    /// outside a job).
+    trace_job: u64,
+    /// Round number stamped into trace spans, captured with
+    /// `trace_job`.
+    trace_round: u64,
 }
 
 unsafe fn call_closure<F: Fn(usize)>(data: *const (), i: usize) {
@@ -75,6 +86,11 @@ unsafe fn call_closure<F: Fn(usize)>(data: *const (), i: usize) {
 
 impl TaskSet {
     fn new<F: Fn(usize)>(f: &F, num_tasks: usize, subtask: bool, owner_slot: usize) -> TaskSet {
+        let (trace_job, trace_round) = if trace::enabled() {
+            task_context()
+        } else {
+            (JOB_NONE, 0)
+        };
         TaskSet {
             data: f as *const F as *const (),
             call: call_closure::<F>,
@@ -84,6 +100,8 @@ impl TaskSet {
             panicked: AtomicBool::new(false),
             subtask,
             owner_slot,
+            trace_job,
+            trace_round,
         }
     }
 }
@@ -337,6 +355,26 @@ impl Shared {
         let r = catch_unwind(AssertUnwindSafe(|| unsafe { (s.call)(s.data, i) }));
         CTX.with(|c| c.set(prev));
         let elapsed = t0.elapsed().as_nanos() as u64;
+        if trace::enabled() {
+            // The span covers the task body's whole wall interval
+            // (nested activity included — the recorder keeps child
+            // spans too, so the timeline nests instead of subtracting).
+            let kind = if !s.subtask {
+                SpanKind::Task
+            } else if slot == s.owner_slot {
+                SpanKind::Subtask
+            } else {
+                SpanKind::Steal
+            };
+            let end = trace::now_ns();
+            trace::record_span(
+                kind,
+                s.trace_job,
+                s.trace_round,
+                end.saturating_sub(elapsed),
+                elapsed,
+            );
+        }
         let nested = EXCLUDED_NANOS.with(|e| e.get());
         let busy = elapsed.saturating_sub(nested);
         self.stats.busy_nanos.fetch_add(busy, Ordering::Relaxed);
@@ -434,12 +472,21 @@ fn worker_loop(shared: &Shared, slot: usize) {
             continue;
         }
         st.sleepers += 1;
+        let park_start = if trace::enabled() {
+            Some(trace::now_ns())
+        } else {
+            None
+        };
         st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
         st.sleepers -= 1;
         if st.shutdown {
             return;
         }
         drop(st);
+        if let Some(start) = park_start {
+            let end = trace::now_ns();
+            trace::record_span(SpanKind::Park, JOB_NONE, 0, start, end.saturating_sub(start));
+        }
         spins = 0;
     }
 }
@@ -518,7 +565,10 @@ impl Pool {
             crate::runtime::kernels::ensure_tuned();
             for slot in 0..self.workers - 1 {
                 let shared = Arc::clone(&self.shared);
-                handles.push(std::thread::spawn(move || worker_loop(&shared, slot)));
+                handles.push(std::thread::spawn(move || {
+                    trace::set_worker_lane(slot);
+                    worker_loop(&shared, slot)
+                }));
             }
         }
     }
@@ -592,6 +642,11 @@ impl Pool {
             // submitting thread only — but still feeds the activity
             // counters, so a single-slot round reports its true
             // (~1.0) utilisation instead of 0.
+            let (trace_job, trace_round) = if trace::enabled() {
+                task_context()
+            } else {
+                (JOB_NONE, 0)
+            };
             let mut panicked = false;
             for i in 0..num_tasks {
                 let saved = EXCLUDED_NANOS.with(|e| e.replace(0));
@@ -600,6 +655,16 @@ impl Pool {
                     panicked = true;
                 }
                 let elapsed = t0.elapsed().as_nanos() as u64;
+                if trace::enabled() {
+                    let end = trace::now_ns();
+                    trace::record_span(
+                        SpanKind::Task,
+                        trace_job,
+                        trace_round,
+                        end.saturating_sub(elapsed),
+                        elapsed,
+                    );
+                }
                 let nested = EXCLUDED_NANOS.with(|e| e.get());
                 let busy = elapsed.saturating_sub(nested);
                 self.shared.stats.tasks.fetch_add(1, Ordering::Relaxed);

@@ -16,6 +16,8 @@ use super::executor::Pool;
 use super::metrics::RoundMetrics;
 use super::shuffle::{merge_slices, MapSlices, PartitionedSink};
 use super::types::{Key, Mapper, Pair, Partitioner, Reducer, Value};
+use crate::trace;
+use crate::trace::SpanKind;
 
 /// Engine configuration, mirroring the paper's Hadoop setup (§4.2):
 /// the in-house cluster ran 2 map + 2 reduce slots on each of 16 nodes.
@@ -93,6 +95,12 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
         // Pool activity over the round's window (steals, tile
         // subtasks, busy time) is the delta of the pool's monotone
         // counters across the round.
+        let traced = trace::enabled();
+        if traced {
+            // Tag the submitting thread so spans of task sets published
+            // during this round carry the round number.
+            trace::set_current_round(round);
+        }
         let round_start = Instant::now();
         let stats0 = pool.stats();
 
@@ -100,6 +108,10 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
         // runtime distributes input pairs to map tasks); each task
         // partitions its emissions into reduce-task sub-buckets as it
         // emits, and the shuffle metrics accumulate in the same pass.
+        // Phase span starts are sampled just *before* the phase timer,
+        // so `start + metrics-duration` never overruns into the next
+        // phase and the spans stay disjoint and nested in the round.
+        let map_start_ns = if traced { trace::now_ns() } else { 0 };
         let t0 = Instant::now();
         let num_map_tasks = self.config.map_tasks.max(1).min(input.len().max(1));
         let map_outputs: Vec<MapSlices<K, V>> = {
@@ -139,18 +151,34 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
         metrics.shuffle_pairs = map_outputs.iter().map(|m| m.pairs).sum();
         metrics.shuffle_words = map_outputs.iter().map(|m| m.words).sum();
         metrics.map_time = t0.elapsed();
+        // Stamped with the *same* duration that set `map_time`, so the
+        // span-derived phase wall equals the metrics wall exactly.
+        trace::record_phase(
+            SpanKind::Map,
+            round,
+            map_start_ns,
+            metrics.map_time.as_nanos() as u64,
+        );
 
         // --- Shuffle step: each reduce task merges its column of map
         // slices on the pool.
+        let shuffle_start_ns = if traced { trace::now_ns() } else { 0 };
         let t1 = Instant::now();
         let shuffled = merge_slices(map_outputs, reduce_tasks, pool);
         metrics.num_reducers = shuffled.num_groups();
         metrics.reducers_per_task = shuffled.groups_per_task();
         metrics.shuffle_time = t1.elapsed();
+        trace::record_phase(
+            SpanKind::Shuffle,
+            round,
+            shuffle_start_ns,
+            metrics.shuffle_time.as_nanos() as u64,
+        );
 
         // --- Reduce step: one task per bucket, run on the pool. Each
         // task takes ownership of its bucket so group values are moved
         // into the reduce function, not deep-copied (§Perf L3).
+        let reduce_start_ns = if traced { trace::now_ns() } else { 0 };
         let t2 = Instant::now();
         let max_red_words = Mutex::new(0usize);
         let buckets: Vec<Mutex<Option<BTreeMap<K, Vec<V>>>>> = shuffled
@@ -179,6 +207,12 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
             .collect();
         let output: Vec<Pair<K, V>> = reduced.into_iter().flatten().collect();
         metrics.reduce_time = t2.elapsed();
+        trace::record_phase(
+            SpanKind::Reduce,
+            round,
+            reduce_start_ns,
+            metrics.reduce_time.as_nanos() as u64,
+        );
         metrics.output_pairs = output.len();
         metrics.output_words = output.iter().map(|p| p.value.words()).sum();
         metrics.write_time = Duration::ZERO; // set by the driver when materialising

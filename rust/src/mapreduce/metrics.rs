@@ -104,6 +104,22 @@ impl RoundMetrics {
     pub fn comm_time(&self) -> Duration {
         self.map_time + self.shuffle_time + self.write_time
     }
+
+    /// The round's phase walls in the span-derived shape shared by the
+    /// trace report and the online profile recalibration — the phase
+    /// spans are stamped with exactly these `Duration` values, so both
+    /// consumers see one source of truth.
+    pub fn phase_walls(&self) -> crate::trace::PhaseWalls {
+        crate::trace::PhaseWalls {
+            map_secs: self.map_time.as_secs_f64(),
+            shuffle_secs: self.shuffle_time.as_secs_f64(),
+            reduce_secs: self.reduce_time.as_secs_f64(),
+            write_secs: self.write_time.as_secs_f64(),
+            kernel_secs: self.kernel_time.as_secs_f64(),
+            idle_secs: self.total_time().as_secs_f64()
+                * (1.0 - self.pool_utilisation.clamp(0.0, 1.0)),
+        }
+    }
 }
 
 /// Metrics of a multi-round execution.
@@ -255,6 +271,21 @@ mod tests {
         assert_eq!(r.mean_output_chunk_words(), 0.0, "no per-task record");
         r.output_words_per_task = vec![6, 0, 2, 0];
         assert_eq!(r.mean_output_chunk_words(), 4.0);
+    }
+
+    #[test]
+    fn phase_walls_mirror_round_times() {
+        let mut r = mk(0, 1, 1);
+        r.kernel_time = Duration::from_millis(8);
+        r.pool_utilisation = 0.75;
+        let w = r.phase_walls();
+        assert!((w.map_secs - 0.010).abs() < 1e-12);
+        assert!((w.shuffle_secs - 0.005).abs() < 1e-12);
+        assert!((w.reduce_secs - 0.020).abs() < 1e-12);
+        assert!((w.write_secs - 0.002).abs() < 1e-12);
+        assert!((w.kernel_secs - 0.008).abs() < 1e-12);
+        assert!((w.total_secs() - r.total_time().as_secs_f64()).abs() < 1e-12);
+        assert!((w.idle_secs - 0.037 * 0.25).abs() < 1e-12, "wall × (1 − utilisation)");
     }
 
     #[test]

@@ -30,6 +30,8 @@ use std::sync::Mutex;
 
 use super::executor::Pool;
 use super::types::{Key, Pair, Partitioner, Value};
+use crate::trace;
+use crate::trace::SpanKind;
 
 /// Output of the shuffle: one bucket per reduce task, each mapping key
 /// → grouped values (in map-emission order within the group).
@@ -132,7 +134,17 @@ pub fn merge_slices<K: Key, V: Value>(
     }
     let columns: Vec<Mutex<Option<Vec<Vec<Pair<K, V>>>>>> =
         columns.into_iter().map(|c| Mutex::new(Some(c))).collect();
+    // Trace context is captured on the calling thread: the merge
+    // closures run on pool workers, whose thread-locals do not carry
+    // the submitting round's job/round tags.
+    let traced = trace::enabled();
+    let (trace_job, trace_round) = if traced {
+        trace::recorder::task_context()
+    } else {
+        (trace::recorder::JOB_NONE, 0)
+    };
     let buckets = pool.run_indexed(num_tasks, |t| {
+        let start_ns = if traced { trace::now_ns() } else { 0 };
         let column = columns[t]
             .lock()
             .unwrap()
@@ -143,6 +155,16 @@ pub fn merge_slices<K: Key, V: Value>(
             for p in slice {
                 bucket.entry(p.key).or_default().push(p.value);
             }
+        }
+        if traced {
+            let end = trace::now_ns();
+            trace::record_span(
+                SpanKind::Merge,
+                trace_job,
+                trace_round,
+                start_ns,
+                end.saturating_sub(start_ns),
+            );
         }
         bucket
     });

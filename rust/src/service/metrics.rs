@@ -202,6 +202,35 @@ impl ServiceMetrics {
         t.render()
     }
 
+    /// Render the virtual-clock round timeline: one row per scheduled
+    /// round attempt in execution order — the service-layer companion
+    /// to the span-derived per-round breakdown in
+    /// [`crate::trace::render_report`]. Deterministic per seed because
+    /// every column is virtual-clock or count data.
+    pub fn timeline_table(trace: &[super::scheduler::RoundTrace]) -> String {
+        let mut t = Table::new(&[
+            "start(s)",
+            "job",
+            "tenant",
+            "round",
+            "dur(s)",
+            "committed",
+            "gang",
+        ]);
+        for r in trace {
+            t.row(&[
+                format!("{:.1}", r.start_secs),
+                r.job.to_string(),
+                r.tenant.to_string(),
+                r.round.to_string(),
+                format!("{:.1}", r.duration_secs),
+                if r.committed { "yes" } else { "no" }.to_string(),
+                if r.gang { "yes" } else { "no" }.to_string(),
+            ]);
+        }
+        t.render()
+    }
+
     /// Render the per-tenant table.
     pub fn tenant_table(&self) -> String {
         let mut t = Table::new(&[
@@ -283,5 +312,37 @@ mod tests {
         };
         assert!(m.table().contains("tenant"));
         assert!(m.tenant_table().contains("mean_wait"));
+    }
+
+    #[test]
+    fn timeline_table_renders_attempts_in_order() {
+        use crate::service::scheduler::RoundTrace;
+        let trace = vec![
+            RoundTrace {
+                job: 0,
+                tenant: 0,
+                round: 0,
+                start_secs: 0.0,
+                duration_secs: 2.5,
+                committed: true,
+                gang: true,
+            },
+            RoundTrace {
+                job: 1,
+                tenant: 1,
+                round: 3,
+                start_secs: 2.5,
+                duration_secs: 1.0,
+                committed: false,
+                gang: false,
+            },
+        ];
+        let s = ServiceMetrics::timeline_table(&trace);
+        assert!(s.contains("committed"));
+        assert!(s.contains("gang"));
+        // line 0 = header, line 1 = separator, data rows follow.
+        let rows: Vec<&str> = s.lines().collect();
+        assert!(rows[2].contains("0.0") && rows[2].contains("yes"));
+        assert!(rows[3].contains("2.5") && rows[3].contains("no"));
     }
 }

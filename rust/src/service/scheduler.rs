@@ -42,6 +42,8 @@ use anyhow::Result;
 use crate::mapreduce::{EngineConfig, Pool};
 use crate::runtime::LocalMultiply;
 use crate::simulator::{ClusterProfile, ProfileTracker};
+use crate::trace;
+use crate::trace::ServiceEventKind;
 
 use super::job::{spawn_job_on, ActiveJob, JobOutput, JobSpec};
 use super::metrics::{JobReport, ServiceMetrics};
@@ -160,6 +162,10 @@ pub struct ServiceOutcome {
     pub trace: Vec<RoundTrace>,
     /// Completed jobs with outputs (sorted by job id).
     pub completed: Vec<CompletedJob>,
+    /// This run's trace-run id: service events recorded during the run
+    /// are stamped with it, so a trace export can filter to exactly
+    /// this run even when several ran in the same process.
+    pub trace_run: u64,
 }
 
 struct Entry {
@@ -208,6 +214,8 @@ fn recalibrate_after_commit(
     tracker: &mut ProfileTracker,
     observations: &[(&crate::mapreduce::RoundMetrics, f64)],
     active: &mut [Entry],
+    run: u64,
+    clock: f64,
 ) {
     for (m, flops) in observations {
         tracker.observe_round(m, *flops);
@@ -222,6 +230,14 @@ fn recalibrate_after_commit(
             // downstream `executed == total + preemptions` invariant
             // breaks.
             e.report.rounds_total = e.job.num_rounds();
+            trace::record_event(
+                ServiceEventKind::Replan,
+                run,
+                e.spec.id,
+                None,
+                e.job.next_round(),
+                clock,
+            );
         } else {
             e.job.repredict(&profile);
         }
@@ -289,6 +305,9 @@ pub fn run_service(
     // `cfg.recalibrate` the tracker never observes and `profile()`
     // stays the seed.
     let mut tracker = ProfileTracker::new(cfg.profile);
+    // Service events recorded below carry this id so a later trace
+    // export can separate this run from any other in the process.
+    let trace_run = trace::next_run_id();
 
     loop {
         // Admit every job that has arrived by now, planned and priced
@@ -313,6 +332,14 @@ pub fn run_service(
 
         // Pick the job whose round occupies the cluster next.
         let idx = pick(cfg.policy, &active, &tenant_service);
+        trace::record_event(
+            ServiceEventKind::Schedule,
+            trace_run,
+            active[idx].spec.id,
+            None,
+            active[idx].job.next_round(),
+            clock,
+        );
 
         // Preemptions that struck an idle cluster or a round boundary
         // in the past hit nothing.
@@ -351,9 +378,32 @@ pub fn run_service(
                 let (e_lo, e_hi) = (&mut left[lo], &mut right[0]);
                 let round_lo = e_lo.job.next_round();
                 let round_hi = e_hi.job.next_round();
+                let (id_lo, id_hi) = (e_lo.spec.id, e_hi.spec.id);
+                let (primary_id, partner_id, primary_round) = if idx == lo {
+                    (id_lo, id_hi, round_lo)
+                } else {
+                    (id_hi, id_lo, round_hi)
+                };
+                trace::record_event(
+                    ServiceEventKind::GangPair,
+                    trace_run,
+                    primary_id,
+                    Some(partner_id),
+                    primary_round,
+                    clock,
+                );
                 let (m_lo, m_hi) = std::thread::scope(|s| {
-                    let h = s.spawn(|| e_hi.job.step_commit());
+                    let h = s.spawn(|| {
+                        // Each gang arm tags its own submitting thread,
+                        // so the two jobs' phase spans never mix.
+                        trace::set_current_job(id_hi as u64);
+                        let m = e_hi.job.step_commit();
+                        trace::clear_current_job();
+                        m
+                    });
+                    trace::set_current_job(id_lo as u64);
                     let m_lo = e_lo.job.step_commit();
+                    trace::clear_current_job();
                     let m_hi = match h.join() {
                         Ok(m) => m,
                         Err(p) => std::panic::resume_unwind(p),
@@ -413,7 +463,19 @@ pub fn run_service(
             // round re-runs at the job's next turn.
             let at = preempts[next_preempt];
             next_preempt += 1;
+            // The strike's virtual stamp is the preemption instant, not
+            // the round start — that is when the spot market acted.
+            trace::record_event(
+                ServiceEventKind::SpotStrike,
+                trace_run,
+                e.spec.id,
+                None,
+                round,
+                at,
+            );
+            trace::set_current_job(e.spec.id as u64);
             let m = e.job.step_discard();
+            trace::clear_current_job();
             let lost = at - clock;
             e.report.discarded_secs += lost;
             e.report.preemptions += 1;
@@ -432,7 +494,9 @@ pub fn run_service(
             continue;
         }
 
+        trace::set_current_job(e.spec.id as u64);
         let m = e.job.step_commit();
+        trace::clear_current_job();
         record_commit(
             &mut active[idx],
             round,
@@ -444,7 +508,7 @@ pub fn run_service(
             &mut tenant_service,
         );
         if cfg.recalibrate {
-            recalibrate_after_commit(&mut tracker, &[(&m, flops)], &mut active);
+            recalibrate_after_commit(&mut tracker, &[(&m, flops)], &mut active, trace_run, clock);
         }
         clock += pred;
         retire_if_done(&mut active, idx, clock, &mut reports, &mut completed);
@@ -456,6 +520,7 @@ pub fn run_service(
         metrics: ServiceMetrics { jobs: reports },
         trace,
         completed,
+        trace_run,
     })
 }
 
@@ -625,6 +690,34 @@ mod tests {
             let b = run(&specs, &cfg(policy));
             assert_eq!(a.trace, b.trace, "policy {policy:?} must be deterministic");
         }
+    }
+
+    #[test]
+    fn traced_service_events_are_seed_deterministic() {
+        // With tracing on, two runs of the same seeded workload must
+        // emit identical service-event streams once wall-time stamps
+        // are projected out: the virtual clock, not the host, orders
+        // the schedule, so the traced fields are bit-reproducible.
+        let _guard = trace::exclusive();
+        trace::enable();
+        let specs: Vec<JobSpec> = (0..3).map(|i| small3d(i, i % 2, 0.0, 2)).collect();
+        let a = run(&specs, &cfg(Policy::Srpt));
+        let b = run(&specs, &cfg(Policy::Srpt));
+        trace::disable();
+        let snap = trace::snapshot();
+        let project = |run_id: u64| -> Vec<(&'static str, usize, Option<usize>, usize, u64)> {
+            snap.events
+                .iter()
+                .filter(|e| e.run == run_id)
+                .map(|e| (e.kind.name(), e.job, e.partner, e.round, e.virt_secs.to_bits()))
+                .collect()
+        };
+        let ea = project(a.trace_run);
+        let eb = project(b.trace_run);
+        assert_ne!(a.trace_run, b.trace_run, "each run gets a fresh id");
+        assert!(!ea.is_empty(), "a traced service run records schedule events");
+        assert_eq!(ea, eb, "virtual-clock event fields must match bit-for-bit");
+        assert_eq!(a.trace, b.trace, "the round-grain schedule matches too");
     }
 
     #[test]

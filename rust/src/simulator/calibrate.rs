@@ -161,17 +161,21 @@ impl ProfileTracker {
     /// known analytically, not measured).
     pub fn observe_round(&mut self, m: &RoundMetrics, flops: f64) {
         let bpw = self.seed.bytes_per_word;
+        // Phase walls come from the same span-derived shape the trace
+        // report prints ([`RoundMetrics::phase_walls`]), so the online
+        // recalibration and the observability report can never drift
+        // apart on what a round's map/shuffle/write time was.
+        let w = m.phase_walls();
         self.flops += flops;
-        self.kernel_secs += m.kernel_time.as_secs_f64();
+        self.kernel_secs += w.kernel_secs;
         self.shuffle_bytes += m.shuffle_words as f64 * bpw;
-        self.shuffle_secs += (m.map_time + m.shuffle_time).as_secs_f64();
+        self.shuffle_secs += w.transfer_secs();
         self.write_bytes += m.output_words as f64 * bpw;
-        self.write_secs += m.write_time.as_secs_f64();
+        self.write_secs += w.write_secs;
         // The slack the pool could not fill is the round's effective
         // fixed overhead (scheduling, barriers) — the engine-scale
         // analogue of the paper's per-round infrastructure cost.
-        let wall = m.total_time().as_secs_f64();
-        self.setup_secs += wall * (1.0 - m.pool_utilisation.clamp(0.0, 1.0));
+        self.setup_secs += w.idle_secs;
         let chunk = m.mean_output_chunk_words();
         if chunk > 0.0 {
             self.chunk_bytes_sum += chunk * bpw;

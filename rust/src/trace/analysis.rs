@@ -1,0 +1,440 @@
+//! Fold raw spans into per-round timelines, per-worker breakdowns, and
+//! critical-path attribution.
+//!
+//! The folding is exact, not statistical: phase spans are stamped with
+//! the same `Duration` values that set the round's
+//! [`crate::mapreduce::RoundMetrics`], and their intervals are disjoint
+//! and contained in the enclosing round span by construction, so
+//! per-round phase walls here equal the metrics walls bit for bit and
+//! `other = wall − (map + shuffle + reduce + commit)` is the round's
+//! true unattributed remainder (input composition, DFS read
+//! accounting).
+
+use crate::util::table::Table;
+
+use super::recorder::{Span, SpanKind};
+
+/// A round's wall time split into phase walls — the span-derived
+/// single source of truth shared by this report and the online profile
+/// recalibration ([`crate::simulator::ProfileTracker`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseWalls {
+    /// Map phase wall, seconds.
+    pub map_secs: f64,
+    /// Shuffle (slice-merge) phase wall, seconds.
+    pub shuffle_secs: f64,
+    /// Reduce phase wall, seconds.
+    pub reduce_secs: f64,
+    /// DFS materialisation wall, seconds.
+    pub write_secs: f64,
+    /// Local-multiply kernel time summed across tasks, seconds (CPU
+    /// time, may exceed any single wall).
+    pub kernel_secs: f64,
+    /// Pool slack over the round: wall × (1 − utilisation), seconds —
+    /// the engine-scale analogue of the paper's per-round
+    /// infrastructure cost.
+    pub idle_secs: f64,
+}
+
+impl PhaseWalls {
+    /// Total round wall, seconds (sum of the four phase walls).
+    pub fn total_secs(&self) -> f64 {
+        self.map_secs + self.shuffle_secs + self.reduce_secs + self.write_secs
+    }
+
+    /// Data-movement wall (map + shuffle), seconds — the window the
+    /// calibrator charges against network bandwidth.
+    pub fn transfer_secs(&self) -> f64 {
+        self.map_secs + self.shuffle_secs
+    }
+}
+
+/// One round attempt's timeline, folded from its span tree. All times
+/// are nanoseconds so report lines can be cross-checked against the
+/// exported trace exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoundTimeline {
+    /// Owning job id.
+    pub job: u64,
+    /// Round index.
+    pub round: usize,
+    /// Round start, nanoseconds since the trace anchor.
+    pub start_ns: u64,
+    /// Round wall, nanoseconds.
+    pub wall_ns: u64,
+    /// Map phase wall, nanoseconds.
+    pub map_ns: u64,
+    /// Shuffle phase wall, nanoseconds.
+    pub shuffle_ns: u64,
+    /// Reduce phase wall, nanoseconds.
+    pub reduce_ns: u64,
+    /// Commit (DFS write) wall, nanoseconds.
+    pub commit_ns: u64,
+    /// Unattributed remainder of the round wall, nanoseconds.
+    pub other_ns: u64,
+    /// Phase owning the largest share of the wall.
+    pub crit_phase: &'static str,
+}
+
+impl RoundTimeline {
+    /// The critical phase's share of the round wall (0 when empty).
+    pub fn crit_frac(&self) -> f64 {
+        let crit = [
+            self.map_ns,
+            self.shuffle_ns,
+            self.reduce_ns,
+            self.commit_ns,
+            self.other_ns,
+        ]
+        .into_iter()
+        .max()
+        .unwrap_or(0);
+        if self.wall_ns == 0 {
+            0.0
+        } else {
+            crit as f64 / self.wall_ns as f64
+        }
+    }
+}
+
+/// One pool worker's activity over the trace window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerBreakdown {
+    /// Track label (`worker N`, or `recorder N` for non-worker
+    /// recording threads such as the workers==1 inline path).
+    pub label: String,
+    /// Seconds inside locally-dispatched task/subtask bodies.
+    pub busy_secs: f64,
+    /// Seconds inside stolen task bodies.
+    pub steal_secs: f64,
+    /// Seconds parked on the work condvar.
+    pub park_secs: f64,
+    /// Window remainder: not in a task body, not parked, seconds.
+    pub idle_secs: f64,
+    /// Task bodies executed (dispatched + stolen + subtasks).
+    pub tasks: usize,
+    /// Stolen claims among them.
+    pub steals: usize,
+}
+
+/// Fold phase spans into per-round timelines, one per round-span
+/// attempt, ordered by start time. A phase belongs to a round when it
+/// shares the round's job and index, was recorded by the same thread,
+/// and its interval is contained in the round's (re-executed rounds
+/// under preemption yield one timeline per attempt).
+pub fn fold_rounds(spans: &[Span]) -> Vec<RoundTimeline> {
+    let mut rounds: Vec<&Span> = spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Round)
+        .collect();
+    rounds.sort_by_key(|s| (s.start_ns, s.buf));
+    rounds
+        .iter()
+        .map(|r| {
+            let mut t = RoundTimeline {
+                job: r.job,
+                round: r.round,
+                start_ns: r.start_ns,
+                wall_ns: r.dur_ns,
+                map_ns: 0,
+                shuffle_ns: 0,
+                reduce_ns: 0,
+                commit_ns: 0,
+                other_ns: 0,
+                crit_phase: "other",
+            };
+            for s in spans {
+                let contained = s.buf == r.buf
+                    && s.job == r.job
+                    && s.round == r.round
+                    && s.start_ns >= r.start_ns
+                    && s.end_ns() <= r.end_ns();
+                if !contained {
+                    continue;
+                }
+                match s.kind {
+                    SpanKind::Map => t.map_ns += s.dur_ns,
+                    SpanKind::Shuffle => t.shuffle_ns += s.dur_ns,
+                    SpanKind::Reduce => t.reduce_ns += s.dur_ns,
+                    SpanKind::Commit => t.commit_ns += s.dur_ns,
+                    _ => {}
+                }
+            }
+            let attributed = t.map_ns + t.shuffle_ns + t.reduce_ns + t.commit_ns;
+            t.other_ns = t.wall_ns.saturating_sub(attributed);
+            let phases = [
+                ("map", t.map_ns),
+                ("shuffle", t.shuffle_ns),
+                ("reduce", t.reduce_ns),
+                ("commit", t.commit_ns),
+                ("other", t.other_ns),
+            ];
+            t.crit_phase = phases
+                .into_iter()
+                .max_by_key(|&(_, ns)| ns)
+                .map(|(name, _)| name)
+                .unwrap_or("other");
+            t
+        })
+        .collect()
+}
+
+/// Fold executor spans into per-worker busy/steal/park/idle
+/// breakdowns over the trace window (earliest span start → latest span
+/// end), ordered by track label. Merge spans are excluded — they nest
+/// inside the task body that runs them and would double-count.
+pub fn fold_workers(spans: &[Span]) -> Vec<WorkerBreakdown> {
+    let pool: Vec<&Span> = spans
+        .iter()
+        .filter(|s| {
+            matches!(
+                s.kind,
+                SpanKind::Task | SpanKind::Steal | SpanKind::Subtask | SpanKind::Park
+            )
+        })
+        .collect();
+    if pool.is_empty() {
+        return vec![];
+    }
+    let win_start = spans.iter().map(|s| s.start_ns).min().unwrap_or(0);
+    let win_end = spans.iter().map(|s| s.end_ns()).max().unwrap_or(0);
+    let window = (win_end.saturating_sub(win_start)) as f64 / 1e9;
+
+    let mut tracks: Vec<(u32, u32)> = pool.iter().map(|s| (s.lane, s.buf)).collect();
+    tracks.sort_unstable();
+    tracks.dedup();
+    tracks
+        .into_iter()
+        .map(|(lane, buf)| {
+            let mut w = WorkerBreakdown {
+                label: if lane == u32::MAX {
+                    format!("recorder {buf}")
+                } else {
+                    format!("worker {lane}")
+                },
+                busy_secs: 0.0,
+                steal_secs: 0.0,
+                park_secs: 0.0,
+                idle_secs: 0.0,
+                tasks: 0,
+                steals: 0,
+            };
+            for s in pool.iter().filter(|s| s.lane == lane && s.buf == buf) {
+                let secs = s.dur_ns as f64 / 1e9;
+                match s.kind {
+                    SpanKind::Steal => {
+                        w.steal_secs += secs;
+                        w.tasks += 1;
+                        w.steals += 1;
+                    }
+                    SpanKind::Task | SpanKind::Subtask => {
+                        w.busy_secs += secs;
+                        w.tasks += 1;
+                    }
+                    SpanKind::Park => w.park_secs += secs,
+                    _ => {}
+                }
+            }
+            w.idle_secs = (window - w.busy_secs - w.steal_secs - w.park_secs).max(0.0);
+            w
+        })
+        .collect()
+}
+
+fn ms(ns: u64) -> String {
+    format!("{:.2}", ns as f64 / 1e6)
+}
+
+fn pct(part: f64, whole: f64) -> String {
+    if whole <= 0.0 {
+        "0.0%".to_string()
+    } else {
+        format!("{:.1}%", 100.0 * part / whole)
+    }
+}
+
+/// Render the per-round timeline and per-worker breakdown report.
+/// Besides the tables, one machine-greppable `TRACE round …` line per
+/// round carries the exact nanosecond walls so CI can cross-check the
+/// report against the exported trace JSON.
+pub fn render_report(spans: &[Span], dropped: u64) -> String {
+    let mut out = String::new();
+    let timelines = fold_rounds(spans);
+
+    out.push_str("--- where each round's time goes ---\n");
+    let mut t = Table::new(&[
+        "job", "round", "wall(ms)", "map(ms)", "shuffle(ms)", "reduce(ms)", "commit(ms)",
+        "other(ms)", "crit", "crit%",
+    ]);
+    for r in &timelines {
+        t.row(&[
+            r.job.to_string(),
+            r.round.to_string(),
+            ms(r.wall_ns),
+            ms(r.map_ns),
+            ms(r.shuffle_ns),
+            ms(r.reduce_ns),
+            ms(r.commit_ns),
+            ms(r.other_ns),
+            r.crit_phase.to_string(),
+            format!("{:.1}%", 100.0 * r.crit_frac()),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+    for r in &timelines {
+        out.push_str(&format!(
+            "TRACE round job={} r={} wall_ns={} map_ns={} shuffle_ns={} reduce_ns={} \
+             commit_ns={}\n",
+            r.job, r.round, r.wall_ns, r.map_ns, r.shuffle_ns, r.reduce_ns, r.commit_ns,
+        ));
+    }
+
+    let workers = fold_workers(spans);
+    if !workers.is_empty() {
+        out.push_str("\n--- per-worker pool activity over the trace window ---\n");
+        let mut t = Table::new(&[
+            "worker", "busy%", "steal%", "park%", "idle%", "tasks", "steals",
+        ]);
+        for w in &workers {
+            let total = w.busy_secs + w.steal_secs + w.park_secs + w.idle_secs;
+            t.row(&[
+                w.label.clone(),
+                pct(w.busy_secs, total),
+                pct(w.steal_secs, total),
+                pct(w.park_secs, total),
+                pct(w.idle_secs, total),
+                w.tasks.to_string(),
+                w.steals.to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    if dropped > 0 {
+        out.push_str(&format!(
+            "\nWARNING: {dropped} span(s) dropped (a recorder buffer filled); \
+             timelines may be incomplete\n"
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(
+        kind: SpanKind,
+        lane: u32,
+        buf: u32,
+        job: u64,
+        round: usize,
+        start: u64,
+        dur: u64,
+    ) -> Span {
+        Span {
+            kind,
+            lane,
+            buf,
+            job,
+            round,
+            start_ns: start,
+            dur_ns: dur,
+        }
+    }
+
+    fn round_with_phases() -> Vec<Span> {
+        vec![
+            span(SpanKind::Round, u32::MAX, 0, 5, 0, 100, 1000),
+            span(SpanKind::Map, u32::MAX, 0, 5, 0, 100, 300),
+            span(SpanKind::Shuffle, u32::MAX, 0, 5, 0, 400, 100),
+            span(SpanKind::Reduce, u32::MAX, 0, 5, 0, 500, 450),
+            span(SpanKind::Commit, u32::MAX, 0, 5, 0, 950, 100),
+            // A foreign round on another thread must not be absorbed.
+            span(SpanKind::Map, u32::MAX, 1, 9, 0, 100, 900),
+        ]
+    }
+
+    #[test]
+    fn fold_rounds_attributes_phases_and_critical_path() {
+        let t = fold_rounds(&round_with_phases());
+        assert_eq!(t.len(), 1);
+        let r = &t[0];
+        assert_eq!((r.job, r.round), (5, 0));
+        assert_eq!(r.wall_ns, 1000);
+        assert_eq!(r.map_ns, 300);
+        assert_eq!(r.shuffle_ns, 100);
+        assert_eq!(r.reduce_ns, 450);
+        assert_eq!(r.commit_ns, 100);
+        assert_eq!(r.other_ns, 50);
+        assert_eq!(r.crit_phase, "reduce");
+        assert!((r.crit_frac() - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fold_rounds_orders_reexecuted_attempts() {
+        let spans = vec![
+            span(SpanKind::Round, u32::MAX, 0, 2, 1, 5000, 100),
+            span(SpanKind::Round, u32::MAX, 0, 2, 1, 1000, 100),
+        ];
+        let t = fold_rounds(&spans);
+        assert_eq!(t.len(), 2, "one timeline per attempt");
+        assert!(t[0].start_ns < t[1].start_ns);
+    }
+
+    #[test]
+    fn fold_workers_splits_busy_steal_park_idle() {
+        let spans = vec![
+            span(SpanKind::Task, 0, 2, 5, 0, 0, 400),
+            span(SpanKind::Subtask, 0, 2, 5, 0, 400, 100),
+            span(SpanKind::Steal, 1, 3, 5, 0, 0, 200),
+            span(SpanKind::Park, 1, 3, 5, 0, 200, 300),
+        ];
+        let w = fold_workers(&spans);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].label, "worker 0");
+        assert!((w[0].busy_secs - 500e-9).abs() < 1e-15);
+        assert_eq!((w[0].tasks, w[0].steals), (2, 0));
+        assert!((w[0].idle_secs - 0.0).abs() < 1e-15, "window is 500ns, fully busy");
+        assert_eq!(w[1].label, "worker 1");
+        assert!((w[1].steal_secs - 200e-9).abs() < 1e-15);
+        assert!((w[1].park_secs - 300e-9).abs() < 1e-15);
+        assert_eq!((w[1].tasks, w[1].steals), (1, 1));
+    }
+
+    #[test]
+    fn fold_workers_empty_without_pool_spans() {
+        assert!(fold_workers(&round_with_phases()[..5]).is_empty());
+    }
+
+    #[test]
+    fn report_renders_tables_and_trace_lines() {
+        let mut spans = round_with_phases();
+        spans.push(span(SpanKind::Task, 0, 2, 5, 0, 120, 200));
+        let rep = render_report(&spans, 0);
+        assert!(rep.contains("crit"));
+        assert!(rep.contains("busy%"));
+        assert!(rep.contains("steal%"));
+        assert!(rep.contains(
+            "TRACE round job=5 r=0 wall_ns=1000 map_ns=300 shuffle_ns=100 reduce_ns=450 \
+             commit_ns=100"
+        ));
+        assert!(!rep.contains("WARNING"));
+        assert!(render_report(&spans, 3).contains("3 span(s) dropped"));
+    }
+
+    #[test]
+    fn phase_walls_totals() {
+        let w = PhaseWalls {
+            map_secs: 0.3,
+            shuffle_secs: 0.2,
+            reduce_secs: 0.4,
+            write_secs: 0.1,
+            kernel_secs: 0.35,
+            idle_secs: 0.5,
+        };
+        assert!((w.total_secs() - 1.0).abs() < 1e-12);
+        assert!((w.transfer_secs() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,214 @@
+//! Chrome `trace_event` JSON exporter.
+//!
+//! The emitted file loads directly in Perfetto
+//! (<https://ui.perfetto.dev>) or `chrome://tracing`:
+//!
+//! * one *process* per traced job (`pid = 100 + job`), carrying the
+//!   round/phase spans on a single track — phases visually nest inside
+//!   their round span because their intervals are contained in it;
+//! * one process for the shared cluster pool (`pid = 0`), one *thread*
+//!   per pool worker slot (`tid = lane`; non-worker recorder threads
+//!   get `tid = 1000 + buffer id`), carrying task / steal / subtask /
+//!   merge / park spans;
+//! * one process for the service scheduler (`pid = 1`), whose
+//!   decisions (schedule, gang pairing, spot strike, replan) appear as
+//!   instant events stamped with both the wall clock (`ts`) and the
+//!   deterministic virtual clock (`args.virt_secs`).
+//!
+//! All durations are complete events (`"ph":"X"`); `ts`/`dur` are
+//! microseconds with nanosecond precision (three decimals), sharing the
+//! process-wide trace anchor so tracks line up across threads.
+
+use std::collections::BTreeSet;
+
+use super::recorder::{ServiceEvent, Span, SpanKind, JOB_NONE};
+
+/// Process id of the shared cluster pool's track group.
+const PID_POOL: u64 = 0;
+/// Process id of the service scheduler's instant events.
+const PID_SERVICE: u64 = 1;
+/// Process id of job `j` is `PID_JOB_BASE + j`.
+const PID_JOB_BASE: u64 = 100;
+
+/// Microsecond timestamp with nanosecond precision.
+fn us(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1000.0)
+}
+
+fn is_phase(kind: SpanKind) -> bool {
+    matches!(
+        kind,
+        SpanKind::Round | SpanKind::Map | SpanKind::Shuffle | SpanKind::Reduce | SpanKind::Commit
+    )
+}
+
+fn span_pid_tid(s: &Span) -> (u64, u64) {
+    if is_phase(s.kind) {
+        (PID_JOB_BASE + s.job, 0)
+    } else {
+        let tid = if s.lane == u32::MAX {
+            1000 + s.buf as u64
+        } else {
+            s.lane as u64
+        };
+        (PID_POOL, tid)
+    }
+}
+
+fn span_json(s: &Span) -> String {
+    let (pid, tid) = span_pid_tid(s);
+    let mut args = format!("\"round\":{}", s.round);
+    if s.job != JOB_NONE {
+        args.push_str(&format!(",\"job\":{}", s.job));
+    }
+    format!(
+        "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{pid},\"tid\":{tid},\
+         \"args\":{{{args}}}}}",
+        s.kind.name(),
+        us(s.start_ns),
+        us(s.dur_ns),
+    )
+}
+
+fn event_json(e: &ServiceEvent) -> String {
+    let partner = match e.partner {
+        Some(p) => p.to_string(),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"name\":\"{}\",\"ph\":\"i\",\"ts\":{},\"pid\":{PID_SERVICE},\"tid\":0,\"s\":\"p\",\
+         \"args\":{{\"run\":{},\"job\":{},\"partner\":{partner},\"round\":{},\
+         \"virt_secs\":{:.6}}}}}",
+        e.kind.name(),
+        us(e.wall_ns),
+        e.run,
+        e.job,
+        e.round,
+        e.virt_secs,
+    )
+}
+
+fn meta_process(pid: u64, name: &str) -> String {
+    format!(
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+         \"args\":{{\"name\":\"{name}\"}}}}"
+    )
+}
+
+fn meta_thread(pid: u64, tid: u64, name: &str) -> String {
+    format!(
+        "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
+         \"args\":{{\"name\":\"{name}\"}}}}"
+    )
+}
+
+/// Serialise spans and service events as a Chrome `trace_event` JSON
+/// document. Callers pre-filter to the spans/events they want (e.g.
+/// one service run's id); this function only formats.
+pub fn export_chrome_trace(spans: &[Span], events: &[ServiceEvent]) -> String {
+    let mut items: Vec<String> = Vec::with_capacity(spans.len() + events.len() + 16);
+
+    // Metadata first: name the pool, the scheduler, each job process,
+    // and each pool-worker thread.
+    let mut jobs: BTreeSet<u64> = BTreeSet::new();
+    let mut pool_tids: BTreeSet<u64> = BTreeSet::new();
+    for s in spans {
+        let (pid, tid) = span_pid_tid(s);
+        if pid == PID_POOL {
+            pool_tids.insert(tid);
+        } else if s.job != JOB_NONE {
+            jobs.insert(s.job);
+        }
+    }
+    items.push(meta_process(PID_POOL, "cluster pool"));
+    if !events.is_empty() {
+        items.push(meta_process(PID_SERVICE, "service scheduler"));
+    }
+    for &j in &jobs {
+        items.push(meta_process(PID_JOB_BASE + j, &format!("job {j}")));
+    }
+    for &tid in &pool_tids {
+        let name = if tid >= 1000 {
+            format!("recorder {}", tid - 1000)
+        } else {
+            format!("worker {tid}")
+        };
+        items.push(meta_thread(PID_POOL, tid, &name));
+    }
+
+    items.extend(spans.iter().map(span_json));
+    items.extend(events.iter().map(event_json));
+
+    format!(
+        "{{\"traceEvents\":[{}],\"displayTimeUnit\":\"ms\"}}\n",
+        items.join(",\n")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::recorder::ServiceEventKind;
+
+    fn span(kind: SpanKind, lane: u32, job: u64, round: usize, start: u64, dur: u64) -> Span {
+        Span {
+            kind,
+            lane,
+            buf: 3,
+            job,
+            round,
+            start_ns: start,
+            dur_ns: dur,
+        }
+    }
+
+    #[test]
+    fn phase_spans_map_to_job_processes() {
+        let spans = vec![
+            span(SpanKind::Round, u32::MAX, 7, 0, 1000, 5000),
+            span(SpanKind::Map, u32::MAX, 7, 0, 1000, 2000),
+        ];
+        let json = export_chrome_trace(&spans, &[]);
+        assert!(json.contains("\"name\":\"round\""));
+        assert!(json.contains("\"pid\":107"));
+        assert!(json.contains("\"name\":\"job 7\""));
+        assert!(json.contains("\"ts\":1.000"));
+        assert!(json.contains("\"dur\":5.000"));
+    }
+
+    #[test]
+    fn pool_spans_map_to_worker_threads() {
+        let spans = vec![
+            span(SpanKind::Steal, 2, 7, 1, 0, 500),
+            span(SpanKind::Task, u32::MAX, JOB_NONE, 0, 0, 100),
+        ];
+        let json = export_chrome_trace(&spans, &[]);
+        assert!(json.contains("\"pid\":0"));
+        assert!(json.contains("\"tid\":2"));
+        assert!(json.contains("\"name\":\"worker 2\""));
+        // Non-worker recorder thread: tid = 1000 + buf, no job arg.
+        assert!(json.contains("\"tid\":1003"));
+        assert!(json.contains("\"name\":\"recorder 3\""));
+        assert!(json.contains("\"args\":{\"round\":0}"));
+    }
+
+    #[test]
+    fn service_events_are_instants_with_both_clocks() {
+        let ev = ServiceEvent {
+            kind: ServiceEventKind::SpotStrike,
+            run: 9,
+            job: 4,
+            partner: None,
+            round: 2,
+            virt_secs: 41.25,
+            wall_ns: 123_456,
+        };
+        let json = export_chrome_trace(&[], &[ev]);
+        assert!(json.contains("\"name\":\"spot_strike\""));
+        assert!(json.contains("\"ph\":\"i\""));
+        assert!(json.contains("\"ts\":123.456"));
+        assert!(json.contains("\"virt_secs\":41.250000"));
+        assert!(json.contains("\"partner\":null"));
+        assert!(json.contains("\"name\":\"service scheduler\""));
+    }
+}

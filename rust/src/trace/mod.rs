@@ -1,0 +1,142 @@
+//! Structured span tracing: per-worker timelines, Chrome-trace export,
+//! and critical-path attribution for rounds.
+//!
+//! The engine's aggregate counters ([`crate::mapreduce::RoundMetrics`],
+//! [`crate::mapreduce::PoolStats`]) say *how much* work a round did;
+//! this subsystem records *when* each piece ran, so a round's wall time
+//! can be attributed to map vs. shuffle-merge vs. reduce vs. DFS commit
+//! and per-worker busy/steal/park behaviour becomes visible — the
+//! paper's three-way cost split (infrastructure / computation /
+//! communication), measured per round instead of assumed.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Tracing must never change what the engine computes.** A traced
+//!    run is bit-identical in outputs and cost metrics to an untraced
+//!    run; phase spans are stamped with the *same* `Duration` values
+//!    that set the `RoundMetrics` times, so span-derived phase walls
+//!    equal the metrics walls exactly (one source of truth).
+//! 2. **The disabled path is one relaxed atomic load.** No buffer is
+//!    allocated, no event recorded, and no extra clock read happens
+//!    until [`enable`] flips the [`TraceConfig`] flag.
+//! 3. **The enabled hot path is lock-free and allocation-free.** Each
+//!    recording thread owns a fixed-capacity [`recorder::SpanBuf`]
+//!    (allocated once, lazily) and appends with plain atomic stores;
+//!    overflow increments a drop counter instead of growing.
+//!
+//! Module map: [`recorder`] (span buffers, thread-local context,
+//! service events), [`export`] (Chrome `trace_event` JSON for
+//! Perfetto / `chrome://tracing`), [`analysis`] (per-round timelines,
+//! per-worker breakdowns, critical-path attribution).
+
+pub mod analysis;
+pub mod export;
+pub mod recorder;
+
+pub use analysis::{
+    fold_rounds, fold_workers, render_report, PhaseWalls, RoundTimeline, WorkerBreakdown,
+};
+pub use export::export_chrome_trace;
+pub use recorder::{
+    buffer_count, clear_current_job, current_job, next_run_id, record_event, record_phase,
+    record_span, set_current_job, set_current_round, set_worker_lane, snapshot, total_recorded,
+    ServiceEvent, ServiceEventKind, Snapshot, Span, SpanKind,
+};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Runtime tracing switch. A single global instance gates every
+/// recording site: the disabled path is one relaxed [`AtomicBool`]
+/// load and an untaken branch.
+pub struct TraceConfig {
+    /// Whether recording sites emit spans/events.
+    pub enabled: AtomicBool,
+    /// Enable-cycle counter: bumped by every [`enable`], stamped into
+    /// each span so a snapshot can select the current cycle's spans
+    /// without ever resetting the (owner-written) buffers.
+    pub epoch: AtomicU64,
+}
+
+static CONFIG: TraceConfig = TraceConfig {
+    enabled: AtomicBool::new(false),
+    epoch: AtomicU64::new(0),
+};
+
+/// The global tracing configuration.
+pub fn config() -> &'static TraceConfig {
+    &CONFIG
+}
+
+/// Whether tracing is currently enabled (the hot-path gate).
+#[inline]
+pub fn enabled() -> bool {
+    CONFIG.enabled.load(Ordering::Relaxed)
+}
+
+/// Start a fresh tracing cycle: bump the epoch (so spans from earlier
+/// cycles are excluded from the next [`snapshot`]), clear the buffered
+/// service events, and enable recording.
+pub fn enable() {
+    CONFIG.epoch.fetch_add(1, Ordering::Relaxed);
+    recorder::clear_events();
+    CONFIG.enabled.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording. Already-recorded spans stay readable via
+/// [`snapshot`] until the next [`enable`].
+pub fn disable() {
+    CONFIG.enabled.store(false, Ordering::Relaxed);
+}
+
+/// Current epoch (the enable-cycle stamp recorded into spans).
+pub fn epoch() -> u64 {
+    CONFIG.epoch.load(Ordering::Relaxed)
+}
+
+/// Nanoseconds since the process-wide trace anchor (first use). All
+/// span timestamps share this origin, so spans from different threads
+/// are directly comparable and exported timestamps start near zero.
+#[inline]
+pub fn now_ns() -> u64 {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    let anchor = ANCHOR.get_or_init(Instant::now);
+    anchor.elapsed().as_nanos() as u64
+}
+
+/// Serialise tracer reconfiguration. The tracer is global, so any code
+/// that enables tracing, runs a workload, and snapshots must hold this
+/// guard to keep concurrent tests (or harness sections) from flipping
+/// the switch or interleaving their events mid-measurement. Library
+/// functions that enable tracing internally acquire it themselves;
+/// tests that call [`enable`] directly must take it first (and must
+/// *not* wrap such library calls — the lock is not reentrant).
+pub fn exclusive() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enable_bumps_epoch_and_flips_flag() {
+        let _guard = exclusive();
+        let before = epoch();
+        enable();
+        assert!(enabled());
+        assert_eq!(epoch(), before + 1);
+        disable();
+        assert!(!enabled());
+        assert_eq!(epoch(), before + 1, "disable leaves the epoch alone");
+    }
+
+    #[test]
+    fn now_ns_is_monotone() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,524 @@
+//! Lock-free per-thread span recorders and the service event stream.
+//!
+//! **Ownership rules.** Every recording thread owns exactly one
+//! [`SpanBuf`], created lazily on its first record and registered in a
+//! global list. Only the owner ever *writes* the buffer (plain relaxed
+//! stores followed by a release bump of `len`); any thread may *read*
+//! it concurrently (acquire load of `len`, then relaxed loads of the
+//! published slots). Buffers are never reset or reused across enable
+//! cycles — each span carries the epoch it was recorded under, and
+//! [`snapshot`] filters to the current cycle — so there is no
+//! owner/collector race to manage and no fence beyond the one
+//! release/acquire pair.
+//!
+//! **Hot-path cost.** A span is four `u64` words: packed
+//! kind/epoch/round, job id, start, duration. Recording is a bounds
+//! check and four relaxed stores; a full buffer counts a drop instead
+//! of growing (fixed capacity ⇒ zero allocation after the first span).
+//!
+//! **Service events** (schedule decisions, gang pairings, spot
+//! strikes, replans) are rare — a handful per scheduled round — so
+//! they go through a plain mutex-guarded vector rather than the
+//! lock-free path, stamped with both the wall clock and the service's
+//! deterministic virtual clock.
+
+use std::cell::{Cell, OnceCell};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{enabled, epoch, now_ns};
+
+/// Sentinel job id meaning "no job context" (single-job CLI runs use
+/// real ids; engine tests without a service context record none).
+pub const JOB_NONE: u64 = u64::MAX;
+
+/// Spans per buffer. At 32 bytes/span this is 1 MiB per recording
+/// thread — hours of round phases, or a few seconds of saturated
+/// per-task recording, before drops start being counted.
+const CAPACITY: usize = 1 << 15;
+
+/// Lane value meaning "not a pool worker" (driver/scheduler threads).
+const LANE_NONE: u32 = u32::MAX;
+
+/// What a span measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// One full round attempt (map → … → commit), recorded by the
+    /// driver thread.
+    Round = 0,
+    /// The round's map phase (map tasks + map-side partitioning).
+    Map = 1,
+    /// The round's shuffle phase (merge of map-side slices).
+    Shuffle = 2,
+    /// One reduce task's slice merge inside the shuffle phase
+    /// (worker-side; nests under a pool `Task`).
+    Merge = 3,
+    /// The round's reduce phase.
+    Reduce = 4,
+    /// The round's DFS materialisation (write) phase.
+    Commit = 5,
+    /// A pool task executed by the worker that was handed it.
+    Task = 6,
+    /// A pool task claimed from another worker's deque.
+    Steal = 7,
+    /// A tile subtask (oversized local multiply split into row panels).
+    Subtask = 8,
+    /// A worker parked on the condvar waiting for work.
+    Park = 9,
+}
+
+impl SpanKind {
+    /// Short lowercase name (exporter/report label).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Round => "round",
+            SpanKind::Map => "map",
+            SpanKind::Shuffle => "shuffle",
+            SpanKind::Merge => "merge",
+            SpanKind::Reduce => "reduce",
+            SpanKind::Commit => "commit",
+            SpanKind::Task => "task",
+            SpanKind::Steal => "steal",
+            SpanKind::Subtask => "subtask",
+            SpanKind::Park => "park",
+        }
+    }
+
+    /// Decode the packed representation (`None` for corrupt slots).
+    pub fn from_u8(v: u8) -> Option<SpanKind> {
+        match v {
+            0 => Some(SpanKind::Round),
+            1 => Some(SpanKind::Map),
+            2 => Some(SpanKind::Shuffle),
+            3 => Some(SpanKind::Merge),
+            4 => Some(SpanKind::Reduce),
+            5 => Some(SpanKind::Commit),
+            6 => Some(SpanKind::Task),
+            7 => Some(SpanKind::Steal),
+            8 => Some(SpanKind::Subtask),
+            9 => Some(SpanKind::Park),
+            _ => None,
+        }
+    }
+}
+
+/// A decoded span (see [`snapshot`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    /// What was measured.
+    pub kind: SpanKind,
+    /// Pool worker slot of the recording thread (`u32::MAX` when the
+    /// recorder is not a pool worker — driver or test threads).
+    pub lane: u32,
+    /// Unique id of the recording buffer (distinguishes non-worker
+    /// threads that share `lane == u32::MAX`).
+    pub buf: u32,
+    /// Owning job id ([`JOB_NONE`] when recorded outside a job).
+    pub job: u64,
+    /// Round index the span belongs to.
+    pub round: usize,
+    /// Start, nanoseconds since the trace anchor.
+    pub start_ns: u64,
+    /// Duration, nanoseconds.
+    pub dur_ns: u64,
+}
+
+impl Span {
+    /// End instant, nanoseconds since the trace anchor.
+    pub fn end_ns(&self) -> u64 {
+        self.start_ns + self.dur_ns
+    }
+}
+
+/// One thread's fixed-capacity span buffer (see the module docs for
+/// the single-writer/any-reader protocol).
+pub struct SpanBuf {
+    /// Pool worker slot of the owning thread (`u32::MAX` if none).
+    lane: u32,
+    /// Registration index (unique per buffer).
+    id: u32,
+    /// Published span count (release-stored by the owner).
+    len: AtomicUsize,
+    /// Spans discarded because the buffer was full.
+    dropped: AtomicUsize,
+    /// `CAPACITY * 4` packed words.
+    slots: Box<[AtomicU64]>,
+}
+
+impl SpanBuf {
+    fn new(lane: u32, id: u32) -> Self {
+        let slots: Vec<AtomicU64> = (0..CAPACITY * 4).map(|_| AtomicU64::new(0)).collect();
+        SpanBuf {
+            lane,
+            id,
+            len: AtomicUsize::new(0),
+            dropped: AtomicUsize::new(0),
+            slots: slots.into_boxed_slice(),
+        }
+    }
+
+    /// Owner-only append. Four relaxed stores, then a release `len`
+    /// bump that publishes them to concurrent readers.
+    fn push(&self, kind: SpanKind, job: u64, round: usize, start_ns: u64, dur_ns: u64) {
+        let i = self.len.load(Ordering::Relaxed);
+        if i >= CAPACITY {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let w0 = kind as u64 | ((epoch() & 0x00FF_FFFF) << 8) | ((round as u32 as u64) << 32);
+        let base = i * 4;
+        self.slots[base].store(w0, Ordering::Relaxed);
+        self.slots[base + 1].store(job, Ordering::Relaxed);
+        self.slots[base + 2].store(start_ns, Ordering::Relaxed);
+        self.slots[base + 3].store(dur_ns, Ordering::Relaxed);
+        self.len.store(i + 1, Ordering::Release);
+    }
+
+    /// Decode the published spans recorded under `want_epoch`.
+    fn collect_into(&self, want_epoch: u64, out: &mut Vec<Span>) {
+        let n = self.len.load(Ordering::Acquire).min(CAPACITY);
+        for chunk in self.slots.chunks_exact(4).take(n) {
+            let w0 = chunk[0].load(Ordering::Relaxed);
+            if (w0 >> 8) & 0x00FF_FFFF != want_epoch & 0x00FF_FFFF {
+                continue;
+            }
+            let Some(kind) = SpanKind::from_u8((w0 & 0xFF) as u8) else {
+                continue;
+            };
+            out.push(Span {
+                kind,
+                lane: self.lane,
+                buf: self.id,
+                job: chunk[1].load(Ordering::Relaxed),
+                round: (w0 >> 32) as u32 as usize,
+                start_ns: chunk[2].load(Ordering::Relaxed),
+                dur_ns: chunk[3].load(Ordering::Relaxed),
+            });
+        }
+    }
+}
+
+/// All registered buffers (one per thread that ever recorded a span).
+fn registry() -> &'static Mutex<Vec<Arc<SpanBuf>>> {
+    static REGISTRY: Mutex<Vec<Arc<SpanBuf>>> = Mutex::new(Vec::new());
+    &REGISTRY
+}
+
+thread_local! {
+    /// This thread's buffer, created on first record while enabled.
+    static BUF: OnceCell<Arc<SpanBuf>> = const { OnceCell::new() };
+    /// Pool worker slot of this thread (set at worker spawn).
+    static LANE: Cell<u32> = const { Cell::new(LANE_NONE) };
+    /// Job id phase spans are attributed to ([`JOB_NONE`] = none).
+    static CURRENT_JOB: Cell<u64> = const { Cell::new(JOB_NONE) };
+    /// Round index executor spans inherit.
+    static CURRENT_ROUND: Cell<u64> = const { Cell::new(0) };
+}
+
+fn with_buf<R>(f: impl FnOnce(&SpanBuf) -> R) -> R {
+    BUF.with(|cell| {
+        let buf = cell.get_or_init(|| {
+            let lane = LANE.get();
+            let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+            let buf = Arc::new(SpanBuf::new(lane, reg.len() as u32));
+            reg.push(buf.clone());
+            buf
+        });
+        f(buf)
+    })
+}
+
+/// Mark the current thread as pool worker `slot` (called once at
+/// worker-thread spawn, before any span is recorded). Cheap: one TLS
+/// store, no allocation.
+pub fn set_worker_lane(slot: usize) {
+    LANE.set(slot as u32);
+}
+
+/// Attribute subsequent phase spans on this thread to `job`.
+pub fn set_current_job(job: u64) {
+    CURRENT_JOB.set(job);
+}
+
+/// Clear the job attribution (phase spans stop recording).
+pub fn clear_current_job() {
+    CURRENT_JOB.set(JOB_NONE);
+}
+
+/// The job id this thread's spans are attributed to, if any.
+pub fn current_job() -> Option<u64> {
+    let j = CURRENT_JOB.get();
+    (j != JOB_NONE).then_some(j)
+}
+
+/// Set the round index executor spans on this thread inherit.
+pub fn set_current_round(round: usize) {
+    CURRENT_ROUND.set(round as u64);
+}
+
+/// The (job, round) context executor task spans should carry:
+/// `(JOB_NONE, 0)` outside any job. Captured on the submitting thread
+/// and copied into task sets so worker threads stamp the right owner.
+pub fn task_context() -> (u64, u64) {
+    (CURRENT_JOB.get(), CURRENT_ROUND.get())
+}
+
+/// Record one span with an explicit (job, round) attribution — the
+/// executor path, where the context was captured at task submission.
+/// No-op while tracing is disabled.
+#[inline]
+pub fn record_span(kind: SpanKind, job: u64, round: u64, start_ns: u64, dur_ns: u64) {
+    if !enabled() {
+        return;
+    }
+    with_buf(|b| b.push(kind, job, round as usize, start_ns, dur_ns));
+}
+
+/// Record a round/phase span attributed to this thread's current job.
+/// No-op while disabled *or* outside a job context — engine activity
+/// from unrelated concurrent runs (e.g. parallel tests sharing the
+/// process) never pollutes a traced job's timeline.
+#[inline]
+pub fn record_phase(kind: SpanKind, round: usize, start_ns: u64, dur_ns: u64) {
+    if !enabled() {
+        return;
+    }
+    let job = CURRENT_JOB.get();
+    if job == JOB_NONE {
+        return;
+    }
+    with_buf(|b| b.push(kind, job, round, start_ns, dur_ns));
+}
+
+/// A scheduler decision, stamped with both clocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceEvent {
+    /// What the scheduler did.
+    pub kind: ServiceEventKind,
+    /// The service run this event belongs to (see [`next_run_id`]).
+    pub run: u64,
+    /// Primary job of the decision.
+    pub job: usize,
+    /// Gang partner, if the decision paired two rounds.
+    pub partner: Option<usize>,
+    /// Round index of the primary job.
+    pub round: usize,
+    /// Deterministic virtual-clock stamp, seconds.
+    pub virt_secs: f64,
+    /// Wall-clock stamp, nanoseconds since the trace anchor.
+    pub wall_ns: u64,
+}
+
+/// The kinds of scheduler decisions recorded as events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceEventKind {
+    /// A job was picked to run its next round.
+    Schedule,
+    /// Two underfilled rounds were gang-scheduled together.
+    GangPair,
+    /// A spot preemption struck the in-flight round.
+    SpotStrike,
+    /// Online recalibration re-planned / re-priced active jobs.
+    Replan,
+}
+
+impl ServiceEventKind {
+    /// Short lowercase name (exporter/report label).
+    pub fn name(self) -> &'static str {
+        match self {
+            ServiceEventKind::Schedule => "schedule",
+            ServiceEventKind::GangPair => "gang_pair",
+            ServiceEventKind::SpotStrike => "spot_strike",
+            ServiceEventKind::Replan => "replan",
+        }
+    }
+}
+
+fn events() -> &'static Mutex<Vec<ServiceEvent>> {
+    static EVENTS: Mutex<Vec<ServiceEvent>> = Mutex::new(Vec::new());
+    &EVENTS
+}
+
+/// Append one service event (no-op while disabled). `wall_ns` is
+/// stamped here so call sites only supply the decision.
+pub fn record_event(
+    kind: ServiceEventKind,
+    run: u64,
+    job: usize,
+    partner: Option<usize>,
+    round: usize,
+    virt_secs: f64,
+) {
+    if !enabled() {
+        return;
+    }
+    events()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .push(ServiceEvent {
+            kind,
+            run,
+            job,
+            partner,
+            round,
+            virt_secs,
+            wall_ns: now_ns(),
+        });
+}
+
+/// Drop all buffered service events (called by [`super::enable`]).
+pub(super) fn clear_events() {
+    events().lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// Fresh service-run id, unique per process. Events of concurrent or
+/// sequential `run_service` calls are disambiguated by this stamp.
+pub fn next_run_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Everything recorded under the current enable cycle.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    /// Spans of the current epoch, in buffer order (sort by `start_ns`
+    /// for a global timeline).
+    pub spans: Vec<Span>,
+    /// Buffered service events (cleared at each [`super::enable`]).
+    pub events: Vec<ServiceEvent>,
+    /// Spans discarded because some buffer was full (all epochs).
+    pub dropped: u64,
+}
+
+/// Collect the current epoch's spans from every registered buffer plus
+/// the buffered service events. Safe to call while recording continues
+/// (readers only see release-published spans).
+pub fn snapshot() -> Snapshot {
+    let want = epoch();
+    let mut spans = Vec::new();
+    let mut dropped = 0u64;
+    {
+        let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+        for buf in reg.iter() {
+            buf.collect_into(want, &mut spans);
+            dropped += buf.dropped.load(Ordering::Relaxed) as u64;
+        }
+    }
+    spans.sort_by_key(|s| (s.start_ns, s.buf));
+    let events = events().lock().unwrap_or_else(|e| e.into_inner()).clone();
+    Snapshot {
+        spans,
+        events,
+        dropped,
+    }
+}
+
+/// Total spans recorded across all buffers and epochs, plus buffered
+/// service events — the counter the disabled-overhead guard asserts
+/// stays flat across an untraced run.
+pub fn total_recorded() -> u64 {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    let spans: u64 = reg.iter().map(|b| b.len.load(Ordering::Relaxed) as u64).sum();
+    let ev = events().lock().unwrap_or_else(|e| e.into_inner()).len() as u64;
+    spans + ev
+}
+
+/// Number of registered span buffers (≈ threads that ever recorded) —
+/// the disabled-overhead guard asserts no buffer appears while tracing
+/// is off.
+pub fn buffer_count() -> usize {
+    registry().lock().unwrap_or_else(|e| e.into_inner()).len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace;
+
+    #[test]
+    fn kind_round_trips_through_packing() {
+        for k in [
+            SpanKind::Round,
+            SpanKind::Map,
+            SpanKind::Shuffle,
+            SpanKind::Merge,
+            SpanKind::Reduce,
+            SpanKind::Commit,
+            SpanKind::Task,
+            SpanKind::Steal,
+            SpanKind::Subtask,
+            SpanKind::Park,
+        ] {
+            assert_eq!(SpanKind::from_u8(k as u8), Some(k));
+            assert!(!k.name().is_empty());
+        }
+        assert_eq!(SpanKind::from_u8(200), None);
+    }
+
+    #[test]
+    fn disabled_recording_is_a_no_op() {
+        let _guard = trace::exclusive();
+        trace::disable();
+        let before = total_recorded();
+        record_span(SpanKind::Task, JOB_NONE, 0, 0, 10);
+        record_phase(SpanKind::Map, 0, 0, 10);
+        record_event(ServiceEventKind::Schedule, 1, 0, None, 0, 0.0);
+        assert_eq!(total_recorded(), before);
+    }
+
+    #[test]
+    fn spans_round_trip_through_snapshot() {
+        let _guard = trace::exclusive();
+        trace::enable();
+        let job = next_run_id() + 1_000_000; // unique, test-pollution-proof
+        set_current_job(job);
+        record_phase(SpanKind::Map, 3, 100, 40);
+        record_phase(SpanKind::Reduce, 3, 140, 60);
+        clear_current_job();
+        // Without a job context, phase records are dropped.
+        record_phase(SpanKind::Map, 9, 500, 5);
+        trace::disable();
+        let snap = snapshot();
+        let mine: Vec<&Span> = snap.spans.iter().filter(|s| s.job == job).collect();
+        assert_eq!(mine.len(), 2);
+        assert_eq!(mine[0].kind, SpanKind::Map);
+        assert_eq!(mine[0].round, 3);
+        assert_eq!(mine[0].start_ns, 100);
+        assert_eq!(mine[0].dur_ns, 40);
+        assert_eq!(mine[0].end_ns(), 140);
+        assert_eq!(mine[1].kind, SpanKind::Reduce);
+        assert!(!snap.spans.iter().any(|s| s.round == 9 && s.job == job));
+    }
+
+    #[test]
+    fn epoch_filter_hides_previous_cycles() {
+        let _guard = trace::exclusive();
+        trace::enable();
+        let job = next_run_id() + 2_000_000;
+        set_current_job(job);
+        record_phase(SpanKind::Commit, 1, 0, 1);
+        clear_current_job();
+        trace::enable(); // new cycle: previous span filtered out
+        trace::disable();
+        let snap = snapshot();
+        assert!(!snap.spans.iter().any(|s| s.job == job));
+    }
+
+    #[test]
+    fn events_carry_both_clocks_and_clear_on_enable() {
+        let _guard = trace::exclusive();
+        trace::enable();
+        let run = next_run_id();
+        record_event(ServiceEventKind::GangPair, run, 4, Some(7), 2, 12.5);
+        let snap = snapshot();
+        let ev: Vec<&ServiceEvent> = snap.events.iter().filter(|e| e.run == run).collect();
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].kind, ServiceEventKind::GangPair);
+        assert_eq!(ev[0].partner, Some(7));
+        assert_eq!(ev[0].virt_secs, 12.5);
+        trace::enable();
+        trace::disable();
+        assert!(snapshot().events.iter().all(|e| e.run != run));
+    }
+}

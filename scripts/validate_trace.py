@@ -1,0 +1,186 @@
+#!/usr/bin/env python3
+"""Structural validator for m3's exported Chrome trace_event JSON.
+
+Usage: validate_trace.py TRACE.json [REPORT.txt]
+
+Checks (stdlib only, no third-party deps):
+
+  1. the file parses as JSON with a non-empty ``traceEvents`` list;
+  2. every event is a complete span (``ph == "X"``), an instant
+     (``ph == "i"``) or metadata (``ph == "M"``); spans carry numeric
+     ``ts >= 0`` / ``dur >= 0`` plus ``pid``/``tid``/``name``;
+  3. every phase span (map/shuffle/reduce/commit) temporally nests
+     inside a round span of the same job process and round index;
+  4. per round span, the contained phase durations sum to at most the
+     round's duration (plus a float-formatting epsilon);
+  5. instants are scheduler decisions: ``s == "p"`` and args carrying
+     ``run``/``job``/``round``/``virt_secs``;
+  6. optionally, the textual report's ``TRACE round …`` lines
+     cross-check against the round spans: same (job, round) multiset,
+     walls matching within the µs-formatting tolerance.
+
+Exits non-zero with a diagnostic on the first violation.
+"""
+
+import json
+import re
+import sys
+
+PHASE_NAMES = {"map", "shuffle", "reduce", "commit"}
+# Exported ts/dur are microseconds printed with three decimals
+# (nanosecond precision); allow one-ULP slack on comparisons.
+EPS_US = 0.01
+
+TRACE_LINE = re.compile(
+    r"^TRACE round job=(\d+) r=(\d+) wall_ns=(\d+) map_ns=(\d+) "
+    r"shuffle_ns=(\d+) reduce_ns=(\d+) commit_ns=(\d+)$"
+)
+
+
+def fail(msg):
+    print(f"validate_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load_events(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"{path}: cannot parse: {e}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents missing or empty")
+    return events
+
+
+def classify(events):
+    spans, instants, metas = [], [], []
+    for i, e in enumerate(events):
+        ph = e.get("ph")
+        if ph == "X":
+            for key in ("ts", "dur"):
+                v = e.get(key)
+                if not isinstance(v, (int, float)) or isinstance(v, bool) or v < 0:
+                    fail(f"event #{i}: span has bad {key}: {v!r}")
+            for key in ("pid", "tid", "name"):
+                if key not in e:
+                    fail(f"event #{i}: span missing {key}")
+            spans.append(e)
+        elif ph == "i":
+            if e.get("s") != "p":
+                fail(f"event #{i}: instant missing process scope s=p")
+            args = e.get("args", {})
+            for key in ("run", "job", "round", "virt_secs"):
+                if key not in args:
+                    fail(f"event #{i}: instant args missing {key}")
+            instants.append(e)
+        elif ph == "M":
+            metas.append(e)
+        else:
+            fail(f"event #{i}: unexpected ph {ph!r}")
+    return spans, instants, metas
+
+
+def arg(e, key):
+    return e.get("args", {}).get(key)
+
+
+def contains(outer, inner):
+    return (
+        outer["ts"] - EPS_US <= inner["ts"]
+        and inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + EPS_US
+    )
+
+
+def check_nesting(spans):
+    rounds = [e for e in spans if e["name"] == "round"]
+    phases = [e for e in spans if e["name"] in PHASE_NAMES]
+    for p in phases:
+        owners = [
+            r
+            for r in rounds
+            if r["pid"] == p["pid"]
+            and arg(r, "job") == arg(p, "job")
+            and arg(r, "round") == arg(p, "round")
+            and contains(r, p)
+        ]
+        if not owners:
+            fail(
+                f"phase span {p['name']} (job={arg(p, 'job')} "
+                f"round={arg(p, 'round')} ts={p['ts']}) nests in no round span"
+            )
+    for r in rounds:
+        total = sum(
+            p["dur"]
+            for p in phases
+            if p["pid"] == r["pid"]
+            and arg(p, "job") == arg(r, "job")
+            and arg(p, "round") == arg(r, "round")
+            and contains(r, p)
+        )
+        if total > r["dur"] + EPS_US * max(1, len(phases)):
+            fail(
+                f"round span job={arg(r, 'job')} round={arg(r, 'round')}: "
+                f"phase durations sum to {total} > round dur {r['dur']}"
+            )
+    return rounds, phases
+
+
+def check_report(report_path, rounds):
+    with open(report_path, encoding="utf-8") as f:
+        lines = [m for m in (TRACE_LINE.match(l) for l in f) if m]
+    if not lines:
+        fail(f"{report_path}: no 'TRACE round' lines found")
+    if len(lines) != len(rounds):
+        fail(
+            f"{report_path}: {len(lines)} TRACE lines but "
+            f"{len(rounds)} round spans in the JSON"
+        )
+    unmatched = list(rounds)
+    for m in lines:
+        job, rnd, wall_ns = int(m.group(1)), int(m.group(2)), int(m.group(3))
+        hit = None
+        for i, r in enumerate(unmatched):
+            if (
+                arg(r, "job") == job
+                and arg(r, "round") == rnd
+                and abs(r["dur"] * 1000.0 - wall_ns) <= 2.0
+            ):
+                hit = i
+                break
+        if hit is None:
+            fail(
+                f"{report_path}: TRACE line job={job} r={rnd} "
+                f"wall_ns={wall_ns} matches no exported round span"
+            )
+        unmatched.pop(hit)
+    return len(lines)
+
+
+def main(argv):
+    if len(argv) < 2:
+        fail("usage: validate_trace.py TRACE.json [REPORT.txt]")
+    events = load_events(argv[1])
+    spans, instants, metas = classify(events)
+    if not spans:
+        fail("no complete ('X') spans in the trace")
+    if not any(e["name"] == "round" for e in spans):
+        fail("no round spans in the trace")
+    rounds, phases = check_nesting(spans)
+    if not phases:
+        fail("round spans present but no phase spans nest inside them")
+    checked = 0
+    if len(argv) > 2:
+        checked = check_report(argv[2], rounds)
+    print(
+        f"validate_trace: OK: {len(spans)} spans ({len(rounds)} rounds, "
+        f"{len(phases)} phases), {len(instants)} scheduler instants, "
+        f"{len(metas)} metadata records"
+        + (f"; {checked} report TRACE lines cross-checked" if checked else "")
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
