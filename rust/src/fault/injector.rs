@@ -1,0 +1,562 @@
+//! The fault-injection runtime: task attempts, bounded retry with
+//! backoff, node reassignment, and speculative re-execution.
+//!
+//! [`FaultContext`] wraps a phase's task batch ([`run_tasks`]): each
+//! task is homed on a logical node, runs as a numbered *attempt*, and
+//! commits its result exactly once (first-commit-wins — in this
+//! in-process engine the committing attempt is the one that returns
+//! from the attempt loop, and every attempt of a pure task computes
+//! the same value, so outputs are bit-identical to the fault-free
+//! run by construction). Failures — injected transient faults, a node
+//! killed mid-phase, or a real panic in task code — convert into
+//! bounded retries with linear backoff, reassigned to a surviving
+//! node. A task whose (slowdown-adjusted) duration exceeds
+//! [`FaultSpec::straggler_factor`] × the phase's running median gets a
+//! speculative duplicate on a healthy node; whichever attempt commits
+//! first wins and the loser is cancelled.
+//!
+//! Counter discipline (asserted by tests and `validate_faults.py`):
+//! `attempts == successes + failures + speculative_cancelled`, every
+//! retry follows a failure (`retries <= failures`), and re-executions
+//! are failures of killed-node attempts (`reexecuted <= failures`).
+//! Counters for *injected* events are deterministic; genuinely
+//! timing-triggered speculation is not, so tests assert identities
+//! and inequalities rather than exact speculation counts.
+
+use super::node::NodeSet;
+use super::plan::{FaultKind, FaultPlan, FaultSpec, Phase};
+use crate::mapreduce::Pool;
+use crate::trace;
+use crate::trace::recorder::JOB_NONE;
+use crate::trace::SpanKind;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Live counters for one fault context (shared across rounds).
+#[derive(Debug, Default)]
+struct FaultStats {
+    attempts: AtomicUsize,
+    successes: AtomicUsize,
+    failures: AtomicUsize,
+    retries: AtomicUsize,
+    reexecuted: AtomicUsize,
+    speculative_launched: AtomicUsize,
+    speculative_cancelled: AtomicUsize,
+    /// Nanoseconds of work recomputed because a node died (the redo
+    /// attempts' durations — the quantity the recovery bench reports).
+    reexec_nanos: AtomicU64,
+    /// Monotone attempt-id source; every attempt is stamped with one.
+    attempt_seq: AtomicU64,
+}
+
+/// A point-in-time copy of a context's counters. Subtract two
+/// snapshots ([`FaultStatsSnapshot::minus`]) to attribute activity to
+/// one round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultStatsSnapshot {
+    /// Task attempts started (including duplicates and lost attempts).
+    pub attempts: usize,
+    /// Attempts that committed a result.
+    pub successes: usize,
+    /// Attempts that failed (injected, killed mid-flight, or panicked).
+    pub failures: usize,
+    /// Failures that were followed by another attempt.
+    pub retries: usize,
+    /// Tasks re-executed because their node died under them.
+    pub reexecuted: usize,
+    /// Speculative duplicate attempts launched against stragglers.
+    pub speculative_launched: usize,
+    /// Attempts cancelled because the rival attempt committed first.
+    pub speculative_cancelled: usize,
+    /// Nanoseconds of kill-driven recomputation.
+    pub reexec_nanos: u64,
+}
+
+impl FaultStatsSnapshot {
+    /// The invariant every run must maintain: each attempt either
+    /// committed, failed, or was cancelled by a winning rival.
+    pub fn consistent(&self) -> bool {
+        self.attempts == self.successes + self.failures + self.speculative_cancelled
+    }
+
+    /// Component-wise difference (`self` must be the later snapshot).
+    pub fn minus(&self, earlier: &FaultStatsSnapshot) -> FaultStatsSnapshot {
+        FaultStatsSnapshot {
+            attempts: self.attempts - earlier.attempts,
+            successes: self.successes - earlier.successes,
+            failures: self.failures - earlier.failures,
+            retries: self.retries - earlier.retries,
+            reexecuted: self.reexecuted - earlier.reexecuted,
+            speculative_launched: self.speculative_launched - earlier.speculative_launched,
+            speculative_cancelled: self.speculative_cancelled - earlier.speculative_cancelled,
+            reexec_nanos: self.reexec_nanos - earlier.reexec_nanos,
+        }
+    }
+}
+
+/// A job's fault-injection state: the node set, the (replayable)
+/// fault schedule, the retry/speculation policy, and the counters.
+/// Shared (`Arc`) between the driver and the service layer.
+#[derive(Debug)]
+pub struct FaultContext {
+    nodes: Mutex<NodeSet>,
+    plan: FaultPlan,
+    spec: FaultSpec,
+    stats: FaultStats,
+}
+
+impl FaultContext {
+    /// Combine a node set, a fault schedule, and a policy.
+    pub fn new(nodes: NodeSet, plan: FaultPlan, spec: FaultSpec) -> Self {
+        FaultContext {
+            nodes: Mutex::new(nodes),
+            plan,
+            spec,
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// The fault schedule.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// The retry/speculation policy.
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Number of logical nodes still able to complete attempts.
+    pub fn alive_nodes(&self) -> usize {
+        self.nodes.lock().unwrap().alive_count()
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> FaultStatsSnapshot {
+        let s = &self.stats;
+        FaultStatsSnapshot {
+            attempts: s.attempts.load(Ordering::Relaxed),
+            successes: s.successes.load(Ordering::Relaxed),
+            failures: s.failures.load(Ordering::Relaxed),
+            retries: s.retries.load(Ordering::Relaxed),
+            reexecuted: s.reexecuted.load(Ordering::Relaxed),
+            speculative_launched: s.speculative_launched.load(Ordering::Relaxed),
+            speculative_cancelled: s.speculative_cancelled.load(Ordering::Relaxed),
+            reexec_nanos: s.reexec_nanos.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run one phase's task batch under fault injection. Node events
+    /// scheduled for `(round, phase)` take effect at phase entry (so
+    /// later phases see the loss); each task homed on a node killed in
+    /// this phase deterministically pays one lost attempt before
+    /// re-executing on a survivor, independent of pool scheduling.
+    pub fn run_phase<T, F>(
+        &self,
+        pool: &Pool,
+        round: usize,
+        phase: Phase,
+        num_tasks: usize,
+        f: F,
+    ) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Send + Sync,
+    {
+        {
+            let mut nodes = self.nodes.lock().unwrap();
+            for ev in self.plan.events_at(round, phase) {
+                match ev.kind {
+                    FaultKind::KillNode { node } => nodes.kill(node),
+                    FaultKind::SlowNode { node, .. } => nodes.degrade(node),
+                    FaultKind::TaskFail { .. } => {}
+                }
+            }
+        }
+        let durations = Mutex::new(Vec::with_capacity(num_tasks));
+        pool.run_indexed(num_tasks, |ti| {
+            self.attempt_task(round, phase, ti, &durations, &f)
+        })
+    }
+
+    /// The attempt loop for one task: home it on a node, pay injected
+    /// faults, retry with backoff on failure, speculate on stragglers,
+    /// commit exactly one result.
+    fn attempt_task<T, F>(
+        &self,
+        round: usize,
+        phase: Phase,
+        ti: usize,
+        durations: &Mutex<Vec<u64>>,
+        f: &F,
+    ) -> T
+    where
+        F: Fn(usize) -> T + Sync,
+    {
+        let home = {
+            let nodes = self.nodes.lock().unwrap();
+            nodes.node_for(round, phase.id(), ti)
+        };
+        let killed_here = self.plan.kills_node(round, phase, home);
+        let mut node = if killed_here || self.nodes.lock().unwrap().alive(home) {
+            home
+        } else {
+            // Home died in an earlier phase: new attempts never land
+            // on a dead node, so this is a plain reassignment with no
+            // lost work.
+            self.nodes.lock().unwrap().survivor(home)
+        };
+        let inject_fails = self.plan.transient_failures(round, phase, ti);
+        // The attempt already in flight on a node killed this phase is
+        // lost with it; the retry below lands on a survivor. This is
+        // the recovery-not-restart core: only the dead node's tasks
+        // re-execute.
+        let mut lost_to_kill = killed_here;
+        let was_reexecuted = killed_here;
+        let mut attempt = 0usize;
+        loop {
+            attempt += 1;
+            let attempt_id = self.stats.attempt_seq.fetch_add(1, Ordering::Relaxed);
+            self.stats.attempts.fetch_add(1, Ordering::Relaxed);
+            if lost_to_kill {
+                lost_to_kill = false;
+                self.stats.failures.fetch_add(1, Ordering::Relaxed);
+                self.stats.reexecuted.fetch_add(1, Ordering::Relaxed);
+                self.stats.retries.fetch_add(1, Ordering::Relaxed);
+                self.record_fault_span(SpanKind::Retry, round, 0);
+                node = self.nodes.lock().unwrap().survivor(home);
+                continue;
+            }
+            if attempt <= inject_fails {
+                self.stats.failures.fetch_add(1, Ordering::Relaxed);
+                self.record_fault_span(SpanKind::Retry, round, 0);
+                assert!(
+                    attempt < self.spec.max_attempts,
+                    "task {ti} ({} round {round}) failed permanently after \
+                     {attempt} injected failures (attempt id {attempt_id})",
+                    phase.name(),
+                );
+                self.stats.retries.fetch_add(1, Ordering::Relaxed);
+                self.backoff(attempt);
+                continue;
+            }
+            let t0 = Instant::now();
+            let result = catch_unwind(AssertUnwindSafe(|| f(ti)));
+            let dur = t0.elapsed().max(Duration::from_nanos(1));
+            match result {
+                Ok(value) => {
+                    if was_reexecuted {
+                        self.stats
+                            .reexec_nanos
+                            .fetch_add(dur.as_nanos() as u64, Ordering::Relaxed);
+                    }
+                    let slow = {
+                        let nodes = self.nodes.lock().unwrap();
+                        if nodes.alive(node) {
+                            self.plan.slow_factor(round, phase, node)
+                        } else {
+                            None
+                        }
+                    };
+                    if let Some(factor) = slow {
+                        let effective = dur.as_secs_f64() * factor.max(1.0);
+                        if self.is_straggler(effective, durations) {
+                            // Speculative duplicate on a healthy node:
+                            // it runs at full speed, so it commits
+                            // before the slowed original and the
+                            // original is cancelled.
+                            self.stats.attempts.fetch_add(1, Ordering::Relaxed);
+                            self.stats.speculative_launched.fetch_add(1, Ordering::Relaxed);
+                            let spec_start = if trace::enabled() { trace::now_ns() } else { 0 };
+                            let t1 = Instant::now();
+                            let dup = catch_unwind(AssertUnwindSafe(|| f(ti)));
+                            let dup_dur = t1.elapsed().max(Duration::from_nanos(1));
+                            if let Ok(dup_value) = dup {
+                                self.stats.successes.fetch_add(1, Ordering::Relaxed);
+                                self.stats.speculative_cancelled.fetch_add(1, Ordering::Relaxed);
+                                if trace::enabled() {
+                                    trace::record_span(
+                                        SpanKind::Speculate,
+                                        JOB_NONE,
+                                        round as u64,
+                                        spec_start,
+                                        dup_dur.as_nanos() as u64,
+                                    );
+                                }
+                                durations.lock().unwrap().push(dup_dur.as_nanos() as u64);
+                                return dup_value;
+                            }
+                            // The duplicate died; the slowed original
+                            // still holds a valid result and commits
+                            // after paying its slowdown.
+                            self.stats.failures.fetch_add(1, Ordering::Relaxed);
+                        }
+                        self.simulate_slow(dur, factor);
+                    }
+                    self.stats.successes.fetch_add(1, Ordering::Relaxed);
+                    durations.lock().unwrap().push(dur.as_nanos() as u64);
+                    return value;
+                }
+                Err(payload) => {
+                    self.stats.failures.fetch_add(1, Ordering::Relaxed);
+                    self.record_fault_span(SpanKind::Retry, round, dur.as_nanos() as u64);
+                    if attempt >= self.spec.max_attempts {
+                        // Terminal: the failure propagates and poisons
+                        // the batch ("worker panicked"), the engine's
+                        // documented give-up path.
+                        resume_unwind(payload);
+                    }
+                    self.stats.retries.fetch_add(1, Ordering::Relaxed);
+                    self.backoff(attempt);
+                    // A panicking task retries on a different node, in
+                    // case the fault was environmental.
+                    node = self.nodes.lock().unwrap().survivor(node);
+                }
+            }
+        }
+    }
+
+    /// Straggler test: effective duration vs. the phase's running
+    /// median of committed durations. With no history yet nothing is
+    /// a straggler (the first completions build the baseline).
+    fn is_straggler(&self, effective_secs: f64, durations: &Mutex<Vec<u64>>) -> bool {
+        let committed = durations.lock().unwrap();
+        if committed.is_empty() {
+            return false;
+        }
+        let mut sorted = committed.clone();
+        drop(committed);
+        sorted.sort_unstable();
+        let median_secs = sorted[sorted.len() / 2] as f64 * 1e-9;
+        median_secs > 0.0 && effective_secs > self.spec.straggler_factor * median_secs
+    }
+
+    /// Simulate a degraded node: the attempt takes `factor`× its real
+    /// duration, capped so chaos runs stay fast.
+    fn simulate_slow(&self, dur: Duration, factor: f64) {
+        let extra = dur.mul_f64((factor - 1.0).max(0.0)).min(self.spec.slow_cap);
+        let until = Instant::now() + extra;
+        while Instant::now() < until {
+            std::hint::spin_loop();
+        }
+    }
+
+    /// Linear backoff between attempts, capped.
+    fn backoff(&self, attempt: usize) {
+        let d = (self.spec.backoff * attempt as u32).min(self.spec.backoff_cap);
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+
+    /// Record a retry/speculation span on the current worker lane.
+    fn record_fault_span(&self, kind: SpanKind, round: usize, dur_ns: u64) {
+        if trace::enabled() {
+            let end = trace::now_ns();
+            trace::record_span(kind, JOB_NONE, round as u64, end.saturating_sub(dur_ns), dur_ns);
+        }
+    }
+}
+
+/// Run a phase's task batch: under fault injection when a context is
+/// installed, or straight through the pool when not (the fault-free
+/// path is byte-for-byte the pre-fault engine).
+pub fn run_tasks<T, F>(
+    faults: Option<&FaultContext>,
+    pool: &Pool,
+    round: usize,
+    phase: Phase,
+    num_tasks: usize,
+    f: F,
+) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Send + Sync,
+{
+    match faults {
+        Some(ctx) => ctx.run_phase(pool, round, phase, num_tasks, f),
+        None => pool.run_indexed(num_tasks, f),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn ctx(plan: FaultPlan, spec: FaultSpec) -> FaultContext {
+        FaultContext::new(NodeSet::new(4, 11), plan, spec)
+    }
+
+    fn spin(d: Duration) {
+        let until = Instant::now() + d;
+        while Instant::now() < until {
+            std::hint::spin_loop();
+        }
+    }
+
+    #[test]
+    fn fault_free_phase_counts_one_success_per_task() {
+        let pool = Pool::new(2);
+        let ctx = ctx(FaultPlan::new(Vec::new()), FaultSpec::default());
+        let out = ctx.run_phase(&pool, 0, Phase::Map, 8, |i| i * 3);
+        assert_eq!(out, (0..8).map(|i| i * 3).collect::<Vec<_>>());
+        let s = ctx.stats();
+        assert!(s.consistent());
+        assert_eq!(s.attempts, 8);
+        assert_eq!(s.successes, 8);
+        assert_eq!(s.failures, 0);
+        assert_eq!(s.speculative_launched, 0);
+    }
+
+    #[test]
+    fn transient_failures_retry_to_success() {
+        let pool = Pool::new(2);
+        let plan = FaultPlan::none().with_transient(0, Phase::Map, 2, 2);
+        let ctx = ctx(plan, FaultSpec::default());
+        let out = ctx.run_phase(&pool, 0, Phase::Map, 4, |i| i + 10);
+        assert_eq!(out, vec![10, 11, 12, 13]);
+        let s = ctx.stats();
+        assert!(s.consistent(), "{s:?}");
+        assert_eq!(s.attempts, 6, "4 tasks + 2 injected failures");
+        assert_eq!(s.failures, 2);
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.successes, 4);
+        assert_eq!(s.reexecuted, 0);
+    }
+
+    #[test]
+    fn transient_failures_only_hit_their_round_and_phase() {
+        let pool = Pool::new(1);
+        let plan = FaultPlan::none().with_transient(1, Phase::Reduce, 0, 1);
+        let ctx = ctx(plan, FaultSpec::default());
+        ctx.run_phase(&pool, 0, Phase::Reduce, 4, |i| i);
+        ctx.run_phase(&pool, 1, Phase::Map, 4, |i| i);
+        assert_eq!(ctx.stats().failures, 0);
+        ctx.run_phase(&pool, 1, Phase::Reduce, 4, |i| i);
+        assert_eq!(ctx.stats().failures, 1);
+    }
+
+    #[test]
+    fn node_kill_reexecutes_exactly_the_victims() {
+        let pool = Pool::new(2);
+        let plan = FaultPlan::none().with_kill(0, Phase::Map, 1);
+        let ctx = ctx(plan, FaultSpec::default());
+        let out = ctx.run_phase(&pool, 0, Phase::Map, 8, |i| i);
+        assert_eq!(out, (0..8).collect::<Vec<_>>());
+        let s = ctx.stats();
+        assert!(s.consistent(), "{s:?}");
+        // 8 tasks over 4 nodes: exactly 2 homed on the dead node.
+        assert_eq!(s.reexecuted, 2);
+        assert_eq!(s.failures, 2);
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.attempts, 10);
+        assert_eq!(s.successes, 8);
+        assert!(s.reexec_nanos > 0, "redo work is measured");
+        assert_eq!(ctx.alive_nodes(), 3);
+    }
+
+    #[test]
+    fn later_phases_avoid_the_dead_node_without_penalty() {
+        let pool = Pool::new(2);
+        let plan = FaultPlan::none().with_kill(0, Phase::Map, 2);
+        let ctx = ctx(plan, FaultSpec::default());
+        ctx.run_phase(&pool, 0, Phase::Map, 8, |i| i);
+        let mid = ctx.stats();
+        ctx.run_phase(&pool, 0, Phase::Reduce, 8, |i| i);
+        let s = ctx.stats().minus(&mid);
+        assert_eq!(s.failures, 0, "reassignment off a dead node is free");
+        assert_eq!(s.attempts, 8);
+        assert_eq!(s.successes, 8);
+    }
+
+    #[test]
+    fn panic_converts_to_retry_and_succeeds() {
+        let pool = Pool::new(2);
+        let ctx = ctx(FaultPlan::new(Vec::new()), FaultSpec::default());
+        let calls: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        let out = ctx.run_phase(&pool, 0, Phase::Map, 4, |i| {
+            if i == 1 && calls[i].fetch_add(1, Ordering::Relaxed) == 0 {
+                panic!("flaky task");
+            }
+            i * 7
+        });
+        assert_eq!(out, vec![0, 7, 14, 21]);
+        let s = ctx.stats();
+        assert!(s.consistent(), "{s:?}");
+        assert_eq!(s.attempts, 5);
+        assert_eq!(s.failures, 1);
+        assert_eq!(s.retries, 1);
+        assert_eq!(s.successes, 4);
+    }
+
+    #[test]
+    fn permanent_panic_exhausts_attempts_and_propagates() {
+        let pool = Pool::new(2);
+        let spec = FaultSpec {
+            max_attempts: 2,
+            backoff: Duration::ZERO,
+            ..FaultSpec::default()
+        };
+        let ctx = ctx(FaultPlan::new(Vec::new()), spec);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            ctx.run_phase(&pool, 0, Phase::Map, 3, |i| {
+                assert!(i != 0, "task 0 always fails");
+                i
+            })
+        }));
+        assert!(result.is_err(), "terminal failure must propagate");
+        let s = ctx.stats();
+        assert!(s.consistent(), "{s:?}");
+        assert_eq!(s.retries, 1, "one retry, then give up");
+        assert!(s.failures >= 2);
+    }
+
+    #[test]
+    fn slow_node_triggers_speculation_and_duplicate_wins() {
+        let pool = Pool::new(2);
+        let plan = FaultPlan::none().with_slow(0, Phase::Reduce, 0, 64.0);
+        let spec = FaultSpec {
+            slow_cap: Duration::from_millis(2),
+            ..FaultSpec::default()
+        };
+        let ctx = ctx(plan, spec);
+        let out = ctx.run_phase(&pool, 0, Phase::Reduce, 8, |i| {
+            spin(Duration::from_micros(300));
+            i
+        });
+        assert_eq!(out, (0..8).collect::<Vec<_>>());
+        let s = ctx.stats();
+        assert!(s.consistent(), "{s:?}");
+        assert!(
+            s.speculative_launched >= 1,
+            "a 64x straggler must trip the 2x-median trigger: {s:?}"
+        );
+        assert_eq!(s.speculative_cancelled, s.speculative_launched);
+        assert_eq!(s.successes, 8);
+        assert_eq!(s.attempts, 8 + s.speculative_launched);
+    }
+
+    #[test]
+    fn run_tasks_without_context_is_a_plain_pool_batch() {
+        let pool = Pool::new(2);
+        let out = run_tasks(None, &pool, 0, Phase::Map, 5, |i| i * i);
+        assert_eq!(out, vec![0, 1, 4, 9, 16]);
+    }
+
+    #[test]
+    fn snapshot_minus_isolates_a_window() {
+        let pool = Pool::new(1);
+        let plan = FaultPlan::none().with_transient(1, Phase::Map, 0, 1);
+        let ctx = ctx(plan, FaultSpec::default());
+        ctx.run_phase(&pool, 0, Phase::Map, 2, |i| i);
+        let mid = ctx.stats();
+        ctx.run_phase(&pool, 1, Phase::Map, 2, |i| i);
+        let d = ctx.stats().minus(&mid);
+        assert_eq!(d.attempts, 3);
+        assert_eq!(d.failures, 1);
+        assert!(d.consistent());
+    }
+}

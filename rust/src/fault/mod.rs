@@ -1,0 +1,37 @@
+//! Fault-tolerant execution: logical nodes, deterministic fault
+//! injection, bounded task-attempt retry, and speculative
+//! re-execution.
+//!
+//! The paper's §1 service-market argument says spot preemptions are
+//! routine and a runtime that can only restart whole rounds pays for
+//! them dearly — that is exactly why small ρ (more, cheaper rounds)
+//! wins. This module upgrades the engine from *restart* to *recovery*
+//! so the claim can be measured rather than assumed:
+//!
+//! * [`NodeSet`] — pool slots partitioned into seeded logical nodes
+//!   (alive / degraded / dead), giving faults a blast radius smaller
+//!   than the whole job.
+//! * [`FaultPlan`] — a seeded, replayable schedule of node-kill,
+//!   slow-node, and transient task-failure events keyed by
+//!   `(round, phase)`, the same determinism discipline as
+//!   [`crate::service::poisson_preemptions`].
+//! * [`FaultContext`] — the runtime: task attempts with
+//!   first-commit-wins, bounded retry with backoff on surviving
+//!   nodes, and median-based straggler speculation. Counters obey
+//!   `attempts == successes + failures + speculative_cancelled`.
+//!
+//! Recovery leans on [`crate::mapreduce::SimDfs`] chunk replication:
+//! with r ≥ 2 replicas, reducers re-fetch a dead node's round outputs
+//! from a surviving copy and only the victim's tasks re-execute; with
+//! r = 1 the engine falls back to the legacy whole-round discard
+//! (tracked, so the cost of skipping replication is visible). Pure
+//! map/reduce tasks make every retry bit-identical to the first
+//! attempt, so faulted runs reproduce the fault-free outputs exactly.
+
+mod injector;
+mod node;
+mod plan;
+
+pub use injector::{run_tasks, FaultContext, FaultStatsSnapshot};
+pub use node::{NodeSet, NodeState};
+pub use plan::{FaultEvent, FaultKind, FaultPlan, FaultSpec, Phase};

@@ -1,0 +1,203 @@
+//! Logical nodes: a seeded partition of pool slots into failure
+//! domains.
+//!
+//! The in-process engine runs every task on one machine, but the
+//! paper's §1 service-market argument is about *clusters*: a spot
+//! strike takes out a node, not the whole job. [`NodeSet`] supplies
+//! the missing granularity — a fixed set of logical nodes, each
+//! owning an even share of pool slots, each Alive / Degraded / Dead.
+//! Task attempts are homed on a node by a seeded, per-(round, phase)
+//! rotation so that "kill node 2 in round 3's map phase" deterministically
+//! names the same set of lost tasks on every run, independent of how
+//! the work-stealing pool interleaves them.
+
+use crate::util::rng::SplitMix64;
+
+/// Health of one logical node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Accepts and completes task attempts normally.
+    Alive,
+    /// Still completes attempts, but slowly (straggler candidate).
+    Degraded,
+    /// Lost: in-flight attempts on it fail, no new attempts land here.
+    Dead,
+}
+
+/// A seeded set of logical nodes partitioning the pool's slots.
+#[derive(Debug, Clone)]
+pub struct NodeSet {
+    seed: u64,
+    states: Vec<NodeState>,
+}
+
+impl NodeSet {
+    /// `nodes` logical nodes, all initially [`NodeState::Alive`]. The
+    /// seed fixes the task→node homing rotation (and nothing else), so
+    /// two `NodeSet`s with the same `(nodes, seed)` home every task
+    /// identically.
+    pub fn new(nodes: usize, seed: u64) -> Self {
+        assert!(nodes >= 1, "a NodeSet needs at least one node");
+        NodeSet {
+            seed,
+            states: vec![NodeState::Alive; nodes],
+        }
+    }
+
+    /// Number of logical nodes (alive or not).
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Whether the set has no nodes (never true: `new` asserts ≥ 1).
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    /// Current state of `node`.
+    pub fn state(&self, node: usize) -> NodeState {
+        self.states[node]
+    }
+
+    /// Whether `node` can still complete attempts (Alive or Degraded).
+    pub fn alive(&self, node: usize) -> bool {
+        self.states[node] != NodeState::Dead
+    }
+
+    /// Number of nodes that can still complete attempts.
+    pub fn alive_count(&self) -> usize {
+        self.states.iter().filter(|s| **s != NodeState::Dead).count()
+    }
+
+    /// Mark `node` lost.
+    pub fn kill(&mut self, node: usize) {
+        self.states[node] = NodeState::Dead;
+    }
+
+    /// Mark `node` a straggler (still completes work, slowly). A dead
+    /// node stays dead.
+    pub fn degrade(&mut self, node: usize) {
+        if self.states[node] != NodeState::Dead {
+            self.states[node] = NodeState::Degraded;
+        }
+    }
+
+    /// The node a pool slot belongs to: an even round-robin partition
+    /// with a seeded rotation, so slot→node assignment differs across
+    /// seeds but every node owns ⌈workers/nodes⌉ or ⌊workers/nodes⌋
+    /// slots.
+    pub fn node_of_slot(&self, slot: usize) -> usize {
+        let n = self.states.len();
+        (slot + (self.seed as usize % n)) % n
+    }
+
+    /// Home node for task `task` of phase `phase` in round `round`: a
+    /// per-(round, phase) seeded rotation of an even task→node
+    /// round-robin. Deterministic in `(seed, round, phase, task)` and
+    /// independent of pool scheduling, so a fault plan's "kill node k"
+    /// always loses the same tasks.
+    pub fn node_for(&self, round: usize, phase: u64, task: usize) -> usize {
+        let n = self.states.len();
+        let offset = SplitMix64::new(self.seed ^ ((round as u64) << 8) ^ phase).next_u64();
+        (task + offset as usize % n) % n
+    }
+
+    /// Deterministic replacement node for work homed on `home`: the
+    /// first non-dead node scanning upward from `home + 1` (wrapping).
+    /// If every node is dead the home node is returned — the
+    /// in-process engine still runs the attempt, modelling a cluster
+    /// that re-provisions rather than aborting the job.
+    pub fn survivor(&self, home: usize) -> usize {
+        let n = self.states.len();
+        for step in 1..=n {
+            let candidate = (home + step) % n;
+            if self.states[candidate] != NodeState::Dead {
+                return candidate;
+            }
+        }
+        home
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_set_is_fully_alive() {
+        let nodes = NodeSet::new(4, 9);
+        assert_eq!(nodes.len(), 4);
+        assert!(!nodes.is_empty());
+        assert_eq!(nodes.alive_count(), 4);
+        for n in 0..4 {
+            assert_eq!(nodes.state(n), NodeState::Alive);
+            assert!(nodes.alive(n));
+        }
+    }
+
+    #[test]
+    fn kill_and_degrade_transition_states() {
+        let mut nodes = NodeSet::new(3, 1);
+        nodes.degrade(1);
+        assert_eq!(nodes.state(1), NodeState::Degraded);
+        assert!(nodes.alive(1), "degraded nodes still complete work");
+        nodes.kill(1);
+        assert_eq!(nodes.state(1), NodeState::Dead);
+        nodes.degrade(1);
+        assert_eq!(nodes.state(1), NodeState::Dead, "dead nodes stay dead");
+        assert_eq!(nodes.alive_count(), 2);
+    }
+
+    #[test]
+    fn homing_is_deterministic_and_even() {
+        let a = NodeSet::new(4, 77);
+        let b = NodeSet::new(4, 77);
+        let mut per_node = [0usize; 4];
+        for task in 0..16 {
+            let home = a.node_for(2, 0, task);
+            assert_eq!(home, b.node_for(2, 0, task), "same seed, same homing");
+            per_node[home] += 1;
+        }
+        assert_eq!(per_node, [4, 4, 4, 4], "16 tasks spread evenly over 4 nodes");
+    }
+
+    #[test]
+    fn homing_rotation_varies_with_round_and_phase() {
+        let nodes = NodeSet::new(4, 5);
+        let by_round: Vec<usize> = (0..4).map(|r| nodes.node_for(r, 0, 0)).collect();
+        let by_phase: Vec<usize> = (0..4).map(|r| nodes.node_for(r, 1, 0)).collect();
+        assert!(
+            by_round != vec![by_round[0]; 4] || by_round != by_phase,
+            "rotation should not be constant across rounds and phases"
+        );
+    }
+
+    #[test]
+    fn slots_partition_evenly() {
+        let nodes = NodeSet::new(4, 13);
+        let mut per_node = [0usize; 4];
+        for slot in 0..8 {
+            per_node[nodes.node_of_slot(slot)] += 1;
+        }
+        assert_eq!(per_node, [2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn survivor_skips_dead_nodes() {
+        let mut nodes = NodeSet::new(4, 0);
+        nodes.kill(1);
+        nodes.kill(2);
+        assert_eq!(nodes.survivor(0), 3);
+        assert_eq!(nodes.survivor(1), 3);
+        assert_eq!(nodes.survivor(3), 0);
+    }
+
+    #[test]
+    fn survivor_falls_back_to_home_when_all_dead() {
+        let mut nodes = NodeSet::new(2, 0);
+        nodes.kill(0);
+        nodes.kill(1);
+        assert_eq!(nodes.survivor(0), 0);
+        assert_eq!(nodes.survivor(1), 1);
+    }
+}

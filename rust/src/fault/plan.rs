@@ -1,0 +1,378 @@
+//! Deterministic fault plans: replayable chaos scenarios.
+//!
+//! A [`FaultPlan`] is a finite list of [`FaultEvent`]s keyed by
+//! `(round, phase)` — the same determinism discipline as
+//! [`crate::service::poisson_preemptions`]: derive everything from a
+//! seed up front, then replay it bit-identically. Three event kinds
+//! cover the failure modes the paper's service-market argument cares
+//! about: a node lost mid-phase ([`FaultKind::KillNode`]), a straggler
+//! node ([`FaultKind::SlowNode`]), and a flaky task that fails
+//! transiently before succeeding ([`FaultKind::TaskFail`]).
+//!
+//! A disabled plan ([`FaultPlan::none`]) holds no events and no
+//! allocation; the engine strips it entirely so the fault-free path
+//! stays untouched.
+
+use crate::util::rng::Xoshiro256ss;
+use std::time::Duration;
+
+/// The phase of a round a fault event lands in. Map and reduce tasks
+/// are the units of attempt bookkeeping (the shuffle-merge runs as
+/// part of the reduce fetch, as in Hadoop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// The map phase (one task per input chunk).
+    Map,
+    /// The reduce phase (one task per reducer bucket group).
+    Reduce,
+}
+
+impl Phase {
+    /// Stable name for logs and traces.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Map => "map",
+            Phase::Reduce => "reduce",
+        }
+    }
+
+    /// Stable numeric id, used in the seeded task→node rotation.
+    pub fn id(self) -> u64 {
+        match self {
+            Phase::Map => 0,
+            Phase::Reduce => 1,
+        }
+    }
+}
+
+/// What a fault event does when its `(round, phase)` arrives.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Node `node` dies at phase entry: every attempt homed on it in
+    /// this phase is lost mid-flight and re-executes on a survivor;
+    /// the node stays dead for the rest of the job.
+    KillNode {
+        /// The logical node that dies.
+        node: usize,
+    },
+    /// Node `node` degrades: attempts on it take `factor`× their
+    /// measured duration (capped by `FaultSpec::slow_cap`), making
+    /// them straggler candidates for speculation.
+    SlowNode {
+        /// The logical node that degrades.
+        node: usize,
+        /// Slowdown multiplier (≥ 1.0).
+        factor: f64,
+    },
+    /// Task `task` fails transiently on its first `failures` attempts,
+    /// then succeeds — models flaky I/O rather than lost hardware.
+    TaskFail {
+        /// Task index within the phase.
+        task: usize,
+        /// Number of leading attempts that fail.
+        failures: usize,
+    },
+}
+
+/// One scheduled fault: a [`FaultKind`] pinned to a round and phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Round the event fires in.
+    pub round: usize,
+    /// Phase within the round.
+    pub phase: Phase,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// A replayable schedule of fault events.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    enabled: bool,
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The disabled plan: no events, no allocation. The engine treats
+    /// it as "no fault layer at all".
+    pub fn none() -> Self {
+        FaultPlan {
+            enabled: false,
+            events: Vec::new(),
+        }
+    }
+
+    /// An enabled plan from an explicit event list (may be empty — an
+    /// enabled-but-empty plan exercises the bookkeeping overhead
+    /// without injecting anything).
+    pub fn new(events: Vec<FaultEvent>) -> Self {
+        FaultPlan {
+            enabled: true,
+            events,
+        }
+    }
+
+    /// A seeded chaos scenario over `rounds` rounds and `nodes` nodes:
+    /// one node kill in a random round's map phase (when there is a
+    /// survivor to recover onto), one straggler node in a random
+    /// round's reduce phase, and two transient task failures. The same
+    /// `(seed, rounds, nodes)` always yields the same plan.
+    pub fn seeded(seed: u64, rounds: usize, nodes: usize) -> Self {
+        let mut rng = Xoshiro256ss::new(seed);
+        let rounds = rounds.max(1);
+        let mut events = Vec::new();
+        if nodes > 1 {
+            events.push(FaultEvent {
+                round: rng.next_usize(rounds),
+                phase: Phase::Map,
+                kind: FaultKind::KillNode {
+                    node: rng.next_usize(nodes),
+                },
+            });
+        }
+        events.push(FaultEvent {
+            round: rng.next_usize(rounds),
+            phase: Phase::Reduce,
+            kind: FaultKind::SlowNode {
+                node: rng.next_usize(nodes.max(1)),
+                factor: 8.0 + rng.next_f64() * 24.0,
+            },
+        });
+        for _ in 0..2 {
+            let phase = if rng.bernoulli(0.5) {
+                Phase::Map
+            } else {
+                Phase::Reduce
+            };
+            events.push(FaultEvent {
+                round: rng.next_usize(rounds),
+                phase,
+                kind: FaultKind::TaskFail {
+                    task: rng.next_usize(8),
+                    failures: 1 + rng.next_usize(2),
+                },
+            });
+        }
+        FaultPlan::new(events)
+    }
+
+    /// Add a node kill at `(round, map)` — builder form for tests.
+    pub fn with_kill(mut self, round: usize, phase: Phase, node: usize) -> Self {
+        self.enabled = true;
+        self.events.push(FaultEvent {
+            round,
+            phase,
+            kind: FaultKind::KillNode { node },
+        });
+        self
+    }
+
+    /// Add a slow-node event — builder form for tests.
+    pub fn with_slow(mut self, round: usize, phase: Phase, node: usize, factor: f64) -> Self {
+        self.enabled = true;
+        self.events.push(FaultEvent {
+            round,
+            phase,
+            kind: FaultKind::SlowNode { node, factor },
+        });
+        self
+    }
+
+    /// Add a transient task failure — builder form for tests.
+    pub fn with_transient(
+        mut self,
+        round: usize,
+        phase: Phase,
+        task: usize,
+        failures: usize,
+    ) -> Self {
+        self.enabled = true;
+        self.events.push(FaultEvent {
+            round,
+            phase,
+            kind: FaultKind::TaskFail { task, failures },
+        });
+        self
+    }
+
+    /// Whether the plan is active (a disabled plan is stripped by the
+    /// engine before any per-task bookkeeping exists).
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Number of scheduled events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Whether the plan schedules nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Allocated capacity of the event list (the disabled plan's
+    /// zero-allocation guarantee is testable through this).
+    pub fn capacity(&self) -> usize {
+        self.events.capacity()
+    }
+
+    /// All scheduled events.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Events firing at `(round, phase)`.
+    pub fn events_at(&self, round: usize, phase: Phase) -> impl Iterator<Item = &FaultEvent> {
+        self.events
+            .iter()
+            .filter(move |e| e.round == round && e.phase == phase)
+    }
+
+    /// Whether `node` is killed at `(round, phase)` — the attempts
+    /// homed on it in exactly this phase die mid-flight.
+    pub fn kills_node(&self, round: usize, phase: Phase, node: usize) -> bool {
+        self.events_at(round, phase)
+            .any(|e| matches!(e.kind, FaultKind::KillNode { node: n } if n == node))
+    }
+
+    /// Slowdown factor for `node` at `(round, phase)`, if any.
+    pub fn slow_factor(&self, round: usize, phase: Phase, node: usize) -> Option<f64> {
+        self.events_at(round, phase).find_map(|e| match e.kind {
+            FaultKind::SlowNode { node: n, factor } if n == node => Some(factor),
+            _ => None,
+        })
+    }
+
+    /// Number of injected transient failures for `task` at
+    /// `(round, phase)` (0 when the task is not targeted).
+    pub fn transient_failures(&self, round: usize, phase: Phase, task: usize) -> usize {
+        self.events_at(round, phase)
+            .filter_map(|e| match e.kind {
+                FaultKind::TaskFail { task: t, failures } if t == task => Some(failures),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Count of events by kind: `(kills, slows, transients)`.
+    pub fn census(&self) -> (usize, usize, usize) {
+        let mut kills = 0;
+        let mut slows = 0;
+        let mut transients = 0;
+        for e in &self.events {
+            match e.kind {
+                FaultKind::KillNode { .. } => kills += 1,
+                FaultKind::SlowNode { .. } => slows += 1,
+                FaultKind::TaskFail { .. } => transients += 1,
+            }
+        }
+        (kills, slows, transients)
+    }
+}
+
+/// Tuning knobs for the retry / speculation machinery — fixed policy,
+/// separate from the (seeded) fault schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    /// Attempts per task before the failure is treated as permanent
+    /// (the final failure propagates as a panic, poisoning the batch).
+    pub max_attempts: usize,
+    /// Base backoff between retry attempts (linear in attempt number).
+    pub backoff: Duration,
+    /// Upper bound on a single backoff sleep.
+    pub backoff_cap: Duration,
+    /// A task whose (slowdown-adjusted) duration exceeds this multiple
+    /// of the phase's running median gets a speculative duplicate.
+    pub straggler_factor: f64,
+    /// Upper bound on the simulated extra latency of one slow-node
+    /// attempt, keeping chaos tests fast.
+    pub slow_cap: Duration,
+    /// DFS chunk replication degree; ≥ 2 lets a lost node's reducers
+    /// re-fetch from a surviving replica instead of discarding the
+    /// whole round.
+    pub replication: usize,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            max_attempts: 4,
+            backoff: Duration::from_micros(200),
+            backoff_cap: Duration::from_millis(2),
+            straggler_factor: 2.0,
+            slow_cap: Duration::from_millis(20),
+            replication: 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_plan_is_empty_and_unallocated() {
+        let plan = FaultPlan::none();
+        assert!(!plan.enabled());
+        assert!(plan.is_empty());
+        assert_eq!(plan.len(), 0);
+        assert_eq!(plan.capacity(), 0, "FaultPlan::none must not allocate");
+        assert_eq!(FaultPlan::default().capacity(), 0);
+    }
+
+    #[test]
+    fn seeded_plans_replay_bit_identically() {
+        let a = FaultPlan::seeded(42, 5, 4);
+        let b = FaultPlan::seeded(42, 5, 4);
+        assert!(a.enabled());
+        assert_eq!(a.events(), b.events());
+        let c = FaultPlan::seeded(43, 5, 4);
+        assert_ne!(a.events(), c.events(), "different seed, different plan");
+    }
+
+    #[test]
+    fn seeded_plan_covers_all_three_fault_kinds() {
+        let plan = FaultPlan::seeded(7, 4, 4);
+        let (kills, slows, transients) = plan.census();
+        assert_eq!(kills, 1);
+        assert_eq!(slows, 1);
+        assert_eq!(transients, 2);
+        for e in plan.events() {
+            assert!(e.round < 4, "events stay within the round budget");
+        }
+    }
+
+    #[test]
+    fn single_node_seeded_plan_skips_the_kill() {
+        let plan = FaultPlan::seeded(7, 4, 1);
+        let (kills, _, _) = plan.census();
+        assert_eq!(kills, 0, "no survivor to recover onto, so no kill");
+    }
+
+    #[test]
+    fn queries_filter_by_round_phase_and_target() {
+        let plan = FaultPlan::none()
+            .with_kill(1, Phase::Map, 2)
+            .with_slow(0, Phase::Reduce, 1, 16.0)
+            .with_transient(0, Phase::Map, 3, 2);
+        assert!(plan.enabled());
+        assert!(plan.kills_node(1, Phase::Map, 2));
+        assert!(!plan.kills_node(1, Phase::Reduce, 2));
+        assert!(!plan.kills_node(0, Phase::Map, 2));
+        assert!(!plan.kills_node(1, Phase::Map, 0));
+        assert_eq!(plan.slow_factor(0, Phase::Reduce, 1), Some(16.0));
+        assert_eq!(plan.slow_factor(0, Phase::Reduce, 0), None);
+        assert_eq!(plan.transient_failures(0, Phase::Map, 3), 2);
+        assert_eq!(plan.transient_failures(0, Phase::Map, 4), 0);
+        assert_eq!(plan.events_at(0, Phase::Map).count(), 1);
+    }
+
+    #[test]
+    fn phase_names_and_ids_are_stable() {
+        assert_eq!(Phase::Map.name(), "map");
+        assert_eq!(Phase::Reduce.name(), "reduce");
+        assert_eq!(Phase::Map.id(), 0);
+        assert_eq!(Phase::Reduce.id(), 1);
+    }
+}

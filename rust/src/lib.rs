@@ -24,6 +24,11 @@
 //! * [`simulator`] — a discrete cost-model simulator of the paper's
 //!   clusters (in-house 16-node, EMR c3.8xlarge / i2.xlarge) used to
 //!   regenerate the paper-scale figures.
+//! * [`fault`] — fault-tolerant execution: seeded logical nodes,
+//!   deterministic fault injection, bounded task-attempt retry with
+//!   first-commit-wins, and median-based speculative re-execution,
+//!   so a lost node re-executes only its own tasks instead of
+//!   discarding the round.
 //! * [`trace`] — structured span tracing: lock-free per-thread span
 //!   recorders wired through the executor, round engine, and service
 //!   scheduler, with a Chrome `trace_event` exporter and per-round
@@ -33,6 +38,7 @@
 //! * [`util`] — in-house PRNG, mini property-testing framework,
 //!   stats, CLI and table printing helpers.
 
+pub mod fault;
 pub mod harness;
 pub mod m3;
 pub mod mapreduce;

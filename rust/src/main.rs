@@ -8,7 +8,11 @@
 //! * `serve`    — run a multi-tenant workload through the round-level
 //!   job scheduler (FIFO / fair / SRPT, optional spot preemptions,
 //!   mixed fixed/auto-planned tenants, optional online profile
-//!   recalibration).
+//!   recalibration; `--faults` switches strikes to node-granular
+//!   in-round recovery and injects seeded per-job chaos plans).
+//! * `chaos`    — run one multiplication under a seeded fault plan
+//!   (node kills, stragglers, transient task failures), report the
+//!   recovery counters, and `--verify` the product bit-exactly.
 //! * `plan`     — enumerate and price every valid plan for a shape
 //!   under a reducer-memory budget; print the tradeoff table and the
 //!   auto-chosen plan.
@@ -57,7 +61,12 @@ USAGE:
               [--seed <u64>] [--mean-arrival <secs>] [--preempt-rate <per-100s>]
               [--auto-fraction <0..1>] [--budget <words>] [--recalibrate]
               [--profile inhouse|c3|i2] [--backend xla|native|naive|auto]
+              [--faults] [--fault-nodes <n>] [--strike-fraction <0..1>]
               [--verify] [--report] [--trace] [--out trace.json]
+  m3 chaos    [--algo 3d|2d|sparse] [--n <side>] [--block <side>]
+              [--rho <r>] [--nnz-per-row <k>] [--seed <u64>]
+              [--fault-nodes <n>] [--backend xla|native|naive|auto]
+              [--verify]
   m3 trace    [--n <side>] [--block <side>] [--rho <r>] [--algo 3d|2d]
               [--backend xla|native|naive|auto] [--seed <u64>]
               [--out trace.json]
@@ -84,7 +93,7 @@ fn main() {
         "n", "block", "rho", "algo", "backend", "partitioner", "seed", "nodes", "slots", "fig",
         "out-dir", "profile", "nnz-per-row", "workers", "policy", "jobs", "tenants",
         "mean-arrival", "preempt-rate", "pairs", "reduce-tasks", "out", "sides", "sparse-side",
-        "budget", "auto-fraction", "mem-per-node-gb",
+        "budget", "auto-fraction", "mem-per-node-gb", "fault-nodes", "strike-fraction",
     ]);
     let args = match Args::parse(&spec) {
         Ok(a) => a,
@@ -98,6 +107,7 @@ fn main() {
         "multiply" => cmd_multiply(&args),
         "sparse" => cmd_sparse(&args),
         "serve" => cmd_serve(&args),
+        "chaos" => cmd_chaos(&args),
         "trace" => cmd_trace(&args),
         "plan" => cmd_plan(&args),
         "figures" => cmd_figures(&args),
@@ -261,7 +271,8 @@ fn cmd_sparse(args: &Args) -> Result<()> {
 /// Run a seeded multi-tenant workload through the round-level scheduler.
 fn cmd_serve(args: &Args) -> Result<()> {
     use m3::service::{
-        generate, poisson_preemptions, run_service, Policy, ServiceConfig, WorkloadConfig,
+        generate, poisson_preemptions, run_service, Policy, ServiceConfig, StrikeMode,
+        WorkloadConfig,
     };
     if args.flag("report") {
         let rep = m3::harness::service_report();
@@ -301,12 +312,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         vec![]
     };
+    let faults = args.flag("faults");
+    let strike_fraction: f64 = args
+        .get("strike-fraction", 0.25)
+        .map_err(anyhow::Error::msg)?;
+    let fault_nodes: usize = args.get("fault-nodes", 4).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        strike_fraction > 0.0 && strike_fraction <= 1.0,
+        "--strike-fraction must be in (0, 1]"
+    );
     let cfg = ServiceConfig {
         engine: engine_from(args)?,
         policy,
         preemptions,
         profile: profile_from(args)?,
         recalibrate: args.flag("recalibrate"),
+        strike_mode: if faults {
+            StrikeMode::NodeGranular {
+                fraction: strike_fraction,
+            }
+        } else {
+            StrikeMode::WholeRound
+        },
+        fault_seed: faults.then_some(seed ^ 0xfa17_fa17),
+        fault_nodes,
     };
     let backend = backend_from(args)?;
     eprintln!(
@@ -360,6 +389,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
         out.metrics.total_preemptions(),
         wall.as_secs_f64(),
     );
+    if faults {
+        println!(
+            "serve faults: strikes={} recovered={:.1}s (vs lost={:.1}s whole-round)",
+            out.metrics.total_node_strikes(),
+            out.metrics.total_recovered_secs(),
+            out.metrics.total_discarded_secs(),
+        );
+        let sum = |f: &dyn Fn(&m3::mapreduce::JobMetrics) -> usize| -> usize {
+            out.completed.iter().map(|c| f(&c.metrics)).sum()
+        };
+        println!(
+            "FAULTS attempts={} successes={} failures={} retries={} reexecuted={} \
+             spec_launched={} spec_cancelled={}",
+            sum(&|m| m.total_task_attempts()),
+            sum(&|m| m.total_task_successes()),
+            sum(&|m| m.total_task_failures()),
+            sum(&|m| m.total_task_retries()),
+            sum(&|m| m.total_tasks_reexecuted()),
+            sum(&|m| m.total_speculative_launched()),
+            sum(&|m| m.total_speculative_cancelled()),
+        );
+        println!(
+            "FAULTS rounds executed={} recovered={} fallbacks={}",
+            sum(&|m| m.num_rounds()),
+            sum(&|m| m.rounds_recovered()),
+            sum(&|m| m.total_recovery_fallbacks()),
+        );
+    }
     anyhow::ensure!(
         out.completed.len() == specs.len(),
         "not every job completed: {}/{}",
@@ -376,6 +433,106 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
         println!("verify: OK ({} jobs exact)", out.completed.len());
+    }
+    Ok(())
+}
+
+/// Run one multiplication under a seeded chaos plan — node kills,
+/// stragglers, and transient task failures — and report the recovery
+/// counters. `--verify` pins the product to the fault-free reference
+/// multiply, demonstrating that in-round recovery is bit-exact.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use m3::fault::{FaultContext, FaultPlan, FaultSpec, NodeSet};
+    use m3::service::{spawn_job, ActiveJob, JobKind, JobSpec, PlanChoice};
+    let algo = args.opt_or("algo", "3d");
+    let n: usize = args.get("n", 256).map_err(anyhow::Error::msg)?;
+    let block: usize = args.get("block", 64).map_err(anyhow::Error::msg)?;
+    let rho: usize = args.get("rho", 1).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get("seed", 42).map_err(anyhow::Error::msg)?;
+    let nnz: usize = args.get("nnz-per-row", 8).map_err(anyhow::Error::msg)?;
+    let nodes: usize = args.get("fault-nodes", 4).map_err(anyhow::Error::msg)?;
+    // A one-node "cluster" has nowhere to re-home lost attempts.
+    let nodes = nodes.max(2);
+    let kind = match algo.as_str() {
+        "3d" => JobKind::Dense3d {
+            side: n,
+            block_side: block,
+            rho,
+        },
+        "2d" => JobKind::Dense2d {
+            side: n,
+            block_side: block,
+            rho,
+        },
+        "sparse" => JobKind::Sparse3d {
+            side: n,
+            block_side: block,
+            rho,
+            nnz_per_row: nnz,
+        },
+        other => bail!("unknown algo {other:?} (expected 3d, 2d, or sparse)"),
+    };
+    let spec = JobSpec {
+        id: 0,
+        tenant: 0,
+        kind,
+        plan: PlanChoice::Fixed,
+        seed,
+        arrival_secs: 0.0,
+    };
+    let mut job = spawn_job(&spec, engine_from(args)?, backend_from(args)?)?;
+    let rounds = job.num_rounds();
+    let ctx = Arc::new(FaultContext::new(
+        NodeSet::new(nodes, seed),
+        FaultPlan::seeded(seed, rounds, nodes),
+        FaultSpec::default(),
+    ));
+    let (kills, slows, transients) = ctx.plan().census();
+    job.set_faults(Arc::clone(&ctx));
+    eprintln!(
+        "[m3] chaos run: {algo} n={n} over {rounds} rounds, {nodes} logical nodes, seed {seed}"
+    );
+    let t0 = std::time::Instant::now();
+    while !job.is_done() {
+        job.step_commit();
+    }
+    let wall = t0.elapsed();
+    let (out, metrics) = job.finish();
+    println!(
+        "CHAOS algo={algo} n={n} block={block} rho={rho} seed={seed} nodes={nodes} rounds={} \
+         wall={:.3}s",
+        metrics.num_rounds(),
+        wall.as_secs_f64(),
+    );
+    println!(
+        "CHAOS plan events={} kills={kills} slow={slows} transient={transients}",
+        ctx.plan().len(),
+    );
+    let s = ctx.stats();
+    println!(
+        "FAULTS attempts={} successes={} failures={} retries={} reexecuted={} \
+         spec_launched={} spec_cancelled={}",
+        s.attempts,
+        s.successes,
+        s.failures,
+        s.retries,
+        s.reexecuted,
+        s.speculative_launched,
+        s.speculative_cancelled,
+    );
+    println!(
+        "FAULTS rounds executed={} recovered={} fallbacks={}",
+        metrics.num_rounds(),
+        metrics.rounds_recovered(),
+        metrics.total_recovery_fallbacks(),
+    );
+    if args.flag("verify") {
+        eprintln!("[m3] verifying the chaos product against the reference multiply…");
+        anyhow::ensure!(
+            out.matches(&spec),
+            "chaos run produced a wrong product (algo={algo}, seed={seed})"
+        );
+        println!("CHAOS verify=OK");
     }
     Ok(())
 }

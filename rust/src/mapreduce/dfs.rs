@@ -10,6 +10,15 @@
 //! memory, tracks bytes and chunk sizes per write (one chunk per reduce
 //! task, as in Hadoop), and reports the chunk-size statistics the cost
 //! model needs to reproduce the paper's small-chunk penalty.
+//!
+//! For fault tolerance the DFS additionally models HDFS-style r-way
+//! chunk *replication*: writes are logically single copies (chunk
+//! counts and mean sizes stay those of the payload, so the cost model
+//! is unchanged), but each chunk is stored `replication` times. When a
+//! node dies mid-round, surviving replicas let reducers re-fetch the
+//! previous round's output ([`SimDfs::recover_round`]); without a
+//! replica (`replication == 1`) recovery degrades to the documented
+//! whole-round fallback, which the DFS counts.
 
 use std::collections::BTreeMap;
 
@@ -29,6 +38,12 @@ pub struct SimDfs {
     writes: Vec<ChunkWrite>,
     reads: Vec<(usize, usize)>, // (round, words)
     stored_words: BTreeMap<usize, usize>,
+    /// Copies stored per chunk (0 from `Default` reads as 1).
+    replication: usize,
+    /// Recovery re-fetches served from a surviving replica.
+    replica_reads: Vec<(usize, usize)>, // (round, words)
+    /// Recoveries that found no replica (whole-round fallback).
+    fallbacks: usize,
 }
 
 impl SimDfs {
@@ -83,6 +98,52 @@ impl SimDfs {
     pub fn writes(&self) -> &[ChunkWrite] {
         &self.writes
     }
+
+    /// Set the chunk replication degree (clamped to ≥ 1).
+    pub fn set_replication(&mut self, replication: usize) {
+        self.replication = replication.max(1);
+    }
+
+    /// Copies stored per chunk (≥ 1).
+    pub fn replication(&self) -> usize {
+        self.replication.max(1)
+    }
+
+    /// Attempt to recover `words` of round `round`'s input from a
+    /// surviving replica after a node loss. With `replication ≥ 2` the
+    /// re-fetch is recorded and recovery proceeds (`true`); with a
+    /// single copy there is nothing to re-fetch, the fallback counter
+    /// bumps, and the caller must pay the whole-round path (`false`).
+    pub fn recover_round(&mut self, round: usize, words: usize) -> bool {
+        if self.replication() >= 2 {
+            self.replica_reads.push((round, words));
+            true
+        } else {
+            self.fallbacks += 1;
+            false
+        }
+    }
+
+    /// Total words re-fetched from replicas during recoveries.
+    pub fn total_replica_read_words(&self) -> usize {
+        self.replica_reads.iter().map(|&(_, w)| w).sum()
+    }
+
+    /// Number of recovery re-fetches served from replicas.
+    pub fn replica_read_count(&self) -> usize {
+        self.replica_reads.len()
+    }
+
+    /// Recoveries that degraded to the whole-round fallback.
+    pub fn fallback_count(&self) -> usize {
+        self.fallbacks
+    }
+
+    /// Physical words stored including replication — the space price
+    /// of recovery (the space-round tradeoff's other axis).
+    pub fn replicated_written_words(&self) -> usize {
+        self.total_written_words() * self.replication()
+    }
 }
 
 #[cfg(test)]
@@ -133,5 +194,33 @@ mod tests {
         let dfs = SimDfs::new();
         assert_eq!(dfs.mean_chunk_words(), 0.0);
         assert_eq!(dfs.total_written_words(), 0);
+        assert_eq!(dfs.replication(), 1, "default is a single copy");
+    }
+
+    #[test]
+    fn replication_recovers_without_touching_chunk_accounting() {
+        let mut dfs = SimDfs::new();
+        dfs.set_replication(2);
+        dfs.write_round(0, &[100, 200]);
+        assert_eq!(dfs.num_chunks(), 2, "replicas are not extra chunks");
+        assert_eq!(dfs.mean_chunk_words(), 150.0);
+        assert_eq!(dfs.total_written_words(), 300, "logical volume");
+        assert_eq!(dfs.replicated_written_words(), 600, "physical volume");
+        assert!(dfs.recover_round(0, 120), "a replica serves the re-fetch");
+        assert_eq!(dfs.replica_read_count(), 1);
+        assert_eq!(dfs.total_replica_read_words(), 120);
+        assert_eq!(dfs.fallback_count(), 0);
+    }
+
+    #[test]
+    fn single_copy_recovery_falls_back() {
+        let mut dfs = SimDfs::new();
+        dfs.write_round(0, &[50]);
+        assert!(!dfs.recover_round(0, 50), "no replica to read");
+        assert_eq!(dfs.fallback_count(), 1);
+        assert_eq!(dfs.total_replica_read_words(), 0);
+        dfs.set_replication(3);
+        assert!(dfs.recover_round(0, 50));
+        assert_eq!(dfs.fallback_count(), 1);
     }
 }

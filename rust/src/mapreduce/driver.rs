@@ -19,6 +19,7 @@ use super::executor::Pool;
 use super::job::{EngineConfig, Job};
 use super::metrics::{JobMetrics, RoundMetrics};
 use super::types::{Key, Mapper, Pair, Partitioner, Reducer, Value};
+use crate::fault::FaultContext;
 use crate::trace;
 use crate::trace::SpanKind;
 
@@ -124,6 +125,8 @@ pub struct Driver {
     pub dfs: SimDfs,
     /// Persistent worker pool every round of this driver runs on.
     pool: Arc<Pool>,
+    /// Fault-injection context, when installed ([`Driver::set_faults`]).
+    faults: Option<Arc<FaultContext>>,
 }
 
 impl Driver {
@@ -138,7 +141,25 @@ impl Driver {
             config,
             dfs: SimDfs::new(),
             pool,
+            faults: None,
         }
+    }
+
+    /// Install a fault-injection context: subsequent rounds run their
+    /// map/reduce batches as retryable task attempts, and the DFS
+    /// stores round outputs with the context's replication degree so a
+    /// node loss recovers from replicas. A *disabled* plan is stripped
+    /// here — the fault-free path keeps zero per-task bookkeeping.
+    pub fn set_faults(&mut self, faults: Arc<FaultContext>) {
+        if faults.plan().enabled() {
+            self.dfs.set_replication(faults.spec().replication);
+            self.faults = Some(faults);
+        }
+    }
+
+    /// The installed fault context, if any.
+    pub fn faults(&self) -> Option<&Arc<FaultContext>> {
+        self.faults.as_ref()
     }
 
     /// Slot demand of round `r` of `alg` on this driver's cluster for
@@ -207,7 +228,20 @@ impl Driver {
             combiner: alg.combiner(r),
             partitioner: alg.partitioner(r),
         };
-        let (out, mut m) = job.run(&self.pool, r, input);
+        let (out, mut m) = job.run_with_faults(&self.pool, r, input, self.faults.as_deref());
+
+        // Recovery accounting: when a node died under this round, the
+        // re-executed tasks re-fetched their share of the round input
+        // from surviving DFS replicas of earlier outputs. Without a
+        // replica, recovery degrades to the documented whole-round
+        // fallback, which both the DFS and the round metrics record.
+        if self.faults.is_some() && m.tasks_reexecuted > 0 {
+            let total_tasks = (self.config.map_tasks + self.config.reduce_tasks).max(1);
+            let refetch = m.input_words * m.tasks_reexecuted.min(total_tasks) / total_tasks;
+            if !self.dfs.recover_round(r, refetch) {
+                m.recovery_fallbacks = 1;
+            }
+        }
 
         // Materialise output: one chunk per reduce task, as Hadoop does.
         let commit_start_ns = if traced { trace::now_ns() } else { 0 };
@@ -377,6 +411,13 @@ impl<A: MultiRoundAlgorithm> StepRun<A> {
     /// The driver (for DFS accounting inspection).
     pub fn driver(&self) -> &Driver {
         &self.driver
+    }
+
+    /// Install a fault-injection context on the underlying driver (see
+    /// [`Driver::set_faults`]). Disabled plans are stripped there, so
+    /// installing one leaves the run on the fault-free path.
+    pub fn set_faults(&mut self, faults: Arc<FaultContext>) {
+        self.driver.set_faults(faults);
     }
 
     /// The algorithm being executed.
@@ -692,6 +733,72 @@ mod tests {
             assert!(pre.discarded_secs > prev, "monotone in k");
             prev = pre.discarded_secs;
         }
+    }
+
+    #[test]
+    fn faulted_driver_recovers_from_replicas() {
+        use crate::fault::{FaultContext, FaultPlan, FaultSpec, NodeSet, Phase};
+        let input: Vec<Pair<u32, f32>> = (0..40).map(|i| Pair::new(i, 0.0)).collect();
+        let mut plain = Driver::new(small_cfg());
+        let want = plain.run(&IncAlg::new(3), &input);
+
+        // Two nodes and two map tasks: the per-phase homing spreads the
+        // tasks evenly, so killing node 0 always claims a victim.
+        let plan = FaultPlan::none().with_kill(1, Phase::Map, 0);
+        let ctx = Arc::new(FaultContext::new(
+            NodeSet::new(2, 5),
+            plan,
+            FaultSpec::default(),
+        ));
+        let mut d = Driver::new(small_cfg());
+        d.set_faults(ctx.clone());
+        assert!(d.faults().is_some(), "enabled plans install");
+        let got = d.run(&IncAlg::new(3), &input);
+
+        let mut a = want.output;
+        let mut b = got.output;
+        a.sort_by_key(|p| p.key);
+        b.sort_by_key(|p| p.key);
+        assert_eq!(a, b, "node loss must not change the result");
+        assert_eq!(got.metrics.rounds_recovered(), 1, "round 1 recovered");
+        assert_eq!(got.metrics.total_recovery_fallbacks(), 0);
+        assert_eq!(d.dfs.replication(), 2, "FaultSpec replication installed");
+        assert_eq!(d.dfs.replica_read_count(), 1, "one replica re-fetch");
+        assert_eq!(d.dfs.fallback_count(), 0);
+        assert!(ctx.stats().reexecuted > 0);
+    }
+
+    #[test]
+    fn recovery_without_replicas_records_the_fallback() {
+        use crate::fault::{FaultContext, FaultPlan, FaultSpec, NodeSet, Phase};
+        let input: Vec<Pair<u32, f32>> = (0..40).map(|i| Pair::new(i, 0.0)).collect();
+        let plan = FaultPlan::none().with_kill(0, Phase::Map, 1);
+        let spec = FaultSpec {
+            replication: 1,
+            ..FaultSpec::default()
+        };
+        let ctx = Arc::new(FaultContext::new(NodeSet::new(2, 5), plan, spec));
+        let mut d = Driver::new(small_cfg());
+        d.set_faults(ctx);
+        let got = d.run(&IncAlg::new(2), &input);
+        assert_eq!(got.output.len(), 40, "outputs still correct");
+        assert_eq!(got.metrics.total_recovery_fallbacks(), 1);
+        assert_eq!(d.dfs.fallback_count(), 1);
+        assert_eq!(d.dfs.replica_read_count(), 0, "nothing to re-fetch from");
+    }
+
+    #[test]
+    fn disabled_fault_plan_is_stripped() {
+        use crate::fault::{FaultContext, FaultPlan, FaultSpec, NodeSet};
+        let mut d = Driver::new(small_cfg());
+        let ctx = Arc::new(FaultContext::new(
+            NodeSet::new(4, 5),
+            FaultPlan::none(),
+            FaultSpec::default(),
+        ));
+        d.set_faults(ctx);
+        assert!(d.faults().is_none(), "disabled plans must not install");
+        assert_eq!(d.dfs.replication(), 1, "no replication side effect");
     }
 
     #[test]

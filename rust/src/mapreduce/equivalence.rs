@@ -557,6 +557,188 @@ fn disabled_tracing_records_nothing() {
     );
 }
 
+/// A deterministic injury schedule that every shape survives: a node
+/// kill in round 0's map (5 map tasks over 4 nodes — the victim always
+/// owns work), a transient double failure of reduce task 2 in round 0,
+/// and — for algorithms with a second round — a straggler node plus one
+/// more transient failure. Everything is keyed by (round, phase, task),
+/// so the same tasks are injured no matter how the pool schedules.
+fn injury_plan() -> crate::fault::FaultPlan {
+    use crate::fault::{FaultPlan, Phase};
+    FaultPlan::none()
+        .with_kill(0, Phase::Map, 0)
+        .with_transient(0, Phase::Reduce, 2, 2)
+        .with_slow(1, Phase::Reduce, 1, 16.0)
+        .with_transient(1, Phase::Map, 0, 1)
+}
+
+/// A driver with the injury schedule installed on 4 logical nodes.
+fn faulted_driver(cfg: EngineConfig, seed: u64) -> (Driver, Arc<crate::fault::FaultContext>) {
+    use crate::fault::{FaultContext, FaultSpec, NodeSet};
+    let fctx = Arc::new(FaultContext::new(
+        NodeSet::new(4, seed),
+        injury_plan(),
+        FaultSpec::default(),
+    ));
+    let mut d = Driver::new(cfg);
+    d.set_faults(fctx.clone());
+    (d, fctx)
+}
+
+/// The recovery path must be invisible: outputs, shuffle-cost metrics,
+/// and word accounting bit-identical to the fault-free reference, the
+/// counter identity intact, every kill covered by a replica.
+fn assert_faulted_run_matches<A: MultiRoundAlgorithm>(
+    alg: &A,
+    input: &[Pair<A::K, A::V>],
+    shape: &str,
+) where
+    A::V: PartialEq + std::fmt::Debug,
+{
+    for workers in [1usize, 2, 8] {
+        let cfg = engine(workers);
+        let (want_out, want_m) = run_reference(alg, cfg, input);
+        let (mut d, fctx) = faulted_driver(cfg, 50 + workers as u64);
+        let got = d.run(alg, input);
+        let ctx = format!("faulted {shape} workers={workers}");
+        assert_metrics_match(&got.metrics.rounds, &want_m, &ctx);
+        assert_outputs_match(got.output, want_out, &ctx);
+
+        let s = fctx.stats();
+        assert!(s.consistent(), "{ctx}: attempts ≠ successes+failures+cancelled");
+        assert!(s.failures >= 3, "{ctx}: the round-0 injuries are guaranteed");
+        assert!(s.reexecuted >= 1, "{ctx}: the killed node owned map work");
+        assert_eq!(
+            got.metrics.total_task_attempts(),
+            s.attempts,
+            "{ctx}: per-round counters must sum to the context totals"
+        );
+        assert_eq!(got.metrics.total_task_failures(), s.failures, "{ctx}: failures");
+        assert_eq!(
+            got.metrics.total_tasks_reexecuted(),
+            s.reexecuted,
+            "{ctx}: reexecuted"
+        );
+        assert!(got.metrics.rounds_recovered() >= 1, "{ctx}: round 0 recovered");
+        assert_eq!(
+            d.dfs.fallback_count(),
+            0,
+            "{ctx}: 2-way replication must cover every kill"
+        );
+    }
+}
+
+#[test]
+fn faulted_dense_3d_matches_fault_free_reference() {
+    let (side, block, rho) = (16usize, 4usize, 2usize);
+    let geo: Geometry = Plan3d::new(side, block, rho).unwrap().into();
+    let grid = BlockGrid::new(side, block);
+    let mut rng = Xoshiro256ss::new(31);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let input = dense_3d_static_input(&grid, &a, &b);
+    let alg = Algo3d::new(
+        geo,
+        Arc::new(DenseOps::new(Arc::new(NaiveMultiply))),
+        Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+    );
+    assert_faulted_run_matches(&alg, &input, "dense3d");
+}
+
+#[test]
+fn faulted_dense_2d_matches_fault_free_reference() {
+    let (side, m, rho) = (16usize, 64usize, 2usize);
+    let plan = Plan2d::new(side, m, rho).unwrap();
+    let mut rng = Xoshiro256ss::new(32);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let input = Algo2d::static_input(plan, &a, &b);
+    let alg = Algo2d::new(
+        plan,
+        Arc::new(NaiveMultiply),
+        Box::new(BalancedPartitioner2d {
+            strips: plan.strips(),
+            rho,
+        }),
+    );
+    assert_faulted_run_matches(&alg, &input, "dense2d");
+}
+
+#[test]
+fn faulted_sparse_3d_matches_fault_free_reference() {
+    let (side, block, rho) = (32usize, 8usize, 2usize);
+    let plan = SparsePlan::new(side, block, rho, 0.15, 0.4).unwrap();
+    let geo = Geometry {
+        q: plan.q(),
+        rho: plan.rho,
+    };
+    let mut rng = Xoshiro256ss::new(33);
+    let a = gen::erdos_renyi_coo(side, 0.15, &mut rng);
+    let b = gen::erdos_renyi_coo(side, 0.15, &mut rng);
+    let input = sparse_3d_static_input(block, &a, &b);
+    let alg = Algo3d::new(
+        geo,
+        Arc::new(SparseOps),
+        Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+    );
+    assert_faulted_run_matches(&alg, &input, "sparse3d");
+}
+
+/// A disabled `FaultPlan` must be free: `set_faults` strips it, the run
+/// stays on the fault-free path bit for bit, no fault counter moves, no
+/// trace event or recorder buffer appears, and the plan itself holds no
+/// allocation.
+#[test]
+fn disabled_fault_plan_adds_nothing() {
+    use crate::fault::{FaultContext, FaultPlan, FaultSpec, NodeSet};
+    let _guard = crate::trace::exclusive();
+    crate::trace::disable();
+    let spans_before = crate::trace::total_recorded();
+    let bufs_before = crate::trace::buffer_count();
+
+    let plan = FaultPlan::none();
+    assert!(!plan.enabled());
+    assert_eq!(plan.capacity(), 0, "a disabled plan must not allocate");
+
+    let (side, block, rho) = (16usize, 4usize, 2usize);
+    let geo: Geometry = Plan3d::new(side, block, rho).unwrap().into();
+    let grid = BlockGrid::new(side, block);
+    let mut rng = Xoshiro256ss::new(34);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let input = dense_3d_static_input(&grid, &a, &b);
+    let alg = Algo3d::new(
+        geo,
+        Arc::new(DenseOps::new(Arc::new(NaiveMultiply))),
+        Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+    );
+    let cfg = engine(4);
+    let fctx = Arc::new(FaultContext::new(NodeSet::new(4, 9), plan, FaultSpec::default()));
+    let mut d = Driver::new(cfg);
+    d.set_faults(fctx.clone());
+    assert!(d.faults().is_none(), "disabled plans are stripped");
+
+    let got = d.run(&alg, &input);
+    let (want_out, want_m) = run_reference(&alg, cfg, &input);
+    assert_metrics_match(&got.metrics.rounds, &want_m, "disabled faults");
+    assert_outputs_match(got.output, want_out, "disabled faults");
+
+    let s = fctx.stats();
+    assert_eq!(s.attempts, 0, "no fault bookkeeping on the disabled path");
+    assert_eq!(got.metrics.total_task_attempts(), 0, "no per-round counters");
+    assert_eq!(d.dfs.replication(), 1, "no replication side effect");
+    assert_eq!(
+        crate::trace::total_recorded(),
+        spans_before,
+        "a disabled plan must record no trace events"
+    );
+    assert_eq!(
+        crate::trace::buffer_count(),
+        bufs_before,
+        "a disabled plan must allocate no recorder buffers"
+    );
+}
+
 /// A key-preserving combiner must leave metrics and outputs identical
 /// between the in-pass combine (new) and the task-wide regroup (old).
 #[test]

@@ -16,6 +16,8 @@ use super::executor::Pool;
 use super::metrics::RoundMetrics;
 use super::shuffle::{merge_slices, MapSlices, PartitionedSink};
 use super::types::{Key, Mapper, Pair, Partitioner, Reducer, Value};
+use crate::fault;
+use crate::fault::FaultContext;
 use crate::trace;
 use crate::trace::SpanKind;
 
@@ -85,6 +87,22 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
         round: usize,
         input: Vec<Pair<K, V>>,
     ) -> (Vec<Pair<K, V>>, RoundMetrics) {
+        self.run_with_faults(pool, round, input, None)
+    }
+
+    /// [`Job::run`] with an optional fault-injection context: map and
+    /// reduce task batches route through [`fault::run_tasks`], so each
+    /// task becomes a retryable attempt homed on a logical node. With
+    /// `faults == None` this is byte-for-byte the fault-free engine —
+    /// the closures run directly on the pool with no extra bookkeeping.
+    pub fn run_with_faults(
+        &self,
+        pool: &Pool,
+        round: usize,
+        input: Vec<Pair<K, V>>,
+        faults: Option<&FaultContext>,
+    ) -> (Vec<Pair<K, V>>, RoundMetrics) {
+        let fault_stats0 = faults.map(|c| c.stats());
         let reduce_tasks = self.config.reduce_tasks;
         let mut metrics = RoundMetrics {
             round,
@@ -116,7 +134,9 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
         let num_map_tasks = self.config.map_tasks.max(1).min(input.len().max(1));
         let map_outputs: Vec<MapSlices<K, V>> = {
             let chunks: Vec<&[Pair<K, V>]> = chunk_evenly(&input, num_map_tasks);
-            pool.run_indexed(chunks.len(), |ti| {
+            // The map closure only reads its chunk, so a retried or
+            // speculative attempt re-runs it safely.
+            fault::run_tasks(faults, pool, round, fault::Phase::Map, chunks.len(), |ti| {
                 let mut sink = PartitionedSink::new(self.partitioner, reduce_tasks);
                 match self.combiner {
                     None => {
@@ -186,8 +206,17 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
             .into_iter()
             .map(|b| Mutex::new(Some(b)))
             .collect();
-        let reduced: Vec<Vec<Pair<K, V>>> = pool.run_indexed(buckets.len(), |ti| {
-            let bucket = buckets[ti].lock().unwrap().take().expect("bucket taken twice");
+        let reexecutable = faults.is_some();
+        let reduce_task = |ti: usize| {
+            // Under fault injection an attempt may run more than once
+            // (retry after a node kill, speculative duplicate), so it
+            // must leave the bucket in place and clone it; the
+            // fault-free path keeps the zero-copy take.
+            let bucket = if reexecutable {
+                buckets[ti].lock().unwrap().clone().expect("bucket present")
+            } else {
+                buckets[ti].lock().unwrap().take().expect("bucket taken twice")
+            };
             let mut out = Vec::new();
             let mut local_max = 0usize;
             for (key, values) in bucket {
@@ -199,7 +228,15 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
             let mut g = max_red_words.lock().unwrap();
             *g = (*g).max(local_max);
             out
-        });
+        };
+        let reduced: Vec<Vec<Pair<K, V>>> = fault::run_tasks(
+            faults,
+            pool,
+            round,
+            fault::Phase::Reduce,
+            buckets.len(),
+            reduce_task,
+        );
         metrics.max_reducer_words = max_red_words.into_inner().unwrap();
         metrics.output_words_per_task = reduced
             .iter()
@@ -227,6 +264,17 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
         } else {
             0.0
         };
+
+        if let (Some(ctx), Some(before)) = (faults, fault_stats0) {
+            let d = ctx.stats().minus(&before);
+            metrics.task_attempts = d.attempts;
+            metrics.task_successes = d.successes;
+            metrics.task_failures = d.failures;
+            metrics.task_retries = d.retries;
+            metrics.tasks_reexecuted = d.reexecuted;
+            metrics.speculative_launched = d.speculative_launched;
+            metrics.speculative_cancelled = d.speculative_cancelled;
+        }
 
         (output, metrics)
     }
@@ -490,6 +538,40 @@ mod tests {
         let (_, m) = run_job(&job, 0, &input);
         assert!(m.pool_utilisation > 0.0, "utilisation recorded: {}", m.pool_utilisation);
         assert_eq!(m.subtasks, 0, "no oversized multiply, no tiles");
+    }
+
+    #[test]
+    fn faulted_round_matches_fault_free_run() {
+        use crate::fault::{FaultContext, FaultPlan, FaultSpec, NodeSet, Phase};
+        let input: Vec<Pair<u32, f32>> = (0..120).map(|i| Pair::new(i % 11, 1.0)).collect();
+        let reducer = FnReducer::new(|_r, k: &u32, vs: Vec<f32>, emit: &mut dyn FnMut(u32, f32)| {
+            emit(*k, vs.iter().sum());
+        });
+        let job = Job {
+            config: cfg(),
+            combiner: None,
+            mapper: &IdentityMapper,
+            reducer: &reducer,
+            partitioner: &HashPartitioner,
+        };
+        let (mut base, base_m) = run_job(&job, 0, &input);
+        assert_eq!(base_m.task_attempts, 0, "fault-free path records no attempts");
+        let plan = FaultPlan::none()
+            .with_kill(0, Phase::Map, 0)
+            .with_transient(0, Phase::Reduce, 1, 1);
+        let ctx = FaultContext::new(NodeSet::new(4, 3), plan, FaultSpec::default());
+        let pool = Pool::new(job.config.workers);
+        let (mut out, m) = job.run_with_faults(&pool, 0, input, Some(&ctx));
+        base.sort_by_key(|p| p.key);
+        out.sort_by_key(|p| p.key);
+        assert_eq!(base, out, "faults must not change the output");
+        assert!(m.tasks_reexecuted > 0, "the killed node's map tasks re-ran");
+        assert!(m.task_failures >= 2, "kill victims + injected transient");
+        assert_eq!(
+            m.task_attempts,
+            m.task_successes + m.task_failures + m.speculative_cancelled,
+            "attempt identity"
+        );
     }
 
     #[test]

@@ -71,6 +71,27 @@ pub struct RoundMetrics {
     pub kernel_time: Duration,
     /// Wall time for materialising output to the DFS.
     pub write_time: Duration,
+    /// Task attempts started under fault injection (map + reduce,
+    /// including lost, retried, and speculative attempts). 0 on the
+    /// fault-free path.
+    pub task_attempts: usize,
+    /// Attempts that committed a result.
+    pub task_successes: usize,
+    /// Attempts that failed (injected transient fault, node killed
+    /// mid-flight, or a panic in task code).
+    pub task_failures: usize,
+    /// Failures followed by another attempt (bounded by
+    /// `FaultSpec::max_attempts`).
+    pub task_retries: usize,
+    /// Tasks re-executed because their logical node died under them.
+    pub tasks_reexecuted: usize,
+    /// Speculative duplicate attempts launched against stragglers.
+    pub speculative_launched: usize,
+    /// Attempts cancelled because the rival attempt committed first.
+    pub speculative_cancelled: usize,
+    /// 1 when this round lost a node and no DFS replica existed, so
+    /// recovery degraded to the documented whole-round fallback.
+    pub recovery_fallbacks: usize,
 }
 
 impl RoundMetrics {
@@ -174,6 +195,53 @@ impl JobMetrics {
     /// split across the pool).
     pub fn total_subtasks(&self) -> usize {
         self.rounds.iter().map(|r| r.subtasks).sum()
+    }
+
+    /// Total task attempts under fault injection across rounds.
+    pub fn total_task_attempts(&self) -> usize {
+        self.rounds.iter().map(|r| r.task_attempts).sum()
+    }
+
+    /// Total committing attempts under fault injection across rounds.
+    pub fn total_task_successes(&self) -> usize {
+        self.rounds.iter().map(|r| r.task_successes).sum()
+    }
+
+    /// Total failed attempts across rounds.
+    pub fn total_task_failures(&self) -> usize {
+        self.rounds.iter().map(|r| r.task_failures).sum()
+    }
+
+    /// Total retries across rounds.
+    pub fn total_task_retries(&self) -> usize {
+        self.rounds.iter().map(|r| r.task_retries).sum()
+    }
+
+    /// Total node-loss re-executions across rounds.
+    pub fn total_tasks_reexecuted(&self) -> usize {
+        self.rounds.iter().map(|r| r.tasks_reexecuted).sum()
+    }
+
+    /// Total speculative duplicates launched across rounds.
+    pub fn total_speculative_launched(&self) -> usize {
+        self.rounds.iter().map(|r| r.speculative_launched).sum()
+    }
+
+    /// Total attempts cancelled by a winning rival across rounds.
+    pub fn total_speculative_cancelled(&self) -> usize {
+        self.rounds.iter().map(|r| r.speculative_cancelled).sum()
+    }
+
+    /// Rounds that recovered from a node loss (re-executed at least
+    /// one task instead of discarding the round).
+    pub fn rounds_recovered(&self) -> usize {
+        self.rounds.iter().filter(|r| r.tasks_reexecuted > 0).count()
+    }
+
+    /// Rounds whose recovery degraded to the whole-round fallback
+    /// because no DFS replica existed.
+    pub fn total_recovery_fallbacks(&self) -> usize {
+        self.rounds.iter().map(|r| r.recovery_fallbacks).sum()
     }
 
     /// Mean per-round pool utilisation (0 when no rounds ran).
@@ -286,6 +354,34 @@ mod tests {
         assert!((w.kernel_secs - 0.008).abs() < 1e-12);
         assert!((w.total_secs() - r.total_time().as_secs_f64()).abs() < 1e-12);
         assert!((w.idle_secs - 0.037 * 0.25).abs() < 1e-12, "wall × (1 − utilisation)");
+    }
+
+    #[test]
+    fn fault_counters_aggregate() {
+        let mut a = mk(0, 1, 1);
+        a.task_attempts = 10;
+        a.task_successes = 8;
+        a.task_failures = 1;
+        a.task_retries = 1;
+        a.tasks_reexecuted = 1;
+        a.speculative_launched = 1;
+        a.speculative_cancelled = 1;
+        let mut b = mk(1, 1, 1);
+        b.task_attempts = 4;
+        b.task_successes = 4;
+        b.recovery_fallbacks = 1;
+        let j = JobMetrics { rounds: vec![a, b] };
+        assert_eq!(j.total_task_attempts(), 14);
+        assert_eq!(j.total_task_successes(), 12);
+        assert_eq!(j.total_task_failures(), 1);
+        assert_eq!(j.total_task_retries(), 1);
+        assert_eq!(j.total_tasks_reexecuted(), 1);
+        assert_eq!(j.total_speculative_launched(), 1);
+        assert_eq!(j.total_speculative_cancelled(), 1);
+        assert_eq!(j.rounds_recovered(), 1, "only round 0 re-executed tasks");
+        assert_eq!(j.total_recovery_fallbacks(), 1);
+        let fresh = mk(2, 1, 1);
+        assert_eq!(fresh.task_attempts, 0, "fault-free rounds stay zero");
     }
 
     #[test]

@@ -247,6 +247,13 @@ pub trait ActiveJob: Send {
         let _ = profile;
         false
     }
+    /// Install a fault-injection context on the job's rounds (see
+    /// [`crate::mapreduce::Driver::set_faults`]): subsequent rounds run
+    /// under the context's seeded plan, recovering in-round. Default is
+    /// a no-op so fault-oblivious job types stay valid.
+    fn set_faults(&mut self, faults: Arc<crate::fault::FaultContext>) {
+        let _ = faults;
+    }
     /// Consume the finished job, returning its product and engine
     /// metrics. Panics if not [`is_done`](Self::is_done).
     fn finish(self: Box<Self>) -> (JobOutput, JobMetrics);
@@ -288,6 +295,9 @@ impl<A: MultiRoundAlgorithm + Send + 'static> ActiveJob for SteppedJob<A> {
     }
     fn repredict(&mut self, profile: &ClusterProfile) {
         self.predicted = (self.predictor)(profile);
+    }
+    fn set_faults(&mut self, faults: Arc<crate::fault::FaultContext>) {
+        self.run.set_faults(faults);
     }
     fn finish(self: Box<Self>) -> (JobOutput, JobMetrics) {
         let this = *self;
@@ -372,6 +382,9 @@ impl ActiveJob for Dense3dJob {
         }
         self.refresh(profile);
         true
+    }
+    fn set_faults(&mut self, faults: Arc<crate::fault::FaultContext>) {
+        self.run.set_faults(faults);
     }
     fn finish(self: Box<Self>) -> (JobOutput, JobMetrics) {
         let this = *self;
@@ -629,6 +642,54 @@ mod tests {
     fn job_rounds_with_one_retry() -> usize {
         // q/ρ + 1 = 5 logical rounds + 1 discarded attempt.
         6
+    }
+
+    #[test]
+    fn faulted_jobs_of_every_kind_step_to_exact_products() {
+        use crate::fault::{FaultContext, FaultPlan, FaultSpec, NodeSet};
+        for kind in [
+            JobKind::Dense3d {
+                side: 16,
+                block_side: 4,
+                rho: 2,
+            },
+            JobKind::Dense2d {
+                side: 16,
+                block_side: 8,
+                rho: 2,
+            },
+            JobKind::Sparse3d {
+                side: 64,
+                block_side: 16,
+                rho: 2,
+                nnz_per_row: 6,
+            },
+        ] {
+            let s = spec(kind);
+            let mut job = spawn_job(&s, engine(), Arc::new(NaiveMultiply)).unwrap();
+            let seed = 77;
+            job.set_faults(Arc::new(FaultContext::new(
+                NodeSet::new(4, seed),
+                FaultPlan::seeded(seed, job.num_rounds(), 4),
+                FaultSpec::default(),
+            )));
+            while !job.is_done() {
+                job.step_commit();
+            }
+            let (out, metrics) = job.finish();
+            assert!(out.matches(&s), "{kind:?} product must survive the chaos plan");
+            assert!(
+                metrics.total_task_failures() > 0,
+                "{kind:?}: the seeded plan must actually injure the run"
+            );
+            assert_eq!(
+                metrics.total_task_attempts(),
+                metrics.total_task_successes()
+                    + metrics.total_task_failures()
+                    + metrics.total_speculative_cancelled(),
+                "{kind:?}: counter identity"
+            );
+        }
     }
 
     #[test]

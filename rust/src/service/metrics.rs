@@ -41,6 +41,11 @@ pub struct JobReport {
     pub preemptions: usize,
     /// Measured engine wall time across all round attempts, seconds.
     pub wall_secs: f64,
+    /// Virtual work re-executed for in-round node recovery, seconds
+    /// (the node-granular counterpart of `discarded_secs`).
+    pub recovered_secs: f64,
+    /// Node-granular strikes this job absorbed without losing a round.
+    pub node_strikes: usize,
 }
 
 impl JobReport {
@@ -60,6 +65,8 @@ impl JobReport {
             discarded_secs: 0.0,
             preemptions: 0,
             wall_secs: 0.0,
+            recovered_secs: 0.0,
+            node_strikes: 0,
         }
     }
 
@@ -156,6 +163,18 @@ impl ServiceMetrics {
         self.jobs.iter().map(|j| j.preemptions).sum()
     }
 
+    /// Total virtual work re-executed for in-round node recovery —
+    /// compare against [`total_discarded_secs`](Self::total_discarded_secs)
+    /// to price node-granular strikes against whole-round discards.
+    pub fn total_recovered_secs(&self) -> f64 {
+        self.jobs.iter().map(|j| j.recovered_secs).sum()
+    }
+
+    /// Total node-granular strikes absorbed in-round.
+    pub fn total_node_strikes(&self) -> usize {
+        self.jobs.iter().map(|j| j.node_strikes).sum()
+    }
+
     /// Per-tenant aggregates, sorted by tenant id.
     pub fn by_tenant(&self) -> Vec<TenantSummary> {
         let mut tenants: Vec<usize> = self.jobs.iter().map(|j| j.tenant).collect();
@@ -183,7 +202,7 @@ impl ServiceMetrics {
     pub fn table(&self) -> String {
         let mut t = Table::new(&[
             "job", "tenant", "kind", "rounds", "arrive", "wait(s)", "sojourn(s)", "service(s)",
-            "lost(s)", "preempt",
+            "lost(s)", "preempt", "recov(s)", "strikes",
         ]);
         for j in &self.jobs {
             t.row(&[
@@ -197,6 +216,8 @@ impl ServiceMetrics {
                 format!("{:.1}", j.service_secs),
                 format!("{:.1}", j.discarded_secs),
                 j.preemptions.to_string(),
+                format!("{:.1}", j.recovered_secs),
+                j.node_strikes.to_string(),
             ]);
         }
         t.render()

@@ -28,7 +28,10 @@
 //! * [`spot`] — spot-market semantics: injected preemptions discard
 //!   only the in-flight round of the victim job (generalising
 //!   [`crate::mapreduce::Driver::run_preempted`] to a multi-job
-//!   setting), plus a pure replay used at paper scale.
+//!   setting), plus a pure replay used at paper scale. With
+//!   [`spot::StrikeMode::NodeGranular`] a strike instead kills one
+//!   logical node and the round recovers in place via the engine's
+//!   [`crate::fault`] machinery.
 //! * [`workload`] — deterministic seeded workload generator (arrival
 //!   process over mixed job sizes and tenants).
 //! * [`metrics`] — per-job / per-tenant service metrics: queue wait,
@@ -49,5 +52,8 @@ pub use job::{
 };
 pub use metrics::{JobReport, ServiceMetrics, TenantSummary};
 pub use scheduler::{run_service, CompletedJob, Policy, RoundTrace, ServiceConfig, ServiceOutcome};
-pub use spot::{poisson_preemptions, replay_with_preemptions, SpotReplay};
+pub use spot::{
+    poisson_preemptions, replay_with_node_strikes, replay_with_preemptions, NodeStrikeReplay,
+    SpotReplay, StrikeMode,
+};
 pub use workload::{generate, skewed, WorkloadConfig};

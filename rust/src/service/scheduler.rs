@@ -45,8 +45,11 @@ use crate::simulator::{ClusterProfile, ProfileTracker};
 use crate::trace;
 use crate::trace::ServiceEventKind;
 
+use crate::fault::{FaultContext, FaultPlan, FaultSpec, NodeSet};
+
 use super::job::{spawn_job_on, ActiveJob, JobOutput, JobSpec};
 use super::metrics::{JobReport, ServiceMetrics};
+use super::spot::StrikeMode;
 
 /// Round-selection policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -107,6 +110,20 @@ pub struct ServiceConfig {
     /// with it on, schedules track the live machine instead of being
     /// bit-reproducible across hosts.
     pub recalibrate: bool,
+    /// What a spot strike takes down: the legacy whole-round discard,
+    /// or one logical node with in-round recovery (the fault-tolerant
+    /// path). Both modes replay the same strike schedule, so their
+    /// [`ServiceMetrics`] are directly comparable.
+    pub strike_mode: StrikeMode,
+    /// When set, every admitted job gets a seeded
+    /// [`FaultPlan`](crate::fault::FaultPlan) (`seed ^ job id`) on
+    /// `fault_nodes` logical nodes: node kills, stragglers, and
+    /// transient task failures inside rounds, recovered by the engine's
+    /// retry/replica machinery without changing any product.
+    pub fault_seed: Option<u64>,
+    /// Logical nodes per job's fault domain (clamped to ≥ 2 so seeded
+    /// kills have a survivor to recover onto).
+    pub fault_nodes: usize,
 }
 
 impl ServiceConfig {
@@ -119,6 +136,9 @@ impl ServiceConfig {
             preemptions: vec![],
             profile: ClusterProfile::inhouse(),
             recalibrate: false,
+            strike_mode: StrikeMode::WholeRound,
+            fault_seed: None,
+            fault_nodes: 4,
         }
     }
 }
@@ -315,7 +335,19 @@ pub fn run_service(
         while arrivals.peek().is_some_and(|s| s.arrival_secs <= clock) {
             let spec = arrivals.next().unwrap();
             let profile = tracker.profile();
-            let job = spawn_job_on(&spec, cfg.engine, backend.clone(), pool.clone(), &profile)?;
+            let mut job = spawn_job_on(&spec, cfg.engine, backend.clone(), pool.clone(), &profile)?;
+            if let Some(seed) = cfg.fault_seed {
+                // Per-job fault domain: a seeded chaos plan (kills,
+                // stragglers, transient failures) the engine recovers
+                // from in-round without changing the product.
+                let nodes = cfg.fault_nodes.max(2);
+                let s = seed ^ spec.id as u64;
+                job.set_faults(Arc::new(FaultContext::new(
+                    NodeSet::new(nodes, s),
+                    FaultPlan::seeded(s, job.num_rounds(), nodes),
+                    FaultSpec::default(),
+                )));
+            }
             let report = JobReport::submitted(&spec, job.num_rounds());
             active.push(Entry { spec, job, report });
         }
@@ -458,6 +490,47 @@ pub fn run_service(
 
         let strike = next_preempt < preempts.len() && preempts[next_preempt] < clock + pred;
         if strike {
+            if let StrikeMode::NodeGranular { fraction } = cfg.strike_mode {
+                // The strike kills one logical node — `fraction` of the
+                // cluster — and the round recovers in place: survivors
+                // re-execute the dead node's share of the partial work
+                // from DFS replicas and the round still commits. No
+                // preemption is booked, so the
+                // `rounds_executed == rounds_total + preemptions`
+                // invariant is carried by the commit alone.
+                let at = preempts[next_preempt];
+                next_preempt += 1;
+                trace::record_event(
+                    ServiceEventKind::NodeStrike,
+                    trace_run,
+                    e.spec.id,
+                    None,
+                    round,
+                    at,
+                );
+                trace::set_current_job(e.spec.id as u64);
+                let m = e.job.step_commit();
+                trace::clear_current_job();
+                let recovered = (at - clock) * fraction;
+                e.report.rounds_executed += 1;
+                e.report.service_secs += pred;
+                e.report.wall_secs += m.total_time().as_secs_f64();
+                e.report.recovered_secs += recovered;
+                e.report.node_strikes += 1;
+                *tenant_service.entry(e.spec.tenant).or_default() += pred;
+                trace.push(RoundTrace {
+                    job: e.spec.id,
+                    tenant: e.spec.tenant,
+                    round,
+                    start_secs: clock,
+                    duration_secs: pred + recovered,
+                    committed: true,
+                    gang: false,
+                });
+                clock += pred + recovered;
+                retire_if_done(&mut active, idx, clock, &mut reports, &mut completed);
+                continue;
+            }
             // Spot preemption mid-round: the in-flight round's partial
             // work is lost; committed rounds are untouched and the
             // round re-runs at the job's next turn.
@@ -901,6 +974,91 @@ mod tests {
             assert!(r.rounds_executed >= 1);
             // Holds even when a mid-job replan shrank the schedule:
             // rounds_total is updated alongside the re-plan.
+            assert_eq!(r.rounds_executed, r.rounds_total + r.preemptions);
+        }
+    }
+
+    #[test]
+    fn node_granular_strike_commits_the_round() {
+        let specs = vec![small3d(0, 0, 0.0, 1)];
+        let probe = run(&specs, &cfg(Policy::Fifo));
+        let second = &probe.trace[1];
+        let strike_at = second.start_secs + 0.5 * second.duration_secs;
+
+        let mut c = cfg(Policy::Fifo);
+        c.preemptions = vec![strike_at];
+        c.strike_mode = StrikeMode::NodeGranular { fraction: 0.25 };
+        let out = run(&specs, &c);
+        let r = &out.metrics.jobs[0];
+        assert_eq!(r.preemptions, 0, "nothing was discarded");
+        assert_eq!(r.node_strikes, 1);
+        assert!(r.recovered_secs > 0.0, "the dead node's share re-executed");
+        assert_eq!(r.rounds_executed, r.rounds_total, "every round committed once");
+        assert!(out.trace.iter().all(|t| t.committed), "no discarded attempts");
+        assert!(out.completed[0].output.matches(&specs[0]), "product still exact");
+    }
+
+    #[test]
+    fn node_granular_recovery_is_cheaper_than_whole_round_discard() {
+        // The same job and the same strike instant under both modes:
+        // re-executing one node's share must cost strictly less than
+        // discarding and re-running the whole round.
+        let specs = vec![small3d(0, 0, 0.0, 1)];
+        let probe = run(&specs, &cfg(Policy::Fifo));
+        let second = &probe.trace[1];
+        let strike_at = second.start_secs + 0.5 * second.duration_secs;
+
+        let mut whole = cfg(Policy::Fifo);
+        whole.preemptions = vec![strike_at];
+        let w = run(&specs, &whole);
+
+        let mut node = cfg(Policy::Fifo);
+        node.preemptions = vec![strike_at];
+        node.strike_mode = StrikeMode::NodeGranular { fraction: 0.25 };
+        let n = run(&specs, &node);
+
+        let rw = &w.metrics.jobs[0];
+        let rn = &n.metrics.jobs[0];
+        assert_eq!(rw.preemptions, 1);
+        assert_eq!(rn.preemptions, 0);
+        assert!(
+            rn.recovered_secs < rw.discarded_secs,
+            "redo {} !< discard {}",
+            rn.recovered_secs,
+            rw.discarded_secs
+        );
+        assert!(
+            rn.completion_secs < rw.completion_secs,
+            "in-round recovery must finish sooner on the virtual clock"
+        );
+        assert!(n.completed[0].output.matches(&specs[0]));
+    }
+
+    #[test]
+    fn seeded_fault_plans_leave_service_products_exact() {
+        let specs: Vec<JobSpec> = (0..3).map(|i| small3d(i, i % 2, 0.0, 2)).collect();
+        let mut c = cfg(Policy::Fair);
+        c.fault_seed = Some(99);
+        c.fault_nodes = 4;
+        let out = run(&specs, &c);
+        assert_eq!(out.completed.len(), 3);
+        for cj in &out.completed {
+            assert!(
+                cj.output.matches(&cj.spec),
+                "job {} wrong product under chaos",
+                cj.spec.id
+            );
+        }
+        let sum = |f: &dyn Fn(&crate::mapreduce::JobMetrics) -> usize| -> usize {
+            out.completed.iter().map(|c| f(&c.metrics)).sum()
+        };
+        let attempts = sum(&|m| m.total_task_attempts());
+        let successes = sum(&|m| m.total_task_successes());
+        let failures = sum(&|m| m.total_task_failures());
+        let cancelled = sum(&|m| m.total_speculative_cancelled());
+        assert!(failures > 0, "the seeded plans must actually injure the runs");
+        assert_eq!(attempts, successes + failures + cancelled, "counter identity");
+        for r in &out.metrics.jobs {
             assert_eq!(r.rounds_executed, r.rounds_total + r.preemptions);
         }
     }

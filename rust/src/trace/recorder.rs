@@ -66,6 +66,10 @@ pub enum SpanKind {
     Subtask = 8,
     /// A worker parked on the condvar waiting for work.
     Park = 9,
+    /// A failed task attempt that fed the retry path (fault layer).
+    Retry = 10,
+    /// A speculative duplicate attempt launched against a straggler.
+    Speculate = 11,
 }
 
 impl SpanKind {
@@ -82,6 +86,8 @@ impl SpanKind {
             SpanKind::Steal => "steal",
             SpanKind::Subtask => "subtask",
             SpanKind::Park => "park",
+            SpanKind::Retry => "retry",
+            SpanKind::Speculate => "speculate",
         }
     }
 
@@ -98,6 +104,8 @@ impl SpanKind {
             7 => Some(SpanKind::Steal),
             8 => Some(SpanKind::Subtask),
             9 => Some(SpanKind::Park),
+            10 => Some(SpanKind::Retry),
+            11 => Some(SpanKind::Speculate),
             _ => None,
         }
     }
@@ -321,6 +329,9 @@ pub enum ServiceEventKind {
     SpotStrike,
     /// Online recalibration re-planned / re-priced active jobs.
     Replan,
+    /// A spot strike killed one logical node; the in-flight round
+    /// recovered in place instead of being discarded.
+    NodeStrike,
 }
 
 impl ServiceEventKind {
@@ -331,6 +342,7 @@ impl ServiceEventKind {
             ServiceEventKind::GangPair => "gang_pair",
             ServiceEventKind::SpotStrike => "spot_strike",
             ServiceEventKind::Replan => "replan",
+            ServiceEventKind::NodeStrike => "node_strike",
         }
     }
 }
@@ -449,6 +461,8 @@ mod tests {
             SpanKind::Steal,
             SpanKind::Subtask,
             SpanKind::Park,
+            SpanKind::Retry,
+            SpanKind::Speculate,
         ] {
             assert_eq!(SpanKind::from_u8(k as u8), Some(k));
             assert!(!k.name().is_empty());

@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Structural validator for m3's fault-injection counter output.
+
+Usage: validate_faults.py OUTPUT.txt [OUTPUT.txt ...]
+
+Validates the ``FAULTS`` lines printed by ``m3 chaos`` and
+``m3 serve --faults`` (stdlib only, no third-party deps). Per file:
+
+  1. at least one ``FAULTS attempts=...`` counter line is present;
+  2. the attempt ledger balances: every attempt either committed,
+     failed, or was cancelled by a winning speculative rival
+     (``attempts == successes + failures + spec_cancelled``);
+  3. every retry follows a failure (``retries <= failures``), every
+     re-execution is a failure of a killed-node attempt
+     (``reexecuted <= failures``), and no speculative attempt is
+     cancelled without having been launched
+     (``spec_cancelled <= spec_launched``);
+  4. round recovery accounting is sane on every
+     ``FAULTS rounds ...`` line: ``recovered <= executed`` and
+     ``fallbacks <= recovered`` (a whole-round fallback is only ever
+     booked for a round that needed recovery);
+  5. no ``verify=FAIL`` marker appears anywhere in the output.
+
+Exits non-zero with a diagnostic on the first violation.
+"""
+
+import re
+import sys
+
+COUNTER_LINE = re.compile(
+    r"^FAULTS attempts=(\d+) successes=(\d+) failures=(\d+) retries=(\d+) "
+    r"reexecuted=(\d+) spec_launched=(\d+) spec_cancelled=(\d+)\s*$"
+)
+ROUNDS_LINE = re.compile(
+    r"^FAULTS rounds executed=(\d+) recovered=(\d+) fallbacks=(\d+)\s*$"
+)
+
+
+def fail(msg):
+    print(f"validate_faults: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_counters(path, lineno, m):
+    attempts, successes, failures, retries, reexecuted, launched, cancelled = (
+        int(g) for g in m.groups()
+    )
+    if attempts != successes + failures + cancelled:
+        fail(
+            f"{path}:{lineno}: attempt ledger out of balance: "
+            f"{attempts} != {successes} + {failures} + {cancelled}"
+        )
+    if retries > failures:
+        fail(f"{path}:{lineno}: retries={retries} > failures={failures}")
+    if reexecuted > failures:
+        fail(f"{path}:{lineno}: reexecuted={reexecuted} > failures={failures}")
+    if cancelled > launched:
+        fail(
+            f"{path}:{lineno}: spec_cancelled={cancelled} > "
+            f"spec_launched={launched}"
+        )
+
+
+def check_rounds(path, lineno, m):
+    executed, recovered, fallbacks = (int(g) for g in m.groups())
+    if recovered > executed:
+        fail(f"{path}:{lineno}: recovered={recovered} > executed={executed}")
+    if fallbacks > recovered:
+        fail(f"{path}:{lineno}: fallbacks={fallbacks} > recovered={recovered}")
+
+
+def check_file(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            lines = f.readlines()
+    except OSError as e:
+        fail(f"{path}: cannot read: {e}")
+    counters = rounds = 0
+    for lineno, line in enumerate(lines, start=1):
+        if "verify=FAIL" in line:
+            fail(f"{path}:{lineno}: verification failure reported")
+        m = COUNTER_LINE.match(line)
+        if m:
+            check_counters(path, lineno, m)
+            counters += 1
+            continue
+        m = ROUNDS_LINE.match(line)
+        if m:
+            check_rounds(path, lineno, m)
+            rounds += 1
+    if counters == 0:
+        fail(f"{path}: no 'FAULTS attempts=...' counter line found")
+    return counters, rounds
+
+
+def main(argv):
+    if len(argv) < 2:
+        fail("usage: validate_faults.py OUTPUT.txt [OUTPUT.txt ...]")
+    total_counters = total_rounds = 0
+    for path in argv[1:]:
+        counters, rounds = check_file(path)
+        total_counters += counters
+        total_rounds += rounds
+    print(
+        f"validate_faults: OK: {len(argv) - 1} file(s), "
+        f"{total_counters} counter line(s), {total_rounds} rounds line(s)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
