@@ -512,6 +512,43 @@ mod tests {
     }
 
     #[test]
+    fn probed_flop_rate_flips_the_chosen_plan() {
+        // Seeding the profile from the autotune probe must actually
+        // change planning on a compute-bound shape. With bandwidth and
+        // memory effectively infinite, total cost is flops/rate +
+        // rounds·setup; the product flops are constant across
+        // candidates (2·side³), so the rate only weighs the final sum
+        // round's ρ·n flops against saved rounds. A scalar-era rate
+        // makes the extra accumulators expensive (low ρ, more rounds);
+        // a SIMD-class rate makes rounds the scarce resource (high ρ,
+        // fewer rounds) — exactly the staleness bug this guards.
+        let base = ClusterProfile {
+            name: "compute-bound",
+            nodes: 1,
+            slots_per_node: 1,
+            flops_per_node: 1.0,
+            disk_bw: 1.0e18,
+            net_bw: 1.0e18,
+            round_setup: 1.0,
+            small_chunk_coeff: 0.0,
+            chunk_ref_bytes: 1.0,
+            bytes_per_word: 8.0,
+            spill_factor: 0.0,
+            mem_per_node_bytes: 1.0e18,
+        };
+        let scalar = base.with_probed_flops(2_700.0);
+        let simd = base.with_probed_flops(400_000.0);
+        let (p_scalar, _) = plan_dense3d(64, 768, &scalar).unwrap();
+        let (p_simd, _) = plan_dense3d(64, 768, &simd).unwrap();
+        assert_eq!((p_scalar.block_side, p_scalar.rho), (16, 2));
+        assert_eq!((p_simd.block_side, p_simd.rho), (16, 4));
+        assert!(
+            p_simd.rounds() < p_scalar.rounds(),
+            "faster measured kernels must buy fewer rounds"
+        );
+    }
+
+    #[test]
     fn memory_constrained_context_forces_multi_round() {
         // Shrink the cluster memory until the 3qn-word monolithic round
         // cannot be in flight: the planner must fall back to ρ < q —

@@ -60,7 +60,8 @@ USAGE:
   m3 serve    [--policy fifo|fair|srpt] [--jobs <n>] [--tenants <t>]
               [--seed <u64>] [--mean-arrival <secs>] [--preempt-rate <per-100s>]
               [--auto-fraction <0..1>] [--budget <words>] [--recalibrate]
-              [--profile inhouse|c3|i2] [--backend xla|native|naive|auto]
+              [--profile inhouse|c3|i2] [--paper-flops]
+              [--backend xla|native|naive|auto]
               [--faults] [--fault-nodes <n>] [--strike-fraction <0..1>]
               [--verify] [--report] [--trace] [--out trace.json]
   m3 chaos    [--algo 3d|2d|sparse] [--n <side>] [--block <side>]
@@ -72,7 +73,7 @@ USAGE:
               [--out trace.json]
   m3 plan     [--algo 3d|2d|sparse] --n <side> [--budget <words>]
               [--nnz-per-row <k>] [--profile inhouse|c3|i2] [--nodes <p>]
-              [--mem-per-node-gb <g>]
+              [--mem-per-node-gb <g>] [--paper-flops]
   m3 figures  [--fig <1..10>] [--ablations] [--out-dir figures]
   m3 simulate --profile inhouse|c3|i2 --n <side> --block <side>
               [--rho 1,2,4,8] [--algo 3d|2d] [--nodes <p>]
@@ -165,6 +166,33 @@ fn profile_from(args: &Args) -> Result<ClusterProfile> {
         .get("mem-per-node-gb", profile.mem_per_node_bytes / 1e9)
         .map_err(anyhow::Error::msg)?;
     Ok(profile.with_mem_per_node(mem_gb * 1e9))
+}
+
+/// [`profile_from`], then seed the compute rate from the kernel
+/// autotune probe's measured effective FLOP/s — `m3 plan` and
+/// `m3 serve` price compute at the machine's real (post-SIMD-dispatch)
+/// kernel speed on first contact instead of the paper's 2014 constants.
+/// `--paper-flops` opts out (figure reproduction / comparisons against
+/// the paper's numbers); `simulate` and `figures` always keep the paper
+/// constants.
+fn measured_profile_from(args: &Args) -> Result<ClusterProfile> {
+    let profile = profile_from(args)?;
+    if args.flag("paper-flops") {
+        return Ok(profile);
+    }
+    let rep = m3::runtime::kernels::autotune_report();
+    let seeded = profile.with_probed_flops(rep.effective_flops);
+    eprintln!(
+        "[m3] profile '{}' flops seeded from autotune probe: {:.2} GFLOP/s per slot \
+         ({} {}x{}) -> {:.1} GFLOP/s aggregate (--paper-flops keeps paper constants)",
+        seeded.name,
+        rep.effective_flops / 1e9,
+        rep.features,
+        rep.chosen.mr,
+        rep.chosen.nr,
+        seeded.agg_flops() / 1e9,
+    );
+    Ok(seeded)
 }
 
 fn engine_from(args: &Args) -> Result<EngineConfig> {
@@ -325,7 +353,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine: engine_from(args)?,
         policy,
         preemptions,
-        profile: profile_from(args)?,
+        profile: measured_profile_from(args)?,
         recalibrate: args.flag("recalibrate"),
         strike_mode: if faults {
             StrikeMode::NodeGranular {
@@ -657,7 +685,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let algo = args.opt_or("algo", "3d");
     let n: usize = args.get("n", 16000).map_err(anyhow::Error::msg)?;
     let budget: usize = args.get("budget", 48_000_000).map_err(anyhow::Error::msg)?;
-    let profile = profile_from(args)?;
+    let profile = measured_profile_from(args)?;
     let (chosen_line, search): (String, PlanSearch) = match algo.as_str() {
         "3d" => {
             let (plan, s) = plan_dense3d(n, budget, &profile)?;

@@ -234,6 +234,8 @@ pub fn current_pool_width() -> usize {
 /// steal claims. Falls back to an inline loop when the calling thread
 /// is not inside a pool task (or the fan-out is trivial). Panics in
 /// subtasks propagate as `"worker panicked"` after the set drains.
+/// This is also the fan-out [`crate::runtime::kernels::PackedB`] uses
+/// to pack B panels off the GEMM critical path.
 pub fn run_subtasks<F: Fn(usize) + Sync>(num: usize, f: F) {
     let ctx = CTX.with(|c| c.get());
     let Some(ctx) = ctx else {
@@ -557,8 +559,10 @@ impl Pool {
     }
 
     /// Spawn the persistent worker threads if they are not running yet.
-    /// Also runs the one-shot kernel tile autotune, so the probe's cost
-    /// lands at pool startup rather than inside a timed round.
+    /// Also runs the one-shot kernel tile autotune — which detects the
+    /// host's SIMD features and races scalar against vector microkernel
+    /// shapes — so the probe's cost lands at pool startup rather than
+    /// inside a timed round.
     fn ensure_spawned(&self) {
         let mut handles = self.handles.lock().unwrap_or_else(|e| e.into_inner());
         if handles.is_empty() {

@@ -5,20 +5,30 @@
 //! * [`gemm_acc`] — register-tiled f32 GEMM (`C += A·B`): MR×NR
 //!   register accumulator blocks over packed B column panels, with the
 //!   k-loop tiled so each packed panel stays in cache across all row
-//!   blocks. The MR/NR shape is **autotuned** once per process: a small
-//!   fixed candidate set ([`TILE_CANDIDATES`]) is probed at pool
-//!   startup ([`ensure_tuned`], triggered by the executor's first
-//!   spawn) and the winner is cached — SIMD-width differences between
-//!   hosts pick different register blocks without recompiling.
+//!   blocks. Two microkernel families share one outer loop
+//!   ([`gemm_tiled`]): the portable scalar blocks and — on x86_64
+//!   hosts with AVX2+FMA, detected once at runtime ([`simd_level`]) —
+//!   explicit-SIMD blocks built from 256-bit `_mm256_fmadd_ps`
+//!   accumulators. The dispatch shape is **autotuned** once per
+//!   process: scalar candidates ([`TILE_CANDIDATES`]) and, when the
+//!   host qualifies, vector candidates ([`SIMD_TILE_CANDIDATES`]) are
+//!   probed at pool startup ([`ensure_tuned`], triggered by the
+//!   executor's first spawn) and the winner is cached. The scalar
+//!   microkernel remains the bit-exactness oracle, and setting
+//!   `M3_FORCE_SCALAR=1` (read once, at first kernel use) forces it
+//!   everywhere.
 //! * [`gemm_acc_par`] — the same kernel with **intra-task tile
 //!   parallelism**: when the calling thread is a pool task and the
-//!   product volume crosses [`PAR_MIN_VOLUME`], the C rows are split
-//!   into MR-aligned row panels published as stealable subtasks
-//!   ([`crate::mapreduce::executor::run_subtasks`]). Panels write
-//!   disjoint C row ranges, so no locking — and because every panel
-//!   boundary is a multiple of the register-block height MR, each row
-//!   sees exactly the accumulation order of the sequential kernel: the
-//!   parallel result is **bit-identical** to [`gemm_acc`].
+//!   product volume crosses [`PAR_MIN_VOLUME`], B is packed **once**
+//!   into a shareable, reference-counted [`PackedB`] artifact (the
+//!   panels themselves pack in parallel as stealable subtasks), then
+//!   the C rows split into MR-aligned row panels published as further
+//!   subtasks, every one reusing the same packed panels instead of
+//!   re-packing its own B. Panels write disjoint C row ranges, so no
+//!   locking — and because every panel boundary is a multiple of the
+//!   register-block height MR, each row sees exactly the accumulation
+//!   order of the sequential kernel: the parallel result is
+//!   **bit-identical** to [`gemm_acc`].
 //! * [`gemm_acc_sr`] / [`gemm_acc_sr_par`] — generic tiled semiring
 //!   GEMM (`C ⊕= A ⊗ B`) in the same `i-k-j` contiguous-row layout
 //!   (rows are fully independent, so its row-panel split is trivially
@@ -30,16 +40,24 @@
 //! The naive triple loops in [`crate::matrix::DenseMatrix`]
 //! (`matmul_naive` / `matmul_naive_sr`) remain the correctness oracles;
 //! the property tests below pin each kernel against them bit-for-bit on
-//! integer-valued inputs at shapes that straddle every tile boundary,
-//! and the parallel entry points against their sequential twins
-//! bit-for-bit on *fractional* inputs (which pins the accumulation
-//! order itself).
+//! integer-valued inputs at shapes that straddle every tile boundary
+//! (integer-valued entries make every product and partial sum exactly
+//! representable, so the SIMD kernels' fused multiply-adds agree with
+//! the scalar oracle's separate multiply and add **bit for bit**), and
+//! the parallel entry points against their sequential twins bit-for-bit
+//! on *fractional* inputs (which pins the accumulation order itself).
 //!
-//! The sparse counterpart (epoch-marked Gustavson SpGEMM with the same
-//! row-panel subtask split, merged-row CSR add/sum) lives with the CSR
-//! representation in [`crate::matrix::sparse`].
+//! The autotune probe also measures the winning kernel's effective
+//! FLOP/s ([`AutotuneReport::effective_flops`]); the planner seeds
+//! [`crate::simulator::ClusterProfile`]'s compute rate from it
+//! (`with_probed_flops`), so plan pricing reflects the machine's real
+//! post-SIMD speed rather than the paper's 2014 constants.
+//!
+//! The sparse counterpart (epoch-marked Gustavson SpGEMM with software
+//! prefetch, the same row-panel subtask split, merged-row CSR add/sum)
+//! lives with the CSR representation in [`crate::matrix::sparse`].
 
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use crate::mapreduce::executor::{current_pool_width, run_subtasks, subtask_tiling};
@@ -60,16 +78,107 @@ pub const KB: usize = 256;
 /// Widest candidate NR (sizes the packed-panel scratch buffer).
 pub const NR_MAX: usize = 16;
 
-/// The fixed candidate register-tile shapes the autotuner probes, in
-/// preference order (ties go to the earlier entry). `(4, 8)` is the
-/// portable default; wider NR suits 8-lane SIMD, taller MR suits
-/// register-rich targets.
+/// The scalar register-tile shapes the autotuner probes, in preference
+/// order (ties go to the earlier entry). `(4, 8)` is the portable
+/// default; wider NR suits 8-lane SIMD, taller MR suits register-rich
+/// targets.
 pub const TILE_CANDIDATES: &[(usize, usize)] = &[(4, 8), (8, 8), (4, 16), (2, 16)];
+
+/// The explicit-SIMD register-tile shapes probed *in addition* when the
+/// host has AVX2+FMA: NR is a multiple of the 8-lane `__m256` width, so
+/// `(6, 16)` holds 12 vector accumulators + 2 panel vectors in the 16
+/// ymm registers and `(8, 8)` trades panel reuse for a taller block.
+pub const SIMD_TILE_CANDIDATES: &[(usize, usize)] = &[(6, 16), (4, 16), (8, 8)];
 
 /// Product volume `m·k·n` below which a local GEMM is not worth
 /// splitting into stealable tiles (a 64³ block product sits exactly on
 /// the threshold).
 pub const PAR_MIN_VOLUME: usize = 64 * 64 * 64;
+
+/// The instruction-set level the runtime dispatcher detected, resolved
+/// once per process ([`simd_level`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// No usable vector extensions (or a non-x86_64 target): the
+    /// portable scalar microkernels run everywhere.
+    Scalar,
+    /// `M3_FORCE_SCALAR` was set: scalar microkernels forced even on
+    /// capable hardware (the bit-exactness escape hatch).
+    ScalarForced,
+    /// AVX2 + FMA detected: 256-bit fused-multiply-add microkernels
+    /// join the autotune candidate set.
+    Avx2Fma,
+}
+
+impl SimdLevel {
+    /// Human/JSON label for the detected features.
+    pub fn features(self) -> &'static str {
+        match self {
+            SimdLevel::Avx2Fma => "avx2+fma",
+            SimdLevel::ScalarForced => "scalar (M3_FORCE_SCALAR)",
+            SimdLevel::Scalar => "scalar (portable)",
+        }
+    }
+
+    /// Whether the explicit-SIMD microkernels are eligible.
+    pub fn is_simd(self) -> bool {
+        matches!(self, SimdLevel::Avx2Fma)
+    }
+}
+
+static SIMD_LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+
+/// The detected dispatch level, resolved once: `M3_FORCE_SCALAR` (any
+/// value but `0`) wins, then CPU feature detection. Cached for the
+/// whole process so dispatch — and therefore bit-level results — never
+/// changes mid-run.
+pub fn simd_level() -> SimdLevel {
+    *SIMD_LEVEL.get_or_init(|| {
+        if std::env::var_os("M3_FORCE_SCALAR").is_some_and(|v| v != "0") {
+            return SimdLevel::ScalarForced;
+        }
+        detect_simd()
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_simd() -> SimdLevel {
+    if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+        SimdLevel::Avx2Fma
+    } else {
+        SimdLevel::Scalar
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_simd() -> SimdLevel {
+    SimdLevel::Scalar
+}
+
+/// A dispatchable register-tile shape: the `(mr, nr)` register block
+/// and which microkernel family (explicit SIMD or portable scalar)
+/// runs it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelShape {
+    /// Register-block rows.
+    pub mr: usize,
+    /// Register-block columns (= packed-panel width).
+    pub nr: usize,
+    /// `true` → the AVX2/FMA microkernel; `false` → the scalar oracle.
+    pub simd: bool,
+}
+
+impl KernelShape {
+    /// Display label, e.g. `6x16 (simd)`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}x{}{}",
+            self.mr,
+            self.nr,
+            if self.simd { " (simd)" } else { "" }
+        )
+    }
+}
 
 /// Pack the `[k0, k1) × [j0, j0+nr)` tile of row-major `b` into
 /// `packb` so the microkernel reads it as contiguous nr-wide rows.
@@ -89,92 +198,294 @@ fn pack_b_panel(
     }
 }
 
-/// MRV×NRV microkernel: accumulate the k-tile product into the register
-/// block, then flush it into `c_tile`. `a_tile`/`c_tile` are the full
-/// row-major slices offset to the block's top-left corner (strides
-/// `lda`/`ldc`). The `MRV`/`NRV` loops have constant bounds, so they
-/// unroll into straight-line FMAs.
-#[inline]
-fn microkernel<const MRV: usize, const NRV: usize>(
+/// Raw-pointer microkernel signature shared by the scalar and SIMD
+/// variants, so one outer loop ([`gemm_tiled`]) drives both.
+///
+/// Contract (callers must uphold): `a_tile` covers the block's rows at
+/// stride `lda ≥ kt`, `packb` holds `kt` packed rows of the block's
+/// width, `c_tile` covers the block at stride `ldc ≥` block width —
+/// and for SIMD variants the CPU features they were compiled for are
+/// present (guaranteed by [`micro_for`] only returning them when
+/// [`simd_level`] detected the features).
+type MicroFn = unsafe fn(usize, *const f32, usize, *const f32, *mut f32, usize);
+
+/// Scalar MRV×NRV microkernel: accumulate the k-tile product into the
+/// register block, then flush it into `c_tile`. The `MRV`/`NRV` loops
+/// have constant bounds, so they unroll into straight-line mul/adds.
+/// This is the bit-exactness oracle the SIMD variants are pinned
+/// against.
+///
+/// # Safety
+/// See [`MicroFn`]: `a_tile`/`packb`/`c_tile` must cover the block.
+unsafe fn micro_scalar<const MRV: usize, const NRV: usize>(
     kt: usize,
-    a_tile: &[f32],
+    a_tile: *const f32,
     lda: usize,
-    packb: &[f32],
-    c_tile: &mut [f32],
+    packb: *const f32,
+    c_tile: *mut f32,
     ldc: usize,
 ) {
     let mut acc = [[0.0f32; NRV]; MRV];
     for kk in 0..kt {
-        let bp = &packb[kk * NRV..kk * NRV + NRV];
+        let bp = packb.add(kk * NRV);
         for (r, accr) in acc.iter_mut().enumerate() {
-            let av = a_tile[r * lda + kk];
-            for jj in 0..NRV {
-                accr[jj] += av * bp[jj];
+            let av = *a_tile.add(r * lda + kk);
+            for (jj, slot) in accr.iter_mut().enumerate() {
+                *slot += av * *bp.add(jj);
             }
         }
     }
     for (r, accr) in acc.iter().enumerate() {
-        let crow = &mut c_tile[r * ldc..r * ldc + NRV];
-        for jj in 0..NRV {
-            crow[jj] += accr[jj];
+        let crow = c_tile.add(r * ldc);
+        for (jj, &v) in accr.iter().enumerate() {
+            *crow.add(jj) += v;
         }
     }
 }
 
-/// Register-tiled `c += a·b` at a fixed MRV×NRV register-block shape.
-/// Full tiles go through the packed microkernel; row and column
-/// remainders fall back to the scalar row loop so every shape is
-/// supported.
-fn gemm_acc_shape<const MRV: usize, const NRV: usize>(
-    m: usize,
+/// Explicit-SIMD microkernels: 256-bit FMA accumulators over the same
+/// packed panels (and in the same k order) as the scalar path.
+#[cfg(target_arch = "x86_64")]
+mod avx {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps, _mm256_setzero_ps,
+        _mm256_storeu_ps,
+    };
+
+    /// MRV×(NV·8) register block: NV `__m256` accumulators per row,
+    /// filled by one fused multiply-add per (row, vector, k) and
+    /// flushed with one add per vector. The fused op rounds once where
+    /// the scalar oracle rounds twice, so general fp inputs may differ
+    /// in the last bit — on exactly-representable products (the
+    /// integer-valued test inputs) the two agree bit for bit.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA at runtime; bounds as in
+    /// [`super::MicroFn`].
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn microkernel_fma<const MRV: usize, const NV: usize>(
+        kt: usize,
+        a_tile: *const f32,
+        lda: usize,
+        packb: *const f32,
+        c_tile: *mut f32,
+        ldc: usize,
+    ) {
+        let mut acc = [[_mm256_setzero_ps(); NV]; MRV];
+        for kk in 0..kt {
+            let bp = packb.add(kk * NV * 8);
+            let mut bv = [_mm256_setzero_ps(); NV];
+            for (v, slot) in bv.iter_mut().enumerate() {
+                *slot = _mm256_loadu_ps(bp.add(v * 8));
+            }
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_ps(*a_tile.add(r * lda + kk));
+                for (v, slot) in accr.iter_mut().enumerate() {
+                    *slot = _mm256_fmadd_ps(av, bv[v], *slot);
+                }
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            for (v, slot) in accr.iter().enumerate() {
+                let cptr = c_tile.add(r * ldc + v * 8);
+                _mm256_storeu_ps(cptr, _mm256_add_ps(_mm256_loadu_ps(cptr), *slot));
+            }
+        }
+    }
+
+    /// Register-resident FMA chain with no memory traffic: the densest
+    /// sustained sequence the microkernels could possibly issue —
+    /// the empirical "peak" that EXPERIMENTS.md's peak-fraction
+    /// methodology divides by. Returns `(flops, sink)`.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA at runtime.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn peak_fma(iters: usize) -> (f64, f32) {
+        const VECS: usize = 10;
+        let x = _mm256_set1_ps(std::hint::black_box(0.999_f32));
+        let y = _mm256_set1_ps(std::hint::black_box(1.0e-3_f32));
+        let mut acc = [_mm256_setzero_ps(); VECS];
+        for _ in 0..iters {
+            for slot in acc.iter_mut() {
+                // Fixed point ≈ y/(1-x): stays bounded for any iters.
+                *slot = _mm256_fmadd_ps(*slot, x, y);
+            }
+        }
+        let mut buf = [0.0f32; 8];
+        let mut sink = 0.0f32;
+        for slot in &acc {
+            _mm256_storeu_ps(buf.as_mut_ptr(), *slot);
+            sink += buf.iter().sum::<f32>();
+        }
+        ((2 * VECS * 8 * iters) as f64, sink)
+    }
+}
+
+/// Resolve the microkernel for a dispatch shape. SIMD shapes resolve
+/// to the FMA variants only when [`simd_level`] actually detected the
+/// features (so a forged `simd: true` on incapable hardware degrades
+/// to the scalar twin instead of executing illegal instructions);
+/// unknown shapes fall back to the default `(MR, NR)` scalar block.
+fn micro_for(shape: KernelShape) -> MicroFn {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if shape.simd && simd_level().is_simd() {
+            return match (shape.mr, shape.nr) {
+                (6, 16) => avx::microkernel_fma::<6, 2>,
+                (8, 8) => avx::microkernel_fma::<8, 1>,
+                _ => avx::microkernel_fma::<4, 2>,
+            };
+        }
+    }
+    match (shape.mr, shape.nr) {
+        (8, 8) => micro_scalar::<8, 8>,
+        (6, 16) => micro_scalar::<6, 16>,
+        (4, 16) => micro_scalar::<4, 16>,
+        (2, 16) => micro_scalar::<2, 16>,
+        _ => micro_scalar::<MR, NR>,
+    }
+}
+
+/// All full-width B panels of one multiply, packed once and shared:
+/// [`gemm_acc_par`] wraps one in an [`Arc`] and every row-panel
+/// subtask reads the same reference-counted artifact instead of
+/// re-packing its own copy of B.
+///
+/// Layout: panel `(t, p)` — k-tile `t`, `nr`-wide column panel `p` —
+/// lives at offset `(t·panels + p)·KB·nr`, stored as `kt` contiguous
+/// `nr`-wide rows (a short final k-tile leaves its tail rows unused).
+/// The trailing `n % nr` columns are *not* packed; the outer loop
+/// reads them straight from `b`, exactly as the stack-packing path
+/// does.
+pub struct PackedB {
+    nr: usize,
     k: usize,
-    n: usize,
+    panels: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack every full `nr`-wide panel of row-major `b` (`k×n`). When
+    /// the caller is a pool task, the `(k-tile, panel)` pairs pack in
+    /// parallel as stealable subtasks
+    /// ([`crate::mapreduce::executor::run_subtasks`] runs them inline
+    /// otherwise); the packed bytes are identical either way.
+    pub fn pack(b: &[f32], k: usize, n: usize, nr: usize) -> Self {
+        debug_assert_eq!(b.len(), k * n);
+        let n_main = n - n % nr;
+        let panels = n_main / nr;
+        let ktiles = k.div_ceil(KB);
+        let stride = KB * nr;
+        let mut data = vec![0.0f32; ktiles * panels * stride];
+        if panels > 0 && ktiles > 0 {
+            let dp = SendPtr(data.as_mut_ptr());
+            run_subtasks(ktiles * panels, |idx| {
+                let t = idx / panels;
+                let p = idx % panels;
+                let k0 = t * KB;
+                let k1 = (k0 + KB).min(k);
+                // SAFETY: each (t, p) pair owns a disjoint `stride`
+                // slice of `data`, and `run_subtasks` joins before
+                // `data` is read.
+                let dst =
+                    unsafe { std::slice::from_raw_parts_mut(dp.0.add(idx * stride), stride) };
+                pack_b_panel(b, n, k0, k1, p * nr, nr, dst);
+            });
+        }
+        PackedB {
+            nr,
+            k,
+            panels,
+            data,
+        }
+    }
+
+    /// The packed `(k-tile t, panel p)` slice: `kt` rows of `nr`.
+    fn panel(&self, t: usize, p: usize) -> &[f32] {
+        let kt = (self.k - t * KB).min(KB);
+        let base = (t * self.panels + p) * KB * self.nr;
+        &self.data[base..base + kt * self.nr]
+    }
+}
+
+/// The shared packed-panel outer loop: k-tiles × column panels × row
+/// blocks. Full tiles go through `shape`'s microkernel; the row
+/// remainder runs against the packed panel and the column remainder
+/// through the scalar row loop, so every shape is supported and both
+/// microkernel families see the identical loop structure (and
+/// therefore the identical per-element accumulation order).
+///
+/// `packed`: pre-packed panels to reuse ([`PackedB`]); `None` packs
+/// each panel into stack scratch on the fly. The packed panel bytes
+/// are the same either way, so the two modes are bit-identical.
+fn gemm_tiled(
+    shape: KernelShape,
+    (m, k, n): (usize, usize, usize),
     a: &[f32],
     b: &[f32],
     c: &mut [f32],
+    packed: Option<&PackedB>,
 ) {
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    let n_main = n - n % NRV; // columns covered by full packed panels
-    let m_main = m - m % MRV; // rows covered by full register blocks
-    let mut packb = [0.0f32; KB * NR_MAX];
+    let (mr, nr) = (shape.mr, shape.nr);
+    let micro = micro_for(shape);
+    let n_main = n - n % nr; // columns covered by full packed panels
+    let m_main = m - m % mr; // rows covered by full register blocks
+    let mut scratch = [0.0f32; KB * NR_MAX];
     let mut k0 = 0;
+    let mut t = 0; // k-tile index
     while k0 < k {
         let k1 = (k0 + KB).min(k);
         let kt = k1 - k0;
         let mut j0 = 0;
+        let mut p = 0; // panel index
         while j0 < n_main {
-            // One pack per (k-tile, panel) amortised over all m/MRV
-            // register blocks.
-            pack_b_panel(b, n, k0, k1, j0, NRV, &mut packb);
+            let panel: &[f32] = match packed {
+                Some(pb) => pb.panel(t, p),
+                None => {
+                    // One pack per (k-tile, panel) amortised over all
+                    // m/mr register blocks.
+                    pack_b_panel(b, n, k0, k1, j0, nr, &mut scratch);
+                    &scratch[..kt * nr]
+                }
+            };
             let mut i0 = 0;
             while i0 < m_main {
-                microkernel::<MRV, NRV>(
-                    kt,
-                    &a[i0 * k + k0..],
-                    k,
-                    &packb,
-                    &mut c[i0 * n + j0..],
-                    n,
-                );
-                i0 += MRV;
+                // SAFETY: the tile is in bounds by construction
+                // (i0+mr ≤ m, j0+nr ≤ n, panel holds kt·nr floats) and
+                // `micro_for` only hands out SIMD kernels on hosts
+                // whose features were detected.
+                unsafe {
+                    micro(
+                        kt,
+                        a.as_ptr().add(i0 * k + k0),
+                        k,
+                        panel.as_ptr(),
+                        c.as_mut_ptr().add(i0 * n + j0),
+                        n,
+                    );
+                }
+                i0 += mr;
             }
             // Row remainder against the packed panel.
             for i in m_main..m {
                 let arow = &a[i * k..(i + 1) * k];
-                let crow = &mut c[i * n + j0..i * n + j0 + NRV];
+                let crow = &mut c[i * n + j0..i * n + j0 + nr];
                 for kk in 0..kt {
                     let av = arow[k0 + kk];
-                    let bp = &packb[kk * NRV..kk * NRV + NRV];
-                    for jj in 0..NRV {
-                        crow[jj] += av * bp[jj];
+                    let bp = &panel[kk * nr..kk * nr + nr];
+                    for (cv, &bv) in crow.iter_mut().zip(bp) {
+                        *cv += av * bv;
                     }
                 }
             }
-            j0 += NRV;
+            j0 += nr;
+            p += 1;
         }
-        // Column remainder (n % NRV) for all rows: scalar row loop. No
+        // Column remainder (n % nr) for all rows: scalar row loop. No
         // zero-skip here — the microkernel path has none, so every
         // output column sees identical `c += a*b` IEEE semantics.
         if n_main < n {
@@ -191,46 +502,42 @@ fn gemm_acc_shape<const MRV: usize, const NRV: usize>(
             }
         }
         k0 = k1;
+        t += 1;
     }
 }
 
-/// Dispatch to the monomorphized kernel for `(mr, nr)`; unknown shapes
-/// fall back to the default `(MR, NR)` instantiation.
-fn gemm_acc_dispatch(
-    shape: (usize, usize),
-    m: usize,
-    k: usize,
-    n: usize,
-    a: &[f32],
-    b: &[f32],
-    c: &mut [f32],
-) {
-    match shape {
-        (8, 8) => gemm_acc_shape::<8, 8>(m, k, n, a, b, c),
-        (4, 16) => gemm_acc_shape::<4, 16>(m, k, n, a, b, c),
-        (2, 16) => gemm_acc_shape::<2, 16>(m, k, n, a, b, c),
-        _ => gemm_acc_shape::<MR, NR>(m, k, n, a, b, c),
-    }
-}
-
-/// One probed candidate of the MR/NR autotune.
+/// One probed candidate of the dispatch autotune.
 #[derive(Debug, Clone, Copy)]
 pub struct TileProbe {
     /// Register-block rows.
     pub mr: usize,
     /// Register-block columns.
     pub nr: usize,
+    /// Explicit-SIMD microkernel (`false` = scalar).
+    pub simd: bool,
     /// Best-of-reps seconds for the probe GEMM.
     pub secs: f64,
 }
 
-/// Result of the one-shot register-tile autotune, cached for the whole
+/// Result of the one-shot dispatch autotune, cached for the whole
 /// process and surfaced by `m3 bench-kernels --json`.
 #[derive(Debug, Clone)]
 pub struct AutotuneReport {
-    /// The winning `(mr, nr)` shape every `gemm_acc`-family call uses.
-    pub chosen: (usize, usize),
-    /// All probed candidates with their timings.
+    /// The winning shape every `gemm_acc`-family call uses.
+    pub chosen: KernelShape,
+    /// Instruction-set features the runtime dispatcher detected
+    /// ([`SimdLevel::features`]).
+    pub features: &'static str,
+    /// Flops of one probe GEMM (per-candidate GFLOP/s =
+    /// `probe_flops / secs / 1e9`).
+    pub probe_flops: f64,
+    /// Measured effective throughput of the winning microkernel on the
+    /// probe GEMM, FLOP/s — what
+    /// [`crate::simulator::ClusterProfile::with_probed_flops`] seeds
+    /// the planner's compute rate with.
+    pub effective_flops: f64,
+    /// All probed candidates (scalar first, then any SIMD) with their
+    /// timings.
     pub candidates: Vec<TileProbe>,
 }
 
@@ -238,36 +545,65 @@ static TUNED: OnceLock<AutotuneReport> = OnceLock::new();
 
 fn probe_shapes() -> AutotuneReport {
     use crate::util::rng::Xoshiro256ss;
-    // One full k-tile, several register blocks in each dimension —
-    // large enough to rank shapes, small enough to probe in
-    // milliseconds at pool startup.
-    const M: usize = 64;
+    // One full k-tile, several register blocks in each dimension (96
+    // divides by every candidate MR, 64 by every NR) — large enough to
+    // rank shapes, small enough to probe in milliseconds at pool
+    // startup.
+    const M: usize = 96;
     const K: usize = 256;
     const N: usize = 64;
     const REPS: usize = 3;
+    let level = simd_level();
     let mut rng = Xoshiro256ss::new(0xA070);
     let a: Vec<f32> = (0..M * K).map(|_| rng.range_u64(0, 255) as f32 / 16.0).collect();
     let b: Vec<f32> = (0..K * N).map(|_| rng.range_u64(0, 255) as f32 / 16.0).collect();
-    let mut candidates = Vec::with_capacity(TILE_CANDIDATES.len());
-    let mut chosen = TILE_CANDIDATES[0];
+    let mut shapes: Vec<KernelShape> = TILE_CANDIDATES
+        .iter()
+        .map(|&(mr, nr)| KernelShape {
+            mr,
+            nr,
+            simd: false,
+        })
+        .collect();
+    if level.is_simd() {
+        shapes.extend(SIMD_TILE_CANDIDATES.iter().map(|&(mr, nr)| KernelShape {
+            mr,
+            nr,
+            simd: true,
+        }));
+    }
+    let mut candidates = Vec::with_capacity(shapes.len());
+    let mut chosen = shapes[0];
     let mut best = f64::INFINITY;
-    for &(mr, nr) in TILE_CANDIDATES {
+    for shape in shapes {
         let mut c = vec![0.0f32; M * N];
-        gemm_acc_dispatch((mr, nr), M, K, N, &a, &b, &mut c); // warm-up
+        gemm_tiled(shape, (M, K, N), &a, &b, &mut c, None); // warm-up
         let mut secs = f64::INFINITY;
         for _ in 0..REPS {
             let t = Instant::now();
-            gemm_acc_dispatch((mr, nr), M, K, N, &a, &b, &mut c);
+            gemm_tiled(shape, (M, K, N), &a, &b, &mut c, None);
             secs = secs.min(t.elapsed().as_secs_f64());
         }
         std::hint::black_box(&c);
-        candidates.push(TileProbe { mr, nr, secs });
+        candidates.push(TileProbe {
+            mr: shape.mr,
+            nr: shape.nr,
+            simd: shape.simd,
+            secs,
+        });
         if secs < best {
             best = secs;
-            chosen = (mr, nr);
+            chosen = shape;
         }
     }
-    AutotuneReport { chosen, candidates }
+    let probe_flops = 2.0 * (M * K * N) as f64;
+    AutotuneReport {
+        chosen,
+        features: level.features(),
+        probe_flops,
+        effective_flops: probe_flops / best.max(1e-12),
+        candidates,
+    }
 }
 
 /// The cached autotune result (probing on first use).
@@ -275,20 +611,73 @@ pub fn autotune_report() -> &'static AutotuneReport {
     TUNED.get_or_init(probe_shapes)
 }
 
-/// The `(mr, nr)` register-block shape in use.
-pub fn tuned_shape() -> (usize, usize) {
+/// The dispatch shape in use.
+pub fn tuned_shape() -> KernelShape {
     autotune_report().chosen
 }
 
-/// Run the autotune probe now if it has not run yet. Called at pool
-/// startup ([`crate::mapreduce::executor::Pool`] spawning its workers)
-/// so the probe's cost lands outside timed rounds.
+/// The winning microkernel's measured effective FLOP/s on the probe
+/// GEMM — the per-slot rate `m3 plan`/`m3 serve` seed their
+/// [`crate::simulator::ClusterProfile`] with.
+pub fn measured_flops_per_slot() -> f64 {
+    autotune_report().effective_flops
+}
+
+/// Run feature detection + the autotune probe now if they have not run
+/// yet. Called at pool startup ([`crate::mapreduce::executor::Pool`]
+/// spawning its workers) so the probe's cost lands outside timed
+/// rounds.
 pub fn ensure_tuned() {
     let _ = autotune_report();
 }
 
+/// Empirical peak FLOP/s of the detected dispatch level: a
+/// register-resident multiply-add chain with no memory traffic, timed
+/// best-of-3. On AVX2+FMA hosts this is the 256-bit FMA chain; on
+/// scalar dispatch it is the plain mul+add loop (whatever the compiler
+/// sustains from registers). `m3 bench-kernels` divides the measured
+/// GEMM rate by this to report `peak_fraction`.
+pub fn measure_peak_flops() -> f64 {
+    const ITERS: usize = 1 << 16;
+    const REPS: usize = 3;
+    let mut best = f64::INFINITY;
+    let mut flops = 1.0;
+    for _ in 0..REPS {
+        let t = Instant::now();
+        let (f, sink) = peak_run(ITERS);
+        best = best.min(t.elapsed().as_secs_f64());
+        flops = f;
+        std::hint::black_box(sink);
+    }
+    flops / best.max(1e-12)
+}
+
+fn peak_run(iters: usize) -> (f64, f32) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_level().is_simd() {
+            // SAFETY: AVX2+FMA verified by `simd_level`.
+            return unsafe { avx::peak_fma(iters) };
+        }
+    }
+    peak_scalar(iters)
+}
+
+fn peak_scalar(iters: usize) -> (f64, f32) {
+    const LANES: usize = 16;
+    let x = std::hint::black_box(0.999_f32);
+    let y = std::hint::black_box(1.0e-3_f32);
+    let mut acc = [0.0f32; LANES];
+    for _ in 0..iters {
+        for slot in acc.iter_mut() {
+            *slot = *slot * x + y;
+        }
+    }
+    ((2 * LANES * iters) as f64, acc.iter().sum())
+}
+
 /// Register-tiled `c += a·b` on raw row-major slices, at the autotuned
-/// register-block shape.
+/// dispatch shape.
 ///
 /// `a`: `m×k`, `b`: `k×n`, `c`: `m×n`. Deterministic within a process:
 /// the tuned shape is probed once and cached, so repeated runs produce
@@ -297,45 +686,75 @@ pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    gemm_acc_dispatch(tuned_shape(), m, k, n, a, b, c);
+    gemm_tiled(tuned_shape(), (m, k, n), a, b, c, None);
+}
+
+/// [`gemm_acc`] at an explicit dispatch shape — how `m3 bench-kernels`
+/// races the chosen dispatch against the scalar candidates on the same
+/// inputs, and how the tests pin each SIMD microkernel against its
+/// scalar twin. SIMD shapes silently degrade to the scalar twin when
+/// the host lacks the features ([`micro_for`]), so any shape is safe
+/// to pass.
+pub fn gemm_acc_with_shape(
+    shape: KernelShape,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    gemm_tiled(shape, (m, k, n), a, b, c, None);
 }
 
 /// Disjoint-panel output pointer ferried into tile subtasks. Each
 /// subtask manufactures a `&mut` slice over its own row range only.
 struct SendPtr(*mut f32);
-// SAFETY: subtasks write disjoint row panels (see `gemm_acc_par`), and
-// the spawning call joins before the buffer is touched again.
+// SAFETY: subtasks write disjoint row panels (see `gemm_acc_par` and
+// `PackedB::pack`), and the spawning call joins before the buffer is
+// touched again.
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
 /// [`gemm_acc`] with intra-task tile parallelism: when the calling
 /// thread is a task of a multi-worker pool and `m·k·n ≥`
-/// [`PAR_MIN_VOLUME`], the C rows split into MR-aligned row panels
-/// published as stealable subtasks; idle workers steal panels instead
-/// of waiting out one oversized local multiply.
+/// [`PAR_MIN_VOLUME`], B's panels are packed once — in parallel, as
+/// stealable subtasks — into a reference-counted [`PackedB`], then the
+/// C rows split into MR-aligned row panels published as subtasks that
+/// all share those packed panels; idle workers steal panels instead of
+/// waiting out one oversized local multiply, and no subtask re-packs
+/// B.
 ///
 /// **Ownership rule:** each panel owns a disjoint `[i0, i1) × n` slice
 /// of `c` — no two subtasks ever touch the same C element, so there is
 /// no locking and no non-determinism. **Bit-identity:** every panel
 /// boundary is a multiple of the register-block height `mr`, so each
 /// row takes exactly the register/remainder path it takes in the
-/// sequential kernel — the result is bit-for-bit equal to
-/// [`gemm_acc`]'s regardless of worker count or stealing order.
+/// sequential kernel, and the pre-packed panels hold exactly the bytes
+/// the sequential kernel packs on the fly — the result is bit-for-bit
+/// equal to [`gemm_acc`]'s regardless of worker count or stealing
+/// order.
 pub fn gemm_acc_par(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
     let width = current_pool_width();
-    let (mr, nr) = tuned_shape();
-    if !subtask_tiling() || width <= 1 || m < 2 * mr || m * k * n < PAR_MIN_VOLUME {
-        gemm_acc_dispatch((mr, nr), m, k, n, a, b, c);
+    let shape = tuned_shape();
+    if !subtask_tiling() || width <= 1 || m < 2 * shape.mr || m * k * n < PAR_MIN_VOLUME {
+        gemm_tiled(shape, (m, k, n), a, b, c, None);
         return;
     }
+    // Pack B off the critical path: one shared artifact, packed in
+    // parallel, reused by every row-panel subtask below.
+    let packed = Arc::new(PackedB::pack(b, k, n, shape.nr));
     // MR-aligned row panels, about two per worker so stealing can
     // rebalance mid-flight.
-    let blocks = m / mr;
+    let blocks = m / shape.mr;
     let panels = blocks.min(2 * width);
-    let rows_pp = blocks.div_ceil(panels) * mr;
+    let rows_pp = blocks.div_ceil(panels) * shape.mr;
     let num_panels = m.div_ceil(rows_pp);
     let cp = SendPtr(c.as_mut_ptr());
     run_subtasks(num_panels, |p| {
@@ -345,7 +764,14 @@ pub fn gemm_acc_par(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut 
         // subtask writes only its own C rows, and `run_subtasks` joins
         // before `c` is read again.
         let cpan = unsafe { std::slice::from_raw_parts_mut(cp.0.add(i0 * n), (i1 - i0) * n) };
-        gemm_acc_dispatch((mr, nr), i1 - i0, k, n, &a[i0 * k..i1 * k], b, cpan);
+        gemm_tiled(
+            shape,
+            (i1 - i0, k, n),
+            &a[i0 * k..i1 * k],
+            b,
+            cpan,
+            Some(packed.as_ref()),
+        );
     });
 }
 
@@ -513,12 +939,33 @@ mod tests {
         }
     }
 
+    /// Every dispatchable shape — scalar and, on capable hosts, SIMD.
+    fn all_shapes() -> Vec<KernelShape> {
+        let mut shapes: Vec<KernelShape> = TILE_CANDIDATES
+            .iter()
+            .map(|&(mr, nr)| KernelShape {
+                mr,
+                nr,
+                simd: false,
+            })
+            .collect();
+        if simd_level().is_simd() {
+            shapes.extend(SIMD_TILE_CANDIDATES.iter().map(|&(mr, nr)| KernelShape {
+                mr,
+                nr,
+                simd: true,
+            }));
+        }
+        shapes
+    }
+
     #[test]
     fn every_candidate_shape_matches_naive() {
         // The autotuner may pick any candidate on any host; each must
         // be exact at shapes that straddle its own tile boundaries.
         let mut rng = Xoshiro256ss::new(4);
-        for &(mr, nr) in TILE_CANDIDATES {
+        for shape in all_shapes() {
+            let (mr, nr) = (shape.mr, shape.nr);
             for &(m, k, n) in &[
                 (1, 1, 1),
                 (mr - 1, 3, nr - 1),
@@ -532,8 +979,8 @@ mod tests {
                 let mut want = a.matmul_naive(&b);
                 want.add_assign(&c);
                 let mut got = c.clone();
-                gemm_acc_dispatch(
-                    (mr, nr),
+                gemm_acc_with_shape(
+                    shape,
                     m,
                     k,
                     n,
@@ -541,20 +988,123 @@ mod tests {
                     b.as_slice(),
                     got.as_mut_slice(),
                 );
-                assert_eq!(got, want, "shape ({mr},{nr}) at {m}x{k}x{n}");
+                assert_eq!(got, want, "shape {} at {m}x{k}x{n}", shape.label());
             }
+        }
+    }
+
+    #[test]
+    fn simd_microkernels_bit_match_the_scalar_oracle() {
+        // Feature-matrix equivalence: each SIMD microkernel against its
+        // scalar twin at tile-straddling shapes, on integer inputs
+        // (entries in [-4, 4], so products cancel to exact zeros and
+        // every partial sum is exactly representable — FMA and mul+add
+        // agree bit for bit).
+        if !simd_level().is_simd() {
+            return; // no SIMD on this host (or forced scalar)
+        }
+        let mut rng = Xoshiro256ss::new(7);
+        for &(mr, nr) in SIMD_TILE_CANDIDATES {
+            let simd = KernelShape { mr, nr, simd: true };
+            let scalar = KernelShape {
+                mr,
+                nr,
+                simd: false,
+            };
+            for &(m, k, n) in &[
+                (1, 1, 1),
+                (mr - 1, KB + 1, nr - 1), // row/col remainders straddling the k-tile
+                (mr, 7, nr),              // exactly one register block
+                (2 * mr + 1, 257, 2 * nr + 3),
+                (3 * mr, KB, nr + 1),
+            ] {
+                let a = gen::dense_int(m, k, &mut rng);
+                let b = gen::dense_int(k, n, &mut rng);
+                let c = gen::dense_int(m, n, &mut rng);
+                let mut got_simd = c.clone();
+                gemm_acc_with_shape(
+                    simd,
+                    m,
+                    k,
+                    n,
+                    a.as_slice(),
+                    b.as_slice(),
+                    got_simd.as_mut_slice(),
+                );
+                let mut got_scalar = c.clone();
+                gemm_acc_with_shape(
+                    scalar,
+                    m,
+                    k,
+                    n,
+                    a.as_slice(),
+                    b.as_slice(),
+                    got_scalar.as_mut_slice(),
+                );
+                for (i, (x, y)) in got_simd
+                    .as_slice()
+                    .iter()
+                    .zip(got_scalar.as_slice())
+                    .enumerate()
+                {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "simd {mr}x{nr} vs scalar oracle at {m}x{k}x{n}, element {i}"
+                    );
+                }
+                let mut want = a.matmul_naive(&b);
+                want.add_assign(&c);
+                assert_eq!(got_simd, want, "simd {mr}x{nr} vs naive at {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn forced_scalar_env_pins_the_dispatch() {
+        // Dispatch is resolved once per process, so this asserts the
+        // contract in whichever environment the suite runs: under
+        // M3_FORCE_SCALAR the chosen kernel must be scalar (the CI
+        // forced-scalar job runs the whole suite this way).
+        let forced = std::env::var_os("M3_FORCE_SCALAR").is_some_and(|v| v != "0");
+        let rep = autotune_report();
+        assert_eq!(rep.features, simd_level().features());
+        if forced {
+            assert_eq!(simd_level(), SimdLevel::ScalarForced);
+            assert!(!rep.chosen.simd, "forced scalar must never pick SIMD");
+            assert!(rep.candidates.iter().all(|p| !p.simd));
+        }
+        if !simd_level().is_simd() {
+            assert!(!rep.chosen.simd);
         }
     }
 
     #[test]
     fn autotune_report_is_sane() {
         let rep = autotune_report();
-        assert_eq!(rep.candidates.len(), TILE_CANDIDATES.len());
-        assert!(TILE_CANDIDATES.contains(&rep.chosen), "winner from the candidate set");
+        assert!(rep.candidates.len() >= TILE_CANDIDATES.len());
+        assert!(
+            rep.candidates
+                .iter()
+                .any(|p| (p.mr, p.nr, p.simd) == (rep.chosen.mr, rep.chosen.nr, rep.chosen.simd)),
+            "winner from the candidate set"
+        );
         for p in &rep.candidates {
             assert!(p.secs > 0.0, "({},{}) probed", p.mr, p.nr);
         }
         assert_eq!(tuned_shape(), rep.chosen, "cached winner is stable");
+        assert!(rep.effective_flops > 0.0, "probe measured a flop rate");
+        assert!(rep.probe_flops > 0.0);
+        assert!(
+            measured_flops_per_slot() == rep.effective_flops,
+            "profile seeding reads the probe"
+        );
+    }
+
+    #[test]
+    fn peak_probe_measures_something() {
+        let peak = measure_peak_flops();
+        assert!(peak > 0.0 && peak.is_finite());
     }
 
     #[test]
@@ -607,9 +1157,38 @@ mod tests {
     }
 
     #[test]
+    fn prepacked_panels_bit_identical_to_stack_packing() {
+        // The shared PackedB artifact must reproduce the on-the-fly
+        // stack packing bit for bit — on fractional inputs, for every
+        // dispatchable shape, at a shape with row, column, and k-tile
+        // remainders.
+        let (m, k, n) = (13usize, 300usize, 21usize);
+        let mut rng = Xoshiro256ss::new(21);
+        let a = fractional(m, k, &mut rng);
+        let b = fractional(k, n, &mut rng);
+        let c0 = fractional(m, n, &mut rng);
+        for shape in all_shapes() {
+            let mut plain = c0.clone();
+            gemm_tiled(shape, (m, k, n), &a, &b, &mut plain, None);
+            let packed = PackedB::pack(&b, k, n, shape.nr);
+            let mut pre = c0.clone();
+            gemm_tiled(shape, (m, k, n), &a, &b, &mut pre, Some(&packed));
+            for (i, (x, y)) in plain.iter().zip(&pre).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "shape {} element {i}",
+                    shape.label()
+                );
+            }
+        }
+    }
+
+    #[test]
     fn par_gemm_bit_identical_to_sequential_on_a_pool() {
-        // 70·300·40 = 840k ≥ PAR_MIN_VOLUME: the pool path splits into
-        // MR-aligned panels, which must not perturb a single bit.
+        // 70·300·40 = 840k ≥ PAR_MIN_VOLUME: the pool path packs B
+        // once (in parallel) and splits C into MR-aligned panels, which
+        // must not perturb a single bit.
         let (m, k, n) = (70usize, 300usize, 40usize);
         let mut rng = Xoshiro256ss::new(9);
         let a = fractional(m, k, &mut rng);
@@ -746,5 +1325,7 @@ mod tests {
         assert_eq!(c1, [7.0; 4]);
         gemm_acc_par(2, 0, 2, &[], &[], &mut c1);
         assert_eq!(c1, [7.0; 4]);
+        let pb = PackedB::pack(&[], 0, 4, 8);
+        assert!(pb.data.is_empty());
     }
 }

@@ -3,10 +3,14 @@
 //! Backed by the register-tiled microkernel in
 //! [`kernels`](super::kernels) via the tile-parallel entry point
 //! ([`kernels::gemm_acc_par`]): autotuned MR×NR register accumulator
-//! blocks with unrolled FMAs over packed B column panels, k-tiled so
-//! each panel stays in cache — and, when the multiply runs inside a
-//! pool task and is big enough, split into MR-aligned row panels that
-//! idle workers steal (bit-identical to the sequential kernel). Serves
+//! blocks — explicit AVX2+FMA vector microkernels where the host
+//! supports them (runtime-dispatched once at pool startup; `M3_FORCE_SCALAR=1`
+//! pins the portable scalar path), the scalar twin elsewhere — over
+//! packed B column panels, k-tiled so each panel stays in cache. Big
+//! in-pool multiplies pack B once into a shared [`kernels::PackedB`]
+//! (panels packed in parallel via `run_subtasks`) and split into
+//! MR-aligned row panels that idle workers steal (bit-identical to the
+//! sequential kernel). Serves
 //! as the fallback when no XLA artifacts are present and as the
 //! baseline the XLA backend is benchmarked against (§Perf in
 //! EXPERIMENTS.md).

@@ -236,6 +236,11 @@ pub trait ActiveJob: Send {
     /// per-round volumes) — what the scheduler feeds, with the round's
     /// observed metrics, into the online profile recalibration.
     fn round_flops(&self, round: usize) -> f64;
+    /// Analytic shuffle volume of round `round` in words — the round's
+    /// in-flight working set, which the scheduler uses as the memory
+    /// footprint when deciding whether two rounds can gang side by side
+    /// without exceeding the cluster's aggregate memory.
+    fn round_shuffle_words(&self, round: usize) -> f64;
     /// Re-price the round predictions on a (recalibrated) profile —
     /// SRPT rankings then track the live cluster, not the seed
     /// constants.
@@ -267,6 +272,7 @@ struct SteppedJob<A: MultiRoundAlgorithm> {
     run: StepRun<A>,
     predicted: Vec<f64>,
     flops: Vec<f64>,
+    shuffle: Vec<f64>,
     predictor: Box<dyn Fn(&ClusterProfile) -> Vec<f64> + Send>,
     assemble: Box<dyn FnOnce(Vec<Pair<A::K, A::V>>) -> JobOutput + Send>,
 }
@@ -292,6 +298,9 @@ impl<A: MultiRoundAlgorithm + Send + 'static> ActiveJob for SteppedJob<A> {
     }
     fn round_flops(&self, round: usize) -> f64 {
         self.flops[round]
+    }
+    fn round_shuffle_words(&self, round: usize) -> f64 {
+        self.shuffle[round]
     }
     fn repredict(&mut self, profile: &ClusterProfile) {
         self.predicted = (self.predictor)(profile);
@@ -319,6 +328,7 @@ struct Dense3dJob {
     auto: bool,
     predicted: Vec<f64>,
     flops: Vec<f64>,
+    shuffle: Vec<f64>,
 }
 
 impl Dense3dJob {
@@ -327,10 +337,9 @@ impl Dense3dJob {
         let widths = self.run.alg().schedule().widths().to_vec();
         self.predicted =
             simulate_dense3d_schedule(self.side, self.block_side, &widths, profile).per_round();
-        self.flops = volumes_dense3d_schedule(self.side, self.block_side, &widths)
-            .iter()
-            .map(|v| v.flops)
-            .collect();
+        let vols = volumes_dense3d_schedule(self.side, self.block_side, &widths);
+        self.flops = vols.iter().map(|v| v.flops).collect();
+        self.shuffle = vols.iter().map(|v| v.shuffle_words).collect();
     }
 }
 
@@ -355,6 +364,9 @@ impl ActiveJob for Dense3dJob {
     }
     fn round_flops(&self, round: usize) -> f64 {
         self.flops[round]
+    }
+    fn round_shuffle_words(&self, round: usize) -> f64 {
+        self.shuffle[round]
     }
     fn repredict(&mut self, profile: &ClusterProfile) {
         self.refresh(profile);
@@ -460,6 +472,7 @@ pub fn spawn_job_on(
                 auto,
                 predicted: vec![],
                 flops: vec![],
+                shuffle: vec![],
             };
             job.refresh(profile);
             Ok(Box::new(job))
@@ -489,6 +502,10 @@ pub fn spawn_job_on(
                 run: StepRun::with_pool(engine, alg, input, pool.clone()),
                 predicted: simulate_dense2d(&plan, profile).per_round(),
                 flops: volumes_dense2d(&plan).iter().map(|v| v.flops).collect(),
+                shuffle: volumes_dense2d(&plan)
+                    .iter()
+                    .map(|v| v.shuffle_words)
+                    .collect(),
                 predictor: Box::new(move |p| simulate_dense2d(&plan, p).per_round()),
                 assemble: Box::new(move |out| {
                     JobOutput::Dense(Algo2d::assemble_output(plan, &out))
@@ -528,6 +545,10 @@ pub fn spawn_job_on(
                 run: StepRun::with_pool(engine, alg, input, pool.clone()),
                 predicted: simulate_sparse3d(&plan, profile).per_round(),
                 flops: volumes_sparse3d(&plan).iter().map(|v| v.flops).collect(),
+                shuffle: volumes_sparse3d(&plan)
+                    .iter()
+                    .map(|v| v.shuffle_words)
+                    .collect(),
                 predictor: Box::new(move |p| simulate_sparse3d(&plan, p).per_round()),
                 assemble: Box::new(move |out| {
                     JobOutput::Sparse(sparse_3d_assemble(side, chosen_block, out))

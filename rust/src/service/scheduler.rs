@@ -387,7 +387,18 @@ pub fn run_service(
         let width = cfg.engine.workers.max(1);
         let demand = active[idx].job.slot_demand();
         let partner = if demand < width && active.len() > 1 {
-            pick_partner(cfg.policy, &active, &tenant_service, idx, width - demand)
+            let primary_words = active[idx]
+                .job
+                .round_shuffle_words(active[idx].job.next_round());
+            pick_partner(
+                cfg.policy,
+                &active,
+                &tenant_service,
+                idx,
+                width - demand,
+                &cfg.profile,
+                primary_words,
+            )
         } else {
             None
         };
@@ -637,12 +648,20 @@ fn pick(policy: Policy, active: &[Entry], tenant_service: &BTreeMap<usize, f64>)
 /// `residual` slots (`None` when nothing fits) — the gang-scheduling
 /// back-fill choice, ranked by the same policy key as `pick` so the
 /// pairing is deterministic.
+///
+/// Feasibility-aware: a candidate is also refused when the two rounds'
+/// combined working set (`primary_words` + the candidate's shuffle
+/// words, priced at `profile.bytes_per_word`) exceeds the cluster's
+/// aggregate memory — ganging on a starved profile would thrash or
+/// spill, erasing the back-fill win.
 fn pick_partner(
     policy: Policy,
     active: &[Entry],
     tenant_service: &BTreeMap<usize, f64>,
     primary: usize,
     residual: usize,
+    profile: &ClusterProfile,
+    primary_words: f64,
 ) -> Option<usize> {
     let mut best: Option<(usize, (f64, f64, usize))> = None;
     for (i, e) in active.iter().enumerate() {
@@ -651,6 +670,10 @@ fn pick_partner(
         }
         let d = e.job.slot_demand();
         if d == 0 || d > residual {
+            continue;
+        }
+        let words = primary_words + e.job.round_shuffle_words(e.job.next_round());
+        if words * profile.bytes_per_word > profile.agg_mem_bytes() {
             continue;
         }
         let k = policy_key(policy, e, tenant_service);
@@ -860,6 +883,28 @@ mod tests {
             assert!(pair[0].committed && pair[1].committed);
         }
         // Concurrency must not corrupt either product.
+        assert_eq!(out.completed.len(), 2);
+        for c in &out.completed {
+            assert!(c.output.matches(&c.spec), "job {} wrong product", c.spec.id);
+        }
+    }
+
+    #[test]
+    fn starved_profile_refuses_the_gang() {
+        // Identical workload and engine to
+        // `gang_schedules_two_underfilled_rounds` (where ganging fires),
+        // but on a memory-starved profile: 64 B per node cannot hold
+        // both rounds' combined shuffle working set, so the partner is
+        // refused and every round runs solo — and correctly.
+        let specs = vec![small3d(0, 0, 0.0, 2), small3d(1, 1, 0.0, 2)];
+        let mut c = ServiceConfig::new(underfilled_engine(), Policy::Fair);
+        c.profile = c.profile.with_mem_per_node(64.0);
+        let out = run(&specs, &c);
+        assert!(
+            out.trace.iter().all(|t| !t.gang),
+            "starved aggregate memory must suppress ganging: {:?}",
+            out.trace
+        );
         assert_eq!(out.completed.len(), 2);
         for c in &out.completed {
             assert!(c.output.matches(&c.spec), "job {} wrong product", c.spec.id);

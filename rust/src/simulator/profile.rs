@@ -119,6 +119,21 @@ impl ClusterProfile {
         self
     }
 
+    /// A copy whose compute rate is seeded from a *measured* per-slot
+    /// FLOP/s (the kernel autotune probe's effective rate,
+    /// [`crate::runtime::kernels::measured_flops_per_slot`]): each
+    /// node computes at `per_slot_flops` on every one of its slots.
+    /// `m3 plan` / `m3 serve` use this so first-contact pricing
+    /// reflects the machine's real (post-SIMD-dispatch) kernel speed
+    /// instead of the paper's 2014 constants; non-positive rates leave
+    /// the profile untouched.
+    pub fn with_probed_flops(mut self, per_slot_flops: f64) -> Self {
+        if per_slot_flops > 0.0 && per_slot_flops.is_finite() {
+            self.flops_per_node = per_slot_flops * self.slots_per_node as f64;
+        }
+        self
+    }
+
     /// Ablation: disable the HDFS small-chunk penalty.
     pub fn without_chunk_penalty(mut self) -> Self {
         self.small_chunk_coeff = 0.0;
@@ -225,6 +240,24 @@ mod tests {
         assert_eq!(p.nodes, 4);
         assert_eq!(p.agg_disk(), 4.0 * p.disk_bw);
         assert_eq!(p.agg_mem_bytes(), 4.0 * p.mem_per_node_bytes);
+    }
+
+    #[test]
+    fn probed_flops_scale_by_slots_and_reject_garbage() {
+        let base = ClusterProfile::inhouse(); // 2 slots per node
+        let seeded = base.with_probed_flops(2.0e9);
+        assert_eq!(seeded.flops_per_node, 4.0e9);
+        assert_eq!(seeded.agg_flops(), 4.0e9 * 16.0);
+        // Everything but the compute rate is untouched.
+        assert_eq!(seeded.net_bw, base.net_bw);
+        assert_eq!(seeded.mem_per_node_bytes, base.mem_per_node_bytes);
+        // Garbage rates leave the paper constant in place.
+        assert_eq!(base.with_probed_flops(0.0).flops_per_node, base.flops_per_node);
+        assert_eq!(base.with_probed_flops(-1.0).flops_per_node, base.flops_per_node);
+        assert_eq!(
+            base.with_probed_flops(f64::NAN).flops_per_node,
+            base.flops_per_node
+        );
     }
 
     #[test]
