@@ -5,7 +5,9 @@
 //! racing the runtime-dispatched microkernel (AVX2+FMA where detected)
 //! against the best scalar candidate on identical inputs and against
 //! the machine's register-resident empirical peak
-//! ([`measure_peak_flops`]); see EXPERIMENTS.md "Peak FLOP/s".
+//! ([`measure_peak_flops`]); see EXPERIMENTS.md "Peak FLOP/s". The
+//! `addsub` section races the dispatched [`axpby`] block combine (the
+//! Strassen forward/combine kernel) against its scalar reference loop.
 //!
 //! Two front-ends share this module: `cargo bench --bench kernel_bench`
 //! and the `m3 bench-kernels` CLI (which can also write the results as
@@ -14,8 +16,8 @@
 use crate::matrix::semiring::{Arithmetic, BoolOrAnd, MinPlus, Semiring};
 use crate::matrix::{gen, DenseMatrix};
 use crate::runtime::kernels::{
-    autotune_report, gemm_acc, gemm_acc_ikj, gemm_acc_sr, gemm_acc_with_shape, measure_peak_flops,
-    simd_level, KernelShape, SimdLevel,
+    autotune_report, axpby, axpby_scalar, gemm_acc, gemm_acc_ikj, gemm_acc_sr, gemm_acc_with_shape,
+    measure_peak_flops, simd_level, KernelShape, SimdLevel,
 };
 use crate::util::bench::{black_box, Bencher};
 use crate::util::rng::Xoshiro256ss;
@@ -100,6 +102,23 @@ pub struct SpgemmPoint {
     pub mflops: f64,
     /// Epoch speedup over the touched-scan accumulator.
     pub speedup_vs_scan: f64,
+}
+
+/// One add/sub (`axpby`) measurement — the Strassen forward/combine
+/// kernel raced against its scalar reference loop.
+#[derive(Debug, Clone)]
+pub struct AddsubPoint {
+    /// Vector length in elements (a `side×side` block flattened).
+    pub len: usize,
+    /// Median seconds: dispatched [`axpby`] (AVX2+FMA where detected).
+    pub simd_secs: f64,
+    /// Median seconds: scalar reference loop.
+    pub scalar_secs: f64,
+    /// Dispatched throughput in effective GFLOP/s (2 flops/element).
+    pub gflops: f64,
+    /// Dispatched speedup over the scalar loop (1.0 tie by definition
+    /// when the scalar path is what dispatch chose).
+    pub speedup: f64,
 }
 
 /// Full benchmark result.
@@ -314,6 +333,47 @@ fn bench_simd(
     info
 }
 
+fn bench_addsub(sides: &[usize], b: &Bencher, text: &mut String) -> Vec<AddsubPoint> {
+    let simd_active = simd_level().is_simd();
+    let mut points = vec![];
+    for &s in sides {
+        let len = s * s;
+        let mut rng = Xoshiro256ss::new(0xA5 ^ s as u64);
+        let x = gen::dense_int(s, s, &mut rng);
+        let y0 = gen::dense_int(s, s, &mut rng);
+        // `y <- x - y` oscillates between two bounded states, so the
+        // timed loop re-applies the kernel in place with no reset copy.
+        let mut y = y0.clone();
+        let fast = b.bench(&format!("axpby_simd_{s}"), || {
+            axpby(1.0, x.as_slice(), -1.0, y.as_mut_slice());
+            black_box(y.as_slice()[0])
+        });
+        text.push_str(&format!("{}\n", fast.summary()));
+        let (scalar_secs, speedup) = if simd_active {
+            let mut ys = y0.clone();
+            let scalar = b.bench(&format!("axpby_scalar_{s}"), || {
+                axpby_scalar(1.0, x.as_slice(), -1.0, ys.as_mut_slice());
+                black_box(ys.as_slice()[0])
+            });
+            text.push_str(&format!("{}\n", scalar.summary()));
+            (scalar.median(), scalar.median() / fast.median().max(1e-12))
+        } else {
+            // Scalar dispatch (no AVX2, or M3_FORCE_SCALAR): the race
+            // is a tie by definition, so CI's >= 1.0 gate stays green.
+            (fast.median(), 1.0)
+        };
+        let t = fast.median().max(1e-12);
+        points.push(AddsubPoint {
+            len,
+            simd_secs: fast.median(),
+            scalar_secs,
+            gflops: 2.0 * len as f64 / t / 1e9,
+            speedup,
+        });
+    }
+    points
+}
+
 fn bench_spgemm(cfg: &KernelBenchConfig, b: &Bencher, text: &mut String) -> Vec<SpgemmPoint> {
     let side = cfg.sparse_side;
     let mut points = vec![];
@@ -393,6 +453,24 @@ fn semiring_json(points: &[SemiringPoint]) -> String {
     format!("[{}]", items.join(","))
 }
 
+fn addsub_json(points: &[AddsubPoint]) -> String {
+    let items: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"len\":{},\"simd_secs\":{},\"scalar_secs\":{},\"gflops\":{},\
+                 \"speedup_vs_scalar\":{}}}",
+                p.len,
+                json_f(p.simd_secs),
+                json_f(p.scalar_secs),
+                json_f(p.gflops),
+                json_f(p.speedup)
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
 fn spgemm_json(points: &[SpgemmPoint]) -> String {
     let items: Vec<String> = points
         .iter()
@@ -459,6 +537,9 @@ pub fn run_kernel_bench(cfg: &KernelBenchConfig) -> KernelBenchReport {
     text.push_str("\n--- SIMD dispatch: chosen kernel vs scalar oracle ---\n");
     let simd = bench_simd(headline_side, &dense, &b, &mut text);
 
+    text.push_str("\n--- Strassen add/sub: dispatched axpby vs scalar loop ---\n");
+    let addsub = bench_addsub(&cfg.sides, &b, &mut text);
+
     text.push_str("\n--- semiring GEMM: tiled vs naive triple loop ---\n");
     let mut semiring: Vec<SemiringPoint> = vec![];
     bench_semiring_one::<Arithmetic>(&cfg.sides, &b, &mut text, &mut semiring);
@@ -485,6 +566,15 @@ pub fn run_kernel_bench(cfg: &KernelBenchConfig) -> KernelBenchReport {
             format!("{:.3}ms", p.tiled_secs * 1e3),
             format!("{:.2}", p.gflops),
             format!("{:.2}x naive", p.speedup_vs_naive),
+        ]);
+    }
+    for p in &addsub {
+        t.row(&[
+            "axpby".to_string(),
+            format!("len {}", p.len),
+            format!("{:.3}ms", p.simd_secs * 1e3),
+            format!("{:.2}", p.gflops),
+            format!("{:.2}x scalar", p.speedup),
         ]);
     }
     for p in &spgemm {
@@ -530,9 +620,18 @@ pub fn run_kernel_bench(cfg: &KernelBenchConfig) -> KernelBenchReport {
     } else {
         0.0
     };
+    // Headline 3: the addsub (axpby) race at the headline side — the
+    // Strassen forward/combine kernel must never lose to the scalar
+    // loop it replaced (1.0 tie when dispatch itself is scalar).
+    let addsub_headline = addsub
+        .iter()
+        .find(|p| p.len == headline_side * headline_side)
+        .map(|p| p.speedup)
+        .unwrap_or(1.0);
     text.push_str(&format!(
         "headline: semiring GEMM {semiring_headline:.2}x vs naive at side {headline_side} \
-         (worst semiring); SpGEMM {spgemm_headline:.2}x vs touched-scan (worst nnz/row)\n"
+         (worst semiring); SpGEMM {spgemm_headline:.2}x vs touched-scan (worst nnz/row); \
+         axpby {addsub_headline:.2}x vs scalar at side {headline_side}\n"
     ));
 
     let tune_candidates: Vec<String> = tune
@@ -576,11 +675,18 @@ pub fn run_kernel_bench(cfg: &KernelBenchConfig) -> KernelBenchReport {
         json_f(simd.peak_fraction),
         simd.speedup >= 1.0
     );
+    let addsub_obj = format!(
+        "{{\"points\":{},\"headline_speedup\":{},\"addsub_speedup_ok\":{}}}",
+        addsub_json(&addsub),
+        json_f(addsub_headline),
+        addsub_headline >= 1.0
+    );
     let json = format!(
         "{{\n  \"bench\": \"kernels\",\n  \"config\": {{\"sides\":{:?},\"sparse_side\":{},\
          \"nnz_per_row\":{:?},\"quick\":{}}},\n  \
          \"autotune\": {},\n  \
          \"simd\": {},\n  \
+         \"addsub\": {},\n  \
          \"dense_f32\": {},\n  \"semiring\": {},\n  \"spgemm\": {},\n  \
          \"semiring_speedup_at_{}\": {},\n  \"spgemm_speedup_min\": {}\n}}\n",
         cfg.sides,
@@ -589,6 +695,7 @@ pub fn run_kernel_bench(cfg: &KernelBenchConfig) -> KernelBenchReport {
         cfg.quick,
         autotune_json,
         simd_json,
+        addsub_obj,
         dense_json(&dense),
         semiring_json(&semiring),
         spgemm_json(&spgemm),
@@ -634,6 +741,9 @@ mod tests {
         // bench; at side 17 the race is too noisy to pin, so only the
         // field's presence is asserted here.
         assert!(rep.json.contains("\"simd_speedup_ok\":"));
+        assert!(rep.text.contains("Strassen add/sub"));
+        assert!(rep.json.contains("\"addsub\": {\"points\":[{\"len\":64,"));
+        assert!(rep.json.contains("\"addsub_speedup_ok\":"));
         assert!(rep.json.contains("\"semiring_speedup_at_17\""));
         assert!(rep.semiring_speedup_headline > 0.0);
         assert!(rep.spgemm_speedup_headline > 0.0);

@@ -32,7 +32,8 @@ pub const MAX_PLAN_ROUNDS: usize = 4096;
 
 use crate::matrix::gen::er_output_density;
 use crate::simulator::{
-    simulate_dense2d, simulate_dense3d, simulate_sparse3d, ClusterProfile, SimResult,
+    simulate_dense2d, simulate_dense2d_schedule, simulate_dense3d, simulate_sparse3d,
+    simulate_strassen, volumes_strassen, ClusterProfile, SimResult,
 };
 
 use super::planner::{Plan2d, Plan3d, SparsePlan};
@@ -67,20 +68,31 @@ pub enum PlanDesc {
         /// Replication factor ρ.
         rho: usize,
     },
+    /// Blocked-Strassen schedule: `levels ≥ 1` recursion levels as
+    /// round phases over unit blocks of side `side / 2^levels`
+    /// (`levels = 0` *is* the classical grid, listed as `Dense3d`).
+    Strassen {
+        /// Matrix side `√n`.
+        side: usize,
+        /// Recursion levels `L`.
+        levels: usize,
+    },
 }
 
 impl PlanDesc {
-    /// The candidate's replication factor.
+    /// The candidate's replication factor (1 for Strassen schedules:
+    /// each level's groups run one phase per round).
     pub fn rho(&self) -> usize {
         match *self {
             PlanDesc::Dense3d { rho, .. }
             | PlanDesc::Dense2d { rho, .. }
             | PlanDesc::Sparse3d { rho, .. } => rho,
+            PlanDesc::Strassen { .. } => 1,
         }
     }
 
     /// Blocks/strips per dimension (the ρ ≤ · bound): `q` for 3D plans,
-    /// `s` for 2D.
+    /// `s` for 2D, the unit-block grid side `2^L` for Strassen.
     pub fn q(&self) -> usize {
         match *self {
             PlanDesc::Dense3d {
@@ -90,6 +102,7 @@ impl PlanDesc {
                 side, block_side, ..
             } => side / block_side,
             PlanDesc::Dense2d { side, m, .. } => side * side / m,
+            PlanDesc::Strassen { levels, .. } => 1 << levels,
         }
     }
 
@@ -112,6 +125,7 @@ impl PlanDesc {
                 block_side,
                 rho,
             } => format!("sp n={side} b={block_side} rho={rho}"),
+            PlanDesc::Strassen { side, levels } => format!("st n={side} L={levels}"),
         }
     }
 }
@@ -338,6 +352,44 @@ pub fn plan_dense2d(
     Ok((plan, search))
 }
 
+/// Enumerate and price the full dense tradeoff space *including* the
+/// blocked-Strassen schedules: every classical `(block_side, ρ)` pair
+/// (exactly [`plan_dense3d`]'s table — those candidates *are* `L = 0`,
+/// where [`super::strassen::AlgoStrassen`] degenerates to `Algo3d`)
+/// plus one candidate per recursion depth `L ≥ 1` with `2^L | side`.
+/// A Strassen reducer holds up to four signed operand blocks plus the
+/// combination it builds, so its budget gate is `5·bs²` words with
+/// `bs = side / 2^L`; its working-set gate is the *largest* per-round
+/// shuffle of the schedule (the forward fan, `6·(7/4)^{L-1}·n` words),
+/// which is what keeps deep recursions out of memory-starved contexts.
+/// The chosen descriptor answers "how many sub-cubic levels does this
+/// context afford?" — the new point on the paper's §1 tradeoff curve.
+pub fn plan_strassen(
+    side: usize,
+    memory_budget: usize,
+    profile: &ClusterProfile,
+) -> Result<PlanSearch> {
+    let (_, classical) = plan_dense3d(side, memory_budget, profile)?;
+    let mut candidates = classical.candidates;
+    let mut levels = 1usize;
+    while levels < 32 && side % (1usize << levels) == 0 {
+        let bs = side >> levels;
+        if 5 * bs * bs <= memory_budget && 2 * levels + 1 <= MAX_PLAN_ROUNDS {
+            let vols = volumes_strassen(side, levels);
+            let shuffle = vols.iter().map(|v| v.shuffle_words).fold(0.0, f64::max);
+            candidates.push(PricedPlan::from_sim(
+                PlanDesc::Strassen { side, levels },
+                (5 * bs * bs) as f64,
+                shuffle,
+                &simulate_strassen(side, levels, profile),
+                profile,
+            ));
+        }
+        levels += 1;
+    }
+    PlanSearch::pick(candidates)
+}
+
 /// Enumerate and price every valid 3D sparse plan for an Erdős–Rényi
 /// input with `nnz_per_row` expected non-zeros per row. Block sides are
 /// the divisors of `side` whose expected block population fits the
@@ -456,6 +508,53 @@ pub fn plan_dense3d_tail(
         anyhow::anyhow!(
             "no tail width ≥ {floor} divides the remaining {remaining} groups"
         )
+    })
+}
+
+/// Re-plan the *tail* of a 2D dense run. Unlike the 3D re-planner, 2D
+/// rounds carry nothing — every round reads the static strips and
+/// writes its own slice of the output — so the committed widths
+/// constrain nothing: any positive widths covering the remaining
+/// strips are legal, and the search may *narrow* as well as widen
+/// (there is no 3D-style floor). Each uniform candidate ρ' must divide
+/// the remaining strips and keep its `2ρ'n`-word round working set
+/// inside the profile's aggregate memory. Returns the winning tail
+/// widths and the predicted seconds of the pending rounds.
+pub fn plan_dense2d_tail(
+    side: usize,
+    m: usize,
+    committed: &[usize],
+    profile: &ClusterProfile,
+) -> Result<(Vec<usize>, f64)> {
+    let s = side * side / m.max(1);
+    let done: usize = committed.iter().sum();
+    if done >= s {
+        bail!("all {s} strips already committed");
+    }
+    let remaining = s - done;
+    let n = (side * side) as f64;
+    let mut best: Option<(Vec<usize>, f64)> = None;
+    for rho in divisors(remaining) {
+        if remaining / rho > MAX_PLAN_ROUNDS {
+            continue;
+        }
+        if !fits_cluster_memory(2.0 * rho as f64 * n, profile) {
+            continue;
+        }
+        let tail = vec![rho; remaining / rho];
+        // 2D rounds are independent, so the pending rounds price
+        // directly — no synthetic committed prefix is needed.
+        let pending = simulate_dense2d_schedule(side, m, &tail, profile).total();
+        let better = match &best {
+            None => true,
+            Some((_, b)) => pending < *b,
+        };
+        if better {
+            best = Some((tail, pending));
+        }
+    }
+    best.ok_or_else(|| {
+        anyhow::anyhow!("no feasible tail width for the remaining {remaining} strips")
     })
 }
 
@@ -617,6 +716,101 @@ mod tests {
         assert_eq!(tail, vec![8]);
         // A fully committed run has nothing to re-plan.
         assert!(plan_dense3d_tail(32000, 4000, &[8], &p).is_err());
+    }
+
+    #[test]
+    fn strassen_candidates_enumerated_alongside_classical() {
+        // side 16, generous budget: the classical table (5+4+3+2+1 = 15
+        // pairs over blocks {1,2,4,8,16}) plus one Strassen candidate
+        // per level L ∈ {1,2,3,4} (2^L | 16) → 19 candidates, and the
+        // Strassen rows carry the 5·bs² reducer bound and 2L+1 rounds.
+        let p = ClusterProfile::inhouse();
+        let search = plan_strassen(16, 5000, &p).unwrap();
+        assert_eq!(search.candidates.len(), 19);
+        let strassen: Vec<_> = search
+            .candidates
+            .iter()
+            .filter(|c| matches!(c.desc, PlanDesc::Strassen { .. }))
+            .collect();
+        assert_eq!(strassen.len(), 4);
+        for c in &strassen {
+            let PlanDesc::Strassen { side, levels } = c.desc else {
+                unreachable!()
+            };
+            assert_eq!(side, 16);
+            assert_eq!(c.rounds, 2 * levels + 1);
+            let bs = side >> levels;
+            assert_eq!(c.reducer_words, (5 * bs * bs) as f64);
+            assert_eq!(c.desc.rho(), 1);
+            assert_eq!(c.desc.q(), 1 << levels);
+        }
+    }
+
+    #[test]
+    fn compute_rich_context_picks_sub_cubic_at_large_sides() {
+        // On the compute-rich profile the local-multiply term dominates
+        // at scale: saving 1/8 of the block products per level beats
+        // the extra shuffle fan. At √n = 65536 the argmin is a Strassen
+        // schedule; at √n = 8192 the per-level saving (≈1.2 s) is
+        // smaller than one extra round's setup + fan, so the classical
+        // grid keeps winning — the crossover is side-dependent.
+        let p = ClusterProfile::compute_rich();
+        let large = plan_strassen(65536, 6_000_000_000, &p).unwrap();
+        assert!(
+            matches!(large.chosen().desc, PlanDesc::Strassen { levels, .. } if levels >= 1),
+            "compute-rich at 65536 chose {}",
+            large.chosen().desc.label()
+        );
+        let small = plan_strassen(8192, 6_000_000_000, &p).unwrap();
+        assert!(
+            matches!(small.chosen().desc, PlanDesc::Dense3d { .. }),
+            "compute-rich at 8192 chose {}",
+            small.chosen().desc.label()
+        );
+    }
+
+    #[test]
+    fn shuffle_starved_context_stays_classical() {
+        // Same shape, starved fabric: Strassen's signed-combination fan
+        // (12.5n shuffled words at L = 1 vs the monolithic grid's 6n)
+        // prices worse than the flops it saves, so the argmin stays
+        // L = 0 even though the L = 1 candidate is feasible and priced.
+        let p = ClusterProfile::shuffle_starved();
+        let search = plan_strassen(65536, 6_000_000_000, &p).unwrap();
+        assert!(
+            matches!(search.chosen().desc, PlanDesc::Dense3d { .. }),
+            "shuffle-starved chose {}",
+            search.chosen().desc.label()
+        );
+        let l1 = search
+            .candidates
+            .iter()
+            .find(|c| c.desc == PlanDesc::Strassen { side: 65536, levels: 1 })
+            .expect("the L=1 candidate stays in the table");
+        assert!(l1.feasible, "L=1 fits this cluster's memory — it loses on price");
+        assert!(l1.total_secs > search.chosen().total_secs);
+    }
+
+    #[test]
+    fn dense2d_tail_replan_may_narrow_and_widen() {
+        // √n = 32000, m = 4000² → s = 64 strips. With memory to spare
+        // the re-planner widens the pending tail to the biggest feasible
+        // divisor; on a constrained cluster it may *narrow* below the
+        // committed width — legal precisely because 2D rounds carry
+        // nothing (the 3D re-planner's floor does not apply).
+        let m = 4000 * 4000;
+        let p = ClusterProfile::inhouse();
+        let (tail, secs) = plan_dense2d_tail(32000, m, &[2, 2], &p).unwrap();
+        assert_eq!(tail, vec![20, 20, 20], "widest feasible divisor of 60");
+        assert!(secs > 0.0);
+        let constrained = ClusterProfile::inhouse().with_mem_per_node(4.0e9);
+        let (tail, _) = plan_dense2d_tail(32000, m, &[16], &constrained).unwrap();
+        assert_eq!(tail, vec![3; 16]);
+        assert!(tail[0] < 16, "narrower than the committed width");
+        // Starved: not even ρ' = 1 fits; fully committed: nothing left.
+        let starved = ClusterProfile::inhouse().with_mem_per_node(1.0e3);
+        assert!(plan_dense2d_tail(32000, m, &[2], &starved).is_err());
+        assert!(plan_dense2d_tail(32000, m, &[64], &p).is_err());
     }
 
     #[test]

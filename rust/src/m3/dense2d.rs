@@ -4,11 +4,15 @@
 //! A is split into `s = n/m` row strips `A_i` of shape `m/√n × √n`, B
 //! into `s` column strips `B_j` of shape `√n × m/√n`; output block
 //! `C[i,j] = A_i · B_j` is computed by a single reducer. Round `r`
-//! computes the subproblems `(i, j)` with `j = (i + ℓ + rρ) mod s`,
-//! `0 ≤ ℓ < ρ`; rounds are independent (no accumulators carried), so
-//! every round's reduce output is final.
+//! computes the subproblems `(i, j)` on the diagonals
+//! `(j - i) mod s ∈ [offset(r), offset(r) + width(r))` of a
+//! [`StripSchedule`] (the fixed-ρ plan is the uniform schedule, where
+//! round `r` covers `[rρ, rρ + ρ)`); rounds are independent (no
+//! accumulators carried), so every round's reduce output is final.
 
 use std::sync::Arc;
+
+use anyhow::{bail, Result};
 
 use crate::mapreduce::driver::MultiRoundAlgorithm;
 use crate::mapreduce::types::{Mapper, Partitioner, Reducer, Value};
@@ -57,27 +61,122 @@ impl Value for Strip {
     }
 }
 
+/// Per-round diagonal-width schedule of a 2D run.
+///
+/// Round `r` computes the subproblems `(i, j)` on the `widths[r]`
+/// diagonals `(j - i) mod s ∈ [offset(r), offset(r) + widths[r])`.
+/// Unlike the 3D [`super::algo3d::RhoSchedule`], 2D rounds carry
+/// nothing — every round reads the static strips and its reduce output
+/// is final — so a mid-run re-plan may install *any* positive widths
+/// covering the remaining diagonals: narrowing is as legal as widening
+/// and there is no non-decreasing constraint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StripSchedule {
+    s: usize,
+    widths: Vec<usize>,
+    /// `offsets[r]` = first diagonal of round `r` (prefix sums of
+    /// `widths`, precomputed: [`Self::offset`] sits on the per-key
+    /// mapper/reducer hot path).
+    offsets: Vec<usize>,
+}
+
+impl StripSchedule {
+    /// Validate and construct a schedule over `s` diagonals.
+    pub fn new(s: usize, widths: Vec<usize>) -> Result<Self> {
+        if s == 0 || widths.is_empty() {
+            bail!("schedule needs s ≥ 1 and at least one round");
+        }
+        if widths.iter().any(|&w| w == 0) {
+            bail!("round widths must be positive: {widths:?}");
+        }
+        let total: usize = widths.iter().sum();
+        if total != s {
+            bail!("round widths sum to {total}, expected s = {s}");
+        }
+        let mut offsets = Vec::with_capacity(widths.len());
+        let mut acc = 0usize;
+        for &w in &widths {
+            offsets.push(acc);
+            acc += w;
+        }
+        Ok(Self { s, widths, offsets })
+    }
+
+    /// The uniform schedule of a fixed-ρ plan (`s/ρ` rounds of `ρ`).
+    ///
+    /// # Panics
+    /// Panics unless `1 ≤ ρ ≤ s` and `ρ | s` (what [`Plan2d`] validates).
+    pub fn uniform(s: usize, rho: usize) -> Self {
+        assert!(
+            (1..=s).contains(&rho) && s % rho == 0,
+            "invalid uniform rho={rho} s={s}"
+        );
+        Self::new(s, vec![rho; s / rho]).expect("uniform schedules are valid by construction")
+    }
+
+    /// Strips per input matrix `s` (= diagonals to cover).
+    pub fn s(&self) -> usize {
+        self.s
+    }
+
+    /// Per-round diagonal widths.
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    /// Number of rounds.
+    pub fn rounds(&self) -> usize {
+        self.widths.len()
+    }
+
+    /// Width of round `r`.
+    pub fn width(&self, r: usize) -> usize {
+        self.widths[r]
+    }
+
+    /// First diagonal of round `r` (precomputed prefix sum).
+    pub fn offset(&self, r: usize) -> usize {
+        self.offsets[r]
+    }
+
+    /// Replace the widths from round `from_round` on with `tail`,
+    /// keeping the committed prefix. Any positive tail covering the
+    /// remaining diagonals is legal.
+    pub fn with_tail(&self, from_round: usize, tail: Vec<usize>) -> Result<Self> {
+        if from_round > self.widths.len() {
+            bail!(
+                "tail starts at round {from_round}, schedule has {}",
+                self.widths.len()
+            );
+        }
+        let mut widths = self.widths[..from_round].to_vec();
+        widths.extend(tail);
+        Self::new(self.s, widths)
+    }
+}
+
 /// Map function of Algorithm 2.
 pub struct Mapper2d {
-    plan: Plan2d,
+    sched: StripSchedule,
 }
 
 impl Mapper<PairKey, Strip> for Mapper2d {
     fn map(&self, round: usize, key: &PairKey, value: &Strip, emit: &mut dyn FnMut(PairKey, Strip)) {
-        let s = self.plan.strips();
-        let rho = self.plan.rho;
+        let s = self.sched.s();
+        let off = self.sched.offset(round);
+        let w = self.sched.width(round);
         match value {
             Strip::A(_) => {
                 let i = key.i as usize;
-                for l in 0..rho {
-                    let j = (i + l + round * rho) % s;
+                for l in 0..w {
+                    let j = (i + off + l) % s;
                     emit(PairKey::new(i, j), value.clone());
                 }
             }
             Strip::B(_) => {
                 let j = key.j as usize;
-                for l in 0..rho {
-                    let i = umod(j as isize - l as isize - (round * rho) as isize, s);
+                for l in 0..w {
+                    let i = umod(j as isize - (off + l) as isize, s);
                     emit(PairKey::new(i, j), value.clone());
                 }
             }
@@ -92,7 +191,7 @@ impl Mapper<PairKey, Strip> for Mapper2d {
 
 /// Reduce function of Algorithm 2: `C[i,j] = A_i · B_j`.
 pub struct Reducer2d {
-    plan: Plan2d,
+    sched: StripSchedule,
     backend: Arc<dyn LocalMultiply>,
 }
 
@@ -104,14 +203,12 @@ impl Reducer<PairKey, Strip> for Reducer2d {
         values: Vec<Strip>,
         emit: &mut dyn FnMut(PairKey, Strip),
     ) {
-        let s = self.plan.strips();
-        let rho = self.plan.rho;
-        // Liveness check: ℓ = (j - i - rρ) mod s must be < ρ.
-        let l = umod(
-            key.j as isize - key.i as isize - (round * rho) as isize,
-            s,
-        );
-        debug_assert!(l < rho, "2D reducer key {key:?} not live in round {round}");
+        let s = self.sched.s();
+        let off = self.sched.offset(round);
+        let w = self.sched.width(round);
+        // Liveness check: ℓ = (j - i - offset) mod s must be < width.
+        let l = umod(key.j as isize - key.i as isize - off as isize, s);
+        debug_assert!(l < w, "2D reducer key {key:?} not live in round {round}");
         let mut a = None;
         let mut b = None;
         for v in values {
@@ -141,22 +238,27 @@ impl Reducer<PairKey, Strip> for Reducer2d {
 /// The full 2D algorithm.
 pub struct Algo2d {
     plan: Plan2d,
+    sched: StripSchedule,
+    backend: Arc<dyn LocalMultiply>,
     mapper: Mapper2d,
     reducer: Reducer2d,
     partitioner: Box<dyn Partitioner<PairKey>>,
 }
 
 impl Algo2d {
-    /// Assemble the 2D algorithm.
+    /// Assemble the 2D algorithm (uniform schedule from the plan's ρ).
     pub fn new(
         plan: Plan2d,
         backend: Arc<dyn LocalMultiply>,
         partitioner: Box<dyn Partitioner<PairKey>>,
     ) -> Self {
+        let sched = StripSchedule::uniform(plan.strips(), plan.rho);
         Self {
+            mapper: Mapper2d { sched: sched.clone() },
+            reducer: Reducer2d { sched: sched.clone(), backend: backend.clone() },
+            sched,
             plan,
-            mapper: Mapper2d { plan },
-            reducer: Reducer2d { plan, backend },
+            backend,
             partitioner,
         }
     }
@@ -164,6 +266,27 @@ impl Algo2d {
     /// The validated plan.
     pub fn plan(&self) -> Plan2d {
         self.plan
+    }
+
+    /// The diagonal schedule in use.
+    pub fn schedule(&self) -> &StripSchedule {
+        &self.sched
+    }
+
+    /// Re-plan the rounds from `from_round` on with a new width
+    /// sequence (the committed prefix is untouched, so a resumable run
+    /// may call this at any round boundary ≤ its next pending round).
+    /// Because 2D rounds carry nothing, the tail may be *any* positive
+    /// cover of the remaining diagonals — the re-splits the 3D
+    /// re-planner's non-decreasing rule forbids are legal here. The
+    /// partitioner is kept as constructed (partitioning is
+    /// correctness-neutral).
+    pub fn set_tail_widths(&mut self, from_round: usize, tail: Vec<usize>) -> Result<()> {
+        let sched = self.sched.with_tail(from_round, tail)?;
+        self.mapper = Mapper2d { sched: sched.clone() };
+        self.reducer = Reducer2d { sched: sched.clone(), backend: self.backend.clone() };
+        self.sched = sched;
+        Ok(())
     }
 
     /// Build the static input pairs from the two matrices.
@@ -221,7 +344,7 @@ impl MultiRoundAlgorithm for Algo2d {
     type V = Strip;
 
     fn num_rounds(&self) -> usize {
-        self.plan.rounds()
+        self.sched.rounds()
     }
 
     fn mapper(&self, _round: usize) -> &dyn Mapper<PairKey, Strip> {
@@ -240,10 +363,10 @@ impl MultiRoundAlgorithm for Algo2d {
         false // every round's C blocks are final output
     }
 
-    fn groups_hint(&self, _round: usize) -> Option<usize> {
-        // Round r computes the ρ subproblems (i, (i+ℓ+rρ) mod s) for
-        // each of the s row strips: sρ live (i,j) keys every round.
-        Some(self.plan.strips() * self.plan.rho)
+    fn groups_hint(&self, round: usize) -> Option<usize> {
+        // Round r computes width(r) subproblems per row strip:
+        // s·width(r) live (i,j) keys.
+        Some(self.sched.s() * self.sched.width(round))
     }
 }
 
@@ -321,6 +444,55 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn strip_schedule_allows_arbitrary_resplits() {
+        assert!(StripSchedule::new(8, vec![4, 2, 2]).is_ok(), "narrowing is legal in 2D");
+        assert!(StripSchedule::new(8, vec![2, 2]).is_err(), "incomplete");
+        assert!(StripSchedule::new(8, vec![2, 2, 2, 2, 2]).is_err(), "overfull");
+        assert!(StripSchedule::new(8, vec![0, 8]).is_err(), "zero width");
+        assert!(StripSchedule::new(0, vec![1]).is_err(), "s = 0");
+        let s = StripSchedule::new(8, vec![1, 3, 4]).unwrap();
+        assert_eq!(s.rounds(), 3);
+        assert_eq!(s.offset(2), 4);
+        assert!(s.with_tail(1, vec![4, 3]).is_ok(), "any cover of the rest");
+        assert!(s.with_tail(1, vec![2, 2]).is_err(), "tail must keep the sum");
+        assert!(s.with_tail(4, vec![1]).is_err(), "past the last round");
+    }
+
+    #[test]
+    fn mid_run_tail_replan_preserves_the_product() {
+        // Commit two ρ=1 rounds of an s=8 run, then install the
+        // arbitrary re-split [3, 1, 2] for the pending diagonals —
+        // widening *and* narrowing in one tail, legal precisely because
+        // 2D rounds carry nothing. The output must stay bit-identical.
+        use crate::mapreduce::StepRun;
+        let plan = Plan2d::new(16, 32, 1).unwrap();
+        let mut rng = Xoshiro256ss::new(9);
+        let a = gen::dense_int(16, 16, &mut rng);
+        let b = gen::dense_int(16, 16, &mut rng);
+        let alg = Algo2d::new(
+            plan,
+            Arc::new(NaiveMultiply),
+            Box::new(BalancedPartitioner2d {
+                strips: plan.strips(),
+                rho: 1,
+            }),
+        );
+        let input = Algo2d::static_input(plan, &a, &b);
+        let mut run = StepRun::new(cfg(), alg, input);
+        assert_eq!(run.num_rounds(), 8);
+        run.step_commit();
+        run.step_commit();
+        run.alg_mut().set_tail_widths(2, vec![3, 1, 2]).unwrap();
+        assert_eq!(run.num_rounds(), 5, "widths [1, 1, 3, 1, 2]");
+        assert_eq!(run.next_round(), 2);
+        while !run.is_done() {
+            run.step_commit();
+        }
+        let got = Algo2d::assemble_output(plan, &run.into_result().output);
+        assert_eq!(got, a.matmul_naive(&b));
     }
 
     #[test]

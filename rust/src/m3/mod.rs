@@ -16,6 +16,10 @@
 //!   context", §1).
 //! * [`multiply`] — the high-level public API (`multiply_dense_3d`,
 //!   `multiply_sparse_3d`, `multiply_dense_2d`).
+//! * [`strassen`] — the blocked-Strassen schedule: `L` recursion
+//!   levels as round phases, `7^L` base products instead of `8^L`
+//!   (sub-cubic work) for `2L+1` rounds and extra addition shuffle —
+//!   a tradeoff point [`autoplan`] prices against the classical grid.
 
 pub mod algo3d;
 pub mod autoplan;
@@ -25,9 +29,11 @@ pub mod multiply;
 pub mod partitioner;
 pub mod planner;
 pub mod sparse_tools;
+pub mod strassen;
 
 pub use autoplan::{
-    plan_dense2d, plan_dense3d, plan_dense3d_tail, plan_sparse3d, PlanDesc, PlanSearch, PricedPlan,
+    plan_dense2d, plan_dense2d_tail, plan_dense3d, plan_dense3d_tail, plan_sparse3d, plan_strassen,
+    PlanDesc, PlanSearch, PricedPlan,
 };
 pub use keys::{PairKey, TripleKey};
 pub use multiply::{
@@ -35,3 +41,4 @@ pub use multiply::{
     PartitionerKind,
 };
 pub use planner::{Plan2d, Plan3d, SparsePlan};
+pub use strassen::{multiply_dense_strassen, AlgoStrassen};

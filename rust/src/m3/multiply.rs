@@ -55,7 +55,7 @@ impl M3Config {
     }
 }
 
-fn make_partitioner_3d(
+pub(crate) fn make_partitioner_3d(
     kind: PartitionerKind,
     q: usize,
     rho: usize,
@@ -116,7 +116,7 @@ impl DenseBlock {
 /// Take the matrix out of its `Arc`, copying only if it is still
 /// shared (final-round outputs are uniquely owned, so assembling the
 /// product is copy-free).
-fn unshare<T: Clone>(m: Arc<T>) -> T {
+pub(crate) fn unshare<T: Clone>(m: Arc<T>) -> T {
     Arc::try_unwrap(m).unwrap_or_else(|shared| (*shared).clone())
 }
 
@@ -151,6 +151,7 @@ impl DenseOps {
 
 impl BlockOps<DenseBlock> for DenseOps {
     fn fma(&self, a: &DenseBlock, b: &DenseBlock, c: Option<&DenseBlock>) -> DenseBlock {
+        crate::mapreduce::executor::record_block_product();
         let (a, b) = (a.matrix(), b.matrix());
         let out = match c {
             // A carried accumulator is shared (`Arc`), so the backend
@@ -200,6 +201,7 @@ impl<S: Semiring> Default for SemiringOps<S> {
 
 impl<S: Semiring> BlockOps<DenseBlock> for SemiringOps<S> {
     fn fma(&self, a: &DenseBlock, b: &DenseBlock, c: Option<&DenseBlock>) -> DenseBlock {
+        crate::mapreduce::executor::record_block_product();
         let (am, bm) = (a.matrix(), b.matrix());
         assert_eq!(am.cols(), bm.rows(), "inner dimensions must agree");
         let mut prod = DenseMatrix::filled(am.rows(), bm.cols(), S::zero());
@@ -408,6 +410,7 @@ pub struct SparseOps;
 
 impl BlockOps<SparseBlock> for SparseOps {
     fn fma(&self, a: &SparseBlock, b: &SparseBlock, c: Option<&SparseBlock>) -> SparseBlock {
+        crate::mapreduce::executor::record_block_product();
         let prod = a.csr().spgemm_par(b.csr());
         let out = match c {
             Some(c) => c.csr().add(&prod),

@@ -95,6 +95,33 @@ impl Partitioner<PairKey> for BalancedPartitioner2d {
     }
 }
 
+/// Partitioner for the Strassen schedule's `(path, role, pos)` keys
+/// ([`crate::m3::strassen::AlgoStrassen`]).
+///
+/// The live key domain changes shape every round (forward splits,
+/// base-case products, combine merges), so unlike Algorithm 3 there is
+/// no single contiguous enumeration to deal out in chunks; instead
+/// every key gets the splitmix scatter over an injective id
+/// `z = (path·3 + role)·4^L + pos` — uniform in expectation for every
+/// round's domain, and reproducible.
+#[derive(Debug, Clone, Copy)]
+pub struct StrassenPartitioner {
+    /// Recursion depth `L ≥ 1`.
+    pub levels: usize,
+}
+
+impl Partitioner<TripleKey> for StrassenPartitioner {
+    fn partition(&self, key: &TripleKey, num_tasks: usize) -> usize {
+        // `pos < 4^L` in every round (forward positions shrink, combine
+        // positions grow back to the 2^L × 2^L output grid), so z is
+        // injective over the union of all rounds' key domains.
+        // h = -1 (io keys) never reaches the shuffle, but clamp anyway.
+        let (path, role, pos) = (key.i as usize, key.h.max(0) as usize, key.j as usize);
+        let z = (path * 3 + role) * (1usize << (2 * self.levels)) + pos;
+        scatter(z, num_tasks)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -2,8 +2,11 @@
 //!
 //! Subcommands:
 //!
-//! * `multiply` — run a dense 3D/2D multi-round multiplication on the
-//!   engine with the XLA (default), native, or naive backend.
+//! * `multiply` — run a dense 3D/2D (or blocked-Strassen, `--algo
+//!   strassen --levels L`) multi-round multiplication on the engine
+//!   with the XLA (default), native, or naive backend; `--verify`
+//!   checks the product bit-exactly, or within a relative tolerance
+//!   with `--tol <eps>`.
 //! * `sparse`   — run the 3D sparse algorithm on an Erdős–Rényi input.
 //! * `serve`    — run a multi-tenant workload through the round-level
 //!   job scheduler (FIFO / fair / SRPT, optional spot preemptions,
@@ -12,7 +15,8 @@
 //!   in-round recovery and injects seeded per-job chaos plans).
 //! * `chaos`    — run one multiplication under a seeded fault plan
 //!   (node kills, stragglers, transient task failures), report the
-//!   recovery counters, and `--verify` the product bit-exactly.
+//!   recovery counters, and `--verify` the product bit-exactly (or
+//!   within `--tol <eps>`).
 //! * `plan`     — enumerate and price every valid plan for a shape
 //!   under a reducer-memory budget; print the tradeoff table and the
 //!   auto-chosen plan.
@@ -35,8 +39,8 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use m3::m3::{
-    multiply_dense_2d, multiply_dense_3d, multiply_sparse_3d, M3Config, PartitionerKind, Plan3d,
-    SparsePlan,
+    multiply_dense_2d, multiply_dense_3d, multiply_dense_strassen, multiply_sparse_3d, M3Config,
+    PartitionerKind, Plan3d, SparsePlan,
 };
 use m3::mapreduce::EngineConfig;
 use m3::matrix::gen;
@@ -53,9 +57,10 @@ const USAGE: &str = "\
 m3 — multi-round matrix multiplication on MapReduce
 
 USAGE:
-  m3 multiply --n <side> --block <side> --rho <r> [--algo 3d|2d]
-              [--backend xla|native|naive|auto] [--partitioner balanced|naive]
-              [--seed <u64>] [--verify] [--nodes <p>] [--slots <s>]
+  m3 multiply --n <side> --block <side> --rho <r> [--algo 3d|2d|strassen]
+              [--levels <L>] [--backend xla|native|naive|auto]
+              [--partitioner balanced|naive] [--seed <u64>]
+              [--verify] [--tol <eps>] [--nodes <p>] [--slots <s>]
   m3 sparse   --n <side> --nnz-per-row <k> --block <side> --rho <r> [--verify]
   m3 serve    [--policy fifo|fair|srpt] [--jobs <n>] [--tenants <t>]
               [--seed <u64>] [--mean-arrival <secs>] [--preempt-rate <per-100s>]
@@ -63,15 +68,15 @@ USAGE:
               [--profile inhouse|c3|i2] [--paper-flops]
               [--backend xla|native|naive|auto]
               [--faults] [--fault-nodes <n>] [--strike-fraction <0..1>]
-              [--verify] [--report] [--trace] [--out trace.json]
-  m3 chaos    [--algo 3d|2d|sparse] [--n <side>] [--block <side>]
-              [--rho <r>] [--nnz-per-row <k>] [--seed <u64>]
+              [--verify] [--tol <eps>] [--report] [--trace] [--out trace.json]
+  m3 chaos    [--algo 3d|2d|sparse|strassen] [--n <side>] [--block <side>]
+              [--rho <r>] [--levels <L>] [--nnz-per-row <k>] [--seed <u64>]
               [--fault-nodes <n>] [--backend xla|native|naive|auto]
-              [--verify]
+              [--verify] [--tol <eps>]
   m3 trace    [--n <side>] [--block <side>] [--rho <r>] [--algo 3d|2d]
               [--backend xla|native|naive|auto] [--seed <u64>]
               [--out trace.json]
-  m3 plan     [--algo 3d|2d|sparse] --n <side> [--budget <words>]
+  m3 plan     [--algo 3d|2d|sparse|strassen] --n <side> [--budget <words>]
               [--nnz-per-row <k>] [--profile inhouse|c3|i2] [--nodes <p>]
               [--mem-per-node-gb <g>] [--paper-flops]
   m3 figures  [--fig <1..10>] [--ablations] [--out-dir figures]
@@ -94,7 +99,8 @@ fn main() {
         "n", "block", "rho", "algo", "backend", "partitioner", "seed", "nodes", "slots", "fig",
         "out-dir", "profile", "nnz-per-row", "workers", "policy", "jobs", "tenants",
         "mean-arrival", "preempt-rate", "pairs", "reduce-tasks", "out", "sides", "sparse-side",
-        "budget", "auto-fraction", "mem-per-node-gb", "fault-nodes", "strike-fraction",
+        "budget", "auto-fraction", "mem-per-node-gb", "fault-nodes", "strike-fraction", "levels",
+        "tol",
     ]);
     let args = match Args::parse(&spec) {
         Ok(a) => a,
@@ -220,6 +226,7 @@ fn cmd_multiply(args: &Args) -> Result<()> {
     let block: usize = args.get("block", 256).map_err(anyhow::Error::msg)?;
     let rho: usize = args.get("rho", 1).map_err(anyhow::Error::msg)?;
     let seed: u64 = args.get("seed", 42).map_err(anyhow::Error::msg)?;
+    let levels: usize = args.get("levels", 1).map_err(anyhow::Error::msg)?;
     let algo = args.opt_or("algo", "3d");
     let cfg = M3Config {
         block_side: block,
@@ -238,6 +245,7 @@ fn cmd_multiply(args: &Args) -> Result<()> {
     let (c, metrics) = match algo.as_str() {
         "3d" => multiply_dense_3d(&a, &b, &cfg, backend.clone())?,
         "2d" => multiply_dense_2d(&a, &b, &cfg, backend.clone())?,
+        "strassen" => multiply_dense_strassen(&a, &b, levels, &cfg, backend.clone())?,
         other => bail!("unknown algo {other:?}"),
     };
     let wall = t0.elapsed();
@@ -249,12 +257,28 @@ fn cmd_multiply(args: &Args) -> Result<()> {
         backend.kernel_time().as_secs_f64(),
         backend.name(),
     );
+    if algo == "strassen" {
+        println!(
+            "strassen levels={levels} block_products={}",
+            metrics.total_block_products()
+        );
+    }
     if args.flag("verify") {
+        let tol: f32 = args.get("tol", 0.0).map_err(anyhow::Error::msg)?;
         eprintln!("[m3] verifying against naive reference…");
         let want = a.matmul_naive(&b);
-        let diff = c.max_abs_diff(&want);
-        anyhow::ensure!(diff == 0.0, "verification failed: max abs diff {diff}");
-        println!("verify: OK (exact match)");
+        if tol > 0.0 {
+            let rel = c.max_rel_diff(&want);
+            anyhow::ensure!(
+                rel <= tol,
+                "verification failed: max rel diff {rel:e} > tol {tol:e}"
+            );
+            println!("verify: OK (max rel diff {rel:.2e} <= tol {tol:.2e})");
+        } else {
+            let diff = c.max_abs_diff(&want);
+            anyhow::ensure!(diff == 0.0, "verification failed: max abs diff {diff}");
+            println!("verify: OK (exact match)");
+        }
     }
     Ok(())
 }
@@ -452,15 +476,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         specs.len()
     );
     if args.flag("verify") {
+        let tol: f32 = args.get("tol", 0.0).map_err(anyhow::Error::msg)?;
         eprintln!("[m3] verifying every job against the reference multiply…");
         for c in &out.completed {
-            anyhow::ensure!(
-                c.output.matches(&c.spec),
-                "job {} produced a wrong product",
-                c.spec.id
-            );
+            let ok = if tol > 0.0 {
+                c.output.matches_tol(&c.spec, tol)
+            } else {
+                c.output.matches(&c.spec)
+            };
+            anyhow::ensure!(ok, "job {} produced a wrong product", c.spec.id);
         }
-        println!("verify: OK ({} jobs exact)", out.completed.len());
+        if tol > 0.0 {
+            println!("verify: OK ({} jobs within tol {tol:e})", out.completed.len());
+        } else {
+            println!("verify: OK ({} jobs exact)", out.completed.len());
+        }
     }
     Ok(())
 }
@@ -478,6 +508,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     let rho: usize = args.get("rho", 1).map_err(anyhow::Error::msg)?;
     let seed: u64 = args.get("seed", 42).map_err(anyhow::Error::msg)?;
     let nnz: usize = args.get("nnz-per-row", 8).map_err(anyhow::Error::msg)?;
+    let levels: usize = args.get("levels", 1).map_err(anyhow::Error::msg)?;
     let nodes: usize = args.get("fault-nodes", 4).map_err(anyhow::Error::msg)?;
     // A one-node "cluster" has nowhere to re-home lost attempts.
     let nodes = nodes.max(2);
@@ -498,7 +529,8 @@ fn cmd_chaos(args: &Args) -> Result<()> {
             rho,
             nnz_per_row: nnz,
         },
-        other => bail!("unknown algo {other:?} (expected 3d, 2d, or sparse)"),
+        "strassen" => JobKind::Strassen { side: n, levels },
+        other => bail!("unknown algo {other:?} (expected 3d, 2d, sparse, or strassen)"),
     };
     let spec = JobSpec {
         id: 0,
@@ -555,11 +587,14 @@ fn cmd_chaos(args: &Args) -> Result<()> {
         metrics.total_recovery_fallbacks(),
     );
     if args.flag("verify") {
+        let tol: f32 = args.get("tol", 0.0).map_err(anyhow::Error::msg)?;
         eprintln!("[m3] verifying the chaos product against the reference multiply…");
-        anyhow::ensure!(
-            out.matches(&spec),
-            "chaos run produced a wrong product (algo={algo}, seed={seed})"
-        );
+        let ok = if tol > 0.0 {
+            out.matches_tol(&spec, tol)
+        } else {
+            out.matches(&spec)
+        };
+        anyhow::ensure!(ok, "chaos run produced a wrong product (algo={algo}, seed={seed})");
         println!("CHAOS verify=OK");
     }
     Ok(())
@@ -681,7 +716,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 /// (the paper's Figures 3/6 as data) and the auto-chosen plan.
 fn cmd_plan(args: &Args) -> Result<()> {
     use m3::m3::autoplan::PlanSearch;
-    use m3::m3::{plan_dense2d, plan_dense3d, plan_sparse3d};
+    use m3::m3::{plan_dense2d, plan_dense3d, plan_sparse3d, plan_strassen};
     let algo = args.opt_or("algo", "3d");
     let n: usize = args.get("n", 16000).map_err(anyhow::Error::msg)?;
     let budget: usize = args.get("budget", 48_000_000).map_err(anyhow::Error::msg)?;
@@ -725,7 +760,13 @@ fn cmd_plan(args: &Args) -> Result<()> {
                 s,
             )
         }
-        other => bail!("unknown algo {other:?} (3d|2d|sparse)"),
+        "strassen" => {
+            let s = plan_strassen(n, budget, &profile)?;
+            let c = s.chosen();
+            let line = format!("chosen: {} -> {} rounds", c.desc.label(), c.rounds);
+            (line, s)
+        }
+        other => bail!("unknown algo {other:?} (3d|2d|sparse|strassen)"),
     };
     let mut t = Table::new(&[
         "plan",

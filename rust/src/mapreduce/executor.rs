@@ -140,6 +140,7 @@ struct StatCells {
     steals: AtomicU64,
     subtasks: AtomicU64,
     busy_nanos: AtomicU64,
+    block_products: AtomicU64,
 }
 
 /// A monotone snapshot of pool activity, for per-round utilisation and
@@ -160,6 +161,11 @@ pub struct PoolStats {
     /// task's share, so each busy nanosecond is counted exactly once
     /// and `busy / (wall × slots)` is a true utilisation.
     pub busy_nanos: u64,
+    /// Base block products recorded by tasks of this pool
+    /// ([`record_block_product`]): one per local block multiply in the
+    /// m3 block-algebra layer. Per-pool, so concurrent jobs on other
+    /// pools (or parallel tests) never pollute a round's delta.
+    pub block_products: u64,
 }
 
 struct Shared {
@@ -215,6 +221,25 @@ pub fn subtask_tiling() -> bool {
         Some(ctx) => unsafe { (*ctx.shared).tiling.load(Ordering::Relaxed) },
         None => true,
     })
+}
+
+/// Record one base block product against the pool the current thread is
+/// executing a task on (a no-op off-pool — there is no round window to
+/// attribute the product to). Called from the m3 block-algebra layer
+/// (`DenseOps::fma`, the Strassen base-case multiply, and the sparse /
+/// semiring counterparts) so [`crate::mapreduce::RoundMetrics`] can
+/// report per-round block-product counts without the engine layer
+/// knowing anything about block algebra.
+pub fn record_block_product() {
+    CTX.with(|c| {
+        if let Some(ctx) = c.get() {
+            // SAFETY: the ctx is only set while its pool task executes,
+            // and `Shared` outlives every in-flight task.
+            unsafe { &(*ctx.shared).stats }
+                .block_products
+                .fetch_add(1, Ordering::Relaxed);
+        }
+    });
 }
 
 /// Width of the pool the current thread is executing a task on
@@ -597,6 +622,7 @@ impl Pool {
             steals: self.shared.stats.steals.load(Ordering::Relaxed),
             subtasks: self.shared.stats.subtasks.load(Ordering::Relaxed),
             busy_nanos: self.shared.stats.busy_nanos.load(Ordering::Relaxed),
+            block_products: self.shared.stats.block_products.load(Ordering::Relaxed),
         }
     }
 
@@ -654,10 +680,20 @@ impl Pool {
             let mut panicked = false;
             for i in 0..num_tasks {
                 let saved = EXCLUDED_NANOS.with(|e| e.replace(0));
+                // Attribute in-task accounting (e.g. block products) to
+                // this pool even on the sequential path, like `execute`
+                // does on worker threads.
+                let prev = CTX.with(|c| {
+                    c.replace(Some(Ctx {
+                        shared: Arc::as_ptr(&self.shared),
+                        slot: 0,
+                    }))
+                });
                 let t0 = Instant::now();
                 if catch_unwind(AssertUnwindSafe(|| task(i))).is_err() {
                     panicked = true;
                 }
+                CTX.with(|c| c.set(prev));
                 let elapsed = t0.elapsed().as_nanos() as u64;
                 if trace::enabled() {
                     let end = trace::now_ns();
@@ -749,6 +785,22 @@ impl std::fmt::Debug for Pool {
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn block_products_attribute_to_the_executing_pool_only() {
+        record_block_product(); // off-pool: documented no-op
+        let pool = Pool::new(2);
+        let other = Pool::new(2);
+        let s0 = pool.stats().block_products;
+        pool.run_indexed(4, |_| record_block_product());
+        assert_eq!(pool.stats().block_products - s0, 4);
+        assert_eq!(other.stats().block_products, 0, "counter is per-pool");
+        // Single-worker pools run tasks on the sequential fast path and
+        // must still attribute products to their own stats.
+        let seq = Pool::new(1);
+        seq.run_indexed(3, |_| record_block_product());
+        assert_eq!(seq.stats().block_products, 3);
+    }
 
     #[test]
     fn results_in_task_order() {

@@ -255,6 +255,7 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
         metrics.write_time = Duration::ZERO; // set by the driver when materialising
 
         let stats1 = pool.stats();
+        metrics.block_products = (stats1.block_products - stats0.block_products) as usize;
         let wall = round_start.elapsed().as_secs_f64();
         metrics.steals = (stats1.steals - stats0.steals) as usize;
         metrics.subtasks = (stats1.subtasks - stats0.subtasks) as usize;

@@ -92,6 +92,16 @@ pub struct RoundMetrics {
     /// 1 when this round lost a node and no DFS replica existed, so
     /// recovery degraded to the documented whole-round fallback.
     pub recovery_fallbacks: usize,
+    /// Base block products executed during the round's window: the
+    /// before/after delta of the pool's
+    /// [`crate::mapreduce::PoolStats::block_products`] counter, which
+    /// the m3 ops layer bumps once per local block multiply (additions
+    /// are not counted). Per-pool, so parallel tests don't pollute each
+    /// other; like the other pool counters, gang-scheduled rounds
+    /// sharing one pool attribute a partner's products to both rounds,
+    /// while solo runs are exact. One classical dense-3D job totals
+    /// `q³`; one Strassen level replaces 8 of them with 7.
+    pub block_products: usize,
 }
 
 impl RoundMetrics {
@@ -244,6 +254,13 @@ impl JobMetrics {
         self.rounds.iter().map(|r| r.recovery_fallbacks).sum()
     }
 
+    /// Total base block products across rounds (the paper's block-work
+    /// count: `q³` for classical dense 3D, `7^L` for an L-level
+    /// Strassen schedule).
+    pub fn total_block_products(&self) -> usize {
+        self.rounds.iter().map(|r| r.block_products).sum()
+    }
+
     /// Mean per-round pool utilisation (0 when no rounds ran).
     pub fn mean_pool_utilisation(&self) -> f64 {
         if self.rounds.is_empty() {
@@ -382,6 +399,16 @@ mod tests {
         assert_eq!(j.total_recovery_fallbacks(), 1);
         let fresh = mk(2, 1, 1);
         assert_eq!(fresh.task_attempts, 0, "fault-free rounds stay zero");
+    }
+
+    #[test]
+    fn block_products_aggregate() {
+        let mut a = mk(0, 1, 1);
+        a.block_products = 7;
+        let mut b = mk(1, 1, 1);
+        b.block_products = 1;
+        let j = JobMetrics { rounds: vec![a, b] };
+        assert_eq!(j.total_block_products(), 8);
     }
 
     #[test]

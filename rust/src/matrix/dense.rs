@@ -172,6 +172,19 @@ impl DenseMatrix {
             .fold(0.0, f32::max)
     }
 
+    /// Largest element-wise relative difference against `other`, with
+    /// the denominator floored at 1.0 so near-zero reference entries
+    /// compare absolutely — the `--tol` verification metric.
+    pub fn max_rel_diff(&self, other: &DenseMatrix) -> f32 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() / b.abs().max(1.0))
+            .fold(0.0, f32::max)
+    }
+
     /// Approximate size in memory words (the paper's unit for reducer
     /// size accounting).
     pub fn words(&self) -> usize {
@@ -339,5 +352,16 @@ mod tests {
         let mut rng = Xoshiro256ss::new(5);
         let a = random_int_matrix(6, 6, &mut rng);
         assert_eq!(a.max_abs_diff(&a), 0.0);
+    }
+
+    #[test]
+    fn max_rel_diff_floors_the_denominator_at_one() {
+        let want = DenseMatrix::from_vec(1, 2, vec![100.0, 0.5]);
+        let got = DenseMatrix::from_vec(1, 2, vec![101.0, 0.25]);
+        // 1/100 relative on the large entry, 0.25 absolute (denominator
+        // floored at 1.0) on the sub-unit entry.
+        let rel = got.max_rel_diff(&want);
+        assert!((rel - 0.25).abs() < 1e-6, "got {rel}");
+        assert_eq!(want.max_rel_diff(&want), 0.0);
     }
 }

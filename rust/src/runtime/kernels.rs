@@ -248,8 +248,8 @@ unsafe fn micro_scalar<const MRV: usize, const NRV: usize>(
 #[cfg(target_arch = "x86_64")]
 mod avx {
     use std::arch::x86_64::{
-        _mm256_add_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps, _mm256_setzero_ps,
-        _mm256_storeu_ps,
+        _mm256_add_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps,
+        _mm256_setzero_ps, _mm256_storeu_ps,
     };
 
     /// MRV×(NV·8) register block: NV `__m256` accumulators per row,
@@ -290,6 +290,35 @@ mod avx {
                 let cptr = c_tile.add(r * ldc + v * 8);
                 _mm256_storeu_ps(cptr, _mm256_add_ps(_mm256_loadu_ps(cptr), *slot));
             }
+        }
+    }
+
+    /// Vector twin of [`super::axpby_scalar`]: `y = α·x + β·y` over
+    /// 8-lane chunks, scalar tail for the remainder. Deliberately built
+    /// from separate `mul`/`add` (NOT `fmadd`): elementwise IEEE
+    /// multiply and add are lane-exact, so this variant is bit-for-bit
+    /// identical to the scalar oracle on *all* inputs — unlike the GEMM
+    /// microkernels, whose FMA only agrees on exactly-representable
+    /// products.
+    ///
+    /// # Safety
+    /// Requires AVX2 at runtime; `x` and `y` must each cover `len`
+    /// floats.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpby_avx(alpha: f32, x: *const f32, beta: f32, y: *mut f32, len: usize) {
+        let av = _mm256_set1_ps(alpha);
+        let bv = _mm256_set1_ps(beta);
+        let main = len - len % 8;
+        let mut i = 0;
+        while i < main {
+            let xv = _mm256_loadu_ps(x.add(i));
+            let yv = _mm256_loadu_ps(y.add(i));
+            let r = _mm256_add_ps(_mm256_mul_ps(av, xv), _mm256_mul_ps(bv, yv));
+            _mm256_storeu_ps(y.add(i), r);
+            i += 8;
+        }
+        for j in main..len {
+            *y.add(j) = alpha * *x.add(j) + beta * *y.add(j);
         }
     }
 
@@ -878,6 +907,46 @@ pub fn gemm_acc_sr_par<S: Semiring>(
     });
 }
 
+/// Scalar oracle for the block linear combination `y = α·x + β·y`.
+///
+/// Written as explicit `mul`/`mul`/`add` per element; Rust never
+/// contracts float expressions into FMAs, so the vector twin
+/// ([`axpby`]'s AVX2 path, built from `_mm256_mul_ps` +
+/// `_mm256_add_ps`) produces **bit-identical** results on every input,
+/// fractional included — elementwise IEEE ops have no accumulation
+/// order to perturb. This is the kernel the Strassen block algebra's
+/// reduce-side T/S/C combinations bottom out in.
+pub fn axpby_scalar(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "axpby operands must match");
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv = alpha * xv + beta * *yv;
+    }
+}
+
+/// SIMD-aware block linear combination `y = α·x + β·y`, dispatched
+/// once per process like the GEMM microkernels ([`simd_level`]):
+/// AVX2 hosts run the 8-lane vector twin, everything else (and
+/// `M3_FORCE_SCALAR=1`) the scalar oracle. The two paths are
+/// bit-for-bit identical on all inputs (see [`axpby_scalar`]), so the
+/// dispatch never changes results.
+///
+/// With `α, β ∈ {0, ±1}` this is the exact block add/sub/copy/negate
+/// the Strassen schedule needs: multiplying by `±1`/`0` is exact in
+/// IEEE arithmetic, so e.g. `axpby(-1, x, 1, y)` is precisely `y - x`.
+pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "axpby operands must match");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_level().is_simd() {
+            // SAFETY: AVX2 verified by `simd_level`; both slices cover
+            // `len` floats by the assert above.
+            unsafe { avx::axpby_avx(alpha, x.as_ptr(), beta, y.as_mut_ptr(), y.len()) };
+            return;
+        }
+    }
+    axpby_scalar(alpha, x, beta, y);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1313,6 +1382,55 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_axpby_simd_bit_matches_the_scalar_oracle() {
+        // Unlike the GEMM FMA pins, this holds on arbitrary fractional
+        // inputs: axpby is elementwise mul/mul/add in both dispatches,
+        // so there is no rounding or ordering freedom at all. Lengths
+        // straddle the 8-lane vector width.
+        run_prop("axpby dispatch == scalar oracle", 40, |case| {
+            let len = 1 + case.rng.next_usize(70);
+            let mut rng = Xoshiro256ss::new(case.rng.next_u64());
+            let x = fractional(1, len, &mut rng);
+            let y0 = fractional(1, len, &mut rng);
+            let coeffs = [1.0f32, -1.0, 0.0, 0.5, -2.75];
+            let alpha = coeffs[rng.range_u64(0, coeffs.len() as u64 - 1) as usize];
+            let beta = coeffs[rng.range_u64(0, coeffs.len() as u64 - 1) as usize];
+            let mut got = y0.clone();
+            axpby(alpha, &x, beta, &mut got);
+            let mut want = y0.clone();
+            axpby_scalar(alpha, &x, beta, &mut want);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                if g.to_bits() != w.to_bits() {
+                    return Err(format!(
+                        "axpby({alpha},{beta}) len {len}: bit mismatch at {i}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn axpby_signed_combinations_are_exact() {
+        // The Strassen coefficients are all ±1: check the add, sub,
+        // copy, and negate cases against hand arithmetic.
+        let x = [1.5f32, -2.0, 3.25, 0.0, 7.0];
+        let y0 = [10.0f32, 20.0, 30.0, 40.0, 50.0];
+        let mut y = y0;
+        axpby(1.0, &x, 1.0, &mut y); // y + x
+        assert_eq!(y, [11.5, 18.0, 33.25, 40.0, 57.0]);
+        let mut y = y0;
+        axpby(-1.0, &x, 1.0, &mut y); // y - x
+        assert_eq!(y, [8.5, 22.0, 26.75, 40.0, 43.0]);
+        let mut y = y0;
+        axpby(1.0, &x, 0.0, &mut y); // copy
+        assert_eq!(y, x);
+        let mut y = y0;
+        axpby(-1.0, &x, 0.0, &mut y); // negate
+        assert_eq!(y, [-1.5, 2.0, -3.25, 0.0, -7.0]);
     }
 
     #[test]

@@ -9,31 +9,38 @@
 //! type-erased [`ActiveJob`] — a [`StepRun`] plus output assembly and
 //! per-round time predictions from the cost-model simulator — which the
 //! round-level scheduler steps one round at a time, re-pricing
-//! ([`ActiveJob::repredict`]) and, for auto dense-3D jobs, re-planning
-//! the pending rounds' ρ schedule ([`ActiveJob::replan`]) as the online
-//! recalibration updates the profile.
+//! ([`ActiveJob::repredict`]) and, for auto dense jobs, re-planning the
+//! pending rounds' width schedule ([`ActiveJob::replan`]) as the online
+//! recalibration updates the profile — 3D tails may only widen
+//! (accumulators carry), 2D tails may re-split arbitrarily (rounds
+//! carry nothing).
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::m3::algo3d::{Algo3d, Geometry};
-use crate::m3::autoplan::{plan_dense2d, plan_dense3d, plan_dense3d_tail, plan_sparse3d};
+use crate::m3::autoplan::{
+    plan_dense2d, plan_dense2d_tail, plan_dense3d, plan_dense3d_tail, plan_sparse3d, plan_strassen,
+    PlanDesc,
+};
 use crate::m3::dense2d::Algo2d;
 use crate::m3::multiply::{
     dense_3d_assemble, dense_3d_static_input, sparse_3d_assemble, sparse_3d_static_input,
-    DenseBlock, DenseOps, SparseBlock, SparseOps,
+    DenseBlock, DenseOps, M3Config, SparseBlock, SparseOps,
 };
 use crate::m3::partitioner::{BalancedPartitioner2d, BalancedPartitioner3d};
 use crate::m3::planner::{Plan2d, Plan3d, SparsePlan};
+use crate::m3::strassen::AlgoStrassen;
 use crate::mapreduce::{
     EngineConfig, JobMetrics, MultiRoundAlgorithm, Pair, Pool, RoundMetrics, StepRun,
 };
 use crate::matrix::{gen, BlockGrid, CooMatrix, DenseMatrix};
 use crate::runtime::LocalMultiply;
 use crate::simulator::{
-    simulate_dense2d, simulate_dense3d_schedule, simulate_sparse3d, volumes_dense2d,
-    volumes_dense3d_schedule, volumes_sparse3d, ClusterProfile,
+    simulate_dense2d_schedule, simulate_dense3d_schedule, simulate_sparse3d, simulate_strassen,
+    volumes_dense2d_schedule, volumes_dense3d_schedule, volumes_sparse3d, volumes_strassen,
+    ClusterProfile,
 };
 use crate::util::rng::Xoshiro256ss;
 
@@ -69,15 +76,27 @@ pub enum JobKind {
         /// Expected non-zeros per row (density `δ = nnz_per_row/side`).
         nnz_per_row: usize,
     },
+    /// Blocked-Strassen schedule ([`crate::m3::strassen`]): `levels`
+    /// recursion levels, `7^levels` base block products over
+    /// `2·levels+1` rounds (`levels = 0` runs the classical monolithic
+    /// 3D plan).
+    Strassen {
+        /// Matrix side `√n`.
+        side: usize,
+        /// Recursion levels `L`.
+        levels: usize,
+    },
 }
 
 impl JobKind {
-    /// The job's replication factor ρ.
+    /// The job's replication factor ρ (1 for Strassen schedules: each
+    /// level's groups run one phase per round).
     pub fn rho(&self) -> usize {
         match *self {
             JobKind::Dense3d { rho, .. }
             | JobKind::Dense2d { rho, .. }
             | JobKind::Sparse3d { rho, .. } => rho,
+            JobKind::Strassen { .. } => 1,
         }
     }
 
@@ -100,6 +119,7 @@ impl JobKind {
                 rho,
                 nnz_per_row,
             } => format!("sp n={side} b={block_side} rho={rho} k={nnz_per_row}"),
+            JobKind::Strassen { side, levels } => format!("st n={side} L={levels}"),
         }
     }
 }
@@ -168,13 +188,40 @@ impl JobOutput {
             _ => false,
         }
     }
+
+    /// Verify against the reference multiply with per-entry *relative*
+    /// tolerance: `|got − want| ≤ tol · max(1, |want|)`. The Strassen
+    /// schedule is not bit-identical to classical GEMM on float inputs
+    /// (its extra additions perturb rounding), so float verification
+    /// goes through this mode; `tol = 0` degenerates to the exact
+    /// [`matches`](Self::matches).
+    pub fn matches_tol(&self, spec: &JobSpec, tol: f32) -> bool {
+        fn close(got: &DenseMatrix, want: &DenseMatrix, tol: f32) -> bool {
+            got.rows() == want.rows()
+                && got.cols() == want.cols()
+                && got
+                    .as_slice()
+                    .iter()
+                    .zip(want.as_slice())
+                    .all(|(&g, &w)| (g - w).abs() <= tol * w.abs().max(1.0))
+        }
+        match (self, reference_product(spec)) {
+            (JobOutput::Dense(got), JobOutput::Dense(want)) => close(got, &want, tol),
+            (JobOutput::Sparse(got), JobOutput::Sparse(want)) => {
+                close(&got.to_dense(), &want.to_dense(), tol)
+            }
+            _ => false,
+        }
+    }
 }
 
 /// Regenerate `spec`'s inputs from its seed and compute the product
 /// with the reference (naive / SpGEMM) multiply.
 pub fn reference_product(spec: &JobSpec) -> JobOutput {
     match spec.kind {
-        JobKind::Dense3d { side, .. } | JobKind::Dense2d { side, .. } => {
+        JobKind::Dense3d { side, .. }
+        | JobKind::Dense2d { side, .. }
+        | JobKind::Strassen { side, .. } => {
             let (a, b) = dense_inputs(side, spec.seed);
             JobOutput::Dense(a.matmul_naive(&b))
         }
@@ -264,8 +311,8 @@ pub trait ActiveJob: Send {
     fn finish(self: Box<Self>) -> (JobOutput, JobMetrics);
 }
 
-/// Generic [`ActiveJob`] for the fixed-schedule kinds (2D dense,
-/// sparse): a resumable [`StepRun`], the cost-model round predictions
+/// Generic [`ActiveJob`] for the fixed-schedule kinds (sparse,
+/// Strassen): a resumable [`StepRun`], the cost-model round predictions
 /// and flop volumes, a profile-parametric re-predictor, and a deferred
 /// output assembler.
 struct SteppedJob<A: MultiRoundAlgorithm> {
@@ -408,6 +455,99 @@ impl ActiveJob for Dense3dJob {
     }
 }
 
+/// The 2D dense [`ActiveJob`]: concrete so a mid-job re-plan can
+/// re-split the pending diagonals' width schedule through
+/// [`StepRun::alg_mut`]. Because 2D rounds carry nothing, the installed
+/// tail may be an *arbitrary* positive cover of the remaining
+/// diagonals — narrowing re-splits the 3D re-planner's non-decreasing
+/// rule forbids are legal here.
+struct Dense2dJob {
+    run: StepRun<Algo2d>,
+    side: usize,
+    m: usize,
+    plan: Plan2d,
+    auto: bool,
+    predicted: Vec<f64>,
+    flops: Vec<f64>,
+    shuffle: Vec<f64>,
+}
+
+impl Dense2dJob {
+    /// Recompute predictions + flop volumes for the current schedule.
+    fn refresh(&mut self, profile: &ClusterProfile) {
+        let widths = self.run.alg().schedule().widths().to_vec();
+        let sim = simulate_dense2d_schedule(self.side, self.m, &widths, profile);
+        self.predicted = sim.per_round();
+        let vols = volumes_dense2d_schedule(self.side, self.m, &widths);
+        self.flops = vols.iter().map(|v| v.flops).collect();
+        self.shuffle = vols.iter().map(|v| v.shuffle_words).collect();
+    }
+}
+
+impl ActiveJob for Dense2dJob {
+    fn next_round(&self) -> usize {
+        self.run.next_round()
+    }
+    fn num_rounds(&self) -> usize {
+        self.run.num_rounds()
+    }
+    fn predicted_round_secs(&self, round: usize) -> f64 {
+        self.predicted[round]
+    }
+    fn slot_demand(&self) -> usize {
+        self.run.slot_demand()
+    }
+    fn step_commit(&mut self) -> RoundMetrics {
+        self.run.step_commit()
+    }
+    fn step_discard(&mut self) -> RoundMetrics {
+        self.run.step_discard()
+    }
+    fn round_flops(&self, round: usize) -> f64 {
+        self.flops[round]
+    }
+    fn round_shuffle_words(&self, round: usize) -> f64 {
+        self.shuffle[round]
+    }
+    fn repredict(&mut self, profile: &ClusterProfile) {
+        self.refresh(profile);
+    }
+    fn replan(&mut self, profile: &ClusterProfile) -> bool {
+        if !self.auto {
+            return false; // fixed plans are the tenant's to keep
+        }
+        let r0 = self.run.next_round();
+        let sched = self.run.alg().schedule();
+        if r0 >= sched.rounds() {
+            return false; // nothing pending
+        }
+        let committed = sched.widths()[..r0].to_vec();
+        let current_tail = sched.widths()[r0..].to_vec();
+        let Ok((tail, _)) = plan_dense2d_tail(self.side, self.m, &committed, profile) else {
+            return false;
+        };
+        if tail == current_tail {
+            return false;
+        }
+        if self.run.alg_mut().set_tail_widths(r0, tail).is_err() {
+            return false;
+        }
+        self.refresh(profile);
+        true
+    }
+    fn set_faults(&mut self, faults: Arc<crate::fault::FaultContext>) {
+        self.run.set_faults(faults);
+    }
+    fn finish(self: Box<Self>) -> (JobOutput, JobMetrics) {
+        let this = *self;
+        let res = this.run.into_result();
+        (
+            JobOutput::Dense(Algo2d::assemble_output(this.plan, &res.output)),
+            res.metrics,
+        )
+    }
+}
+
 /// Validate `spec`, generate its inputs, and spawn the resumable job
 /// with its own (lazily spawned) worker pool and predictions priced on
 /// the in-house profile. The scheduler uses [`spawn_job_on`] instead so
@@ -482,10 +622,10 @@ pub fn spawn_job_on(
             block_side,
             rho,
         } => {
-            let plan = match spec.plan {
-                PlanChoice::Fixed => Plan2d::new(side, block_side * block_side, rho)?,
+            let (plan, auto) = match spec.plan {
+                PlanChoice::Fixed => (Plan2d::new(side, block_side * block_side, rho)?, false),
                 PlanChoice::Auto { memory_budget } => {
-                    plan_dense2d(side, memory_budget, profile)?.0
+                    (plan_dense2d(side, memory_budget, profile)?.0, true)
                 }
             };
             let (a, b) = dense_inputs(side, spec.seed);
@@ -498,19 +638,18 @@ pub fn spawn_job_on(
                     rho: plan.rho,
                 }),
             );
-            Ok(Box::new(SteppedJob {
+            let mut job = Dense2dJob {
                 run: StepRun::with_pool(engine, alg, input, pool.clone()),
-                predicted: simulate_dense2d(&plan, profile).per_round(),
-                flops: volumes_dense2d(&plan).iter().map(|v| v.flops).collect(),
-                shuffle: volumes_dense2d(&plan)
-                    .iter()
-                    .map(|v| v.shuffle_words)
-                    .collect(),
-                predictor: Box::new(move |p| simulate_dense2d(&plan, p).per_round()),
-                assemble: Box::new(move |out| {
-                    JobOutput::Dense(Algo2d::assemble_output(plan, &out))
-                }),
-            }))
+                side,
+                m: plan.m,
+                plan,
+                auto,
+                predicted: vec![],
+                flops: vec![],
+                shuffle: vec![],
+            };
+            job.refresh(profile);
+            Ok(Box::new(job))
         }
         JobKind::Sparse3d {
             side,
@@ -553,6 +692,51 @@ pub fn spawn_job_on(
                 assemble: Box::new(move |out| {
                     JobOutput::Sparse(sparse_3d_assemble(side, chosen_block, out))
                 }),
+            }))
+        }
+        JobKind::Strassen { side, levels } => {
+            // Fixed runs exactly `levels`; Auto prices every Strassen
+            // depth against every classical grid under the budget and
+            // runs the winner — which may be the classical plan
+            // (`levels = 0` delegates to the 3D schedule at the chosen
+            // block/ρ).
+            let (levels, block_side, rho) = match spec.plan {
+                PlanChoice::Fixed => (levels, side >> levels, 1),
+                PlanChoice::Auto { memory_budget } => {
+                    match plan_strassen(side, memory_budget, profile)?.chosen().desc {
+                        PlanDesc::Strassen { levels, .. } => (levels, side >> levels, 1),
+                        PlanDesc::Dense3d {
+                            block_side, rho, ..
+                        } => (0, block_side, rho),
+                        other => anyhow::bail!("unexpected plan {other:?} for a Strassen job"),
+                    }
+                }
+            };
+            let mcfg = M3Config::new(block_side, rho);
+            let alg = AlgoStrassen::new(side, levels, &mcfg, Arc::new(DenseOps::new(backend)))?;
+            let grid = BlockGrid::new(side, alg.unit_block_side());
+            let (a, b) = dense_inputs(side, spec.seed);
+            let input = alg.static_input(&a, &b);
+            let widths = vec![rho; side / block_side / rho];
+            let vols = if levels == 0 {
+                volumes_dense3d_schedule(side, block_side, &widths)
+            } else {
+                volumes_strassen(side, levels)
+            };
+            let predictor: Box<dyn Fn(&ClusterProfile) -> Vec<f64> + Send> = if levels == 0 {
+                Box::new(move |p| {
+                    simulate_dense3d_schedule(side, block_side, &widths, p).per_round()
+                })
+            } else {
+                Box::new(move |p| simulate_strassen(side, levels, p).per_round())
+            };
+            Ok(Box::new(SteppedJob {
+                run: StepRun::with_pool(engine, alg, input, pool.clone()),
+                predicted: predictor(profile),
+                flops: vols.iter().map(|v| v.flops).collect(),
+                shuffle: vols.iter().map(|v| v.shuffle_words).collect(),
+                predictor,
+                assemble: Box::new(move |out| JobOutput::Dense(dense_3d_assemble(&grid, out))),
             }))
         }
     }
@@ -685,6 +869,10 @@ mod tests {
                 rho: 2,
                 nnz_per_row: 6,
             },
+            JobKind::Strassen {
+                side: 16,
+                levels: 2,
+            },
         ] {
             let s = spec(kind);
             let mut job = spawn_job(&s, engine(), Arc::new(NaiveMultiply)).unwrap();
@@ -765,6 +953,10 @@ mod tests {
                 block_side: 999,
                 rho: 999,
                 nnz_per_row: 6,
+            },
+            JobKind::Strassen {
+                side: 16,
+                levels: 999,
             },
         ] {
             let s = auto_spec(kind, 768);
@@ -888,6 +1080,83 @@ mod tests {
     }
 
     #[test]
+    fn strassen_job_steps_to_exact_product() {
+        let s = spec(JobKind::Strassen {
+            side: 16,
+            levels: 2,
+        });
+        let mut job = spawn_job(&s, engine(), Arc::new(NaiveMultiply)).unwrap();
+        assert_eq!(job.num_rounds(), 5, "2L + 1 rounds");
+        while !job.is_done() {
+            job.step_commit();
+        }
+        let (out, metrics) = job.finish();
+        assert_eq!(metrics.num_rounds(), 5);
+        assert!(out.matches(&s), "integer inputs stay exact under Strassen");
+    }
+
+    #[test]
+    fn auto_dense2d_replans_the_pending_tail() {
+        // Plan on a memory-constrained profile (aggregate 16·512 B
+        // admits the 2ρn·8 B diagonal working set only for ρ ≤ 2 at
+        // n = 256 → 8 rounds over the 16 strips), commit two rounds,
+        // then re-plan on the unconstrained profile: 2D rounds carry
+        // nothing, so the 12 pending diagonals collapse into one ρ=12
+        // round — an arbitrary re-split, not the widening the 3D
+        // re-planner is limited to — and the product stays exact.
+        let constrained = ClusterProfile::inhouse().with_mem_per_node(512.0);
+        let s = auto_spec(
+            JobKind::Dense2d {
+                side: 16,
+                block_side: 1,
+                rho: 1,
+            },
+            48,
+        );
+        let mut job = spawn_job_on(
+            &s,
+            engine(),
+            Arc::new(NaiveMultiply),
+            Arc::new(Pool::new(engine().workers)),
+            &constrained,
+        )
+        .unwrap();
+        assert_eq!(job.num_rounds(), 8, "constrained auto plan: s=16, rho=2");
+        job.step_commit();
+        job.step_commit();
+        assert!(job.replan(&ClusterProfile::inhouse()), "tail must re-split");
+        assert_eq!(job.num_rounds(), 3, "widths [2, 2, 12]");
+        assert!(!job.replan(&ClusterProfile::inhouse()), "already optimal");
+        while !job.is_done() {
+            job.step_commit();
+        }
+        let (out, metrics) = job.finish();
+        assert_eq!(metrics.num_rounds(), 3);
+        assert!(out.matches(&s), "re-planned 2D product must be exact");
+    }
+
+    #[test]
+    fn tolerance_verification_accepts_small_relative_error() {
+        let s = spec(JobKind::Dense3d {
+            side: 16,
+            block_side: 4,
+            rho: 2,
+        });
+        let JobOutput::Dense(want) = reference_product(&s) else {
+            unreachable!()
+        };
+        let mut got = want.clone();
+        for v in got.as_mut_slice() {
+            *v *= 1.0 + 1e-6;
+        }
+        let out = JobOutput::Dense(got);
+        assert!(!out.matches(&s), "a perturbed product is not bit-exact");
+        assert!(out.matches_tol(&s, 1e-5), "but it is within 1e-5 relative");
+        assert!(!out.matches_tol(&s, 1e-8), "and outside 1e-8 relative");
+        assert_eq!(out.matches_tol(&s, 0.0), out.matches(&s), "tol 0 is exact");
+    }
+
+    #[test]
     fn predictions_match_round_count() {
         for kind in [
             JobKind::Dense3d {
@@ -905,6 +1174,10 @@ mod tests {
                 block_side: 16,
                 rho: 4,
                 nnz_per_row: 4,
+            },
+            JobKind::Strassen {
+                side: 32,
+                levels: 2,
             },
         ] {
             let job = spawn_job(&spec(kind), engine(), Arc::new(NaiveMultiply)).unwrap();

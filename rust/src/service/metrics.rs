@@ -10,7 +10,7 @@
 use crate::util::stats;
 use crate::util::table::Table;
 
-use super::job::JobSpec;
+use super::job::{JobSpec, PlanChoice};
 
 /// Service-level record of one job.
 #[derive(Debug, Clone)]
@@ -23,6 +23,9 @@ pub struct JobReport {
     pub label: String,
     /// The job's replication factor ρ.
     pub rho: usize,
+    /// The reducer-memory budget (words) carried by an auto-planned
+    /// submission; `None` for fixed plans.
+    pub memory_budget: Option<usize>,
     /// Logical rounds of the job.
     pub rounds_total: usize,
     /// Round attempts actually run (committed + discarded).
@@ -56,6 +59,10 @@ impl JobReport {
             tenant: spec.tenant,
             label: spec.kind.label(),
             rho: spec.kind.rho(),
+            memory_budget: match spec.plan {
+                PlanChoice::Auto { memory_budget } => Some(memory_budget),
+                PlanChoice::Fixed => None,
+            },
             rounds_total,
             rounds_executed: 0,
             arrival_secs: spec.arrival_secs,
@@ -96,6 +103,9 @@ pub struct TenantSummary {
     pub service_secs: f64,
     /// Discarded virtual work, seconds.
     pub discarded_secs: f64,
+    /// The tenant's reducer-memory budget (words), from its auto
+    /// submissions; `None` when the tenant only ran fixed plans.
+    pub memory_budget: Option<usize>,
 }
 
 /// Service metrics of a full workload.
@@ -193,6 +203,7 @@ impl ServiceMetrics {
                     mean_sojourn_secs: stats::mean(&sojourns),
                     service_secs: js.iter().map(|j| j.service_secs).sum(),
                     discarded_secs: js.iter().map(|j| j.discarded_secs).sum(),
+                    memory_budget: js.iter().find_map(|j| j.memory_budget),
                 }
             })
             .collect()
@@ -252,7 +263,9 @@ impl ServiceMetrics {
         t.render()
     }
 
-    /// Render the per-tenant table.
+    /// Render the per-tenant table. `budget(w)` is the reducer-memory
+    /// budget the tenant's auto submissions carried (`-` for tenants
+    /// that only ran fixed plans).
     pub fn tenant_table(&self) -> String {
         let mut t = Table::new(&[
             "tenant",
@@ -261,6 +274,7 @@ impl ServiceMetrics {
             "mean_sojourn(s)",
             "service(s)",
             "lost(s)",
+            "budget(w)",
         ]);
         for s in self.by_tenant() {
             t.row(&[
@@ -270,6 +284,10 @@ impl ServiceMetrics {
                 format!("{:.1}", s.mean_sojourn_secs),
                 format!("{:.1}", s.service_secs),
                 format!("{:.1}", s.discarded_secs),
+                match s.memory_budget {
+                    Some(b) => b.to_string(),
+                    None => "-".to_string(),
+                },
             ]);
         }
         t.render()
@@ -333,6 +351,36 @@ mod tests {
         };
         assert!(m.table().contains("tenant"));
         assert!(m.tenant_table().contains("mean_wait"));
+    }
+
+    #[test]
+    fn tenant_table_surfaces_auto_budgets() {
+        let spec = JobSpec {
+            id: 0,
+            tenant: 0,
+            kind: JobKind::Dense3d {
+                side: 16,
+                block_side: 4,
+                rho: 2,
+            },
+            plan: crate::service::job::PlanChoice::Auto {
+                memory_budget: 1536,
+            },
+            seed: 1,
+            arrival_secs: 0.0,
+        };
+        let mut auto = JobReport::submitted(&spec, 3);
+        assert_eq!(auto.memory_budget, Some(1536));
+        auto.first_service_secs = 1.0;
+        auto.completion_secs = 2.0;
+        let m = ServiceMetrics {
+            jobs: vec![auto, report(1, 1, 0.0, 1.0, 2.0)],
+        };
+        assert!(m.tenant_table().contains("budget(w)"));
+        assert!(m.tenant_table().contains("1536"));
+        let tenants = m.by_tenant();
+        assert_eq!(tenants[0].memory_budget, Some(1536), "auto tenant");
+        assert_eq!(tenants[1].memory_budget, None, "fixed-only tenant");
     }
 
     #[test]

@@ -33,7 +33,8 @@
 //!   logical node and the round recovers in place via the engine's
 //!   [`crate::fault`] machinery.
 //! * [`workload`] — deterministic seeded workload generator (arrival
-//!   process over mixed job sizes and tenants).
+//!   process over mixed job sizes and tenants, with stream-stable
+//!   per-tenant memory budgets for auto submissions).
 //! * [`metrics`] — per-job / per-tenant service metrics: queue wait,
 //!   sojourn (makespan), committed service, and discarded work, built on
 //!   [`crate::mapreduce::JobMetrics`].
@@ -56,4 +57,4 @@ pub use spot::{
     poisson_preemptions, replay_with_node_strikes, replay_with_preemptions, NodeStrikeReplay,
     SpotReplay, StrikeMode,
 };
-pub use workload::{generate, skewed, WorkloadConfig};
+pub use workload::{generate, skewed, tenant_budgets, WorkloadConfig};

@@ -2,12 +2,15 @@
 //!
 //! A seeded arrival process (exponential inter-arrival times) over a
 //! menu of mixed job shapes — dense 3D at several sizes and ρ, the 2D
-//! baseline, and sparse Erdős–Rényi jobs — assigned round-robin-free to
-//! random tenants. A configurable fraction of jobs arrive with
-//! [`PlanChoice::Auto`] (the tenant supplies only a memory budget and
-//! lets the service pick the plan), the rest with explicit knobs.
-//! Every spec is valid by construction (ρ divides the geometry), and
-//! the same seed always yields byte-identical specs.
+//! baseline, sparse Erdős–Rényi jobs, and blocked-Strassen schedules —
+//! assigned round-robin-free to random tenants. A configurable fraction
+//! of jobs arrive with [`PlanChoice::Auto`] (the tenant supplies only a
+//! memory budget and lets the service pick the plan), the rest with
+//! explicit knobs. Auto submissions carry their *tenant's* budget,
+//! drawn once per tenant from a salted stream ([`tenant_budgets`]) so
+//! budget heterogeneity never shifts the job stream. Every spec is
+//! valid by construction (ρ divides the geometry), and the same seed
+//! always yields byte-identical specs.
 
 use crate::util::rng::Xoshiro256ss;
 
@@ -28,7 +31,9 @@ pub struct WorkloadConfig {
     /// the all-fixed workload; 1.0 makes every tenant delegate the
     /// plan).
     pub auto_fraction: f64,
-    /// Reducer-memory budget, words, carried by auto submissions.
+    /// Reducer-memory budget *floor* in words: tenant `t`'s auto
+    /// submissions carry `memory_budget × {1, 2, 4}`, drawn per tenant
+    /// by [`tenant_budgets`].
     pub memory_budget: usize,
 }
 
@@ -55,7 +60,7 @@ fn divisors(q: usize) -> Vec<usize> {
 /// spanning 2–9 rounds per job.
 fn draw_kind(rng: &mut Xoshiro256ss) -> JobKind {
     // (side, block) menus with their q/s values; ρ drawn from divisors.
-    match rng.next_usize(6) {
+    match rng.next_usize(7) {
         // Dense 3D dominates the mix, as in the paper's evaluation.
         0 | 1 => {
             let (side, block_side) = [(16, 4), (32, 8)][rng.next_usize(2)];
@@ -88,6 +93,15 @@ fn draw_kind(rng: &mut Xoshiro256ss) -> JobKind {
                 rho: ds[rng.next_usize(ds.len())],
             }
         }
+        5 => {
+            // Blocked-Strassen: 7^L base products over 2L+1 rounds,
+            // exact on the integer-valued service inputs.
+            let side = [16, 32][rng.next_usize(2)];
+            JobKind::Strassen {
+                side,
+                levels: 1 + rng.next_usize(2),
+            }
+        }
         _ => {
             let side = 64;
             let block_side = 16; // q = 4
@@ -102,8 +116,24 @@ fn draw_kind(rng: &mut Xoshiro256ss) -> JobKind {
     }
 }
 
+/// Per-tenant reducer-memory budgets for auto submissions: tenant `t`
+/// always sees `memory_budget × {1, 2, 4}` drawn from a stream salted
+/// independently of the job stream, so the budgets are stable for a
+/// given `(seed, tenants)` and their existence never shifts the
+/// kinds/seeds/arrivals that [`generate`] produces. Budgets never fall
+/// below the configured floor, so every auto shape on the menu stays
+/// plannable.
+pub fn tenant_budgets(cfg: &WorkloadConfig) -> Vec<usize> {
+    const BUDGET_SALT: u64 = 0x9e37_79b9_7f4a_7c15;
+    let mut rng = Xoshiro256ss::new(cfg.seed ^ BUDGET_SALT);
+    (0..cfg.tenants.max(1))
+        .map(|_| cfg.memory_budget << rng.next_usize(3))
+        .collect()
+}
+
 /// Generate a deterministic workload.
 pub fn generate(cfg: &WorkloadConfig) -> Vec<JobSpec> {
+    let budgets = tenant_budgets(cfg);
     let mut rng = Xoshiro256ss::new(cfg.seed);
     let mut clock = 0.0f64;
     (0..cfg.jobs)
@@ -114,13 +144,14 @@ pub fn generate(cfg: &WorkloadConfig) -> Vec<JobSpec> {
             // The auto draw is unconditional so the spec stream stays
             // identical across auto_fraction values.
             let auto = rng.next_f64() < cfg.auto_fraction;
+            let tenant = rng.next_usize(cfg.tenants.max(1));
             JobSpec {
                 id,
-                tenant: rng.next_usize(cfg.tenants.max(1)),
+                tenant,
                 kind: draw_kind(&mut rng),
                 plan: if auto {
                     PlanChoice::Auto {
-                        memory_budget: cfg.memory_budget,
+                        memory_budget: budgets[tenant],
                     }
                 } else {
                     PlanChoice::Fixed
@@ -253,6 +284,37 @@ mod tests {
         for (a, f) in specs.iter().zip(&fixed) {
             assert_eq!(a.kind, f.kind, "shape stream must not shift");
             assert_eq!(a.seed, f.seed);
+        }
+    }
+
+    #[test]
+    fn tenant_budgets_are_deterministic_and_scale_the_floor() {
+        let cfg = WorkloadConfig::default();
+        let budgets = tenant_budgets(&cfg);
+        assert_eq!(budgets.len(), 4);
+        assert_eq!(budgets, tenant_budgets(&cfg), "budgets must be stable");
+        for &b in &budgets {
+            assert!(
+                b == cfg.memory_budget || b == 2 * cfg.memory_budget || b == 4 * cfg.memory_budget,
+                "budget {b} must be the floor × {{1, 2, 4}}"
+            );
+        }
+    }
+
+    #[test]
+    fn auto_specs_carry_their_tenants_budget() {
+        let cfg = WorkloadConfig {
+            jobs: 48,
+            seed: 123,
+            auto_fraction: 1.0,
+            ..Default::default()
+        };
+        let budgets = tenant_budgets(&cfg);
+        for s in generate(&cfg) {
+            let PlanChoice::Auto { memory_budget } = s.plan else {
+                panic!("auto_fraction 1.0 must make every job auto");
+            };
+            assert_eq!(memory_budget, budgets[s.tenant]);
         }
     }
 

@@ -29,6 +29,8 @@ pub use calibrate::{fit_local_profile, Observation, ProfileTracker};
 pub use costmodel::{RoundCost, RoundVolumes, SimResult};
 pub use profile::ClusterProfile;
 pub use simulate::{
-    price_rounds, simulate_dense2d, simulate_dense3d, simulate_dense3d_schedule, simulate_sparse3d,
-    volumes_dense2d, volumes_dense3d, volumes_dense3d_schedule, volumes_sparse3d,
+    price_rounds, simulate_dense2d, simulate_dense2d_schedule, simulate_dense3d,
+    simulate_dense3d_schedule, simulate_sparse3d, simulate_strassen, volumes_dense2d,
+    volumes_dense2d_schedule, volumes_dense3d, volumes_dense3d_schedule, volumes_sparse3d,
+    volumes_strassen,
 };

@@ -106,6 +106,53 @@ impl ClusterProfile {
         }
     }
 
+    /// A *compute-rich* context: an in-memory cluster (no shuffle
+    /// spill, no HDFS chunk penalty) whose fabric moves bytes two
+    /// orders of magnitude faster than the Hadoop-effective 2014
+    /// profiles, with abundant working memory. Bytes are cheap here, so
+    /// at large sides the local-multiply term dominates the bill — the
+    /// context where trading extra shuffle for a 7/8 work ratio
+    /// (the blocked-Strassen schedule) pays.
+    pub fn compute_rich() -> Self {
+        Self {
+            name: "compute-rich",
+            nodes: 16,
+            slots_per_node: 2,
+            flops_per_node: 7.0e9,
+            disk_bw: 2.0e9,
+            net_bw: 2.0e9,
+            round_setup: 5.0,
+            small_chunk_coeff: 0.0,
+            chunk_ref_bytes: 1.0e9,
+            bytes_per_word: 8.0,
+            spill_factor: 0.0,
+            mem_per_node_bytes: 1.0e12,
+        }
+    }
+
+    /// A *shuffle-starved* context: the same nodes and in-memory engine
+    /// as [`Self::compute_rich`], but the shuffle fabric is 200× slower
+    /// and working memory is 50× smaller. Intermediate bytes dominate
+    /// every round, so schedules that fan the shuffle out — Strassen's
+    /// signed operand combinations — price worse than the classical
+    /// grid at any side this cluster can hold in flight.
+    pub fn shuffle_starved() -> Self {
+        Self {
+            name: "shuffle-starved",
+            nodes: 16,
+            slots_per_node: 2,
+            flops_per_node: 7.0e9,
+            disk_bw: 2.0e9,
+            net_bw: 10.0e6,
+            round_setup: 5.0,
+            small_chunk_coeff: 0.0,
+            chunk_ref_bytes: 1.0e9,
+            bytes_per_word: 8.0,
+            spill_factor: 0.0,
+            mem_per_node_bytes: 2.0e10,
+        }
+    }
+
     /// A copy with a different node count (Figure 5's scalability sweep).
     pub fn with_nodes(mut self, nodes: usize) -> Self {
         self.nodes = nodes;

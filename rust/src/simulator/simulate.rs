@@ -97,6 +97,32 @@ pub fn volumes_dense2d(plan: &Plan2d) -> Vec<RoundVolumes> {
         .collect()
 }
 
+/// Per-round volumes of the 2D dense algorithm under a per-round
+/// strip-width *schedule*: round `r` multiplies `widths[r]` of the
+/// `s = n/m` diagonals (uniform widths = the fixed-ρ plan). Unlike the
+/// 3D schedule, rounds carry nothing — each reads the static input and
+/// writes its own output strips — so any positive widths summing to `s`
+/// are a valid schedule.
+pub fn volumes_dense2d_schedule(side: usize, m: usize, widths: &[usize]) -> Vec<RoundVolumes> {
+    assert!(!widths.is_empty(), "need at least one round");
+    let n = (side * side) as f64;
+    let m = m as f64;
+    let sqrt_n = side as f64;
+    widths
+        .iter()
+        .map(|&w| {
+            let w = w as f64;
+            RoundVolumes {
+                read_words: 2.0 * n,
+                read_chunked_words: 0.0,
+                shuffle_words: 2.0 * w * n,
+                flops: 2.0 * w * m * sqrt_n,
+                write_words: w * m,
+            }
+        })
+        .collect()
+}
+
 /// Per-round volumes of the 3D sparse algorithm for Erdős–Rényi inputs
 /// of density `plan.delta` and output-density bound `plan.delta_m`.
 pub fn volumes_sparse3d(plan: &SparsePlan) -> Vec<RoundVolumes> {
@@ -134,9 +160,75 @@ pub fn volumes_sparse3d(plan: &SparsePlan) -> Vec<RoundVolumes> {
     vols
 }
 
+/// Per-round volumes of the blocked-Strassen schedule
+/// ([`crate::m3::strassen::AlgoStrassen`]) at `levels ≥ 1`
+/// (`levels = 0` *is* the classical 3D grid — price those candidates
+/// with [`volumes_dense3d`]). Unit blocks have side `side / 2^L`.
+///
+/// * forward round `r < L`: reads `2·(7/4)^r·n` operand words (static
+///   at `r = 0`, carried chunks after), shuffles them with the 3× fan
+///   of the T/S tables (24 signed emissions per 8 blocks), spends one
+///   add per combined word (10 adds per 8 block positions), writes the
+///   `2·(7/4)^{r+1}·n` factor words;
+/// * base round `L`: `7^L` block products of `2·bs³` flops;
+/// * combine round `c`: merges products into parent quadrants — the
+///   `(12/7)`× shuffle fan and 8 adds per 7 product positions of the
+///   post-addition table.
+pub fn volumes_strassen(side: usize, levels: usize) -> Vec<RoundVolumes> {
+    assert!(levels >= 1, "levels = 0 is the classical dense-3D grid");
+    assert!(side % (1 << levels) == 0, "2^levels must divide side");
+    let n = (side * side) as f64;
+    let bs = (side >> levels) as f64;
+    let block_words = bs * bs;
+    let mut vols = Vec::with_capacity(2 * levels + 1);
+    for r in 0..levels {
+        let paths = 7f64.powi(r as i32);
+        let operand_words = 2.0 * paths * n / 4f64.powi(r as i32);
+        let (read, carried) = if r == 0 {
+            (operand_words, 0.0)
+        } else {
+            (0.0, operand_words)
+        };
+        vols.push(RoundVolumes {
+            read_words: read,
+            read_chunked_words: carried,
+            shuffle_words: 3.0 * operand_words,
+            flops: 10.0 * paths * n / 4f64.powi(r as i32 + 1),
+            write_words: 2.0 * paths * 7.0 * n / 4f64.powi(r as i32 + 1),
+        });
+    }
+    let products = 7f64.powi(levels as i32);
+    let factor_words = 2.0 * products * block_words;
+    vols.push(RoundVolumes {
+        read_words: 0.0,
+        read_chunked_words: factor_words,
+        shuffle_words: factor_words,
+        flops: products * 2.0 * bs * bs * bs,
+        write_words: products * block_words,
+    });
+    for c in 1..=levels {
+        let parents = 7f64.powi((levels - c) as i32);
+        let child_grid = 4f64.powi(c as i32 - 1);
+        let input_words = 7.0 * parents * child_grid * block_words;
+        vols.push(RoundVolumes {
+            read_words: 0.0,
+            read_chunked_words: input_words,
+            shuffle_words: 12.0 * parents * child_grid * block_words,
+            flops: 8.0 * parents * child_grid * block_words,
+            write_words: 4.0 * parents * child_grid * block_words,
+        });
+    }
+    vols
+}
+
 /// Simulate the 3D dense algorithm (paper Algorithm 1).
 pub fn simulate_dense3d(plan: &Plan3d, p: &ClusterProfile) -> SimResult {
     price_rounds(&volumes_dense3d(plan), p)
+}
+
+/// Simulate the blocked-Strassen schedule at `levels ≥ 1`.
+pub fn simulate_strassen(side: usize, levels: usize, p: &ClusterProfile) -> SimResult {
+    price_rounds(&volumes_strassen(side, levels), p)
 }
 
 /// Simulate the 3D dense algorithm under a per-round ρ schedule (the
@@ -154,6 +246,18 @@ pub fn simulate_dense3d_schedule(
 /// Simulate the 2D dense algorithm (paper Algorithm 2).
 pub fn simulate_dense2d(plan: &Plan2d, p: &ClusterProfile) -> SimResult {
     price_rounds(&volumes_dense2d(plan), p)
+}
+
+/// Simulate the 2D dense algorithm under a per-round strip-width
+/// schedule (the mid-job re-plan path for 2D tails; uniform widths
+/// reproduce [`simulate_dense2d`] exactly).
+pub fn simulate_dense2d_schedule(
+    side: usize,
+    m: usize,
+    widths: &[usize],
+    p: &ClusterProfile,
+) -> SimResult {
+    price_rounds(&volumes_dense2d_schedule(side, m, widths), p)
 }
 
 /// Simulate the 3D sparse algorithm (paper §3.2) for Erdős–Rényi
@@ -399,6 +503,33 @@ mod tests {
     }
 
     #[test]
+    fn uniform_2d_schedule_reproduces_fixed_rho_exactly() {
+        // The 2D schedule with uniform widths must price bit-for-bit
+        // like simulate_dense2d, and — because 2D rounds are
+        // independent — an arbitrary re-split (even a narrowing one)
+        // conserves shuffle words, flops, and output words.
+        let p = ClusterProfile::inhouse();
+        let pl = Plan2d::new(32000, 4000 * 4000, 2).unwrap();
+        let s = pl.strips();
+        let widths = vec![2usize; s / 2];
+        let a = simulate_dense2d(&pl, &p);
+        let b = simulate_dense2d_schedule(32000, 4000 * 4000, &widths, &p);
+        assert_eq!(a.rounds.len(), b.rounds.len());
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.total(), y.total());
+        }
+        let resplit =
+            volumes_dense2d_schedule(32000, 4000 * 4000, &[4, 1, 2, 1, 4, 4, 2, 6, 8, 32]);
+        let uniform = volumes_dense2d_schedule(32000, 4000 * 4000, &widths);
+        let sum = |vols: &[RoundVolumes], f: fn(&RoundVolumes) -> f64| -> f64 {
+            vols.iter().map(f).sum()
+        };
+        assert_eq!(sum(&resplit, |v| v.shuffle_words), sum(&uniform, |v| v.shuffle_words));
+        assert_eq!(sum(&resplit, |v| v.flops), sum(&uniform, |v| v.flops));
+        assert_eq!(sum(&resplit, |v| v.write_words), sum(&uniform, |v| v.write_words));
+    }
+
+    #[test]
     fn volumes_sum_matches_planner_totals() {
         // The simulator's per-round volumes and the planner's closed
         // forms are one model: summed shuffle words equal
@@ -413,6 +544,37 @@ mod tests {
                 vols[..vols.len() - 1].iter().map(|v| v.flops).sum();
             assert_eq!(product_flops, 2.0 * (side as f64).powi(3));
         }
+    }
+
+    #[test]
+    fn strassen_volumes_conserve_words_across_rounds() {
+        for (side, l) in [(1024usize, 1usize), (1024, 2), (4096, 3)] {
+            let vols = volumes_strassen(side, l);
+            assert_eq!(vols.len(), 2 * l + 1, "2L+1 rounds");
+            // Every carried read is exactly what the previous round
+            // wrote, and the final write is the n-word product.
+            for r in 1..vols.len() {
+                assert_eq!(
+                    vols[r].read_chunked_words,
+                    vols[r - 1].write_words,
+                    "side={side} L={l} round {r}"
+                );
+            }
+            let n = (side * side) as f64;
+            assert_eq!(vols.last().unwrap().write_words, n);
+            assert_eq!(vols[0].read_words, 2.0 * n, "round 0 reads both operands");
+        }
+    }
+
+    #[test]
+    fn one_strassen_level_is_seven_eighths_of_the_classical_work() {
+        let side = 1024usize;
+        let vols = volumes_strassen(side, 1);
+        let classical_flops = 2.0 * (side as f64).powi(3);
+        assert_eq!(vols[1].flops, classical_flops * 7.0 / 8.0);
+        // Two levels: (7/8)² of the cubic work.
+        let vols2 = volumes_strassen(side, 2);
+        assert_eq!(vols2[2].flops, classical_flops * 49.0 / 64.0);
     }
 
     #[test]
