@@ -18,7 +18,7 @@ use m3::m3::partitioner::{BalancedPartitioner3d, NaiveTriplePartitioner};
 use m3::m3::{multiply_dense_2d, multiply_dense_3d, M3Config, PartitionerKind, TripleKey};
 use m3::mapreduce::shuffle::shuffle;
 use m3::mapreduce::types::Partitioner;
-use m3::mapreduce::{EngineConfig, Pair};
+use m3::mapreduce::{EngineConfig, Pair, TransportSel};
 use m3::matrix::{gen, BlockGrid, DenseMatrix};
 use m3::runtime::artifacts::default_dir;
 use m3::runtime::native::NativeMultiply;
@@ -60,6 +60,7 @@ fn bench_real_engine(b: &Bencher) {
             rho,
             engine: engine(),
             partitioner: PartitionerKind::Balanced,
+            transport: TransportSel::default(),
         };
         let r = b.bench(&format!("fig03_real_dense3d_rho{rho}"), || {
             multiply_dense_3d(&a, &bm, &cfg, Arc::new(NativeMultiply::new())).unwrap()
@@ -72,6 +73,7 @@ fn bench_real_engine(b: &Bencher) {
         rho: 1,
         engine: engine(),
         partitioner: PartitionerKind::Balanced,
+        transport: TransportSel::default(),
     };
     let r = b.bench("fig06_real_dense2d_rho1", || {
         multiply_dense_2d(&a, &bm, &cfg2, Arc::new(NativeMultiply::new())).unwrap()
@@ -86,6 +88,7 @@ fn bench_real_engine(b: &Bencher) {
             rho: 4,
             engine: engine(),
             partitioner: PartitionerKind::Balanced,
+            transport: TransportSel::default(),
         };
         let r = b.bench("fig03_real_dense3d_rho4_xla_block256", || {
             multiply_dense_3d(&a, &bm, &cfg, backend.clone()).unwrap()

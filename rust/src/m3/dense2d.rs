@@ -16,6 +16,7 @@ use anyhow::{bail, Result};
 
 use crate::mapreduce::driver::MultiRoundAlgorithm;
 use crate::mapreduce::types::{Mapper, Partitioner, Reducer, Value};
+use crate::mapreduce::wire::{ByteReader, CodecHandle, Wire, WireError, WirePairCodec};
 use crate::matrix::DenseMatrix;
 use crate::runtime::LocalMultiply;
 
@@ -58,6 +59,35 @@ impl Value for Strip {
         match self {
             Strip::A(m) | Strip::B(m) | Strip::C(m) => m.words(),
         }
+    }
+}
+
+/// Wire form: one variant byte (`0`/`1`/`2` = `A`/`B`/`C`), then the
+/// strip matrix in its self-describing encoding — the same layout as
+/// [`crate::m3::multiply::DenseBlock`], shapes included, so
+/// single-element strips and non-square blocks round-trip exactly.
+impl Wire for Strip {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        let (tag, m) = match self {
+            Strip::A(m) => (0u8, m),
+            Strip::B(m) => (1u8, m),
+            Strip::C(m) => (2u8, m),
+        };
+        out.push(tag);
+        m.wire_encode(out);
+    }
+
+    fn wire_decode(r: &mut ByteReader) -> Result<Self, WireError> {
+        let tag = r.u8()?;
+        if tag > 2 {
+            return Err(WireError::Corrupt("unknown strip variant"));
+        }
+        let m = Arc::new(DenseMatrix::wire_decode(r)?);
+        Ok(match tag {
+            0 => Strip::A(m),
+            1 => Strip::B(m),
+            _ => Strip::C(m),
+        })
     }
 }
 
@@ -363,6 +393,10 @@ impl MultiRoundAlgorithm for Algo2d {
         false // every round's C blocks are final output
     }
 
+    fn codec(&self) -> Option<CodecHandle<PairKey, Strip>> {
+        Some(Arc::new(WirePairCodec::default()))
+    }
+
     fn groups_hint(&self, round: usize) -> Option<usize> {
         // Round r computes width(r) subproblems per row strip:
         // s·width(r) live (i,j) keys.
@@ -520,6 +554,61 @@ mod tests {
             assert!(m.shuffle_words <= plan.shuffle_words_bound());
             assert!(m.max_reducer_words <= plan.reducer_words_bound());
         }
+    }
+
+    #[test]
+    fn strip_wire_roundtrips_including_single_element() {
+        let mut rng = Xoshiro256ss::new(30);
+        for (r, c) in [(1usize, 1usize), (4, 16), (16, 4), (1, 9)] {
+            let m = gen::dense_uniform(r, c, &mut rng);
+            for strip in [Strip::a(m.clone()), Strip::b(m.clone()), Strip::c(m.clone())] {
+                let mut buf = Vec::new();
+                strip.wire_encode(&mut buf);
+                let mut rd = ByteReader::new(&buf);
+                let back = Strip::wire_decode(&mut rd).unwrap();
+                assert!(rd.is_empty());
+                assert_eq!(back, strip);
+            }
+        }
+        let mut buf = Vec::new();
+        Strip::a(DenseMatrix::zeros(1, 1)).wire_encode(&mut buf);
+        buf[0] = 3;
+        assert!(Strip::wire_decode(&mut ByteReader::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn serialized_transport_reproduces_the_2d_product_exactly() {
+        use crate::mapreduce::TransportSel;
+        let plan = Plan2d::new(16, 64, 2).unwrap();
+        let mut rng = Xoshiro256ss::new(31);
+        let a = gen::dense_uniform(16, 16, &mut rng);
+        let b = gen::dense_uniform(16, 16, &mut rng);
+        let mk = || {
+            Algo2d::new(
+                plan,
+                Arc::new(NaiveMultiply),
+                Box::new(BalancedPartitioner2d {
+                    strips: plan.strips(),
+                    rho: 2,
+                }),
+            )
+        };
+        let input = Algo2d::static_input(plan, &a, &b);
+        let mut zc = Driver::new(cfg());
+        zc.set_transport(TransportSel::ZeroCopy);
+        let want = zc.run(&mk(), &input);
+        let mut ser = Driver::new(cfg()); // serialized inproc default
+        let got = ser.run(&mk(), &input);
+        assert_eq!(
+            Algo2d::assemble_output(plan, &got.output).as_slice(),
+            Algo2d::assemble_output(plan, &want.output).as_slice(),
+        );
+        assert_eq!(want.metrics.total_shuffle_bytes(), 0);
+        assert!(got.metrics.total_shuffle_bytes() > 0);
+        assert_eq!(
+            got.metrics.total_shuffle_words(),
+            want.metrics.total_shuffle_words()
+        );
     }
 
     #[test]

@@ -75,6 +75,44 @@ impl PairKey {
     }
 }
 
+// Key wire codecs: fixed-width little-endian `i32` tuples (keys carry
+// `-1` sentinels, so varints would cost 5 bytes per component).
+impl crate::mapreduce::wire::Wire for TripleKey {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        use crate::mapreduce::wire::put_i32;
+        put_i32(out, self.i);
+        put_i32(out, self.h);
+        put_i32(out, self.j);
+    }
+
+    fn wire_decode(
+        r: &mut crate::mapreduce::wire::ByteReader<'_>,
+    ) -> Result<Self, crate::mapreduce::wire::WireError> {
+        Ok(Self {
+            i: r.i32()?,
+            h: r.i32()?,
+            j: r.i32()?,
+        })
+    }
+}
+
+impl crate::mapreduce::wire::Wire for PairKey {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        use crate::mapreduce::wire::put_i32;
+        put_i32(out, self.i);
+        put_i32(out, self.j);
+    }
+
+    fn wire_decode(
+        r: &mut crate::mapreduce::wire::ByteReader<'_>,
+    ) -> Result<Self, crate::mapreduce::wire::WireError> {
+        Ok(Self {
+            i: r.i32()?,
+            j: r.i32()?,
+        })
+    }
+}
+
 /// Euclidean (always non-negative) modulo for index arithmetic with
 /// subtractions, e.g. `(k - i - ℓ - rρ) mod q`.
 #[inline]
@@ -114,6 +152,25 @@ mod tests {
         ks.sort();
         assert_eq!(ks[0], TripleKey::io(0, 0)); // h=-1 sorts first within i=0
         assert_eq!(ks[2], TripleKey::new(1, 0, 0));
+    }
+
+    #[test]
+    fn key_wire_roundtrips_including_sentinels() {
+        use crate::mapreduce::wire::{ByteReader, Wire};
+        for k in [TripleKey::new(0, 0, 0), TripleKey::io(7, 3), TripleKey::new(9, 2, 1)] {
+            let mut buf = vec![];
+            k.wire_encode(&mut buf);
+            assert_eq!(buf.len(), 12);
+            assert_eq!(k, TripleKey::wire_decode(&mut ByteReader::new(&buf)).unwrap());
+        }
+        for k in [PairKey::new(1, 2), PairKey::a_input(5), PairKey::b_input(0)] {
+            let mut buf = vec![];
+            k.wire_encode(&mut buf);
+            assert_eq!(buf.len(), 8);
+            assert_eq!(k, PairKey::wire_decode(&mut ByteReader::new(&buf)).unwrap());
+        }
+        assert!(TripleKey::wire_decode(&mut ByteReader::new(&[0; 11])).is_err());
+        assert!(PairKey::wire_decode(&mut ByteReader::new(&[0; 7])).is_err());
     }
 
     #[test]

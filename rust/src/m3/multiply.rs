@@ -7,7 +7,8 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::mapreduce::types::{Partitioner, Value};
-use crate::mapreduce::{Driver, EngineConfig, JobMetrics, Pair};
+use crate::mapreduce::wire::{ByteReader, CodecHandle, Wire, WireError, WirePairCodec};
+use crate::mapreduce::{Driver, EngineConfig, JobMetrics, Pair, TransportSel};
 use crate::matrix::semiring::{Arithmetic, Semiring};
 use crate::matrix::{BlockGrid, CooMatrix, CsrMatrix, DenseMatrix};
 use crate::runtime::{kernels, LocalMultiply};
@@ -41,16 +42,22 @@ pub struct M3Config {
     pub engine: EngineConfig,
     /// Partitioner choice.
     pub partitioner: PartitionerKind,
+    /// Shuffle transport: serialized in-process by default, with the
+    /// zero-copy `Arc` path and the multi-process backend selectable
+    /// (see [`TransportSel`]).
+    pub transport: TransportSel,
 }
 
 impl M3Config {
-    /// A config with the default engine and balanced partitioner.
+    /// A config with the default engine, balanced partitioner and
+    /// serialized in-process transport.
     pub fn new(block_side: usize, rho: usize) -> Self {
         Self {
             block_side,
             rho,
             engine: EngineConfig::default(),
             partitioner: PartitionerKind::default(),
+            transport: TransportSel::default(),
         }
     }
 }
@@ -133,6 +140,44 @@ impl Block3d for DenseBlock {
             DenseBlock::B(_) => Tag::B,
             DenseBlock::C(_) => Tag::C,
         }
+    }
+
+    fn wire_codec() -> Option<CodecHandle<TripleKey, Self>> {
+        Some(Arc::new(WirePairCodec::default()))
+    }
+}
+
+/// Variant bytes of block payloads on the wire. The Strassen rounds
+/// overload `A`/`B` as the *sign* of a contribution, so the variant is
+/// semantic cargo, not a hint — it must survive the wire exactly.
+const WIRE_TAG_A: u8 = 0;
+const WIRE_TAG_B: u8 = 1;
+const WIRE_TAG_C: u8 = 2;
+
+/// Wire form: one variant byte (`0`/`1`/`2` = `A`/`B`/`C`), then the
+/// matrix body in its own self-describing encoding.
+impl Wire for DenseBlock {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        let (tag, m) = match self {
+            DenseBlock::A(m) => (WIRE_TAG_A, m),
+            DenseBlock::B(m) => (WIRE_TAG_B, m),
+            DenseBlock::C(m) => (WIRE_TAG_C, m),
+        };
+        out.push(tag);
+        m.wire_encode(out);
+    }
+
+    fn wire_decode(r: &mut ByteReader) -> Result<Self, WireError> {
+        let tag = r.u8()?;
+        if tag > WIRE_TAG_C {
+            return Err(WireError::Corrupt("unknown dense block variant"));
+        }
+        let m = Arc::new(DenseMatrix::wire_decode(r)?);
+        Ok(match tag {
+            WIRE_TAG_A => DenseBlock::A(m),
+            WIRE_TAG_B => DenseBlock::B(m),
+            _ => DenseBlock::C(m),
+        })
     }
 }
 
@@ -294,6 +339,7 @@ fn run_dense_3d(
         make_partitioner_3d(cfg.partitioner, geo.q, geo.rho),
     );
     let mut driver = Driver::new(cfg.engine);
+    driver.set_transport(cfg.transport.clone());
     let res = driver.run(&alg, &input);
     Ok((dense_3d_assemble(&grid, res.output), res.metrics))
 }
@@ -342,6 +388,7 @@ pub fn multiply_dense_2d(
     let alg = Algo2d::new(plan, backend, partitioner);
     let input = Algo2d::static_input(plan, a, b);
     let mut driver = Driver::new(cfg.engine);
+    driver.set_transport(cfg.transport.clone());
     let res = driver.run(&alg, &input);
     Ok((Algo2d::assemble_output(plan, &res.output), res.metrics))
 }
@@ -399,6 +446,37 @@ impl Block3d for SparseBlock {
             SparseBlock::B(_) => Tag::B,
             SparseBlock::C(_) => Tag::C,
         }
+    }
+
+    fn wire_codec() -> Option<CodecHandle<TripleKey, Self>> {
+        Some(Arc::new(WirePairCodec::default()))
+    }
+}
+
+/// Wire form: one variant byte, then the CSR body (bitmap/delta column
+/// encoding chosen per row inside [`CsrMatrix`]'s codec).
+impl Wire for SparseBlock {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        let (tag, m) = match self {
+            SparseBlock::A(m) => (WIRE_TAG_A, m),
+            SparseBlock::B(m) => (WIRE_TAG_B, m),
+            SparseBlock::C(m) => (WIRE_TAG_C, m),
+        };
+        out.push(tag);
+        m.wire_encode(out);
+    }
+
+    fn wire_decode(r: &mut ByteReader) -> Result<Self, WireError> {
+        let tag = r.u8()?;
+        if tag > WIRE_TAG_C {
+            return Err(WireError::Corrupt("unknown sparse block variant"));
+        }
+        let m = Arc::new(CsrMatrix::wire_decode(r)?);
+        Ok(match tag {
+            WIRE_TAG_A => SparseBlock::A(m),
+            WIRE_TAG_B => SparseBlock::B(m),
+            _ => SparseBlock::C(m),
+        })
     }
 }
 
@@ -491,6 +569,7 @@ pub fn multiply_sparse_3d(
     plan: &SparsePlan,
     engine: EngineConfig,
     partitioner: PartitionerKind,
+    transport: TransportSel,
 ) -> Result<(CooMatrix, JobMetrics)> {
     anyhow::ensure!(a.rows() == a.cols(), "A must be square");
     anyhow::ensure!(b.rows() == b.cols() && a.rows() == b.rows());
@@ -507,6 +586,7 @@ pub fn multiply_sparse_3d(
         make_partitioner_3d(partitioner, geo.q, geo.rho),
     );
     let mut driver = Driver::new(engine);
+    driver.set_transport(transport);
     let res = driver.run(&alg, &input);
     Ok((
         sparse_3d_assemble(plan.side, plan.block_side, res.output),
@@ -546,6 +626,7 @@ pub fn multiply_sparse_3d_general(
         &plan,
         engine,
         PartitionerKind::Balanced,
+        TransportSel::default(),
     )?;
     Ok((perm.unapply_output(&c_perm), metrics))
 }
@@ -573,6 +654,7 @@ mod tests {
             rho,
             engine: engine(),
             partitioner: PartitionerKind::Balanced,
+            transport: TransportSel::default(),
         }
     }
 
@@ -683,8 +765,15 @@ mod tests {
         let want = a.to_dense().matmul_naive(&b.to_dense());
         for rho in [1, 2, 4] {
             let plan = SparsePlan::new(side, 16, rho, 0.08, 0.3).unwrap();
-            let (got, metrics) =
-                multiply_sparse_3d(&a, &b, &plan, engine(), PartitionerKind::Balanced).unwrap();
+            let (got, metrics) = multiply_sparse_3d(
+                &a,
+                &b,
+                &plan,
+                engine(),
+                PartitionerKind::Balanced,
+                TransportSel::default(),
+            )
+            .unwrap();
             assert_eq!(got.to_dense().max_abs_diff(&want), 0.0, "rho={rho}");
             assert_eq!(metrics.num_rounds(), plan.rounds());
         }
@@ -727,8 +816,15 @@ mod tests {
         let a = CooMatrix::new(side, side);
         let b = CooMatrix::new(side, side);
         let plan = SparsePlan::new(side, 8, 2, 0.01, 0.01).unwrap();
-        let (got, _) =
-            multiply_sparse_3d(&a, &b, &plan, engine(), PartitionerKind::Balanced).unwrap();
+        let (got, _) = multiply_sparse_3d(
+            &a,
+            &b,
+            &plan,
+            engine(),
+            PartitionerKind::Balanced,
+            TransportSel::default(),
+        )
+        .unwrap();
         assert_eq!(got.nnz(), 0);
     }
 
@@ -842,6 +938,117 @@ mod tests {
         let c1 = blk.clone();
         assert_eq!(Arc::strong_count(&csr), 3, "clones share storage");
         assert!(std::ptr::eq(blk.csr(), c1.csr()));
+    }
+
+    #[test]
+    fn block_wire_roundtrips_preserve_the_variant() {
+        // The variant byte is semantic cargo (Strassen signs ride it),
+        // so every variant must survive encode∘decode exactly.
+        let m = gen::dense_int(5, 7, &mut Xoshiro256ss::new(40));
+        for blk in [
+            DenseBlock::a(m.clone()),
+            DenseBlock::b(m.clone()),
+            DenseBlock::c(m.clone()),
+        ] {
+            let mut buf = Vec::new();
+            blk.wire_encode(&mut buf);
+            let mut r = ByteReader::new(&buf);
+            let back = DenseBlock::wire_decode(&mut r).unwrap();
+            assert!(r.is_empty(), "decode must consume the whole body");
+            assert_eq!(back, blk);
+        }
+        let csr = gen::erdos_renyi_coo(9, 0.3, &mut Xoshiro256ss::new(41)).to_csr();
+        for blk in [
+            SparseBlock::a(csr.clone()),
+            SparseBlock::b(csr.clone()),
+            SparseBlock::c(csr.clone()),
+        ] {
+            let mut buf = Vec::new();
+            blk.wire_encode(&mut buf);
+            let mut r = ByteReader::new(&buf);
+            let back = SparseBlock::wire_decode(&mut r).unwrap();
+            assert!(r.is_empty());
+            assert_eq!(back, blk);
+        }
+    }
+
+    #[test]
+    fn block_wire_rejects_unknown_variants_and_truncation() {
+        let blk = DenseBlock::a(DenseMatrix::identity(3));
+        let mut buf = Vec::new();
+        blk.wire_encode(&mut buf);
+        buf[0] = 7; // forge an unknown variant byte
+        assert!(DenseBlock::wire_decode(&mut ByteReader::new(&buf)).is_err());
+        assert!(DenseBlock::wire_decode(&mut ByteReader::new(&[])).is_err());
+        let sblk = SparseBlock::c(CooMatrix::new(2, 2).to_csr());
+        let mut sbuf = Vec::new();
+        sblk.wire_encode(&mut sbuf);
+        sbuf[0] = 0xff;
+        assert!(SparseBlock::wire_decode(&mut ByteReader::new(&sbuf)).is_err());
+    }
+
+    #[test]
+    fn dense_3d_is_bit_identical_across_all_transports() {
+        use crate::mapreduce::ProcTransport;
+        let side = 16;
+        let mut rng = Xoshiro256ss::new(50);
+        let a = gen::dense_uniform(side, side, &mut rng);
+        let b = gen::dense_uniform(side, side, &mut rng);
+        let mut zc = cfg(4, 2);
+        zc.transport = TransportSel::ZeroCopy;
+        let (want, wm) =
+            multiply_dense_3d(&a, &b, &zc, Arc::new(NativeMultiply::new())).unwrap();
+        assert_eq!(wm.total_shuffle_bytes(), 0, "zero-copy moves no bytes");
+
+        let ser = cfg(4, 2); // serialized in-proc is the default
+        let (got, sm) =
+            multiply_dense_3d(&a, &b, &ser, Arc::new(NativeMultiply::new())).unwrap();
+        assert_eq!(got.as_slice(), want.as_slice(), "inproc serialized");
+        assert!(sm.total_shuffle_bytes() > 0, "serialized path measures bytes");
+        assert_eq!(
+            sm.total_shuffle_words(),
+            wm.total_shuffle_words(),
+            "word ledger is transport-invariant"
+        );
+
+        let mut pc = cfg(4, 2);
+        pc.transport = TransportSel::Proc(ProcTransport::local_threads(2).unwrap());
+        let (gotp, pm) =
+            multiply_dense_3d(&a, &b, &pc, Arc::new(NativeMultiply::new())).unwrap();
+        assert_eq!(gotp.as_slice(), want.as_slice(), "proc transport");
+        assert!(pm.total_shuffle_bytes() > 0);
+        assert_eq!(pm.total_transport_respawns(), 0);
+    }
+
+    #[test]
+    fn sparse_3d_is_bit_identical_on_the_serialized_transport() {
+        let side = 32;
+        let mut rng = Xoshiro256ss::new(51);
+        let a = gen::erdos_renyi_coo(side, 0.1, &mut rng);
+        let b = gen::erdos_renyi_coo(side, 0.1, &mut rng);
+        let plan = SparsePlan::new(side, 8, 2, 0.1, 0.3).unwrap();
+        let (want, wm) = multiply_sparse_3d(
+            &a,
+            &b,
+            &plan,
+            engine(),
+            PartitionerKind::Balanced,
+            TransportSel::ZeroCopy,
+        )
+        .unwrap();
+        let (got, sm) = multiply_sparse_3d(
+            &a,
+            &b,
+            &plan,
+            engine(),
+            PartitionerKind::Balanced,
+            TransportSel::default(),
+        )
+        .unwrap();
+        assert_eq!(got.to_dense(), want.to_dense());
+        assert_eq!(wm.total_shuffle_bytes(), 0);
+        assert!(sm.total_shuffle_bytes() > 0);
+        assert_eq!(sm.total_shuffle_words(), wm.total_shuffle_words());
     }
 
     #[test]

@@ -438,6 +438,14 @@ impl MultiRoundAlgorithm for AlgoStrassen {
         true
     }
 
+    fn codec(&self) -> Option<crate::mapreduce::wire::CodecHandle<TripleKey, DenseBlock>> {
+        // Both phases ship DenseBlock payloads; the combine messages'
+        // sign rides the A/B variant byte, which the block codec
+        // preserves exactly.
+        use super::algo3d::Block3d;
+        DenseBlock::wire_codec()
+    }
+
     fn groups_hint(&self, round: usize) -> Option<usize> {
         match &self.inner {
             Inner::Delegate { alg } => alg.groups_hint(round),
@@ -473,6 +481,7 @@ pub fn multiply_dense_strassen(
     let alg = AlgoStrassen::new(a.rows(), levels, cfg, Arc::new(DenseOps::new(backend)))?;
     let input = alg.static_input(a, b);
     let mut driver = Driver::new(cfg.engine);
+    driver.set_transport(cfg.transport.clone());
     let res = driver.run(&alg, &input);
     Ok((alg.assemble(res.output), res.metrics))
 }
@@ -644,6 +653,32 @@ mod tests {
             assert_eq!(got.as_slice(), want.as_slice(), "{ctx}");
             let s = fctx.stats();
             assert!(s.failures >= 3, "{ctx}: the round-0 injuries are guaranteed");
+        }
+    }
+
+    /// The signed A/B variant routing must survive serialization: a
+    /// Strassen run on the serialized in-proc transport (the default)
+    /// reproduces the zero-copy reference bit for bit, and on float
+    /// inputs too — the codec preserves f32 bits and variant bytes.
+    #[test]
+    fn strassen_on_the_serialized_transport_matches_zero_copy_bit_for_bit() {
+        use crate::mapreduce::TransportSel;
+        let side = 16usize;
+        let mut rng = Xoshiro256ss::new(96);
+        let a = gen::dense_uniform(side, side, &mut rng);
+        let b = gen::dense_uniform(side, side, &mut rng);
+        for levels in [1usize, 2] {
+            let mut zc = cfg(4);
+            zc.transport = TransportSel::ZeroCopy;
+            let (want, wm) =
+                multiply_dense_strassen(&a, &b, levels, &zc, Arc::new(NaiveMultiply)).unwrap();
+            let (got, sm) =
+                multiply_dense_strassen(&a, &b, levels, &cfg(4), Arc::new(NaiveMultiply))
+                    .unwrap();
+            assert_eq!(got.as_slice(), want.as_slice(), "L={levels}");
+            assert_eq!(wm.total_shuffle_bytes(), 0);
+            assert!(sm.total_shuffle_bytes() > 0, "L={levels}: bytes measured");
+            assert_eq!(sm.total_shuffle_words(), wm.total_shuffle_words());
         }
     }
 

@@ -42,7 +42,7 @@ use m3::m3::{
     multiply_dense_2d, multiply_dense_3d, multiply_dense_strassen, multiply_sparse_3d, M3Config,
     PartitionerKind, Plan3d, SparsePlan,
 };
-use m3::mapreduce::EngineConfig;
+use m3::mapreduce::{EngineConfig, ProcTransport, TransportSel};
 use m3::matrix::gen;
 use m3::runtime::artifacts::{default_dir, ArtifactSet};
 use m3::runtime::native::NativeMultiply;
@@ -61,7 +61,10 @@ USAGE:
               [--levels <L>] [--backend xla|native|naive|auto]
               [--partitioner balanced|naive] [--seed <u64>]
               [--verify] [--tol <eps>] [--nodes <p>] [--slots <s>]
+              [--transport zero-copy|inproc] [--workers-proc <N>]
+              [--dump-wire <path>]
   m3 sparse   --n <side> --nnz-per-row <k> --block <side> --rho <r> [--verify]
+              [--transport zero-copy|inproc] [--workers-proc <N>]
   m3 serve    [--policy fifo|fair|srpt] [--jobs <n>] [--tenants <t>]
               [--seed <u64>] [--mean-arrival <secs>] [--preempt-rate <per-100s>]
               [--auto-fraction <0..1>] [--budget <words>] [--recalibrate]
@@ -95,12 +98,29 @@ USAGE:
 ";
 
 fn main() {
+    // Re-exec entry of the multi-process shuffle backend: `ProcTransport`
+    // spawns `m3 __proc-worker <socket>` children that serve wire frames
+    // over a Unix-domain socket until told to exit (or SIGKILLed by a
+    // fault plan, in which case the parent respawns and replays).
+    let raw: Vec<String> = std::env::args().collect();
+    if raw.get(1).map(String::as_str) == Some("__proc-worker") {
+        let sock = raw.get(2).cloned().unwrap_or_default();
+        if sock.is_empty() {
+            eprintln!("__proc-worker needs a socket path");
+            std::process::exit(2);
+        }
+        if let Err(e) = m3::mapreduce::transport::run_proc_worker(&sock) {
+            eprintln!("proc worker failed: {e}");
+            std::process::exit(1);
+        }
+        return;
+    }
     let spec = Spec::new(&[
         "n", "block", "rho", "algo", "backend", "partitioner", "seed", "nodes", "slots", "fig",
         "out-dir", "profile", "nnz-per-row", "workers", "policy", "jobs", "tenants",
         "mean-arrival", "preempt-rate", "pairs", "reduce-tasks", "out", "sides", "sparse-side",
         "budget", "auto-fraction", "mem-per-node-gb", "fault-nodes", "strike-fraction", "levels",
-        "tol",
+        "tol", "transport", "workers-proc", "dump-wire",
     ]);
     let args = match Args::parse(&spec) {
         Ok(a) => a,
@@ -221,6 +241,22 @@ fn partitioner_from(args: &Args) -> Result<PartitionerKind> {
     })
 }
 
+/// Resolve the shuffle transport: `--workers-proc N` spawns `N` real
+/// worker processes over Unix-domain sockets; otherwise `--transport
+/// zero-copy|inproc` picks between the reference `Arc` path and the
+/// serialized in-process default.
+fn transport_from(args: &Args) -> Result<TransportSel> {
+    let workers_proc: usize = args.get("workers-proc", 0).map_err(anyhow::Error::msg)?;
+    if workers_proc > 0 {
+        let t = ProcTransport::spawn(workers_proc)?;
+        eprintln!("[m3] proc transport: {workers_proc} worker process(es) spawned");
+        return Ok(TransportSel::Proc(t));
+    }
+    let name = args.opt_or("transport", "inproc");
+    TransportSel::parse(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown transport {name:?} (zero-copy|inproc)"))
+}
+
 fn cmd_multiply(args: &Args) -> Result<()> {
     let n: usize = args.get("n", 1024).map_err(anyhow::Error::msg)?;
     let block: usize = args.get("block", 256).map_err(anyhow::Error::msg)?;
@@ -233,6 +269,7 @@ fn cmd_multiply(args: &Args) -> Result<()> {
         rho,
         engine: engine_from(args)?,
         partitioner: partitioner_from(args)?,
+        transport: transport_from(args)?,
     };
     let backend = backend_from(args)?;
 
@@ -240,6 +277,10 @@ fn cmd_multiply(args: &Args) -> Result<()> {
     eprintln!("[m3] generating two {n}x{n} matrices (seed {seed})");
     let a = gen::dense_int(n, n, &mut rng);
     let b = gen::dense_int(n, n, &mut rng);
+
+    if let Some(path) = args.opt("dump-wire") {
+        dump_wire_frames(&path, n, block, &a, &b)?;
+    }
 
     let t0 = std::time::Instant::now();
     let (c, metrics) = match algo.as_str() {
@@ -256,6 +297,19 @@ fn cmd_multiply(args: &Args) -> Result<()> {
         wall.as_secs_f64(),
         backend.kernel_time().as_secs_f64(),
         backend.name(),
+    );
+    let tname = match &cfg.transport {
+        TransportSel::ZeroCopy => "zero-copy",
+        TransportSel::InProc => "inproc",
+        TransportSel::Proc(_) => "proc",
+    };
+    println!(
+        "shuffle transport={tname} words={} bytes={} encode={:.3}s decode={:.3}s respawns={}",
+        metrics.total_shuffle_words(),
+        metrics.total_shuffle_bytes(),
+        metrics.total_encode_time().as_secs_f64(),
+        metrics.total_decode_time().as_secs_f64(),
+        metrics.total_transport_respawns(),
     );
     if algo == "strassen" {
         println!(
@@ -283,6 +337,39 @@ fn cmd_multiply(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Dump the round-0 map-output frames of a dense 3D run — the same
+/// `M3WF` frames the serialized transport puts on the wire, one per
+/// sender, concatenated — so stdlib-only tooling
+/// (`scripts/validate_wire.py`) can check the format from outside Rust.
+fn dump_wire_frames(
+    path: &str,
+    n: usize,
+    block: usize,
+    a: &m3::matrix::DenseMatrix,
+    b: &m3::matrix::DenseMatrix,
+) -> Result<()> {
+    use m3::m3::multiply::dense_3d_static_input;
+    use m3::mapreduce::wire::{encode_frame, WirePairCodec};
+    use m3::matrix::BlockGrid;
+    anyhow::ensure!(block > 0 && n % block == 0, "--block must divide --n");
+    let grid = BlockGrid::new(n, block);
+    let input = dense_3d_static_input(&grid, a, b);
+    let codec = WirePairCodec::default();
+    let per_sender = input.len().div_ceil(4).max(1);
+    let mut bytes = Vec::new();
+    let mut frames = 0usize;
+    for chunk in input.chunks(per_sender) {
+        bytes.extend_from_slice(&encode_frame(&codec, chunk));
+        frames += 1;
+    }
+    std::fs::write(path, &bytes)?;
+    eprintln!(
+        "[m3] wrote {frames} wire frame(s), {} bytes, to {path}",
+        bytes.len()
+    );
+    Ok(())
+}
+
 fn cmd_sparse(args: &Args) -> Result<()> {
     let n: usize = args.get("n", 4096).map_err(anyhow::Error::msg)?;
     let k: usize = args.get("nnz-per-row", 8).map_err(anyhow::Error::msg)?;
@@ -297,8 +384,14 @@ fn cmd_sparse(args: &Args) -> Result<()> {
     let a = gen::erdos_renyi_coo(n, delta, &mut rng);
     let b = gen::erdos_renyi_coo(n, delta, &mut rng);
     let t0 = std::time::Instant::now();
-    let (c, metrics) =
-        multiply_sparse_3d(&a, &b, &plan, engine_from(args)?, partitioner_from(args)?)?;
+    let (c, metrics) = multiply_sparse_3d(
+        &a,
+        &b,
+        &plan,
+        engine_from(args)?,
+        partitioner_from(args)?,
+        transport_from(args)?,
+    )?;
     println!("{}", metrics.table());
     println!(
         "sparse n={n} nnz(A)={} nnz(B)={} nnz(C)={} rounds={} wall={:.3}s expected_out_density={:.2e} measured={:.2e}",
@@ -615,6 +708,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
         rho,
         engine: engine_from(args)?,
         partitioner: partitioner_from(args)?,
+        transport: transport_from(args)?,
     };
     let backend = backend_from(args)?;
     let mut rng = Xoshiro256ss::new(seed);
@@ -861,6 +955,7 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
             rho,
             engine: engine_from(args)?,
             partitioner: PartitionerKind::Balanced,
+            transport: transport_from(args)?,
         };
         let plan = Plan3d::new(n, block, rho)?;
         let (_, metrics) = multiply_dense_3d(&a, &b, &cfg, backend.clone())?;

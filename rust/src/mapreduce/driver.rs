@@ -18,7 +18,9 @@ use super::dfs::SimDfs;
 use super::executor::Pool;
 use super::job::{EngineConfig, Job};
 use super::metrics::{JobMetrics, RoundMetrics};
+use super::transport::TransportSel;
 use super::types::{Key, Mapper, Pair, Partitioner, Reducer, Value};
+use super::wire::CodecHandle;
 use crate::fault::FaultContext;
 use crate::trace;
 use crate::trace::SpanKind;
@@ -66,6 +68,15 @@ pub trait MultiRoundAlgorithm {
     /// map phase.
     fn groups_hint(&self, round: usize) -> Option<usize> {
         let _ = round;
+        None
+    }
+
+    /// The wire codec for this algorithm's pairs, when its payloads
+    /// are serializable. `Some` routes the shuffle through the
+    /// driver's transport as byte frames (measured `shuffle_bytes`);
+    /// `None` (the default) keeps the zero-copy `Arc` path regardless
+    /// of the selected transport.
+    fn codec(&self) -> Option<CodecHandle<Self::K, Self::V>> {
         None
     }
 }
@@ -127,6 +138,10 @@ pub struct Driver {
     pool: Arc<Pool>,
     /// Fault-injection context, when installed ([`Driver::set_faults`]).
     faults: Option<Arc<FaultContext>>,
+    /// Shuffle transport selection. Defaults to the in-process
+    /// serialized backend; algorithms without a codec fall back to
+    /// zero-copy regardless.
+    transport: TransportSel,
 }
 
 impl Driver {
@@ -142,7 +157,21 @@ impl Driver {
             dfs: SimDfs::new(),
             pool,
             faults: None,
+            transport: TransportSel::default(),
         }
+    }
+
+    /// Select the shuffle transport for subsequent rounds (see
+    /// [`TransportSel`]). The zero-copy reference path and the
+    /// serialized backends produce bit-identical outputs (pinned by
+    /// the equivalence suite); they differ in what gets measured.
+    pub fn set_transport(&mut self, transport: TransportSel) {
+        self.transport = transport;
+    }
+
+    /// The selected shuffle transport.
+    pub fn transport(&self) -> &TransportSel {
+        &self.transport
     }
 
     /// Install a fault-injection context: subsequent rounds run their
@@ -228,7 +257,29 @@ impl Driver {
             combiner: alg.combiner(r),
             partitioner: alg.partitioner(r),
         };
-        let (out, mut m) = job.run_with_faults(&self.pool, r, input, self.faults.as_deref());
+        // Route the shuffle through the selected transport when the
+        // algorithm has a wire codec; otherwise (toy/test algorithms,
+        // or an explicit zero-copy selection) run the reference path.
+        let wire = self
+            .transport
+            .as_transport()
+            .and_then(|t| alg.codec().map(|c| (t, c)));
+        let (out, mut m) = match wire {
+            None => job.run_with_faults(&self.pool, r, input, self.faults.as_deref()),
+            Some((t, codec)) => {
+                // The session's sender count must match the map task
+                // count the job will actually use (same formula).
+                let senders = self.config.map_tasks.max(1).min(input.len().max(1));
+                let session = t.round_session(r, senders, self.config.reduce_tasks);
+                job.run_wire(
+                    &self.pool,
+                    r,
+                    input,
+                    self.faults.as_deref(),
+                    Some((&codec, session.as_ref())),
+                )
+            }
+        };
 
         // Recovery accounting: when a node died under this round, the
         // re-executed tasks re-fetched their share of the round input
@@ -420,6 +471,12 @@ impl<A: MultiRoundAlgorithm> StepRun<A> {
         self.driver.set_faults(faults);
     }
 
+    /// Select the shuffle transport on the underlying driver (see
+    /// [`Driver::set_transport`]).
+    pub fn set_transport(&mut self, transport: TransportSel) {
+        self.driver.set_transport(transport);
+    }
+
     /// The algorithm being executed.
     pub fn alg(&self) -> &A {
         &self.alg
@@ -595,6 +652,75 @@ mod tests {
         for p in &res.output {
             assert_eq!(p.value, 3.0, "value incremented once per round");
         }
+    }
+
+    /// [`IncAlg`] with a wire codec: the driver serializes its shuffle
+    /// through the selected transport.
+    struct WireIncAlg(IncAlg);
+    impl MultiRoundAlgorithm for WireIncAlg {
+        type K = u32;
+        type V = f32;
+        fn num_rounds(&self) -> usize {
+            self.0.num_rounds()
+        }
+        fn mapper(&self, r: usize) -> &dyn Mapper<u32, f32> {
+            self.0.mapper(r)
+        }
+        fn reducer(&self, r: usize) -> &dyn Reducer<u32, f32> {
+            self.0.reducer(r)
+        }
+        fn partitioner(&self, r: usize) -> &dyn Partitioner<u32> {
+            self.0.partitioner(r)
+        }
+        fn reads_static_input(&self, r: usize) -> bool {
+            self.0.reads_static_input(r)
+        }
+        fn codec(&self) -> Option<CodecHandle<u32, f32>> {
+            Some(Arc::new(crate::mapreduce::wire::WirePairCodec::default()))
+        }
+    }
+
+    #[test]
+    fn serialized_transport_matches_zero_copy_and_measures_bytes() {
+        let input: Vec<Pair<u32, f32>> = (0..40).map(|i| Pair::new(i % 7, 0.5)).collect();
+        let mut zc = Driver::new(small_cfg());
+        zc.set_transport(TransportSel::ZeroCopy);
+        let reference = zc.run(&WireIncAlg(IncAlg::new(3)), &input);
+        // Default transport is inproc-serialized for codec'd algorithms.
+        let mut ser = Driver::new(small_cfg());
+        let got = ser.run(&WireIncAlg(IncAlg::new(3)), &input);
+        assert_eq!(got.output, reference.output, "bit-identical outputs");
+        for (r_zc, r_ser) in reference.metrics.rounds.iter().zip(&got.metrics.rounds) {
+            assert_eq!(r_zc.shuffle_bytes, 0, "zero-copy measures no bytes");
+            assert!(r_ser.shuffle_bytes > 0, "serialized rounds measure bytes");
+            assert_eq!(r_zc.shuffle_words, r_ser.shuffle_words, "word ledger");
+            assert_eq!(r_zc.shuffle_pairs, r_ser.shuffle_pairs);
+        }
+        assert!(got.metrics.total_shuffle_bytes() > 0);
+    }
+
+    #[test]
+    fn algorithms_without_codec_stay_zero_copy_under_any_transport() {
+        let input: Vec<Pair<u32, f32>> = (0..10).map(|i| Pair::new(i, 0.0)).collect();
+        let mut d = Driver::new(small_cfg());
+        d.set_transport(TransportSel::InProc);
+        let res = d.run(&IncAlg::new(2), &input);
+        assert_eq!(res.metrics.total_shuffle_bytes(), 0, "no codec, no frames");
+    }
+
+    #[test]
+    fn proc_transport_driver_run_matches_reference() {
+        let input: Vec<Pair<u32, f32>> = (0..60).map(|i| Pair::new(i % 9, 1.0)).collect();
+        let mut zc = Driver::new(small_cfg());
+        zc.set_transport(TransportSel::ZeroCopy);
+        let reference = zc.run(&WireIncAlg(IncAlg::new(2)), &input);
+        let fabric = crate::mapreduce::transport::ProcTransport::local_threads(2).unwrap();
+        let mut d = Driver::new(small_cfg());
+        d.set_transport(TransportSel::Proc(fabric));
+        let got = d.run(&WireIncAlg(IncAlg::new(2)), &input);
+        assert_eq!(got.output, reference.output, "proc fabric is bit-exact");
+        assert!(got.metrics.total_shuffle_bytes() > 0);
+        assert_eq!(got.metrics.total_transport_respawns(), 0);
     }
 
     #[test]

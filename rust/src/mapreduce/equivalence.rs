@@ -18,8 +18,9 @@ use std::sync::Arc;
 
 use super::driver::{Driver, MultiRoundAlgorithm};
 use super::job::{chunk_evenly, EngineConfig, Job};
-use super::metrics::RoundMetrics;
+use super::metrics::{JobMetrics, RoundMetrics};
 use super::shuffle::{measure, shuffle};
+use super::transport::{ProcTransport, TransportSel};
 use super::types::{FnReducer, HashPartitioner, IdentityMapper, Key, Pair, Value};
 
 use crate::m3::algo3d::{Algo3d, Geometry};
@@ -770,4 +771,248 @@ fn combiner_round_matches_reference() {
         );
         assert_outputs_match(got_out, want_out, &ctx);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Transport equivalence: serialized shuffles vs the zero-copy reference
+// ---------------------------------------------------------------------------
+
+/// Run `alg` under an explicit shuffle transport.
+fn transport_run<A: MultiRoundAlgorithm>(
+    alg: &A,
+    cfg: EngineConfig,
+    input: &[Pair<A::K, A::V>],
+    transport: TransportSel,
+) -> (Vec<Pair<A::K, A::V>>, JobMetrics) {
+    let mut d = Driver::new(cfg);
+    d.set_transport(transport);
+    let got = d.run(alg, input);
+    (got.output, got.metrics)
+}
+
+/// The acceptance pin for the wire-format shuffle: under both
+/// serialized backends (per-partition byte buffers in process, and the
+/// socket-backed proc fabric) every payload crosses the `Transport`
+/// boundary as encoded frames, yet outputs and shuffle-cost metrics
+/// must be bit-for-bit identical to the zero-copy `Arc` reference at
+/// workers {1, 2, 8}. The word ledger is transport-invariant; only the
+/// serialized paths may report wire bytes.
+fn assert_transports_match<A, F>(make: F, input: &[Pair<A::K, A::V>], shape: &str)
+where
+    A: MultiRoundAlgorithm,
+    A::V: PartialEq + std::fmt::Debug,
+    F: Fn() -> A,
+{
+    for workers in [1usize, 2, 8] {
+        let cfg = engine(workers);
+        let (want_out, want_m) =
+            transport_run(&make(), cfg, input, TransportSel::ZeroCopy);
+        assert_eq!(
+            want_m.total_shuffle_bytes(),
+            0,
+            "{shape} workers={workers}: zero-copy must move no wire bytes"
+        );
+        let proc = TransportSel::Proc(ProcTransport::local_threads(2).unwrap());
+        for (transport, name) in [(TransportSel::InProc, "inproc"), (proc, "proc")] {
+            let (got_out, got_m) = transport_run(&make(), cfg, input, transport);
+            let ctx = format!("{shape} transport={name} workers={workers}");
+            assert!(
+                got_m.total_shuffle_bytes() > 0,
+                "{ctx}: serialized shuffle must measure wire bytes"
+            );
+            assert_eq!(
+                got_m.total_shuffle_words(),
+                want_m.total_shuffle_words(),
+                "{ctx}: word ledger must be transport-invariant"
+            );
+            assert_metrics_match(&got_m.rounds, &want_m.rounds, &ctx);
+            assert_outputs_match(got_out, want_out.clone(), &ctx);
+        }
+    }
+}
+
+#[test]
+fn dense_3d_serialized_transports_match_zero_copy() {
+    let (side, block, rho) = (16usize, 4usize, 2usize);
+    let plan = Plan3d::new(side, block, rho).unwrap();
+    let geo: Geometry = plan.into();
+    let grid = BlockGrid::new(side, block);
+    let mut rng = Xoshiro256ss::new(61);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let input = dense_3d_static_input(&grid, &a, &b);
+    assert_transports_match(
+        || {
+            Algo3d::new(
+                geo,
+                Arc::new(DenseOps::new(Arc::new(NaiveMultiply))),
+                Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+            )
+        },
+        &input,
+        "dense3d",
+    );
+}
+
+#[test]
+fn dense_2d_serialized_transports_match_zero_copy() {
+    let (side, m, rho) = (16usize, 64usize, 2usize);
+    let plan = Plan2d::new(side, m, rho).unwrap();
+    let mut rng = Xoshiro256ss::new(62);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let input = Algo2d::static_input(plan, &a, &b);
+    assert_transports_match(
+        || {
+            Algo2d::new(
+                plan,
+                Arc::new(NaiveMultiply),
+                Box::new(BalancedPartitioner2d {
+                    strips: plan.strips(),
+                    rho,
+                }),
+            )
+        },
+        &input,
+        "dense2d",
+    );
+}
+
+#[test]
+fn sparse_3d_serialized_transports_match_zero_copy() {
+    let (side, block, rho) = (32usize, 8usize, 2usize);
+    let plan = SparsePlan::new(side, block, rho, 0.15, 0.4).unwrap();
+    let geo = Geometry {
+        q: plan.q(),
+        rho: plan.rho,
+    };
+    let mut rng = Xoshiro256ss::new(63);
+    let a = gen::erdos_renyi_coo(side, 0.15, &mut rng);
+    let b = gen::erdos_renyi_coo(side, 0.15, &mut rng);
+    let input = sparse_3d_static_input(block, &a, &b);
+    assert_transports_match(
+        || {
+            Algo3d::new(
+                geo,
+                Arc::new(SparseOps),
+                Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+            )
+        },
+        &input,
+        "sparse3d",
+    );
+}
+
+#[test]
+fn strassen_serialized_transports_match_zero_copy() {
+    use crate::m3::multiply::M3Config;
+    use crate::m3::strassen::AlgoStrassen;
+    let (side, levels) = (16usize, 2usize);
+    let m3 = M3Config::new(4, 2);
+    let mut rng = Xoshiro256ss::new(64);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let make = || {
+        AlgoStrassen::new(
+            side,
+            levels,
+            &m3,
+            Arc::new(DenseOps::new(Arc::new(NaiveMultiply))),
+        )
+        .unwrap()
+    };
+    let input = make().static_input(&a, &b);
+    assert_transports_match(make, &input, "strassen");
+}
+
+/// A node kill on the proc fabric mid-round: the transport SIGKILLs
+/// (or, in the in-test thread fabric, severs) a live worker after half
+/// the round's sends, the session respawns it, replays retained
+/// broadcasts and re-sends directs — and the run must still reproduce
+/// the zero-copy output bit for bit, with the respawn visible in the
+/// metrics.
+#[test]
+fn proc_transport_node_kill_recovers_bit_exactly() {
+    let (side, block, rho) = (16usize, 4usize, 2usize);
+    let plan = Plan3d::new(side, block, rho).unwrap();
+    let geo: Geometry = plan.into();
+    let grid = BlockGrid::new(side, block);
+    let mut rng = Xoshiro256ss::new(65);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let input = dense_3d_static_input(&grid, &a, &b);
+    let make = || {
+        Algo3d::new(
+            geo,
+            Arc::new(DenseOps::new(Arc::new(NaiveMultiply))),
+            Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+        )
+    };
+    let cfg = engine(2);
+    let (want_out, want_m) = transport_run(&make(), cfg, &input, TransportSel::ZeroCopy);
+
+    let fabric = ProcTransport::local_threads(2).unwrap();
+    fabric.schedule_kill(1, 0);
+    let (got_out, got_m) =
+        transport_run(&make(), cfg, &input, TransportSel::Proc(fabric));
+    assert!(
+        got_m.total_transport_respawns() >= 1,
+        "the scheduled kill must fire and force a worker respawn"
+    );
+    assert_eq!(
+        got_m.total_shuffle_words(),
+        want_m.total_shuffle_words(),
+        "proc node-kill: word ledger survives the respawn"
+    );
+    assert_metrics_match(&got_m.rounds, &want_m.rounds, "proc node-kill");
+    assert_outputs_match(got_out, want_out, "proc node-kill");
+}
+
+/// A seeded [`crate::fault::FaultPlan`] node kill mapped onto the proc
+/// fabric: the logical node dies in the attempt machinery *and* its
+/// backing transport worker is killed at the same round, so recovery
+/// exercises retry/speculation and socket respawn together. The output
+/// must still verify exactly against the fault-free zero-copy run.
+#[test]
+fn seeded_fault_plan_kill_on_proc_transport_verifies_exactly() {
+    use crate::fault::{FaultContext, FaultKind, FaultPlan, FaultSpec, NodeSet, Phase};
+    let (side, block, rho) = (16usize, 4usize, 2usize);
+    let plan3 = Plan3d::new(side, block, rho).unwrap();
+    let geo: Geometry = plan3.into();
+    let grid = BlockGrid::new(side, block);
+    let mut rng = Xoshiro256ss::new(66);
+    let a = gen::dense_int(side, side, &mut rng);
+    let b = gen::dense_int(side, side, &mut rng);
+    let input = dense_3d_static_input(&grid, &a, &b);
+    let make = || {
+        Algo3d::new(
+            geo,
+            Arc::new(DenseOps::new(Arc::new(NaiveMultiply))),
+            Box::new(BalancedPartitioner3d { q: geo.q, rho }),
+        )
+    };
+    let cfg = engine(2);
+    let (want_out, _) = transport_run(&make(), cfg, &input, TransportSel::ZeroCopy);
+
+    let plan = FaultPlan::none().with_kill(1, Phase::Reduce, 1);
+    let fabric = ProcTransport::local_threads(2).unwrap();
+    for ev in plan.events() {
+        if let FaultKind::KillNode { node } = ev.kind {
+            fabric.schedule_kill(ev.round, node);
+        }
+    }
+    let fctx = Arc::new(FaultContext::new(NodeSet::new(4, 66), plan, FaultSpec::default()));
+    let mut d = Driver::new(cfg);
+    d.set_faults(fctx.clone());
+    d.set_transport(TransportSel::Proc(fabric));
+    let got = d.run(&make(), &input);
+    assert!(
+        got.metrics.total_transport_respawns() >= 1,
+        "the mapped kill must respawn a transport worker"
+    );
+    assert!(
+        fctx.stats().failures >= 1,
+        "the logical node kill must surface in the attempt machinery"
+    );
+    assert_outputs_match(got.output, want_out, "seeded fault plan on proc transport");
 }

@@ -14,8 +14,10 @@ use std::time::{Duration, Instant};
 
 use super::executor::Pool;
 use super::metrics::RoundMetrics;
-use super::shuffle::{merge_slices, MapSlices, PartitionedSink};
+use super::shuffle::{merge_slices, merge_slices_wire, MapSlices, PartitionedSink};
+use super::transport::RoundSession;
 use super::types::{Key, Mapper, Pair, Partitioner, Reducer, Value};
+use super::wire::CodecHandle;
 use crate::fault;
 use crate::fault::FaultContext;
 use crate::trace;
@@ -102,6 +104,24 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
         input: Vec<Pair<K, V>>,
         faults: Option<&FaultContext>,
     ) -> (Vec<Pair<K, V>>, RoundMetrics) {
+        self.run_wire(pool, round, input, faults, None)
+    }
+
+    /// [`Job::run_with_faults`] with an optional wire route: when
+    /// `wire` is `Some((codec, session))` the shuffle serializes every
+    /// map output through the transport session as frames and decodes
+    /// them on the reduce side (bit-identical grouping; see
+    /// [`merge_slices_wire`]), recording measured `shuffle_bytes` and
+    /// encode/decode walls in the round metrics. With `wire == None`
+    /// this is the zero-copy reference engine, byte for byte.
+    pub fn run_wire(
+        &self,
+        pool: &Pool,
+        round: usize,
+        input: Vec<Pair<K, V>>,
+        faults: Option<&FaultContext>,
+        wire: Option<(&CodecHandle<K, V>, &dyn RoundSession)>,
+    ) -> (Vec<Pair<K, V>>, RoundMetrics) {
         let fault_stats0 = faults.map(|c| c.stats());
         let reduce_tasks = self.config.reduce_tasks;
         let mut metrics = RoundMetrics {
@@ -184,7 +204,32 @@ impl<'a, K: Key, V: Value> Job<'a, K, V> {
         // slices on the pool.
         let shuffle_start_ns = if traced { trace::now_ns() } else { 0 };
         let t1 = Instant::now();
-        let shuffled = merge_slices(map_outputs, reduce_tasks, pool);
+        let shuffled = match wire {
+            None => merge_slices(map_outputs, reduce_tasks, pool),
+            Some((codec, session)) => {
+                let (shuffled, ws) =
+                    merge_slices_wire(map_outputs, reduce_tasks, pool, codec, session)
+                        .unwrap_or_else(|e| {
+                            panic!("round {round} wire shuffle failed after recovery: {e}")
+                        });
+                metrics.shuffle_bytes = ws.bytes_on_wire as usize;
+                metrics.encode_time = ws.encode;
+                metrics.decode_time = ws.decode;
+                metrics.transport_respawns = ws.respawns;
+                // The word ledger must be conserved across the
+                // serialization boundary: what the map side measured
+                // is exactly what the reduce side decodes.
+                debug_assert_eq!(
+                    ws.decoded_pairs, metrics.shuffle_pairs,
+                    "wire shuffle dropped or duplicated pairs"
+                );
+                debug_assert_eq!(
+                    ws.decoded_words, metrics.shuffle_words,
+                    "wire shuffle word ledger drifted"
+                );
+                shuffled
+            }
+        };
         metrics.num_reducers = shuffled.num_groups();
         metrics.reducers_per_task = shuffled.groups_per_task();
         metrics.shuffle_time = t1.elapsed();

@@ -29,6 +29,18 @@ pub struct RoundMetrics {
     pub shuffle_pairs: usize,
     /// Intermediate words shuffled.
     pub shuffle_words: usize,
+    /// Measured bytes that crossed the shuffle transport (encoded
+    /// frames, counted per delivery). 0 on the zero-copy path, where
+    /// nothing is serialized and only the word model applies.
+    pub shuffle_bytes: usize,
+    /// Wall time spent encoding shuffle payloads to wire frames.
+    pub encode_time: Duration,
+    /// Decoding time summed across reduce partitions (CPU-ish: the
+    /// partitions decode in parallel, so this can exceed wall).
+    pub decode_time: Duration,
+    /// Shuffle worker processes respawned by mid-round transport
+    /// recovery (proc backend only).
+    pub transport_respawns: usize,
     /// Number of distinct reducer keys (reduce function applications).
     pub num_reducers: usize,
     /// Maximum input words over all reduce applications (the paper's
@@ -180,6 +192,27 @@ impl JobMetrics {
     /// Total shuffled words over all rounds.
     pub fn total_shuffle_words(&self) -> usize {
         self.rounds.iter().map(|r| r.shuffle_words).sum()
+    }
+
+    /// Total measured shuffle bytes over all rounds (0 when the job
+    /// ran zero-copy).
+    pub fn total_shuffle_bytes(&self) -> usize {
+        self.rounds.iter().map(|r| r.shuffle_bytes).sum()
+    }
+
+    /// Total encode wall time over all rounds.
+    pub fn total_encode_time(&self) -> Duration {
+        self.rounds.iter().map(|r| r.encode_time).sum()
+    }
+
+    /// Total decode time over all rounds.
+    pub fn total_decode_time(&self) -> Duration {
+        self.rounds.iter().map(|r| r.decode_time).sum()
+    }
+
+    /// Total shuffle-worker respawns over all rounds (proc backend).
+    pub fn total_transport_respawns(&self) -> usize {
+        self.rounds.iter().map(|r| r.transport_respawns).sum()
     }
 
     /// Maximum reducer size in words over all rounds.
@@ -399,6 +432,24 @@ mod tests {
         assert_eq!(j.total_recovery_fallbacks(), 1);
         let fresh = mk(2, 1, 1);
         assert_eq!(fresh.task_attempts, 0, "fault-free rounds stay zero");
+    }
+
+    #[test]
+    fn wire_counters_aggregate() {
+        let mut a = mk(0, 1, 1);
+        a.shuffle_bytes = 1000;
+        a.encode_time = Duration::from_millis(3);
+        a.decode_time = Duration::from_millis(4);
+        a.transport_respawns = 1;
+        let mut b = mk(1, 1, 1);
+        b.shuffle_bytes = 500;
+        let j = JobMetrics { rounds: vec![a, b] };
+        assert_eq!(j.total_shuffle_bytes(), 1500);
+        assert_eq!(j.total_encode_time(), Duration::from_millis(3));
+        assert_eq!(j.total_decode_time(), Duration::from_millis(4));
+        assert_eq!(j.total_transport_respawns(), 1);
+        let zero = mk(2, 1, 1);
+        assert_eq!(zero.shuffle_bytes, 0, "zero-copy rounds stay byte-less");
     }
 
     #[test]

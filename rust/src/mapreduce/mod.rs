@@ -27,7 +27,9 @@ pub mod executor;
 pub mod job;
 pub mod metrics;
 pub mod shuffle;
+pub mod transport;
 pub mod types;
+pub mod wire;
 
 #[cfg(test)]
 mod equivalence;
@@ -36,4 +38,6 @@ pub use driver::{slot_demand, Driver, MultiRoundAlgorithm, StepRun};
 pub use executor::{Pool, PoolStats};
 pub use job::{EngineConfig, Job};
 pub use metrics::{JobMetrics, RoundMetrics};
+pub use transport::{InProcTransport, ProcTransport, RoundSession, Transport, TransportSel};
 pub use types::{Mapper, Pair, Partitioner, Reducer, Value};
+pub use wire::{CodecHandle, Wire, WireError, WirePairCodec};

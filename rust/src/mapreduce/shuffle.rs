@@ -26,10 +26,14 @@
 //! `benches/engine_bench.rs` compare the parallel pipeline against it.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use super::executor::Pool;
+use super::transport::RoundSession;
 use super::types::{Key, Pair, Partitioner, Value};
+use super::wire::{decode_frame, encode_frame, CodecHandle, WireError};
 use crate::trace;
 use crate::trace::SpanKind;
 
@@ -169,6 +173,140 @@ pub fn merge_slices<K: Key, V: Value>(
         bucket
     });
     Shuffled { buckets }
+}
+
+/// Wire-level measurements of one round's serialized shuffle.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WireStats {
+    /// Bytes that crossed the transport, counted per delivery.
+    pub bytes_on_wire: u64,
+    /// Wall time encoding map outputs into frames.
+    pub encode: Duration,
+    /// Decode time summed across reduce partitions (they decode in
+    /// parallel, so this can exceed wall time).
+    pub decode: Duration,
+    /// Pairs recovered from the wire — must equal the round's
+    /// `shuffle_pairs` (the word-conservation ledger).
+    pub decoded_pairs: usize,
+    /// Words recovered from the wire — must equal `shuffle_words`.
+    pub decoded_words: usize,
+    /// Frames sent (direct sends + one per broadcast).
+    pub frames: usize,
+    /// Broadcast sends (a frame byte-identical for every partition).
+    pub broadcasts: usize,
+    /// Worker processes respawned by mid-round recovery.
+    pub respawns: usize,
+}
+
+/// [`merge_slices`] with every payload crossing a transport as wire
+/// frames: each map task's per-partition slices are encoded, sent
+/// through `session` (byte-identical per-partition frames collapse to
+/// one broadcast), and each reduce partition decodes its frames *in
+/// sender order* — reproducing the value order of [`merge_slices`]
+/// exactly, so the grouped buckets are bit-identical to the zero-copy
+/// path's.
+pub fn merge_slices_wire<K: Key, V: Value>(
+    map_outputs: Vec<MapSlices<K, V>>,
+    num_tasks: usize,
+    pool: &Pool,
+    codec: &CodecHandle<K, V>,
+    session: &dyn RoundSession,
+) -> Result<(Shuffled<K, V>, WireStats), WireError> {
+    assert!(num_tasks > 0, "need at least one reduce task");
+    let mut stats = WireStats::default();
+
+    // --- Encode: one frame per (sender, partition) with pairs. Empty
+    // slices send nothing (they are the hole-vec's holes).
+    let t_enc = Instant::now();
+    let frames: Vec<Vec<Option<Arc<Vec<u8>>>>> = map_outputs
+        .iter()
+        .map(|mo| {
+            assert_eq!(mo.slices.len(), num_tasks, "map output arity mismatch");
+            mo.slices
+                .iter()
+                .map(|slice| {
+                    if slice.is_empty() {
+                        None
+                    } else {
+                        Some(Arc::new(encode_frame(codec.as_ref(), slice)))
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    stats.encode = t_enc.elapsed();
+    drop(map_outputs);
+
+    // --- Send: collapse a sender whose frames are byte-identical for
+    // every partition into a single broadcast.
+    for (from, sender_frames) in frames.into_iter().enumerate() {
+        let is_broadcast = num_tasks > 1
+            && sender_frames.iter().all(|f| f.is_some())
+            && sender_frames
+                .windows(2)
+                .all(|w| w[0].as_deref() == w[1].as_deref());
+        if is_broadcast {
+            let f = sender_frames.into_iter().next().unwrap().unwrap();
+            session.broadcast(from, f)?;
+            stats.frames += 1;
+            stats.broadcasts += 1;
+        } else {
+            for (to, f) in sender_frames.into_iter().enumerate() {
+                if let Some(f) = f {
+                    session.send_direct(from, to, f)?;
+                    stats.frames += 1;
+                }
+            }
+        }
+    }
+
+    // --- Receive + decode + group, one partition per pool task, in
+    // sender order (the session's hole-vec contract).
+    let traced = trace::enabled();
+    let (trace_job, trace_round) = if traced {
+        trace::recorder::task_context()
+    } else {
+        (trace::recorder::JOB_NONE, 0)
+    };
+    let decode_ns = AtomicU64::new(0);
+    let pairs = AtomicUsize::new(0);
+    let words = AtomicUsize::new(0);
+    let buckets: Vec<Result<BTreeMap<K, Vec<V>>, WireError>> =
+        pool.run_indexed(num_tasks, |t| {
+            let start_ns = if traced { trace::now_ns() } else { 0 };
+            let frames = session.receive(t)?;
+            let t_dec = Instant::now();
+            let mut bucket: BTreeMap<K, Vec<V>> = BTreeMap::new();
+            let (mut my_pairs, mut my_words) = (0usize, 0usize);
+            for frame in frames {
+                for p in decode_frame(codec.as_ref(), &frame)? {
+                    my_pairs += 1;
+                    my_words += p.value.words();
+                    bucket.entry(p.key).or_default().push(p.value);
+                }
+            }
+            decode_ns.fetch_add(t_dec.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            pairs.fetch_add(my_pairs, Ordering::Relaxed);
+            words.fetch_add(my_words, Ordering::Relaxed);
+            if traced {
+                let end = trace::now_ns();
+                trace::record_span(
+                    SpanKind::Merge,
+                    trace_job,
+                    trace_round,
+                    start_ns,
+                    end.saturating_sub(start_ns),
+                );
+            }
+            Ok(bucket)
+        });
+    let buckets = buckets.into_iter().collect::<Result<Vec<_>, _>>()?;
+    stats.decode = Duration::from_nanos(decode_ns.into_inner());
+    stats.decoded_pairs = pairs.into_inner();
+    stats.decoded_words = words.into_inner();
+    stats.bytes_on_wire = session.bytes_on_wire();
+    stats.respawns = session.respawns();
+    Ok((Shuffled { buckets }, stats))
 }
 
 /// Partition + group the intermediate pairs into `num_tasks` buckets —
@@ -327,6 +465,76 @@ mod tests {
         let chunks = vec![pairs(&[(3, 1.0), (3, 2.0)]), pairs(&[(3, 9.0)])];
         let (s, _, _) = pipeline(&chunks, &ModPartitioner, 4, 2);
         assert_eq!(s.buckets[3][&3], vec![1.0, 2.0, 9.0]);
+    }
+
+    #[test]
+    fn wire_pipeline_matches_zero_copy_merge_exactly() {
+        use crate::mapreduce::transport::{InProcTransport, Transport};
+        use crate::mapreduce::wire::{CodecHandle, WirePairCodec};
+        use std::sync::Arc;
+        let flat: Vec<Pair<u32, f32>> =
+            (0..1500).map(|i| Pair::new(i * 31 % 53, i as f32)).collect();
+        let chunks: Vec<Vec<Pair<u32, f32>>> = flat.chunks(97).map(|c| c.to_vec()).collect();
+        let num_tasks = 5;
+        let make_outputs = || -> Vec<MapSlices<u32, f32>> {
+            chunks
+                .iter()
+                .map(|chunk| {
+                    let mut sink = PartitionedSink::new(&HashPartitioner, num_tasks);
+                    for p in chunk {
+                        sink.push(p.key, p.value);
+                    }
+                    sink.finish()
+                })
+                .collect()
+        };
+        let pool = Pool::new(4);
+        let reference = merge_slices(make_outputs(), num_tasks, &pool);
+        let outputs = make_outputs();
+        let (exp_pairs, exp_words): (usize, usize) = (
+            outputs.iter().map(|o| o.pairs).sum(),
+            outputs.iter().map(|o| o.words).sum(),
+        );
+        let codec: CodecHandle<u32, f32> = Arc::new(WirePairCodec::default());
+        let t = InProcTransport;
+        let session = t.round_session(0, outputs.len(), num_tasks);
+        let (got, ws) =
+            merge_slices_wire(outputs, num_tasks, &pool, &codec, session.as_ref()).unwrap();
+        assert_eq!(got.buckets, reference.buckets, "bit-identical grouping");
+        assert_eq!(ws.decoded_pairs, exp_pairs, "pair ledger conserved");
+        assert_eq!(ws.decoded_words, exp_words, "word ledger conserved");
+        assert!(ws.bytes_on_wire > 0);
+        assert_eq!(ws.broadcasts, 0, "partitioned slices differ per task");
+        assert!(ws.frames > 0);
+    }
+
+    #[test]
+    fn wire_pipeline_collapses_identical_frames_to_broadcast() {
+        use crate::mapreduce::transport::{InProcTransport, Transport};
+        use crate::mapreduce::wire::{CodecHandle, WirePairCodec};
+        use std::sync::Arc;
+        // Hand-build a map output whose slices are identical for every
+        // partition — the broadcast shape.
+        let num_tasks = 3;
+        let slice: Vec<Pair<u32, f32>> = vec![Pair::new(9, 1.5), Pair::new(4, -2.0)];
+        let outputs = vec![MapSlices {
+            slices: (0..num_tasks).map(|_| slice.clone()).collect(),
+            pairs: slice.len() * num_tasks,
+            words: slice.len() * num_tasks,
+        }];
+        let pool = Pool::new(2);
+        let codec: CodecHandle<u32, f32> = Arc::new(WirePairCodec::default());
+        let t = InProcTransport;
+        let session = t.round_session(0, 1, num_tasks);
+        let (got, ws) =
+            merge_slices_wire(outputs, num_tasks, &pool, &codec, session.as_ref()).unwrap();
+        assert_eq!(ws.broadcasts, 1);
+        assert_eq!(ws.frames, 1, "one frame serves every partition");
+        assert_eq!(ws.decoded_pairs, slice.len() * num_tasks);
+        for b in &got.buckets {
+            assert_eq!(b[&9], vec![1.5]);
+            assert_eq!(b[&4], vec![-2.0]);
+        }
     }
 
     #[test]

@@ -1,0 +1,475 @@
+//! The shuffle wire format.
+//!
+//! Real M³-on-Hadoop shuffles encode, ship, and decode bytes; this
+//! module is the byte boundary our engine's serialized transports
+//! ([`crate::mapreduce::transport`]) push every shuffle payload
+//! through. The format is compact and self-describing at the *frame*
+//! level so an external tool (`scripts/validate_wire.py`) can walk a
+//! dumped round without knowing the payload types:
+//!
+//! ```text
+//! frame  := "M3WF" | version u8 | kind u8 | body_len u32 LE | body
+//! body   := pair_count u32 | pair*
+//! pair   := key_len u32 | key bytes | value_len u32 | value bytes
+//! ```
+//!
+//! Key/value bodies are typed encodings ([`Wire`]) living next to the
+//! payload types (`DenseMatrix`, `CsrMatrix` with bitmap+delta column
+//! encoding, the M3 block enums). Every decoder returns
+//! [`WireError`] on corrupt input — never panics — so a transport can
+//! surface a bad frame as a recoverable task failure.
+
+use std::fmt;
+use std::sync::Arc;
+
+use super::types::{Key, Pair, Value};
+
+/// Frame magic: "M3WF".
+pub const MAGIC: [u8; 4] = *b"M3WF";
+/// Wire format version.
+pub const VERSION: u8 = 1;
+/// Frame kind: a stream of key/value pairs (the only kind today;
+/// the byte keeps frames self-describing for future kinds).
+pub const KIND_PAIRS: u8 = 1;
+/// Fixed frame header length in bytes.
+pub const HEADER_LEN: usize = 4 + 1 + 1 + 4;
+
+/// A decode failure. Corrupt or truncated input must surface as one of
+/// these — decoding never panics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Input ended before the expected bytes.
+    Truncated,
+    /// Frame magic mismatch.
+    BadMagic,
+    /// Unsupported wire format version.
+    BadVersion(u8),
+    /// Unknown frame kind byte.
+    BadKind(u8),
+    /// A typed body failed validation.
+    Corrupt(&'static str),
+    /// Transport-level I/O failure (socket closed, worker dead).
+    Io(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "wire input truncated"),
+            WireError::BadMagic => write!(f, "bad frame magic"),
+            WireError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+            WireError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::Corrupt(what) => write!(f, "corrupt wire payload: {what}"),
+            WireError::Io(e) => write!(f, "transport i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Bounds-checked cursor over a byte slice; every read returns
+/// [`WireError::Truncated`] instead of panicking past the end.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Reader over `buf` starting at offset 0.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Whether the reader is exhausted.
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Consume `n` bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian u32.
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a little-endian u64.
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// Read a little-endian i32.
+    pub fn i32(&mut self) -> Result<i32, WireError> {
+        Ok(self.u32()? as i32)
+    }
+
+    /// Read a little-endian IEEE-754 f32 (bit-exact).
+    pub fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// Read a LEB128 varint (≤ 5 bytes for u32 range).
+    pub fn uv(&mut self) -> Result<u32, WireError> {
+        let mut out: u32 = 0;
+        for shift in (0..35).step_by(7) {
+            let b = self.u8()?;
+            let low = (b & 0x7f) as u32;
+            if shift == 28 && low > 0x0f {
+                return Err(WireError::Corrupt("varint overflows u32"));
+            }
+            out |= low << shift;
+            if b & 0x80 == 0 {
+                return Ok(out);
+            }
+        }
+        Err(WireError::Corrupt("varint too long"))
+    }
+}
+
+/// Append a little-endian u32.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian u64.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian i32.
+pub fn put_i32(out: &mut Vec<u8>, v: i32) {
+    put_u32(out, v as u32);
+}
+
+/// Append a little-endian IEEE-754 f32 (bit-exact).
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    put_u32(out, v.to_bits());
+}
+
+/// Append a LEB128 varint.
+pub fn put_uv(out: &mut Vec<u8>, mut v: u32) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// A type with a byte encoding on the shuffle wire. Round-trip is
+/// bit-exact: `wire_decode(wire_encode(x)) == x` including f32 bit
+/// patterns, which is what lets the serialized transports reproduce
+/// the zero-copy engine's outputs bit-for-bit.
+pub trait Wire: Sized {
+    /// Append this value's encoding to `out`.
+    fn wire_encode(&self, out: &mut Vec<u8>);
+    /// Decode one value from the reader.
+    fn wire_decode(r: &mut ByteReader<'_>) -> Result<Self, WireError>;
+}
+
+impl Wire for u32 {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        put_u32(out, *self);
+    }
+    fn wire_decode(r: &mut ByteReader<'_>) -> Result<Self, WireError> {
+        r.u32()
+    }
+}
+
+impl Wire for u64 {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        put_u64(out, *self);
+    }
+    fn wire_decode(r: &mut ByteReader<'_>) -> Result<Self, WireError> {
+        r.u64()
+    }
+}
+
+impl Wire for f32 {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        put_f32(out, *self);
+    }
+    fn wire_decode(r: &mut ByteReader<'_>) -> Result<Self, WireError> {
+        r.f32()
+    }
+}
+
+impl Wire for String {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.len() as u32);
+        out.extend_from_slice(self.as_bytes());
+    }
+    fn wire_decode(r: &mut ByteReader<'_>) -> Result<Self, WireError> {
+        let len = r.u32()? as usize;
+        let bytes = r.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::Corrupt("invalid utf-8"))
+    }
+}
+
+/// Encodes/decodes one key/value pair as a length-delimited record.
+/// The engine asks an algorithm for its codec
+/// ([`crate::mapreduce::MultiRoundAlgorithm::codec`]); algorithms
+/// whose key and value types are [`Wire`] get one for free via
+/// [`WirePairCodec`].
+pub trait PairCodec<K, V>: Send + Sync {
+    /// Append `key`/`value` as one record.
+    fn encode_pair(&self, key: &K, value: &V, out: &mut Vec<u8>);
+    /// Decode one record.
+    fn decode_pair(&self, r: &mut ByteReader<'_>) -> Result<Pair<K, V>, WireError>;
+}
+
+/// The blanket codec for `Wire` key/value types: each side is framed
+/// with its own length so a reader (or the external validator) can
+/// skip a record without decoding it.
+pub struct WirePairCodec<K, V> {
+    _pd: std::marker::PhantomData<fn() -> (K, V)>,
+}
+
+impl<K, V> Default for WirePairCodec<K, V> {
+    fn default() -> Self {
+        Self {
+            _pd: std::marker::PhantomData,
+        }
+    }
+}
+
+impl<K: Key + Wire, V: Value + Wire> PairCodec<K, V> for WirePairCodec<K, V> {
+    fn encode_pair(&self, key: &K, value: &V, out: &mut Vec<u8>) {
+        let klen_at = out.len();
+        put_u32(out, 0);
+        key.wire_encode(out);
+        let klen = (out.len() - klen_at - 4) as u32;
+        out[klen_at..klen_at + 4].copy_from_slice(&klen.to_le_bytes());
+        let vlen_at = out.len();
+        put_u32(out, 0);
+        value.wire_encode(out);
+        let vlen = (out.len() - vlen_at - 4) as u32;
+        out[vlen_at..vlen_at + 4].copy_from_slice(&vlen.to_le_bytes());
+    }
+
+    fn decode_pair(&self, r: &mut ByteReader<'_>) -> Result<Pair<K, V>, WireError> {
+        let klen = r.u32()? as usize;
+        let mut kr = ByteReader::new(r.take(klen)?);
+        let key = K::wire_decode(&mut kr)?;
+        if !kr.is_empty() {
+            return Err(WireError::Corrupt("trailing bytes after key"));
+        }
+        let vlen = r.u32()? as usize;
+        let mut vr = ByteReader::new(r.take(vlen)?);
+        let value = V::wire_decode(&mut vr)?;
+        if !vr.is_empty() {
+            return Err(WireError::Corrupt("trailing bytes after value"));
+        }
+        Ok(Pair::new(key, value))
+    }
+}
+
+/// Arc alias for the codec handle an algorithm hands the engine.
+pub type CodecHandle<K, V> = Arc<dyn PairCodec<K, V>>;
+
+/// Encode a slice of pairs as one complete frame (header + body).
+pub fn encode_frame<K, V>(codec: &dyn PairCodec<K, V>, pairs: &[Pair<K, V>]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + 4 + pairs.len() * 16);
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(KIND_PAIRS);
+    put_u32(&mut out, 0); // body length, patched below
+    put_u32(&mut out, pairs.len() as u32);
+    for p in pairs {
+        codec.encode_pair(&p.key, &p.value, &mut out);
+    }
+    let body_len = (out.len() - HEADER_LEN) as u32;
+    out[6..10].copy_from_slice(&body_len.to_le_bytes());
+    out
+}
+
+/// Decode a complete frame back into its pairs. Rejects — with an
+/// error, never a panic — bad magic, an unknown version or kind, a
+/// body-length mismatch, and any truncation or trailing garbage.
+pub fn decode_frame<K, V>(
+    codec: &dyn PairCodec<K, V>,
+    frame: &[u8],
+) -> Result<Vec<Pair<K, V>>, WireError> {
+    let mut r = ByteReader::new(frame);
+    if r.take(4)? != MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    let version = r.u8()?;
+    if version != VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let kind = r.u8()?;
+    if kind != KIND_PAIRS {
+        return Err(WireError::BadKind(kind));
+    }
+    let body_len = r.u32()? as usize;
+    if body_len != r.remaining() {
+        return Err(WireError::Corrupt("body length mismatch"));
+    }
+    let count = r.u32()? as usize;
+    // A corrupt count cannot make us pre-allocate unboundedly: a pair
+    // record is ≥ 8 bytes, so cap the hint by what the body could hold.
+    let mut pairs = Vec::with_capacity(count.min(r.remaining() / 8 + 1));
+    for _ in 0..count {
+        pairs.push(codec.decode_pair(&mut r)?);
+    }
+    if !r.is_empty() {
+        return Err(WireError::Corrupt("trailing bytes after pairs"));
+    }
+    Ok(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codec() -> WirePairCodec<u32, String> {
+        WirePairCodec::default()
+    }
+
+    fn sample() -> Vec<Pair<u32, String>> {
+        vec![
+            Pair::new(7, "hello".to_string()),
+            Pair::new(0, String::new()),
+            Pair::new(u32::MAX, "ß∂ƒ unicode".to_string()),
+        ]
+    }
+
+    #[test]
+    fn frame_roundtrip_is_identity() {
+        let c = codec();
+        let pairs = sample();
+        let frame = encode_frame(&c, &pairs);
+        assert_eq!(&frame[..4], &MAGIC);
+        assert_eq!(decode_frame(&c, &frame).unwrap(), pairs);
+    }
+
+    #[test]
+    fn empty_frame_roundtrips() {
+        let c = codec();
+        let frame = encode_frame(&c, &[]);
+        assert_eq!(frame.len(), HEADER_LEN + 4);
+        assert_eq!(decode_frame(&c, &frame).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn f32_bits_survive_the_wire() {
+        // -0.0, NaN payloads, subnormals: bit patterns, not values.
+        let c: WirePairCodec<u32, f32> = WirePairCodec::default();
+        for v in [-0.0f32, f32::NAN, f32::MIN_POSITIVE / 2.0, f32::INFINITY] {
+            let frame = encode_frame(&c, &[Pair::new(1, v)]);
+            let got = decode_frame(&c, &frame).unwrap();
+            assert_eq!(got[0].value.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn corrupted_magic_errors_without_panic() {
+        let c = codec();
+        let mut frame = encode_frame(&c, &sample());
+        frame[0] ^= 0xff;
+        assert_eq!(decode_frame(&c, &frame), Err(WireError::BadMagic));
+    }
+
+    #[test]
+    fn corrupted_version_and_kind_error() {
+        let c = codec();
+        let mut f1 = encode_frame(&c, &sample());
+        f1[4] = 99;
+        assert_eq!(decode_frame(&c, &f1), Err(WireError::BadVersion(99)));
+        let mut f2 = encode_frame(&c, &sample());
+        f2[5] = 0;
+        assert_eq!(decode_frame(&c, &f2), Err(WireError::BadKind(0)));
+    }
+
+    #[test]
+    fn truncation_anywhere_errors_without_panic() {
+        let c = codec();
+        let frame = encode_frame(&c, &sample());
+        for len in 0..frame.len() {
+            let err = decode_frame(&c, &frame[..len]).unwrap_err();
+            assert!(
+                matches!(err, WireError::Truncated | WireError::Corrupt(_)),
+                "prefix of {len}: unexpected {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fuzzed_byte_flips_never_panic() {
+        // Flip every byte of a real frame in turn: every outcome is
+        // either a clean decode (the flip hit a value byte) or an Err.
+        let c = codec();
+        let frame = encode_frame(&c, &sample());
+        for i in 0..frame.len() {
+            let mut bad = frame.clone();
+            bad[i] ^= 0x5a;
+            let _ = decode_frame(&c, &bad); // must not panic
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let c = codec();
+        let mut frame = encode_frame(&c, &sample());
+        frame.push(0xaa);
+        assert!(decode_frame(&c, &frame).is_err());
+    }
+
+    #[test]
+    fn huge_count_with_small_body_errors() {
+        // Forged pair count far beyond the body must not OOM or panic.
+        let c = codec();
+        let mut frame = encode_frame(&c, &[]);
+        let at = HEADER_LEN;
+        frame[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_frame(&c, &frame).is_err());
+    }
+
+    #[test]
+    fn varint_roundtrip_and_overflow() {
+        for v in [0u32, 1, 127, 128, 300, 16383, 16384, u32::MAX] {
+            let mut buf = vec![];
+            put_uv(&mut buf, v);
+            assert_eq!(ByteReader::new(&buf).uv().unwrap(), v);
+        }
+        // 5-byte varint with high bits set overflows u32.
+        let bad = [0xff, 0xff, 0xff, 0xff, 0x7f];
+        assert!(ByteReader::new(&bad).uv().is_err());
+        // Unterminated varint is truncated, not an infinite loop.
+        let unterminated = [0x80, 0x80];
+        assert!(ByteReader::new(&unterminated).uv().is_err());
+    }
+
+    #[test]
+    fn string_wire_rejects_bad_utf8() {
+        let mut buf = vec![];
+        put_u32(&mut buf, 2);
+        buf.extend_from_slice(&[0xff, 0xfe]);
+        assert!(String::wire_decode(&mut ByteReader::new(&buf)).is_err());
+    }
+}

@@ -192,6 +192,46 @@ impl DenseMatrix {
     }
 }
 
+// The dense wire codec lives next to the payload type: shape header
+// then the row-major `f32` payload, little-endian, bit-exact.
+//
+// ```text
+// dense := rows u32 | cols u32 | f32 × rows·cols
+// ```
+impl crate::mapreduce::wire::Wire for DenseMatrix {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        use crate::mapreduce::wire::{put_f32, put_u32};
+        assert!(
+            self.rows <= u32::MAX as usize && self.cols <= u32::MAX as usize,
+            "matrix too large for the wire"
+        );
+        put_u32(out, self.rows as u32);
+        put_u32(out, self.cols as u32);
+        for &v in &self.data {
+            put_f32(out, v);
+        }
+    }
+
+    fn wire_decode(
+        r: &mut crate::mapreduce::wire::ByteReader<'_>,
+    ) -> Result<Self, crate::mapreduce::wire::WireError> {
+        use crate::mapreduce::wire::WireError;
+        let rows = r.u32()? as usize;
+        let cols = r.u32()? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or(WireError::Corrupt("dense shape overflows"))?;
+        if r.remaining() / 4 < n {
+            return Err(WireError::Truncated);
+        }
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(r.f32()?);
+        }
+        Ok(Self { rows, cols, data })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -352,6 +392,47 @@ mod tests {
         let mut rng = Xoshiro256ss::new(5);
         let a = random_int_matrix(6, 6, &mut rng);
         assert_eq!(a.max_abs_diff(&a), 0.0);
+    }
+
+    #[test]
+    fn wire_roundtrip_is_bit_exact_at_tile_straddling_shapes() {
+        use crate::mapreduce::wire::{ByteReader, Wire};
+        let mut rng = Xoshiro256ss::new(9);
+        // Shapes straddling the 8/16 tile edges, plus degenerate 1×1.
+        for (r, c) in [(1, 1), (5, 7), (8, 8), (9, 17), (16, 1), (3, 0)] {
+            let a = DenseMatrix::from_fn(r, c, |_, _| rng.small_int_f32());
+            let mut buf = vec![];
+            a.wire_encode(&mut buf);
+            let b = DenseMatrix::wire_decode(&mut ByteReader::new(&buf)).unwrap();
+            assert_eq!(a, b, "{r}x{c}");
+        }
+        // Non-finite / signed-zero payloads survive bit-for-bit.
+        let odd = DenseMatrix::from_vec(1, 4, vec![f32::NAN, -0.0, f32::INFINITY, 1e-40]);
+        let mut buf = vec![];
+        odd.wire_encode(&mut buf);
+        let back = DenseMatrix::wire_decode(&mut ByteReader::new(&buf)).unwrap();
+        for (x, y) in odd.as_slice().iter().zip(back.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn wire_decode_rejects_truncation_and_overflow() {
+        use crate::mapreduce::wire::{ByteReader, Wire};
+        let a = DenseMatrix::from_fn(4, 4, |i, j| (i + j) as f32);
+        let mut buf = vec![];
+        a.wire_encode(&mut buf);
+        for cut in 0..buf.len() {
+            assert!(
+                DenseMatrix::wire_decode(&mut ByteReader::new(&buf[..cut])).is_err(),
+                "prefix {cut} must not decode"
+            );
+        }
+        // A forged huge shape errors instead of allocating.
+        let mut forged = vec![];
+        crate::mapreduce::wire::put_u32(&mut forged, u32::MAX);
+        crate::mapreduce::wire::put_u32(&mut forged, u32::MAX);
+        assert!(DenseMatrix::wire_decode(&mut ByteReader::new(&forged)).is_err());
     }
 
     #[test]

@@ -222,6 +222,43 @@ impl CsrMatrix {
         self.col_idx.len()
     }
 
+    /// Assemble a CSR matrix from raw arrays, validating every
+    /// invariant (the wire decoder's constructor — forged input must
+    /// produce `Err`, never a corrupt matrix).
+    pub fn from_raw_parts(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<u32>,
+        col_idx: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<Self, &'static str> {
+        if row_ptr.len() != rows + 1 {
+            return Err("row_ptr length must be rows + 1");
+        }
+        if row_ptr[0] != 0 {
+            return Err("row_ptr must start at 0");
+        }
+        if row_ptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err("row_ptr must be non-decreasing");
+        }
+        if *row_ptr.last().unwrap() as usize != col_idx.len() {
+            return Err("row_ptr end must equal nnz");
+        }
+        if col_idx.len() != values.len() {
+            return Err("col_idx and values must have equal length");
+        }
+        if col_idx.iter().any(|&c| c as usize >= cols) {
+            return Err("column index out of range");
+        }
+        Ok(Self {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            values,
+        })
+    }
+
     /// (column, value) pairs of row `i`.
     pub fn row(&self, i: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
         let lo = self.row_ptr[i] as usize;
@@ -592,6 +629,157 @@ impl CsrMatrix {
     }
 }
 
+/// Per-row column encodings for the CSR wire format. Each row picks
+/// the cheapest mode that preserves it exactly.
+mod csr_wire {
+    /// Raw `u32` column list — the only mode that preserves rows whose
+    /// columns are not strictly ascending (CSR rows are sorted
+    /// everywhere in this engine, but it is not a type invariant, and
+    /// a lossy "canonicalizing" codec would break bit-exactness).
+    pub const MODE_RAW: u8 = 0;
+    /// Presence bitmap, `ceil(cols/8)` bytes — wins for dense rows.
+    pub const MODE_BITMAP: u8 = 1;
+    /// LEB128 deltas (first column, then gaps) — wins for sparse rows
+    /// with small columns or tight clustering.
+    pub const MODE_DELTA: u8 = 2;
+}
+
+// The sparse wire codec:
+//
+// ```text
+// csr  := rows u32 | cols u32 | nnz u32 | row × rows | f32 × nnz
+// row  := nnz_r uv | (mode u8 | cols[mode])   when nnz_r > 0
+// ```
+//
+// Values trail the column structure in row-major nnz order so the
+// `f32` payload stays contiguous.
+impl crate::mapreduce::wire::Wire for CsrMatrix {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        use crate::mapreduce::wire::{put_f32, put_u32, put_uv};
+        assert!(
+            self.rows <= u32::MAX as usize && self.cols <= u32::MAX as usize,
+            "matrix too large for the wire"
+        );
+        put_u32(out, self.rows as u32);
+        put_u32(out, self.cols as u32);
+        put_u32(out, self.col_idx.len() as u32);
+        let mut scratch = vec![];
+        for i in 0..self.rows {
+            let lo = self.row_ptr[i] as usize;
+            let hi = self.row_ptr[i + 1] as usize;
+            let row = &self.col_idx[lo..hi];
+            put_uv(out, row.len() as u64);
+            if row.is_empty() {
+                continue;
+            }
+            let ascending = row.windows(2).all(|w| w[0] < w[1]);
+            // Candidate sizes; bitmap and delta require ascending rows
+            // (the bitmap drops order and multiplicity outright).
+            let raw = 4 * row.len();
+            let bitmap = if ascending { self.cols.div_ceil(8) } else { usize::MAX };
+            let delta = if ascending {
+                scratch.clear();
+                put_uv(&mut scratch, row[0] as u64);
+                for w in row.windows(2) {
+                    put_uv(&mut scratch, (w[1] - w[0]) as u64);
+                }
+                scratch.len()
+            } else {
+                usize::MAX
+            };
+            if delta <= raw && delta <= bitmap {
+                out.push(csr_wire::MODE_DELTA);
+                out.extend_from_slice(&scratch);
+            } else if bitmap <= raw {
+                out.push(csr_wire::MODE_BITMAP);
+                let start = out.len();
+                out.resize(start + self.cols.div_ceil(8), 0);
+                for &c in row {
+                    out[start + c as usize / 8] |= 1 << (c % 8);
+                }
+            } else {
+                out.push(csr_wire::MODE_RAW);
+                for &c in row {
+                    put_u32(out, c);
+                }
+            }
+        }
+        for &v in &self.values {
+            put_f32(out, v);
+        }
+    }
+
+    fn wire_decode(
+        r: &mut crate::mapreduce::wire::ByteReader<'_>,
+    ) -> Result<Self, crate::mapreduce::wire::WireError> {
+        use crate::mapreduce::wire::WireError;
+        let rows = r.u32()? as usize;
+        let cols = r.u32()? as usize;
+        let nnz = r.u32()? as usize;
+        // Every row record costs ≥ 1 byte and the values cost 4·nnz;
+        // reject forged headers before any allocation sized by them.
+        if r.remaining() < rows.saturating_add(nnz.saturating_mul(4)) {
+            return Err(WireError::Truncated);
+        }
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        row_ptr.push(0u32);
+        let mut col_idx = Vec::with_capacity(nnz);
+        for _ in 0..rows {
+            let nnz_r = r.uv()? as usize;
+            if nnz_r > nnz - col_idx.len() {
+                return Err(WireError::Corrupt("row nnz exceeds total"));
+            }
+            if nnz_r > 0 {
+                match r.u8()? {
+                    csr_wire::MODE_RAW => {
+                        for _ in 0..nnz_r {
+                            col_idx.push(r.u32()?);
+                        }
+                    }
+                    csr_wire::MODE_BITMAP => {
+                        let before = col_idx.len();
+                        for (byte, b) in r.take(cols.div_ceil(8))?.iter().enumerate() {
+                            for bit in 0..8 {
+                                if b & (1 << bit) != 0 {
+                                    col_idx.push((byte * 8 + bit) as u32);
+                                }
+                            }
+                        }
+                        if col_idx.len() - before != nnz_r {
+                            return Err(WireError::Corrupt("bitmap popcount mismatch"));
+                        }
+                    }
+                    csr_wire::MODE_DELTA => {
+                        let mut c = r.uv()?;
+                        col_idx.push(u32::try_from(c).map_err(|_| {
+                            WireError::Corrupt("delta column overflows u32")
+                        })?);
+                        for _ in 1..nnz_r {
+                            c = c
+                                .checked_add(r.uv()?)
+                                .ok_or(WireError::Corrupt("delta column overflows u32"))?;
+                            col_idx.push(u32::try_from(c).map_err(|_| {
+                                WireError::Corrupt("delta column overflows u32")
+                            })?);
+                        }
+                    }
+                    _ => return Err(WireError::Corrupt("unknown csr row mode")),
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        if col_idx.len() != nnz {
+            return Err(WireError::Corrupt("row nnz sum != total nnz"));
+        }
+        let mut values = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            values.push(r.f32()?);
+        }
+        Self::from_raw_parts(rows, cols, row_ptr, col_idx, values)
+            .map_err(WireError::Corrupt)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -930,5 +1118,124 @@ mod tests {
         let par = pool.run_indexed(1, |_| a.spgemm_par(&b)).remove(0);
         assert_eq!(seq, par);
         assert_eq!(pool.stats().subtasks, s0.subtasks, "no panels for a tiny SpGEMM");
+    }
+
+    fn wire_roundtrip(m: &CsrMatrix) -> CsrMatrix {
+        use crate::mapreduce::wire::{ByteReader, Wire};
+        let mut buf = vec![];
+        m.wire_encode(&mut buf);
+        let mut r = ByteReader::new(&buf);
+        let back = CsrMatrix::wire_decode(&mut r).unwrap();
+        assert!(r.is_empty(), "codec must consume exactly its bytes");
+        back
+    }
+
+    #[test]
+    fn csr_wire_roundtrips_random_and_degenerate_shapes() {
+        let mut rng = Xoshiro256ss::new(91);
+        // Random shapes including empty rows and tile-straddling dims.
+        for (rows, cols, nnz) in [(1, 1, 1), (7, 13, 20), (16, 9, 0), (33, 65, 200)] {
+            let a = random_coo(rows, cols, nnz, &mut rng).to_csr();
+            assert_eq!(a, wire_roundtrip(&a), "{rows}x{cols}/{nnz}");
+        }
+        // All-empty matrix: header + empty rows only.
+        let empty = CooMatrix::new(5, 5).to_csr();
+        assert_eq!(empty, wire_roundtrip(&empty));
+    }
+
+    #[test]
+    fn csr_wire_picks_modes_but_raw_preserves_unsorted_rows() {
+        // A dense ascending row (bitmap territory) and a sparse wide
+        // one (delta territory) both survive bit-for-bit.
+        let dense_row = CsrMatrix::from_raw_parts(
+            1,
+            64,
+            vec![0, 64],
+            (0..64u32).collect(),
+            (0..64).map(|v| v as f32).collect(),
+        )
+        .unwrap();
+        assert_eq!(dense_row, wire_roundtrip(&dense_row));
+        let sparse_row = CsrMatrix::from_raw_parts(
+            1,
+            1 << 20,
+            vec![0, 3],
+            vec![5, 1000, 900_000],
+            vec![1.0, 2.0, 3.0],
+        )
+        .unwrap();
+        assert_eq!(sparse_row, wire_roundtrip(&sparse_row));
+        // Descending + duplicate columns force the raw fallback; the
+        // codec must keep the exact (unsorted) layout.
+        let unsorted = CsrMatrix::from_raw_parts(
+            2,
+            8,
+            vec![0, 3, 3],
+            vec![7, 2, 2],
+            vec![1.0, 2.0, 3.0],
+        )
+        .unwrap();
+        assert_eq!(unsorted, wire_roundtrip(&unsorted));
+    }
+
+    #[test]
+    fn csr_wire_value_bits_survive() {
+        use crate::mapreduce::wire::{ByteReader, Wire};
+        let odd = CsrMatrix::from_raw_parts(
+            1,
+            4,
+            vec![0, 4],
+            vec![0, 1, 2, 3],
+            vec![f32::NAN, -0.0, f32::NEG_INFINITY, 1e-42],
+        )
+        .unwrap();
+        let mut buf = vec![];
+        odd.wire_encode(&mut buf);
+        let back = CsrMatrix::wire_decode(&mut ByteReader::new(&buf)).unwrap();
+        for i in 0..4 {
+            let a: Vec<_> = odd.row(0).collect();
+            let b: Vec<_> = back.row(0).collect();
+            assert_eq!(a[i].0, b[i].0);
+            assert_eq!(a[i].1.to_bits(), b[i].1.to_bits());
+        }
+    }
+
+    #[test]
+    fn csr_wire_corruption_errors_never_panic() {
+        use crate::mapreduce::wire::{ByteReader, Wire};
+        let mut rng = Xoshiro256ss::new(92);
+        let a = random_coo(9, 17, 40, &mut rng).to_csr();
+        let mut buf = vec![];
+        a.wire_encode(&mut buf);
+        // Every truncation errs.
+        for cut in 0..buf.len() {
+            assert!(
+                CsrMatrix::wire_decode(&mut ByteReader::new(&buf[..cut])).is_err(),
+                "prefix {cut}"
+            );
+        }
+        // Every single-byte flip either errs or decodes to *some* valid
+        // matrix — but never panics.
+        for i in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[i] ^= 0xa5;
+            let _ = CsrMatrix::wire_decode(&mut ByteReader::new(&bad));
+        }
+        // Forged nnz larger than the payload errs before allocating.
+        let mut forged = vec![];
+        crate::mapreduce::wire::put_u32(&mut forged, 4);
+        crate::mapreduce::wire::put_u32(&mut forged, 4);
+        crate::mapreduce::wire::put_u32(&mut forged, u32::MAX);
+        assert!(CsrMatrix::wire_decode(&mut ByteReader::new(&forged)).is_err());
+    }
+
+    #[test]
+    fn from_raw_parts_validates_invariants() {
+        assert!(CsrMatrix::from_raw_parts(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+        assert!(CsrMatrix::from_raw_parts(1, 2, vec![1, 1], vec![], vec![]).is_err());
+        assert!(CsrMatrix::from_raw_parts(1, 2, vec![0, 2], vec![0], vec![1.0]).is_err());
+        assert!(CsrMatrix::from_raw_parts(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err());
+        assert!(CsrMatrix::from_raw_parts(1, 2, vec![0, 1], vec![1], vec![1.0, 2.0]).is_err());
+        assert!(CsrMatrix::from_raw_parts(1, 2, vec![0, 1], vec![1], vec![1.0]).is_ok());
     }
 }

@@ -381,16 +381,19 @@ pub fn run_service(
 
         // Gang-scheduling: when the picked round underfills the
         // cluster, back-fill the residual slots with the best-ranked
-        // other job whose round fits. A preemption inside the gang
+        // other jobs whose rounds fit — a greedy knapsack over slot
+        // demand, feasibility-gated on the gang's cumulative shuffle
+        // working set, so three or more small rounds pack side by side
+        // when the cluster admits them. A preemption inside the gang
         // window falls back to solo scheduling so spot strikes keep a
         // single victim.
         let width = cfg.engine.workers.max(1);
         let demand = active[idx].job.slot_demand();
-        let partner = if demand < width && active.len() > 1 {
+        let partners = if demand < width && active.len() > 1 {
             let primary_words = active[idx]
                 .job
                 .round_shuffle_words(active[idx].job.next_round());
-            pick_partner(
+            pick_partners(
                 cfg.policy,
                 &active,
                 &tenant_service,
@@ -400,72 +403,89 @@ pub fn run_service(
                 primary_words,
             )
         } else {
-            None
+            Vec::new()
         };
-        if let Some(pidx) = partner {
-            let pred_a = active[idx]
-                .job
-                .predicted_round_secs(active[idx].job.next_round())
-                .max(1e-9);
-            let pred_b = active[pidx]
-                .job
-                .predicted_round_secs(active[pidx].job.next_round())
-                .max(1e-9);
-            let window = pred_a.max(pred_b);
+        if !partners.is_empty() {
+            // Commit order: primary first, then partners in rank order
+            // — the deterministic trace order.
+            let members: Vec<usize> =
+                std::iter::once(idx).chain(partners.iter().copied()).collect();
+            let preds: Vec<(usize, f64)> = members
+                .iter()
+                .map(|&i| {
+                    let r = active[i].job.next_round();
+                    (r, active[i].job.predicted_round_secs(r).max(1e-9))
+                })
+                .collect();
+            let window = preds.iter().map(|&(_, p)| p).fold(0.0f64, f64::max);
             let strike = next_preempt < preempts.len() && preempts[next_preempt] < clock + window;
             if !strike {
-                // Both rounds occupy the cluster for the window: run
-                // them concurrently on the shared work-stealing pool.
-                let (lo, hi) = (idx.min(pidx), idx.max(pidx));
-                let (left, right) = active.split_at_mut(hi);
-                let (e_lo, e_hi) = (&mut left[lo], &mut right[0]);
-                let round_lo = e_lo.job.next_round();
-                let round_hi = e_hi.job.next_round();
-                let (id_lo, id_hi) = (e_lo.spec.id, e_hi.spec.id);
-                let (primary_id, partner_id, primary_round) = if idx == lo {
-                    (id_lo, id_hi, round_lo)
-                } else {
-                    (id_hi, id_lo, round_hi)
-                };
-                trace::record_event(
-                    ServiceEventKind::GangPair,
-                    trace_run,
-                    primary_id,
-                    Some(partner_id),
-                    primary_round,
-                    clock,
-                );
-                let (m_lo, m_hi) = std::thread::scope(|s| {
-                    let h = s.spawn(|| {
-                        // Each gang arm tags its own submitting thread,
-                        // so the two jobs' phase spans never mix.
-                        trace::set_current_job(id_hi as u64);
-                        let m = e_hi.job.step_commit();
+                let primary_id = active[idx].spec.id;
+                let primary_round = active[idx].job.next_round();
+                for &p in &partners {
+                    trace::record_event(
+                        ServiceEventKind::GangPair,
+                        trace_run,
+                        primary_id,
+                        Some(active[p].spec.id),
+                        primary_round,
+                        clock,
+                    );
+                }
+                // Disjoint &mut borrows of every gang member; the
+                // primary runs on the calling thread, each partner on
+                // its own scoped thread, all claims interleaving on
+                // the shared work-stealing pool.
+                let refs: BTreeMap<usize, &mut Entry> = active
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(i, _)| members.contains(i))
+                    .collect();
+                let committed: BTreeMap<usize, crate::mapreduce::RoundMetrics> =
+                    std::thread::scope(|s| {
+                        let mut primary_ref = None;
+                        let mut handles = Vec::new();
+                        for (i, e) in refs {
+                            if i == idx {
+                                primary_ref = Some((i, e));
+                            } else {
+                                let id = e.spec.id as u64;
+                                handles.push((
+                                    i,
+                                    s.spawn(move || {
+                                        // Each gang arm tags its own
+                                        // submitting thread, so the
+                                        // jobs' phase spans never mix.
+                                        trace::set_current_job(id);
+                                        let m = e.job.step_commit();
+                                        trace::clear_current_job();
+                                        m
+                                    }),
+                                ));
+                            }
+                        }
+                        let mut out = BTreeMap::new();
+                        let (i, e) = primary_ref.expect("primary is a gang member");
+                        trace::set_current_job(e.spec.id as u64);
+                        out.insert(i, e.job.step_commit());
                         trace::clear_current_job();
-                        m
+                        for (i, h) in handles {
+                            match h.join() {
+                                Ok(m) => {
+                                    out.insert(i, m);
+                                }
+                                Err(p) => std::panic::resume_unwind(p),
+                            }
+                        }
+                        out
                     });
-                    trace::set_current_job(id_lo as u64);
-                    let m_lo = e_lo.job.step_commit();
-                    trace::clear_current_job();
-                    let m_hi = match h.join() {
-                        Ok(m) => m,
-                        Err(p) => std::panic::resume_unwind(p),
-                    };
-                    (m_lo, m_hi)
-                });
-                // Record in (primary, partner) order for a
-                // deterministic trace.
-                let order = if idx == lo {
-                    [(lo, round_lo, pred_a, &m_lo), (hi, round_hi, pred_b, &m_hi)]
-                } else {
-                    [(hi, round_hi, pred_a, &m_hi), (lo, round_lo, pred_b, &m_lo)]
-                };
-                for (i, round, pred, m) in order {
+                for (k, &i) in members.iter().enumerate() {
+                    let (round, pred) = preds[k];
                     record_commit(
                         &mut active[i],
                         round,
                         pred,
-                        m,
+                        &committed[&i],
                         clock,
                         true,
                         &mut trace,
@@ -473,16 +493,17 @@ pub fn run_service(
                     );
                 }
                 // Gang-window rounds are NOT fed to the profile
-                // tracker: both rounds share the pool for the window,
-                // so each one's phase wall times include the partner's
+                // tracker: the members share the pool for the window,
+                // so each one's phase wall times include the partners'
                 // contention and would bias the recalibrated rates
                 // (≈2× low when most rounds gang). Solo commits carry
                 // the recalibration signal.
                 clock += window;
-                // Retire completed jobs, higher index first so the
-                // lower swap_remove index stays valid (lo < hi by
-                // construction).
-                for i in [hi, lo] {
+                // Retire completed jobs in descending index order so
+                // every pending swap_remove index stays valid.
+                let mut desc = members;
+                desc.sort_unstable_by(|a, b| b.cmp(a));
+                for i in desc {
                     retire_if_done(&mut active, i, clock, &mut reports, &mut completed);
                 }
                 continue;
@@ -644,17 +665,17 @@ fn pick(policy: Policy, active: &[Entry], tenant_service: &BTreeMap<usize, f64>)
     best
 }
 
-/// Best-ranked job other than `primary` whose next round fits in
-/// `residual` slots (`None` when nothing fits) — the gang-scheduling
-/// back-fill choice, ranked by the same policy key as `pick` so the
-/// pairing is deterministic.
-///
-/// Feasibility-aware: a candidate is also refused when the two rounds'
-/// combined working set (`primary_words` + the candidate's shuffle
-/// words, priced at `profile.bytes_per_word`) exceeds the cluster's
-/// aggregate memory — ganging on a starved profile would thrash or
-/// spill, erasing the back-fill win.
-fn pick_partner(
+/// The gang back-fill as a greedy knapsack: candidates other than
+/// `primary`, ranked by the same policy key as [`pick`], are admitted
+/// one by one while (a) their task-level slot demand fits the residual
+/// slots and (b) the gang's *cumulative* shuffle working set
+/// (`primary_words` plus every admitted round's shuffle words, priced
+/// at `profile.bytes_per_word`) stays within the cluster's aggregate
+/// memory — ganging on a starved profile would thrash or spill,
+/// erasing the back-fill win. Rank order makes the selection
+/// deterministic, and with three or more small jobs active the gang
+/// grows past a pair until the slots or the memory run out.
+fn pick_partners(
     policy: Policy,
     active: &[Entry],
     tenant_service: &BTreeMap<usize, f64>,
@@ -662,30 +683,37 @@ fn pick_partner(
     residual: usize,
     profile: &ClusterProfile,
     primary_words: f64,
-) -> Option<usize> {
-    let mut best: Option<(usize, (f64, f64, usize))> = None;
-    for (i, e) in active.iter().enumerate() {
-        if i == primary {
+) -> Vec<usize> {
+    let mut ranked: Vec<(usize, (f64, f64, usize), usize)> = active
+        .iter()
+        .enumerate()
+        .filter(|&(i, ref e)| i != primary && e.job.slot_demand() > 0)
+        .map(|(i, e)| (i, policy_key(policy, e, tenant_service), e.job.slot_demand()))
+        .collect();
+    ranked.sort_by(|a, b| {
+        a.1.partial_cmp(&b.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    let mut chosen = Vec::new();
+    let mut slots_left = residual;
+    let mut words = primary_words;
+    for (i, _, d) in ranked {
+        if d > slots_left {
             continue;
         }
-        let d = e.job.slot_demand();
-        if d == 0 || d > residual {
+        let w = active[i].job.round_shuffle_words(active[i].job.next_round());
+        if (words + w) * profile.bytes_per_word > profile.agg_mem_bytes() {
             continue;
         }
-        let words = primary_words + e.job.round_shuffle_words(e.job.next_round());
-        if words * profile.bytes_per_word > profile.agg_mem_bytes() {
-            continue;
-        }
-        let k = policy_key(policy, e, tenant_service);
-        let better = match &best {
-            None => true,
-            Some((_, bk)) => k.partial_cmp(bk) == Some(std::cmp::Ordering::Less),
-        };
-        if better {
-            best = Some((i, k));
+        slots_left -= d;
+        words += w;
+        chosen.push(i);
+        if slots_left == 0 {
+            break;
         }
     }
-    best.map(|(i, _)| i)
+    chosen
 }
 
 #[cfg(test)]
@@ -908,6 +936,81 @@ mod tests {
         assert_eq!(out.completed.len(), 2);
         for c in &out.completed {
             assert!(c.output.matches(&c.spec), "job {} wrong product", c.spec.id);
+        }
+    }
+
+    #[test]
+    fn gang_packs_three_and_four_underfilled_rounds() {
+        // 2-task rounds on an 8-slot cluster leave 6 residual slots
+        // after the primary: with 3 or 4 small jobs active the greedy
+        // knapsack must pack a window that holds every job's round —
+        // one member per job, same virtual start, all committed — not
+        // stop at a pair.
+        for njobs in [3usize, 4] {
+            let specs: Vec<JobSpec> = (0..njobs).map(|i| small3d(i, i, 0.0, 2)).collect();
+            let c = ServiceConfig::new(underfilled_engine(), Policy::Fair);
+            let out = run(&specs, &c);
+            let mut by_start: BTreeMap<u64, Vec<&RoundTrace>> = BTreeMap::new();
+            for t in out.trace.iter().filter(|t| t.gang) {
+                by_start.entry(t.start_secs.to_bits()).or_default().push(t);
+            }
+            let widest = by_start.values().map(|v| v.len()).max().unwrap_or(0);
+            assert!(
+                widest >= njobs,
+                "{njobs} small jobs must share one gang window, widest = {widest}: {:?}",
+                out.trace
+            );
+            for window in by_start.values() {
+                let mut jobs: Vec<usize> = window.iter().map(|t| t.job).collect();
+                jobs.sort_unstable();
+                jobs.dedup();
+                assert_eq!(jobs.len(), window.len(), "one round per job per window");
+                assert!(window.iter().all(|t| t.committed));
+            }
+            assert_eq!(out.completed.len(), njobs);
+            for cj in &out.completed {
+                assert!(cj.output.matches(&cj.spec), "job {} wrong product", cj.spec.id);
+            }
+        }
+    }
+
+    #[test]
+    fn knapsack_respects_cumulative_memory() {
+        // A profile sized to hold exactly two rounds' shuffle working
+        // sets but not three: the knapsack must stop at a pair even
+        // though the residual slots could seat two more partners. The
+        // fixed 2D plan makes every round shuffle the same 2ρn = 1024
+        // words (8192 B at 8 B/word), so on a 20 kB single-node profile
+        // a pair (16384 B) always fits and a triple (24576 B) never
+        // does, whatever mix of rounds is active.
+        let specs: Vec<JobSpec> = (0..4)
+            .map(|i| JobSpec {
+                id: i,
+                tenant: i,
+                kind: JobKind::Dense2d {
+                    side: 16,
+                    block_side: 4,
+                    rho: 2,
+                },
+                plan: PlanChoice::Fixed,
+                seed: 200 + i as u64,
+                arrival_secs: 0.0,
+            })
+            .collect();
+        let mut c = ServiceConfig::new(underfilled_engine(), Policy::Fair);
+        c.profile = c.profile.with_nodes(1).with_mem_per_node(20_000.0);
+        let out = run(&specs, &c);
+        let mut by_start: BTreeMap<u64, usize> = BTreeMap::new();
+        for t in out.trace.iter().filter(|t| t.gang) {
+            *by_start.entry(t.start_secs.to_bits()).or_default() += 1;
+        }
+        let widest = by_start.values().copied().max().unwrap_or(0);
+        assert_eq!(
+            widest, 2,
+            "memory gate must cap the gang at a pair"
+        );
+        for cj in &out.completed {
+            assert!(cj.output.matches(&cj.spec));
         }
     }
 

@@ -47,13 +47,27 @@ pub fn fit_local_profile(obs: &[Observation], bytes_per_word: f64) -> ClusterPro
     let mut shuffle_secs = 0.0;
     let mut write_bytes = 0.0;
     let mut write_secs = 0.0;
+    let mut wire_bytes = 0.0;
+    let mut wire_words = 0.0;
     let mut xs = vec![];
     let mut ys = vec![];
     for o in obs {
         flops += o.flops;
         kernel_secs += o.metrics.total_kernel_time().as_secs_f64();
         for r in &o.metrics.rounds {
-            shuffle_bytes += r.shuffle_words as f64 * bytes_per_word;
+            // Serialized transports report true wire bytes; the
+            // zero-copy path reports none, so fall back to the word
+            // model's estimate there.
+            let measured = r.shuffle_bytes as f64;
+            shuffle_bytes += if measured > 0.0 {
+                measured
+            } else {
+                r.shuffle_words as f64 * bytes_per_word
+            };
+            if measured > 0.0 && r.shuffle_words > 0 {
+                wire_bytes += measured;
+                wire_words += r.shuffle_words as f64;
+            }
             shuffle_secs += (r.map_time + r.shuffle_time).as_secs_f64();
             write_bytes += r.output_words as f64 * bytes_per_word;
             write_secs += r.write_time.as_secs_f64();
@@ -85,6 +99,10 @@ pub fn fit_local_profile(obs: &[Observation], bytes_per_word: f64) -> ClusterPro
         bytes_per_word,
         spill_factor: 0.0, // in-memory rounds: no shuffle spill
         mem_per_node_bytes: 8.0e9, // one in-process box: a laptop's worth
+        // Wire rates only exist when the runs used a serialized
+        // transport; a zero-copy sweep leaves the fit word-modelled.
+        wire_bytes_per_word: safe_div(wire_bytes, wire_words, 0.0),
+        shuffle_bytes_per_sec: safe_div(wire_bytes, shuffle_secs, 0.0),
     }
 }
 
@@ -125,6 +143,8 @@ pub struct ProfileTracker {
     setup_secs: f64,
     chunk_bytes_sum: f64,
     chunk_count: f64,
+    wire_bytes: f64,
+    wire_words: f64,
 }
 
 impl ProfileTracker {
@@ -143,6 +163,8 @@ impl ProfileTracker {
             setup_secs: 0.0,
             chunk_bytes_sum: 0.0,
             chunk_count: 0.0,
+            wire_bytes: 0.0,
+            wire_words: 0.0,
         }
     }
 
@@ -168,7 +190,19 @@ impl ProfileTracker {
         let w = m.phase_walls();
         self.flops += flops;
         self.kernel_secs += w.kernel_secs;
-        self.shuffle_bytes += m.shuffle_words as f64 * bpw;
+        // A serialized transport reports the bytes it actually moved;
+        // prefer those over the word model's estimate, and keep the
+        // bytes-per-word ratio as evidence for byte pricing.
+        let measured = m.shuffle_bytes as f64;
+        self.shuffle_bytes += if measured > 0.0 {
+            measured
+        } else {
+            m.shuffle_words as f64 * bpw
+        };
+        if measured > 0.0 && m.shuffle_words > 0 {
+            self.wire_bytes += measured;
+            self.wire_words += m.shuffle_words as f64;
+        }
         self.shuffle_secs += w.transfer_secs();
         self.write_bytes += m.output_words as f64 * bpw;
         self.write_secs += w.write_secs;
@@ -213,6 +247,13 @@ impl ProfileTracker {
         p.disk_bw = mix(self.seed.disk_bw, disk_rate);
         p.round_setup =
             (1.0 - w) * self.seed.round_setup + w * self.setup_secs / self.rounds as f64;
+        // Wire evidence is pure measurement (there is no paper seed to
+        // blend toward): expose the observed frame overhead and the
+        // per-node fabric rate as soon as serialized rounds exist.
+        if self.wire_words > 0.0 && self.wire_bytes > 0.0 {
+            p.wire_bytes_per_word = self.wire_bytes / self.wire_words;
+            p.shuffle_bytes_per_sec = safe_div(self.wire_bytes, self.shuffle_secs, 0.0) / nodes;
+        }
         p
     }
 }
@@ -335,6 +376,56 @@ mod tests {
         assert!(p.net_bw < seed.net_bw * 0.5, "p.net_bw = {}", p.net_bw);
         // Chunk evidence is exposed for inspection.
         assert_eq!(t.observed_mean_chunk_bytes(), 250_000.0 * 8.0);
+    }
+
+    #[test]
+    fn tracker_prefers_measured_wire_bytes_and_fits_the_ratio() {
+        // 1 M words measured at 12 MB on the wire → 12 B/word frame
+        // overhead; transfer window 0.5 s/round → 24 MB/s aggregate
+        // = 1.5 MB/s per seed node.
+        let seed = ClusterProfile::inhouse();
+        let mut t = ProfileTracker::new(seed);
+        for _ in 0..8 {
+            let mut r = observed_round(1.0);
+            r.shuffle_bytes = 12_000_000;
+            t.observe_round(&r, 1e9);
+        }
+        let p = t.profile();
+        assert_eq!(p.wire_bytes_per_word, 12.0);
+        assert!((p.shuffle_bytes_per_sec - 1.5e6).abs() < 1.0, "{}", p.shuffle_bytes_per_sec);
+        assert!(p.has_wire_measurements());
+        // net_bw recalibration now rides the measured bytes, which are
+        // 1.5× the word model's 8 B/word estimate.
+        assert!(p.net_bw < seed.net_bw);
+    }
+
+    #[test]
+    fn tracker_without_wire_evidence_stays_word_modelled() {
+        let mut t = ProfileTracker::new(ClusterProfile::inhouse());
+        for _ in 0..8 {
+            t.observe_round(&observed_round(1.0), 1e9); // shuffle_bytes = 0
+        }
+        let p = t.profile();
+        assert_eq!(p.wire_bytes_per_word, 0.0);
+        assert_eq!(p.shuffle_bytes_per_sec, 0.0);
+        assert!(!p.has_wire_measurements());
+    }
+
+    #[test]
+    fn fit_uses_measured_wire_bytes_when_present() {
+        let mut m = metrics(2, 1.0);
+        for r in &mut m.rounds {
+            r.shuffle_bytes = 10_000_000; // 1 M words → 10 B/word
+        }
+        let p = fit_local_profile(&[Observation { metrics: m, flops: 1e9 }], 8.0);
+        assert_eq!(p.wire_bytes_per_word, 10.0);
+        assert!(p.shuffle_bytes_per_sec > 0.0);
+        // A zero-copy sweep (no bytes) leaves the fit unmeasured.
+        let q = fit_local_profile(
+            &[Observation { metrics: metrics(2, 1.0), flops: 1e9 }],
+            8.0,
+        );
+        assert!(!q.has_wire_measurements());
     }
 
     #[test]

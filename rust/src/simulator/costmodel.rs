@@ -123,6 +123,31 @@ pub fn price_round(
     }
 }
 
+/// Price one round with *measured* byte rates: when the profile
+/// carries wire measurements ([`ClusterProfile::has_wire_measurements`])
+/// the shuffle term is priced as
+/// `shuffle_words · wire_bytes_per_word / agg_wire_bw` — the bytes the
+/// serialized transport actually puts on the wire, over the fabric
+/// rate it actually sustains — instead of the word model's
+/// `words · bytes_per_word / agg_net`. Every other component is
+/// identical to [`price_round`], and an unmeasured profile reproduces
+/// it bit for bit, so byte pricing is a strict refinement, never a
+/// fork, of the cost model.
+pub fn price_round_bytes(
+    v: &RoundVolumes,
+    p: &ClusterProfile,
+    chunk_bytes: f64,
+    read_chunk_bytes: f64,
+) -> RoundCost {
+    let mut c = price_round(v, p, chunk_bytes, read_chunk_bytes);
+    if p.has_wire_measurements() {
+        let wire_bytes = v.shuffle_words * p.wire_bytes_per_word;
+        c.shuffle = wire_bytes / p.agg_wire_bw()
+            + p.spill_factor * wire_bytes / p.agg_disk();
+    }
+    c
+}
+
 /// Per-task chunk size (bytes) when `words` are written across the
 /// cluster's reduce tasks.
 pub fn chunk_bytes(words: f64, p: &ClusterProfile) -> f64 {
@@ -186,6 +211,32 @@ mod tests {
         assert!(c16.comm() < c4.comm());
         assert!(c16.comp < c4.comp);
         assert_eq!(c16.infra, c4.infra, "setup does not parallelise");
+    }
+
+    #[test]
+    fn byte_pricing_falls_back_to_the_word_model_when_unmeasured() {
+        let p = ClusterProfile::inhouse();
+        let w = price_round(&vol(), &p, 1e9, 0.0);
+        let b = price_round_bytes(&vol(), &p, 1e9, 0.0);
+        assert_eq!(w.shuffle, b.shuffle);
+        assert_eq!(w.total(), b.total());
+    }
+
+    #[test]
+    fn byte_pricing_uses_measured_rates() {
+        // 3e9 words at a measured 10 B/word over a measured 100 MB/s
+        // per node × 16 nodes, plus the Hadoop spill on the same bytes.
+        let p = ClusterProfile::inhouse().with_wire_measurements(10.0, 100.0e6);
+        let c = price_round_bytes(&vol(), &p, 1e9, 0.0);
+        let wire = 3e9 * 10.0;
+        let want = wire / (100.0e6 * 16.0) + 1.0 * wire / p.agg_disk();
+        assert!((c.shuffle - want).abs() < 1e-9, "{} vs {want}", c.shuffle);
+        // Non-shuffle components match the word model exactly.
+        let w = price_round(&vol(), &p, 1e9, 0.0);
+        assert_eq!(c.read, w.read);
+        assert_eq!(c.comp, w.comp);
+        assert_eq!(c.write, w.write);
+        assert_eq!(c.infra, w.infra);
     }
 
     #[test]

@@ -29,8 +29,9 @@ pub use calibrate::{fit_local_profile, Observation, ProfileTracker};
 pub use costmodel::{RoundCost, RoundVolumes, SimResult};
 pub use profile::ClusterProfile;
 pub use simulate::{
-    price_rounds, simulate_dense2d, simulate_dense2d_schedule, simulate_dense3d,
-    simulate_dense3d_schedule, simulate_sparse3d, simulate_strassen, volumes_dense2d,
-    volumes_dense2d_schedule, volumes_dense3d, volumes_dense3d_schedule, volumes_sparse3d,
-    volumes_strassen,
+    price_rounds, price_rounds_bytes, simulate_dense2d, simulate_dense2d_bytes,
+    simulate_dense2d_schedule, simulate_dense3d, simulate_dense3d_bytes,
+    simulate_dense3d_schedule, simulate_sparse3d, simulate_sparse3d_bytes, simulate_strassen,
+    simulate_strassen_bytes, volumes_dense2d, volumes_dense2d_schedule, volumes_dense3d,
+    volumes_dense3d_schedule, volumes_sparse3d, volumes_strassen,
 };

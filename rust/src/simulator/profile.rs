@@ -45,6 +45,19 @@ pub struct ClusterProfile {
     /// memory-constrained contexts (the auto-planner's feasibility
     /// check; the paper's §1 "execution context" made concrete).
     pub mem_per_node_bytes: f64,
+    /// *Measured* wire bytes per shuffled word: the serialized frame
+    /// overhead (headers, keys, column encodings) the engine's
+    /// transport actually put on the wire, per word of payload.
+    /// `0.0` = unmeasured; byte pricing then falls back to the word
+    /// model (`bytes_per_word` over `net_bw`).
+    pub wire_bytes_per_word: f64,
+    /// *Measured* shuffle-fabric throughput per node, bytes/sec, from
+    /// the engine's `shuffle_bytes / transfer_secs`. `0.0` = unmeasured
+    /// (word-model fallback). Both this and
+    /// [`Self::wire_bytes_per_word`] must be positive for
+    /// [`crate::simulator::costmodel::price_round_bytes`] to switch to
+    /// byte pricing.
+    pub shuffle_bytes_per_sec: f64,
 }
 
 impl ClusterProfile {
@@ -64,6 +77,8 @@ impl ClusterProfile {
             bytes_per_word: 8.0,
             spill_factor: 1.0,
             mem_per_node_bytes: 24.0e9,
+            wire_bytes_per_word: 0.0,
+            shuffle_bytes_per_sec: 0.0,
         }
     }
 
@@ -84,6 +99,8 @@ impl ClusterProfile {
             bytes_per_word: 8.0,
             spill_factor: 1.0,
             mem_per_node_bytes: 60.0e9,
+            wire_bytes_per_word: 0.0,
+            shuffle_bytes_per_sec: 0.0,
         }
     }
 
@@ -103,6 +120,8 @@ impl ClusterProfile {
             bytes_per_word: 8.0,
             spill_factor: 1.0,
             mem_per_node_bytes: 30.0e9,
+            wire_bytes_per_word: 0.0,
+            shuffle_bytes_per_sec: 0.0,
         }
     }
 
@@ -127,6 +146,8 @@ impl ClusterProfile {
             bytes_per_word: 8.0,
             spill_factor: 0.0,
             mem_per_node_bytes: 1.0e12,
+            wire_bytes_per_word: 0.0,
+            shuffle_bytes_per_sec: 0.0,
         }
     }
 
@@ -150,6 +171,8 @@ impl ClusterProfile {
             bytes_per_word: 8.0,
             spill_factor: 0.0,
             mem_per_node_bytes: 2.0e10,
+            wire_bytes_per_word: 0.0,
+            shuffle_bytes_per_sec: 0.0,
         }
     }
 
@@ -179,6 +202,41 @@ impl ClusterProfile {
             self.flops_per_node = per_slot_flops * self.slots_per_node as f64;
         }
         self
+    }
+
+    /// A copy carrying *measured* wire rates from the engine's
+    /// serialized transport: `wire_bytes_per_word` is the frame
+    /// overhead the codecs actually produced per shuffled word, and
+    /// `shuffle_bytes_per_sec` the per-node fabric throughput measured
+    /// over those bytes. With both positive,
+    /// [`crate::simulator::costmodel::price_round_bytes`] prices the
+    /// shuffle term on these instead of the word model. Non-positive
+    /// or non-finite rates leave the profile unmeasured.
+    pub fn with_wire_measurements(
+        mut self,
+        wire_bytes_per_word: f64,
+        shuffle_bytes_per_sec: f64,
+    ) -> Self {
+        if wire_bytes_per_word > 0.0
+            && wire_bytes_per_word.is_finite()
+            && shuffle_bytes_per_sec > 0.0
+            && shuffle_bytes_per_sec.is_finite()
+        {
+            self.wire_bytes_per_word = wire_bytes_per_word;
+            self.shuffle_bytes_per_sec = shuffle_bytes_per_sec;
+        }
+        self
+    }
+
+    /// Whether byte pricing has measured rates to work with.
+    pub fn has_wire_measurements(&self) -> bool {
+        self.wire_bytes_per_word > 0.0 && self.shuffle_bytes_per_sec > 0.0
+    }
+
+    /// Aggregate measured shuffle-fabric throughput, B/s (0 when
+    /// unmeasured).
+    pub fn agg_wire_bw(&self) -> f64 {
+        self.shuffle_bytes_per_sec * self.nodes as f64
     }
 
     /// Ablation: disable the HDFS small-chunk penalty.
@@ -305,6 +363,26 @@ mod tests {
             base.with_probed_flops(f64::NAN).flops_per_node,
             base.flops_per_node
         );
+    }
+
+    #[test]
+    fn wire_measurements_guard_garbage_and_expose_aggregates() {
+        let base = ClusterProfile::inhouse();
+        assert!(!base.has_wire_measurements());
+        let m = base.with_wire_measurements(9.5, 2.0e9);
+        assert!(m.has_wire_measurements());
+        assert_eq!(m.wire_bytes_per_word, 9.5);
+        assert_eq!(m.agg_wire_bw(), 2.0e9 * 16.0);
+        // Word-model constants are untouched by the measurement.
+        assert_eq!(m.net_bw, base.net_bw);
+        assert_eq!(m.bytes_per_word, base.bytes_per_word);
+        // Garbage rates leave the profile unmeasured.
+        for (bpw, bps) in [(0.0, 1.0), (1.0, 0.0), (-1.0, 1.0), (f64::NAN, 1.0), (1.0, f64::INFINITY)] {
+            assert!(
+                !base.with_wire_measurements(bpw, bps).has_wire_measurements(),
+                "({bpw}, {bps}) must be rejected"
+            );
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@
 
 use crate::m3::planner::{Plan2d, Plan3d, SparsePlan};
 
-use super::costmodel::{chunk_bytes, price_round, RoundVolumes, SimResult};
+use super::costmodel::{chunk_bytes, price_round, price_round_bytes, RoundVolumes, SimResult};
 use super::profile::ClusterProfile;
 
 /// Price a volume sequence on a profile. Each round writes its output
@@ -30,6 +30,23 @@ pub fn price_rounds(vols: &[RoundVolumes], p: &ClusterProfile) -> SimResult {
     for v in vols {
         let write_chunk = chunk_bytes(v.write_words, p);
         rounds.push(price_round(v, p, write_chunk, prev_write_chunk));
+        prev_write_chunk = write_chunk;
+    }
+    SimResult { rounds }
+}
+
+/// [`price_rounds`] on the measured byte model: the shuffle term of
+/// every round is priced with
+/// [`price_round_bytes`] — measured wire bytes over the measured
+/// fabric rate when the profile carries them
+/// ([`ClusterProfile::has_wire_measurements`]), the word model
+/// otherwise (bit-for-bit fallback).
+pub fn price_rounds_bytes(vols: &[RoundVolumes], p: &ClusterProfile) -> SimResult {
+    let mut rounds = Vec::with_capacity(vols.len());
+    let mut prev_write_chunk = 0.0;
+    for v in vols {
+        let write_chunk = chunk_bytes(v.write_words, p);
+        rounds.push(price_round_bytes(v, p, write_chunk, prev_write_chunk));
         prev_write_chunk = write_chunk;
     }
     SimResult { rounds }
@@ -241,6 +258,26 @@ pub fn simulate_dense3d_schedule(
     p: &ClusterProfile,
 ) -> SimResult {
     price_rounds(&volumes_dense3d_schedule(side, block_side, widths), p)
+}
+
+/// Simulate the 3D dense algorithm on the measured byte model.
+pub fn simulate_dense3d_bytes(plan: &Plan3d, p: &ClusterProfile) -> SimResult {
+    price_rounds_bytes(&volumes_dense3d(plan), p)
+}
+
+/// Simulate the blocked-Strassen schedule on the measured byte model.
+pub fn simulate_strassen_bytes(side: usize, levels: usize, p: &ClusterProfile) -> SimResult {
+    price_rounds_bytes(&volumes_strassen(side, levels), p)
+}
+
+/// Simulate the 2D dense algorithm on the measured byte model.
+pub fn simulate_dense2d_bytes(plan: &Plan2d, p: &ClusterProfile) -> SimResult {
+    price_rounds_bytes(&volumes_dense2d(plan), p)
+}
+
+/// Simulate the 3D sparse algorithm on the measured byte model.
+pub fn simulate_sparse3d_bytes(plan: &SparsePlan, p: &ClusterProfile) -> SimResult {
+    price_rounds_bytes(&volumes_sparse3d(plan), p)
 }
 
 /// Simulate the 2D dense algorithm (paper Algorithm 2).
@@ -575,6 +612,69 @@ mod tests {
         // Two levels: (7/8)² of the cubic work.
         let vols2 = volumes_strassen(side, 2);
         assert_eq!(vols2[2].flops, classical_flops * 49.0 / 64.0);
+    }
+
+    #[test]
+    fn byte_model_falls_back_bit_for_bit_without_measurements() {
+        let p = ClusterProfile::inhouse();
+        let pl = plan(16000, 4000, 4);
+        let w = simulate_dense3d(&pl, &p);
+        let b = simulate_dense3d_bytes(&pl, &p);
+        assert_eq!(w.rounds.len(), b.rounds.len());
+        for (x, y) in w.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.shuffle, y.shuffle);
+            assert_eq!(x.total(), y.total());
+        }
+    }
+
+    #[test]
+    fn measured_wire_rates_flip_the_plan_choice() {
+        // An in-memory cluster whose *modelled* fabric is slow (2 MB/s
+        // per node) but which the engine has *measured* moving
+        // serialized frames at 2 GB/s per node with a 9 B/word frame
+        // overhead. Candidates: the classical monolithic 3D grid
+        // (q = ρ = 4) vs one blocked-Strassen level at √n = 16384.
+        let word = ClusterProfile {
+            name: "byte-divergence",
+            nodes: 16,
+            slots_per_node: 2,
+            flops_per_node: 7.0e9,
+            disk_bw: 2.0e9,
+            net_bw: 2.0e6,
+            round_setup: 1.0,
+            small_chunk_coeff: 0.0,
+            chunk_ref_bytes: 1.0e9,
+            bytes_per_word: 8.0,
+            spill_factor: 0.0,
+            mem_per_node_bytes: 1.0e12,
+            wire_bytes_per_word: 0.0,
+            shuffle_bytes_per_sec: 0.0,
+        };
+        let byte = word.with_wire_measurements(9.0, 2.0e9);
+        let side = 16384usize;
+        let classical = plan(side, 4096, 4);
+
+        // Word model: Strassen shuffles 12.5n words to the grid's 12n
+        // over a 32 MB/s aggregate fabric (+1 round of setup), which
+        // buries its 1/8 compute saving — the classical grid wins.
+        let w_classical = simulate_dense3d(&classical, &word).total();
+        let w_strassen = simulate_strassen(side, 1, &word).total();
+        assert!(
+            w_classical < w_strassen,
+            "word model must pick classical: {w_classical:.1}s vs {w_strassen:.1}s"
+        );
+
+        // Byte model on the *same cluster*: the measured fabric moves
+        // the frames three orders of magnitude faster, shuffle stops
+        // mattering, and the 7/8 work ratio decides — the argmin
+        // flips. This is why plans are re-priced on measured bytes
+        // once the engine has them.
+        let b_classical = simulate_dense3d_bytes(&classical, &byte).total();
+        let b_strassen = simulate_strassen_bytes(side, 1, &byte).total();
+        assert!(
+            b_strassen < b_classical,
+            "byte model must pick Strassen: {b_strassen:.1}s vs {b_classical:.1}s"
+        );
     }
 
     #[test]

@@ -11,7 +11,7 @@ use m3::m3::{
     multiply_dense_2d, multiply_dense_3d, multiply_sparse_3d, M3Config, PartitionerKind, Plan3d,
     SparsePlan, TripleKey,
 };
-use m3::mapreduce::{Driver, EngineConfig, Pair};
+use m3::mapreduce::{Driver, EngineConfig, Pair, TransportSel};
 use m3::matrix::{gen, BlockGrid, DenseMatrix};
 use m3::runtime::native::NativeMultiply;
 use m3::runtime::NaiveMultiply;
@@ -31,6 +31,7 @@ fn cfg(block: usize, rho: usize, part: PartitionerKind) -> M3Config {
         rho,
         engine: engine(),
         partitioner: part,
+        transport: TransportSel::default(),
     }
 }
 
@@ -88,8 +89,15 @@ fn sparse_3d_matches_dense_pipeline() {
     let want = a.to_dense().matmul_naive(&b.to_dense());
     for (block, rho) in [(16usize, 1usize), (16, 2), (32, 4), (64, 2)] {
         let plan = SparsePlan::new(side, block, rho, 0.05, 0.3).unwrap();
-        let (got, _) =
-            multiply_sparse_3d(&a, &b, &plan, engine(), PartitionerKind::Balanced).unwrap();
+        let (got, _) = multiply_sparse_3d(
+            &a,
+            &b,
+            &plan,
+            engine(),
+            PartitionerKind::Balanced,
+            TransportSel::default(),
+        )
+        .unwrap();
         assert_eq!(
             got.to_dense().max_abs_diff(&want),
             0.0,

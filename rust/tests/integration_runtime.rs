@@ -9,7 +9,7 @@
 use std::sync::Arc;
 
 use m3::m3::{multiply_dense_3d, M3Config, PartitionerKind};
-use m3::mapreduce::EngineConfig;
+use m3::mapreduce::{EngineConfig, TransportSel};
 use m3::matrix::gen;
 use m3::runtime::artifacts::{default_dir, ArtifactSet};
 use m3::runtime::xla_backend::XlaMultiply;
@@ -52,6 +52,7 @@ fn xla_pipeline_exact_product_block128() {
         rho: 2,
         engine: EngineConfig::default(),
         partitioner: PartitionerKind::Balanced,
+        transport: TransportSel::default(),
     };
     let (got, _) = multiply_dense_3d(&a, &b, &cfg, backend.clone()).unwrap();
     assert_eq!(got, a.matmul_naive(&b));
@@ -72,6 +73,7 @@ fn xla_pipeline_all_artifact_sides() {
             rho: 1,
             engine: EngineConfig::default(),
             partitioner: PartitionerKind::Balanced,
+            transport: TransportSel::default(),
         };
         let (got, _) = multiply_dense_3d(&a, &b, &cfg, backend.clone()).unwrap();
         assert_eq!(got, a.matmul_naive(&b), "block={block}");

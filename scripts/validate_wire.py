@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Structural validator for m3's dumped shuffle wire frames.
+
+Usage: validate_wire.py FRAMES.bin [FRAMES.bin ...]
+
+``m3 multiply --dump-wire PATH`` writes the round-0 map-output frames
+exactly as the serialized transport puts them on the wire: one
+self-delimiting ``M3WF`` frame per sender, concatenated. This script
+re-walks that byte stream from outside Rust with nothing but the
+stdlib, checking the format is honest about its own framing:
+
+  1. every frame starts with magic ``M3WF``, version 1, and a known
+     kind (1 = key/value pair batch);
+  2. the ``body_len`` header delimits the frame exactly — walking
+     pair-by-pair consumes the body to the last byte;
+  3. each pair is ``key_len u32 | key | value_len u32 | value`` with
+     non-zero lengths that stay inside the body;
+  4. the concatenation is exact: the final frame ends on the final
+     byte of the file, and at least one frame carrying at least one
+     pair was present.
+
+Exits non-zero with a diagnostic on the first violation; on success
+prints a per-file frame/pair/byte summary.
+"""
+
+import struct
+import sys
+
+MAGIC = b"M3WF"
+VERSION = 1
+KIND_PAIRS = 1
+HEADER_LEN = 10  # magic(4) + version(1) + kind(1) + body_len(4)
+
+
+def fail(msg):
+    print(f"validate_wire: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def u32(buf, off, what):
+    if off + 4 > len(buf):
+        fail(f"truncated {what} at offset {off}")
+    return struct.unpack_from("<I", buf, off)[0], off + 4
+
+
+def walk_frame(buf, off, index):
+    """Validate one frame starting at ``off``; return (pairs, next_off)."""
+    if off + HEADER_LEN > len(buf):
+        fail(f"frame {index}: truncated header at offset {off}")
+    if buf[off : off + 4] != MAGIC:
+        fail(f"frame {index}: bad magic {buf[off:off + 4]!r} at offset {off}")
+    version = buf[off + 4]
+    if version != VERSION:
+        fail(f"frame {index}: unknown version {version}")
+    kind = buf[off + 5]
+    if kind != KIND_PAIRS:
+        fail(f"frame {index}: unknown kind {kind}")
+    body_len = struct.unpack_from("<I", buf, off + 6)[0]
+    body_end = off + HEADER_LEN + body_len
+    if body_end > len(buf):
+        fail(f"frame {index}: body_len {body_len} overruns the file")
+
+    pos = off + HEADER_LEN
+    pair_count, pos = u32(buf, pos, f"frame {index} pair count")
+    for p in range(pair_count):
+        key_len, pos = u32(buf, pos, f"frame {index} pair {p} key length")
+        if key_len == 0:
+            fail(f"frame {index} pair {p}: zero-length key")
+        if pos + key_len > body_end:
+            fail(f"frame {index} pair {p}: key overruns the body")
+        pos += key_len
+        value_len, pos = u32(buf, pos, f"frame {index} pair {p} value length")
+        if value_len == 0:
+            fail(f"frame {index} pair {p}: zero-length value")
+        if pos + value_len > body_end:
+            fail(f"frame {index} pair {p}: value overruns the body")
+        pos += value_len
+    if pos != body_end:
+        fail(
+            f"frame {index}: body_len {body_len} does not delimit its "
+            f"pairs (walked to {pos - off - HEADER_LEN})"
+        )
+    return pair_count, body_end
+
+
+def validate(path):
+    with open(path, "rb") as f:
+        buf = f.read()
+    if not buf:
+        fail(f"{path}: empty dump")
+    off = 0
+    frames = 0
+    pairs = 0
+    while off < len(buf):
+        n, off = walk_frame(buf, off, frames)
+        frames += 1
+        pairs += n
+    if off != len(buf):
+        fail(f"{path}: {len(buf) - off} trailing byte(s) after the last frame")
+    if pairs == 0:
+        fail(f"{path}: no pairs in any frame")
+    print(f"validate_wire: OK: {path}: {frames} frame(s), {pairs} pair(s), {len(buf)} bytes")
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    for path in argv[1:]:
+        validate(path)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
